@@ -1,0 +1,51 @@
+//! Dynamic re-tuning on input change (the Table 7 scenario): a service
+//! tunes GEMM for large square matrices, then the workload shifts to
+//! skinny rectangular products — re-tune with the *same* model, no
+//! retraining.
+//!
+//! ```bash
+//! cargo run --release --example dynamic_tuning
+//! ```
+
+use pcat::benchmarks::{record_space, Benchmark, Gemm, Input};
+use pcat::coordinator::{SearcherChoice, Tuner};
+use pcat::gpusim::GpuSpec;
+use pcat::model::{dataset_from_recorded, DecisionTreeModel, PrecomputedModel};
+use pcat::searcher::{Budget, CostModel};
+use pcat::util::rng::Rng;
+
+fn main() {
+    let bench = Gemm;
+    let gpu = GpuSpec::gtx1070();
+
+    // Model trained once, on the original (square, compute-bound) input.
+    let train_input = Input::new("2048x2048", &[2048, 2048, 2048]);
+    let rec_train = record_space(&bench, &gpu, &train_input);
+    let mut rng = Rng::new(5);
+    let ds = dataset_from_recorded(&rec_train, 1.0, &mut rng);
+    let dtm = DecisionTreeModel::train(&ds, "gtx1070/2048", &mut rng);
+    println!("model trained on {} ({} configs)", train_input.name, rec_train.space.len());
+
+    // The workload shifts: re-tune per input with the same model.
+    for input in bench.inputs() {
+        let rec = record_space(&bench, &gpu, &input);
+        let best = rec.best_time();
+        let model = PrecomputedModel::over(&rec.space, &dtm);
+        let mut tuner = Tuner::replay(rec, gpu.clone(), CostModel::default())
+            .with_budget(Budget::tests(60))
+            .with_seed(11);
+        let r = tuner.run(SearcherChoice::Profile {
+            model: &model,
+            inst_reaction: 0.7,
+        });
+        println!(
+            "{:<10} 60-test best {:>9.4} ms  (exhaustive best {:>9.4} ms, \
+             gap {:>5.1}%)",
+            input.name,
+            r.best_ms,
+            best,
+            (r.best_ms / best - 1.0) * 100.0
+        );
+    }
+    println!("\n(no model retraining between inputs — §4.5)");
+}

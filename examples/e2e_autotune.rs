@@ -1,0 +1,105 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! Loads the AOT-compiled JAX/Pallas artifacts (`make artifacts`),
+//! executes every variant on the PJRT CPU client from Rust, wall-clock
+//! times each empirical test, and runs the paper's profile-based
+//! searcher against random search over the *really executing* kernel
+//! space. PC_ops come from the manifest's analytic op counts; stress
+//! counters are synthesized from measured runtime (DESIGN.md §2).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_autotune
+//! ```
+//!
+//! The headline metric (empirical tests + wall-clock to a
+//! well-performing configuration) is recorded in EXPERIMENTS.md §E2E.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use pcat::model::PrecomputedModel;
+use pcat::runtime::{load_manifest, PjrtEnv};
+use pcat::searcher::{
+    Budget, EvalEnv, ProfileSearcher, RandomSearcher, Searcher,
+};
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
+    );
+    let manifest = load_manifest(&dir)?;
+    println!("manifest: {} artifacts", manifest.len());
+
+    for bench in ["coulomb", "gemm", "nbody", "transpose"] {
+        let entries: Vec<_> = manifest
+            .iter()
+            .filter(|e| e.benchmark == bench)
+            .cloned()
+            .collect();
+        println!(
+            "\n=== {bench}: {} AOT variants (compiling…) ===",
+            entries.len()
+        );
+        let t0 = Instant::now();
+        let mut env = PjrtEnv::new(&entries)?;
+        env.reps = 2;
+        println!("compiled in {:.1}s", t0.elapsed().as_secs_f64());
+
+        // exhaustive ground truth (this is a real execution of every
+        // variant — small spaces by construction)
+        let n = env.space().len();
+        let mut truth = Vec::with_capacity(n);
+        for i in 0..n {
+            truth.push(env.measure(i, false).runtime_ms);
+        }
+        let best = truth.iter().cloned().fold(f64::INFINITY, f64::min);
+        let thr = best * 1.1;
+        let wp = truth.iter().filter(|&&t| t <= thr).count();
+        println!(
+            "exhaustive: best {best:.3} ms, {wp}/{n} within 1.1× \
+             ({:.1}s full sweep)",
+            env.cost_so_far()
+        );
+
+        // the TP→PC model on the real path: manifest op counts
+        let space = env.space().clone();
+        let model = PrecomputedModel::from_pairs(
+            space
+                .configs
+                .iter()
+                .cloned()
+                .zip(env.ops_counters_all())
+                .collect(),
+            "manifest-ops",
+        );
+
+        // random vs profile over fresh measurements, budget = half space
+        let budget = Budget::until(thr, n);
+        for (name, searcher) in [
+            (
+                "random",
+                &mut RandomSearcher::new(3) as &mut dyn Searcher,
+            ),
+            (
+                "profile",
+                &mut ProfileSearcher::new(&model, 0.5, 3) as &mut dyn Searcher,
+            ),
+        ] {
+            let mut env = PjrtEnv::new(&entries)?;
+            env.reps = 2;
+            let t0 = Instant::now();
+            let trace = searcher.run(&mut env, &budget);
+            let steps = trace
+                .tests_to_threshold(thr)
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| format!(">{}", trace.len()));
+            println!(
+                "{name:>8}: {steps} tests to 1.1× best \
+                 (best found {:.3} ms, wall {:.1}s)",
+                trace.best_within(usize::MAX),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+    Ok(())
+}

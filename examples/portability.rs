@@ -1,0 +1,53 @@
+//! Hardware portability (the Table 6 scenario): train the TP→PC model on
+//! one simulated GPU, then use it to steer tuning on every other GPU —
+//! including architectures with a different counter generation.
+//!
+//! ```bash
+//! cargo run --release --example portability
+//! ```
+
+use pcat::benchmarks::{record_space, Benchmark, Gemm};
+use pcat::gpusim::GpuSpec;
+use pcat::harness::avg_steps_to_well_performing;
+use pcat::model::{dataset_from_recorded, DecisionTreeModel, PrecomputedModel};
+use pcat::searcher::{ProfileSearcher, RandomSearcher};
+use pcat::util::rng::Rng;
+
+fn main() {
+    let bench = Gemm;
+    let input = bench.default_input();
+    let model_gpu = GpuSpec::gtx1070();
+    let reps = 200;
+
+    // Train once, on GTX 1070 data.
+    println!("training TP→PC decision-tree model on {} …", model_gpu.name);
+    let rec_model = record_space(&bench, &model_gpu, &input);
+    let mut rng = Rng::new(1);
+    let ds = dataset_from_recorded(&rec_model, 1.0, &mut rng);
+    let dtm = DecisionTreeModel::train(&ds, model_gpu.name, &mut rng);
+
+    // Tune everywhere, including the unseen RTX 2080.
+    println!("\n{:<10} {:>8} {:>9} {:>12}", "tune GPU", "random", "profile", "improvement");
+    for gpu in GpuSpec::all() {
+        let rec = record_space(&bench, &gpu, &input);
+        let model = PrecomputedModel::over(&rec.space, &dtm);
+        let rand = avg_steps_to_well_performing(&rec, &gpu, reps, 0, |s| {
+            Box::new(RandomSearcher::new(s))
+        });
+        let prof = avg_steps_to_well_performing(&rec, &gpu, reps, 99, |s| {
+            Box::new(ProfileSearcher::new(&model, 0.7, s))
+        });
+        println!(
+            "{:<10} {:>8.1} {:>9.1} {:>11.2}×",
+            gpu.name,
+            rand,
+            prof,
+            rand / prof.max(1.0)
+        );
+    }
+    println!(
+        "\n(model trained once on {}; no retraining per device — the \
+         paper's headline capability)",
+        model_gpu.name
+    );
+}

@@ -1,0 +1,59 @@
+//! Quickstart: tune the Coulomb-summation kernel on a simulated GTX 1070
+//! with the paper's profile-based searcher, and compare against random
+//! search.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use pcat::benchmarks::{record_space, Benchmark, Coulomb};
+use pcat::coordinator::{SearcherChoice, Tuner};
+use pcat::gpusim::GpuSpec;
+use pcat::model::OracleModel;
+use pcat::searcher::{Budget, CostModel};
+
+fn main() {
+    let bench = Coulomb;
+    let gpu = GpuSpec::gtx1070();
+    let input = bench.default_input();
+
+    // 1. Exhaustively record the space once (the paper's replay
+    //    methodology) — in a real deployment this is the tuning run.
+    let rec = record_space(&bench, &gpu, &input);
+    println!(
+        "space: {} configurations over {} tuning parameters",
+        rec.space.len(),
+        rec.space.dims()
+    );
+    println!("exhaustive best: {:.4} ms", rec.best_time());
+
+    // 2. Profile-based search, using exact recorded counters as the
+    //    TP→PC model (the §4.3 setting).
+    let oracle = OracleModel::new(&rec);
+    let mut tuner = Tuner::replay(rec.clone(), gpu.clone(), CostModel::default())
+        .with_budget(Budget::tests(40))
+        .with_seed(7);
+    let result = tuner.run(SearcherChoice::Profile {
+        model: &oracle,
+        inst_reaction: 0.5,
+    });
+    println!(
+        "\nprofile searcher: best {:.4} ms after {} tests ({} profiled)",
+        result.best_ms, result.tests, result.profiled_tests
+    );
+    print!("  best config:");
+    for (p, v) in rec.space.params.iter().zip(&result.best_config.0) {
+        print!(" {}={v}", p.name);
+    }
+    println!();
+
+    // 3. Random search with the same budget, for contrast.
+    let mut tuner = Tuner::replay(rec, gpu, CostModel::default())
+        .with_budget(Budget::tests(40))
+        .with_seed(7);
+    let random = tuner.run(SearcherChoice::Random);
+    println!(
+        "random searcher:  best {:.4} ms after {} tests",
+        random.best_ms, random.tests
+    );
+}

@@ -1,0 +1,84 @@
+"""AOT compiler: lower every benchmark variant to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+the xla_extension 0.5.1 bundled with the Rust ``xla`` crate rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Output layout (consumed by rust/src/runtime/artifact.rs):
+
+    artifacts/
+      manifest.json               # [{benchmark, name, config, path,
+                                  #   args: [{shape, dtype}], ops}]
+      coulomb/<name>.hlo.txt
+      gemm/<name>.hlo.txt
+      transpose/<name>.hlo.txt
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_variant(variant: model.Variant) -> str:
+    lowered = jax.jit(variant.fn).lower(*variant.example_args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--benchmark", action="append", default=None,
+                    help="restrict to the named benchmark(s)")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    benchmarks = args.benchmark or sorted(model.ALL_VARIANTS)
+
+    manifest = []
+    for bench in benchmarks:
+        bench_dir = out_dir / bench
+        bench_dir.mkdir(exist_ok=True)
+        variants = model.ALL_VARIANTS[bench]()
+        for v in variants:
+            path = bench_dir / f"{v.name()}.hlo.txt"
+            path.write_text(lower_variant(v))
+            manifest.append({
+                "benchmark": v.benchmark,
+                "name": v.name(),
+                "config": v.config,
+                "path": str(path.relative_to(out_dir)),
+                "args": [
+                    {"shape": list(a.shape), "dtype": a.dtype.name}
+                    for a in v.example_args
+                ],
+                "ops": v.ops,
+            })
+            print(f"  wrote {path}")
+        print(f"{bench}: {len(variants)} variants")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"manifest: {len(manifest)} artifacts -> {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1: Pallas kernels for the paper's benchmark hot-spots.
+
+Each module exports the kernel entrypoint, its ``TUNING_SPACE`` (the axes
+the Rust coordinator tunes on the real-execution path) and an analytic
+op-count helper used to stamp PC_ops metadata into the artifact manifest.
+"""
+
+from .coulomb import coulomb_pallas  # noqa: F401
+from .gemm import gemm_pallas  # noqa: F401
+from .transpose import transpose_pallas  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: Direct Coulomb Summation (paper §2, Listing 1).
+
+The electrostatic potential on a regular 3D grid:
+
+    V_i = sum_j w_j / r_ij
+
+Tuning parameters (mirroring the paper's CUDA kernel):
+  * ``z_iter``   -- thread-coarsening along Z (the paper's Z_ITERATIONS):
+                    one program instance computes ``z_iter`` grid slices,
+                    amortizing the atom load and the invariant dx^2+dy^2.
+  * ``block_x``, ``block_y`` -- the (X, Y) tile computed per program
+                    instance, expressed as the Pallas BlockSpec block shape
+                    (the TPU analogue of the CUDA thread-block shape: it
+                    fixes the VMEM-resident output tile).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): CUDA thread blocks
+become BlockSpec tiles; the atom array is broadcast to every tile (the
+analogue of the read-only/texture-cache path in the paper).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the Rust
+runtime loads (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _coulomb_kernel(atoms_ref, out_ref, *, grid_spacing, block_x, block_y,
+                    z_iter):
+    """Compute one (z_iter, block_y, block_x) tile of the potential grid."""
+    zi = pl.program_id(0)
+    yi = pl.program_id(1)
+    xi = pl.program_id(2)
+
+    shape = (z_iter, block_y, block_x)
+    # Real-space coordinates of every grid point in this tile.
+    fz = (zi * z_iter + jax.lax.broadcasted_iota(jnp.float32, shape, 0)) \
+        * grid_spacing
+    fy = (yi * block_y + jax.lax.broadcasted_iota(jnp.float32, shape, 1)) \
+        * grid_spacing
+    fx = (xi * block_x + jax.lax.broadcasted_iota(jnp.float32, shape, 2)) \
+        * grid_spacing
+
+    atoms = atoms_ref[...]  # (n_atoms, 4): x, y, z, w -- one VMEM load
+    n_atoms = atoms.shape[0]
+
+    def body(i, acc):
+        a = atoms[i]  # lowered to a dynamic_slice row load
+        dx = fx - a[0]
+        dy = fy - a[1]
+        dz = fz - a[2]
+        rd = jax.lax.rsqrt(dx * dx + dy * dy + dz * dz)
+        return acc + a[3] * rd
+
+    acc = jax.lax.fori_loop(0, n_atoms, body,
+                            jnp.zeros(shape, jnp.float32))
+    out_ref[...] = acc
+
+
+def coulomb_pallas(atoms: jax.Array, grid_size: int, grid_spacing: float,
+                   *, block_x: int = 16, block_y: int = 16,
+                   z_iter: int = 1) -> jax.Array:
+    """Direct Coulomb summation on a ``grid_size^3`` grid.
+
+    ``atoms`` is ``(n, 4)`` float32 rows of ``(x, y, z, w)`` where ``w``
+    already folds in ``1/(4*pi*eps0)`` as in the paper's Listing 1.
+    """
+    if grid_size % z_iter or grid_size % block_y or grid_size % block_x:
+        raise ValueError(
+            f"grid_size={grid_size} not divisible by tile "
+            f"({z_iter},{block_y},{block_x})")
+    n_atoms = atoms.shape[0]
+    kernel = functools.partial(
+        _coulomb_kernel, grid_spacing=grid_spacing,
+        block_x=block_x, block_y=block_y, z_iter=z_iter)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid_size // z_iter, grid_size // block_y,
+              grid_size // block_x),
+        in_specs=[pl.BlockSpec((n_atoms, 4), lambda z, y, x: (0, 0))],
+        out_specs=pl.BlockSpec((z_iter, block_y, block_x),
+                               lambda z, y, x: (z, y, x)),
+        out_shape=jax.ShapeDtypeStruct(
+            (grid_size, grid_size, grid_size), jnp.float32),
+        interpret=True,
+    )(atoms)
+
+
+#: Tuning-space axes exported to aot.py / the Rust coordinator.
+TUNING_SPACE = {
+    "z_iter": [1, 2, 4, 8, 16, 32],
+    "block_x": [4, 8, 16, 32],
+    "block_y": [1, 2, 4, 8, 16],
+}
+
+
+def flops(grid_size: int, n_atoms: int) -> int:
+    """FP32 op count (paper counts ~11 flops per atom-gridpoint pair)."""
+    return 11 * grid_size ** 3 * n_atoms

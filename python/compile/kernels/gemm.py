@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: tiled GEMM (the paper's GEMM / GEMM-full benchmark).
+
+Tuning parameters map the CLBlast/CLTune space onto a TPU-shaped tiling
+(DESIGN.md §Hardware-Adaptation):
+
+  * ``mwg``, ``nwg`` -- output tile computed per program instance (the
+    CLBlast work-group tile; here it is the MXU-facing VMEM block).
+  * ``kwg``          -- K-panel depth staged through VMEM per grid step
+    (the CLBlast KWG shared-memory panel).
+
+The grid iterates (M/mwg, N/nwg, K/kwg) with K innermost, accumulating in
+the output block -- the canonical Pallas matmul schedule: the HBM->VMEM
+movement that CLBlast expressed via local-memory staging is expressed by
+the three BlockSpecs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def gemm_pallas(a: jax.Array, b: jax.Array, *, mwg: int = 32, nwg: int = 32,
+                kwg: int = 16) -> jax.Array:
+    """C = A @ B with an (mwg, nwg, kwg) block schedule."""
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"shape mismatch {a.shape} @ {b.shape}")
+    if m % mwg or n % nwg or k % kwg:
+        raise ValueError(
+            f"({m},{n},{k}) not divisible by tile ({mwg},{nwg},{kwg})")
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(m // mwg, n // nwg, k // kwg),
+        in_specs=[
+            pl.BlockSpec((mwg, kwg), lambda i, j, ks: (i, ks)),
+            pl.BlockSpec((kwg, nwg), lambda i, j, ks: (ks, j)),
+        ],
+        out_specs=pl.BlockSpec((mwg, nwg), lambda i, j, ks: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+TUNING_SPACE = {
+    "mwg": [8, 16, 32, 64],
+    "nwg": [8, 16, 32, 64],
+    "kwg": [8, 16, 32],
+}
+
+
+def flops(m: int, n: int, k: int) -> int:
+    return 2 * m * n * k
+
+
+def vmem_bytes(mwg: int, nwg: int, kwg: int) -> int:
+    """VMEM footprint of one grid step (A panel + B panel + C tile), f32."""
+    return 4 * (mwg * kwg + kwg * nwg + mwg * nwg)

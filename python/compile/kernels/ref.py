@@ -1,0 +1,43 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every kernel in this package has a reference here, written with no Pallas
+and no tiling so the tuning parameters cannot perturb the semantics.
+pytest/hypothesis assert allclose between kernel and oracle across the
+tuning axes -- the core correctness signal of the build path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def coulomb_ref(atoms: jax.Array, grid_size: int,
+                grid_spacing: float) -> jax.Array:
+    """Direct Coulomb summation: V[z,y,x] = sum_j w_j / r_j."""
+    idx = jnp.arange(grid_size, dtype=jnp.float32) * grid_spacing
+    fz = idx[:, None, None, None]
+    fy = idx[None, :, None, None]
+    fx = idx[None, None, :, None]
+    dx = fx - atoms[None, None, None, :, 0]
+    dy = fy - atoms[None, None, None, :, 1]
+    dz = fz - atoms[None, None, None, :, 2]
+    rd = jax.lax.rsqrt(dx * dx + dy * dy + dz * dz)
+    return jnp.sum(atoms[None, None, None, :, 3] * rd, axis=-1)
+
+
+def gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def transpose_ref(x: jax.Array) -> jax.Array:
+    return x.T
+
+
+def nbody_ref(bodies: jax.Array, softening: float = 1e-3) -> jax.Array:
+    """All-pairs gravitational accelerations, (n, 3)."""
+    d = bodies[None, :, :3] - bodies[:, None, :3]  # (i, j, 3)
+    r2 = jnp.sum(d * d, axis=-1) + softening
+    inv_r3 = jax.lax.rsqrt(r2) / r2
+    w = bodies[None, :, 3] * inv_r3  # (i, j)
+    return jnp.sum(w[..., None] * d, axis=1)

@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: tiled matrix transpose (the paper's Transpose bench).
+
+Tuning parameters:
+  * ``tile_x``, ``tile_y`` -- the VMEM tile staged per program instance.
+    The CUDA version tunes the shared-memory tile + padding to avoid bank
+    conflicts; on the Pallas/TPU side the same locality decision is the
+    BlockSpec tile shape (padding has no analogue under interpret mode, so
+    it is tuned only in the simulated space on the Rust side).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _transpose_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].T
+
+
+def transpose_pallas(x: jax.Array, *, tile_x: int = 32,
+                     tile_y: int = 32) -> jax.Array:
+    """Return x.T, staged through (tile_y, tile_x) input tiles."""
+    rows, cols = x.shape
+    if rows % tile_y or cols % tile_x:
+        raise ValueError(
+            f"({rows},{cols}) not divisible by tile ({tile_y},{tile_x})")
+    return pl.pallas_call(
+        _transpose_kernel,
+        grid=(cols // tile_x, rows // tile_y),
+        # output block (i, j) of shape (tile_x, tile_y) reads input block
+        # (j, i) of shape (tile_y, tile_x).
+        in_specs=[pl.BlockSpec((tile_y, tile_x), lambda i, j: (j, i))],
+        out_specs=pl.BlockSpec((tile_x, tile_y), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((cols, rows), x.dtype),
+        interpret=True,
+    )(x)
+
+
+TUNING_SPACE = {
+    "tile_x": [8, 16, 32, 64],
+    "tile_y": [8, 16, 32, 64],
+}
+
+
+def bytes_moved(rows: int, cols: int, itemsize: int = 4) -> int:
+    return 2 * rows * cols * itemsize

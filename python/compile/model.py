@@ -1,0 +1,189 @@
+"""L2: JAX compute graphs over the L1 Pallas kernels.
+
+One "model" per benchmark: a jax function, parameterized by a tuning
+configuration, that lowers (kernel included) into a single HLO module.
+``aot.py`` lowers every configuration in the AOT variant set; the Rust
+runtime (`rust/src/runtime/`) loads and times them as the empirical-test
+path of the autotuner -- Python never runs at tuning time.
+
+The functions here deliberately contain the small amount of surrounding
+graph the paper's kernels have in KTT (output reduction used for result
+checks), so the artifact is more than a bare kernel and exercises XLA
+fusion around the Pallas body.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import coulomb, gemm, nbody, transpose
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One AOT-compiled tuning configuration of one benchmark."""
+
+    benchmark: str
+    config: Dict[str, int]
+    #: example inputs for lowering (ShapeDtypeStructs)
+    example_args: Tuple[jax.ShapeDtypeStruct, ...]
+    #: the jax callable of this configuration
+    fn: Callable[..., Any]
+    #: analytic PC_ops metadata stamped into the manifest
+    ops: Dict[str, int]
+
+    def name(self) -> str:
+        tail = "_".join(f"{k}{v}" for k, v in sorted(self.config.items()))
+        return f"{self.benchmark}_{tail}"
+
+
+# ---------------------------------------------------------------------------
+# Benchmark model builders
+# ---------------------------------------------------------------------------
+
+def coulomb_model(grid_size: int, n_atoms: int, grid_spacing: float,
+                  cfg: Dict[str, int]) -> Variant:
+    def fwd(atoms):
+        grid = coulomb.coulomb_pallas(
+            atoms, grid_size, grid_spacing,
+            block_x=cfg["block_x"], block_y=cfg["block_y"],
+            z_iter=cfg["z_iter"])
+        # KTT-style residual used by the result checker: cheap reduction
+        # fused by XLA around the kernel.
+        return grid, jnp.sum(grid)
+
+    args = (jax.ShapeDtypeStruct((n_atoms, 4), jnp.float32),)
+    ops = {
+        "INST_F32": coulomb.flops(grid_size, n_atoms) // max(1, 1),
+        "TEX_RWT": grid_size ** 3 * n_atoms * 16
+        // (cfg["z_iter"] * 128),
+        "DRAM_WT": grid_size ** 3 * 4 // 32,
+        "threads": grid_size ** 3 // cfg["z_iter"],
+    }
+    return Variant("coulomb", dict(cfg), args, fwd, ops)
+
+
+def gemm_model(m: int, n: int, k: int, cfg: Dict[str, int]) -> Variant:
+    def fwd(a, b):
+        c = gemm.gemm_pallas(a, b, mwg=cfg["mwg"], nwg=cfg["nwg"],
+                             kwg=cfg["kwg"])
+        return c, jnp.sum(c)
+
+    args = (jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((k, n), jnp.float32))
+    ops = {
+        "INST_F32": gemm.flops(m, n, k),
+        "DRAM_RT": (m * k // cfg["mwg"] + k * n // cfg["nwg"]) * 4 // 32,
+        "DRAM_WT": m * n * 4 // 32,
+        "threads": (m // cfg["mwg"]) * (n // cfg["nwg"]),
+        "vmem_bytes": gemm.vmem_bytes(cfg["mwg"], cfg["nwg"], cfg["kwg"]),
+    }
+    return Variant("gemm", dict(cfg), args, fwd, ops)
+
+
+def nbody_model(n: int, cfg: Dict[str, int]) -> Variant:
+    def fwd(bodies):
+        acc = nbody.nbody_pallas(
+            bodies, block_i=cfg["block_i"], block_j=cfg["block_j"])
+        return acc, jnp.sum(acc * acc)
+
+    args = (jax.ShapeDtypeStruct((n, 4), jnp.float32),)
+    ops = {
+        "INST_F32": nbody.flops(n),
+        "DRAM_RT": (n // cfg["block_i"]) * n * 16 // 32,
+        "DRAM_WT": n * 12 // 32,
+        "threads": n,
+        "j_panel": cfg["block_j"],
+    }
+    return Variant("nbody", dict(cfg), args, fwd, ops)
+
+
+def transpose_model(rows: int, cols: int, cfg: Dict[str, int]) -> Variant:
+    def fwd(x):
+        y = transpose.transpose_pallas(
+            x, tile_x=cfg["tile_x"], tile_y=cfg["tile_y"])
+        return y, jnp.sum(y[0])
+
+    args = (jax.ShapeDtypeStruct((rows, cols), jnp.float32),)
+    ops = {
+        "DRAM_RT": rows * cols * 4 // 32,
+        "DRAM_WT": rows * cols * 4 // 32,
+        "threads": (rows // cfg["tile_y"]) * (cols // cfg["tile_x"]),
+    }
+    return Variant("transpose", dict(cfg), args, fwd, ops)
+
+
+# ---------------------------------------------------------------------------
+# AOT variant sets (the subset of each simulated space that is compiled to
+# real artifacts and empirically executed by the Rust runtime).
+# ---------------------------------------------------------------------------
+
+#: default problem sizes for the AOT path -- small enough that the
+#: interpret-mode HLO compiles and runs in milliseconds on the CPU PJRT
+#: client, large enough that tile-shape differences are measurable.
+COULOMB_GRID = 32
+COULOMB_ATOMS = 64
+COULOMB_SPACING = 0.5
+GEMM_M = GEMM_N = GEMM_K = 128
+TRANSPOSE_ROWS = TRANSPOSE_COLS = 512
+NBODY_N = 1024
+
+
+def coulomb_variants() -> List[Variant]:
+    out = []
+    for zi in coulomb.TUNING_SPACE["z_iter"]:
+        for bx, by in [(16, 16), (32, 4), (8, 8)]:
+            if COULOMB_GRID % zi or COULOMB_GRID % bx or COULOMB_GRID % by:
+                continue
+            out.append(coulomb_model(
+                COULOMB_GRID, COULOMB_ATOMS, COULOMB_SPACING,
+                {"z_iter": zi, "block_x": bx, "block_y": by}))
+    return out
+
+
+def gemm_variants() -> List[Variant]:
+    out = []
+    for mwg in [16, 32, 64]:
+        for nwg in [16, 32, 64]:
+            for kwg in [16, 32]:
+                # CLBlast-style constraint: keep the VMEM tile bounded.
+                if gemm.vmem_bytes(mwg, nwg, kwg) > 64 * 1024:
+                    continue
+                out.append(gemm_model(GEMM_M, GEMM_N, GEMM_K,
+                                      {"mwg": mwg, "nwg": nwg, "kwg": kwg}))
+    return out
+
+
+def nbody_variants() -> List[Variant]:
+    out = []
+    for bi in nbody.TUNING_SPACE["block_i"]:
+        for bj in nbody.TUNING_SPACE["block_j"]:
+            if NBODY_N % bi or NBODY_N % bj:
+                continue
+            # keep the pairwise tile bounded (VMEM analogue of the
+            # shared-memory j-panel constraint)
+            if bi * bj > 32 * 1024:
+                continue
+            out.append(nbody_model(NBODY_N, {"block_i": bi, "block_j": bj}))
+    return out
+
+
+def transpose_variants() -> List[Variant]:
+    out = []
+    for tx in transpose.TUNING_SPACE["tile_x"]:
+        for ty in transpose.TUNING_SPACE["tile_y"]:
+            out.append(transpose_model(TRANSPOSE_ROWS, TRANSPOSE_COLS,
+                                       {"tile_x": tx, "tile_y": ty}))
+    return out
+
+
+ALL_VARIANTS: Dict[str, Callable[[], List[Variant]]] = {
+    "coulomb": coulomb_variants,
+    "gemm": gemm_variants,
+    "nbody": nbody_variants,
+    "transpose": transpose_variants,
+}

@@ -1,0 +1,157 @@
+"""Kernel-vs-oracle allclose: the core correctness signal for L1.
+
+Deterministic sweeps over the tuning axes; hypothesis shape/dtype sweeps
+live in test_property.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import coulomb, gemm, transpose
+from compile.kernels.ref import coulomb_ref, gemm_ref, transpose_ref
+
+
+def _atoms(n, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(0.3, 7.7, size=(n, 4)).astype(np.float32)
+    a[:, 3] = rng.uniform(0.1, 1.0, size=n)  # charges
+    # offset off the grid lattice so no r_ij is ever ~0
+    a[:, :3] += 0.123
+    return jnp.asarray(a)
+
+
+class TestCoulomb:
+    @pytest.mark.parametrize("z_iter", [1, 2, 4, 8, 16])
+    def test_z_coarsening(self, z_iter):
+        atoms = _atoms(17)
+        got = coulomb.coulomb_pallas(atoms, 16, 0.5, block_x=8, block_y=4,
+                                     z_iter=z_iter)
+        want = coulomb_ref(atoms, 16, 0.5)
+        np.testing.assert_allclose(got, want, rtol=2e-4)
+
+    @pytest.mark.parametrize("bx,by", [(4, 1), (4, 4), (8, 2), (16, 16),
+                                       (16, 1)])
+    def test_block_shapes(self, bx, by):
+        atoms = _atoms(9, seed=3)
+        got = coulomb.coulomb_pallas(atoms, 16, 0.25, block_x=bx,
+                                     block_y=by, z_iter=2)
+        want = coulomb_ref(atoms, 16, 0.25)
+        np.testing.assert_allclose(got, want, rtol=2e-4)
+
+    def test_single_atom_inverse_distance(self):
+        # One unit charge: V = 1/r exactly.
+        atoms = jnp.asarray([[1.1, 1.1, 1.1, 1.0]], dtype=jnp.float32)
+        got = coulomb.coulomb_pallas(atoms, 8, 1.0, block_x=4, block_y=4,
+                                     z_iter=1)
+        r = np.sqrt(3 * (1.1 - 2.0) ** 2)
+        np.testing.assert_allclose(got[2, 2, 2], 1.0 / r, rtol=1e-4)
+
+    def test_indivisible_tile_raises(self):
+        with pytest.raises(ValueError):
+            coulomb.coulomb_pallas(_atoms(4), 16, 0.5, block_x=5,
+                                   block_y=4, z_iter=1)
+
+    def test_charge_linearity(self):
+        atoms = _atoms(8)
+        v1 = coulomb.coulomb_pallas(atoms, 8, 0.5, block_x=8, block_y=8,
+                                    z_iter=1)
+        atoms2 = atoms.at[:, 3].multiply(2.0)
+        v2 = coulomb.coulomb_pallas(atoms2, 8, 0.5, block_x=8, block_y=8,
+                                    z_iter=1)
+        np.testing.assert_allclose(v2, 2.0 * v1, rtol=1e-5)
+
+
+class TestGemm:
+    @pytest.mark.parametrize("mwg,nwg,kwg", [
+        (8, 8, 8), (16, 16, 16), (32, 32, 16), (16, 64, 8), (64, 16, 32),
+        (64, 64, 64),
+    ])
+    def test_tiles(self, mwg, nwg, kwg):
+        rng = np.random.default_rng(7)
+        a = jnp.asarray(rng.standard_normal((64, 64), dtype=np.float32))
+        b = jnp.asarray(rng.standard_normal((64, 64), dtype=np.float32))
+        got = gemm.gemm_pallas(a, b, mwg=min(mwg, 64), nwg=min(nwg, 64),
+                               kwg=min(kwg, 64))
+        np.testing.assert_allclose(got, gemm_ref(a, b), rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_rectangular(self):
+        rng = np.random.default_rng(11)
+        a = jnp.asarray(rng.standard_normal((32, 128), dtype=np.float32))
+        b = jnp.asarray(rng.standard_normal((128, 16), dtype=np.float32))
+        got = gemm.gemm_pallas(a, b, mwg=16, nwg=16, kwg=32)
+        np.testing.assert_allclose(got, gemm_ref(a, b), rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_identity(self):
+        eye = jnp.eye(32, dtype=jnp.float32)
+        x = jnp.arange(32 * 32, dtype=jnp.float32).reshape(32, 32)
+        got = gemm.gemm_pallas(eye, x, mwg=8, nwg=8, kwg=8)
+        np.testing.assert_allclose(got, x, rtol=1e-6)
+
+    def test_shape_mismatch_raises(self):
+        a = jnp.zeros((8, 8), jnp.float32)
+        b = jnp.zeros((16, 8), jnp.float32)
+        with pytest.raises(ValueError):
+            gemm.gemm_pallas(a, b)
+
+    def test_indivisible_tile_raises(self):
+        a = jnp.zeros((24, 24), jnp.float32)
+        with pytest.raises(ValueError):
+            gemm.gemm_pallas(a, a, mwg=16, nwg=8, kwg=8)
+
+
+class TestTranspose:
+    @pytest.mark.parametrize("tx,ty", [(8, 8), (16, 32), (32, 16),
+                                       (64, 8), (64, 64)])
+    def test_tiles(self, tx, ty):
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.standard_normal((128, 64), dtype=np.float32))
+        got = transpose.transpose_pallas(x, tile_x=min(tx, 64),
+                                         tile_y=min(ty, 128))
+        np.testing.assert_array_equal(got, transpose_ref(x))
+
+    def test_involution(self):
+        rng = np.random.default_rng(6)
+        x = jnp.asarray(rng.standard_normal((64, 32), dtype=np.float32))
+        y = transpose.transpose_pallas(x, tile_x=16, tile_y=16)
+        z = transpose.transpose_pallas(y, tile_x=16, tile_y=16)
+        np.testing.assert_array_equal(z, x)
+
+    def test_indivisible_tile_raises(self):
+        x = jnp.zeros((30, 30), jnp.float32)
+        with pytest.raises(ValueError):
+            transpose.transpose_pallas(x, tile_x=16, tile_y=16)
+
+
+class TestNBody:
+    @pytest.mark.parametrize("bi,bj", [(32, 32), (32, 128), (64, 64),
+                                       (128, 32), (128, 128)])
+    def test_tiles(self, bi, bj):
+        import jax.numpy as jnp
+        from compile.kernels.nbody import nbody_pallas
+        from compile.kernels.ref import nbody_ref
+        rng = np.random.default_rng(17)
+        b = jnp.asarray(rng.uniform(-1, 1, (128, 4)).astype(np.float32))
+        b = b.at[:, 3].set(jnp.abs(b[:, 3]) + 0.1)
+        got = nbody_pallas(b, block_i=bi, block_j=bj)
+        np.testing.assert_allclose(got, nbody_ref(b), rtol=2e-3, atol=2e-4)
+
+    def test_two_body_symmetry(self):
+        import jax.numpy as jnp
+        from compile.kernels.nbody import nbody_pallas
+        # equal masses, accelerations opposite (softening-symmetric)
+        b = jnp.asarray([[0.0, 0.0, 0.0, 1.0],
+                         [1.0, 0.0, 0.0, 1.0]], dtype=jnp.float32)
+        acc = nbody_pallas(b, block_i=2, block_j=2)
+        np.testing.assert_allclose(acc[0], -acc[1], rtol=1e-5)
+        assert acc[0, 0] > 0  # pulled toward +x
+
+    def test_indivisible_raises(self):
+        import jax.numpy as jnp
+        from compile.kernels.nbody import nbody_pallas
+        with pytest.raises(ValueError):
+            nbody_pallas(jnp.zeros((100, 4), jnp.float32), block_i=64,
+                         block_j=32)

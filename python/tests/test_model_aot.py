@@ -1,0 +1,74 @@
+"""L2 model shape checks + AOT lowering round-trip (HLO text emission)."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+class TestVariants:
+    def test_variant_sets_nonempty(self):
+        for bench, builder in model.ALL_VARIANTS.items():
+            vs = builder()
+            assert len(vs) >= 6, bench
+            names = [v.name() for v in vs]
+            assert len(set(names)) == len(names), f"dup names in {bench}"
+
+    def test_coulomb_variant_runs(self):
+        v = model.coulomb_model(8, 5, 0.5,
+                                {"z_iter": 2, "block_x": 8, "block_y": 4})
+        atoms = jnp.asarray(
+            np.random.default_rng(0).uniform(0.2, 3.3, (5, 4)),
+            dtype=jnp.float32)
+        grid, checksum = jax.jit(v.fn)(atoms)
+        assert grid.shape == (8, 8, 8)
+        np.testing.assert_allclose(checksum, jnp.sum(grid), rtol=1e-5)
+
+    def test_gemm_variant_runs(self):
+        v = model.gemm_model(32, 32, 32, {"mwg": 16, "nwg": 16, "kwg": 16})
+        rng = np.random.default_rng(1)
+        a = jnp.asarray(rng.standard_normal((32, 32)), dtype=jnp.float32)
+        b = jnp.asarray(rng.standard_normal((32, 32)), dtype=jnp.float32)
+        c, checksum = jax.jit(v.fn)(a, b)
+        np.testing.assert_allclose(c, a @ b, rtol=1e-3, atol=1e-3)
+
+    def test_ops_metadata_positive(self):
+        for builder in model.ALL_VARIANTS.values():
+            for v in builder():
+                assert v.ops["threads"] > 0
+                assert all(val >= 0 for val in v.ops.values()), v.name()
+
+    def test_gemm_coarsening_reduces_threads(self):
+        small = model.gemm_model(128, 128, 128,
+                                 {"mwg": 16, "nwg": 16, "kwg": 16})
+        big = model.gemm_model(128, 128, 128,
+                               {"mwg": 64, "nwg": 64, "kwg": 16})
+        assert big.ops["threads"] < small.ops["threads"]
+
+
+class TestAot:
+    def test_lower_variant_emits_hlo_text(self):
+        v = model.gemm_model(32, 32, 32, {"mwg": 16, "nwg": 16, "kwg": 16})
+        text = aot.lower_variant(v)
+        assert "HloModule" in text
+        assert "f32[32,32]" in text
+
+    def test_manifest_written(self, tmp_path, monkeypatch):
+        # restrict to one tiny benchmark for speed
+        monkeypatch.setattr(
+            model, "ALL_VARIANTS",
+            {"gemm": lambda: [model.gemm_model(
+                32, 32, 32, {"mwg": 16, "nwg": 16, "kwg": 16})]})
+        monkeypatch.setattr(
+            "sys.argv", ["aot", "--out-dir", str(tmp_path)])
+        aot.main()
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert len(manifest) == 1
+        entry = manifest[0]
+        assert (tmp_path / entry["path"]).exists()
+        assert entry["config"] == {"mwg": 16, "nwg": 16, "kwg": 16}
+        assert entry["args"][0]["dtype"] == "float32"

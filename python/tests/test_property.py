@@ -1,0 +1,58 @@
+"""Hypothesis sweeps over kernel shapes/tiles vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import coulomb, gemm, transpose
+from compile.kernels.ref import coulomb_ref, gemm_ref, transpose_ref
+
+_pow2 = st.sampled_from([4, 8, 16, 32])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mk=_pow2, nk=_pow2, kk=_pow2,
+    mt=st.integers(1, 3), nt=st.integers(1, 3), kt=st.integers(1, 3),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_gemm_any_tile_divides(mk, nk, kk, mt, nt, kt, seed):
+    m, n, k = mk * mt, nk * nt, kk * kt
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    got = gemm.gemm_pallas(a, b, mwg=mk, nwg=nk, kwg=kk)
+    np.testing.assert_allclose(got, gemm_ref(a, b), rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tx=_pow2, ty=_pow2, rt=st.integers(1, 4), ct=st.integers(1, 4),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_transpose_any_tile_divides(tx, ty, rt, ct, seed):
+    rows, cols = ty * rt, tx * ct
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((rows, cols)).astype(np.float32))
+    got = transpose.transpose_pallas(x, tile_x=tx, tile_y=ty)
+    np.testing.assert_array_equal(got, transpose_ref(x))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    zi=st.sampled_from([1, 2, 4, 8]),
+    bx=st.sampled_from([2, 4, 8]),
+    by=st.sampled_from([1, 2, 8]),
+    n_atoms=st.integers(1, 24),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_coulomb_any_config(zi, bx, by, n_atoms, seed):
+    grid = 8
+    rng = np.random.default_rng(seed)
+    atoms = rng.uniform(0.2, 3.8, size=(n_atoms, 4)).astype(np.float32)
+    atoms[:, :3] += 0.111  # keep off lattice points
+    atoms = jnp.asarray(atoms)
+    got = coulomb.coulomb_pallas(atoms, grid, 0.5, block_x=bx, block_y=by,
+                                 z_iter=zi)
+    want = coulomb_ref(atoms, grid, 0.5)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-4)

@@ -1,0 +1,42 @@
+//! Minimal bench harness (criterion is unavailable in the offline crate
+//! set): warmup + timed repetitions, reporting mean/min per iteration.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmups.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: mean,
+        min_ms: min,
+    };
+    println!(
+        "{:<44} {:>10.3} ms/iter (min {:>10.3}, {} iters)",
+        r.name, r.mean_ms, r.min_ms, r.iters
+    );
+    r
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,54 @@
+//! End-to-end experiment benchmarks: one bench per paper table/figure
+//! group, at reduced repetition counts (the full-statistics runs are
+//! `pcat experiment all`; this bench proves each driver end-to-end and
+//! tracks its cost).
+//!
+//! ```bash
+//! cargo bench --bench experiments
+//! ```
+
+mod bench_util;
+
+use bench_util::{bench, section};
+use pcat::harness::{run_experiment, ExperimentOpts};
+
+fn main() {
+    let quick = ExperimentOpts {
+        reps: 25,
+        time_reps: 10,
+        seed: 1,
+    };
+    section("paper tables (reps=25)");
+    for id in [
+        "table2", "table4", "table5", "table7", "table8", "table9",
+        "ablation_n", "ablation_model",
+    ] {
+        bench(id, 0, 1, || {
+            let r = run_experiment(id, &quick).unwrap();
+            assert!(!r.markdown.is_empty());
+        });
+    }
+
+    section("paper figures (time_reps=10)");
+    for id in ["fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig9_13"] {
+        bench(id, 0, 1, || {
+            let r = run_experiment(id, &quick).unwrap();
+            assert!(!r.markdown.is_empty());
+        });
+    }
+
+    // table6 and fig8 are the heavyweights (20 model trainings / the
+    // 61k-config full space); run them at the smallest useful size
+    section("heavyweights (reduced)");
+    let tiny = ExperimentOpts {
+        reps: 10,
+        time_reps: 4,
+        seed: 1,
+    };
+    for id in ["table6", "fig8"] {
+        bench(id, 0, 1, || {
+            let r = run_experiment(id, &tiny).unwrap();
+            assert!(!r.markdown.is_empty());
+        });
+    }
+}

@@ -1,0 +1,120 @@
+//! Hot-path micro-benchmarks (§Perf): configuration scoring, model
+//! prediction, space enumeration, simulator throughput, JSON replay I/O.
+//!
+//! ```bash
+//! cargo bench --bench hotpaths
+//! ```
+
+mod bench_util;
+
+use bench_util::{bench, section};
+use pcat::benchmarks::{self, record_space};
+use pcat::counters::CounterVec;
+use pcat::expert::{analyze, normalize_scores, react, score};
+use pcat::gpusim::{simulate, GpuSpec};
+use pcat::model::{
+    dataset_from_recorded, DecisionTreeModel, OracleModel, PrecomputedModel,
+    TpPcModel,
+};
+use pcat::util::rng::Rng;
+
+fn main() {
+    let gpu = GpuSpec::gtx1070();
+
+    section("tuning-space enumeration");
+    for name in ["coulomb", "gemm", "gemm-full"] {
+        let b = benchmarks::by_name(name).unwrap();
+        bench(&format!("enumerate {name}"), 1, 5, || {
+            let s = b.space();
+            assert!(!s.is_empty());
+        });
+    }
+
+    section("gpusim: workload model + timing engine");
+    let gemm = benchmarks::by_name("gemm").unwrap();
+    let space = gemm.space();
+    let input = gemm.default_input();
+    bench(
+        &format!("simulate gemm space ({} configs)", space.len()),
+        1,
+        10,
+        || {
+            for cfg in &space.configs {
+                let w = gemm.workload(&space, cfg, &input);
+                let r = simulate(&gpu, &w);
+                assert!(r.runtime_ms > 0.0);
+            }
+        },
+    );
+
+    section("exhaustive recording (the paper's replay artifact)");
+    bench("record_space gemm", 1, 5, || {
+        let rec = record_space(gemm.as_ref(), &gpu, &input);
+        assert!(rec.best_time() > 0.0);
+    });
+
+    let rec = record_space(gemm.as_ref(), &gpu, &input);
+
+    section("TP→PC model");
+    let mut rng = Rng::new(1);
+    let ds = dataset_from_recorded(&rec, 1.0, &mut rng);
+    bench("train decision-tree model (gemm, full space)", 0, 3, || {
+        let mut rng = Rng::new(2);
+        let m = DecisionTreeModel::train(&ds, "bench", &mut rng);
+        assert_eq!(m.kind(), "decision_tree");
+    });
+    let dtm = {
+        let mut rng = Rng::new(2);
+        DecisionTreeModel::train(&ds, "bench", &mut rng)
+    };
+    bench(
+        &format!("predict whole space ({} configs)", rec.space.len()),
+        1,
+        10,
+        || {
+            for cfg in &rec.space.configs {
+                let p = dtm.predict(cfg);
+                std::hint::black_box(&p);
+            }
+        },
+    );
+
+    section("expert system + Eq.16 scoring (the search hot loop)");
+    let oracle = OracleModel::new(&rec);
+    let pre = PrecomputedModel::over(&rec.space, &oracle);
+    let preds: Vec<CounterVec> =
+        rec.space.configs.iter().map(|c| pre.predict(c)).collect();
+    let counters = rec.records[100].counters.clone();
+    bench("bottleneck analysis + reaction", 10, 1000, || {
+        let b = analyze(&counters, &gpu);
+        let d = react(&b, 0.7);
+        std::hint::black_box(&d);
+    });
+    let b = analyze(&counters, &gpu);
+    let delta = react(&b, 0.7);
+    let mut scores = vec![0.0; preds.len()];
+    bench(
+        &format!("score full space ({} configs)", preds.len()),
+        3,
+        50,
+        || {
+            for (i, p) in preds.iter().enumerate() {
+                scores[i] = score(&delta, &preds[100], p);
+            }
+            normalize_scores(&mut scores);
+            std::hint::black_box(&scores);
+        },
+    );
+
+    section("recorded-space JSON roundtrip");
+    let json = rec.to_json().to_string_pretty(0);
+    println!("payload: {:.1} MB", json.len() as f64 / 1e6);
+    bench("serialize recorded gemm space", 1, 5, || {
+        let s = rec.to_json().to_string_pretty(0);
+        std::hint::black_box(&s);
+    });
+    bench("parse recorded gemm space", 1, 5, || {
+        let v = pcat::util::json::parse(&json).unwrap();
+        std::hint::black_box(&v);
+    });
+}

@@ -1,0 +1,83 @@
+//! End-to-end searcher benchmarks: wall-clock cost of one full search
+//! per (searcher, benchmark) — the L3 overhead the paper discusses in
+//! §4.6 (its python searcher tripled the per-test time on GEMM-full; the
+//! rust implementation must be negligible next to kernel runs).
+//!
+//! ```bash
+//! cargo bench --bench searchers
+//! ```
+
+mod bench_util;
+
+use bench_util::{bench, section};
+use pcat::benchmarks::{self, record_space};
+use pcat::gpusim::GpuSpec;
+use pcat::model::{OracleModel, PrecomputedModel};
+use pcat::searcher::{
+    BasinHopping, Budget, CostModel, ProfileSearcher, RandomSearcher,
+    ReplayEnv, Searcher, SimulatedAnnealing, Starchart,
+};
+
+fn main() {
+    let gpu = GpuSpec::rtx2080();
+    for name in ["coulomb", "transpose", "gemm"] {
+        let b = benchmarks::by_name(name).unwrap();
+        let rec = record_space(b.as_ref(), &gpu, &b.default_input());
+        let thr = rec.best_time() * 1.1;
+        let oracle = OracleModel::new(&rec);
+        let pre = PrecomputedModel::over(&rec.space, &oracle);
+        section(&format!(
+            "{name}: {} configs, search to 1.1x best",
+            rec.space.len()
+        ));
+
+        let mk_env =
+            || ReplayEnv::new(rec.clone(), gpu.clone(), CostModel::default());
+        let budget = Budget::until(thr, usize::MAX);
+
+        bench("random", 2, 20, || {
+            let mut env = mk_env();
+            let t = RandomSearcher::new(3).run(&mut env, &budget);
+            std::hint::black_box(&t);
+        });
+        bench("profile (oracle model)", 2, 20, || {
+            let mut env = mk_env();
+            let t = ProfileSearcher::new(&pre, 0.7, 3).run(&mut env, &budget);
+            std::hint::black_box(&t);
+        });
+        bench("basin hopping", 2, 20, || {
+            let mut env = mk_env();
+            let t = BasinHopping::new(3).run(&mut env, &budget);
+            std::hint::black_box(&t);
+        });
+        bench("simulated annealing", 2, 20, || {
+            let mut env = mk_env();
+            let t = SimulatedAnnealing::new(3).run(&mut env, &budget);
+            std::hint::black_box(&t);
+        });
+        bench("starchart (incl. model build)", 1, 5, || {
+            let mut env = mk_env();
+            let t = Starchart::new(3).run(&mut env, &budget);
+            std::hint::black_box(&t);
+        });
+    }
+
+    // the §4.6 GEMM-full stress case: scoring 60k+ configurations per
+    // profiling round must not triple the per-test cost as the paper's
+    // python implementation did
+    let full = benchmarks::by_name("gemm-full").unwrap();
+    let rec = record_space(full.as_ref(), &gpu, &full.default_input());
+    section(&format!(
+        "gemm-full: {} configs — per-round scoring overhead",
+        rec.space.len()
+    ));
+    let oracle = OracleModel::new(&rec);
+    let pre = PrecomputedModel::over(&rec.space, &oracle);
+    let budget = Budget::tests(60); // 10 profiling rounds
+    bench("profile searcher, 60 tests (10 rounds)", 1, 5, || {
+        let mut env =
+            ReplayEnv::new(rec.clone(), gpu.clone(), CostModel::default());
+        let t = ProfileSearcher::new(&pre, 0.7, 3).run(&mut env, &budget);
+        std::hint::black_box(&t);
+    });
+}

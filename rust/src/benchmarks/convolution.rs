@@ -1,0 +1,225 @@
+//! 2D convolution, 15×15 filter (Table 2: 10 dims, 3,928 configs).
+//!
+//! The CLTune-style convolution space: thread-block shape, per-thread
+//! work, staging of the input tile and/or filter coefficients in local
+//! memory, loop unrolling, vector loads and tile padding. Heavy
+//! constraint pruning (the paper notes only 0.025 % of the cross product
+//! survives in their space; ours prunes less aggressively but the same
+//! way — divisibility + resource sanity).
+
+use super::{Benchmark, Input};
+use crate::gpusim::Workload;
+use crate::tuning::{Config, ParamDef, Space};
+
+/// Filter half-size: 15×15 taps.
+const FILTER: f64 = 15.0;
+
+pub struct Convolution;
+
+impl Benchmark for Convolution {
+    fn name(&self) -> &'static str {
+        "convolution"
+    }
+
+    fn space(&self) -> Space {
+        let params = vec![
+            ParamDef::new("TBX", &[8, 16, 32, 64]),
+            ParamDef::new("TBY", &[8, 16, 32]),
+            ParamDef::new("WPTX", &[1, 2, 4]),
+            ParamDef::new("WPTY", &[1, 2, 4]),
+            ParamDef::new("LOCAL", &[0, 1, 2]),
+            ParamDef::new("CONST_FILTER", &[0, 1]),
+            ParamDef::new("UNROLL", &[1, 3, 5, 15]),
+            ParamDef::new("PADDING", &[0, 1]),
+            ParamDef::new("VECTOR", &[1, 2, 4]),
+            ParamDef::new("REORDER", &[0, 1]),
+        ];
+        Space::enumerate("convolution", params, |v| {
+            let (tbx, tby, wptx, wpty, local, _cf, _unroll, pad, vec, _ro) = (
+                v[0], v[1], v[2], v[3], v[4], v[5], v[6], v[7], v[8], v[9],
+            );
+            let block = tbx * tby;
+            let tile_x = tbx * wptx;
+            let tile_y = tby * wpty;
+            (64..=512).contains(&block)
+                && tbx % vec == 0
+                && vec <= wptx
+                && wptx * wpty <= 8
+                && (local == 2 || pad == 0) // padding only with tile staging
+                // staged input tile must fit 48 KB of shared memory
+                && (local != 2
+                    || ((tile_x + FILTER as i64 - 1 + pad)
+                        * (tile_y + FILTER as i64 - 1)
+                        * 4)
+                        <= 48 * 1024
+                )
+        })
+    }
+
+    fn default_input(&self) -> Input {
+        // §4.6: 4096×4096 image
+        Input::new("4096x4096", &[4096, 4096])
+    }
+
+    fn inputs(&self) -> Vec<Input> {
+        vec![self.default_input(), Input::new("1024x1024", &[1024, 1024])]
+    }
+
+    fn workload(&self, space: &Space, cfg: &Config, input: &Input) -> Workload {
+        let tbx = space.value(cfg, "TBX") as f64;
+        let tby = space.value(cfg, "TBY") as f64;
+        let wptx = space.value(cfg, "WPTX") as f64;
+        let wpty = space.value(cfg, "WPTY") as f64;
+        let local = space.value(cfg, "LOCAL") as f64;
+        let cf = space.value(cfg, "CONST_FILTER") as f64;
+        let unroll = space.value(cfg, "UNROLL") as f64;
+        let pad = space.value(cfg, "PADDING") as f64;
+        let vec = space.value(cfg, "VECTOR") as f64;
+        let reorder = space.value(cfg, "REORDER") as f64;
+
+        let w_img = input.dim(0);
+        let h_img = input.dim(1);
+        let outputs = w_img * h_img;
+        let per_thread = wptx * wpty;
+        let threads = outputs / per_thread;
+        let block_size = tbx * tby;
+        let blocks = threads / block_size;
+
+        let taps = FILTER * FILTER;
+
+        // --- per-thread instructions -------------------------------------
+        let fp32 = 2.0 * taps * per_thread;
+        let int = 12.0
+            + taps * per_thread * (1.2 / unroll + 0.4 / vec)
+            + reorder * 8.0;
+        let cont = (FILTER / unroll) * FILTER + 4.0;
+        let ldst = taps * per_thread / vec
+            + cf * 0.0 // constant-cache filter loads bypass LSU accounting
+            + (1.0 - cf) * taps * 0.2;
+        let misc = if local > 0.5 { 4.0 } else { 0.0 };
+
+        // --- registers -----------------------------------------------------
+        let regs = 16.0
+            + per_thread * (2.0 + 0.15 * unroll)
+            + 2.0 * vec
+            + if local > 1.5 { 6.0 } else { 0.0 };
+
+        // --- memory traffic -------------------------------------------------
+        let tile_x = tbx * wptx;
+        let tile_y = tby * wpty;
+        let halo_tile = (tile_x + FILTER - 1.0) * (tile_y + FILTER - 1.0);
+        let gread = if local > 1.5 {
+            // input tile staged once per block
+            blocks * halo_tile * 4.0
+        } else {
+            // direct reads: every tap per output issues an L1tex request;
+            // spatial locality within the warp absorbs roughly half.
+            threads * taps * per_thread * 4.0 / vec * 0.5
+        } + (1.0 - cf) * blocks * taps * 4.0; // filter reloads
+        let gwrite = outputs * 4.0;
+
+        let (shr_ld, shr_st, shr_bytes) = if local > 1.5 {
+            let conflict = if pad > 0.5 { 1.0 } else { 2.0 };
+            (
+                threads as f64 * taps * per_thread * 4.0 * 0.5 * conflict,
+                blocks * halo_tile * 4.0,
+                (tile_x + FILTER - 1.0 + pad) * (tile_y + FILTER - 1.0) * 4.0,
+            )
+        } else if local > 0.5 {
+            // filter in shared memory
+            (threads * taps * 4.0 * 0.3, blocks * taps * 4.0, taps * 4.0)
+        } else {
+            (0.0, 0.0, 0.0)
+        };
+
+        Workload {
+            threads,
+            block_size,
+            regs_per_thread: regs,
+            shared_bytes_per_block: shr_bytes,
+            fp32: fp32 * threads,
+            int: int * threads,
+            cont: cont * threads,
+            ldst: ldst * threads,
+            misc: misc * threads,
+            bconv: 2.0 * threads,
+            gread,
+            gwrite,
+            tex_fraction: if local > 1.5 { 0.3 } else { 0.85 },
+            tex_footprint_per_sm: halo_tile * 4.0 + cf * taps * 4.0,
+            l2_footprint: (w_img * (tile_y + FILTER)) * 4.0,
+            shared_load_bytes: shr_ld,
+            shared_store_bytes: shr_st,
+            divergence: 0.03 + reorder * 0.01,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::record_space;
+    use crate::gpusim::GpuSpec;
+
+    #[test]
+    fn space_dims_and_size() {
+        let s = Convolution.space();
+        assert_eq!(s.dims(), 10);
+        assert!((1500..=9000).contains(&s.len()), "{}", s.len());
+    }
+
+    #[test]
+    fn shared_tile_fits_constraint() {
+        let s = Convolution.space();
+        for c in s.configs.iter().step_by(7) {
+            if s.value(c, "LOCAL") == 2 {
+                let tile_x = s.value(c, "TBX") * s.value(c, "WPTX");
+                let tile_y = s.value(c, "TBY") * s.value(c, "WPTY");
+                let bytes = (tile_x + 14 + s.value(c, "PADDING"))
+                    * (tile_y + 14)
+                    * 4;
+                assert!(bytes <= 48 * 1024);
+            }
+        }
+    }
+
+    #[test]
+    fn staging_cuts_global_reads() {
+        let s = Convolution.space();
+        let input = Convolution.default_input();
+        let find = |local: i64| {
+            s.configs
+                .iter()
+                .find(|c| {
+                    s.value(c, "LOCAL") == local
+                        && s.value(c, "TBX") == 32
+                        && s.value(c, "TBY") == 8
+                        && s.value(c, "WPTX") == 2
+                        && s.value(c, "WPTY") == 2
+                        && s.value(c, "VECTOR") == 1
+                        && s.value(c, "CONST_FILTER") == 1
+                        && s.value(c, "UNROLL") == 5
+                        && s.value(c, "PADDING") == 0
+                        && s.value(c, "REORDER") == 0
+                })
+                .unwrap()
+        };
+        let direct = Convolution.workload(&s, find(0), &input);
+        let staged = Convolution.workload(&s, find(2), &input);
+        assert!(staged.gread < direct.gread);
+    }
+
+    #[test]
+    fn hard_space_has_few_well_performing_configs() {
+        // Table 4: convolution is the hardest space for random search.
+        let rec = record_space(
+            &Convolution,
+            &GpuSpec::gtx1070(),
+            &Convolution.default_input(),
+        );
+        let frac =
+            rec.well_performing_count(1.1) as f64 / rec.space.len() as f64;
+        assert!(frac < 0.08, "well-performing fraction {frac}");
+    }
+}

@@ -1,0 +1,232 @@
+//! Direct Coulomb Summation 3D (paper §2, Listing 1; Table 2: 7 dims,
+//! 210 configs).
+//!
+//! Tuning parameters mirror the KTT CUDA benchmark:
+//! * `BLOCK_X`, `BLOCK_Y` — thread-block shape over the XY grid plane;
+//! * `Z_ITER` — thread coarsening along Z (the paper's `Z_ITERATIONS`):
+//!   amortizes atom loads and the invariant `dx²+dy²` across Z slices at
+//!   the cost of registers and parallelism;
+//! * `INNER_UNROLL` — unroll factor of the atom loop (fewer branches,
+//!   more registers);
+//! * `USE_SOA` — structure-of-arrays atom layout (better coalescing /
+//!   read-path locality);
+//! * `VECTOR` — vector width of atom loads (fewer ld/st instructions).
+
+use super::{Benchmark, Input};
+use crate::gpusim::Workload;
+use crate::tuning::{Config, ParamDef, Space};
+
+pub struct Coulomb;
+
+impl Benchmark for Coulomb {
+    fn name(&self) -> &'static str {
+        "coulomb"
+    }
+
+    fn space(&self) -> Space {
+        let params = vec![
+            ParamDef::new("BLOCK_X", &[4, 8, 16, 32]),
+            ParamDef::new("BLOCK_Y", &[1, 2, 4, 8]),
+            ParamDef::new("Z_ITER", &[1, 2, 4, 8, 16, 32]),
+            ParamDef::new("INNER_UNROLL", &[1, 2, 4]),
+            ParamDef::new("USE_SOA", &[0, 1]),
+            ParamDef::new("VECTOR", &[1, 2]),
+            ParamDef::new("SLICE_FACTOR", &[1, 2]),
+        ];
+        Space::enumerate("coulomb", params, |v| {
+            let (bx, by, zi, unroll, _soa, vec, slice) =
+                (v[0], v[1], v[2], v[3], v[4], v[5], v[6]);
+            let block = bx * by;
+            // sane CUDA launch shapes (the paper's spaces avoid sub-warp
+            // blocks and register-explosion corners)
+            (64..=512).contains(&block)
+                && zi * unroll <= 64
+                && unroll <= zi
+                && (vec == 1 || zi >= 2) // vector loads only pay off coarsened
+                && slice <= zi
+        })
+    }
+
+    fn default_input(&self) -> Input {
+        // §4.6: grid 256^3, 256 atoms
+        Input::new("grid256_atoms256", &[256, 256])
+    }
+
+    fn inputs(&self) -> Vec<Input> {
+        vec![
+            self.default_input(),
+            // §2.3's two contrasting workloads
+            Input::new("grid256_atoms64", &[256, 64]),
+            Input::new("grid25_atoms4096", &[25, 4096]),
+        ]
+    }
+
+    fn workload(&self, space: &Space, cfg: &Config, input: &Input) -> Workload {
+        let bx = space.value(cfg, "BLOCK_X") as f64;
+        let by = space.value(cfg, "BLOCK_Y") as f64;
+        let zi = space.value(cfg, "Z_ITER") as f64;
+        let unroll = space.value(cfg, "INNER_UNROLL") as f64;
+        let soa = space.value(cfg, "USE_SOA") as f64;
+        let vec = space.value(cfg, "VECTOR") as f64;
+        let slice = space.value(cfg, "SLICE_FACTOR") as f64;
+
+        let g = input.dim(0); // grid size per dimension
+        let n = input.dim(1); // atoms
+        let points = g * g * g;
+        let threads = (points / zi).max(1.0);
+        let block_size = bx * by;
+
+        // --- per-thread instruction counts ---------------------------
+        // per atom: 5 invariant flops (dx,dy,dz diffs + dx²+dy²), then
+        // per coarsened z point: rsqrt (1) + fma (2) + dz update (1).
+        let fp32 = n * (5.0 + 4.0 * zi) + 3.0 * zi;
+        // index arithmetic + loop counters; unrolling divides loop
+        // overhead, vector loads halve address math.
+        let int = 18.0 + n * (2.0 / unroll + 2.0 / vec) + 2.0 * zi;
+        let cont = n / unroll + zi;
+        let ldst = n * 4.0 / vec + zi;
+        let misc = n * 1.0 * zi * 0.25; // rsqrt special-function slots
+        let bconv = 4.0;
+
+        // --- registers -------------------------------------------------
+        // energyValue[Z_ITER] array + unroll-duplicated live ranges
+        // (unrolling the atom loop keeps `unroll` atoms' worth of dX/dY/dZ
+        // live per coarsened Z point) + vector load staging. At high
+        // zi×unroll this crosses the 255-register ceiling and spills —
+        // the LOC_O signal the expert system reacts to.
+        let regs =
+            16.0 + zi * (1.2 + 1.6 * unroll) + 3.0 * vec + 2.0 * slice;
+
+        // --- memory traffic ---------------------------------------------
+        // atoms are broadcast per warp: requests per warp per pass.
+        let warps = threads / 32.0;
+        let atom_bytes = if soa > 0.5 { 12.0 + 4.0 } else { 16.0 };
+        // SoA layout coalesces perfectly; AoS wastes part of each sector.
+        let read_eff = if soa > 0.5 { 1.0 } else { 1.25 };
+        let gread = warps * n * atom_bytes * read_eff / vec.sqrt();
+        let gwrite = points * 4.0;
+
+        // boundary handling + partial warps
+        let warp_fill = (block_size / 32.0).min(1.0);
+        let divergence = (1.0 - warp_fill) * 0.9 + 0.02;
+
+        let mut w = Workload {
+            threads,
+            block_size,
+            regs_per_thread: regs,
+            fp32: fp32 * threads,
+            int: int * threads,
+            cont: cont * threads,
+            ldst: ldst * threads,
+            misc: misc * threads,
+            bconv: bconv * threads,
+            gread,
+            gwrite,
+            tex_fraction: if soa > 0.5 { 0.95 } else { 0.75 },
+            tex_footprint_per_sm: n * atom_bytes,
+            l2_footprint: n * atom_bytes + gwrite * 0.1,
+            divergence,
+            ..Default::default()
+        };
+        // SLICE_FACTOR: trades one extra pass over atoms for smaller
+        // per-pass footprint (a blocking knob for huge atom counts).
+        if slice > 1.0 {
+            w.tex_footprint_per_sm /= slice;
+            w.int += 8.0 * threads;
+            w.cont += (n / unroll) * threads * (slice - 1.0) * 0.02;
+        }
+        w
+    }
+
+    fn instruction_bound(&self) -> bool {
+        true // the paper treats Coulomb as compute-bound
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{simulate, GpuSpec};
+
+    #[test]
+    fn space_has_paper_dims() {
+        let s = Coulomb.space();
+        assert_eq!(s.dims(), 7);
+        assert!(s.len() >= 100, "{}", s.len());
+    }
+
+    #[test]
+    fn constraints_hold_everywhere() {
+        let s = Coulomb.space();
+        for c in &s.configs {
+            let block = s.value(c, "BLOCK_X") * s.value(c, "BLOCK_Y");
+            assert!((64..=512).contains(&block));
+            assert!(s.value(c, "Z_ITER") * s.value(c, "INNER_UNROLL") <= 64);
+            assert!(s.value(c, "INNER_UNROLL") <= s.value(c, "Z_ITER"));
+        }
+    }
+
+    #[test]
+    fn coarsening_reduces_fp32_like_fig1() {
+        // Figure 1: FP operations fall monotonically with coarsening.
+        let s = Coulomb.space();
+        let input = Coulomb.default_input();
+        let mut prev = f64::MAX;
+        for zi in [1, 2, 4, 8, 16, 32] {
+            let cfg = s
+                .configs
+                .iter()
+                .find(|c| {
+                    s.value(c, "Z_ITER") == zi
+                        && s.value(c, "BLOCK_X") == 16
+                        && s.value(c, "BLOCK_Y") == 8
+                        && s.value(c, "INNER_UNROLL") == 1
+                        && s.value(c, "USE_SOA") == 1
+                        && s.value(c, "VECTOR") == 1
+                        && s.value(c, "SLICE_FACTOR") == 1
+                })
+                .unwrap();
+            let w = Coulomb.workload(&s, cfg, &input);
+            assert!(w.fp32 < prev, "zi={zi}");
+            prev = w.fp32;
+        }
+    }
+
+    #[test]
+    fn extreme_coarsening_lowers_occupancy() {
+        let s = Coulomb.space();
+        let input = Coulomb.default_input();
+        let gpu = GpuSpec::gtx1070();
+        let pick = |zi: i64| {
+            s.configs
+                .iter()
+                .find(|c| {
+                    s.value(c, "Z_ITER") == zi
+                        && s.value(c, "INNER_UNROLL") == 1
+                        && s.value(c, "BLOCK_X") == 16
+                        && s.value(c, "BLOCK_Y") == 8
+                        && s.value(c, "USE_SOA") == 1
+                        && s.value(c, "VECTOR") == 1
+                        && s.value(c, "SLICE_FACTOR") == 1
+                })
+                .unwrap()
+        };
+        let low = simulate(&gpu, &Coulomb.workload(&s, pick(1), &input));
+        let high = simulate(&gpu, &Coulomb.workload(&s, pick(16), &input));
+        assert!(high.occupancy.occupancy < low.occupancy.occupancy);
+    }
+
+    #[test]
+    fn best_zi_is_interior() {
+        // the paper's §2.3 narrative: neither zi=1 nor zi=32 is optimal
+        // on the default input/GPU — the sweet spot is interior.
+        let rec = super::super::record_space(
+            &Coulomb,
+            &GpuSpec::gtx1070(),
+            &Coulomb.default_input(),
+        );
+        let best = &rec.space.configs[rec.best_index()];
+        let zi = rec.space.value(best, "Z_ITER");
+        assert!(zi > 1 && zi < 32, "best Z_ITER={zi}");
+    }
+}

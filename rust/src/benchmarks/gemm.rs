@@ -1,0 +1,321 @@
+//! GEMM (Table 2: reduced space 10 dims / ~5.8k configs from CLBlast;
+//! full space 14 dims / ~205k configs from CLTune).
+//!
+//! Parameter vocabulary follows CLBlast [24]:
+//! * `MWG`, `NWG` — per-workgroup output tile;
+//! * `KWG` — K-panel staged per iteration;
+//! * `MDIMC`, `NDIMC` — thread grid inside a workgroup (each thread
+//!   computes an (MWG/MDIMC)×(NWG/NDIMC) register tile);
+//! * `MDIMA`, `NDIMB` — cooperative load shapes for the A/B panels;
+//! * `KWI` — inner unroll of the K loop;
+//! * `VWM`, `VWN` — vector widths for loads/stores.
+//!
+//! The full space adds CLTune's `SA`, `SB` (stage A/B in shared memory)
+//! and `STRM`, `STRN` (strided thread access), with the reduced space
+//! pinned at SA=SB=1, STRM=STRN=0 like the paper's CLBlast subset.
+
+use super::{Benchmark, Input};
+use crate::gpusim::Workload;
+use crate::tuning::{Config, ParamDef, Space};
+
+pub struct Gemm;
+pub struct GemmFull;
+
+fn gemm_params(full: bool) -> Vec<ParamDef> {
+    let mut p = vec![
+        ParamDef::new("MWG", &[16, 32, 64, 128]),
+        ParamDef::new("NWG", &[16, 32, 64, 128]),
+        ParamDef::new("KWG", &[16, 32]),
+        ParamDef::new("MDIMC", &[8, 16, 32]),
+        ParamDef::new("NDIMC", &[8, 16, 32]),
+        ParamDef::new("MDIMA", &[8, 16, 32]),
+        ParamDef::new("NDIMB", &[8, 16, 32]),
+        ParamDef::new("KWI", &[2, 8]),
+        ParamDef::new("VWM", &[1, 2, 4, 8]),
+        ParamDef::new("VWN", &[1, 2, 4, 8]),
+    ];
+    if full {
+        p.push(ParamDef::new("SA", &[0, 1]));
+        p.push(ParamDef::new("SB", &[0, 1]));
+        p.push(ParamDef::new("STRM", &[0, 1]));
+        p.push(ParamDef::new("STRN", &[0, 1]));
+    }
+    p
+}
+
+/// CLBlast-style legality constraints.
+fn gemm_ok(v: &[i64], full: bool) -> bool {
+    let (mwg, nwg, kwg) = (v[0], v[1], v[2]);
+    let (mdimc, ndimc, mdima, ndimb) = (v[3], v[4], v[5], v[6]);
+    let (kwi, vwm, vwn) = (v[7], v[8], v[9]);
+    let block = mdimc * ndimc;
+    let ok = kwg % kwi == 0
+        && mwg % (mdimc * vwm) == 0
+        && nwg % (ndimc * vwn) == 0
+        && mwg % (mdima * vwm) == 0
+        && nwg % (ndimb * vwn) == 0
+        && block % mdima == 0
+        && block % ndimb == 0
+        && kwg % (block / mdima) == 0
+        && kwg % (block / ndimb) == 0
+        && (64..=1024).contains(&block)
+        && block % 32 == 0 // warp-multiple workgroups
+        && (mwg / mdimc) * (nwg / ndimc) <= 32; // bounded register tile
+    if !ok {
+        return false;
+    }
+    if full {
+        let (sa, sb, strm, strn) = (v[10], v[11], v[12], v[13]);
+        // strided access only applies to vectorized, non-staged operands
+        if strm == 1 && (vwm == 1 || sa == 1) {
+            return false;
+        }
+        if strn == 1 && (vwn == 1 || sb == 1) {
+            return false;
+        }
+    }
+    true
+}
+
+fn gemm_space(name: &str, full: bool) -> Space {
+    Space::enumerate(name, gemm_params(full), |v| gemm_ok(v, full))
+}
+
+fn gemm_workload(space: &Space, cfg: &Config, input: &Input, full: bool) -> Workload {
+    let g = |n: &str| space.value(cfg, n) as f64;
+    let (mwg, nwg, kwg) = (g("MWG"), g("NWG"), g("KWG"));
+    let (mdimc, ndimc) = (g("MDIMC"), g("NDIMC"));
+    let (mdima, ndimb) = (g("MDIMA"), g("NDIMB"));
+    let (kwi, vwm, vwn) = (g("KWI"), g("VWM"), g("VWN"));
+    let (sa, sb, strm, strn) = if full {
+        (g("SA"), g("SB"), g("STRM"), g("STRN"))
+    } else {
+        (1.0, 1.0, 0.0, 0.0)
+    };
+
+    let (m, n, k) = (input.dim(0), input.dim(1), input.dim(2));
+    // tail padding: tiles cover ceil(m/MWG) — undersized inputs waste work
+    let tiles_m = (m / mwg).ceil().max(1.0);
+    let tiles_n = (n / nwg).ceil().max(1.0);
+    let m_eff = tiles_m * mwg;
+    let n_eff = tiles_n * nwg;
+
+    let wpt_m = mwg / mdimc;
+    let wpt_n = nwg / ndimc;
+    let block_size = mdimc * ndimc;
+    let blocks = tiles_m * tiles_n;
+    let threads = blocks * block_size;
+
+    // --- per-thread instruction counts --------------------------------
+    let fp32 = 2.0 * k * wpt_m * wpt_n;
+    let ldst = k * (wpt_m / vwm + wpt_n / vwn)
+        + wpt_m * wpt_n / vwm
+        + sa * (k / kwg) * (mwg * kwg / block_size) / vwm
+        + sb * (k / kwg) * (nwg * kwg / block_size) / vwn;
+    let int = (k / kwi) * (6.0 + (wpt_m + wpt_n) * 0.5)
+        + k * 0.5
+        + 20.0
+        + (strm + strn) * k * 0.3; // strided index arithmetic
+    let cont = (k / kwg) * (kwg / kwi + 2.0) + 4.0;
+    let misc = (sa + sb) * (k / kwg) * 2.0; // barriers
+    let bconv = 2.0;
+
+    // --- registers ------------------------------------------------------
+    let regs = 14.0
+        + wpt_m * wpt_n
+        + 1.5 * (wpt_m + wpt_n)
+        + 1.5 * (vwm + vwn)
+        + (1.0 - sa) * 4.0
+        + (1.0 - sb) * 4.0;
+
+    // --- memory traffic ---------------------------------------------------
+    // staged operands are read once per block; unstaged operands issue
+    // per-thread requests (NDIMC-/MDIMC-fold redundancy absorbed by the
+    // read path caches).
+    let a_bytes_block = mwg * k * 4.0;
+    let b_bytes_block = nwg * k * 4.0;
+    let a_redundancy = if sa > 0.5 { 1.0 } else { ndimc };
+    let b_redundancy = if sb > 0.5 { 1.0 } else { mdimc };
+    // cooperative-load shape mismatch costs extra transactions
+    let a_shape_penalty = 1.0 + 0.08 * (mdima.log2() - 3.0).abs();
+    let b_shape_penalty = 1.0 + 0.08 * (ndimb.log2() - 3.0).abs();
+    let stride_penalty_a = 1.0 + 0.2 * strm;
+    let stride_penalty_b = 1.0 + 0.2 * strn;
+    let gread = blocks
+        * (a_bytes_block * a_redundancy * a_shape_penalty * stride_penalty_a
+            + b_bytes_block * b_redundancy * b_shape_penalty * stride_penalty_b);
+    let gwrite = m_eff * n_eff * 4.0;
+
+    // shared-memory traffic for the staged panels
+    let shr_st = blocks * (sa * a_bytes_block + sb * b_bytes_block);
+    let shr_ld = threads
+        * k
+        * (sa * wpt_m + sb * wpt_n)
+        * 4.0
+        / ((vwm + vwn) * 0.5);
+
+    Workload {
+        threads,
+        block_size,
+        regs_per_thread: regs,
+        shared_bytes_per_block: (sa * mwg + sb * nwg) * kwg * 4.0,
+        fp32: fp32 * threads,
+        int: int * threads,
+        ldst: ldst * threads,
+        cont: cont * threads,
+        misc: misc * threads,
+        bconv: bconv * threads,
+        gread,
+        gwrite,
+        tex_fraction: 0.4 + 0.3 * (2.0 - sa - sb) / 2.0,
+        tex_footprint_per_sm: (mwg + nwg) * kwg * 4.0,
+        l2_footprint: (m_eff * k + k * n_eff) * 4.0,
+        shared_load_bytes: shr_ld,
+        shared_store_bytes: shr_st,
+        divergence: 0.01,
+        ..Default::default()
+    }
+}
+
+const GEMM_INPUTS: &[(&str, [u64; 3])] = &[
+    ("2048x2048", [2048, 2048, 2048]),
+    ("128x128", [128, 128, 128]),
+    ("16x4096", [16, 4096, 4096]),
+    ("4096x16", [4096, 16, 4096]),
+];
+
+impl Benchmark for Gemm {
+    fn name(&self) -> &'static str {
+        "gemm"
+    }
+
+    fn space(&self) -> Space {
+        gemm_space("gemm", false)
+    }
+
+    fn default_input(&self) -> Input {
+        Input::new("2048x2048", &[2048, 2048, 2048])
+    }
+
+    fn inputs(&self) -> Vec<Input> {
+        GEMM_INPUTS
+            .iter()
+            .map(|(n, d)| Input::new(n, d))
+            .collect()
+    }
+
+    fn workload(&self, space: &Space, cfg: &Config, input: &Input) -> Workload {
+        gemm_workload(space, cfg, input, false)
+    }
+}
+
+impl Benchmark for GemmFull {
+    fn name(&self) -> &'static str {
+        "gemm-full"
+    }
+
+    fn space(&self) -> Space {
+        gemm_space("gemm-full", true)
+    }
+
+    fn default_input(&self) -> Input {
+        Input::new("2048x2048", &[2048, 2048, 2048])
+    }
+
+    fn workload(&self, space: &Space, cfg: &Config, input: &Input) -> Workload {
+        gemm_workload(space, cfg, input, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::record_space;
+    use crate::gpusim::GpuSpec;
+
+    #[test]
+    fn reduced_space_dims() {
+        let s = Gemm.space();
+        assert_eq!(s.dims(), 10);
+    }
+
+    #[test]
+    fn full_space_contains_reduced_parameters() {
+        let s = GemmFull.space();
+        assert_eq!(s.dims(), 14);
+        for p in Gemm.space().params {
+            assert!(s.param_index(&p.name).is_some(), "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn constraints_hold() {
+        let s = Gemm.space();
+        for c in s.configs.iter().step_by(13) {
+            let mwg = s.value(c, "MWG");
+            let mdimc = s.value(c, "MDIMC");
+            let vwm = s.value(c, "VWM");
+            assert_eq!(mwg % (mdimc * vwm), 0);
+            let block = mdimc * s.value(c, "NDIMC");
+            assert!((64..=1024).contains(&block));
+        }
+    }
+
+    #[test]
+    fn bigger_tiles_reduce_traffic() {
+        let s = Gemm.space();
+        let input = Gemm.default_input();
+        let find = |mwg: i64| {
+            s.configs
+                .iter()
+                .find(|c| {
+                    s.value(c, "MWG") == mwg
+                        && s.value(c, "NWG") == mwg
+                        && s.value(c, "KWG") == 32
+                        && s.value(c, "MDIMC") == 16
+                        && s.value(c, "NDIMC") == 16
+                        && s.value(c, "MDIMA") == 16
+                        && s.value(c, "NDIMB") == 16
+                        && s.value(c, "VWM") == 1
+                        && s.value(c, "VWN") == 1
+                        && s.value(c, "KWI") == 2
+                })
+                .unwrap()
+        };
+        let small = Gemm.workload(&s, find(32), &input);
+        let large = Gemm.workload(&s, find(64), &input);
+        assert!(large.gread < small.gread);
+    }
+
+    #[test]
+    fn tiny_input_penalizes_big_tiles() {
+        // Table 7 premise: on 16×4096 the big-tile config wastes work.
+        let s = Gemm.space();
+        let rec_big = record_space(
+            &Gemm,
+            &GpuSpec::gtx1070(),
+            &Input::new("16x4096", &[16, 4096, 4096]),
+        );
+        let best = &rec_big.space.configs[rec_big.best_index()];
+        assert!(
+            s.value(best, "MWG") <= 32,
+            "best MWG on 16-row input = {}",
+            s.value(best, "MWG")
+        );
+    }
+
+    #[test]
+    fn optimum_differs_between_square_and_rect() {
+        let a = record_space(
+            &Gemm,
+            &GpuSpec::gtx1070(),
+            &Input::new("2048", &[2048, 2048, 2048]),
+        );
+        let b = record_space(
+            &Gemm,
+            &GpuSpec::gtx1070(),
+            &Input::new("rect", &[16, 4096, 4096]),
+        );
+        assert_ne!(a.best_index(), b.best_index());
+    }
+}

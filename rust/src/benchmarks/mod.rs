@@ -1,0 +1,251 @@
+//! The paper's benchmark set (Table 2) as analytic workload models.
+//!
+//! Each benchmark defines (a) its tuning parameters and constraints —
+//! mirroring the KTT/CLBlast/CLTune spaces the paper used — and (b) a
+//! function mapping (configuration, input) to a device-independent
+//! [`Workload`] descriptor. The [`crate::gpusim`] engine turns that into
+//! runtimes and performance counters per device.
+//!
+//! | Benchmark    | dims (paper) | configs (paper) |
+//! |--------------|--------------|-----------------|
+//! | Convolution  | 10           | 3,928           |
+//! | Coulomb 3D   | 7            | 210             |
+//! | GEMM         | 10           | 5,788           |
+//! | GEMM full    | 14           | 205,216         |
+//! | Transpose    | 8            | 1,784           |
+//! | N-body       | 7            | 3,134           |
+//!
+//! Our spaces match the dimensionality and the order of magnitude (the
+//! exact counts depend on value sets that the paper does not fully
+//! enumerate).
+
+mod convolution;
+mod coulomb;
+mod gemm;
+mod nbody;
+mod transpose;
+
+pub use convolution::Convolution;
+pub use coulomb::Coulomb;
+pub use gemm::{Gemm, GemmFull};
+pub use nbody::NBody;
+pub use transpose::Transpose;
+
+use crate::gpusim::{simulate, GpuSpec, Workload};
+use crate::tuning::{Config, Record, RecordedSpace, Space};
+
+/// Problem-input descriptor (sizes only; synthetic data).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Input {
+    pub name: String,
+    pub dims: Vec<u64>,
+}
+
+impl Input {
+    pub fn new(name: &str, dims: &[u64]) -> Self {
+        Input {
+            name: name.to_string(),
+            dims: dims.to_vec(),
+        }
+    }
+
+    pub fn dim(&self, i: usize) -> f64 {
+        self.dims[i] as f64
+    }
+}
+
+/// A tunable GPU kernel benchmark.
+pub trait Benchmark: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Enumerate the constraint-pruned tuning space.
+    fn space(&self) -> Space;
+
+    /// The input used when none is specified (the paper's §4.6 sizes).
+    fn default_input(&self) -> Input;
+
+    /// Additional inputs exercised by the input-portability experiments.
+    fn inputs(&self) -> Vec<Input> {
+        vec![self.default_input()]
+    }
+
+    /// Analytic workload of one configuration on one input.
+    fn workload(&self, space: &Space, cfg: &Config, input: &Input) -> Workload;
+
+    /// Is this kernel known to be instruction-bound? (Sets the expert
+    /// system's `inst_reaction` to 0.5 instead of 0.7 — paper §3.5.2.)
+    fn instruction_bound(&self) -> bool {
+        false
+    }
+}
+
+/// All benchmarks, in the paper's Table 2 order.
+pub fn all() -> Vec<Box<dyn Benchmark>> {
+    vec![
+        Box::new(Convolution),
+        Box::new(Coulomb),
+        Box::new(Gemm),
+        Box::new(GemmFull),
+        Box::new(Transpose),
+        Box::new(NBody),
+    ]
+}
+
+/// The five benchmarks used in the searcher-step experiments (GEMM full
+/// is only searched, never exhaustively recorded — §4.6).
+pub fn evaluation_set() -> Vec<Box<dyn Benchmark>> {
+    vec![
+        Box::new(Coulomb),
+        Box::new(Transpose),
+        Box::new(Gemm),
+        Box::new(NBody),
+        Box::new(Convolution),
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<Box<dyn Benchmark>> {
+    let needle = name.to_ascii_lowercase();
+    all()
+        .into_iter()
+        .find(|b| b.name().to_ascii_lowercase() == needle)
+}
+
+/// Exhaustively explore a benchmark's tuning space on a simulated GPU —
+/// the paper's §4.1 methodology ("perform an exhaustive exploration of
+/// the entire tuning space and save the tuning results").
+pub fn record_space(
+    bench: &dyn Benchmark,
+    gpu: &GpuSpec,
+    input: &Input,
+) -> RecordedSpace {
+    let space = bench.space();
+    let records: Vec<Record> = space
+        .configs
+        .iter()
+        .map(|cfg| {
+            let w = bench.workload(&space, cfg, input);
+            let sim = simulate(gpu, &w);
+            Record {
+                runtime_ms: sim.runtime_ms,
+                counters: sim.counters,
+            }
+        })
+        .collect();
+    RecordedSpace::new(space, records, gpu.name, &input.name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_six_benchmarks() {
+        let names: Vec<_> = all().iter().map(|b| b.name()).collect();
+        assert_eq!(names.len(), 6);
+        assert!(names.contains(&"coulomb"));
+        assert!(names.contains(&"gemm-full"));
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("GEMM").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn space_sizes_match_paper_order_of_magnitude() {
+        // paper Table 2: coulomb 210, transpose 1784, gemm 5788,
+        // nbody 3134, convolution 3928, gemm-full 205216
+        let expect: &[(&str, usize, usize)] = &[
+            ("coulomb", 100, 800),
+            ("transpose", 700, 4_000),
+            ("gemm", 2_000, 12_000),
+            ("nbody", 1_200, 7_000),
+            ("convolution", 1_500, 9_000),
+        ];
+        for (name, lo, hi) in expect {
+            let n = by_name(name).unwrap().space().len();
+            assert!(
+                (lo..=hi).contains(&&n),
+                "{name}: {n} outside [{lo}, {hi}]"
+            );
+        }
+        let full = by_name("gemm-full").unwrap().space().len();
+        assert!(full > 50_000, "gemm-full too small: {full}");
+    }
+
+    #[test]
+    fn dims_match_paper_table2() {
+        for (name, dims) in [
+            ("convolution", 10),
+            ("coulomb", 7),
+            ("gemm", 10),
+            ("gemm-full", 14),
+            ("transpose", 8),
+            ("nbody", 7),
+        ] {
+            assert_eq!(
+                by_name(name).unwrap().space().dims(),
+                dims,
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn workloads_are_sane_everywhere() {
+        // every config of every (non-huge) benchmark yields a positive,
+        // finite workload and simulated runtime
+        for bench in evaluation_set() {
+            let space = bench.space();
+            let input = bench.default_input();
+            let gpu = GpuSpec::gtx1070();
+            for cfg in space.configs.iter().step_by(17) {
+                let w = bench.workload(&space, cfg, &input);
+                assert!(w.threads > 0.0, "{}: no threads", bench.name());
+                assert!(w.total_inst() > 0.0);
+                let sim = simulate(&gpu, &w);
+                assert!(
+                    sim.runtime_ms.is_finite() && sim.runtime_ms > 0.0,
+                    "{}: bad runtime",
+                    bench.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn optimum_moves_across_gpus() {
+        // The premise of the portability experiments: at least some
+        // benchmarks must have different best configs on different GPUs.
+        let mut moved = 0;
+        for bench in evaluation_set() {
+            let input = bench.default_input();
+            let a = record_space(bench.as_ref(), &GpuSpec::gtx680(), &input);
+            let b = record_space(bench.as_ref(), &GpuSpec::rtx2080(), &input);
+            if a.best_index() != b.best_index() {
+                moved += 1;
+            }
+        }
+        assert!(moved >= 2, "only {moved} benchmarks moved their optimum");
+    }
+
+    #[test]
+    fn recorded_space_well_performing_fraction_reasonable() {
+        for bench in evaluation_set() {
+            let rec = record_space(
+                bench.as_ref(),
+                &GpuSpec::gtx1070(),
+                &bench.default_input(),
+            );
+            let frac = rec.well_performing_count(1.1) as f64
+                / rec.space.len() as f64;
+            assert!(
+                frac < 0.55,
+                "{}: {}% well-performing — space trivially easy",
+                bench.name(),
+                frac * 100.0
+            );
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! N-body simulation step (Table 2: 7 dims, 3,134 configs).
+//!
+//! All-pairs gravitational interaction — O(n²) compute over O(n) data,
+//! so heavily compute-bound at large n; at small n it turns
+//! parallelism-bound, moving the optimum (the paper's Fig. 6 uses both
+//! 16,384- and 131,072-body instances).
+
+use super::{Benchmark, Input};
+use crate::gpusim::Workload;
+use crate::tuning::{Config, ParamDef, Space};
+
+pub struct NBody;
+
+impl Benchmark for NBody {
+    fn name(&self) -> &'static str {
+        "nbody"
+    }
+
+    fn space(&self) -> Space {
+        let params = vec![
+            ParamDef::new("BLOCK", &[64, 128, 256, 512]),
+            ParamDef::new("OUTER_UNROLL", &[1, 2, 4, 8]),
+            ParamDef::new("INNER_UNROLL", &[1, 2, 4, 8, 16, 32]),
+            ParamDef::new("TILE", &[1, 2, 4]),
+            ParamDef::new("USE_SHARED", &[0, 1]),
+            ParamDef::new("USE_SOA", &[0, 1]),
+            ParamDef::new("VECTOR", &[1, 2, 4]),
+        ];
+        Space::enumerate("nbody", params, |v| {
+            let (block, ou, iu, tile, sh, _soa, vec) =
+                (v[0], v[1], v[2], v[3], v[4], v[5], v[6]);
+            ou * iu <= 64
+                && (sh == 1 || tile == 1) // tiling is a shared-memory schedule
+                && vec <= 1 + ou // vector loads need coarsening to feed them
+                && block * ou <= 4096
+        })
+    }
+
+    fn default_input(&self) -> Input {
+        // §4.6: 16,384 bodies (and 131,072 for the large instance)
+        Input::new("n16384", &[16384])
+    }
+
+    fn inputs(&self) -> Vec<Input> {
+        vec![self.default_input(), Input::new("n131072", &[131072])]
+    }
+
+    fn workload(&self, space: &Space, cfg: &Config, input: &Input) -> Workload {
+        let block = space.value(cfg, "BLOCK") as f64;
+        let ou = space.value(cfg, "OUTER_UNROLL") as f64;
+        let iu = space.value(cfg, "INNER_UNROLL") as f64;
+        let tile = space.value(cfg, "TILE") as f64;
+        let shared = space.value(cfg, "USE_SHARED") as f64;
+        let soa = space.value(cfg, "USE_SOA") as f64;
+        let vec = space.value(cfg, "VECTOR") as f64;
+
+        let n = input.dim(0);
+        let threads = (n / ou).max(1.0);
+
+        // --- per-thread instructions ------------------------------------
+        // per interaction: 3 diffs + dot (5) + rsqrt (1+3 misc) + 3 fma
+        // (6) + softening (2) ≈ 17 fp32; outer coarsening amortizes the
+        // i-body load but not the j-loop.
+        let fp32 = n * ou * 17.0 + ou * 12.0;
+        let int = 16.0 + n * (1.5 / iu + 1.0 / vec) + ou * 4.0;
+        let cont = n / iu + 4.0;
+        let misc = n * ou * 3.0 * 0.25 + shared * (n / (block * tile)) * 2.0;
+        let body_bytes = if soa > 0.5 { 12.0 } else { 16.0 };
+        let ldst = n * (ou / vec) * 0.5 + n * body_bytes / 16.0 / vec;
+
+        // --- registers ----------------------------------------------------
+        let regs =
+            20.0 + ou * (5.0 + 0.35 * iu) + 3.0 * vec + shared * 4.0;
+
+        // --- memory traffic -----------------------------------------------
+        let warps = threads / 32.0;
+        let gread = if shared > 0.5 {
+            // each block stages all bodies through shared memory once
+            (threads / block) * n * body_bytes
+        } else {
+            // warp-broadcast reads served by the read-only path
+            warps * n * body_bytes * if soa > 0.5 { 1.0 } else { 1.25 }
+        };
+        let gwrite = n * body_bytes;
+
+        let (shr_ld, shr_st) = if shared > 0.5 {
+            (threads * n * body_bytes / vec / tile.sqrt(), (threads / block) * n * body_bytes)
+        } else {
+            (0.0, 0.0)
+        };
+
+        let warp_fill = (block / 32.0).min(1.0);
+
+        Workload {
+            threads,
+            block_size: block,
+            regs_per_thread: regs,
+            shared_bytes_per_block: shared * block * tile * body_bytes,
+            fp32: fp32 * threads,
+            int: int * threads,
+            cont: cont * threads,
+            misc: misc * threads,
+            ldst: ldst * threads,
+            bconv: 2.0 * threads,
+            gread,
+            gwrite,
+            tex_fraction: if soa > 0.5 { 0.9 } else { 0.7 },
+            tex_footprint_per_sm: n * body_bytes / tile,
+            l2_footprint: n * body_bytes,
+            shared_load_bytes: shr_ld,
+            shared_store_bytes: shr_st,
+            divergence: (1.0 - warp_fill) * 0.9 + 0.01,
+            ..Default::default()
+        }
+    }
+
+    fn instruction_bound(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::record_space;
+    use crate::gpusim::GpuSpec;
+
+    #[test]
+    fn space_dims_and_size() {
+        let s = NBody.space();
+        assert_eq!(s.dims(), 7);
+        assert!((1200..=7000).contains(&s.len()), "{}", s.len());
+    }
+
+    #[test]
+    fn compute_bound_at_default_size() {
+        let rec = record_space(
+            &NBody,
+            &GpuSpec::gtx1070(),
+            &NBody.default_input(),
+        );
+        let best = &rec.records[rec.best_index()];
+        use crate::counters::Counter;
+        assert!(
+            best.counters.get(Counter::InstIssueU)
+                > best.counters.get(Counter::DramU) * 10.0,
+            "best n-body config should be compute-bound"
+        );
+    }
+
+    #[test]
+    fn optimum_differs_across_input_sizes() {
+        let small = record_space(
+            &NBody,
+            &GpuSpec::rtx2080(),
+            &Input::new("s", &[16384]),
+        );
+        let large = record_space(
+            &NBody,
+            &GpuSpec::rtx2080(),
+            &Input::new("l", &[131072]),
+        );
+        // best runtimes scale superlinearly (O(n²) work)
+        assert!(large.best_time() > 10.0 * small.best_time());
+    }
+
+    #[test]
+    fn outer_unroll_reduces_reads() {
+        let s = NBody.space();
+        let input = NBody.default_input();
+        let find = |ou: i64| {
+            s.configs
+                .iter()
+                .find(|c| {
+                    s.value(c, "OUTER_UNROLL") == ou
+                        && s.value(c, "BLOCK") == 256
+                        && s.value(c, "INNER_UNROLL") == 1
+                        && s.value(c, "USE_SHARED") == 0
+                        && s.value(c, "USE_SOA") == 1
+                        && s.value(c, "VECTOR") == 1
+                        && s.value(c, "TILE") == 1
+                })
+                .unwrap()
+        };
+        let w1 = NBody.workload(&s, find(1), &input);
+        let w4 = NBody.workload(&s, find(4), &input);
+        assert!(w4.gread < w1.gread);
+        assert!(w4.threads < w1.threads);
+    }
+}

@@ -1,0 +1,229 @@
+//! Matrix transposition (Table 2: 8 dims, 1,784 configs).
+//!
+//! The classic out-of-place transpose: reads are coalesced, writes are
+//! transposed. Staging through a shared-memory tile re-coalesces the
+//! writes; padding avoids shared bank conflicts; diagonal block
+//! reordering avoids DRAM partition camping. No floating-point work at
+//! all — the kernel stresses LDST/INT issue and the memory hierarchy,
+//! exercising the expert system's non-FP paths.
+
+use super::{Benchmark, Input};
+use crate::gpusim::Workload;
+use crate::tuning::{Config, ParamDef, Space};
+
+pub struct Transpose;
+
+impl Benchmark for Transpose {
+    fn name(&self) -> &'static str {
+        "transpose"
+    }
+
+    fn space(&self) -> Space {
+        let params = vec![
+            ParamDef::new("TILE_X", &[8, 16, 32, 64]),
+            ParamDef::new("TILE_Y", &[8, 16, 32, 64]),
+            ParamDef::new("WPT_X", &[1, 2, 4]),
+            ParamDef::new("WPT_Y", &[1, 2, 4]),
+            ParamDef::new("USE_SHARED", &[0, 1]),
+            ParamDef::new("PADDING", &[0, 1]),
+            ParamDef::new("DIAGONAL", &[0, 1]),
+            ParamDef::new("VECTOR", &[1, 2, 4]),
+        ];
+        Space::enumerate("transpose", params, |v| {
+            let (tx, ty, wx, wy, sh, pad, _diag, vec) =
+                (v[0], v[1], v[2], v[3], v[4], v[5], v[6], v[7]);
+            let threads = (tx / wx) * (ty / wy);
+            tx % (wx * vec) == 0
+                && ty % wy == 0
+                && (32..=1024).contains(&threads)
+                // padding & conflicts only meaningful with shared tiles
+                && (sh == 1 || pad == 0)
+                && (sh == 1 || vec <= 2) // transposed vector stores need staging
+        })
+    }
+
+    fn default_input(&self) -> Input {
+        // §4.6: 8192 x 8192
+        Input::new("8192x8192", &[8192, 8192])
+    }
+
+    fn inputs(&self) -> Vec<Input> {
+        vec![
+            self.default_input(),
+            Input::new("2048x2048", &[2048, 2048]),
+            Input::new("16384x4096", &[16384, 4096]),
+        ]
+    }
+
+    fn workload(&self, space: &Space, cfg: &Config, input: &Input) -> Workload {
+        let tx = space.value(cfg, "TILE_X") as f64;
+        let ty = space.value(cfg, "TILE_Y") as f64;
+        let wx = space.value(cfg, "WPT_X") as f64;
+        let wy = space.value(cfg, "WPT_Y") as f64;
+        let shared = space.value(cfg, "USE_SHARED") as f64;
+        let pad = space.value(cfg, "PADDING") as f64;
+        let diag = space.value(cfg, "DIAGONAL") as f64;
+        let vec = space.value(cfg, "VECTOR") as f64;
+
+        let rows = input.dim(0);
+        let cols = input.dim(1);
+        let elems = rows * cols;
+        let bytes = elems * 4.0;
+
+        let block_size = (tx / wx) * (ty / wy);
+        let threads = elems / (wx * wy);
+        let elems_per_thread = wx * wy;
+
+        // --- instruction mix (no FP at all) ----------------------------
+        let int = 14.0 + elems_per_thread * (3.0 / vec) + if diag > 0.5 { 6.0 } else { 0.0 };
+        let ldst = elems_per_thread * 2.0 / vec
+            + shared * elems_per_thread * 2.0 / vec;
+        let cont = 2.0 + elems_per_thread / vec;
+        let misc = 2.0;
+
+        // --- memory traffic ---------------------------------------------
+        // coalescing width: tiles narrower than a 128-byte cache line
+        // fetch whole lines but use only tile_x*4 bytes of each.
+        let line_waste = (128.0 / (tx * 4.0 / vec)).max(1.0).min(4.0);
+        // reads are coalesced; writes: without shared staging each warp
+        // scatters across 32 cache lines -> 8x sector inflation.
+        let gread = bytes * line_waste;
+        let write_inflation = if shared > 0.5 {
+            1.0
+        } else {
+            // vector width worsens scatter granularity slightly
+            8.0 * (1.0 + 0.1 * (vec - 1.0))
+        };
+        let gwrite = bytes * write_inflation;
+
+        // shared tile traffic + bank conflicts when unpadded and the
+        // tile stride hits the 32-bank period.
+        let (shr_ld, shr_st) = if shared > 0.5 {
+            let conflict = if pad > 0.5 {
+                1.0
+            } else if (tx as i64) % 32 == 0 {
+                8.0 // full-period conflicts on the transposed read
+            } else if (tx as i64) % 16 == 0 {
+                4.0
+            } else {
+                1.5
+            };
+            (bytes * conflict, bytes)
+        } else {
+            (0.0, 0.0)
+        };
+
+        // partition camping: without diagonal reordering, column-order
+        // blocks hammer one DRAM partition -> effective-bandwidth loss
+        // modeled as extra sector traffic.
+        let camping = if diag > 0.5 { 1.0 } else { 1.18 };
+
+        Workload {
+            threads,
+            block_size,
+            regs_per_thread: 12.0 + 2.0 * elems_per_thread + 2.0 * vec,
+            shared_bytes_per_block: shared
+                * (tx + pad * vec) * ty * 4.0,
+            int: int * threads,
+            ldst: ldst * threads,
+            cont: cont * threads,
+            misc: misc * threads,
+            gread: gread * camping,
+            gwrite: gwrite * camping,
+            tex_fraction: 0.2,
+            tex_footprint_per_sm: tx * ty * 4.0,
+            l2_footprint: bytes * 2.0,
+            shared_load_bytes: shr_ld,
+            shared_store_bytes: shr_st,
+            divergence: 0.02,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{simulate, GpuSpec};
+
+    #[test]
+    fn space_dims_and_size() {
+        let s = Transpose.space();
+        assert_eq!(s.dims(), 8);
+        assert!((700..=4000).contains(&s.len()), "{}", s.len());
+    }
+
+    #[test]
+    fn no_fp_work() {
+        let s = Transpose.space();
+        let w = Transpose.workload(&s, &s.configs[0], &Transpose.default_input());
+        assert_eq!(w.fp32, 0.0);
+        assert_eq!(w.fp64, 0.0);
+        assert!(w.ldst > 0.0);
+    }
+
+    #[test]
+    fn shared_staging_beats_naive_writes() {
+        let s = Transpose.space();
+        let input = Transpose.default_input();
+        let gpu = GpuSpec::gtx1070();
+        let pick = |sh: i64, pad: i64| {
+            s.configs
+                .iter()
+                .find(|c| {
+                    s.value(c, "USE_SHARED") == sh
+                        && s.value(c, "PADDING") == pad
+                        && s.value(c, "TILE_X") == 32
+                        && s.value(c, "TILE_Y") == 32
+                        && s.value(c, "WPT_X") == 1
+                        && s.value(c, "WPT_Y") == 4
+                        && s.value(c, "DIAGONAL") == 1
+                        && s.value(c, "VECTOR") == 1
+                })
+                .unwrap()
+        };
+        let naive = simulate(&gpu, &Transpose.workload(&s, pick(0, 0), &input));
+        let tiled = simulate(&gpu, &Transpose.workload(&s, pick(1, 1), &input));
+        assert!(tiled.runtime_ms < naive.runtime_ms);
+    }
+
+    #[test]
+    fn padding_fixes_bank_conflicts() {
+        let s = Transpose.space();
+        let input = Transpose.default_input();
+        let find = |pad: i64| {
+            s.configs
+                .iter()
+                .find(|c| {
+                    s.value(c, "USE_SHARED") == 1
+                        && s.value(c, "PADDING") == pad
+                        && s.value(c, "TILE_X") == 32
+                        && s.value(c, "TILE_Y") == 32
+                        && s.value(c, "WPT_X") == 1
+                        && s.value(c, "WPT_Y") == 1
+                        && s.value(c, "DIAGONAL") == 1
+                        && s.value(c, "VECTOR") == 1
+                })
+                .unwrap()
+        };
+        let unpadded = Transpose.workload(&s, find(0), &input);
+        let padded = Transpose.workload(&s, find(1), &input);
+        assert!(unpadded.shared_load_bytes > 4.0 * padded.shared_load_bytes);
+    }
+
+    #[test]
+    fn bytes_scale_with_input() {
+        let s = Transpose.space();
+        let small = Transpose.workload(
+            &s,
+            &s.configs[0],
+            &Input::new("s", &[1024, 1024]),
+        );
+        let large = Transpose.workload(
+            &s,
+            &s.configs[0],
+            &Input::new("l", &[4096, 4096]),
+        );
+        assert!((large.gread / small.gread - 16.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,219 @@
+//! L3 coordinator: the KTT-like public tuner API.
+//!
+//! [`Tuner`] wires a tuning space (simulated benchmark, recorded replay,
+//! or the PJRT real-execution adapter) to a searcher and a budget, runs
+//! the search, and reports a [`TuningResult`] with the best
+//! configuration and the full trace. This is the entry point a
+//! downstream user of the library touches; the experiment harness and
+//! the CLI are built on it.
+
+use crate::benchmarks::{record_space, Benchmark, Input};
+use crate::gpusim::GpuSpec;
+use crate::model::TpPcModel;
+use crate::searcher::{
+    BasinHopping, Budget, CostModel, EvalEnv, ProfileSearcher,
+    RandomSearcher, ReplayEnv, Searcher, SearchTrace, SimulatedAnnealing,
+    Starchart,
+};
+use crate::tuning::{Config, RecordedSpace};
+
+/// Which search strategy to use.
+pub enum SearcherChoice<'m> {
+    Random,
+    /// Profile-based with a TP→PC model and an `inst_reaction` threshold.
+    Profile {
+        model: &'m dyn TpPcModel,
+        inst_reaction: f64,
+    },
+    BasinHopping,
+    Starchart,
+    Annealing,
+}
+
+impl SearcherChoice<'_> {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SearcherChoice::Random => "random",
+            SearcherChoice::Profile { .. } => "profile",
+            SearcherChoice::BasinHopping => "basin_hopping",
+            SearcherChoice::Starchart => "starchart",
+            SearcherChoice::Annealing => "annealing",
+        }
+    }
+}
+
+/// Outcome of one tuning session.
+#[derive(Debug, Clone)]
+pub struct TuningResult {
+    pub space_name: String,
+    pub searcher: &'static str,
+    pub best_config: Config,
+    pub best_ms: f64,
+    pub trace: SearchTrace,
+    /// Empirical tests performed.
+    pub tests: usize,
+    /// Tests run with profiling enabled.
+    pub profiled_tests: usize,
+    /// Total tuning cost, seconds.
+    pub cost_s: f64,
+}
+
+/// The autotuner façade.
+pub struct Tuner {
+    env: Box<dyn EvalEnv>,
+    budget: Budget,
+    seed: u64,
+}
+
+impl Tuner {
+    /// Tune a benchmark on a simulated GPU (records the space first —
+    /// exactly the paper's replay methodology).
+    pub fn simulated(
+        bench: &dyn Benchmark,
+        gpu: GpuSpec,
+        input: &Input,
+        cost: CostModel,
+    ) -> Tuner {
+        let rec = record_space(bench, &gpu, input);
+        Tuner::replay(rec, gpu, cost)
+    }
+
+    /// Tune over a pre-recorded space.
+    pub fn replay(rec: RecordedSpace, gpu: GpuSpec, cost: CostModel) -> Tuner {
+        Tuner {
+            env: Box::new(ReplayEnv::new(rec, gpu, cost)),
+            budget: Budget::tests(usize::MAX),
+            seed: 0,
+        }
+    }
+
+    /// Tune over any environment (e.g. the PJRT adapter).
+    pub fn over(env: Box<dyn EvalEnv>) -> Tuner {
+        Tuner {
+            env,
+            budget: Budget::tests(usize::MAX),
+            seed: 0,
+        }
+    }
+
+    pub fn with_budget(mut self, budget: Budget) -> Tuner {
+        self.budget = budget;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Tuner {
+        self.seed = seed;
+        self
+    }
+
+    pub fn space_len(&self) -> usize {
+        self.env.space().len()
+    }
+
+    /// Run a search strategy to completion.
+    pub fn run(&mut self, choice: SearcherChoice<'_>) -> TuningResult {
+        let name = choice.name();
+        let trace = match choice {
+            SearcherChoice::Random => {
+                RandomSearcher::new(self.seed).run(&mut *self.env, &self.budget)
+            }
+            SearcherChoice::Profile {
+                model,
+                inst_reaction,
+            } => ProfileSearcher::new(model, inst_reaction, self.seed)
+                .run(&mut *self.env, &self.budget),
+            SearcherChoice::BasinHopping => {
+                BasinHopping::new(self.seed).run(&mut *self.env, &self.budget)
+            }
+            SearcherChoice::Starchart => {
+                Starchart::new(self.seed).run(&mut *self.env, &self.budget)
+            }
+            SearcherChoice::Annealing => SimulatedAnnealing::new(self.seed)
+                .run(&mut *self.env, &self.budget),
+        };
+
+        let (best_idx, best_ms) = trace
+            .steps
+            .iter()
+            .map(|s| (s.idx, s.runtime_ms))
+            .fold((0, f64::INFINITY), |acc, cur| {
+                if cur.1 < acc.1 {
+                    cur
+                } else {
+                    acc
+                }
+            });
+        TuningResult {
+            space_name: self.env.space().name.clone(),
+            searcher: name,
+            best_config: self.env.space().configs[best_idx].clone(),
+            best_ms,
+            tests: trace.len(),
+            profiled_tests: trace.steps.iter().filter(|s| s.profiled).count(),
+            cost_s: self.env.cost_so_far(),
+            trace,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::Coulomb;
+    use crate::model::OracleModel;
+
+    #[test]
+    fn tuner_runs_random_end_to_end() {
+        let mut t = Tuner::simulated(
+            &Coulomb,
+            GpuSpec::gtx1070(),
+            &Coulomb.default_input(),
+            CostModel::default(),
+        )
+        .with_budget(Budget::tests(50))
+        .with_seed(1);
+        let r = t.run(SearcherChoice::Random);
+        assert_eq!(r.tests, 50);
+        assert_eq!(r.searcher, "random");
+        assert!(r.best_ms.is_finite());
+        assert!(r.cost_s > 0.0);
+        assert_eq!(r.profiled_tests, 0);
+    }
+
+    #[test]
+    fn tuner_runs_profile_end_to_end() {
+        let gpu = GpuSpec::gtx1070();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        let oracle = OracleModel::new(&rec);
+        let mut t = Tuner::replay(rec, gpu, CostModel::default())
+            .with_budget(Budget::tests(30))
+            .with_seed(2);
+        let r = t.run(SearcherChoice::Profile {
+            model: &oracle,
+            inst_reaction: 0.5,
+        });
+        assert_eq!(r.tests, 30);
+        assert!(r.profiled_tests >= 4);
+        assert_eq!(r.best_config.len(), 7);
+    }
+
+    #[test]
+    fn best_config_matches_best_runtime() {
+        let mut t = Tuner::simulated(
+            &Coulomb,
+            GpuSpec::gtx750(),
+            &Coulomb.default_input(),
+            CostModel::default(),
+        )
+        .with_budget(Budget::tests(40))
+        .with_seed(3);
+        let r = t.run(SearcherChoice::BasinHopping);
+        let best_step = r
+            .trace
+            .steps
+            .iter()
+            .min_by(|a, b| a.runtime_ms.partial_cmp(&b.runtime_ms).unwrap())
+            .unwrap();
+        assert_eq!(r.best_ms, best_step.runtime_ms);
+    }
+}

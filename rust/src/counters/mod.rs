@@ -1,0 +1,413 @@
+//! Performance-counter taxonomy — the paper's Table 1.
+//!
+//! Two fundamentally different counter categories drive the method:
+//!
+//! * **`PC_ops`** — amounts of operations performed on a subsystem
+//!   (transaction counts, instruction counts). Their relation to the
+//!   tuning parameters is *stable* across GPUs and inputs (paper §3.1,
+//!   Eqs. 3–5), so a model of TP→PC_ops trained once is portable.
+//! * **`PC_stress`** — relative utilization of a subsystem. Strongly
+//!   GPU- and input-dependent; measured live during tuning and fed to
+//!   the bottleneck expert system.
+//!
+//! Counter *names* changed completely with Volta; [`Counter::cuda_name`]
+//! returns the pre-Volta (CUPTI event) or Volta+ (Nsight metric) string,
+//! with the paper's documented conversion ratios captured in
+//! [`Counter::new_counter_scale`].
+
+use std::fmt;
+
+/// One hardware performance counter (plus the paper's `threads`
+/// pseudo-counter, which KTT appends to the counter set for the
+/// parallelism reaction — §3.5.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(usize)]
+pub enum Counter {
+    // --- PC_ops: memory transaction counts ---
+    DramRt,
+    DramWt,
+    L2Rt,
+    L2Wt,
+    TexRwt,
+    LocO,
+    ShrLt,
+    ShrWt,
+    // --- PC_ops: instruction counts ---
+    InstF32,
+    InstF64,
+    InstInt,
+    InstMisc,
+    InstLdst,
+    InstCont,
+    InstBconv,
+    InstExe,
+    InstIssueU,
+    // --- PC_stress: utilizations ---
+    DramU,
+    L2U,
+    TexU,
+    ShrU,
+    SmE,
+    WarpE,
+    WarpNpE,
+    // --- pseudo-counter (KTT-reported) ---
+    Threads,
+}
+
+/// Counter category per the paper's Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CounterKind {
+    Ops,
+    Stress,
+}
+
+pub const NUM_COUNTERS: usize = 25;
+
+/// All counters in Table 1 order.
+pub const ALL_COUNTERS: [Counter; NUM_COUNTERS] = [
+    Counter::DramRt,
+    Counter::DramWt,
+    Counter::L2Rt,
+    Counter::L2Wt,
+    Counter::TexRwt,
+    Counter::LocO,
+    Counter::ShrLt,
+    Counter::ShrWt,
+    Counter::InstF32,
+    Counter::InstF64,
+    Counter::InstInt,
+    Counter::InstMisc,
+    Counter::InstLdst,
+    Counter::InstCont,
+    Counter::InstBconv,
+    Counter::InstExe,
+    Counter::InstIssueU,
+    Counter::DramU,
+    Counter::L2U,
+    Counter::TexU,
+    Counter::ShrU,
+    Counter::SmE,
+    Counter::WarpE,
+    Counter::WarpNpE,
+    Counter::Threads,
+];
+
+/// The instruction-count counters an instruction-utilization bottleneck
+/// is derived from (Eq. 10 "analogous computations").
+pub const INST_COUNTERS: [Counter; 7] = [
+    Counter::InstF32,
+    Counter::InstF64,
+    Counter::InstInt,
+    Counter::InstMisc,
+    Counter::InstLdst,
+    Counter::InstCont,
+    Counter::InstBconv,
+];
+
+impl Counter {
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_index(i: usize) -> Option<Counter> {
+        ALL_COUNTERS.get(i).copied()
+    }
+
+    /// PC_ops vs PC_stress per Table 1. `INST_ISSUE_U` is classified as
+    /// Ops by the paper (it quantifies issue-cycle usage), `Threads` is a
+    /// pseudo-ops counter.
+    pub fn kind(self) -> CounterKind {
+        use Counter::*;
+        match self {
+            DramU | L2U | TexU | ShrU | SmE | WarpE | WarpNpE => {
+                CounterKind::Stress
+            }
+            _ => CounterKind::Ops,
+        }
+    }
+
+    /// Short abbreviation used throughout the paper (Table 1).
+    pub fn abbr(self) -> &'static str {
+        use Counter::*;
+        match self {
+            DramRt => "DRAM_RT",
+            DramWt => "DRAM_WT",
+            L2Rt => "L2_RT",
+            L2Wt => "L2_WT",
+            TexRwt => "TEX_RWT",
+            LocO => "LOC_O",
+            ShrLt => "SHR_LT",
+            ShrWt => "SHR_WT",
+            InstF32 => "INST_F32",
+            InstF64 => "INST_F64",
+            InstInt => "INST_INT",
+            InstMisc => "INST_MISC",
+            InstLdst => "INST_LDST",
+            InstCont => "INST_CONT",
+            InstBconv => "INST_BCONV",
+            InstExe => "INST_EXE",
+            InstIssueU => "INST_ISSUE_U",
+            DramU => "DRAM_U",
+            L2U => "L2_U",
+            TexU => "TEX_U",
+            ShrU => "SHR_U",
+            SmE => "SM_E",
+            WarpE => "WARP_E",
+            WarpNpE => "WARP_NP_E",
+            Threads => "THREADS",
+        }
+    }
+
+    pub fn from_abbr(s: &str) -> Option<Counter> {
+        ALL_COUNTERS.iter().copied().find(|c| c.abbr() == s)
+    }
+
+    /// CUDA counter name for the given counter-name generation.
+    pub fn cuda_name(self, set: CounterSet) -> &'static str {
+        use Counter::*;
+        match (self, set) {
+            (DramRt, CounterSet::PreVolta) => "dram_read_transactions",
+            (DramRt, CounterSet::VoltaPlus) => "dram__sectors_read.sum",
+            (DramWt, CounterSet::PreVolta) => "dram_write_transactions",
+            (DramWt, CounterSet::VoltaPlus) => "dram__sectors_write.sum",
+            (L2Rt, CounterSet::PreVolta) => "l2_read_transactions",
+            (L2Rt, CounterSet::VoltaPlus) => "lts__t_sectors_op_read.sum",
+            (L2Wt, CounterSet::PreVolta) => "l2_write_transactions",
+            (L2Wt, CounterSet::VoltaPlus) => "lts__t_sectors_op_write.sum",
+            (TexRwt, CounterSet::PreVolta) => "tex_cache_transactions",
+            (TexRwt, CounterSet::VoltaPlus) => {
+                "l1tex__t_requests_pipe_lsu_mem_global_op_ld.sum"
+            }
+            (LocO, CounterSet::PreVolta) => "local_memory_overhead",
+            (LocO, CounterSet::VoltaPlus) => {
+                "l1tex__t_sectors_pipe_lsu_mem_local_op_st.sum"
+            }
+            (ShrLt, CounterSet::PreVolta) => "shared_load_transactions",
+            (ShrLt, CounterSet::VoltaPlus) => {
+                "l1tex__data_pipe_lsu_wavefronts_mem_shared_op_ld.sum"
+            }
+            (ShrWt, CounterSet::PreVolta) => "shared_store_transactions",
+            (ShrWt, CounterSet::VoltaPlus) => {
+                "l1tex__data_pipe_lsu_wavefronts_mem_shared_op_st.sum"
+            }
+            (InstF32, CounterSet::PreVolta) => "inst_fp_32",
+            (InstF32, CounterSet::VoltaPlus) => {
+                "smsp__sass_thread_inst_executed_op_fp32_pred_on.sum"
+            }
+            (InstF64, CounterSet::PreVolta) => "inst_fp_64",
+            (InstF64, CounterSet::VoltaPlus) => {
+                "smsp__sass_thread_inst_executed_op_fp64_pred_on.sum"
+            }
+            (InstInt, CounterSet::PreVolta) => "inst_integer",
+            (InstInt, CounterSet::VoltaPlus) => {
+                "smsp__sass_thread_inst_executed_op_integer_pred_on.sum"
+            }
+            (InstMisc, CounterSet::PreVolta) => "inst_misc",
+            (InstMisc, CounterSet::VoltaPlus) => {
+                "smsp__sass_thread_inst_executed_op_misc_pred_on.sum"
+            }
+            (InstLdst, CounterSet::PreVolta) => "inst_compute_ld_st",
+            (InstLdst, CounterSet::VoltaPlus) => {
+                "smsp__sass_thread_inst_executed_op_memory_pred_on.sum"
+            }
+            (InstCont, CounterSet::PreVolta) => "inst_control",
+            (InstCont, CounterSet::VoltaPlus) => {
+                "smsp__sass_thread_inst_executed_op_control_pred_on.sum"
+            }
+            (InstBconv, CounterSet::PreVolta) => "inst_bit_convert",
+            (InstBconv, CounterSet::VoltaPlus) => {
+                "smsp__sass_thread_inst_executed_op_conversion_pred_on.sum"
+            }
+            (InstExe, CounterSet::PreVolta) => "inst_executed",
+            (InstExe, CounterSet::VoltaPlus) => "smsp__inst_executed.sum",
+            (InstIssueU, CounterSet::PreVolta) => "issue_slot_utilization",
+            (InstIssueU, CounterSet::VoltaPlus) => {
+                "smsp__issue_active.avg.pct_of_peak_sustained_active"
+            }
+            (DramU, CounterSet::PreVolta) => "dram_utilization",
+            (DramU, CounterSet::VoltaPlus) => {
+                "dram__throughput.avg.pct_of_peak_sustained_elapsed"
+            }
+            (L2U, CounterSet::PreVolta) => "l2_utilization",
+            (L2U, CounterSet::VoltaPlus) => {
+                "lts__t_sectors.avg.pct_of_peak_sustained_elapsed"
+            }
+            (TexU, CounterSet::PreVolta) => "tex_utilization",
+            (TexU, CounterSet::VoltaPlus) => {
+                "l1tex__t_requests_pipe_lsu_mem_global_op_ld.avg.pct_of_peak_sustained_active"
+            }
+            (ShrU, CounterSet::PreVolta) => "shared_utilization",
+            (ShrU, CounterSet::VoltaPlus) => {
+                "l1tex__data_pipe_lsu_wavefronts_mem_shared.avg.pct_of_peak_sustained_elapsed"
+            }
+            (SmE, CounterSet::PreVolta) => "sm_efficiency",
+            (SmE, CounterSet::VoltaPlus) => {
+                "smsp__cycles_active.avg.pct_of_peak_sustained_elapsed"
+            }
+            (WarpE, CounterSet::PreVolta) => "warp_execution_efficiency",
+            (WarpE, CounterSet::VoltaPlus) => {
+                "smsp__thread_inst_executed_per_inst_executed.ratio"
+            }
+            (WarpNpE, CounterSet::PreVolta) => {
+                "warp_nonpred_execution_efficiency"
+            }
+            (WarpNpE, CounterSet::VoltaPlus) => {
+                "smsp__thread_inst_executed_per_inst_executed.pct"
+            }
+            (Threads, _) => "ktt_threads",
+        }
+    }
+
+    /// Conversion ratio applied to Volta+ counters so they line up with
+    /// the pre-Volta scale used by the expert system (Table 1 notes:
+    /// utilization ranks are <0,10> pre-Volta vs percent <0,100> after;
+    /// WARP_E is a ratio ·100 : 32 on Volta+).
+    pub fn new_counter_scale(self) -> f64 {
+        use Counter::*;
+        match self {
+            DramU | TexU | ShrU => 1.0 / 10.0,
+            WarpE => 100.0 / 32.0,
+            _ => 1.0,
+        }
+    }
+}
+
+impl fmt::Display for Counter {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.abbr())
+    }
+}
+
+/// Which counter-name generation a GPU exposes (changed with Volta).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CounterSet {
+    PreVolta,
+    VoltaPlus,
+}
+
+/// A dense vector of counter values, indexed by [`Counter`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CounterVec(pub [f64; NUM_COUNTERS]);
+
+impl Default for CounterVec {
+    fn default() -> Self {
+        CounterVec([0.0; NUM_COUNTERS])
+    }
+}
+
+impl CounterVec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn get(&self, c: Counter) -> f64 {
+        self.0[c.index()]
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: Counter, v: f64) {
+        self.0[c.index()] = v;
+    }
+
+    /// Iterate (counter, value) pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (Counter, f64)> + '_ {
+        ALL_COUNTERS.iter().map(move |&c| (c, self.get(c)))
+    }
+
+    /// Only the PC_ops components (the model targets).
+    pub fn ops(&self) -> impl Iterator<Item = (Counter, f64)> + '_ {
+        self.iter().filter(|(c, _)| c.kind() == CounterKind::Ops)
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Value {
+        crate::util::json::Value::Obj(
+            self.iter()
+                .map(|(c, v)| (c.abbr().to_string(), v.into()))
+                .collect(),
+        )
+    }
+
+    pub fn from_json(v: &crate::util::json::Value) -> anyhow::Result<Self> {
+        let mut out = CounterVec::new();
+        let o = v
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("counter vec must be an object"))?;
+        for (k, val) in o {
+            if let Some(c) = Counter::from_abbr(k) {
+                out.set(
+                    c,
+                    val.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("{k} not a number"))?,
+                );
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_are_dense_and_stable() {
+        for (i, c) in ALL_COUNTERS.iter().enumerate() {
+            assert_eq!(c.index(), i);
+            assert_eq!(Counter::from_index(i), Some(*c));
+        }
+        assert_eq!(Counter::from_index(NUM_COUNTERS), None);
+    }
+
+    #[test]
+    fn table1_taxonomy() {
+        // Exactly 7 stress counters per Table 1.
+        let stress = ALL_COUNTERS
+            .iter()
+            .filter(|c| c.kind() == CounterKind::Stress)
+            .count();
+        assert_eq!(stress, 7);
+        assert_eq!(Counter::InstIssueU.kind(), CounterKind::Ops);
+        assert_eq!(Counter::Threads.kind(), CounterKind::Ops);
+    }
+
+    #[test]
+    fn abbr_roundtrip() {
+        for c in ALL_COUNTERS {
+            assert_eq!(Counter::from_abbr(c.abbr()), Some(c));
+        }
+        assert_eq!(Counter::from_abbr("NOPE"), None);
+    }
+
+    #[test]
+    fn cuda_names_differ_across_generations() {
+        for c in ALL_COUNTERS {
+            if c == Counter::Threads {
+                continue;
+            }
+            assert_ne!(
+                c.cuda_name(CounterSet::PreVolta),
+                c.cuda_name(CounterSet::VoltaPlus),
+                "{c}"
+            );
+        }
+    }
+
+    #[test]
+    fn countervec_roundtrip_json() {
+        let mut v = CounterVec::new();
+        v.set(Counter::DramRt, 1234.0);
+        v.set(Counter::SmE, 87.5);
+        let j = v.to_json();
+        let back = CounterVec::from_json(&j).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn ops_iterator_excludes_stress() {
+        let v = CounterVec::new();
+        assert!(v.ops().all(|(c, _)| c.kind() == CounterKind::Ops));
+        assert_eq!(v.ops().count(), NUM_COUNTERS - 7);
+    }
+}

@@ -1,0 +1,266 @@
+//! Bottleneck analysis (paper §3.5.1, Equations 6–14).
+//!
+//! Reads a measured counter vector and produces a bottleneck vector
+//! `B = [b_x]`, each component in [0, 1]: 0 = subsystem unstressed,
+//! 1 = at its theoretical peak. The computation is written exactly as in
+//! the paper; counters arrive in the pre-Volta scale (utilization ranks
+//! 0–10, efficiencies 0–100 — the measurement layer normalizes Volta+
+//! counters per Table 1).
+
+use crate::counters::{Counter, CounterSet, CounterVec, INST_COUNTERS};
+use crate::gpusim::GpuSpec;
+
+/// The bottleneck vector (paper §3.5.1).
+#[derive(Debug, Clone, Default)]
+pub struct Bottlenecks {
+    pub dram_read: f64,
+    pub dram_write: f64,
+    pub l2_read: f64,
+    pub l2_write: f64,
+    pub shared_read: f64,
+    pub shared_write: f64,
+    pub tex: f64,
+    pub local: f64,
+    /// Instruction-class bottlenecks, indexed parallel to
+    /// [`INST_COUNTERS`] (F32, F64, INT, MISC, LDST, CONT, BCONV).
+    pub inst: [f64; 7],
+    pub issue: f64,
+    pub sm: f64,
+    pub paral: f64,
+}
+
+impl Bottlenecks {
+    /// Max over all components — used by tests and diagnostics.
+    pub fn max(&self) -> f64 {
+        let mut m: f64 = 0.0;
+        for v in self.all() {
+            m = m.max(v);
+        }
+        m
+    }
+
+    pub fn all(&self) -> Vec<f64> {
+        let mut v = vec![
+            self.dram_read,
+            self.dram_write,
+            self.l2_read,
+            self.l2_write,
+            self.shared_read,
+            self.shared_write,
+            self.tex,
+            self.local,
+            self.issue,
+            self.sm,
+            self.paral,
+        ];
+        v.extend_from_slice(&self.inst);
+        v
+    }
+}
+
+/// Memory bottleneck helper: utilization (0–10 rank) weighted by the
+/// read/write transaction split (Eqs. 6–7 and their shared/L2 analogues).
+fn memory_pair(read_t: f64, write_t: f64, util_rank: f64) -> (f64, f64) {
+    let total = read_t + write_t;
+    if total <= 0.0 {
+        return (0.0, 0.0);
+    }
+    let u = (util_rank / 10.0).clamp(0.0, 1.0);
+    (read_t / total * u, write_t / total * u)
+}
+
+/// Run the bottleneck analysis for counters measured on `gpu`.
+pub fn analyze(pc: &CounterVec, gpu: &GpuSpec) -> Bottlenecks {
+    let g = |c: Counter| pc.get(c);
+    let mut b = Bottlenecks::default();
+
+    // --- memory subsystems (Eqs. 6, 7 + analogues) ---------------------
+    (b.dram_read, b.dram_write) = memory_pair(
+        g(Counter::DramRt),
+        g(Counter::DramWt),
+        g(Counter::DramU),
+    );
+    (b.l2_read, b.l2_write) =
+        memory_pair(g(Counter::L2Rt), g(Counter::L2Wt), g(Counter::L2U));
+    (b.shared_read, b.shared_write) =
+        memory_pair(g(Counter::ShrLt), g(Counter::ShrWt), g(Counter::ShrU));
+
+    // texture cache is read-only: plain rescale
+    b.tex = (g(Counter::TexU) / 10.0).clamp(0.0, 1.0);
+
+    // --- local memory (Eq. 8): overhead weighted by the most-stressed
+    // level of the memory path that spills travel through --------------
+    let mem_max = (g(Counter::DramU) / 10.0)
+        .max(g(Counter::L2U) / 10.0)
+        .max(g(Counter::TexU) / 10.0)
+        .clamp(0.0, 1.0);
+    b.local = (g(Counter::LocO) / 100.0).clamp(0.0, 1.0) * mem_max;
+
+    // --- instruction bottlenecks (Eqs. 9–12) ----------------------------
+    let warp_e = g(Counter::WarpE).max(100.0 / 32.0);
+    let warp_np_e = g(Counter::WarpNpE).max(100.0 / 32.0);
+    // Eq. 9: warp-level issues fitted back to thread-level capacity
+    let ins_fitted =
+        32.0 * g(Counter::InstExe) * (100.0 / warp_e) * (100.0 / warp_np_e);
+    let ins_fitted = ins_fitted.max(1.0);
+
+    // issue-slot utilization; Volta+ can dual-issue INT/FP so one full
+    // pipe (50 %) counts as full utilization (§3.5.1).
+    let ins_util = match gpu.counter_set() {
+        CounterSet::PreVolta => g(Counter::InstIssueU) / 100.0,
+        CounterSet::VoltaPlus => (g(Counter::InstIssueU) / 50.0).min(1.0),
+    }
+    .clamp(0.0, 1.0);
+
+    let mut util_max: f64 = 0.0;
+    for (i, c) in INST_COUNTERS.iter().enumerate() {
+        let frac = (g(*c) / ins_fitted).clamp(0.0, 1.0);
+        util_max = util_max.max(frac);
+        // Eq. 10 (and analogues)
+        b.inst[i] = frac * ins_util;
+    }
+
+    // Eq. 12: issue-slot headroom weighted by the dominant class
+    b.issue = util_max * (100.0 - g(Counter::InstIssueU)).clamp(0.0, 100.0)
+        / 100.0;
+
+    // --- parallelism (Eqs. 13–14) ----------------------------------------
+    b.sm = ((100.0 - g(Counter::SmE)) / 100.0).clamp(0.0, 1.0);
+    let cores = gpu.cores() as f64;
+    b.paral = ((cores * 5.0 - g(Counter::Threads)) / (cores * 5.0)).max(0.0);
+
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::GpuSpec;
+
+    fn pc(pairs: &[(Counter, f64)]) -> CounterVec {
+        let mut v = CounterVec::new();
+        for &(c, x) in pairs {
+            v.set(c, x);
+        }
+        v
+    }
+
+    #[test]
+    fn eq6_eq7_split_by_transactions() {
+        let v = pc(&[
+            (Counter::DramRt, 300.0),
+            (Counter::DramWt, 100.0),
+            (Counter::DramU, 8.0),
+        ]);
+        let b = analyze(&v, &GpuSpec::gtx1070());
+        assert!((b.dram_read - 0.75 * 0.8).abs() < 1e-12);
+        assert!((b.dram_write - 0.25 * 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_transactions_no_bottleneck() {
+        let v = pc(&[(Counter::DramU, 9.0)]);
+        let b = analyze(&v, &GpuSpec::gtx1070());
+        assert_eq!(b.dram_read, 0.0);
+        assert_eq!(b.dram_write, 0.0);
+    }
+
+    #[test]
+    fn eq8_local_weighted_by_memory_stress() {
+        // high overhead but idle memory path => not a bottleneck
+        let idle = pc(&[(Counter::LocO, 80.0), (Counter::DramU, 0.5)]);
+        let b1 = analyze(&idle, &GpuSpec::gtx1070());
+        assert!(b1.local < 0.05);
+        // high overhead + saturated DRAM => real bottleneck
+        let busy = pc(&[(Counter::LocO, 80.0), (Counter::DramU, 10.0)]);
+        let b2 = analyze(&busy, &GpuSpec::gtx1070());
+        assert!((b2.local - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq10_fp32_utilization() {
+        // perfectly converged warps: ins_fitted = 32·INST_EXE
+        let v = pc(&[
+            (Counter::InstExe, 1000.0),
+            (Counter::WarpE, 100.0),
+            (Counter::WarpNpE, 100.0),
+            (Counter::InstF32, 16000.0), // half the issue capacity
+            (Counter::InstIssueU, 90.0),
+        ]);
+        let b = analyze(&v, &GpuSpec::gtx1070());
+        assert!((b.inst[0] - 0.5 * 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn volta_dual_issue_halves_the_bar() {
+        let v = pc(&[
+            (Counter::InstExe, 1000.0),
+            (Counter::WarpE, 100.0),
+            (Counter::WarpNpE, 100.0),
+            (Counter::InstF32, 32000.0),
+            (Counter::InstIssueU, 50.0),
+        ]);
+        let pre = analyze(&v, &GpuSpec::gtx1070());
+        let post = analyze(&v, &GpuSpec::rtx2080());
+        // 50% issue = half utilization pre-Volta, full on Volta+
+        assert!((pre.inst[0] - 0.5).abs() < 1e-9);
+        assert!((post.inst[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eq12_issue_headroom() {
+        let v = pc(&[
+            (Counter::InstExe, 1000.0),
+            (Counter::WarpE, 100.0),
+            (Counter::WarpNpE, 100.0),
+            (Counter::InstF32, 32000.0), // dominant class at capacity
+            (Counter::InstIssueU, 40.0),
+        ]);
+        let b = analyze(&v, &GpuSpec::gtx1070());
+        assert!((b.issue - 1.0 * 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eq13_eq14_parallelism() {
+        let gpu = GpuSpec::gtx1070(); // 1920 cores
+        let cores = gpu.cores() as f64;
+        let v = pc(&[
+            (Counter::SmE, 40.0),
+            (Counter::Threads, cores * 2.5),
+        ]);
+        let b = analyze(&v, &gpu);
+        assert!((b.sm - 0.6).abs() < 1e-12);
+        assert!((b.paral - 0.5).abs() < 1e-12);
+        // five threads per core zeroes the empirical bottleneck
+        let v2 = pc(&[(Counter::Threads, cores * 5.0)]);
+        assert_eq!(analyze(&v2, &gpu).paral, 0.0);
+    }
+
+    #[test]
+    fn all_bottlenecks_bounded() {
+        // randomized sanity: every component stays in [0,1]
+        let mut rng = crate::util::rng::Rng::new(42);
+        for _ in 0..500 {
+            let mut v = CounterVec::new();
+            for c in crate::counters::ALL_COUNTERS {
+                let scale = match c {
+                    Counter::DramU
+                    | Counter::L2U
+                    | Counter::TexU
+                    | Counter::ShrU => 10.0,
+                    Counter::SmE
+                    | Counter::WarpE
+                    | Counter::WarpNpE
+                    | Counter::InstIssueU
+                    | Counter::LocO => 100.0,
+                    _ => 1e9,
+                };
+                v.set(c, rng.f64() * scale);
+            }
+            let b = analyze(&v, &GpuSpec::gtx680());
+            for (i, x) in b.all().into_iter().enumerate() {
+                assert!((0.0..=1.0).contains(&x), "component {i} = {x}");
+            }
+        }
+    }
+}

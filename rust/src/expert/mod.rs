@@ -1,0 +1,14 @@
+//! The expert system (paper §3.5): from measured performance counters to
+//! bottlenecks (Eqs. 6–14), and from bottlenecks to a required
+//! counter-change vector ΔPC_ops (Eq. 15); plus configuration scoring
+//! (§3.6, Eqs. 16–17).
+
+mod bottleneck;
+mod reaction;
+mod scoring;
+
+pub use bottleneck::{analyze, Bottlenecks};
+pub use reaction::{react, DeltaPc, DEFAULT_INST_REACTION, INST_BOUND_REACTION};
+pub use scoring::{
+    active_deltas, normalize_scores, score, score_active, CUTOFF_GAMMA,
+};

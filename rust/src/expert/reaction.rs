@@ -1,0 +1,160 @@
+//! ΔPC computation (paper §3.5.2, Eq. 15).
+//!
+//! Converts a bottleneck vector into the required change of PC_ops:
+//! a vector ΔPC with components in [−1, 1] — negative means "the searcher
+//! should prefer configurations that decrease this counter", positive
+//! "increase it", zero "don't care".
+
+use crate::counters::{Counter, CounterVec, INST_COUNTERS};
+
+use super::Bottlenecks;
+
+/// Default instruction-reaction threshold (§3.5.2).
+pub const DEFAULT_INST_REACTION: f64 = 0.7;
+/// Threshold when the user flags the problem as instruction-bound.
+pub const INST_BOUND_REACTION: f64 = 0.5;
+
+/// The required change of performance counters. Stored as a
+/// [`CounterVec`] whose entries are deltas in [−1, 1]; only counters
+/// participating in the reaction are non-zero.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaPc(pub CounterVec);
+
+impl DeltaPc {
+    pub fn get(&self, c: Counter) -> f64 {
+        self.0.get(c)
+    }
+
+    /// Counters with a non-zero required change.
+    pub fn active(&self) -> Vec<(Counter, f64)> {
+        self.0.iter().filter(|(_, v)| *v != 0.0).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.active().is_empty()
+    }
+}
+
+/// Eq. 15: instruction deltas trigger only beyond `inst_reaction` —
+/// instructions have low latency, so they only matter under high stress.
+fn inst_delta(b: f64, inst_reaction: f64) -> f64 {
+    if b <= inst_reaction {
+        0.0
+    } else {
+        -((b - inst_reaction) / (1.0 - inst_reaction))
+    }
+}
+
+/// Compute ΔPC_ops from bottlenecks (§3.5.2).
+pub fn react(b: &Bottlenecks, inst_reaction: f64) -> DeltaPc {
+    let mut d = CounterVec::new();
+
+    // memory subsystems: inverse of the bottleneck value
+    d.set(Counter::DramRt, -b.dram_read);
+    d.set(Counter::DramWt, -b.dram_write);
+    d.set(Counter::L2Rt, -b.l2_read);
+    d.set(Counter::L2Wt, -b.l2_write);
+    d.set(Counter::ShrLt, -b.shared_read);
+    d.set(Counter::ShrWt, -b.shared_write);
+    d.set(Counter::TexRwt, -b.tex);
+    d.set(Counter::LocO, -b.local);
+
+    // instruction classes: Eq. 15 (thresholded)
+    for (i, c) in INST_COUNTERS.iter().enumerate() {
+        d.set(*c, inst_delta(b.inst[i], inst_reaction));
+    }
+
+    // The issue bottleneck (Eq. 12) fires when issue slots sit idle
+    // while one instruction class dominates — the kernel is
+    // *latency-bound*. The paper reacts "analogously" to the other
+    // instruction bottlenecks but does not name the counter; reducing
+    // instruction counts does not fix latency-boundness, so we direct
+    // the reaction at the parallelism counters (the §2.3 manual-tuning
+    // narrative: "GPU occupancy low → set Z_ITERATIONS to a lower
+    // value"). See DESIGN.md §Interpretation.
+    let issue_push = -inst_delta(b.issue, inst_reaction); // in [0, 1]
+
+    // parallelism: applied straightforwardly, *not* inverted —
+    // Δpc_SM_E = b_sm and Δpc_global(threads) = b_paral
+    d.set(Counter::SmE, b.sm.max(issue_push));
+    d.set(Counter::Threads, b.paral.max(issue_push));
+
+    DeltaPc(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq15_threshold_behaviour() {
+        assert_eq!(inst_delta(0.69, 0.7), 0.0);
+        assert_eq!(inst_delta(0.7, 0.7), 0.0);
+        assert!((inst_delta(0.85, 0.7) + 0.5).abs() < 1e-12);
+        assert!((inst_delta(1.0, 0.7) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn memory_deltas_are_inverted_bottlenecks() {
+        let b = Bottlenecks {
+            dram_read: 0.8,
+            tex: 0.4,
+            ..Default::default()
+        };
+        let d = react(&b, DEFAULT_INST_REACTION);
+        assert_eq!(d.get(Counter::DramRt), -0.8);
+        assert_eq!(d.get(Counter::TexRwt), -0.4);
+        assert_eq!(d.get(Counter::L2Rt), -0.0);
+    }
+
+    #[test]
+    fn parallelism_deltas_positive() {
+        let b = Bottlenecks {
+            sm: 0.6,
+            paral: 0.3,
+            ..Default::default()
+        };
+        let d = react(&b, DEFAULT_INST_REACTION);
+        assert_eq!(d.get(Counter::SmE), 0.6);
+        assert_eq!(d.get(Counter::Threads), 0.3);
+    }
+
+    #[test]
+    fn instruction_bound_threshold_reacts_sooner() {
+        let mut b = Bottlenecks::default();
+        b.inst[0] = 0.6; // fp32
+        let relaxed = react(&b, DEFAULT_INST_REACTION);
+        let eager = react(&b, INST_BOUND_REACTION);
+        assert_eq!(relaxed.get(Counter::InstF32), 0.0);
+        assert!((eager.get(Counter::InstF32) + 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deltas_bounded() {
+        let mut b = Bottlenecks {
+            dram_read: 1.0,
+            dram_write: 1.0,
+            l2_read: 1.0,
+            l2_write: 1.0,
+            shared_read: 1.0,
+            shared_write: 1.0,
+            tex: 1.0,
+            local: 1.0,
+            issue: 1.0,
+            sm: 1.0,
+            paral: 1.0,
+            ..Default::default()
+        };
+        b.inst = [1.0; 7];
+        let d = react(&b, DEFAULT_INST_REACTION);
+        for (_, v) in d.0.iter() {
+            assert!((-1.0..=1.0).contains(&v), "{v}");
+        }
+    }
+
+    #[test]
+    fn no_bottlenecks_no_deltas_except_memory_zero() {
+        let d = react(&Bottlenecks::default(), DEFAULT_INST_REACTION);
+        assert!(d.is_empty());
+    }
+}

@@ -1,0 +1,256 @@
+//! Configuration scoring (paper §3.6, Eqs. 16–17).
+//!
+//! Given the required counter changes ΔPC for the profiled configuration
+//! and *model-predicted* counters for both the profiled and a candidate
+//! configuration, Eq. 16 scores how well the candidate moves each
+//! counter in the required direction; Eq. 17 normalizes scores into
+//! [0.0001, 256] for the weighted-random step.
+//!
+//! Both configurations are evaluated through the model (not the live
+//! measurement) because autotuning may run on a different GPU/input than
+//! the model was trained on — predicted and measured counters are not
+//! directly comparable (§3.6).
+
+use crate::counters::CounterVec;
+
+use super::DeltaPc;
+
+/// Cutoff threshold γ (Eq. 17): raw scores below it get the floor
+/// probability.
+pub const CUTOFF_GAMMA: f64 = -0.25;
+
+/// Eq. 16, orientation-corrected:
+///
+/// s = Σ_p Δpc_p · (pc_p(candidate) − pc_p(profile)) /
+///                (pc_p(candidate) + pc_p(profile))
+///
+/// summed over counters with non-zero predictions for both
+/// configurations.
+///
+/// **Erratum note** (DESIGN.md §Erratum): the paper prints the numerator
+/// as (profile − candidate), under which a candidate that *decreases* a
+/// counter whose Δ is negative ("should decrease") would score
+/// *negatively* — contradicting the stated semantics ("higher scores to
+/// configurations which are predicted to change PC_ops in the required
+/// way", §3.3) for every counter class. We implement the consistent
+/// orientation: a candidate moving a counter in the direction of sign(Δ)
+/// contributes positively, weighted by |Δ| and the relative change.
+pub fn score(
+    delta: &DeltaPc,
+    pred_profile: &CounterVec,
+    pred_candidate: &CounterVec,
+) -> f64 {
+    let mut s = 0.0;
+    for (c, d) in delta.0.iter() {
+        if d == 0.0 {
+            continue;
+        }
+        let p = pred_profile.get(c);
+        let q = pred_candidate.get(c);
+        // PC_used (paper): both-zero counters carry no information and
+        // the ratio is indeterminate — skip. One-sided zeros are kept:
+        // (q-p)/(q+p) = ±1 is exactly the "counter fully eliminated /
+        // introduced" signal (DESIGN.md §Erratum — the paper's stricter
+        // rule starves configurations that remove a bottleneck outright).
+        if p != 0.0 || q != 0.0 {
+            s += d * (q - p) / (q + p);
+        }
+    }
+    s
+}
+
+/// Hot-path variant of [`score`]: the Δ vector pre-extracted to its
+/// non-zero (index, delta) pairs so the inner loop touches only active
+/// counters (~8 of 25) — the searcher scores the whole space each
+/// profiling round (§Perf).
+#[inline]
+pub fn score_active(
+    active: &[(usize, f64)],
+    pred_profile: &CounterVec,
+    pred_candidate: &CounterVec,
+) -> f64 {
+    let mut s = 0.0;
+    for &(i, d) in active {
+        let p = pred_profile.0[i];
+        let q = pred_candidate.0[i];
+        if p != 0.0 || q != 0.0 {
+            s += d * (q - p) / (q + p);
+        }
+    }
+    s
+}
+
+/// Extract the non-zero components of a Δ vector for [`score_active`].
+pub fn active_deltas(delta: &DeltaPc) -> Vec<(usize, f64)> {
+    delta
+        .0
+        .iter()
+        .enumerate()
+        .filter(|(_, (_, d))| *d != 0.0)
+        .map(|(i, (_, d))| (i, d))
+        .collect()
+}
+
+/// Eq. 17: normalize raw scores into [0.0001, 256], amplifying positive
+/// scores into (1, 256] and keeping a small non-zero probability for
+/// mildly negative ones (escape hatch from local optima / model error).
+pub fn normalize_scores(scores: &mut [f64]) {
+    let finite: Vec<f64> = scores.iter().copied().filter(|s| s.is_finite()).collect();
+    if finite.is_empty() {
+        return;
+    }
+    let s_max = finite.iter().copied().fold(f64::MIN, f64::max);
+    let s_min = finite.iter().copied().fold(f64::MAX, f64::min);
+    for s in scores.iter_mut() {
+        let raw = *s;
+        *s = if raw > 0.0 {
+            let base = if s_max > 0.0 { 1.0 + raw / s_max } else { 1.0 };
+            base.powi(8)
+        } else if raw > CUTOFF_GAMMA {
+            if s_min < 0.0 {
+                (1.0 - raw / s_min).powi(8).max(0.0001)
+            } else {
+                0.0001
+            }
+        } else {
+            0.0001
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::counters::Counter;
+
+    fn delta(pairs: &[(Counter, f64)]) -> DeltaPc {
+        let mut d = DeltaPc::default();
+        for &(c, v) in pairs {
+            d.0.set(c, v);
+        }
+        d
+    }
+
+    fn pc(pairs: &[(Counter, f64)]) -> CounterVec {
+        let mut v = CounterVec::new();
+        for &(c, x) in pairs {
+            v.set(c, x);
+        }
+        v
+    }
+
+    #[test]
+    fn eq16_rewards_movement_in_required_direction() {
+        // DRAM reads should decrease (Δ = −0.8)
+        let d = delta(&[(Counter::DramRt, -0.8)]);
+        let prof = pc(&[(Counter::DramRt, 1000.0)]);
+        let better = pc(&[(Counter::DramRt, 500.0)]);
+        let worse = pc(&[(Counter::DramRt, 2000.0)]);
+        let s_better = score(&d, &prof, &better);
+        let s_worse = score(&d, &prof, &worse);
+        assert!(s_better > 0.0, "decreasing a too-hot counter scores > 0");
+        assert!(s_worse < 0.0, "increasing it scores < 0");
+        assert!(s_better > s_worse);
+    }
+
+    #[test]
+    fn eq16_parallelism_direction() {
+        // threads should increase (Δ = +0.5)
+        let d = delta(&[(Counter::Threads, 0.5)]);
+        let prof = pc(&[(Counter::Threads, 1000.0)]);
+        let more = pc(&[(Counter::Threads, 4000.0)]);
+        assert!(score(&d, &prof, &more) > 0.0);
+    }
+
+    #[test]
+    fn eq16_weighs_by_delta_magnitude() {
+        let prof = pc(&[(Counter::DramRt, 100.0), (Counter::L2Rt, 100.0)]);
+        let cand = pc(&[(Counter::DramRt, 50.0), (Counter::L2Rt, 50.0)]);
+        let strong = delta(&[(Counter::DramRt, -1.0)]);
+        let weak = delta(&[(Counter::DramRt, -0.2)]);
+        assert!(
+            score(&strong, &prof, &cand) > score(&weak, &prof, &cand)
+        );
+    }
+
+    #[test]
+    fn one_sided_zero_is_full_signal_both_zero_skipped() {
+        let d = delta(&[(Counter::DramRt, -1.0), (Counter::TexRwt, -1.0)]);
+        // candidate *introduces* TEX traffic the profile lacks: full
+        // penalty −1·(50−0)/(50+0) = −1
+        let prof = pc(&[(Counter::DramRt, 100.0), (Counter::TexRwt, 0.0)]);
+        let cand = pc(&[(Counter::DramRt, 100.0), (Counter::TexRwt, 50.0)]);
+        assert_eq!(score(&d, &prof, &cand), -1.0);
+        // candidate *eliminates* DRAM reads: full reward
+        let cand2 = pc(&[(Counter::DramRt, 0.0), (Counter::TexRwt, 0.0)]);
+        assert_eq!(score(&d, &prof, &cand2), 1.0);
+        // both-zero: no information, skipped
+        let prof0 = pc(&[(Counter::DramRt, 0.0)]);
+        let cand0 = pc(&[(Counter::DramRt, 0.0)]);
+        assert_eq!(score(&d, &prof0, &cand0), 0.0);
+    }
+
+    #[test]
+    fn eq17_bounds() {
+        let mut s = vec![-5.0, -0.3, -0.1, 0.0, 0.2, 1.0, 3.0];
+        normalize_scores(&mut s);
+        for v in &s {
+            assert!((0.0001..=256.0).contains(v), "{v}");
+        }
+        // γ cutoff: -5.0 and -0.3 floored
+        assert_eq!(s[0], 0.0001);
+        assert_eq!(s[1], 0.0001);
+        // max positive hits 2^8
+        assert!((s[6] - 256.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eq17_monotone_in_raw_score() {
+        let mut s = vec![0.1, 0.5, 0.9, 1.2, 2.0];
+        let orig = s.clone();
+        normalize_scores(&mut s);
+        for w in s.windows(2) {
+            assert!(w[0] <= w[1], "normalization must preserve order");
+        }
+        assert_eq!(orig.len(), s.len());
+    }
+
+    #[test]
+    fn eq17_positive_scores_amplified_above_one() {
+        let mut s = vec![0.01, 1.0];
+        normalize_scores(&mut s);
+        assert!(s[0] > 1.0);
+        assert!(s[1] > s[0]);
+    }
+
+    #[test]
+    fn score_active_matches_score() {
+        let d = delta(&[
+            (Counter::DramRt, -0.8),
+            (Counter::Threads, 0.5),
+            (Counter::ShrLt, -0.2),
+        ]);
+        let active = active_deltas(&d);
+        assert_eq!(active.len(), 3);
+        let p = pc(&[
+            (Counter::DramRt, 100.0),
+            (Counter::Threads, 5000.0),
+            (Counter::ShrLt, 40.0),
+        ]);
+        let q = pc(&[
+            (Counter::DramRt, 60.0),
+            (Counter::Threads, 9000.0),
+            (Counter::ShrLt, 80.0),
+        ]);
+        assert!((score(&d, &p, &q) - score_active(&active, &p, &q)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn all_zero_scores_stay_floor_or_one() {
+        let mut s = vec![0.0, 0.0];
+        normalize_scores(&mut s);
+        for v in &s {
+            assert!((0.0001..=256.0).contains(v));
+        }
+    }
+}

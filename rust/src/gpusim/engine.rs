@@ -1,0 +1,404 @@
+//! The simulation engine: Workload × GpuSpec → (runtime, counters).
+//!
+//! A roofline-style model with occupancy-driven latency hiding. The
+//! counter emission keeps the paper's PC_ops/PC_stress asymmetry:
+//! operation counts are workload-derived (device-weak), utilizations are
+//! timing-derived (device-strong). All counters are reported in the
+//! *pre-Volta scale* (utilization ranks in 0–10, efficiencies in 0–100);
+//! for Volta+ devices this corresponds to KTT applying the Table 1
+//! conversion ratios at measurement time.
+
+use crate::counters::{Counter, CounterVec};
+
+use super::{GpuSpec, Workload};
+
+/// Occupancy analysis of one launch configuration.
+#[derive(Debug, Clone)]
+pub struct Occupancy {
+    pub blocks_per_sm: u32,
+    /// Resident threads / max threads, in [0, 1].
+    pub occupancy: f64,
+    /// Which resource limited the residency.
+    pub limiter: &'static str,
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub runtime_ms: f64,
+    pub counters: CounterVec,
+    pub occupancy: Occupancy,
+}
+
+/// Architectural per-thread register ceiling (beyond it, compilers spill).
+const REG_LIMIT_PER_THREAD: f64 = 255.0;
+/// Kernel launch + driver overhead.
+const LAUNCH_OVERHEAD_S: f64 = 3.0e-6;
+
+/// Cache hit rate for a read working set against a capacity.
+/// Near-perfect while the footprint fits; decays with the ratio beyond
+/// (conflict/capacity misses). This is the one deliberately
+/// device-dependent PC_ops pathway (paper §3.1 imprecision note).
+fn hit_rate(footprint: f64, capacity: f64) -> f64 {
+    if footprint <= 0.0 {
+        return 0.0;
+    }
+    if footprint <= capacity {
+        0.95
+    } else {
+        0.95 * capacity / footprint
+    }
+}
+
+/// Compute residency limits per SM.
+pub fn occupancy(spec: &GpuSpec, w: &Workload) -> Occupancy {
+    if w.block_size <= 0.0 {
+        return Occupancy {
+            blocks_per_sm: 0,
+            occupancy: 0.0,
+            limiter: "empty launch",
+        };
+    }
+    let mut limit = spec.max_blocks_per_sm as f64;
+    let mut limiter = "blocks";
+
+    let by_threads = spec.max_threads_per_sm as f64 / w.block_size;
+    if by_threads < limit {
+        limit = by_threads;
+        limiter = "threads";
+    }
+    let regs_per_block = w.regs_per_thread.max(16.0) * w.block_size;
+    let by_regs = spec.regs_per_sm as f64 / regs_per_block;
+    if by_regs < limit {
+        limit = by_regs;
+        limiter = "registers";
+    }
+    if w.shared_bytes_per_block > 0.0 {
+        let by_shared = spec.shared_per_sm as f64 / w.shared_bytes_per_block;
+        if by_shared < limit {
+            limit = by_shared;
+            limiter = "shared memory";
+        }
+    }
+    let blocks_per_sm = limit.floor().max(1.0) as u32;
+    let occ = (blocks_per_sm as f64 * w.block_size
+        / spec.max_threads_per_sm as f64)
+        .min(1.0);
+    Occupancy {
+        blocks_per_sm,
+        occupancy: occ,
+        limiter,
+    }
+}
+
+/// Run the analytic model.
+pub fn simulate(spec: &GpuSpec, workload: &Workload) -> SimResult {
+    let mut w = workload.clone();
+    w.apply_spilling(REG_LIMIT_PER_THREAD);
+
+    let occ = occupancy(spec, &w);
+
+    // ---- divergence / warp efficiency --------------------------------
+    let warp_e_frac = (1.0 - w.divergence * (31.0 / 32.0)).clamp(1.0 / 32.0, 1.0);
+    let total_inst = w.total_inst().max(1.0);
+    // warp-level issued instructions (divergent warps issue for all lanes)
+    let inst_exe = total_inst / 32.0 / warp_e_frac;
+
+    // ---- cache hierarchy ----------------------------------------------
+    let tex_read = w.gread * w.tex_fraction.clamp(0.0, 1.0);
+    let tex_hit = hit_rate(w.tex_footprint_per_sm, spec.tex_size_per_sm as f64);
+    let local_rd = w.local_bytes * 0.5;
+    let local_wr = w.local_bytes * 0.5;
+    let l2_read =
+        tex_read * (1.0 - tex_hit) + (w.gread - tex_read) + local_rd;
+    let l2_hit = hit_rate(w.l2_footprint, spec.l2_size as f64);
+    let dram_read = l2_read * (1.0 - l2_hit);
+    let l2_write = w.gwrite + local_wr;
+    // write-back: dirty lines eventually reach DRAM; streaming writes
+    // mostly miss.
+    let dram_write = l2_write * (1.0 - 0.5 * l2_hit);
+
+    // ---- subsystem busy times (seconds, device-wide) ------------------
+    let thread_rate = spec.fp32_gips() * 1e9; // thread-level ops/s
+    let div = warp_e_frac; // divergence inflates issue time
+    let t_fp32 = w.fp32 / thread_rate / div;
+    let t_fp64 = w.fp64 / (thread_rate * spec.fp64_ratio) / div;
+    let t_int = w.int / thread_rate / div;
+    let t_ldst = w.ldst / (thread_rate * 0.25) / div;
+    let t_other = (w.misc + w.cont + w.bconv) / (thread_rate * 0.5) / div;
+    let t_compute = if spec.dual_issue {
+        t_fp32.max(t_int) + t_fp64 + t_ldst + t_other
+    } else {
+        t_fp32 + t_int + t_fp64 + t_ldst + t_other
+    };
+
+    let t_dram = (dram_read + dram_write) / (spec.dram_bw * 1e9);
+    let t_l2 = (l2_read + l2_write) / (spec.l2_bw * 1e9);
+    let t_tex = tex_read / (spec.tex_bw * 1e9);
+    let t_shared =
+        (w.shared_load_bytes + w.shared_store_bytes) / (spec.shared_bw * 1e9);
+
+    let times = [t_compute, t_dram, t_l2, t_tex, t_shared];
+    let t_max = times.iter().fold(0.0f64, |a, &b| a.max(b));
+    let t_sum: f64 = times.iter().sum();
+    // imperfect overlap of the non-dominant subsystems
+    let mut t = t_max + 0.30 * (t_sum - t_max);
+
+    // ---- parallelism & latency hiding -----------------------------------
+    // Latency hiding is a *per-SM* property: below ~1/3 occupancy, the
+    // warp scheduler cannot cover pipeline/memory latencies. The
+    // *achieved* occupancy is bounded both by the residency limits
+    // (registers/shared/threads — `occ`) and by how many blocks the
+    // launch actually provides per SM.
+    let total_blocks = w.blocks().max(1.0);
+    let actual_bps = (total_blocks / spec.sm_count as f64)
+        .min(occ.blocks_per_sm as f64);
+    let occ_actual = (actual_bps * w.block_size
+        / spec.max_threads_per_sm as f64)
+        .min(1.0);
+    let lat = (occ_actual * 3.0).clamp(0.08, 1.0);
+    t /= lat;
+
+    // Throughput is a *device coverage* property: SMs with no resident
+    // block contribute nothing to the device-wide rates assumed above.
+    let sm_cov = (total_blocks / spec.sm_count as f64).min(1.0);
+    t /= sm_cov.max(0.02);
+
+    // multi-wave tail quantization: the last wave runs partially full
+    let one_wave_blocks =
+        (spec.sm_count as f64) * occ.blocks_per_sm as f64;
+    let waves = total_blocks / one_wave_blocks;
+    if waves > 1.0 {
+        t *= waves.ceil() / waves;
+    }
+
+    // SM efficiency counter: coverage × tail
+    let sm_e = if waves > 1.0 {
+        sm_cov * (waves / waves.ceil())
+    } else {
+        sm_cov
+    };
+
+    t += LAUNCH_OVERHEAD_S;
+
+    // ---- counter emission ----------------------------------------------
+    let mut c = CounterVec::new();
+    // PC_ops: memory transactions (32-byte sectors)
+    c.set(Counter::DramRt, dram_read / 32.0);
+    c.set(Counter::DramWt, dram_write / 32.0);
+    c.set(Counter::L2Rt, l2_read / 32.0);
+    c.set(Counter::L2Wt, l2_write / 32.0);
+    c.set(Counter::TexRwt, tex_read / 32.0);
+    c.set(Counter::ShrLt, w.shared_load_bytes / 128.0);
+    c.set(Counter::ShrWt, w.shared_store_bytes / 128.0);
+    // LOC_O: local traffic relative to overall L1 traffic, in percent
+    let l1_total = w.gread + w.gwrite + w.local_bytes;
+    let loc_o = if l1_total > 0.0 {
+        100.0 * w.local_bytes / l1_total
+    } else {
+        0.0
+    };
+    c.set(Counter::LocO, loc_o);
+    // PC_ops: instruction counts (thread-level)
+    c.set(Counter::InstF32, w.fp32);
+    c.set(Counter::InstF64, w.fp64);
+    c.set(Counter::InstInt, w.int);
+    c.set(Counter::InstMisc, w.misc);
+    c.set(Counter::InstLdst, w.ldst);
+    c.set(Counter::InstCont, w.cont);
+    c.set(Counter::InstBconv, w.bconv);
+    c.set(Counter::InstExe, inst_exe);
+    c.set(
+        Counter::InstIssueU,
+        (100.0 * t_compute / t).clamp(0.0, 100.0),
+    );
+    // PC_stress: utilizations (pre-Volta 0..10 rank scale)
+    c.set(Counter::DramU, (10.0 * t_dram / t).clamp(0.0, 10.0));
+    c.set(Counter::L2U, (10.0 * t_l2 / t).clamp(0.0, 10.0));
+    c.set(Counter::TexU, (10.0 * t_tex / t).clamp(0.0, 10.0));
+    c.set(Counter::ShrU, (10.0 * t_shared / t).clamp(0.0, 10.0));
+    c.set(Counter::SmE, 100.0 * sm_e);
+    c.set(Counter::WarpE, 100.0 * warp_e_frac);
+    c.set(Counter::WarpNpE, (100.0 * warp_e_frac * 0.99).max(1.0));
+    c.set(Counter::Threads, w.threads);
+
+    SimResult {
+        runtime_ms: t * 1e3,
+        counters: c,
+        occupancy: occ,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn compute_bound_workload() -> Workload {
+        Workload {
+            threads: (1u32 << 20) as f64,
+            block_size: 256.0,
+            regs_per_thread: 32.0,
+            fp32: 4e9,
+            int: 2e8,
+            ldst: 1e7,
+            gread: 64e6,
+            gwrite: 4e6,
+            tex_fraction: 0.9,
+            tex_footprint_per_sm: 4096.0,
+            l2_footprint: 1e6,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn runtime_positive_and_finite() {
+        for spec in GpuSpec::all() {
+            let r = simulate(&spec, &compute_bound_workload());
+            assert!(r.runtime_ms.is_finite() && r.runtime_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn utilizations_bounded() {
+        for spec in GpuSpec::all() {
+            let r = simulate(&spec, &compute_bound_workload());
+            for c in [
+                Counter::DramU,
+                Counter::L2U,
+                Counter::TexU,
+                Counter::ShrU,
+            ] {
+                let v = r.counters.get(c);
+                assert!((0.0..=10.0).contains(&v), "{c}={v}");
+            }
+            for c in [Counter::SmE, Counter::WarpE, Counter::InstIssueU] {
+                let v = r.counters.get(c);
+                assert!((0.0..=100.0).contains(&v), "{c}={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn faster_gpu_is_faster() {
+        let w = compute_bound_workload();
+        let slow = simulate(&GpuSpec::gtx750(), &w).runtime_ms;
+        let fast = simulate(&GpuSpec::rtx2080(), &w).runtime_ms;
+        assert!(fast < slow, "fast={fast} slow={slow}");
+    }
+
+    #[test]
+    fn pc_ops_device_weak_pc_stress_device_strong() {
+        // The paper's core asymmetry (Eq. 4): instruction PC_ops must be
+        // identical across devices, stress counters must differ. Use a
+        // mixed workload so neither subsystem saturates on both devices.
+        let w = Workload {
+            threads: (1u32 << 22) as f64,
+            block_size: 256.0,
+            regs_per_thread: 32.0,
+            fp32: 50e9,
+            ldst: 1e8,
+            gread: 2e9,
+            gwrite: 1e9,
+            tex_fraction: 0.0,
+            l2_footprint: 4e9,
+            ..Default::default()
+        };
+        let a = simulate(&GpuSpec::gtx750(), &w).counters;
+        let b = simulate(&GpuSpec::rtx2080(), &w).counters;
+        assert_eq!(a.get(Counter::InstF32), b.get(Counter::InstF32));
+        assert_eq!(a.get(Counter::TexRwt), b.get(Counter::TexRwt));
+        assert!(
+            (a.get(Counter::DramU) - b.get(Counter::DramU)).abs() > 0.2,
+            "stress counters should differ across devices"
+        );
+    }
+
+    #[test]
+    fn occupancy_limited_by_registers() {
+        let w = Workload {
+            threads: 1e6,
+            block_size: 256.0,
+            regs_per_thread: 255.0,
+            fp32: 1e6,
+            ..Default::default()
+        };
+        let o = occupancy(&GpuSpec::gtx1070(), &w);
+        assert_eq!(o.limiter, "registers");
+        assert!(o.occupancy < 0.3);
+    }
+
+    #[test]
+    fn low_occupancy_hurts_runtime() {
+        let mut w = compute_bound_workload();
+        w.regs_per_thread = 32.0;
+        let fast = simulate(&GpuSpec::gtx1070(), &w).runtime_ms;
+        w.regs_per_thread = 250.0; // same work, low occupancy
+        let slow = simulate(&GpuSpec::gtx1070(), &w).runtime_ms;
+        assert!(slow > fast);
+    }
+
+    #[test]
+    fn memory_bound_detected_on_weak_bandwidth() {
+        // a streaming workload: DRAM_U should dominate on every device
+        let w = Workload {
+            threads: (1u32 << 22) as f64,
+            block_size: 256.0,
+            regs_per_thread: 32.0,
+            fp32: 1e7,
+            ldst: 4e8,
+            gread: 2e9,
+            gwrite: 2e9,
+            tex_fraction: 0.0,
+            l2_footprint: 4e9,
+            ..Default::default()
+        };
+        let r = simulate(&GpuSpec::gtx750(), &w);
+        assert!(r.counters.get(Counter::DramU) > 7.0);
+        assert!(r.counters.get(Counter::InstIssueU) < 50.0);
+    }
+
+    #[test]
+    fn spilling_produces_local_traffic() {
+        let w = Workload {
+            threads: 1e6,
+            block_size: 128.0,
+            regs_per_thread: 300.0,
+            fp32: 1e8,
+            gread: 1e6,
+            gwrite: 1e6,
+            ..Default::default()
+        };
+        let r = simulate(&GpuSpec::gtx1070(), &w);
+        assert!(r.counters.get(Counter::LocO) > 0.0);
+    }
+
+    #[test]
+    fn divergence_lowers_warp_efficiency_and_slows() {
+        let mut w = compute_bound_workload();
+        let base = simulate(&GpuSpec::gtx1070(), &w);
+        w.divergence = 0.5;
+        let div = simulate(&GpuSpec::gtx1070(), &w);
+        assert!(div.counters.get(Counter::WarpE) < base.counters.get(Counter::WarpE));
+        assert!(div.runtime_ms > base.runtime_ms);
+    }
+
+    #[test]
+    fn input_scaling_keeps_ops_ratios_stable() {
+        // Eq. 5: scaling the input scales PC_ops ~linearly, so the
+        // *ratio* between two configurations is stable.
+        let w1 = compute_bound_workload();
+        let w2 = {
+            let mut w = compute_bound_workload();
+            w.fp32 *= 0.5; // a "coarsened" variant
+            w
+        };
+        let spec = GpuSpec::gtx1070();
+        let r_small = simulate(&spec, &w1).counters.get(Counter::InstF32)
+            / simulate(&spec, &w2).counters.get(Counter::InstF32);
+        let r_big = simulate(&spec, &w1.scaled(8.0))
+            .counters
+            .get(Counter::InstF32)
+            / simulate(&spec, &w2.scaled(8.0)).counters.get(Counter::InstF32);
+        assert!((r_small - r_big).abs() < 1e-9);
+    }
+}

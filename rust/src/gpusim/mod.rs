@@ -1,0 +1,30 @@
+//! Analytic GPU performance-counter simulator.
+//!
+//! This is the substitution for the paper's physical testbed (DESIGN.md
+//! §2): four NVIDIA GPUs and CUPTI profiling. Given a [`Workload`]
+//! descriptor (what a kernel configuration *does*: instruction mix,
+//! memory traffic, parallelism shape) and a [`GpuSpec`] (what the device
+//! *can do*), the engine produces a runtime and the full Table-1 counter
+//! vector.
+//!
+//! Design constraints, in order of importance:
+//!
+//! 1. **PC_ops must depend only weakly on the device** — the paper's
+//!    Eq. 4. Instruction counts and request-level transaction counts are
+//!    computed from the workload alone; only cache-miss-derived traffic
+//!    (L2↔DRAM) depends on device cache capacities, mirroring the
+//!    paper's observed imprecision near capacity thresholds (§3.1).
+//! 2. **PC_stress must depend strongly on the device and input** — they
+//!    are utilizations from a roofline-style timing model, so a kernel
+//!    that is compute-bound on a bandwidth-rich GPU becomes memory-bound
+//!    on a bandwidth-poor one, flipping the detected bottleneck.
+//! 3. The induced optimum must move across devices and inputs, so the
+//!    portability experiments (Tables 6–7) are non-trivial.
+
+mod engine;
+mod spec;
+mod workload;
+
+pub use engine::{simulate, Occupancy, SimResult};
+pub use spec::{Arch, GpuSpec};
+pub use workload::Workload;

@@ -1,0 +1,219 @@
+//! Simulated device specifications mirroring the paper's Table 3 GPUs.
+//!
+//! Numbers are the public datasheet values of the real devices (SM
+//! counts, clocks, bandwidths, cache sizes); internal bandwidths are
+//! datasheet-derived estimates. The absolute values matter less than the
+//! *ratios* (flop-to-byte, cache capacities), which is what moves optima
+//! between devices.
+
+use crate::counters::CounterSet;
+
+/// GPU micro-architecture generation (paper Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    Kepler,
+    Maxwell,
+    Pascal,
+    Turing,
+}
+
+/// A simulated GPU device.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub arch: Arch,
+    pub sm_count: u32,
+    pub cores_per_sm: u32,
+    pub clock_ghz: f64,
+    /// DRAM bandwidth, GB/s.
+    pub dram_bw: f64,
+    /// Aggregate L2 bandwidth, GB/s.
+    pub l2_bw: f64,
+    /// Aggregate texture/L1 read path bandwidth, GB/s.
+    pub tex_bw: f64,
+    /// Aggregate shared-memory bandwidth, GB/s.
+    pub shared_bw: f64,
+    /// L2 cache size, bytes (device-wide).
+    pub l2_size: u64,
+    /// Texture/read-only cache size per SM, bytes.
+    pub tex_size_per_sm: u64,
+    /// 32-bit registers per SM.
+    pub regs_per_sm: u64,
+    pub max_threads_per_sm: u32,
+    pub max_blocks_per_sm: u32,
+    /// Shared memory per SM, bytes.
+    pub shared_per_sm: u64,
+    /// FP64 throughput as a fraction of FP32.
+    pub fp64_ratio: f64,
+    /// Can the SM dual-issue INT and FP32 in parallel (Volta+)?
+    pub dual_issue: bool,
+}
+
+impl GpuSpec {
+    pub fn cores(&self) -> u64 {
+        self.sm_count as u64 * self.cores_per_sm as u64
+    }
+
+    /// Peak FP32 instruction rate, Gops/s (1 op per core-cycle; FMA
+    /// counting as 2 flops is a workload-side convention).
+    pub fn fp32_gips(&self) -> f64 {
+        self.cores() as f64 * self.clock_ghz
+    }
+
+    /// Counter-name generation exposed by this device (changed at Volta).
+    pub fn counter_set(&self) -> CounterSet {
+        match self.arch {
+            Arch::Turing => CounterSet::VoltaPlus,
+            _ => CounterSet::PreVolta,
+        }
+    }
+
+    pub fn gtx680() -> GpuSpec {
+        GpuSpec {
+            name: "GTX680",
+            arch: Arch::Kepler,
+            sm_count: 8,
+            cores_per_sm: 192,
+            clock_ghz: 1.058,
+            dram_bw: 192.0,
+            l2_bw: 512.0,
+            // Kepler's read-only data path (LDG/tex) was notoriously weak
+            tex_bw: 350.0,
+            shared_bw: 1300.0,
+            l2_size: 512 * 1024,
+            tex_size_per_sm: 48 * 1024,
+            regs_per_sm: 65_536,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 16,
+            shared_per_sm: 48 * 1024,
+            fp64_ratio: 1.0 / 24.0,
+            dual_issue: false,
+        }
+    }
+
+    pub fn gtx750() -> GpuSpec {
+        GpuSpec {
+            name: "GTX750",
+            arch: Arch::Maxwell,
+            sm_count: 4,
+            cores_per_sm: 128,
+            clock_ghz: 1.020,
+            dram_bw: 80.0,
+            l2_bw: 280.0,
+            tex_bw: 380.0,
+            shared_bw: 700.0,
+            l2_size: 2 * 1024 * 1024,
+            tex_size_per_sm: 24 * 1024,
+            regs_per_sm: 65_536,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 32,
+            shared_per_sm: 64 * 1024,
+            fp64_ratio: 1.0 / 32.0,
+            dual_issue: false,
+        }
+    }
+
+    pub fn gtx1070() -> GpuSpec {
+        GpuSpec {
+            name: "GTX1070",
+            arch: Arch::Pascal,
+            sm_count: 15,
+            cores_per_sm: 128,
+            clock_ghz: 1.506,
+            dram_bw: 256.0,
+            l2_bw: 1100.0,
+            tex_bw: 2200.0,
+            shared_bw: 3100.0,
+            l2_size: 2 * 1024 * 1024,
+            tex_size_per_sm: 48 * 1024,
+            regs_per_sm: 65_536,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 32,
+            shared_per_sm: 96 * 1024,
+            fp64_ratio: 1.0 / 32.0,
+            dual_issue: false,
+        }
+    }
+
+    pub fn rtx2080() -> GpuSpec {
+        GpuSpec {
+            name: "RTX2080",
+            arch: Arch::Turing,
+            sm_count: 46,
+            cores_per_sm: 64,
+            clock_ghz: 1.515,
+            dram_bw: 448.0,
+            l2_bw: 2100.0,
+            tex_bw: 4200.0,
+            shared_bw: 5800.0,
+            l2_size: 4 * 1024 * 1024,
+            tex_size_per_sm: 64 * 1024,
+            regs_per_sm: 65_536,
+            max_threads_per_sm: 1024,
+            max_blocks_per_sm: 16,
+            shared_per_sm: 64 * 1024,
+            fp64_ratio: 1.0 / 32.0,
+            dual_issue: true,
+        }
+    }
+
+    /// The paper's Table 3 testbed, in release order.
+    pub fn all() -> Vec<GpuSpec> {
+        vec![
+            Self::gtx680(),
+            Self::gtx750(),
+            Self::gtx1070(),
+            Self::rtx2080(),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<GpuSpec> {
+        let needle = name.to_ascii_lowercase().replace(['-', '_', ' '], "");
+        Self::all()
+            .into_iter()
+            .find(|g| g.name.to_ascii_lowercase() == needle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_devices_match_paper_table3() {
+        let all = GpuSpec::all();
+        assert_eq!(all.len(), 4);
+        assert_eq!(all[0].arch, Arch::Kepler);
+        assert_eq!(all[3].arch, Arch::Turing);
+    }
+
+    #[test]
+    fn lookup_by_name_is_forgiving() {
+        assert!(GpuSpec::by_name("gtx1070").is_some());
+        assert!(GpuSpec::by_name("GTX-1070").is_some());
+        assert!(GpuSpec::by_name("RTX 2080").is_some());
+        assert!(GpuSpec::by_name("titan").is_none());
+    }
+
+    #[test]
+    fn counter_set_flips_at_volta() {
+        assert_eq!(
+            GpuSpec::gtx1070().counter_set(),
+            crate::counters::CounterSet::PreVolta
+        );
+        assert_eq!(
+            GpuSpec::rtx2080().counter_set(),
+            crate::counters::CounterSet::VoltaPlus
+        );
+    }
+
+    #[test]
+    fn peak_rates_ordered_by_generation() {
+        // flop-to-byte ratio grows from 680 to 2080 — the property that
+        // flips compute/memory-bound classification across the testbed.
+        let r680 = GpuSpec::gtx680().fp32_gips() / GpuSpec::gtx680().dram_bw;
+        let r2080 =
+            GpuSpec::rtx2080().fp32_gips() / GpuSpec::rtx2080().dram_bw;
+        assert!(r2080 > r680);
+    }
+}

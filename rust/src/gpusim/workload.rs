@@ -1,0 +1,155 @@
+//! Workload descriptor: the device-independent characterization of what
+//! one kernel configuration does. Benchmarks (`crate::benchmarks`)
+//! produce these analytically from (tuning configuration, input).
+
+/// What a kernel launch does, independent of the device it runs on.
+///
+/// Instruction counts are *thread-level* totals (like the CUPTI
+/// `inst_fp_32` family); memory traffic is request-level bytes after
+/// coalescing but before caches.
+#[derive(Debug, Clone, Default)]
+pub struct Workload {
+    /// Total CUDA threads launched.
+    pub threads: f64,
+    /// Threads per block.
+    pub block_size: f64,
+    /// Registers per thread demanded by the configuration (drives
+    /// occupancy and — beyond 255 — spilling).
+    pub regs_per_thread: f64,
+    /// Shared memory per block, bytes.
+    pub shared_bytes_per_block: f64,
+
+    // --- thread-level instruction totals ---
+    pub fp32: f64,
+    pub fp64: f64,
+    pub int: f64,
+    pub misc: f64,
+    pub ldst: f64,
+    pub cont: f64,
+    pub bconv: f64,
+
+    // --- request-level global memory traffic, bytes ---
+    pub gread: f64,
+    pub gwrite: f64,
+    /// Fraction of global reads served through the texture/read-only
+    /// path (the rest bypass straight to L2).
+    pub tex_fraction: f64,
+    /// Read working set per SM relevant to the texture cache, bytes.
+    pub tex_footprint_per_sm: f64,
+    /// Read working set relevant to L2 (device-wide), bytes.
+    pub l2_footprint: f64,
+
+    // --- shared memory traffic, bytes ---
+    pub shared_load_bytes: f64,
+    pub shared_store_bytes: f64,
+
+    /// Local-memory (register spill) traffic, bytes. Usually derived
+    /// from `regs_per_thread` by [`Workload::apply_spilling`].
+    pub local_bytes: f64,
+
+    /// Branch-divergence factor in [0, 1): 0 = perfectly converged
+    /// warps; 0.5 ≈ half the lanes idle on average.
+    pub divergence: f64,
+}
+
+impl Workload {
+    /// Total thread-level instructions across all classes.
+    pub fn total_inst(&self) -> f64 {
+        self.fp32 + self.fp64 + self.int + self.misc + self.ldst + self.cont
+            + self.bconv
+    }
+
+    /// Number of thread blocks.
+    pub fn blocks(&self) -> f64 {
+        if self.block_size > 0.0 {
+            (self.threads / self.block_size).ceil()
+        } else {
+            0.0
+        }
+    }
+
+    /// Model register spilling against a per-thread register budget:
+    /// registers beyond `limit` become local-memory traffic (8 bytes of
+    /// ld+st per excess register per thread, a CUDA rule of thumb) and
+    /// extra ld/st instructions.
+    pub fn apply_spilling(&mut self, limit: f64) {
+        if self.regs_per_thread > limit {
+            let excess = self.regs_per_thread - limit;
+            // each spilled register is stored + reloaded ~once per use
+            self.local_bytes += 8.0 * excess * self.threads;
+            self.ldst += 2.0 * excess;
+            self.regs_per_thread = limit;
+        }
+    }
+
+    /// Scale every input-size-proportional quantity by `s` — used by
+    /// property tests to check the paper's Eq. 5 stability claim.
+    pub fn scaled(&self, s: f64) -> Workload {
+        let mut w = self.clone();
+        w.threads *= s;
+        w.fp32 *= s;
+        w.fp64 *= s;
+        w.int *= s;
+        w.misc *= s;
+        w.ldst *= s;
+        w.cont *= s;
+        w.bconv *= s;
+        w.gread *= s;
+        w.gwrite *= s;
+        w.shared_load_bytes *= s;
+        w.shared_store_bytes *= s;
+        w.local_bytes *= s;
+        w.l2_footprint *= s;
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spilling_only_beyond_limit() {
+        let mut w = Workload {
+            regs_per_thread: 64.0,
+            threads: 100.0,
+            ..Default::default()
+        };
+        w.apply_spilling(128.0);
+        assert_eq!(w.local_bytes, 0.0);
+        w.regs_per_thread = 160.0;
+        w.apply_spilling(128.0);
+        assert_eq!(w.local_bytes, 8.0 * 32.0 * 100.0);
+        assert_eq!(w.regs_per_thread, 128.0);
+        assert_eq!(w.ldst, 64.0);
+    }
+
+    #[test]
+    fn blocks_rounds_up() {
+        let w = Workload {
+            threads: 1000.0,
+            block_size: 256.0,
+            ..Default::default()
+        };
+        assert_eq!(w.blocks(), 4.0);
+    }
+
+    #[test]
+    fn scaled_preserves_structure() {
+        let w = Workload {
+            threads: 10.0,
+            fp32: 100.0,
+            gread: 4000.0,
+            divergence: 0.25,
+            regs_per_thread: 32.0,
+            ..Default::default()
+        };
+        let s = w.scaled(3.0);
+        assert_eq!(s.fp32, 300.0);
+        assert_eq!(s.gread, 12000.0);
+        // per-thread shape is invariant
+        assert_eq!(s.divergence, w.divergence);
+        assert_eq!(s.regs_per_thread, w.regs_per_thread);
+        assert!((s.fp32 / s.threads - w.fp32 / w.threads).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,145 @@
+//! Time-domain convergence aggregation (§4.6): the searcher's best
+//! kernel runtime as a function of elapsed tuning time, averaged over
+//! repetitions, with the paper's plotting convention — curves start at
+//! the time when *all* repetitions have at least one finished kernel.
+
+use crate::searcher::{Budget, CostModel, ReplayEnv, Searcher};
+use crate::tuning::RecordedSpace;
+use crate::util::stats::{mean, stddev};
+
+use super::par_map_seeds;
+
+/// One aggregated point of a convergence curve.
+#[derive(Debug, Clone)]
+pub struct ConvergencePoint {
+    pub t_s: f64,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+}
+
+/// Run `make(seed)` searchers `reps` times for `horizon_s` of simulated
+/// tuning time each, and aggregate best-so-far on a regular grid.
+pub fn aggregate_convergence<'a, F>(
+    rec: &RecordedSpace,
+    gpu: &crate::gpusim::GpuSpec,
+    cost: &CostModel,
+    reps: usize,
+    horizon_s: f64,
+    grid_points: usize,
+    seed_base: u64,
+    make: F,
+) -> Vec<ConvergencePoint>
+where
+    F: Fn(u64) -> Box<dyn Searcher + 'a> + Sync,
+{
+    let staircases: Vec<Vec<(f64, f64)>> = par_map_seeds(reps, &|seed| {
+        let mut env =
+            ReplayEnv::new(rec.clone(), gpu.clone(), cost.clone());
+        let mut s = make(seed_base.wrapping_add(seed));
+        let trace = s.run(&mut env, &Budget::seconds(horizon_s));
+        trace.convergence()
+    });
+
+    // the paper plots from the moment every run has one finished kernel
+    let t_start = staircases
+        .iter()
+        .filter_map(|st| st.first().map(|p| p.0))
+        .fold(0.0f64, f64::max);
+
+    let mut out = Vec::with_capacity(grid_points);
+    for gi in 0..grid_points {
+        let t = t_start
+            + (horizon_s - t_start) * (gi as f64 / (grid_points - 1) as f64);
+        let at_t: Vec<f64> = staircases
+            .iter()
+            .filter_map(|st| best_at(st, t))
+            .collect();
+        if at_t.is_empty() {
+            continue;
+        }
+        out.push(ConvergencePoint {
+            t_s: t,
+            mean_ms: mean(&at_t),
+            std_ms: stddev(&at_t),
+        });
+    }
+    out
+}
+
+/// Best runtime achieved by a staircase at or before time `t`.
+fn best_at(staircase: &[(f64, f64)], t: f64) -> Option<f64> {
+    let mut best = None;
+    for &(ct, v) in staircase {
+        if ct <= t {
+            best = Some(v);
+        } else {
+            break;
+        }
+    }
+    best
+}
+
+/// Render aggregated curves as CSV (series, t, mean, std).
+pub fn curves_csv(series: &[(&str, &[ConvergencePoint])]) -> String {
+    let mut out = String::from("series,t_s,mean_ms,std_ms\n");
+    for (name, pts) in series {
+        for p in pts.iter() {
+            out.push_str(&format!(
+                "{name},{:.3},{:.6},{:.6}\n",
+                p.t_s, p.mean_ms, p.std_ms
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{record_space, Benchmark, Coulomb};
+    use crate::gpusim::GpuSpec;
+    use crate::searcher::RandomSearcher;
+
+    #[test]
+    fn best_at_respects_time() {
+        let st = vec![(1.0, 10.0), (2.0, 5.0), (3.0, 4.0)];
+        assert_eq!(best_at(&st, 0.5), None);
+        assert_eq!(best_at(&st, 1.5), Some(10.0));
+        assert_eq!(best_at(&st, 10.0), Some(4.0));
+    }
+
+    #[test]
+    fn curves_monotone_nonincreasing() {
+        let gpu = GpuSpec::gtx1070();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        let pts = aggregate_convergence(
+            &rec,
+            &gpu,
+            &CostModel::default(),
+            20,
+            20.0,
+            15,
+            0,
+            |s| Box::new(RandomSearcher::new(s)),
+        );
+        assert!(pts.len() >= 5);
+        for w in pts.windows(2) {
+            assert!(
+                w[1].mean_ms <= w[0].mean_ms + 1e-9,
+                "mean best-so-far must not increase"
+            );
+        }
+    }
+
+    #[test]
+    fn csv_format() {
+        let pts = vec![ConvergencePoint {
+            t_s: 1.0,
+            mean_ms: 2.0,
+            std_ms: 0.5,
+        }];
+        let csv = curves_csv(&[("random", &pts)]);
+        assert!(csv.starts_with("series,t_s"));
+        assert!(csv.contains("random,1.000"));
+    }
+}

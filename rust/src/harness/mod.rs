@@ -1,0 +1,139 @@
+//! Experiment harness: regenerates every table and figure of the
+//! paper's evaluation section (§4) and writes markdown + CSV reports.
+//!
+//! | id     | paper artifact | scenario |
+//! |--------|----------------|----------|
+//! | table2 | Table 2 | tuning-space sizes |
+//! | table4 | Table 4 | random-search steps to 1.1× best |
+//! | table5 | Table 5 | proposed vs random, exact PCs, same GPU |
+//! | table6 | Table 6 | hardware portability (model GPU × tuning GPU) |
+//! | table7 | Table 7 | input portability (GEMM sizes) |
+//! | table8 | Table 8 | Starchart vs random |
+//! | table9 | Table 9 | Starchart@1070 vs proposed@1070, on RTX 2080 |
+//! | fig1   | Figure 1 | TP→PC stability across GPU/input |
+//! | fig3–8 | Figures 3–8 | time-domain convergence |
+//! | fig9–13| Figures 9–13 | vs Basin Hopping (time + iterations) |
+//! | ablation_* | — | design-choice ablations called out in DESIGN.md |
+
+mod convergence;
+mod figures;
+mod steps;
+mod tables;
+
+pub use convergence::{aggregate_convergence, ConvergencePoint};
+pub use steps::{avg_steps_to_well_performing, par_map_seeds};
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One regenerated paper artifact.
+pub struct Report {
+    pub id: &'static str,
+    pub title: String,
+    /// Markdown body (tables, notes, ASCII charts).
+    pub markdown: String,
+    /// Machine-readable companions: (file stem, CSV content).
+    pub csvs: Vec<(String, String)>,
+}
+
+impl Report {
+    pub fn write_to(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let md = format!("# {} — {}\n\n{}", self.id, self.title, self.markdown);
+        std::fs::write(dir.join(format!("{}.md", self.id)), md)
+            .with_context(|| format!("writing {}", self.id))?;
+        for (stem, csv) in &self.csvs {
+            std::fs::write(dir.join(format!("{stem}.csv")), csv)?;
+        }
+        Ok(())
+    }
+}
+
+/// Experiment knobs shared by all drivers.
+#[derive(Debug, Clone)]
+pub struct ExperimentOpts {
+    /// Repetitions for step-count statistics (paper: 1000).
+    pub reps: usize,
+    /// Repetitions for time-domain statistics (paper: 100).
+    pub time_reps: usize,
+    /// RNG stream base.
+    pub seed: u64,
+}
+
+impl Default for ExperimentOpts {
+    fn default() -> Self {
+        ExperimentOpts {
+            reps: 1000,
+            time_reps: 100,
+            seed: 0,
+        }
+    }
+}
+
+/// All experiment ids, in the paper's order.
+pub const ALL_EXPERIMENTS: [&str; 18] = [
+    "table2", "table4", "table5", "table6", "table7", "table8", "table9",
+    "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9_13",
+    "ablation_n", "ablation_model", "ablation_local",
+];
+
+/// Run one experiment by id.
+pub fn run_experiment(id: &str, opts: &ExperimentOpts) -> Result<Report> {
+    Ok(match id {
+        "table2" => tables::table2(),
+        "table4" => tables::table4(opts),
+        "table5" => tables::table5(opts),
+        "table6" => tables::table6(opts),
+        "table7" => tables::table7(opts),
+        "table8" => tables::table8(opts),
+        "table9" => tables::table9(opts),
+        "fig1" => figures::fig1(),
+        "fig3" => figures::fig_convergence("fig3", "gemm", opts),
+        "fig4" => figures::fig_convergence("fig4", "convolution", opts),
+        "fig5" => figures::fig5_transpose_check(opts),
+        "fig6" => figures::fig6_nbody_sizes(opts),
+        "fig7" => figures::fig_convergence("fig7", "coulomb", opts),
+        "fig8" => figures::fig8_gemm_full(opts),
+        "fig9_13" => figures::fig9_13_basin_hopping(opts),
+        "ablation_n" => tables::ablation_profile_interval(opts),
+        "ablation_model" => tables::ablation_model_kind(opts),
+        "ablation_local" => tables::ablation_local_search(opts),
+        other => bail!(
+            "unknown experiment {other:?}; known: {}",
+            ALL_EXPERIMENTS.join(", ")
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_experiment_is_an_error() {
+        assert!(run_experiment("table99", &ExperimentOpts::default()).is_err());
+    }
+
+    #[test]
+    fn table2_runs_instantly() {
+        let r = run_experiment("table2", &ExperimentOpts::default()).unwrap();
+        assert_eq!(r.id, "table2");
+        assert!(r.markdown.contains("coulomb"));
+    }
+
+    #[test]
+    fn report_writes_files() {
+        let r = Report {
+            id: "table2",
+            title: "t".into(),
+            markdown: "body".into(),
+            csvs: vec![("table2_data".into(), "a,b\n1,2\n".into())],
+        };
+        let dir = std::env::temp_dir().join("pcat_test_report");
+        r.write_to(&dir).unwrap();
+        assert!(dir.join("table2.md").exists());
+        assert!(dir.join("table2_data.csv").exists());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

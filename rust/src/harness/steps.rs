@@ -1,0 +1,124 @@
+//! Step-count statistics: the "number of empirical tests to reach a
+//! well-performing configuration" metric (§4.1), averaged over many
+//! repetitions of the stochastic search — parallelized across seeds.
+
+use crate::searcher::{Budget, CostModel, ReplayEnv, Searcher};
+use crate::tuning::RecordedSpace;
+use crate::util::stats::mean;
+
+/// Map `f` over seeds `0..reps` on all available cores, preserving
+/// order. (rayon is unavailable offline; scoped threads suffice — each
+/// seed is an independent search.)
+pub fn par_map_seeds<T, F>(reps: usize, f: &F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(u64) -> T + Sync,
+{
+    if reps == 0 {
+        return Vec::new();
+    }
+    let nthreads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(reps);
+    let chunk = reps.div_ceil(nthreads);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..nthreads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(reps);
+            if lo >= hi {
+                break;
+            }
+            handles.push(
+                scope.spawn(move || {
+                    (lo..hi).map(|i| f(i as u64)).collect::<Vec<T>>()
+                }),
+            );
+        }
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("seed worker panicked"))
+            .collect()
+    })
+}
+
+/// Average number of empirical tests a searcher needs to find a
+/// configuration within 1.1× of the exhaustive best (§4.1), over `reps`
+/// independent runs.
+///
+/// `make` builds a fresh searcher for a seed; the searcher runs until it
+/// hits the threshold (model-build steps excluded from the stop check
+/// but included in the count, matching Table 8's accounting).
+pub fn avg_steps_to_well_performing<'a, F>(
+    rec: &RecordedSpace,
+    gpu: &crate::gpusim::GpuSpec,
+    reps: usize,
+    seed_base: u64,
+    make: F,
+) -> f64
+where
+    F: Fn(u64) -> Box<dyn Searcher + 'a> + Sync,
+{
+    let thr = rec.best_time() * 1.1;
+    let counts = par_map_seeds(reps, &|seed| {
+        let mut env =
+            ReplayEnv::new(rec.clone(), gpu.clone(), CostModel::default());
+        let mut searcher = make(seed_base.wrapping_add(seed));
+        let trace = env_run(&mut *searcher, &mut env, thr);
+        trace as f64
+    });
+    mean(&counts)
+}
+
+fn env_run(
+    searcher: &mut dyn Searcher,
+    env: &mut ReplayEnv,
+    thr: f64,
+) -> usize {
+    let trace = searcher.run(env, &Budget::until(thr, usize::MAX));
+    trace
+        .tests_to_threshold(thr)
+        .unwrap_or(trace.len().max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{record_space, Benchmark, Coulomb};
+    use crate::gpusim::GpuSpec;
+    use crate::searcher::RandomSearcher;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let out = par_map_seeds(100, &|s| s * 2);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u64 * 2);
+        }
+    }
+
+    #[test]
+    fn par_map_zero_reps() {
+        let out: Vec<u64> = par_map_seeds(0, &|s| s);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn random_steps_match_analytic_expectation() {
+        // with w well-performing configs out of n, random-without-
+        // replacement needs (n+1)/(w+1) tests in expectation
+        let gpu = GpuSpec::gtx1070();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        let n = rec.space.len() as f64;
+        let w = rec.well_performing_count(1.1) as f64;
+        let expect = (n + 1.0) / (w + 1.0);
+        let got = avg_steps_to_well_performing(&rec, &gpu, 400, 0, |s| {
+            Box::new(RandomSearcher::new(s))
+        });
+        assert!(
+            (got - expect).abs() < expect * 0.25,
+            "got {got}, analytic {expect}"
+        );
+    }
+}

@@ -1,0 +1,647 @@
+//! Table reproductions (paper §4.3–§4.8) plus two design-choice
+//! ablations called out in DESIGN.md.
+
+use crate::benchmarks::{self, record_space, Benchmark};
+use crate::gpusim::GpuSpec;
+use crate::model::{
+    dataset_from_recorded, DecisionTreeModel, OracleModel, PrecomputedModel,
+    RegressionModel, TpPcModel,
+};
+use crate::searcher::{
+    Budget, CostModel, EvalEnv, ProfileSearcher, RandomSearcher, ReplayEnv,
+    Searcher, Starchart,
+};
+use crate::tuning::RecordedSpace;
+use crate::util::rng::Rng;
+use crate::util::stats::mean;
+use crate::util::table::{markdown, speedup};
+
+use super::steps::{avg_steps_to_well_performing, par_map_seeds};
+use super::{ExperimentOpts, Report};
+
+/// The five benchmarks of the step-count experiments, in Table 4 order.
+fn eval_benchmarks() -> Vec<Box<dyn Benchmark>> {
+    benchmarks::evaluation_set()
+}
+
+/// Paper's Table 4 values (rows in eval order, columns in GPU order),
+/// cited for side-by-side comparison in the generated reports.
+const PAPER_TABLE4: [[f64; 4]; 5] = [
+    [19.0, 21.0, 34.0, 16.0],
+    [192.0, 24.0, 10.0, 47.0],
+    [146.0, 248.0, 450.0, 260.0],
+    [27.0, 10.0, 37.0, 39.0],
+    [327.0, 702.0, 349.0, 568.0],
+];
+
+/// Paper's Table 5 improvement factors.
+const PAPER_TABLE5: [[f64; 4]; 5] = [
+    [3.8, 5.25, 5.67, 3.2],
+    [3.62, 2.0, 1.43, 1.12],
+    [5.41, 7.75, 8.88, 10.83],
+    [1.93, 2.5, 2.85, 3.25],
+    [8.18, 10.32, 15.86, 14.56],
+];
+
+fn inst_reaction_for(b: &dyn Benchmark) -> f64 {
+    if b.instruction_bound() {
+        crate::expert::INST_BOUND_REACTION
+    } else {
+        crate::expert::DEFAULT_INST_REACTION
+    }
+}
+
+fn random_avg(rec: &RecordedSpace, gpu: &GpuSpec, opts: &ExperimentOpts) -> f64 {
+    avg_steps_to_well_performing(rec, gpu, opts.reps, opts.seed, |s| {
+        Box::new(RandomSearcher::new(s))
+    })
+}
+
+fn profile_avg(
+    rec: &RecordedSpace,
+    gpu: &GpuSpec,
+    model: &(dyn TpPcModel + Sync),
+    inst_reaction: f64,
+    opts: &ExperimentOpts,
+) -> f64 {
+    avg_steps_to_well_performing(rec, gpu, opts.reps, opts.seed ^ 0x9e37, |s| {
+        Box::new(ProfileSearcher::new(model, inst_reaction, s))
+    })
+}
+
+/// Train a decision-tree TP→PC model on a recorded space and precompute
+/// its predictions over `target` (the space being tuned).
+fn trained_model(
+    model_rec: &RecordedSpace,
+    target: &RecordedSpace,
+    seed: u64,
+) -> PrecomputedModel {
+    let mut rng = Rng::new(seed);
+    let ds = dataset_from_recorded(model_rec, 1.0, &mut rng);
+    let dtm = DecisionTreeModel::train(&ds, &model_rec.gpu, &mut rng);
+    PrecomputedModel::over(&target.space, &dtm)
+}
+
+// ---------------------------------------------------------------------
+// Table 2 — benchmark spaces
+// ---------------------------------------------------------------------
+
+pub fn table2() -> Report {
+    let paper: &[(&str, usize, usize)] = &[
+        ("convolution", 10, 3_928),
+        ("coulomb", 7, 210),
+        ("gemm", 10, 5_788),
+        ("gemm-full", 14, 205_216),
+        ("transpose", 8, 1_784),
+        ("nbody", 7, 3_134),
+    ];
+    let mut rows = Vec::new();
+    for (name, paper_dims, paper_cfgs) in paper {
+        let b = benchmarks::by_name(name).unwrap();
+        let s = b.space();
+        rows.push(vec![
+            name.to_string(),
+            format!("{} (paper {})", s.dims(), paper_dims),
+            format!("{} (paper {})", s.len(), paper_cfgs),
+        ]);
+    }
+    Report {
+        id: "table2",
+        title: "Benchmarks: dimensions and tuning-space sizes".into(),
+        markdown: markdown(&["benchmark", "dimensions", "configurations"], &rows),
+        csvs: vec![],
+    }
+}
+
+// ---------------------------------------------------------------------
+// Table 4 — random search baseline
+// ---------------------------------------------------------------------
+
+pub fn table4(opts: &ExperimentOpts) -> Report {
+    let gpus = GpuSpec::all();
+    let mut rows = Vec::new();
+    let mut csv = String::from("benchmark,gpu,steps,paper\n");
+    for (bi, b) in eval_benchmarks().iter().enumerate() {
+        let mut row = vec![b.name().to_string()];
+        for (gi, gpu) in gpus.iter().enumerate() {
+            let rec = record_space(b.as_ref(), gpu, &b.default_input());
+            let steps = random_avg(&rec, gpu, opts);
+            row.push(format!(
+                "{:.0} (paper {:.0})",
+                steps, PAPER_TABLE4[bi][gi]
+            ));
+            csv.push_str(&format!(
+                "{},{},{:.2},{}\n",
+                b.name(),
+                gpu.name,
+                steps,
+                PAPER_TABLE4[bi][gi]
+            ));
+        }
+        rows.push(row);
+    }
+    Report {
+        id: "table4",
+        title: format!(
+            "Average empirical tests for random search (reps={})",
+            opts.reps
+        ),
+        markdown: markdown(
+            &["benchmark", "GTX680", "GTX750", "GTX1070", "RTX2080"],
+            &rows,
+        ),
+        csvs: vec![("table4_data".into(), csv)],
+    }
+}
+
+// ---------------------------------------------------------------------
+// Table 5 — proposed searcher with exact PCs (oracle), same GPU
+// ---------------------------------------------------------------------
+
+pub fn table5(opts: &ExperimentOpts) -> Report {
+    let gpus = GpuSpec::all();
+    let mut rows = Vec::new();
+    let mut csv = String::from("benchmark,gpu,random,profile,improvement,paper\n");
+    for (bi, b) in eval_benchmarks().iter().enumerate() {
+        let mut row = vec![b.name().to_string()];
+        for (gi, gpu) in gpus.iter().enumerate() {
+            let rec = record_space(b.as_ref(), gpu, &b.default_input());
+            let rand = random_avg(&rec, gpu, opts);
+            let oracle = OracleModel::new(&rec);
+            let prof = profile_avg(
+                &rec,
+                gpu,
+                &oracle,
+                inst_reaction_for(b.as_ref()),
+                opts,
+            );
+            let imp = rand / prof.max(1.0);
+            row.push(format!(
+                "{} (paper {})",
+                speedup(imp),
+                speedup(PAPER_TABLE5[bi][gi])
+            ));
+            csv.push_str(&format!(
+                "{},{},{:.2},{:.2},{:.3},{}\n",
+                b.name(),
+                gpu.name,
+                rand,
+                prof,
+                imp,
+                PAPER_TABLE5[bi][gi]
+            ));
+        }
+        rows.push(row);
+    }
+    Report {
+        id: "table5",
+        title: format!(
+            "Improvement of the profile searcher over random (exact PCs, \
+             same architecture; reps={})",
+            opts.reps
+        ),
+        markdown: markdown(
+            &["benchmark", "GTX680", "GTX750", "GTX1070", "RTX2080"],
+            &rows,
+        ),
+        csvs: vec![("table5_data".into(), csv)],
+    }
+}
+
+// ---------------------------------------------------------------------
+// Table 6 — hardware portability of the model
+// ---------------------------------------------------------------------
+
+pub fn table6(opts: &ExperimentOpts) -> Report {
+    let gpus = GpuSpec::all();
+    let mut md = String::new();
+    let mut csv =
+        String::from("benchmark,tune_gpu,model_gpu,random,profile,improvement\n");
+    for b in eval_benchmarks() {
+        // records per GPU (model side and tuning side use the same)
+        let recs: Vec<RecordedSpace> = gpus
+            .iter()
+            .map(|g| record_space(b.as_ref(), g, &b.default_input()))
+            .collect();
+        // decision-tree models trained per model-GPU; predictions are
+        // precomputed over the benchmark's (shared) space
+        let models: Vec<PrecomputedModel> = gpus
+            .iter()
+            .enumerate()
+            .map(|(i, _)| trained_model(&recs[i], &recs[i], opts.seed + i as u64))
+            .collect();
+
+        let mut rows = Vec::new();
+        for (ti, tune_gpu) in gpus.iter().enumerate() {
+            let rand = random_avg(&recs[ti], tune_gpu, opts);
+            let mut row = vec![tune_gpu.name.to_string()];
+            for (mi, _model_gpu) in gpus.iter().enumerate() {
+                let prof = profile_avg(
+                    &recs[ti],
+                    tune_gpu,
+                    &models[mi],
+                    inst_reaction_for(b.as_ref()),
+                    opts,
+                );
+                let imp = rand / prof.max(1.0);
+                row.push(speedup(imp));
+                csv.push_str(&format!(
+                    "{},{},{},{:.2},{:.2},{:.3}\n",
+                    b.name(),
+                    tune_gpu.name,
+                    gpus[mi].name,
+                    rand,
+                    prof,
+                    imp
+                ));
+            }
+            rows.push(row);
+        }
+        md.push_str(&format!("\n## {} benchmark\n\n", b.name()));
+        md.push_str(
+            "Rows: GPU used for tuning. Columns: GPU the model was \
+             trained on.\n\n",
+        );
+        md.push_str(&markdown(
+            &["tuned on ↓", "GTX680", "GTX750", "GTX1070", "RTX2080"],
+            &rows,
+        ));
+    }
+    Report {
+        id: "table6",
+        title: format!(
+            "Model portability across hardware (decision-tree model; reps={})",
+            opts.reps
+        ),
+        markdown: md,
+        csvs: vec![("table6_data".into(), csv)],
+    }
+}
+
+// ---------------------------------------------------------------------
+// Table 7 — input portability (GEMM, GTX 1070)
+// ---------------------------------------------------------------------
+
+pub fn table7(opts: &ExperimentOpts) -> Report {
+    let gpu = GpuSpec::gtx1070();
+    let gemm = benchmarks::by_name("gemm").unwrap();
+    let inputs = gemm.inputs();
+    let recs: Vec<RecordedSpace> = inputs
+        .iter()
+        .map(|i| record_space(gemm.as_ref(), &gpu, i))
+        .collect();
+    let models: Vec<PrecomputedModel> = (0..inputs.len())
+        .map(|i| trained_model(&recs[i], &recs[i], opts.seed + 31 + i as u64))
+        .collect();
+
+    let mut rows = Vec::new();
+    let mut csv =
+        String::from("tune_input,model_input,random,profile,improvement\n");
+    for (ti, input) in inputs.iter().enumerate() {
+        let rand = random_avg(&recs[ti], &gpu, opts);
+        let mut row = vec![input.name.clone()];
+        for (mi, _src) in inputs.iter().enumerate() {
+            let prof = profile_avg(&recs[ti], &gpu, &models[mi], 0.7, opts);
+            let imp = rand / prof.max(1.0);
+            row.push(speedup(imp));
+            csv.push_str(&format!(
+                "{},{},{:.2},{:.2},{:.3}\n",
+                input.name, inputs[mi].name, rand, prof, imp
+            ));
+        }
+        rows.push(row);
+    }
+    let header: Vec<String> = std::iter::once("tuned input ↓".to_string())
+        .chain(inputs.iter().map(|i| i.name.clone()))
+        .collect();
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    Report {
+        id: "table7",
+        title: format!(
+            "Model portability across GEMM inputs on GTX 1070 (reps={})",
+            opts.reps
+        ),
+        markdown: markdown(&header_refs, &rows),
+        csvs: vec![("table7_data".into(), csv)],
+    }
+}
+
+// ---------------------------------------------------------------------
+// Table 8 — Starchart vs random
+// ---------------------------------------------------------------------
+
+pub fn table8(opts: &ExperimentOpts) -> Report {
+    let mut md = String::new();
+    let mut csv = String::from(
+        "gpu,benchmark,model_build,tuning,random\n",
+    );
+    for gpu in [GpuSpec::gtx1070(), GpuSpec::rtx2080()] {
+        let mut rows = Vec::new();
+        for b in eval_benchmarks() {
+            let rec = record_space(b.as_ref(), &gpu, &b.default_input());
+            let thr = rec.best_time() * 1.1;
+            let reps = opts.reps.min(200); // Starchart sweeps most of small spaces
+            let stats: Vec<(f64, f64)> = par_map_seeds(reps, &|seed| {
+                let mut env = ReplayEnv::new(
+                    rec.clone(),
+                    gpu.clone(),
+                    CostModel::default(),
+                );
+                let mut s = Starchart::new(opts.seed ^ (seed * 7 + 1));
+                let trace = s.run(&mut env, &Budget::until(thr, usize::MAX));
+                let build = trace.build_steps() as f64;
+                let total = trace
+                    .tests_to_threshold(thr)
+                    .unwrap_or(trace.len()) as f64;
+                (build, (total - build).max(0.0))
+            });
+            let build = mean(&stats.iter().map(|s| s.0).collect::<Vec<_>>());
+            let tune = mean(&stats.iter().map(|s| s.1).collect::<Vec<_>>());
+            let rand = random_avg(&rec, &gpu, opts);
+            rows.push(vec![
+                b.name().to_string(),
+                format!("{build:.0}"),
+                format!("{tune:.0}"),
+                format!("{rand:.0}"),
+            ]);
+            csv.push_str(&format!(
+                "{},{},{:.2},{:.2},{:.2}\n",
+                gpu.name,
+                b.name(),
+                build,
+                tune,
+                rand
+            ));
+        }
+        md.push_str(&format!("\n## {}\n\n", gpu.name));
+        md.push_str(&markdown(
+            &["benchmark", "model build", "tuning", "random"],
+            &rows,
+        ));
+    }
+    Report {
+        id: "table8",
+        title: "Starchart (regression trees) vs random search".into(),
+        markdown: md,
+        csvs: vec![("table8_data".into(), csv)],
+    }
+}
+
+// ---------------------------------------------------------------------
+// Table 9 — Starchart@1070 vs proposed@1070, tuning RTX 2080
+// ---------------------------------------------------------------------
+
+pub fn table9(opts: &ExperimentOpts) -> Report {
+    let gpu_model = GpuSpec::gtx1070();
+    let gpu_tune = GpuSpec::rtx2080();
+    let mut rows = Vec::new();
+    let mut csv = String::from("benchmark,starchart_1070,proposed_1070\n");
+    for b in eval_benchmarks() {
+        let rec_model =
+            record_space(b.as_ref(), &gpu_model, &b.default_input());
+        let rec_tune = record_space(b.as_ref(), &gpu_tune, &b.default_input());
+        let thr = rec_tune.best_time() * 1.1;
+        let reps = opts.reps.min(200);
+
+        // Starchart: train the runtime tree on 1070 data, reuse on 2080.
+        let sc_steps: Vec<f64> = par_map_seeds(reps, &|seed| {
+            let mut env1 = ReplayEnv::new(
+                rec_model.clone(),
+                gpu_model.clone(),
+                CostModel::default(),
+            );
+            let mut s1 = Starchart::new(opts.seed ^ (seed * 13 + 5));
+            let thr1 = rec_model.best_time() * 1.1;
+            s1.run(&mut env1, &Budget::until(thr1, usize::MAX));
+            let tree = s1.trained_tree.expect("tree trained");
+
+            let mut env2 = ReplayEnv::new(
+                rec_tune.clone(),
+                gpu_tune.clone(),
+                CostModel::default(),
+            );
+            let mut s2 =
+                Starchart::with_pretrained(opts.seed ^ (seed * 17 + 3), tree);
+            let trace = s2.run(&mut env2, &Budget::until(thr, usize::MAX));
+            trace.tests_to_threshold(thr).unwrap_or(trace.len()) as f64
+        });
+
+        // Proposed: decision-tree TP→PC model from 1070, tuning 2080.
+        let model = trained_model(&rec_model, &rec_tune, opts.seed + 77);
+        let prof = profile_avg(
+            &rec_tune,
+            &gpu_tune,
+            &model,
+            inst_reaction_for(b.as_ref()),
+            opts,
+        );
+
+        let sc = mean(&sc_steps);
+        rows.push(vec![
+            b.name().to_string(),
+            format!("{sc:.0}"),
+            format!("{prof:.0}"),
+        ]);
+        csv.push_str(&format!("{},{:.2},{:.2}\n", b.name(), sc, prof));
+    }
+    Report {
+        id: "table9",
+        title: "Models trained on GTX 1070, tuning RTX 2080: Starchart vs \
+                proposed searcher (empirical tuning steps)"
+            .into(),
+        markdown: markdown(
+            &["benchmark", "SC@1070", "proposed@1070"],
+            &rows,
+        ),
+        csvs: vec![("table9_data".into(), csv)],
+    }
+}
+
+// ---------------------------------------------------------------------
+// Ablations (DESIGN.md §5): the paper's design choices
+// ---------------------------------------------------------------------
+
+/// Ablation: the profiling interval `n` (Algorithm 1's unprofiled steps
+/// per round; paper default 5) trades profiling overhead against
+/// reaction latency.
+pub fn ablation_profile_interval(opts: &ExperimentOpts) -> Report {
+    let gpu = GpuSpec::gtx1070();
+    let gemm = benchmarks::by_name("gemm").unwrap();
+    let rec = record_space(gemm.as_ref(), &gpu, &gemm.default_input());
+    let oracle = OracleModel::new(&rec);
+    let thr = rec.best_time() * 1.1;
+
+    let mut rows = Vec::new();
+    let mut csv = String::from("n,steps,cost_s\n");
+    for n in [1usize, 3, 5, 10, 20] {
+        let reps = opts.reps.min(300);
+        let stats: Vec<(f64, f64)> = par_map_seeds(reps, &|seed| {
+            let mut env = ReplayEnv::new(
+                rec.clone(),
+                gpu.clone(),
+                CostModel::default(),
+            );
+            let mut s = ProfileSearcher::new(&oracle, 0.7, seed);
+            s.n_unprofiled = n;
+            let trace = s.run(&mut env, &Budget::until(thr, usize::MAX));
+            let steps =
+                trace.tests_to_threshold(thr).unwrap_or(trace.len());
+            let cost = trace
+                .cost_to_threshold(thr)
+                .unwrap_or(env.cost_so_far());
+            (steps as f64, cost)
+        });
+        let steps = mean(&stats.iter().map(|s| s.0).collect::<Vec<_>>());
+        let cost = mean(&stats.iter().map(|s| s.1).collect::<Vec<_>>());
+        rows.push(vec![
+            n.to_string(),
+            format!("{steps:.1}"),
+            format!("{cost:.1}"),
+        ]);
+        csv.push_str(&format!("{n},{steps:.3},{cost:.3}\n"));
+    }
+    Report {
+        id: "ablation_n",
+        title: "Ablation: unprofiled steps per profiling round (GEMM, \
+                GTX 1070, oracle PCs)"
+            .into(),
+        markdown: markdown(&["n", "steps to 1.1×", "cost (s)"], &rows),
+        csvs: vec![("ablation_n_data".into(), csv)],
+    }
+}
+
+/// Ablation: global scoring vs the §3.9.1 neighbourhood-restricted
+/// (local) variant, which also bounds the per-round scoring cost on
+/// huge spaces (footnote 5).
+pub fn ablation_local_search(opts: &ExperimentOpts) -> Report {
+    let gpu = GpuSpec::rtx2080();
+    let mut rows = Vec::new();
+    let mut csv = String::from("benchmark,variant,steps\n");
+    for name in ["coulomb", "gemm"] {
+        let b = benchmarks::by_name(name).unwrap();
+        let rec = record_space(b.as_ref(), &gpu, &b.default_input());
+        let oracle = OracleModel::new(&rec);
+        let ir = inst_reaction_for(b.as_ref());
+        let thr = rec.best_time() * 1.1;
+        let reps = opts.reps.min(300);
+        for (label, radius) in
+            [("global", None), ("local r=1", Some(1)), ("local r=2", Some(2))]
+        {
+            let steps: Vec<f64> = par_map_seeds(reps, &|seed| {
+                let mut env = ReplayEnv::new(
+                    rec.clone(),
+                    gpu.clone(),
+                    CostModel::default(),
+                );
+                let mut s = ProfileSearcher::new(&oracle, ir, seed);
+                if let Some(r) = radius {
+                    s = s.with_neighbourhood(r);
+                }
+                let trace = s.run(&mut env, &Budget::until(thr, usize::MAX));
+                trace.tests_to_threshold(thr).unwrap_or(trace.len()) as f64
+            });
+            let avg = mean(&steps);
+            rows.push(vec![
+                name.to_string(),
+                label.to_string(),
+                format!("{avg:.1}"),
+            ]);
+            csv.push_str(&format!("{name},{label},{avg:.3}\n"));
+        }
+    }
+    Report {
+        id: "ablation_local",
+        title: "Ablation: global vs neighbourhood-restricted scoring \
+                (§3.9.1; RTX 2080, oracle PCs)"
+            .into(),
+        markdown: markdown(&["benchmark", "variant", "steps to 1.1×"], &rows),
+        csvs: vec![("ablation_local_data".into(), csv)],
+    }
+}
+
+/// Ablation: model family (oracle vs decision tree vs regression).
+pub fn ablation_model_kind(opts: &ExperimentOpts) -> Report {
+    let gpu = GpuSpec::gtx1070();
+    let mut rows = Vec::new();
+    let mut csv = String::from("benchmark,model,steps,improvement\n");
+    for name in ["coulomb", "gemm"] {
+        let b = benchmarks::by_name(name).unwrap();
+        let rec = record_space(b.as_ref(), &gpu, &b.default_input());
+        let rand = random_avg(&rec, &gpu, opts);
+        let ir = inst_reaction_for(b.as_ref());
+
+        let oracle = OracleModel::new(&rec);
+        let mut rng = Rng::new(opts.seed + 5);
+        let ds = dataset_from_recorded(&rec, 1.0, &mut rng);
+        let dtm = DecisionTreeModel::train(&ds, gpu.name, &mut rng);
+        let dtm_pre = PrecomputedModel::over(&rec.space, &dtm);
+        let reg = RegressionModel::train(&rec.space, &ds, gpu.name, &mut rng);
+        let reg_pre = PrecomputedModel::over(&rec.space, &reg);
+
+        let entries: Vec<(&str, &(dyn TpPcModel + Sync))> = vec![
+            ("oracle", &oracle),
+            ("decision_tree", &dtm_pre),
+            ("regression", &reg_pre),
+        ];
+        for (label, model) in entries {
+            let prof = profile_avg(&rec, &gpu, model, ir, opts);
+            let imp = rand / prof.max(1.0);
+            rows.push(vec![
+                name.to_string(),
+                label.to_string(),
+                format!("{prof:.1}"),
+                speedup(imp),
+            ]);
+            csv.push_str(&format!(
+                "{name},{label},{prof:.3},{imp:.3}\n"
+            ));
+        }
+    }
+    Report {
+        id: "ablation_model",
+        title: "Ablation: TP→PC model family (GTX 1070, same-GPU model)"
+            .into(),
+        markdown: markdown(
+            &["benchmark", "model", "steps to 1.1×", "improvement"],
+            &rows,
+        ),
+        csvs: vec![("ablation_model_data".into(), csv)],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ExperimentOpts {
+        ExperimentOpts {
+            reps: 12,
+            time_reps: 5,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn table4_contains_all_cells() {
+        let r = table4(&tiny());
+        assert_eq!(r.markdown.matches("paper").count(), 20);
+        assert!(r.csvs[0].1.lines().count() > 20);
+    }
+
+    #[test]
+    fn table5_reports_improvements() {
+        let r = table5(&ExperimentOpts {
+            reps: 10,
+            ..tiny()
+        });
+        assert!(r.markdown.contains("×"));
+        // csv has 20 data rows
+        assert_eq!(r.csvs[0].1.lines().count(), 21);
+    }
+
+    #[test]
+    fn table7_square_matrix() {
+        let r = table7(&tiny());
+        assert_eq!(r.csvs[0].1.lines().count(), 17);
+    }
+}

@@ -1,0 +1,52 @@
+//! # pcat — Performance-Counter-Aided Tuning
+//!
+//! A reproduction of *"Using hardware performance counters to speed up
+//! autotuning convergence on GPUs"* (Filipovič, Hozzová, Nezarat, Oľha,
+//! Petrovič — 2021): a KTT-like generic GPU-kernel autotuning framework
+//! whose tuning-space searcher is biased by hardware performance counters.
+//!
+//! ## Layout (three-layer rust + JAX + Pallas stack)
+//!
+//! * [`counters`] — the paper's Table 1: the counter taxonomy
+//!   (`PC_ops` vs `PC_stress`), old (pre-Volta) and new (Volta+) names.
+//! * [`gpusim`] — the hardware substrate the paper had and we do not: an
+//!   analytic GPU performance-counter simulator with device specs
+//!   mirroring the paper's four GPUs (see DESIGN.md §2 substitutions).
+//! * [`tuning`] — tuning parameters, constraints, space enumeration and
+//!   recorded (exhaustively explored) spaces — the paper's own replay
+//!   methodology (§4.1).
+//! * [`benchmarks`] — the paper's six tuning spaces (Coulomb 3D, Matrix
+//!   transposition, GEMM, GEMM-full, n-body, Convolution) as analytic
+//!   workload models over the simulator.
+//! * [`model`] — ML models of the TP→PC_ops relation (§3.4): regression
+//!   decision trees and least-squares quadratic regression.
+//! * [`expert`] — the bottleneck-analysis + ΔPC expert system (§3.5,
+//!   Eqs. 6–15).
+//! * [`searcher`] — the profile-based searcher (Algorithm 1, Eqs. 16–17)
+//!   and the baselines: random, Basin Hopping (Kernel Tuner) and
+//!   Starchart regression-tree search.
+//! * [`coordinator`] — the KTT-like public tuner API (L3).
+//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts:
+//!   the *real* empirical-measurement path (L1/L2 product).
+//! * [`harness`] — experiment drivers regenerating every table and
+//!   figure of the paper's evaluation section.
+//!
+//! Python runs only at build time (`make artifacts`); the tuning loop is
+//! pure rust.
+
+pub mod benchmarks;
+pub mod coordinator;
+pub mod counters;
+pub mod expert;
+pub mod gpusim;
+pub mod harness;
+pub mod model;
+pub mod runtime;
+pub mod searcher;
+pub mod tuning;
+pub mod util;
+
+
+pub use counters::{Counter, CounterVec};
+pub use gpusim::GpuSpec;
+pub use tuning::{Config, Space};

@@ -1,0 +1,421 @@
+//! pcat CLI — the KTT-like launcher.
+//!
+//! ```text
+//! pcat list                                  # benchmarks, GPUs, experiments
+//! pcat record  --benchmark gemm --gpu gtx1070 [--input NAME] --out rec.json
+//! pcat train   --data rec.json --out model.json
+//! pcat tune    --benchmark gemm --gpu rtx2080 --searcher profile \
+//!              [--model model.json] [--budget 200] [--seed 1]
+//! pcat tune-real --benchmark gemm --artifacts artifacts [--searcher profile]
+//! pcat experiment <id|all> [--out results] [--reps N] [--time-reps N]
+//! ```
+//!
+//! (clap is unavailable in the offline build; flags are parsed by hand.)
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use pcat::benchmarks::{self, Benchmark};
+use pcat::coordinator::{SearcherChoice, Tuner};
+use pcat::gpusim::GpuSpec;
+use pcat::harness::{run_experiment, ExperimentOpts, ALL_EXPERIMENTS};
+use pcat::model::{
+    dataset_from_recorded, DecisionTreeModel, OracleModel, PrecomputedModel,
+    TpPcModel,
+};
+use pcat::runtime::{load_manifest, PjrtEnv};
+use pcat::searcher::{Budget, CostModel, EvalEnv};
+use pcat::tuning::RecordedSpace;
+use pcat::util::rng::Rng;
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Minimal flag parser: positionals + `--key value`.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut it = std::env::args().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = it
+                    .next_if(|n| !n.starts_with("--"))
+                    .unwrap_or_else(|| "true".to_string());
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn need(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing --{key}"))
+    }
+
+    fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+}
+
+fn bench_arg(args: &Args) -> Result<Box<dyn Benchmark>> {
+    let name = args.need("benchmark")?;
+    benchmarks::by_name(name)
+        .ok_or_else(|| anyhow!("unknown benchmark {name:?} (see `pcat list`)"))
+}
+
+fn gpu_arg(args: &Args) -> Result<GpuSpec> {
+    let name = args.get("gpu").unwrap_or("gtx1070");
+    GpuSpec::by_name(name)
+        .ok_or_else(|| anyhow!("unknown GPU {name:?} (see `pcat list`)"))
+}
+
+fn input_arg(args: &Args, bench: &dyn Benchmark) -> Result<benchmarks::Input> {
+    match args.get("input") {
+        None => Ok(bench.default_input()),
+        Some(name) => bench
+            .inputs()
+            .into_iter()
+            .find(|i| i.name == name)
+            .ok_or_else(|| anyhow!("unknown input {name:?} for this benchmark")),
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("list") => cmd_list(),
+        Some("record") => cmd_record(&args),
+        Some("train") => cmd_train(&args),
+        Some("tune") => cmd_tune(&args),
+        Some("tune-real") => cmd_tune_real(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("diag") => cmd_diag(&args),
+        _ => {
+            eprintln!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "pcat — performance-counter-aided autotuning (paper \
+reproduction)\n\ncommands:\n  list        benchmarks, GPUs, experiments\n  \
+record      exhaustively record a tuning space on a simulated GPU\n  train       \
+train a TP→PC decision-tree model from a recording\n  tune        search a \
+tuning space (replayed/simulated)\n  tune-real   search over really-executing \
+PJRT artifacts\n  experiment  regenerate a paper table/figure (or `all`)\n\n\
+run `pcat <command> --help-flags` is not needed: flags are shown in main.rs \
+docs and README.";
+
+fn cmd_list() -> Result<()> {
+    println!("benchmarks:");
+    for b in benchmarks::all() {
+        let s = b.space();
+        println!(
+            "  {:<12} {} params, {} configurations",
+            b.name(),
+            s.dims(),
+            s.len()
+        );
+    }
+    println!("\nGPUs (simulated, paper Table 3):");
+    for g in GpuSpec::all() {
+        println!(
+            "  {:<8} {:?}, {} SMs × {} cores, {} GB/s",
+            g.name, g.arch, g.sm_count, g.cores_per_sm, g.dram_bw
+        );
+    }
+    println!("\nexperiments: {}", ALL_EXPERIMENTS.join(" "));
+    Ok(())
+}
+
+fn cmd_record(args: &Args) -> Result<()> {
+    let bench = bench_arg(args)?;
+    let gpu = gpu_arg(args)?;
+    let input = input_arg(args, bench.as_ref())?;
+    let out = PathBuf::from(args.need("out")?);
+    let rec = benchmarks::record_space(bench.as_ref(), &gpu, &input);
+    rec.save(&out)?;
+    println!(
+        "recorded {} configs of {} on {} ({}) -> {}",
+        rec.space.len(),
+        bench.name(),
+        gpu.name,
+        input.name,
+        out.display()
+    );
+    println!("best runtime: {:.4} ms", rec.best_time());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let data = PathBuf::from(args.need("data")?);
+    let out = PathBuf::from(args.need("out")?);
+    let rec = RecordedSpace::load(&data)?;
+    let mut rng = Rng::new(args.num("seed", 0u64)?);
+    let ds = dataset_from_recorded(&rec, args.num("fraction", 1.0f64)?, &mut rng);
+    let model = DecisionTreeModel::train(&ds, &rec.gpu, &mut rng);
+    model.save(&out)?;
+    println!(
+        "trained decision-tree model on {} samples from {} -> {}",
+        ds.len(),
+        rec.gpu,
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let bench = bench_arg(args)?;
+    let gpu = gpu_arg(args)?;
+    let input = input_arg(args, bench.as_ref())?;
+    let budget = Budget::tests(args.num("budget", 200usize)?);
+    let seed = args.num("seed", 0u64)?;
+    let searcher = args.get("searcher").unwrap_or("profile");
+
+    let rec = benchmarks::record_space(bench.as_ref(), &gpu, &input);
+    let best = rec.best_time();
+    let ir = if bench.instruction_bound() { 0.5 } else { 0.7 };
+
+    // model: from --model file, or an oracle over the recorded space
+    let loaded: Option<DecisionTreeModel> = match args.get("model") {
+        Some(path) => Some(DecisionTreeModel::load(&PathBuf::from(path))?),
+        None => None,
+    };
+    let oracle;
+    let pre;
+    let model_ref: &dyn TpPcModel = match &loaded {
+        Some(m) => {
+            pre = PrecomputedModel::over(&rec.space, m);
+            &pre
+        }
+        None => {
+            oracle = OracleModel::new(&rec);
+            &oracle
+        }
+    };
+
+    let mut tuner = Tuner::replay(rec, gpu.clone(), CostModel::default())
+        .with_budget(budget)
+        .with_seed(seed);
+    let choice = match searcher {
+        "random" => SearcherChoice::Random,
+        "profile" => SearcherChoice::Profile {
+            model: model_ref,
+            inst_reaction: ir,
+        },
+        "basin-hopping" | "basin_hopping" => SearcherChoice::BasinHopping,
+        "starchart" => SearcherChoice::Starchart,
+        "annealing" => SearcherChoice::Annealing,
+        other => bail!("unknown searcher {other:?}"),
+    };
+    let result = tuner.run(choice);
+
+    println!(
+        "tuned {} on {} ({}) with {}",
+        bench.name(),
+        gpu.name,
+        input.name,
+        result.searcher
+    );
+    println!(
+        "  tests: {} ({} profiled), simulated tuning cost {:.1}s",
+        result.tests, result.profiled_tests, result.cost_s
+    );
+    println!(
+        "  best: {:.4} ms ({:.1}% over exhaustive best {:.4} ms)",
+        result.best_ms,
+        (result.best_ms / best - 1.0) * 100.0,
+        best
+    );
+    print!("  config:");
+    for (p, v) in
+        bench.space().params.iter().zip(&result.best_config.0)
+    {
+        print!(" {}={}", p.name, v);
+    }
+    println!();
+    Ok(())
+}
+
+fn cmd_tune_real(args: &Args) -> Result<()> {
+    let bench_name = args.need("benchmark")?;
+    let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let entries: Vec<_> = load_manifest(&dir)
+        .context("artifacts not built? run `make artifacts`")?
+        .into_iter()
+        .filter(|e| e.benchmark == bench_name)
+        .collect();
+    if entries.is_empty() {
+        bail!("no artifacts for benchmark {bench_name:?} in {}", dir.display());
+    }
+    println!(
+        "compiling {} PJRT variants of {bench_name}…",
+        entries.len()
+    );
+    let env = PjrtEnv::new(&entries)?;
+    let space = env.space().clone();
+    let ops = env.ops_counters_all();
+    let model = PrecomputedModel::from_pairs(
+        space.configs.iter().cloned().zip(ops).collect(),
+        "manifest-ops",
+    );
+    let searcher = args.get("searcher").unwrap_or("profile");
+    let budget = Budget::tests(
+        args.num("budget", space.len().min(space.len()))?,
+    );
+    let mut tuner = Tuner::over(Box::new(env))
+        .with_budget(budget)
+        .with_seed(args.num("seed", 0u64)?);
+    let choice = match searcher {
+        "random" => SearcherChoice::Random,
+        "profile" => SearcherChoice::Profile {
+            model: &model,
+            inst_reaction: 0.5,
+        },
+        other => bail!("tune-real supports random|profile, got {other:?}"),
+    };
+    let result = tuner.run(choice);
+    println!(
+        "real-execution tuning of {bench_name}: {} tests, best {:.3} ms",
+        result.tests, result.best_ms
+    );
+    print!("  config:");
+    for (p, v) in space.params.iter().zip(&result.best_config.0) {
+        print!(" {}={}", p.name, v);
+    }
+    println!();
+    Ok(())
+}
+
+/// Hidden diagnostic: random vs profile-with-oracle steps on one
+/// (benchmark, gpu, input) cell, plus a look at the best configs and the
+/// score rank the searcher assigns them.
+fn cmd_diag(args: &Args) -> Result<()> {
+    use pcat::expert::{analyze, normalize_scores, react, score};
+    use pcat::harness::avg_steps_to_well_performing;
+    use pcat::searcher::{ProfileSearcher, RandomSearcher};
+
+    let bench = bench_arg(args)?;
+    let gpu = gpu_arg(args)?;
+    let input = input_arg(args, bench.as_ref())?;
+    let reps = args.num("reps", 50usize)?;
+    let rec = benchmarks::record_space(bench.as_ref(), &gpu, &input);
+    let oracle = OracleModel::new(&rec);
+    let ir = if bench.instruction_bound() { 0.5 } else { 0.7 };
+
+    let rand = avg_steps_to_well_performing(&rec, &gpu, reps, 0, |s| {
+        Box::new(RandomSearcher::new(s))
+    });
+    let prof = avg_steps_to_well_performing(&rec, &gpu, reps, 1, |s| {
+        Box::new(ProfileSearcher::new(&oracle, ir, s))
+    });
+    println!(
+        "{} on {} ({}): space={} wp={} random={rand:.1} profile-oracle={prof:.1} imp={:.2}x",
+        bench.name(),
+        gpu.name,
+        input.name,
+        rec.space.len(),
+        rec.well_performing_count(1.1),
+        rand / prof.max(1.0)
+    );
+
+    // score-rank analysis: profile the median config, see where the best
+    // config lands in the resulting score distribution
+    let best = rec.best_index();
+    let median_idx = {
+        let mut order: Vec<usize> = (0..rec.space.len()).collect();
+        order.sort_by(|&a, &b| {
+            rec.records[a]
+                .runtime_ms
+                .partial_cmp(&rec.records[b].runtime_ms)
+                .unwrap()
+        });
+        order[rec.space.len() / 2]
+    };
+    let counters = &rec.records[median_idx].counters;
+    let b = analyze(counters, &gpu);
+    let delta = react(&b, ir);
+    println!("profiled median config bottlenecks (max {:.2}):", b.max());
+    for (c, d) in delta.active() {
+        println!("  delta {c} = {d:+.3}");
+    }
+    use pcat::model::TpPcModel as _;
+    let pred_prof = oracle.predict(&rec.space.configs[median_idx]);
+    let mut scores: Vec<f64> = rec
+        .space
+        .configs
+        .iter()
+        .map(|c| score(&delta, &pred_prof, &oracle.predict(c)))
+        .collect();
+    let raw_best = scores[best];
+    normalize_scores(&mut scores);
+    let rank = scores
+        .iter()
+        .filter(|&&s| s > scores[best])
+        .count();
+    let total_w: f64 = scores.iter().sum();
+    println!(
+        "best config: raw score {raw_best:.3}, rank {rank}/{} by weight, \
+         p(select)={:.4}",
+        rec.space.len(),
+        scores[best] / total_w
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let out = PathBuf::from(args.get("out").unwrap_or("results"));
+    let opts = ExperimentOpts {
+        reps: args.num("reps", 1000usize)?,
+        time_reps: args.num("time-reps", 100usize)?,
+        seed: args.num("seed", 0u64)?,
+    };
+    let ids: Vec<&str> = if id == "all" {
+        ALL_EXPERIMENTS.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        let report = run_experiment(id, &opts)?;
+        report.write_to(&out)?;
+        println!(
+            "{id}: wrote {}/{id}.md (+{} csv) in {:.1}s",
+            out.display(),
+            report.csvs.len(),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    Ok(())
+}

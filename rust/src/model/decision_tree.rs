@@ -1,0 +1,242 @@
+//! The decision-tree TP→PC model (paper §3.4.2).
+//!
+//! For each modeled counter: generate a set of candidate trees (varying
+//! depth/leaf-size — the paper "alters parent nodes"), train each on a
+//! random 50 % of the explored data, evaluate MAE (tie-broken by RMSE)
+//! on the other 50 %, and keep the winner.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::counters::CounterVec;
+use crate::tuning::Config;
+use crate::util::json::{self, obj, Value};
+use crate::util::rng::Rng;
+use crate::util::stats::{mae, rmse};
+
+use super::training::{features_of, Dataset};
+use super::tree::RegressionTree;
+use super::{TpPcModel, MODELED_COUNTERS};
+
+/// Candidate hyper-parameter grid.
+const CANDIDATE_DEPTHS: [usize; 4] = [4, 6, 8, 12];
+const CANDIDATE_MIN_LEAF: [usize; 2] = [2, 5];
+
+/// Per-counter regression trees.
+pub struct DecisionTreeModel {
+    /// Parallel to [`MODELED_COUNTERS`].
+    trees: Vec<RegressionTree>,
+    /// Provenance, for reports (GPU/input the training data came from).
+    pub trained_on: String,
+}
+
+impl DecisionTreeModel {
+    /// Train on a dataset (paper: 50/50 random train/test split per
+    /// candidate; lowest MAE wins, ties broken by RMSE).
+    pub fn train(ds: &Dataset, trained_on: &str, rng: &mut Rng) -> Self {
+        assert!(ds.len() >= 4, "need at least 4 samples");
+        let n = ds.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let (train_idx, test_idx) = order.split_at(n / 2);
+
+        let train_x: Vec<Vec<f64>> =
+            train_idx.iter().map(|&i| ds.features[i].clone()).collect();
+        let test_x: Vec<Vec<f64>> =
+            test_idx.iter().map(|&i| ds.features[i].clone()).collect();
+
+        // one tree per modeled counter; counters are independent, so
+        // train them on all cores (perf: ~#cores× on the 18-counter set)
+        let fit_counter = |c: crate::counters::Counter| {
+            let train_y: Vec<f64> = train_idx
+                .iter()
+                .map(|&i| ds.targets[i].get(c))
+                .collect();
+            let test_y: Vec<f64> =
+                test_idx.iter().map(|&i| ds.targets[i].get(c)).collect();
+
+            let mut best: Option<(RegressionTree, f64, f64)> = None;
+            for depth in CANDIDATE_DEPTHS {
+                for min_leaf in CANDIDATE_MIN_LEAF {
+                    let t = RegressionTree::fit(
+                        &train_x, &train_y, depth, min_leaf,
+                    );
+                    let pred: Vec<f64> =
+                        test_x.iter().map(|x| t.predict(x)).collect();
+                    let m = mae(&pred, &test_y);
+                    let r = rmse(&pred, &test_y);
+                    let better = match &best {
+                        None => true,
+                        Some((_, bm, br)) => {
+                            m < *bm || (m == *bm && r < *br)
+                        }
+                    };
+                    if better {
+                        best = Some((t, m, r));
+                    }
+                }
+            }
+            best.unwrap().0
+        };
+        let fit_ref = &fit_counter;
+        let trees: Vec<RegressionTree> = std::thread::scope(|scope| {
+            let handles: Vec<_> = MODELED_COUNTERS
+                .iter()
+                .map(|&c| scope.spawn(move || fit_ref(c)))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        DecisionTreeModel {
+            trees,
+            trained_on: trained_on.to_string(),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("kind", Value::from("decision_tree")),
+            ("trained_on", Value::from(self.trained_on.clone())),
+            (
+                "trees",
+                Value::Obj(
+                    MODELED_COUNTERS
+                        .iter()
+                        .zip(&self.trees)
+                        .map(|(c, t)| (c.abbr().to_string(), t.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let trees_obj = v.get("trees")?.as_obj().context("trees")?;
+        let mut trees = Vec::with_capacity(MODELED_COUNTERS.len());
+        for c in MODELED_COUNTERS {
+            let t = trees_obj
+                .get(c.abbr())
+                .with_context(|| format!("missing tree for {c}"))?;
+            trees.push(RegressionTree::from_json(t)?);
+        }
+        Ok(DecisionTreeModel {
+            trees,
+            trained_on: v
+                .get("trained_on")?
+                .as_str()
+                .unwrap_or_default()
+                .to_string(),
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty(1))
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&json::parse(&text)?)
+    }
+}
+
+impl TpPcModel for DecisionTreeModel {
+    fn predict(&self, cfg: &Config) -> CounterVec {
+        let x = features_of(cfg);
+        let mut out = CounterVec::new();
+        for (c, t) in MODELED_COUNTERS.iter().zip(&self.trees) {
+            out.set(*c, t.predict(&x));
+        }
+        out
+    }
+
+    fn kind(&self) -> &'static str {
+        "decision_tree"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{record_space, Benchmark, Coulomb};
+    use crate::counters::Counter;
+    use crate::gpusim::GpuSpec;
+    use crate::model::dataset_from_recorded;
+
+    fn trained() -> (DecisionTreeModel, crate::tuning::RecordedSpace) {
+        let rec = record_space(
+            &Coulomb,
+            &GpuSpec::gtx1070(),
+            &Coulomb.default_input(),
+        );
+        let mut rng = Rng::new(3);
+        let ds = dataset_from_recorded(&rec, 1.0, &mut rng);
+        (DecisionTreeModel::train(&ds, "gtx1070", &mut rng), rec)
+    }
+
+    #[test]
+    fn predicts_instruction_counts_accurately() {
+        let (m, rec) = trained();
+        // relative error on the fp32 counter should be modest — the
+        // relation TP→INST_F32 is smooth in this space.
+        let mut rel_err = Vec::new();
+        for (cfg, r) in rec.space.configs.iter().zip(&rec.records) {
+            let truth = r.counters.get(Counter::InstF32);
+            let pred = m.predict(cfg).get(Counter::InstF32);
+            if truth > 0.0 {
+                rel_err.push(((pred - truth) / truth).abs());
+            }
+        }
+        let med = crate::util::stats::median(&rel_err);
+        assert!(med < 0.25, "median rel err {med}");
+    }
+
+    #[test]
+    fn ranks_coarsening_correctly() {
+        // the model must order INST_F32 by Z_ITER (Fig. 1 stability)
+        let (m, rec) = trained();
+        let s = &rec.space;
+        let pick = |zi: i64| {
+            s.configs
+                .iter()
+                .find(|c| {
+                    s.value(c, "Z_ITER") == zi
+                        && s.value(c, "BLOCK_X") == 16
+                        && s.value(c, "BLOCK_Y") == 8
+                        && s.value(c, "INNER_UNROLL") == 1
+                        && s.value(c, "USE_SOA") == 1
+                        && s.value(c, "VECTOR") == 1
+                        && s.value(c, "SLICE_FACTOR") == 1
+                })
+                .unwrap()
+        };
+        let f1 = m.predict(pick(1)).get(Counter::InstF32);
+        let f32_ = m.predict(pick(32)).get(Counter::InstF32);
+        assert!(f1 > f32_, "zi=1 must predict more FP32 ops than zi=32");
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_predictions() {
+        let (m, rec) = trained();
+        let back = DecisionTreeModel::from_json(&m.to_json()).unwrap();
+        for cfg in rec.space.configs.iter().step_by(29) {
+            assert_eq!(m.predict(cfg), back.predict(cfg));
+        }
+        assert_eq!(back.trained_on, "gtx1070");
+    }
+
+    #[test]
+    fn save_load_file() {
+        let (m, _) = trained();
+        let dir = std::env::temp_dir().join("pcat_test_dtm");
+        let path = dir.join("model.json");
+        m.save(&path).unwrap();
+        let back = DecisionTreeModel::load(&path).unwrap();
+        assert_eq!(back.kind(), "decision_tree");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

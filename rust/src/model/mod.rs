@@ -1,0 +1,248 @@
+//! Models of the TP → PC_ops relation (paper §3.4).
+//!
+//! Trained once on a sampled/exhaustive tuning space from *any* GPU and
+//! input, then reused to steer searching on other GPUs/inputs — the
+//! portability that distinguishes the paper from runtime-surrogate
+//! methods.
+//!
+//! Implementations:
+//! * [`DecisionTreeModel`] — per-counter regression trees (§3.4.2), the
+//!   model used in the paper's evaluation;
+//! * [`RegressionModel`] — least-squares quadratic regression with
+//!   interactions, fitted per binary-parameter subspace (§3.4.1);
+//! * [`OracleModel`] — reads exact recorded counters instead of
+//!   predicting (the §4.3 experiment isolating expert-system quality
+//!   from model error).
+
+mod decision_tree;
+mod regression;
+mod training;
+mod tree;
+
+pub use decision_tree::DecisionTreeModel;
+pub use regression::RegressionModel;
+pub use training::{dataset_from_recorded, Dataset};
+pub use tree::RegressionTree;
+
+use std::collections::HashMap;
+
+use crate::counters::{Counter, CounterVec};
+use crate::tuning::{Config, RecordedSpace};
+
+/// The counters a TP→PC model predicts: every PC_ops plus `SM_E`
+/// (needed for the Δpc_SM_E reaction) — §3.5.2.
+pub const MODELED_COUNTERS: [Counter; 18] = [
+    Counter::DramRt,
+    Counter::DramWt,
+    Counter::L2Rt,
+    Counter::L2Wt,
+    Counter::TexRwt,
+    Counter::LocO,
+    Counter::ShrLt,
+    Counter::ShrWt,
+    Counter::InstF32,
+    Counter::InstF64,
+    Counter::InstInt,
+    Counter::InstMisc,
+    Counter::InstLdst,
+    Counter::InstCont,
+    Counter::InstBconv,
+    Counter::InstExe,
+    Counter::SmE,
+    Counter::Threads,
+];
+
+/// A trained model of the relation between tuning parameters and
+/// performance counters.
+pub trait TpPcModel: Send + Sync {
+    /// Predict the modeled counters for one configuration.
+    fn predict(&self, cfg: &Config) -> CounterVec;
+
+    /// Human-readable kind, for reports.
+    fn kind(&self) -> &'static str;
+}
+
+/// Oracle: look up the exact recorded counters of the configuration
+/// (requires searching the same space the recording covers).
+pub struct OracleModel {
+    by_config: HashMap<Config, CounterVec>,
+}
+
+/// Memoize any model over a fixed space — the harness repeats each
+/// stochastic search up to 1000×, and tree evaluation over a 60k-config
+/// space need only happen once.
+pub struct PrecomputedModel {
+    by_config: HashMap<Config, CounterVec>,
+    kind: &'static str,
+}
+
+impl PrecomputedModel {
+    pub fn over(space: &crate::tuning::Space, inner: &dyn TpPcModel) -> Self {
+        PrecomputedModel {
+            by_config: space
+                .configs
+                .iter()
+                .map(|c| (c.clone(), inner.predict(c)))
+                .collect(),
+            kind: inner.kind(),
+        }
+    }
+
+    /// Build directly from (config, counters) pairs — used by the PJRT
+    /// real-execution path, where PC_ops come from the manifest.
+    pub fn from_pairs(
+        pairs: Vec<(Config, CounterVec)>,
+        kind: &'static str,
+    ) -> Self {
+        PrecomputedModel {
+            by_config: pairs.into_iter().collect(),
+            kind,
+        }
+    }
+}
+
+impl TpPcModel for PrecomputedModel {
+    fn predict(&self, cfg: &Config) -> CounterVec {
+        self.by_config.get(cfg).cloned().unwrap_or_default()
+    }
+
+    fn kind(&self) -> &'static str {
+        self.kind
+    }
+}
+
+/// Adapt a model trained on a *subset* space (e.g. GEMM-reduced) to a
+/// richer space sharing parameter names (GEMM-full) — the paper's §4.6
+/// "GEMM full" experiment trains on <3 % of the full space's parameters'
+/// cross product and still steers it.
+pub struct RemappedModel<'m> {
+    inner: &'m dyn TpPcModel,
+    /// For each inner-space parameter, its index in the outer config.
+    take: Vec<usize>,
+}
+
+impl<'m> RemappedModel<'m> {
+    pub fn new(
+        inner: &'m dyn TpPcModel,
+        inner_space: &crate::tuning::Space,
+        outer_space: &crate::tuning::Space,
+    ) -> anyhow::Result<Self> {
+        let take = inner_space
+            .params
+            .iter()
+            .map(|p| {
+                outer_space.param_index(&p.name).ok_or_else(|| {
+                    anyhow::anyhow!("outer space lacks parameter {}", p.name)
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        Ok(RemappedModel { inner, take })
+    }
+}
+
+impl TpPcModel for RemappedModel<'_> {
+    fn predict(&self, cfg: &Config) -> CounterVec {
+        let projected =
+            Config(self.take.iter().map(|&i| cfg.get(i)).collect());
+        self.inner.predict(&projected)
+    }
+
+    fn kind(&self) -> &'static str {
+        "remapped"
+    }
+}
+
+impl OracleModel {
+    pub fn new(rec: &RecordedSpace) -> Self {
+        let by_config = rec
+            .space
+            .configs
+            .iter()
+            .cloned()
+            .zip(rec.records.iter().map(|r| r.counters.clone()))
+            .collect();
+        OracleModel { by_config }
+    }
+}
+
+impl TpPcModel for OracleModel {
+    fn predict(&self, cfg: &Config) -> CounterVec {
+        self.by_config.get(cfg).cloned().unwrap_or_default()
+    }
+
+    fn kind(&self) -> &'static str {
+        "oracle"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{record_space, Benchmark, Coulomb};
+    use crate::gpusim::GpuSpec;
+
+    #[test]
+    fn oracle_returns_exact_counters() {
+        let rec = record_space(
+            &Coulomb,
+            &GpuSpec::gtx750(),
+            &Coulomb.default_input(),
+        );
+        let oracle = OracleModel::new(&rec);
+        for i in [0usize, 7, 42] {
+            let pred = oracle.predict(&rec.space.configs[i]);
+            assert_eq!(pred, rec.records[i].counters);
+        }
+        assert_eq!(oracle.kind(), "oracle");
+    }
+
+    #[test]
+    fn precomputed_matches_inner() {
+        let rec = record_space(
+            &Coulomb,
+            &GpuSpec::gtx750(),
+            &Coulomb.default_input(),
+        );
+        let oracle = OracleModel::new(&rec);
+        let pre = PrecomputedModel::over(&rec.space, &oracle);
+        for cfg in rec.space.configs.iter().step_by(31) {
+            assert_eq!(pre.predict(cfg), oracle.predict(cfg));
+        }
+    }
+
+    #[test]
+    fn remapped_projects_shared_params() {
+        use crate::benchmarks::{Gemm, GemmFull};
+        let reduced = Gemm.space();
+        let full = GemmFull.space();
+        // identity model that echoes MWG into a counter
+        struct Echo(usize);
+        impl TpPcModel for Echo {
+            fn predict(&self, cfg: &Config) -> CounterVec {
+                let mut v = CounterVec::new();
+                v.set(Counter::Threads, cfg.get(self.0) as f64);
+                v
+            }
+            fn kind(&self) -> &'static str {
+                "echo"
+            }
+        }
+        let echo = Echo(reduced.param_index("MWG").unwrap());
+        let remapped = RemappedModel::new(&echo, &reduced, &full).unwrap();
+        let cfg = &full.configs[123];
+        let mwg = full.value(cfg, "MWG") as f64;
+        assert_eq!(remapped.predict(cfg).get(Counter::Threads), mwg);
+    }
+
+    #[test]
+    fn oracle_unknown_config_is_zeroes() {
+        let rec = record_space(
+            &Coulomb,
+            &GpuSpec::gtx750(),
+            &Coulomb.default_input(),
+        );
+        let oracle = OracleModel::new(&rec);
+        let bogus = Config(vec![-1; rec.space.dims()]);
+        assert_eq!(oracle.predict(&bogus), CounterVec::new());
+    }
+}

@@ -1,0 +1,278 @@
+//! Least-squares non-linear regression TP→PC model (paper §3.4.1).
+//!
+//! The tuning space is split into subspaces by the values of *binary*
+//! tuning parameters (a space with three binary parameters yields 2³
+//! models per counter). Within a subspace, each counter is modeled on
+//! the non-binary parameters with main effects, pairwise interactions
+//! and quadratic terms, fitted by (ridge-regularized) least squares.
+//! Non-binary parameter values are log2-transformed first — tuning
+//! values are near-geometric (1, 2, 4, …), which makes the quadratic
+//! basis well-conditioned.
+
+use std::collections::HashMap;
+
+use crate::counters::CounterVec;
+use crate::tuning::{Config, Space};
+use crate::util::rng::Rng;
+
+use super::training::Dataset;
+use super::{TpPcModel, MODELED_COUNTERS};
+
+/// Ridge regularization strength.
+const RIDGE: f64 = 1e-6;
+/// Cap on training rows per subspace (the paper deliberately subsamples
+/// to "keep the total number of value combinations relatively low").
+const MAX_ROWS_PER_SUBSPACE: usize = 512;
+
+pub struct RegressionModel {
+    /// Indices of binary parameters within a config.
+    binary_idx: Vec<usize>,
+    /// Indices of non-binary parameters.
+    free_idx: Vec<usize>,
+    /// Per-subspace coefficient matrices: key = binary values,
+    /// value = per-modeled-counter coefficient vectors.
+    subspaces: HashMap<Vec<i64>, Vec<Vec<f64>>>,
+    pub trained_on: String,
+}
+
+fn log2s(v: f64) -> f64 {
+    (v.abs() + 1.0).log2()
+}
+
+impl RegressionModel {
+    /// Quadratic feature map over the non-binary parameter values.
+    fn feature_map(&self, cfg: &Config) -> Vec<f64> {
+        let z: Vec<f64> = self
+            .free_idx
+            .iter()
+            .map(|&i| log2s(cfg.get(i) as f64))
+            .collect();
+        build_features(&z)
+    }
+
+    /// Train on a dataset drawn from `space`.
+    pub fn train(
+        space: &Space,
+        ds: &Dataset,
+        trained_on: &str,
+        rng: &mut Rng,
+    ) -> Self {
+        let binary_idx: Vec<usize> = space
+            .params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.is_binary())
+            .map(|(i, _)| i)
+            .collect();
+        let free_idx: Vec<usize> = (0..space.params.len())
+            .filter(|i| !binary_idx.contains(i))
+            .collect();
+
+        let mut model = RegressionModel {
+            binary_idx,
+            free_idx,
+            subspaces: HashMap::new(),
+            trained_on: trained_on.to_string(),
+        };
+
+        // bucket training rows by binary-parameter key
+        let mut buckets: HashMap<Vec<i64>, Vec<usize>> = HashMap::new();
+        for (row, cfg) in ds.configs.iter().enumerate() {
+            let key: Vec<i64> =
+                model.binary_idx.iter().map(|&i| cfg.get(i)).collect();
+            buckets.entry(key).or_default().push(row);
+        }
+
+        for (key, mut rows) in buckets {
+            if rows.len() > MAX_ROWS_PER_SUBSPACE {
+                rng.shuffle(&mut rows);
+                rows.truncate(MAX_ROWS_PER_SUBSPACE);
+            }
+            let x: Vec<Vec<f64>> = rows
+                .iter()
+                .map(|&r| model.feature_map(&ds.configs[r]))
+                .collect();
+            let mut per_counter = Vec::with_capacity(MODELED_COUNTERS.len());
+            for c in MODELED_COUNTERS {
+                let y: Vec<f64> =
+                    rows.iter().map(|&r| ds.targets[r].get(c)).collect();
+                per_counter.push(least_squares(&x, &y));
+            }
+            model.subspaces.insert(key, per_counter);
+        }
+        model
+    }
+}
+
+/// Build [1, z_i…, z_i², z_i·z_j (i<j)] features.
+fn build_features(z: &[f64]) -> Vec<f64> {
+    let mut f = Vec::with_capacity(1 + z.len() * (z.len() + 3) / 2);
+    f.push(1.0);
+    f.extend_from_slice(z);
+    for i in 0..z.len() {
+        for j in i..z.len() {
+            f.push(z[i] * z[j]);
+        }
+    }
+    f
+}
+
+/// Ridge least squares via normal equations + Gaussian elimination with
+/// partial pivoting. Small systems (≤ ~120 unknowns), so O(k³) is fine.
+fn least_squares(x: &[Vec<f64>], y: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let k = x.first().map_or(0, |r| r.len());
+    if n == 0 || k == 0 {
+        return vec![0.0; k];
+    }
+    // A = XᵀX + λI, b = Xᵀy
+    let mut a = vec![vec![0.0; k]; k];
+    let mut b = vec![0.0; k];
+    for (row, &yi) in x.iter().zip(y) {
+        for i in 0..k {
+            b[i] += row[i] * yi;
+            for j in 0..k {
+                a[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    for (i, ai) in a.iter_mut().enumerate() {
+        ai[i] += RIDGE * n as f64;
+    }
+    // Gaussian elimination
+    for col in 0..k {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..k {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        if d.abs() < 1e-300 {
+            continue;
+        }
+        for r in 0..k {
+            if r == col {
+                continue;
+            }
+            let factor = a[r][col] / d;
+            if factor == 0.0 {
+                continue;
+            }
+            for c in col..k {
+                a[r][c] -= factor * a[col][c];
+            }
+            b[r] -= factor * b[col];
+        }
+    }
+    (0..k)
+        .map(|i| {
+            if a[i][i].abs() < 1e-300 {
+                0.0
+            } else {
+                b[i] / a[i][i]
+            }
+        })
+        .collect()
+}
+
+impl TpPcModel for RegressionModel {
+    fn predict(&self, cfg: &Config) -> CounterVec {
+        let key: Vec<i64> =
+            self.binary_idx.iter().map(|&i| cfg.get(i)).collect();
+        let mut out = CounterVec::new();
+        // fall back to any subspace if this binary combination was not
+        // sampled (can happen with constrained spaces)
+        let coeffs = self
+            .subspaces
+            .get(&key)
+            .or_else(|| self.subspaces.values().next());
+        let Some(coeffs) = coeffs else {
+            return out;
+        };
+        let f = self.feature_map(cfg);
+        for (c, beta) in MODELED_COUNTERS.iter().zip(coeffs) {
+            let v: f64 = f.iter().zip(beta).map(|(a, b)| a * b).sum();
+            // counters are non-negative; clamp the polynomial
+            out.set(*c, v.max(0.0));
+        }
+        out
+    }
+
+    fn kind(&self) -> &'static str {
+        "regression"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{record_space, Benchmark, Coulomb};
+    use crate::counters::Counter;
+    use crate::gpusim::GpuSpec;
+    use crate::model::dataset_from_recorded;
+
+    #[test]
+    fn least_squares_recovers_linear_fit() {
+        // y = 2 + 3·x
+        let x: Vec<Vec<f64>> =
+            (0..10).map(|i| vec![1.0, i as f64]).collect();
+        let y: Vec<f64> = (0..10).map(|i| 2.0 + 3.0 * i as f64).collect();
+        let beta = least_squares(&x, &y);
+        assert!((beta[0] - 2.0).abs() < 1e-3);
+        assert!((beta[1] - 3.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn feature_map_counts() {
+        let f = build_features(&[1.0, 2.0, 3.0]);
+        // 1 + 3 linear + 6 quadratic/interaction
+        assert_eq!(f.len(), 10);
+        assert_eq!(f[0], 1.0);
+        assert_eq!(f[4], 1.0); // z0²
+        assert_eq!(f[5], 2.0); // z0·z1
+    }
+
+    #[test]
+    fn model_learns_coulomb_counters() {
+        let rec = record_space(
+            &Coulomb,
+            &GpuSpec::gtx1070(),
+            &Coulomb.default_input(),
+        );
+        let mut rng = Rng::new(7);
+        let ds = dataset_from_recorded(&rec, 1.0, &mut rng);
+        let m = RegressionModel::train(&rec.space, &ds, "gtx1070", &mut rng);
+
+        let mut rel = Vec::new();
+        for (cfg, r) in rec.space.configs.iter().zip(&rec.records) {
+            let truth = r.counters.get(Counter::InstF32);
+            if truth > 0.0 {
+                let pred = m.predict(cfg).get(Counter::InstF32);
+                rel.push(((pred - truth) / truth).abs());
+            }
+        }
+        let med = crate::util::stats::median(&rel);
+        assert!(med < 0.35, "median rel err {med}");
+    }
+
+    #[test]
+    fn predictions_nonnegative() {
+        let rec = record_space(
+            &Coulomb,
+            &GpuSpec::gtx750(),
+            &Coulomb.default_input(),
+        );
+        let mut rng = Rng::new(9);
+        let ds = dataset_from_recorded(&rec, 0.5, &mut rng);
+        let m = RegressionModel::train(&rec.space, &ds, "x", &mut rng);
+        for cfg in rec.space.configs.iter().step_by(11) {
+            for (_, v) in m.predict(cfg).iter() {
+                assert!(v >= 0.0);
+            }
+        }
+    }
+}

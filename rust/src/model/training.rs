@@ -1,0 +1,92 @@
+//! Training-set extraction from recorded tuning spaces.
+
+use crate::counters::CounterVec;
+use crate::tuning::{Config, RecordedSpace};
+use crate::util::rng::Rng;
+
+/// A (features, counter-targets) training set. Features are the raw
+/// tuning-parameter values as f64 (trees are scale-invariant; the
+/// regression model applies its own transform).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub features: Vec<Vec<f64>>,
+    pub targets: Vec<CounterVec>,
+    pub configs: Vec<Config>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.features.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.features.is_empty()
+    }
+}
+
+/// Convert a configuration to a feature vector.
+pub fn features_of(cfg: &Config) -> Vec<f64> {
+    cfg.0.iter().map(|&v| v as f64).collect()
+}
+
+/// Sample `fraction` of a recorded space (without replacement) as a
+/// training set. `fraction = 1.0` uses the whole space (the paper trains
+/// on full or partial exhaustive explorations).
+pub fn dataset_from_recorded(
+    rec: &RecordedSpace,
+    fraction: f64,
+    rng: &mut Rng,
+) -> Dataset {
+    let n = rec.space.len();
+    let k = ((n as f64 * fraction).round() as usize).clamp(1, n);
+    let idx = rng.sample_indices(n, k);
+    let mut ds = Dataset {
+        features: Vec::with_capacity(k),
+        targets: Vec::with_capacity(k),
+        configs: Vec::with_capacity(k),
+    };
+    for i in idx {
+        ds.features.push(features_of(&rec.space.configs[i]));
+        ds.targets.push(rec.records[i].counters.clone());
+        ds.configs.push(rec.space.configs[i].clone());
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{record_space, Benchmark, Coulomb};
+    use crate::gpusim::GpuSpec;
+
+    #[test]
+    fn fraction_controls_size() {
+        let rec = record_space(
+            &Coulomb,
+            &GpuSpec::gtx750(),
+            &Coulomb.default_input(),
+        );
+        let mut rng = Rng::new(1);
+        let half = dataset_from_recorded(&rec, 0.5, &mut rng);
+        assert_eq!(half.len(), rec.space.len().div_ceil(2));
+        let full = dataset_from_recorded(&rec, 1.0, &mut rng);
+        assert_eq!(full.len(), rec.space.len());
+    }
+
+    #[test]
+    fn features_match_configs() {
+        let rec = record_space(
+            &Coulomb,
+            &GpuSpec::gtx750(),
+            &Coulomb.default_input(),
+        );
+        let mut rng = Rng::new(2);
+        let ds = dataset_from_recorded(&rec, 0.3, &mut rng);
+        for (f, c) in ds.features.iter().zip(&ds.configs) {
+            assert_eq!(f.len(), c.len());
+            for (a, b) in f.iter().zip(&c.0) {
+                assert_eq!(*a, *b as f64);
+            }
+        }
+    }
+}

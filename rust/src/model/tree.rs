@@ -1,0 +1,316 @@
+//! A CART-style regression tree (paper §3.4.2).
+//!
+//! Splits greedily on the feature/threshold pair maximizing Standard
+//! Deviation Reduction (equivalently, minimizing the weighted child
+//! MSE); leaves predict the mean target. Used both by the TP→PC
+//! decision-tree model and by the Starchart baseline (runtime trees).
+
+use crate::util::json::{obj, Value};
+
+/// Flat node storage: indices into `nodes`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Node {
+    Leaf(f64),
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: usize,
+        right: usize,
+    },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegressionTree {
+    pub nodes: Vec<Node>,
+    pub max_depth: usize,
+    pub min_leaf: usize,
+}
+
+fn mean(ys: &[f64]) -> f64 {
+    ys.iter().sum::<f64>() / ys.len().max(1) as f64
+}
+
+fn sse(ys: &[f64]) -> f64 {
+    let m = mean(ys);
+    ys.iter().map(|y| (y - m) * (y - m)).sum()
+}
+
+impl RegressionTree {
+    /// Fit on rows `xs` (feature vectors) with targets `ys`.
+    pub fn fit(
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        max_depth: usize,
+        min_leaf: usize,
+    ) -> RegressionTree {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty(), "cannot fit a tree on no data");
+        let mut tree = RegressionTree {
+            nodes: Vec::new(),
+            max_depth,
+            min_leaf,
+        };
+        let idx: Vec<usize> = (0..xs.len()).collect();
+        tree.build(xs, ys, &idx, 0);
+        tree
+    }
+
+    fn build(
+        &mut self,
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        idx: &[usize],
+        depth: usize,
+    ) -> usize {
+        let targets: Vec<f64> = idx.iter().map(|&i| ys[i]).collect();
+        let node_sse = sse(&targets);
+        if depth >= self.max_depth
+            || idx.len() < 2 * self.min_leaf
+            || node_sse <= 1e-12
+        {
+            let id = self.nodes.len();
+            self.nodes.push(Node::Leaf(mean(&targets)));
+            return id;
+        }
+
+        // Find the best (feature, threshold) by SSE reduction. Tuning
+        // parameters have few distinct values, so aggregate
+        // (count, sum, sum-of-squares) per value and scan thresholds
+        // with prefix sums — O(n·F + U·F) per node instead of O(n²·F).
+        let n_features = xs[idx[0]].len();
+        let mut best: Option<(usize, f64, f64)> = None; // (feat, thr, child_sse)
+        let mut groups: Vec<(f64, f64, f64, f64)> = Vec::new(); // value, n, Σy, Σy²
+        for f in 0..n_features {
+            groups.clear();
+            // aggregate per distinct feature value (kept sorted)
+            for &i in idx {
+                let v = xs[i][f];
+                let y = ys[i];
+                match groups.binary_search_by(|g| g.0.partial_cmp(&v).unwrap())
+                {
+                    Ok(g) => {
+                        groups[g].1 += 1.0;
+                        groups[g].2 += y;
+                        groups[g].3 += y * y;
+                    }
+                    Err(pos) => groups.insert(pos, (v, 1.0, y, y * y)),
+                }
+            }
+            // prefix scan: left stats grow, right stats shrink
+            let (mut tn, mut ts, mut tq) = (0.0, 0.0, 0.0);
+            for g in &groups {
+                tn += g.1;
+                ts += g.2;
+                tq += g.3;
+            }
+            let (mut ln, mut ls, mut lq) = (0.0f64, 0.0f64, 0.0f64);
+            for w in 0..groups.len().saturating_sub(1) {
+                ln += groups[w].1;
+                ls += groups[w].2;
+                lq += groups[w].3;
+                let (rn, rs, rq) = (tn - ln, ts - ls, tq - lq);
+                if (ln as usize) < self.min_leaf || (rn as usize) < self.min_leaf
+                {
+                    continue;
+                }
+                // SSE = Σy² − (Σy)²/n per side
+                let child = (lq - ls * ls / ln) + (rq - rs * rs / rn);
+                if best.as_ref().is_none_or(|(_, _, b)| child < *b) {
+                    let thr = 0.5 * (groups[w].0 + groups[w + 1].0);
+                    best = Some((f, thr, child));
+                }
+            }
+        }
+
+        let Some((feature, threshold, child_sse)) = best else {
+            let id = self.nodes.len();
+            self.nodes.push(Node::Leaf(mean(&targets)));
+            return id;
+        };
+        if child_sse >= node_sse {
+            let id = self.nodes.len();
+            self.nodes.push(Node::Leaf(mean(&targets)));
+            return id;
+        }
+
+        let (li, ri): (Vec<usize>, Vec<usize>) =
+            idx.iter().partition(|&&i| xs[i][feature] <= threshold);
+        // reserve this node's slot before recursing
+        let id = self.nodes.len();
+        self.nodes.push(Node::Leaf(0.0)); // placeholder
+        let left = self.build(xs, ys, &li, depth + 1);
+        let right = self.build(xs, ys, &ri, depth + 1);
+        self.nodes[id] = Node::Split {
+            feature,
+            threshold,
+            left,
+            right,
+        };
+        id
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        let mut at = 0usize;
+        loop {
+            match &self.nodes[at] {
+                Node::Leaf(v) => return *v,
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    at = if x[*feature] <= *threshold {
+                        *left
+                    } else {
+                        *right
+                    };
+                }
+            }
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        fn walk(nodes: &[Node], at: usize) -> usize {
+            match &nodes[at] {
+                Node::Leaf(_) => 1,
+                Node::Split { left, right, .. } => {
+                    1 + walk(nodes, *left).max(walk(nodes, *right))
+                }
+            }
+        }
+        walk(&self.nodes, 0)
+    }
+
+    pub fn to_json(&self) -> Value {
+        let nodes: Vec<Value> = self
+            .nodes
+            .iter()
+            .map(|n| match n {
+                Node::Leaf(v) => Value::Arr(vec![Value::from(*v)]),
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => Value::Arr(vec![
+                    Value::from(*feature),
+                    Value::from(*threshold),
+                    Value::from(*left),
+                    Value::from(*right),
+                ]),
+            })
+            .collect();
+        obj(vec![
+            ("nodes", Value::Arr(nodes)),
+            ("max_depth", Value::from(self.max_depth)),
+            ("min_leaf", Value::from(self.min_leaf)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<RegressionTree> {
+        let nodes = v
+            .get("nodes")?
+            .as_arr()
+            .unwrap_or_default()
+            .iter()
+            .map(|n| {
+                let a = n.as_arr().unwrap_or_default();
+                Ok(match a.len() {
+                    1 => Node::Leaf(a[0].as_f64().unwrap_or(0.0)),
+                    4 => Node::Split {
+                        feature: a[0].as_i64().unwrap_or(0) as usize,
+                        threshold: a[1].as_f64().unwrap_or(0.0),
+                        left: a[2].as_i64().unwrap_or(0) as usize,
+                        right: a[3].as_i64().unwrap_or(0) as usize,
+                    },
+                    _ => anyhow::bail!("bad tree node"),
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        Ok(RegressionTree {
+            nodes,
+            max_depth: v.get("max_depth")?.as_i64().unwrap_or(0) as usize,
+            min_leaf: v.get("min_leaf")?.as_i64().unwrap_or(1) as usize,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_target_single_leaf() {
+        let xs = vec![vec![1.0], vec![2.0], vec![3.0]];
+        let ys = vec![5.0, 5.0, 5.0];
+        let t = RegressionTree::fit(&xs, &ys, 8, 1);
+        assert_eq!(t.nodes.len(), 1);
+        assert_eq!(t.predict(&[10.0]), 5.0);
+    }
+
+    #[test]
+    fn splits_a_step_function_exactly() {
+        let xs: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
+        let ys: Vec<f64> =
+            (0..20).map(|i| if i < 10 { 1.0 } else { 9.0 }).collect();
+        let t = RegressionTree::fit(&xs, &ys, 4, 1);
+        assert_eq!(t.predict(&[3.0]), 1.0);
+        assert_eq!(t.predict(&[15.0]), 9.0);
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let xs: Vec<Vec<f64>> = (0..64).map(|i| vec![i as f64]).collect();
+        let ys: Vec<f64> = (0..64).map(|i| i as f64).collect();
+        let t = RegressionTree::fit(&xs, &ys, 3, 1);
+        assert!(t.depth() <= 4); // root + 3 levels
+    }
+
+    #[test]
+    fn predictions_within_target_range() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let xs: Vec<Vec<f64>> =
+            (0..200).map(|_| vec![rng.f64() * 8.0, rng.f64()]).collect();
+        let ys: Vec<f64> =
+            xs.iter().map(|x| x[0] * x[0] + 3.0 * x[1]).collect();
+        let lo = ys.iter().cloned().fold(f64::MAX, f64::min);
+        let hi = ys.iter().cloned().fold(f64::MIN, f64::max);
+        let t = RegressionTree::fit(&xs, &ys, 8, 2);
+        for _ in 0..100 {
+            let p = t.predict(&[rng.f64() * 20.0 - 5.0, rng.f64() * 2.0]);
+            assert!(p >= lo - 1e-9 && p <= hi + 1e-9);
+        }
+    }
+
+    #[test]
+    fn two_feature_interaction_learned() {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for a in 0..8 {
+            for b in 0..8 {
+                xs.push(vec![a as f64, b as f64]);
+                ys.push((a * b) as f64);
+            }
+        }
+        let t = RegressionTree::fit(&xs, &ys, 6, 1);
+        // reasonable accuracy on training points
+        let mae: f64 = xs
+            .iter()
+            .zip(&ys)
+            .map(|(x, y)| (t.predict(x) - y).abs())
+            .sum::<f64>()
+            / ys.len() as f64;
+        assert!(mae < 3.0, "mae={mae}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let xs: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
+        let ys: Vec<f64> = (0..20).map(|i| (i * i) as f64).collect();
+        let t = RegressionTree::fit(&xs, &ys, 5, 2);
+        let back = RegressionTree::from_json(&t.to_json()).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(t.predict(&[7.3]), back.predict(&[7.3]));
+    }
+}

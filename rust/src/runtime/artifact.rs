@@ -1,0 +1,116 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json;
+
+/// One AOT-compiled kernel variant.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub benchmark: String,
+    pub name: String,
+    /// Tuning configuration (param → value).
+    pub config: BTreeMap<String, i64>,
+    /// HLO text file, absolute.
+    pub path: PathBuf,
+    /// Input shapes (all float32).
+    pub arg_shapes: Vec<Vec<usize>>,
+    /// Analytic op counts stamped by the L2 model (PC_ops source).
+    pub ops: BTreeMap<String, f64>,
+}
+
+/// Parse `artifacts/manifest.json`.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactEntry>> {
+    let text = std::fs::read_to_string(dir.join("manifest.json"))
+        .with_context(|| format!("reading manifest in {}", dir.display()))?;
+    let v = json::parse(&text)?;
+    let mut out = Vec::new();
+    for e in v.as_arr().context("manifest must be an array")? {
+        let config = e
+            .get("config")?
+            .as_obj()
+            .context("config")?
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_i64().unwrap_or(0)))
+            .collect();
+        let arg_shapes = e
+            .get("args")?
+            .as_arr()
+            .context("args")?
+            .iter()
+            .map(|a| {
+                Ok(a.get("shape")?
+                    .as_arr()
+                    .context("shape")?
+                    .iter()
+                    .map(|d| d.as_i64().unwrap_or(0) as usize)
+                    .collect())
+            })
+            .collect::<Result<_>>()?;
+        let ops = e
+            .get("ops")?
+            .as_obj()
+            .context("ops")?
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_f64().unwrap_or(0.0)))
+            .collect();
+        out.push(ArtifactEntry {
+            benchmark: e.get("benchmark")?.as_str().unwrap_or("").to_string(),
+            name: e.get("name")?.as_str().unwrap_or("").to_string(),
+            config,
+            path: dir.join(e.get("path")?.as_str().unwrap_or("")),
+            arg_shapes,
+            ops,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn parses_built_manifest() {
+        let Some(dir) = manifest_dir() else {
+            eprintln!("artifacts not built; skipping");
+            return;
+        };
+        let entries = load_manifest(&dir).unwrap();
+        assert!(entries.len() >= 30, "{}", entries.len());
+        let benches: std::collections::BTreeSet<_> =
+            entries.iter().map(|e| e.benchmark.clone()).collect();
+        assert!(benches.contains("coulomb"));
+        assert!(benches.contains("gemm"));
+        assert!(benches.contains("transpose"));
+        for e in &entries {
+            assert!(e.path.exists(), "{}", e.path.display());
+            assert!(!e.config.is_empty());
+            assert!(!e.arg_shapes.is_empty());
+        }
+    }
+
+    #[test]
+    fn gemm_entries_have_tile_configs() {
+        let Some(dir) = manifest_dir() else {
+            return;
+        };
+        let entries = load_manifest(&dir).unwrap();
+        let gemm: Vec<_> =
+            entries.iter().filter(|e| e.benchmark == "gemm").collect();
+        assert!(!gemm.is_empty());
+        for e in gemm {
+            assert!(e.config.contains_key("mwg"));
+            assert!(e.ops.get("INST_F32").copied().unwrap_or(0.0) > 0.0);
+        }
+    }
+}

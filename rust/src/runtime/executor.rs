@@ -1,0 +1,123 @@
+//! PJRT executor: load HLO text → compile once → execute + time.
+//!
+//! Follows /opt/xla-example/load_hlo: HLO *text* is the interchange
+//! format (jax ≥ 0.5 emits 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects in proto form; the text parser reassigns ids).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::rng::Rng;
+
+use super::ArtifactEntry;
+
+/// A compiled kernel variant ready to run on the PJRT CPU client.
+pub struct Executor {
+    exe: xla::PjRtLoadedExecutable,
+    args: Vec<xla::Literal>,
+}
+
+impl Executor {
+    /// Compile one artifact and materialize its synthetic inputs.
+    pub fn compile(
+        client: &xla::PjRtClient,
+        entry: &ArtifactEntry,
+        seed: u64,
+    ) -> Result<Executor> {
+        let exe = Self::compile_hlo(client, &entry.path)?;
+        let mut rng = Rng::new(seed);
+        let args = entry
+            .arg_shapes
+            .iter()
+            .map(|shape| synth_input(shape, &mut rng))
+            .collect::<Result<_>>()?;
+        Ok(Executor { exe, args })
+    }
+
+    fn compile_hlo(
+        client: &xla::PjRtClient,
+        path: &Path,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// One full execution (inputs already device-resident as literals);
+    /// returns wall-clock milliseconds. Output is materialized to keep
+    /// lazy backends honest.
+    pub fn run_once(&self) -> Result<f64> {
+        let t0 = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&self.args)?;
+        let _ = result[0][0].to_literal_sync()?;
+        Ok(t0.elapsed().as_secs_f64() * 1e3)
+    }
+
+    /// Median-of-`reps` timing after one warmup run.
+    pub fn time_ms(&self, reps: usize) -> Result<f64> {
+        self.run_once()?; // warmup
+        let mut times = Vec::with_capacity(reps);
+        for _ in 0..reps.max(1) {
+            times.push(self.run_once()?);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ok(times[times.len() / 2])
+    }
+}
+
+/// Synthetic float32 input in [0.1, 1.1) — strictly positive so rsqrt
+/// paths stay finite.
+fn synth_input(shape: &[usize], rng: &mut Rng) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    let data: Vec<f32> =
+        (0..n).map(|_| 0.1 + rng.f64() as f32).collect();
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(&data)
+        .reshape(&dims)
+        .context("reshaping synthetic input")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::load_manifest;
+    use std::path::PathBuf;
+
+    fn artifacts() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn compiles_and_runs_a_real_artifact() {
+        let Some(dir) = artifacts() else {
+            eprintln!("artifacts not built; skipping");
+            return;
+        };
+        let entries = load_manifest(&dir).unwrap();
+        let entry = entries
+            .iter()
+            .find(|e| e.benchmark == "transpose")
+            .unwrap();
+        let client = xla::PjRtClient::cpu().unwrap();
+        let exe = Executor::compile(&client, entry, 1).unwrap();
+        let ms = exe.time_ms(3).unwrap();
+        assert!(ms > 0.0 && ms < 60_000.0, "{ms} ms");
+    }
+
+    #[test]
+    fn synth_input_shape() {
+        let mut rng = Rng::new(1);
+        let lit = synth_input(&[4, 2], &mut rng).unwrap();
+        let v = lit.to_vec::<f32>().unwrap();
+        assert_eq!(v.len(), 8);
+        assert!(v.iter().all(|x| *x > 0.0));
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime: the *real* empirical-measurement path.
+//!
+//! Loads the HLO-text artifacts produced at build time by
+//! `python/compile/aot.py` (L2 JAX models wrapping L1 Pallas kernels),
+//! compiles them on the PJRT CPU client via the `xla` crate, executes
+//! them with synthetic inputs and wall-clock-times each run. Python is
+//! never on this path.
+//!
+//! [`PjrtEnv`] adapts a benchmark's artifact set into an [`EvalEnv`], so
+//! every searcher can tune over *really executing* kernels
+//! (examples/e2e_autotune.rs). Counter synthesis for the real path is
+//! documented in DESIGN.md §2: PC_ops come from the manifest's analytic
+//! op counts; PC_stress are derived from measured runtime against
+//! calibrated host rates.
+
+mod artifact;
+mod executor;
+mod pjrt_env;
+
+pub use artifact::{load_manifest, ArtifactEntry};
+pub use executor::Executor;
+pub use pjrt_env::{host_spec, PjrtEnv};

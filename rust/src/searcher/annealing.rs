@@ -1,0 +1,118 @@
+//! Simulated annealing — an extra optimization-based baseline used by
+//! the ablation benches (not in the paper's comparison set, but a
+//! common autotuning searcher, cf. [2, 33]).
+
+use crate::util::rng::Rng;
+
+use super::{budget_done, Budget, EvalEnv, Searcher, SearchTrace, Step};
+
+pub struct SimulatedAnnealing {
+    rng: Rng,
+    /// Initial temperature as a fraction of the first runtime.
+    pub t0: f64,
+    /// Multiplicative cooling per accepted move.
+    pub cooling: f64,
+}
+
+impl SimulatedAnnealing {
+    pub fn new(seed: u64) -> Self {
+        SimulatedAnnealing {
+            rng: Rng::new(seed),
+            t0: 0.5,
+            cooling: 0.95,
+        }
+    }
+}
+
+impl Searcher for SimulatedAnnealing {
+    fn name(&self) -> &'static str {
+        "annealing"
+    }
+
+    fn run(&mut self, env: &mut dyn EvalEnv, budget: &Budget) -> SearchTrace {
+        let size = env.space().len();
+        let mut trace = SearchTrace::default();
+        let mut explored: Vec<Option<f64>> = vec![None; size];
+
+        let mut current = self.rng.below(size);
+        let m = env.measure(current, false);
+        explored[current] = Some(m.runtime_ms);
+        trace.push(Step {
+            idx: current,
+            runtime_ms: m.runtime_ms,
+            profiled: false,
+            cost_after_s: env.cost_so_far(),
+            build: false,
+        });
+        let mut t_cur = m.runtime_ms;
+        let mut temp = self.t0 * t_cur;
+
+        while !budget_done(&trace, budget, env) {
+            let from = env.space().configs[current].clone();
+            let nbs: Vec<usize> = env
+                .space()
+                .neighbours(&from, 1)
+                .into_iter()
+                .filter(|&i| explored[i].is_none())
+                .collect();
+            let next = if nbs.is_empty() {
+                let rest: Vec<usize> =
+                    (0..size).filter(|&i| explored[i].is_none()).collect();
+                if rest.is_empty() {
+                    break;
+                }
+                *self.rng.choose(&rest)
+            } else {
+                *self.rng.choose(&nbs)
+            };
+            let m = env.measure(next, false);
+            explored[next] = Some(m.runtime_ms);
+            trace.push(Step {
+                idx: next,
+                runtime_ms: m.runtime_ms,
+                profiled: false,
+                cost_after_s: env.cost_so_far(),
+                build: false,
+            });
+            let accept = m.runtime_ms < t_cur
+                || self.rng.f64()
+                    < (-(m.runtime_ms - t_cur) / temp.max(1e-12)).exp();
+            if accept {
+                current = next;
+                t_cur = m.runtime_ms;
+                temp *= self.cooling;
+            }
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{record_space, Benchmark, Coulomb};
+    use crate::gpusim::GpuSpec;
+    use crate::searcher::{CostModel, ReplayEnv};
+
+    #[test]
+    fn anneals_to_threshold() {
+        let gpu = GpuSpec::gtx1070();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        let thr = rec.best_time() * 1.15;
+        let mut e = ReplayEnv::new(rec, gpu, CostModel::default());
+        let trace = SimulatedAnnealing::new(11)
+            .run(&mut e, &Budget::until(thr, 100_000));
+        assert!(trace.steps.last().unwrap().runtime_ms <= thr);
+    }
+
+    #[test]
+    fn unique_tests_and_termination() {
+        let gpu = GpuSpec::gtx750();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        let n = rec.space.len();
+        let mut e = ReplayEnv::new(rec, gpu, CostModel::default());
+        let trace =
+            SimulatedAnnealing::new(7).run(&mut e, &Budget::tests(n * 2));
+        assert_eq!(trace.len(), n);
+    }
+}

@@ -1,0 +1,181 @@
+//! Basin Hopping — the Kernel Tuner baseline (paper §4.7, [40]).
+//!
+//! Global/local hybrid: greedy first-improvement local search over the
+//! Hamming-1 neighbourhood, and when a local minimum is reached, a
+//! random "hop" (perturb a few parameters) with Metropolis acceptance at
+//! temperature `T` — Kernel Tuner's default strategy shape.
+
+use crate::util::rng::Rng;
+
+use super::{budget_done, Budget, EvalEnv, Searcher, SearchTrace, Step};
+
+pub struct BasinHopping {
+    rng: Rng,
+    /// Metropolis temperature, relative to the incumbent runtime.
+    pub temperature: f64,
+    /// Parameters flipped per hop.
+    pub hop_strength: usize,
+}
+
+impl BasinHopping {
+    pub fn new(seed: u64) -> Self {
+        BasinHopping {
+            rng: Rng::new(seed),
+            temperature: 1.0,
+            hop_strength: 2,
+        }
+    }
+
+    /// Measure helper: record a step, maintain the explored set.
+    fn eval(
+        &mut self,
+        env: &mut dyn EvalEnv,
+        trace: &mut SearchTrace,
+        explored: &mut [Option<f64>],
+        idx: usize,
+    ) -> f64 {
+        if let Some(t) = explored[idx] {
+            return t; // cached — no new empirical test
+        }
+        let m = env.measure(idx, false);
+        explored[idx] = Some(m.runtime_ms);
+        trace.push(Step {
+            idx,
+            runtime_ms: m.runtime_ms,
+            profiled: false,
+            cost_after_s: env.cost_so_far(),
+            build: false,
+        });
+        m.runtime_ms
+    }
+}
+
+impl Searcher for BasinHopping {
+    fn name(&self) -> &'static str {
+        "basin_hopping"
+    }
+
+    fn run(&mut self, env: &mut dyn EvalEnv, budget: &Budget) -> SearchTrace {
+        let size = env.space().len();
+        let mut trace = SearchTrace::default();
+        let mut explored: Vec<Option<f64>> = vec![None; size];
+
+        // Precompute the neighbourhood structure lazily per visited node
+        // (Hamming-1 lists are cheap relative to kernel runs but cached
+        // to keep the searcher overhead down).
+        let mut neighbours: Vec<Option<Vec<usize>>> = vec![None; size];
+
+        let mut current = self.rng.below(size);
+        let mut t_cur =
+            self.eval(env, &mut trace, &mut explored, current);
+
+        while !budget_done(&trace, budget, env) {
+            // --- greedy local descent --------------------------------
+            let mut improved = true;
+            while improved && !budget_done(&trace, budget, env) {
+                improved = false;
+                if neighbours[current].is_none() {
+                    let from = env.space().configs[current].clone();
+                    neighbours[current] =
+                        Some(env.space().neighbours(&from, 1));
+                }
+                let mut order = neighbours[current].clone().unwrap();
+                self.rng.shuffle(&mut order);
+                for nb in order {
+                    if budget_done(&trace, budget, env) {
+                        break;
+                    }
+                    if explored[nb].is_some() {
+                        continue;
+                    }
+                    let t =
+                        self.eval(env, &mut trace, &mut explored, nb);
+                    if t < t_cur {
+                        current = nb;
+                        t_cur = t;
+                        improved = true;
+                        break; // first improvement
+                    }
+                }
+            }
+
+            if budget_done(&trace, budget, env) {
+                break;
+            }
+
+            // --- hop -----------------------------------------------------
+            let from = env.space().configs[current].clone();
+            let candidates = env
+                .space()
+                .neighbours(&from, self.hop_strength)
+                .into_iter()
+                .filter(|&i| explored[i].is_none())
+                .collect::<Vec<_>>();
+            let next = if candidates.is_empty() {
+                // restart anywhere unexplored
+                let unexplored: Vec<usize> = (0..size)
+                    .filter(|&i| explored[i].is_none())
+                    .collect();
+                if unexplored.is_empty() {
+                    break;
+                }
+                *self.rng.choose(&unexplored)
+            } else {
+                *self.rng.choose(&candidates)
+            };
+            let t_next = self.eval(env, &mut trace, &mut explored, next);
+            // Metropolis acceptance on the hop
+            let accept = t_next < t_cur || {
+                let d = (t_next - t_cur) / t_cur.max(1e-12);
+                self.rng.f64() < (-d / self.temperature).exp()
+            };
+            if accept {
+                current = next;
+                t_cur = t_next;
+            }
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{record_space, Benchmark, Coulomb};
+    use crate::gpusim::GpuSpec;
+    use crate::searcher::{CostModel, ReplayEnv};
+
+    fn env() -> ReplayEnv {
+        let gpu = GpuSpec::gtx1070();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        ReplayEnv::new(rec, gpu, CostModel::default())
+    }
+
+    #[test]
+    fn no_repeated_tests() {
+        let mut e = env();
+        let trace = BasinHopping::new(1).run(&mut e, &Budget::tests(80));
+        let mut idx: Vec<usize> = trace.steps.iter().map(|s| s.idx).collect();
+        let n = idx.len();
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), n, "each empirical test must be unique");
+    }
+
+    #[test]
+    fn converges_on_small_space() {
+        let mut e = env();
+        let thr = e.recorded().best_time() * 1.1;
+        let trace =
+            BasinHopping::new(5).run(&mut e, &Budget::until(thr, 100_000));
+        assert!(trace.steps.last().unwrap().runtime_ms <= thr);
+    }
+
+    #[test]
+    fn exhausts_space_and_stops() {
+        let mut e = env();
+        let n = e.space().len();
+        let trace = BasinHopping::new(2).run(&mut e, &Budget::tests(n * 2));
+        assert_eq!(trace.len(), n, "must stop after exhausting the space");
+    }
+}

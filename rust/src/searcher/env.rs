@@ -1,0 +1,215 @@
+//! Evaluation environments: where the searcher's empirical tests run.
+//!
+//! [`ReplayEnv`] replays an exhaustively recorded space — the paper's
+//! §4.1 methodology for the 1000-repetition step-count statistics — with
+//! a cost model that accounts for compilation, kernel runs, the
+//! profiling slowdown and optional result checking, so the time-domain
+//! experiments (§4.6) can be reproduced as well.
+
+use crate::counters::CounterVec;
+use crate::gpusim::GpuSpec;
+use crate::tuning::{RecordedSpace, Space};
+
+/// Result of one empirical test.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub runtime_ms: f64,
+    /// Present only when the run was profiled.
+    pub counters: Option<CounterVec>,
+}
+
+/// Where empirical tests execute.
+pub trait EvalEnv {
+    fn space(&self) -> &Space;
+
+    /// Run configuration `idx`; gather counters iff `profile`.
+    fn measure(&mut self, idx: usize, profile: bool) -> Measurement;
+
+    /// Accumulated tuning cost so far, in seconds.
+    fn cost_so_far(&self) -> f64;
+
+    /// The device tuning runs on (the expert system needs its core count
+    /// and counter generation).
+    fn gpu(&self) -> &GpuSpec;
+
+    /// Best runtime in the space, if known (replay envs know it).
+    fn known_best_ms(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Cost accounting for one empirical test (§4.6: profiled kernels run
+/// slower; each test pays compilation; offline tuning adds a result
+/// check).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Kernel compilation + launch pipeline per test, seconds.
+    pub compile_s: f64,
+    /// Result check (device→host copy + compare), seconds; 0 when
+    /// disabled (dynamic-tuning setting).
+    pub check_s: f64,
+    /// Profiled runs replay the kernel once per counter group: the
+    /// effective slowdown factor on the kernel runtime.
+    pub profile_factor: f64,
+    /// Fixed profiling overhead (CUPTI setup/teardown), seconds.
+    pub profile_fixed_s: f64,
+    /// Searcher overhead per selected configuration, seconds (the paper
+    /// measures its python searcher's scoring cost; ours is measured by
+    /// the benches and is orders of magnitude smaller).
+    pub searcher_s: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            compile_s: 0.20,
+            check_s: 0.0,
+            profile_factor: 8.0,
+            profile_fixed_s: 0.10,
+            searcher_s: 0.002,
+        }
+    }
+}
+
+impl CostModel {
+    /// §4.6 offline-tuning setting: result checking enabled.
+    pub fn with_check() -> Self {
+        CostModel {
+            check_s: 0.35,
+            ..Default::default()
+        }
+    }
+
+    pub fn cost_of(&self, runtime_ms: f64, profile: bool) -> f64 {
+        let run_s = runtime_ms / 1e3;
+        let mut c = self.compile_s + run_s + self.check_s + self.searcher_s;
+        if profile {
+            c += run_s * (self.profile_factor - 1.0) + self.profile_fixed_s;
+        }
+        c
+    }
+}
+
+/// Replay of an exhaustively recorded space.
+pub struct ReplayEnv {
+    rec: RecordedSpace,
+    gpu: GpuSpec,
+    cost: CostModel,
+    spent_s: f64,
+    /// Total measurements served (for tests/metrics).
+    pub measurements: usize,
+}
+
+impl ReplayEnv {
+    pub fn new(rec: RecordedSpace, gpu: GpuSpec, cost: CostModel) -> Self {
+        assert_eq!(
+            rec.gpu, gpu.name,
+            "recorded space {} replayed against device {}",
+            rec.gpu, gpu.name
+        );
+        ReplayEnv {
+            rec,
+            gpu,
+            cost,
+            spent_s: 0.0,
+            measurements: 0,
+        }
+    }
+
+    pub fn recorded(&self) -> &RecordedSpace {
+        &self.rec
+    }
+
+    pub fn reset_cost(&mut self) {
+        self.spent_s = 0.0;
+        self.measurements = 0;
+    }
+}
+
+impl EvalEnv for ReplayEnv {
+    fn space(&self) -> &Space {
+        &self.rec.space
+    }
+
+    fn measure(&mut self, idx: usize, profile: bool) -> Measurement {
+        let r = &self.rec.records[idx];
+        self.spent_s += self.cost.cost_of(r.runtime_ms, profile);
+        self.measurements += 1;
+        Measurement {
+            runtime_ms: r.runtime_ms,
+            counters: profile.then(|| r.counters.clone()),
+        }
+    }
+
+    fn cost_so_far(&self) -> f64 {
+        self.spent_s
+    }
+
+    fn gpu(&self) -> &GpuSpec {
+        &self.gpu
+    }
+
+    fn known_best_ms(&self) -> Option<f64> {
+        Some(self.rec.best_time())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{record_space, Benchmark, Coulomb};
+
+    fn env() -> ReplayEnv {
+        let gpu = GpuSpec::gtx750();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        ReplayEnv::new(rec, gpu, CostModel::default())
+    }
+
+    #[test]
+    fn measure_returns_recorded_values() {
+        let mut e = env();
+        let want = e.recorded().records[3].runtime_ms;
+        let m = e.measure(3, false);
+        assert_eq!(m.runtime_ms, want);
+        assert!(m.counters.is_none());
+        let m2 = e.measure(3, true);
+        assert!(m2.counters.is_some());
+    }
+
+    #[test]
+    fn profiling_costs_more() {
+        let cm = CostModel::default();
+        let plain = cm.cost_of(10.0, false);
+        let prof = cm.cost_of(10.0, true);
+        assert!(prof > plain);
+        // slow kernels pay proportionally more for profiling (§4.6 n-body
+        // large-instance effect)
+        let slow_ratio = cm.cost_of(1000.0, true) / cm.cost_of(1000.0, false);
+        let fast_ratio = cm.cost_of(1.0, true) / cm.cost_of(1.0, false);
+        assert!(slow_ratio > fast_ratio);
+    }
+
+    #[test]
+    fn cost_accumulates() {
+        let mut e = env();
+        assert_eq!(e.cost_so_far(), 0.0);
+        e.measure(0, false);
+        let c1 = e.cost_so_far();
+        e.measure(1, true);
+        assert!(e.cost_so_far() > c1);
+        assert_eq!(e.measurements, 2);
+        e.reset_cost();
+        assert_eq!(e.cost_so_far(), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn gpu_mismatch_panics() {
+        let rec = record_space(
+            &Coulomb,
+            &GpuSpec::gtx750(),
+            &Coulomb.default_input(),
+        );
+        let _ = ReplayEnv::new(rec, GpuSpec::gtx680(), CostModel::default());
+    }
+}

@@ -1,0 +1,222 @@
+//! Tuning-space searchers.
+//!
+//! * [`ProfileSearcher`] — the paper's contribution (Algorithm 1):
+//!   profile → bottlenecks → ΔPC → model-scored weighted-random steps.
+//! * [`RandomSearcher`] — the primary baseline (§4.3–4.6).
+//! * [`BasinHopping`] — the Kernel Tuner baseline (§4.7).
+//! * [`Starchart`] — the regression-tree baseline (§4.8).
+//! * [`SimulatedAnnealing`] — an extra optimization-based baseline used
+//!   by the ablation benches.
+//!
+//! Searchers drive an [`EvalEnv`] (replayed recorded space, live
+//! simulator, or the PJRT real-execution adapter) and produce a
+//! [`SearchTrace`] that the harness converts into steps-to-convergence
+//! and time-domain curves.
+
+mod annealing;
+mod basin_hopping;
+mod env;
+mod profile;
+mod random;
+mod starchart;
+
+pub use annealing::SimulatedAnnealing;
+pub use basin_hopping::BasinHopping;
+pub use env::{CostModel, EvalEnv, Measurement, ReplayEnv};
+pub use profile::ProfileSearcher;
+pub use random::RandomSearcher;
+pub use starchart::Starchart;
+
+/// Search budget: whichever limit is hit first ends the search.
+#[derive(Debug, Clone)]
+pub struct Budget {
+    /// Maximum empirical tests (kernel executions).
+    pub max_tests: usize,
+    /// Maximum accumulated tuning cost, seconds (compilation + runs +
+    /// profiling overhead), for the time-domain experiments.
+    pub max_cost_s: f64,
+    /// Stop early once a runtime at or below this is found (used by the
+    /// steps-to-well-performing experiments).
+    pub stop_at_ms: Option<f64>,
+}
+
+impl Budget {
+    pub fn tests(max_tests: usize) -> Budget {
+        Budget {
+            max_tests,
+            max_cost_s: f64::INFINITY,
+            stop_at_ms: None,
+        }
+    }
+
+    pub fn seconds(max_cost_s: f64) -> Budget {
+        Budget {
+            max_tests: usize::MAX,
+            max_cost_s,
+            stop_at_ms: None,
+        }
+    }
+
+    pub fn until(stop_at_ms: f64, max_tests: usize) -> Budget {
+        Budget {
+            max_tests,
+            max_cost_s: f64::INFINITY,
+            stop_at_ms: Some(stop_at_ms),
+        }
+    }
+}
+
+/// One empirical test in a search.
+#[derive(Debug, Clone)]
+pub struct Step {
+    pub idx: usize,
+    pub runtime_ms: f64,
+    pub profiled: bool,
+    /// Cumulative tuning cost after this step, seconds.
+    pub cost_after_s: f64,
+    /// True for steps spent building a surrogate model (Starchart's
+    /// "model build" phase in Table 8).
+    pub build: bool,
+}
+
+/// The full log of one search run.
+#[derive(Debug, Clone, Default)]
+pub struct SearchTrace {
+    pub steps: Vec<Step>,
+}
+
+impl SearchTrace {
+    pub fn push(&mut self, step: Step) {
+        self.steps.push(step);
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Best runtime seen within the first `n` steps.
+    pub fn best_within(&self, n: usize) -> f64 {
+        self.steps
+            .iter()
+            .take(n)
+            .map(|s| s.runtime_ms)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Number of empirical tests until a runtime ≤ `threshold_ms` is
+    /// found (1-based), or `None` if never reached.
+    pub fn tests_to_threshold(&self, threshold_ms: f64) -> Option<usize> {
+        self.steps
+            .iter()
+            .position(|s| s.runtime_ms <= threshold_ms)
+            .map(|p| p + 1)
+    }
+
+    /// Tuning cost (seconds) until a runtime ≤ `threshold_ms` is found.
+    pub fn cost_to_threshold(&self, threshold_ms: f64) -> Option<f64> {
+        self.steps
+            .iter()
+            .find(|s| s.runtime_ms <= threshold_ms)
+            .map(|s| s.cost_after_s)
+    }
+
+    /// (cost_seconds, best_so_far_ms) staircase for convergence plots.
+    pub fn convergence(&self) -> Vec<(f64, f64)> {
+        let mut out = Vec::with_capacity(self.steps.len());
+        let mut best = f64::INFINITY;
+        for s in &self.steps {
+            best = best.min(s.runtime_ms);
+            out.push((s.cost_after_s, best));
+        }
+        out
+    }
+
+    /// Steps spent on model building (Starchart).
+    pub fn build_steps(&self) -> usize {
+        self.steps.iter().filter(|s| s.build).count()
+    }
+}
+
+/// A tuning-space search strategy.
+pub trait Searcher {
+    fn name(&self) -> &'static str;
+
+    /// Run until the budget is exhausted (or the space is).
+    fn run(&mut self, env: &mut dyn EvalEnv, budget: &Budget) -> SearchTrace;
+}
+
+/// Shared helper: should the search stop now?
+pub(crate) fn budget_done(
+    trace: &SearchTrace,
+    budget: &Budget,
+    env: &dyn EvalEnv,
+) -> bool {
+    if trace.len() >= budget.max_tests {
+        return true;
+    }
+    if env.cost_so_far() >= budget.max_cost_s {
+        return true;
+    }
+    if let Some(thr) = budget.stop_at_ms {
+        // model-build measurements (Starchart) don't count as "found":
+        // the protocol finishes training before exploiting the model
+        if trace
+            .steps
+            .iter()
+            .any(|s| !s.build && s.runtime_ms <= thr)
+        {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(runtimes: &[f64]) -> SearchTrace {
+        let mut t = SearchTrace::default();
+        for (i, &r) in runtimes.iter().enumerate() {
+            t.push(Step {
+                idx: i,
+                runtime_ms: r,
+                profiled: false,
+                cost_after_s: (i + 1) as f64,
+                build: false,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn tests_to_threshold_is_one_based() {
+        let t = trace(&[5.0, 3.0, 1.0, 2.0]);
+        assert_eq!(t.tests_to_threshold(3.0), Some(2));
+        assert_eq!(t.tests_to_threshold(1.0), Some(3));
+        assert_eq!(t.tests_to_threshold(0.5), None);
+    }
+
+    #[test]
+    fn convergence_is_monotone() {
+        let t = trace(&[5.0, 7.0, 3.0, 4.0]);
+        let c = t.convergence();
+        assert_eq!(c.len(), 4);
+        for w in c.windows(2) {
+            assert!(w[1].1 <= w[0].1);
+        }
+        assert_eq!(c[3].1, 3.0);
+    }
+
+    #[test]
+    fn best_within_prefix() {
+        let t = trace(&[5.0, 2.0, 1.0]);
+        assert_eq!(t.best_within(1), 5.0);
+        assert_eq!(t.best_within(2), 2.0);
+        assert_eq!(t.best_within(100), 1.0);
+    }
+}

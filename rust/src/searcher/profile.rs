@@ -1,0 +1,339 @@
+//! The profile-based searcher — the paper's Algorithm 1.
+//!
+//! Each profiling round:
+//! 1. empirically measure the current `c_profile` *with* counters;
+//! 2. run the expert system: bottlenecks (Eqs. 6–14) → ΔPC (Eq. 15);
+//! 3. score every unexplored configuration with the TP→PC model
+//!    (Eq. 16) and normalize (Eq. 17);
+//! 4. take `n` weighted-random steps *without* profiling (plain runs are
+//!    faster); the best runtime seen becomes the next `c_profile`.
+//!
+//! The model may have been trained on a different GPU or input — the
+//! scoring compares model predictions for both configurations, never
+//! model predictions against live measurements (§3.6).
+
+use crate::counters::CounterVec;
+use crate::expert::{
+    active_deltas, analyze, normalize_scores, react, score_active,
+};
+use crate::model::TpPcModel;
+use crate::util::rng::Rng;
+
+use super::{budget_done, Budget, EvalEnv, Searcher, SearchTrace, Step};
+
+pub struct ProfileSearcher<'m> {
+    model: &'m dyn TpPcModel,
+    /// Steps without profiling per round (the paper's `n`, default 5).
+    pub n_unprofiled: usize,
+    /// The Eq. 15 threshold (0.7 default, 0.5 for instruction-bound).
+    pub inst_reaction: f64,
+    /// Restrict scoring to the Hamming-ball of this radius around the
+    /// profiled configuration (the paper's §3.9.1 local-search variant
+    /// and footnote-5 huge-space device). `None` = global (paper
+    /// default).
+    pub neighbourhood: Option<usize>,
+    rng: Rng,
+}
+
+impl<'m> ProfileSearcher<'m> {
+    pub fn new(model: &'m dyn TpPcModel, inst_reaction: f64, seed: u64) -> Self {
+        ProfileSearcher {
+            model,
+            n_unprofiled: 5,
+            inst_reaction,
+            neighbourhood: None,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Local-search variant (§3.9.1): only configurations within
+    /// `radius` parameter changes of the profiled configuration are
+    /// scored each round; falls back to global scoring when the
+    /// neighbourhood is exhausted.
+    pub fn with_neighbourhood(mut self, radius: usize) -> Self {
+        self.neighbourhood = Some(radius);
+        self
+    }
+}
+
+impl Searcher for ProfileSearcher<'_> {
+    fn name(&self) -> &'static str {
+        "profile"
+    }
+
+    fn run(&mut self, env: &mut dyn EvalEnv, budget: &Budget) -> SearchTrace {
+        let size = env.space().len();
+        // Pre-compute model predictions for the whole space once — they
+        // depend only on the configuration (hot path: Eq. 16 runs over
+        // all unexplored configurations each round).
+        let preds: Vec<CounterVec> = env
+            .space()
+            .configs
+            .iter()
+            .map(|c| self.model.predict(c))
+            .collect();
+        // the local variant needs the space across measurement calls
+        let local_space = self.neighbourhood.map(|_| env.space().clone());
+
+        let mut explored = vec![false; size];
+        let mut trace = SearchTrace::default();
+        let mut scores = vec![0.0f64; size];
+
+        let mut c_profile = self.rng.below(size);
+
+        'outer: loop {
+            if budget_done(&trace, budget, env) {
+                break;
+            }
+            // --- profile the current configuration -----------------------
+            let m = env.measure(c_profile, true);
+            explored[c_profile] = true;
+            trace.push(Step {
+                idx: c_profile,
+                runtime_ms: m.runtime_ms,
+                profiled: true,
+                cost_after_s: env.cost_so_far(),
+                build: false,
+            });
+            let mut t_best_round = m.runtime_ms;
+
+            // --- expert system -------------------------------------------
+            let counters = m.counters.expect("profiled run must yield counters");
+            let bottlenecks = analyze(&counters, env.gpu());
+            let delta = react(&bottlenecks, self.inst_reaction);
+
+            // --- score the candidate set (Eqs. 16–17) --------------------
+            // candidate set: whole space, or the §3.9.1 neighbourhood
+            let candidates: Option<Vec<usize>> =
+                self.neighbourhood.and_then(|radius| {
+                    let space = local_space.as_ref().unwrap();
+                    let from = &space.configs[c_profile];
+                    let nb: Vec<usize> = space
+                        .neighbours(from, radius)
+                        .into_iter()
+                        .filter(|&i| !explored[i])
+                        .collect();
+                    // fall back to global when the ball is exhausted
+                    (nb.len() >= self.n_unprofiled).then_some(nb)
+                });
+
+            let pred_profile = &preds[c_profile];
+            let active = active_deltas(&delta);
+            match &candidates {
+                None => {
+                    for k in 0..size {
+                        scores[k] = if explored[k] {
+                            f64::NEG_INFINITY // flag: excluded
+                        } else {
+                            score_active(&active, pred_profile, &preds[k])
+                        };
+                    }
+                }
+                Some(nb) => {
+                    scores.fill(f64::NEG_INFINITY);
+                    for &k in nb {
+                        scores[k] =
+                            score_active(&active, pred_profile, &preds[k]);
+                    }
+                }
+            }
+            // normalize only the live entries
+            {
+                let mut live: Vec<f64> = scores
+                    .iter()
+                    .copied()
+                    .filter(|s| s.is_finite())
+                    .collect();
+                if live.is_empty() {
+                    break; // space exhausted
+                }
+                normalize_scores(&mut live);
+                let mut it = live.into_iter();
+                for s in scores.iter_mut() {
+                    if s.is_finite() {
+                        *s = it.next().unwrap();
+                    } else {
+                        *s = 0.0;
+                    }
+                }
+            }
+
+            // --- n weighted-random plain steps ---------------------------
+            for _ in 0..self.n_unprofiled {
+                if budget_done(&trace, budget, env) {
+                    break 'outer;
+                }
+                let Some(l) = self.rng.choose_weighted(&scores) else {
+                    break 'outer; // nothing selectable left
+                };
+                let m = env.measure(l, false);
+                explored[l] = true;
+                scores[l] = 0.0;
+                trace.push(Step {
+                    idx: l,
+                    runtime_ms: m.runtime_ms,
+                    profiled: false,
+                    cost_after_s: env.cost_so_far(),
+                    build: false,
+                });
+                // Algorithm 1 line 20: the round's fastest kernel becomes
+                // the next configuration to profile.
+                if m.runtime_ms <= t_best_round {
+                    t_best_round = m.runtime_ms;
+                    c_profile = l;
+                }
+            }
+            // If the profiled config stayed the round's best, re-profiling
+            // it adds no information — hop to the best unexplored-scored
+            // config's neighbourhood by keeping c_profile (the paper
+            // re-profiles the incumbent; we follow the paper).
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{record_space, Benchmark, Coulomb, Transpose};
+    use crate::gpusim::GpuSpec;
+    use crate::model::OracleModel;
+    use crate::searcher::{CostModel, RandomSearcher, ReplayEnv};
+    use crate::util::stats::mean;
+
+    fn replay(bench: &dyn Benchmark, gpu: GpuSpec) -> ReplayEnv {
+        let rec = record_space(bench, &gpu, &bench.default_input());
+        ReplayEnv::new(rec, gpu, CostModel::default())
+    }
+
+    /// Average steps to a well-performing configuration over `reps`.
+    fn avg_steps(
+        mk: &mut dyn FnMut(u64, &mut ReplayEnv) -> SearchTrace,
+        env_fn: &dyn Fn() -> ReplayEnv,
+        reps: u64,
+    ) -> f64 {
+        let mut steps = Vec::new();
+        for seed in 0..reps {
+            let mut env = env_fn();
+            let thr = env.recorded().best_time() * 1.1;
+            let trace = mk(seed, &mut env);
+            steps.push(
+                trace.tests_to_threshold(thr).unwrap_or(trace.len()) as f64,
+            );
+        }
+        mean(&steps)
+    }
+
+    #[test]
+    fn profiled_and_plain_steps_interleave() {
+        let gpu = GpuSpec::gtx1070();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        let oracle = OracleModel::new(&rec);
+        let mut env = ReplayEnv::new(rec, gpu, CostModel::default());
+        let mut s = ProfileSearcher::new(&oracle, 0.5, 7);
+        let trace = s.run(&mut env, &Budget::tests(24));
+        assert_eq!(trace.len(), 24);
+        // schedule: 1 profiled + 5 plain, repeated
+        assert!(trace.steps[0].profiled);
+        assert!(!trace.steps[1].profiled);
+        assert!(trace.steps[6].profiled);
+        let profiled = trace.steps.iter().filter(|s| s.profiled).count();
+        assert_eq!(profiled, 4);
+    }
+
+    #[test]
+    fn beats_random_with_oracle_pcs_on_coulomb() {
+        // the §4.3 experiment in miniature: oracle PCs, same GPU
+        let gpu = GpuSpec::gtx1070();
+        let env_fn = || replay(&Coulomb, GpuSpec::gtx1070());
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        let oracle = OracleModel::new(&rec);
+
+        let reps = 60;
+        let rand_steps = avg_steps(
+            &mut |seed, env| {
+                let thr = env.recorded().best_time() * 1.1;
+                RandomSearcher::new(seed)
+                    .run(env, &Budget::until(thr, 10_000))
+            },
+            &env_fn,
+            reps,
+        );
+        let prof_steps = avg_steps(
+            &mut |seed, env| {
+                let thr = env.recorded().best_time() * 1.1;
+                ProfileSearcher::new(&oracle, 0.5, seed)
+                    .run(env, &Budget::until(thr, 10_000))
+            },
+            &env_fn,
+            reps,
+        );
+        assert!(
+            prof_steps < rand_steps,
+            "profile {prof_steps} vs random {rand_steps}"
+        );
+    }
+
+    #[test]
+    fn beats_random_on_transpose_memory_bound() {
+        let gpu = GpuSpec::rtx2080();
+        let env_fn = || replay(&Transpose, GpuSpec::rtx2080());
+        let rec = record_space(&Transpose, &gpu, &Transpose.default_input());
+        let oracle = OracleModel::new(&rec);
+        let reps = 40;
+        let rand_steps = avg_steps(
+            &mut |seed, env| {
+                let thr = env.recorded().best_time() * 1.1;
+                RandomSearcher::new(seed)
+                    .run(env, &Budget::until(thr, 10_000))
+            },
+            &env_fn,
+            reps,
+        );
+        let prof_steps = avg_steps(
+            &mut |seed, env| {
+                let thr = env.recorded().best_time() * 1.1;
+                ProfileSearcher::new(&oracle, 0.7, seed)
+                    .run(env, &Budget::until(thr, 10_000))
+            },
+            &env_fn,
+            reps,
+        );
+        assert!(
+            prof_steps < rand_steps * 1.05,
+            "profile {prof_steps} vs random {rand_steps}"
+        );
+    }
+
+    #[test]
+    fn local_variant_converges_and_terminates() {
+        let gpu = GpuSpec::gtx1070();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        let n = rec.space.len();
+        let oracle = OracleModel::new(&rec);
+        let thr = rec.best_time() * 1.1;
+        let mut env = ReplayEnv::new(rec, gpu, CostModel::default());
+        let mut s =
+            ProfileSearcher::new(&oracle, 0.5, 11).with_neighbourhood(2);
+        let trace = s.run(&mut env, &Budget::until(thr, n * 3));
+        assert!(
+            trace.steps.iter().any(|st| st.runtime_ms <= thr),
+            "local variant failed to reach 1.1x best in {} steps",
+            trace.len()
+        );
+    }
+
+    #[test]
+    fn exhausts_space_without_hanging() {
+        let gpu = GpuSpec::gtx750();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        let n = rec.space.len();
+        let oracle = OracleModel::new(&rec);
+        let mut env = ReplayEnv::new(rec, gpu, CostModel::default());
+        let mut s = ProfileSearcher::new(&oracle, 0.5, 3);
+        let trace = s.run(&mut env, &Budget::tests(n * 3));
+        // profiled re-visits allowed; plain steps never repeat, so the
+        // trace is bounded and the searcher terminates
+        assert!(trace.len() <= n * 3);
+    }
+}

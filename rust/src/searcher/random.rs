@@ -1,0 +1,97 @@
+//! Uniform random search without replacement — the paper's primary
+//! baseline. The KTT spaces are designed to be "reasonably small", which
+//! the paper notes should *not* discriminate random search (§4.2).
+
+use crate::util::rng::Rng;
+
+use super::{budget_done, Budget, EvalEnv, Searcher, SearchTrace, Step};
+
+pub struct RandomSearcher {
+    rng: Rng,
+}
+
+impl RandomSearcher {
+    pub fn new(seed: u64) -> Self {
+        RandomSearcher {
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+impl Searcher for RandomSearcher {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn run(&mut self, env: &mut dyn EvalEnv, budget: &Budget) -> SearchTrace {
+        let n = env.space().len();
+        let mut order: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut order);
+        let mut trace = SearchTrace::default();
+        for idx in order {
+            if budget_done(&trace, budget, env) {
+                break;
+            }
+            let m = env.measure(idx, false);
+            trace.push(Step {
+                idx,
+                runtime_ms: m.runtime_ms,
+                profiled: false,
+                cost_after_s: env.cost_so_far(),
+                build: false,
+            });
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{record_space, Benchmark, Coulomb};
+    use crate::gpusim::GpuSpec;
+    use crate::searcher::{CostModel, ReplayEnv};
+
+    fn env() -> ReplayEnv {
+        let gpu = GpuSpec::gtx750();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        ReplayEnv::new(rec, gpu, CostModel::default())
+    }
+
+    #[test]
+    fn visits_unique_configs() {
+        let mut e = env();
+        let n = e.space().len();
+        let trace = RandomSearcher::new(1).run(&mut e, &Budget::tests(n));
+        assert_eq!(trace.len(), n);
+        let mut seen: Vec<usize> = trace.steps.iter().map(|s| s.idx).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), n);
+    }
+
+    #[test]
+    fn respects_test_budget() {
+        let mut e = env();
+        let trace = RandomSearcher::new(2).run(&mut e, &Budget::tests(10));
+        assert_eq!(trace.len(), 10);
+    }
+
+    #[test]
+    fn stops_at_threshold() {
+        let mut e = env();
+        let thr = e.recorded().best_time() * 1.1;
+        let trace =
+            RandomSearcher::new(3).run(&mut e, &Budget::until(thr, 100_000));
+        assert!(trace.steps.last().unwrap().runtime_ms <= thr);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let t1 = RandomSearcher::new(1).run(&mut env(), &Budget::tests(5));
+        let t2 = RandomSearcher::new(99).run(&mut env(), &Budget::tests(5));
+        let i1: Vec<usize> = t1.steps.iter().map(|s| s.idx).collect();
+        let i2: Vec<usize> = t2.steps.iter().map(|s| s.idx).collect();
+        assert_ne!(i1, i2);
+    }
+}

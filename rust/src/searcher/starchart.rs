@@ -1,0 +1,231 @@
+//! Starchart — the regression-tree baseline (paper §4.8, [18]).
+//!
+//! Protocol (as evaluated by the paper):
+//! 1. measure 200 random validation configurations;
+//! 2. train a runtime regression tree on a growing random sample
+//!    (starting at 20) until the median relative prediction error on the
+//!    validation set drops below 15 % or 200 training points are used —
+//!    all these measurements are "model build" steps;
+//! 3. rank all configurations by predicted runtime and empirically test
+//!    them best-first until a well-performing one is found ("tuning"
+//!    steps).
+//!
+//! The tree can also be exported and reused on a different GPU (the
+//! §4.8 portability probe — Table 9).
+
+use crate::model::RegressionTree;
+use crate::util::rng::Rng;
+use crate::util::stats::median_relative_error;
+
+use super::{budget_done, Budget, EvalEnv, Searcher, SearchTrace, Step};
+
+pub struct Starchart {
+    rng: Rng,
+    /// Validation-set size (paper: 200).
+    pub validation_points: usize,
+    /// Training growth step / start (paper: starts at 20).
+    pub train_step: usize,
+    /// Maximum training points (paper: 200).
+    pub max_train: usize,
+    /// Target median relative error (paper: 15 %).
+    pub target_error: f64,
+    /// A tree trained elsewhere (e.g. on another GPU): skips the model
+    /// build phase — Table 9's portability scenario.
+    pub pretrained: Option<RegressionTree>,
+    /// The tree after `run` (for export to another GPU).
+    pub trained_tree: Option<RegressionTree>,
+}
+
+impl Starchart {
+    pub fn new(seed: u64) -> Self {
+        Starchart {
+            rng: Rng::new(seed),
+            validation_points: 200,
+            train_step: 20,
+            max_train: 200,
+            target_error: 0.15,
+            pretrained: None,
+            trained_tree: None,
+        }
+    }
+
+    pub fn with_pretrained(seed: u64, tree: RegressionTree) -> Self {
+        Starchart {
+            pretrained: Some(tree),
+            ..Self::new(seed)
+        }
+    }
+}
+
+fn features(env: &dyn EvalEnv, idx: usize) -> Vec<f64> {
+    env.space().configs[idx]
+        .0
+        .iter()
+        .map(|&v| v as f64)
+        .collect()
+}
+
+impl Searcher for Starchart {
+    fn name(&self) -> &'static str {
+        "starchart"
+    }
+
+    fn run(&mut self, env: &mut dyn EvalEnv, budget: &Budget) -> SearchTrace {
+        let size = env.space().len();
+        let mut trace = SearchTrace::default();
+        let mut measured: Vec<Option<f64>> = vec![None; size];
+
+        let eval = |env: &mut dyn EvalEnv,
+                        trace: &mut SearchTrace,
+                        measured: &mut Vec<Option<f64>>,
+                        idx: usize,
+                        build: bool|
+         -> f64 {
+            if let Some(t) = measured[idx] {
+                return t;
+            }
+            let m = env.measure(idx, false);
+            measured[idx] = Some(m.runtime_ms);
+            trace.push(Step {
+                idx,
+                runtime_ms: m.runtime_ms,
+                profiled: false,
+                cost_after_s: env.cost_so_far(),
+                build,
+            });
+            m.runtime_ms
+        };
+
+        // During the model-build phase only the hard limits (tests/cost)
+        // apply: the protocol finishes training before exploiting the
+        // model, even if a lucky sample was already well-performing —
+        // the build cost is the point of the §4.8 comparison.
+        let hard = |trace: &SearchTrace, env: &dyn EvalEnv| {
+            trace.len() >= budget.max_tests
+                || env.cost_so_far() >= budget.max_cost_s
+        };
+
+        let tree = if let Some(t) = self.pretrained.clone() {
+            t
+        } else {
+            // --- validation set ------------------------------------------
+            let val_n = self.validation_points.min(size / 2).max(1);
+            let val_idx = self.rng.sample_indices(size, val_n);
+            let mut val_y = Vec::with_capacity(val_n);
+            for &i in &val_idx {
+                if hard(&trace, env) {
+                    return trace;
+                }
+                val_y.push(eval(env, &mut trace, &mut measured, i, true));
+            }
+            let val_x: Vec<Vec<f64>> =
+                val_idx.iter().map(|&i| features(env, i)).collect();
+
+            // --- iterative training --------------------------------------
+            let mut train_idx: Vec<usize> = Vec::new();
+            let mut tree;
+            loop {
+                // grow the training sample
+                let want = (train_idx.len() + self.train_step)
+                    .min(self.max_train)
+                    .min(size.saturating_sub(1));
+                while train_idx.len() < want {
+                    let cand = self.rng.below(size);
+                    if !train_idx.contains(&cand) {
+                        train_idx.push(cand);
+                    }
+                }
+                let mut train_x = Vec::with_capacity(train_idx.len());
+                let mut train_y = Vec::with_capacity(train_idx.len());
+                for &i in &train_idx {
+                    if hard(&trace, env) {
+                        return trace;
+                    }
+                    train_y
+                        .push(eval(env, &mut trace, &mut measured, i, true));
+                    train_x.push(features(env, i));
+                }
+                tree = RegressionTree::fit(&train_x, &train_y, 10, 2);
+                let pred: Vec<f64> =
+                    val_x.iter().map(|x| tree.predict(x)).collect();
+                let err = median_relative_error(&pred, &val_y);
+                let cap = self.max_train.min(size.saturating_sub(1)).max(1);
+                if err < self.target_error || train_idx.len() >= cap {
+                    break;
+                }
+            }
+            tree
+        };
+
+        // --- exploitation: walk configs by predicted runtime ------------
+        let mut order: Vec<usize> = (0..size).collect();
+        let pred: Vec<f64> = (0..size)
+            .map(|i| tree.predict(&features(env, i)))
+            .collect();
+        order.sort_by(|&a, &b| pred[a].partial_cmp(&pred[b]).unwrap());
+        self.trained_tree = Some(tree);
+        for idx in order {
+            if budget_done(&trace, budget, env) {
+                break;
+            }
+            if measured[idx].is_some() {
+                continue;
+            }
+            eval(env, &mut trace, &mut measured, idx, false);
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{record_space, Benchmark, Coulomb, Transpose};
+    use crate::gpusim::GpuSpec;
+    use crate::searcher::{CostModel, ReplayEnv};
+
+    fn env(gpu: GpuSpec) -> ReplayEnv {
+        let rec = record_space(&Transpose, &gpu, &Transpose.default_input());
+        ReplayEnv::new(rec, gpu, CostModel::default())
+    }
+
+    #[test]
+    fn build_then_tune_phases() {
+        let mut e = env(GpuSpec::gtx1070());
+        let thr = e.recorded().best_time() * 1.1;
+        let mut s = Starchart::new(1);
+        let trace = s.run(&mut e, &Budget::until(thr, 100_000));
+        let build = trace.build_steps();
+        assert!(build >= 20, "expected a model-build phase, got {build}");
+        assert!(trace.len() > build, "expected tuning steps after build");
+        assert!(s.trained_tree.is_some());
+    }
+
+    #[test]
+    fn pretrained_skips_build() {
+        // train on GTX 1070, reuse on RTX 2080 (Table 9 scenario)
+        let mut e1 = env(GpuSpec::gtx1070());
+        let thr1 = e1.recorded().best_time() * 1.1;
+        let mut s1 = Starchart::new(2);
+        s1.run(&mut e1, &Budget::until(thr1, 100_000));
+        let tree = s1.trained_tree.unwrap();
+
+        let mut e2 = env(GpuSpec::rtx2080());
+        let thr2 = e2.recorded().best_time() * 1.1;
+        let mut s2 = Starchart::with_pretrained(3, tree);
+        let trace = s2.run(&mut e2, &Budget::until(thr2, 100_000));
+        assert_eq!(trace.build_steps(), 0);
+        assert!(!trace.is_empty());
+    }
+
+    #[test]
+    fn small_space_does_not_overrun() {
+        let gpu = GpuSpec::gtx750();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        let n = rec.space.len();
+        let mut e = ReplayEnv::new(rec, gpu, CostModel::default());
+        let mut s = Starchart::new(4);
+        let trace = s.run(&mut e, &Budget::tests(10 * n));
+        assert!(trace.len() <= n, "each config at most once");
+    }
+}

@@ -1,0 +1,10 @@
+//! Tuning spaces: parameters, configurations, constraints, enumeration
+//! and exhaustively-recorded spaces (the paper's §4.1 replay methodology).
+
+mod param;
+mod recorded;
+mod space;
+
+pub use param::{Config, ParamDef};
+pub use recorded::{Record, RecordedSpace};
+pub use space::Space;

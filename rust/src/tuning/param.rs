@@ -1,0 +1,127 @@
+//! Tuning parameters and configurations.
+
+use crate::util::json::Value;
+
+/// One tuning parameter: a named, ordered set of discrete values the
+/// autotuner may assign (paper §1: "each tuning parameter can take one of
+/// a pre-defined set of discrete values").
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamDef {
+    pub name: String,
+    pub values: Vec<i64>,
+}
+
+impl ParamDef {
+    pub fn new(name: &str, values: &[i64]) -> Self {
+        assert!(!values.is_empty(), "parameter {name} has no values");
+        ParamDef {
+            name: name.to_string(),
+            values: values.to_vec(),
+        }
+    }
+
+    /// Binary parameters split the regression-model subspaces (§3.4.1).
+    pub fn is_binary(&self) -> bool {
+        self.values.len() == 2
+    }
+
+    pub fn to_json(&self) -> Value {
+        crate::util::json::obj(vec![
+            ("name", Value::from(self.name.clone())),
+            (
+                "values",
+                Value::Arr(self.values.iter().map(|&v| v.into()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let name = v.get("name")?.as_str().unwrap_or_default().to_string();
+        let values = v
+            .get("values")?
+            .as_arr()
+            .unwrap_or_default()
+            .iter()
+            .filter_map(|x| x.as_i64())
+            .collect();
+        Ok(ParamDef { name, values })
+    }
+}
+
+/// One tuning configuration: an assignment of a value to every parameter,
+/// stored positionally (parallel to `Space::params`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Config(pub Vec<i64>);
+
+impl Config {
+    #[inline]
+    pub fn get(&self, i: usize) -> i64 {
+        self.0[i]
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Hamming distance in parameter space — the neighbourhood metric
+    /// used by the local-search baselines.
+    pub fn hamming(&self, other: &Config) -> usize {
+        self.0
+            .iter()
+            .zip(&other.0)
+            .filter(|(a, b)| a != b)
+            .count()
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::Arr(self.0.iter().map(|&v| v.into()).collect())
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        Ok(Config(
+            v.as_arr()
+                .ok_or_else(|| anyhow::anyhow!("config must be an array"))?
+                .iter()
+                .filter_map(|x| x.as_i64())
+                .collect(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_detection() {
+        assert!(ParamDef::new("b", &[0, 1]).is_binary());
+        assert!(!ParamDef::new("t", &[1, 2, 4]).is_binary());
+    }
+
+    #[test]
+    fn hamming_distance() {
+        let a = Config(vec![1, 2, 3]);
+        let b = Config(vec![1, 5, 4]);
+        assert_eq!(a.hamming(&b), 2);
+        assert_eq!(a.hamming(&a), 0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = ParamDef::new("x", &[1, 2, 4]);
+        let back = ParamDef::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+        let c = Config(vec![4, -1, 0]);
+        assert_eq!(Config::from_json(&c.to_json()).unwrap(), c);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_values_panic() {
+        ParamDef::new("bad", &[]);
+    }
+}

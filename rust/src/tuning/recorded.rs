@@ -1,0 +1,240 @@
+//! Exhaustively-recorded tuning spaces.
+//!
+//! The paper's §4.1: *"instead of running kernels many times, it performs
+//! an exhaustive exploration of the entire tuning space and saves the
+//! tuning results (kernel runtimes and PCs); then we can perform
+//! autotuning space search faster, i.e. simply load the kernel runtimes
+//! and PCs from files."* `RecordedSpace` is exactly that artifact: one
+//! (runtime, counter-vector) record per configuration, serializable to
+//! JSON so the searcher-step experiments are replayable.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Space;
+use crate::counters::CounterVec;
+use crate::util::json::{self, obj, Value};
+
+/// The measurement recorded for one tuning configuration.
+#[derive(Debug, Clone)]
+pub struct Record {
+    pub runtime_ms: f64,
+    pub counters: CounterVec,
+}
+
+/// A tuning space together with the full measurement of every
+/// configuration on one (GPU, input) pair.
+#[derive(Debug, Clone)]
+pub struct RecordedSpace {
+    pub space: Space,
+    pub records: Vec<Record>,
+    /// GPU the records were measured on (spec name).
+    pub gpu: String,
+    /// Free-form input descriptor (e.g. "2048x2048").
+    pub input: String,
+}
+
+impl RecordedSpace {
+    pub fn new(space: Space, records: Vec<Record>, gpu: &str, input: &str) -> Self {
+        assert_eq!(space.len(), records.len());
+        RecordedSpace {
+            space,
+            records,
+            gpu: gpu.to_string(),
+            input: input.to_string(),
+        }
+    }
+
+    /// Best (lowest) runtime over the whole space.
+    pub fn best_time(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.runtime_ms)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn best_index(&self) -> usize {
+        let mut best = 0;
+        for (i, r) in self.records.iter().enumerate() {
+            if r.runtime_ms < self.records[best].runtime_ms {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Is configuration `idx` "well-performing" — within `factor`× of the
+    /// exhaustive-search best (the paper uses 1.1×, §4.1)?
+    pub fn is_well_performing(&self, idx: usize, factor: f64) -> bool {
+        self.records[idx].runtime_ms <= self.best_time() * factor
+    }
+
+    /// Number of well-performing configurations (difficulty measure).
+    pub fn well_performing_count(&self, factor: f64) -> usize {
+        let cut = self.best_time() * factor;
+        self.records
+            .iter()
+            .filter(|r| r.runtime_ms <= cut)
+            .count()
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("gpu", Value::from(self.gpu.clone())),
+            ("input", Value::from(self.input.clone())),
+            ("space", self.space.to_json()),
+            (
+                "records",
+                Value::Arr(
+                    self.records
+                        .iter()
+                        .map(|r| {
+                            obj(vec![
+                                ("runtime_ms", Value::from(r.runtime_ms)),
+                                ("counters", r.counters.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<RecordedSpace> {
+        let space = Space::from_json(v.get("space")?)?;
+        let records: Vec<Record> = v
+            .get("records")?
+            .as_arr()
+            .unwrap_or_default()
+            .iter()
+            .map(|r| {
+                Ok(Record {
+                    runtime_ms: r
+                        .get("runtime_ms")?
+                        .as_f64()
+                        .context("runtime_ms")?,
+                    counters: CounterVec::from_json(r.get("counters")?)?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        if records.len() != space.len() {
+            bail!(
+                "record count {} != space size {}",
+                records.len(),
+                space.len()
+            );
+        }
+        Ok(RecordedSpace {
+            space,
+            records,
+            gpu: v.get("gpu")?.as_str().unwrap_or_default().to_string(),
+            input: v.get("input")?.as_str().unwrap_or_default().to_string(),
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty(1))
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<RecordedSpace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        RecordedSpace::from_json(&json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::counters::Counter;
+    use crate::tuning::{Config, ParamDef};
+
+    fn toy() -> RecordedSpace {
+        let space = Space::enumerate(
+            "toy",
+            vec![ParamDef::new("a", &[1, 2, 3, 4])],
+            |_| true,
+        );
+        let records = (0..4)
+            .map(|i| {
+                let mut c = CounterVec::new();
+                c.set(Counter::InstF32, 100.0 * (i + 1) as f64);
+                Record {
+                    runtime_ms: [4.0, 1.0, 1.05, 2.0][i],
+                    counters: c,
+                }
+            })
+            .collect();
+        RecordedSpace::new(space, records, "sim", "toy-input")
+    }
+
+    #[test]
+    fn best_and_well_performing() {
+        let r = toy();
+        assert_eq!(r.best_time(), 1.0);
+        assert_eq!(r.best_index(), 1);
+        assert!(r.is_well_performing(1, 1.1));
+        assert!(r.is_well_performing(2, 1.1));
+        assert!(!r.is_well_performing(0, 1.1));
+        assert_eq!(r.well_performing_count(1.1), 2);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = toy();
+        let back = RecordedSpace::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.records.len(), 4);
+        assert_eq!(back.gpu, "sim");
+        assert_eq!(back.records[3].runtime_ms, 2.0);
+        assert_eq!(
+            back.records[2].counters.get(Counter::InstF32),
+            300.0
+        );
+    }
+
+    #[test]
+    fn save_load_file() {
+        let r = toy();
+        let dir = std::env::temp_dir().join("pcat_test_recorded");
+        let path = dir.join("toy.json");
+        r.save(&path).unwrap();
+        let back = RecordedSpace::load(&path).unwrap();
+        assert_eq!(back.space.len(), r.space.len());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        let space = Space::enumerate(
+            "t",
+            vec![ParamDef::new("a", &[1, 2])],
+            |_| true,
+        );
+        let _ = RecordedSpace::new(space, vec![], "g", "i");
+    }
+
+    #[test]
+    fn mismatched_json_rejected() {
+        let r = toy();
+        let mut v = r.to_json();
+        if let Value::Obj(o) = &mut v {
+            if let Some(Value::Arr(recs)) = o.get_mut("records") {
+                recs.pop();
+            }
+        }
+        assert!(RecordedSpace::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn config_values_survive_roundtrip() {
+        let r = toy();
+        let back = RecordedSpace::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.space.configs[2], Config(vec![3]));
+    }
+}

@@ -1,0 +1,210 @@
+//! Tuning-space enumeration: cross product of parameter values pruned by
+//! constraints, with index↔configuration mapping.
+
+use std::collections::HashMap;
+
+use super::{Config, ParamDef};
+use crate::util::json::Value;
+
+/// An enumerated (constraint-pruned) tuning space.
+#[derive(Debug, Clone)]
+pub struct Space {
+    pub name: String,
+    pub params: Vec<ParamDef>,
+    pub configs: Vec<Config>,
+    by_name: HashMap<String, usize>,
+}
+
+impl Space {
+    /// Enumerate the cross product of `params`, keeping configurations
+    /// accepted by `constraint`. Enumeration order is row-major with the
+    /// *last* parameter fastest (odometer order), which makes the index
+    /// of a configuration deterministic.
+    pub fn enumerate<F>(name: &str, params: Vec<ParamDef>, constraint: F) -> Space
+    where
+        F: Fn(&[i64]) -> bool,
+    {
+        let mut configs = Vec::new();
+        let mut idx = vec![0usize; params.len()];
+        let mut cur: Vec<i64> = params.iter().map(|p| p.values[0]).collect();
+        'outer: loop {
+            if constraint(&cur) {
+                configs.push(Config(cur.clone()));
+            }
+            // odometer increment
+            for d in (0..params.len()).rev() {
+                idx[d] += 1;
+                if idx[d] < params[d].values.len() {
+                    cur[d] = params[d].values[idx[d]];
+                    continue 'outer;
+                }
+                idx[d] = 0;
+                cur[d] = params[d].values[0];
+            }
+            break;
+        }
+        Space::from_configs(name, params, configs)
+    }
+
+    pub fn from_configs(
+        name: &str,
+        params: Vec<ParamDef>,
+        configs: Vec<Config>,
+    ) -> Space {
+        let by_name = params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.name.clone(), i))
+            .collect();
+        Space {
+            name: name.to_string(),
+            params,
+            configs,
+            by_name,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.configs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.configs.is_empty()
+    }
+
+    /// Number of tuning parameters ("dimensions" in the paper's Table 2).
+    pub fn dims(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.by_name.get(name).copied()
+    }
+
+    /// Value of named parameter within a configuration.
+    pub fn value(&self, cfg: &Config, name: &str) -> i64 {
+        cfg.get(self.param_index(name).unwrap_or_else(|| {
+            panic!("unknown tuning parameter {name:?} in space {}", self.name)
+        }))
+    }
+
+    /// Indices of configurations at Hamming distance ≤ `radius` from
+    /// `from` (excluding `from` itself) — the neighbourhood for local
+    /// search baselines.
+    pub fn neighbours(&self, from: &Config, radius: usize) -> Vec<usize> {
+        self.configs
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| {
+                let d = c.hamming(from);
+                d > 0 && d <= radius
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Value {
+        crate::util::json::obj(vec![
+            ("name", Value::from(self.name.clone())),
+            (
+                "params",
+                Value::Arr(self.params.iter().map(|p| p.to_json()).collect()),
+            ),
+            (
+                "configs",
+                Value::Arr(self.configs.iter().map(|c| c.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Space> {
+        let name = v.get("name")?.as_str().unwrap_or_default().to_string();
+        let params: Vec<ParamDef> = v
+            .get("params")?
+            .as_arr()
+            .unwrap_or_default()
+            .iter()
+            .map(ParamDef::from_json)
+            .collect::<anyhow::Result<_>>()?;
+        let configs: Vec<Config> = v
+            .get("configs")?
+            .as_arr()
+            .unwrap_or_default()
+            .iter()
+            .map(Config::from_json)
+            .collect::<anyhow::Result<_>>()?;
+        Ok(Space::from_configs(&name, params, configs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Space {
+        Space::enumerate(
+            "toy",
+            vec![
+                ParamDef::new("a", &[1, 2, 3]),
+                ParamDef::new("b", &[0, 1]),
+            ],
+            |_| true,
+        )
+    }
+
+    #[test]
+    fn full_cross_product_count() {
+        assert_eq!(toy().len(), 6);
+        assert_eq!(toy().dims(), 2);
+    }
+
+    #[test]
+    fn enumeration_order_is_odometer() {
+        let s = toy();
+        assert_eq!(s.configs[0], Config(vec![1, 0]));
+        assert_eq!(s.configs[1], Config(vec![1, 1]));
+        assert_eq!(s.configs[5], Config(vec![3, 1]));
+    }
+
+    #[test]
+    fn constraint_prunes() {
+        let s = Space::enumerate(
+            "c",
+            vec![
+                ParamDef::new("a", &[1, 2, 3, 4]),
+                ParamDef::new("b", &[1, 2, 3, 4]),
+            ],
+            |v| v[0] * v[1] <= 4,
+        );
+        // (1,1)(1,2)(1,3)(1,4)(2,1)(2,2)(3,1)(4,1)
+        assert_eq!(s.len(), 8);
+        for c in &s.configs {
+            assert!(c.get(0) * c.get(1) <= 4);
+        }
+    }
+
+    #[test]
+    fn value_by_name() {
+        let s = toy();
+        assert_eq!(s.value(&s.configs[4], "a"), 3);
+        assert_eq!(s.value(&s.configs[4], "b"), 0);
+        assert_eq!(s.param_index("nope"), None);
+    }
+
+    #[test]
+    fn neighbours_radius_one() {
+        let s = toy();
+        let n = s.neighbours(&s.configs[0], 1);
+        // (1,0): neighbours at d=1 are (1,1), (2,0), (3,0)
+        assert_eq!(n.len(), 3);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = toy();
+        let back = Space::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.len(), s.len());
+        assert_eq!(back.params, s.params);
+        assert_eq!(back.configs, s.configs);
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is offline with a fixed crate set (see
+//! DESIGN.md §2), so JSON (de)serialization, the PRNG and statistics
+//! helpers are implemented here instead of pulling serde/rand.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

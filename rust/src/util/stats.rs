@@ -1,0 +1,99 @@
+//! Statistics helpers for the evaluation harness (means over repeated
+//! stochastic searches, convergence-curve aggregation).
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64)
+        .sqrt()
+}
+
+/// Median (copies + sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Mean absolute error between predictions and targets.
+pub fn mae(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    mean(&pred
+        .iter()
+        .zip(target)
+        .map(|(p, t)| (p - t).abs())
+        .collect::<Vec<_>>())
+}
+
+/// Root mean squared error.
+pub fn rmse(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    mean(&pred
+        .iter()
+        .zip(target)
+        .map(|(p, t)| (p - t) * (p - t))
+        .collect::<Vec<_>>())
+    .sqrt()
+}
+
+/// Median relative error |p-t|/|t| over pairs with t != 0 — the
+/// Starchart (§4.8) model-accuracy stopping criterion.
+pub fn median_relative_error(pred: &[f64], target: &[f64]) -> f64 {
+    let rel: Vec<f64> = pred
+        .iter()
+        .zip(target)
+        .filter(|(_, t)| **t != 0.0)
+        .map(|(p, t)| ((p - t) / t).abs())
+        .collect();
+    median(&rel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_stddev() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert!((stddev(&xs) - 1.118033988).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(stddev(&[]), 0.0);
+    }
+
+    #[test]
+    fn errors() {
+        let p = [1.0, 2.0];
+        let t = [2.0, 2.0];
+        assert_eq!(mae(&p, &t), 0.5);
+        assert!((rmse(&p, &t) - (0.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(median_relative_error(&p, &t), 0.25);
+    }
+}

@@ -1,0 +1,114 @@
+//! Markdown table / ASCII chart rendering for the experiment reports.
+
+/// Render a markdown table with a header row.
+pub fn markdown(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str("| ");
+    out.push_str(&header.join(" | "));
+    out.push_str(" |\n|");
+    for _ in header {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str("| ");
+        out.push_str(&row.join(" | "));
+        out.push_str(" |\n");
+    }
+    out
+}
+
+/// Format a speedup like the paper: `5.25×`.
+pub fn speedup(x: f64) -> String {
+    format!("{:.2}×", x)
+}
+
+/// ASCII line chart of (x, y) series — a terminal stand-in for the
+/// paper's convergence figures; the CSV written next to it is the
+/// machine-readable artifact.
+pub fn ascii_chart(series: &[(&str, &[(f64, f64)])], width: usize, height: usize) -> String {
+    let all: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|(_, pts)| pts.iter().copied())
+        .collect();
+    if all.is_empty() {
+        return String::new();
+    }
+    let (mut x0, mut x1, mut y0, mut y1) = (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+    for &(x, y) in &all {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if x1 <= x0 {
+        x1 = x0 + 1.0;
+    }
+    if y1 <= y0 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![b' '; width]; height];
+    let marks = [b'*', b'o', b'+', b'x', b'#'];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for &(x, y) in pts.iter() {
+            let cx = (((x - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx] = marks[si % marks.len()];
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("y: {y0:.4} .. {y1:.4}\n"));
+    for row in grid {
+        out.push('|');
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("x: {x0:.2} .. {x1:.2}   "));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("[{}]={} ", marks[si % marks.len()] as char, name));
+    }
+    out.push('\n');
+    out
+}
+
+/// Write a CSV file of named series on a shared x column.
+pub fn csv(series: &[(&str, &[(f64, f64)])]) -> String {
+    let mut out = String::from("series,x,y\n");
+    for (name, pts) in series {
+        for (x, y) in pts.iter() {
+            out.push_str(&format!("{name},{x},{y}\n"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let t = markdown(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert!(t.contains("| a | b |"));
+        assert!(t.contains("| 1 | 2 |"));
+        assert_eq!(t.lines().count(), 3);
+    }
+
+    #[test]
+    fn chart_contains_marks() {
+        let pts = [(0.0, 0.0), (1.0, 1.0)];
+        let c = ascii_chart(&[("s", &pts)], 20, 5);
+        assert!(c.contains('*'));
+        assert!(c.contains("[*]=s"));
+    }
+
+    #[test]
+    fn csv_rows() {
+        let pts = [(0.0, 1.0)];
+        let c = csv(&[("r", &pts)]);
+        assert_eq!(c, "series,x,y\nr,0,1\n");
+    }
+}

@@ -1,0 +1,171 @@
+//! Cross-module integration tests: record → train → search → report,
+//! over simulated devices; plus CLI-level flows through the library API.
+
+use pcat::benchmarks::{self, record_space, Benchmark, Coulomb, Gemm};
+use pcat::coordinator::{SearcherChoice, Tuner};
+use pcat::counters::Counter;
+use pcat::gpusim::GpuSpec;
+use pcat::harness::{run_experiment, ExperimentOpts};
+use pcat::model::{
+    dataset_from_recorded, DecisionTreeModel, OracleModel, PrecomputedModel,
+    TpPcModel,
+};
+use pcat::searcher::{Budget, CostModel};
+use pcat::tuning::RecordedSpace;
+use pcat::util::rng::Rng;
+
+fn opts(reps: usize) -> ExperimentOpts {
+    ExperimentOpts {
+        reps,
+        time_reps: 5,
+        seed: 3,
+    }
+}
+
+#[test]
+fn record_train_save_load_tune_roundtrip() {
+    // the full offline pipeline a user would run via the CLI
+    let gpu = GpuSpec::gtx750();
+    let bench = Coulomb;
+    let rec = record_space(&bench, &gpu, &bench.default_input());
+
+    // save + reload the recording (the tuning-data artifact)
+    let dir = std::env::temp_dir().join("pcat_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let rec_path = dir.join("rec.json");
+    rec.save(&rec_path).unwrap();
+    let rec2 = RecordedSpace::load(&rec_path).unwrap();
+    assert_eq!(rec2.space.len(), rec.space.len());
+
+    // train + save + reload the model
+    let mut rng = Rng::new(4);
+    let ds = dataset_from_recorded(&rec2, 1.0, &mut rng);
+    let model = DecisionTreeModel::train(&ds, "gtx750", &mut rng);
+    let model_path = dir.join("model.json");
+    model.save(&model_path).unwrap();
+    let model2 = DecisionTreeModel::load(&model_path).unwrap();
+
+    // tune a *different* GPU with the loaded model
+    let gpu2 = GpuSpec::rtx2080();
+    let rec_t = record_space(&bench, &gpu2, &bench.default_input());
+    let pre = PrecomputedModel::over(&rec_t.space, &model2);
+    let mut tuner = Tuner::replay(rec_t.clone(), gpu2, CostModel::default())
+        .with_budget(Budget::tests(60))
+        .with_seed(5);
+    let result = tuner.run(SearcherChoice::Profile {
+        model: &pre,
+        inst_reaction: 0.5,
+    });
+    assert!(result.best_ms <= rec_t.best_time() * 2.0);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn all_searchers_finish_on_all_benchmarks() {
+    let gpu = GpuSpec::gtx1070();
+    for bench in benchmarks::evaluation_set() {
+        let rec = record_space(bench.as_ref(), &gpu, &bench.default_input());
+        let oracle = OracleModel::new(&rec);
+        for choice in [
+            SearcherChoice::Random,
+            SearcherChoice::Profile {
+                model: &oracle,
+                inst_reaction: 0.7,
+            },
+            SearcherChoice::BasinHopping,
+            SearcherChoice::Annealing,
+        ] {
+            let mut tuner =
+                Tuner::replay(rec.clone(), gpu.clone(), CostModel::default())
+                    .with_budget(Budget::tests(30))
+                    .with_seed(9);
+            let r = tuner.run(choice);
+            assert_eq!(r.tests, 30, "{} on {}", r.searcher, bench.name());
+            assert!(r.best_ms.is_finite());
+        }
+    }
+}
+
+#[test]
+fn profile_beats_random_in_majority_of_table5_cells() {
+    // the paper's headline: improvement in (nearly) all cells; we accept
+    // a majority criterion on the simulated substrate (DESIGN.md §2)
+    let o = opts(60);
+    let report = run_experiment("table5", &o).unwrap();
+    let csv = &report.csvs[0].1;
+    let mut wins = 0;
+    let mut cells = 0;
+    for line in csv.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        let imp: f64 = f[4].parse().unwrap();
+        cells += 1;
+        if imp > 1.0 {
+            wins += 1;
+        }
+    }
+    assert_eq!(cells, 20);
+    assert!(wins >= 12, "only {wins}/20 cells improved over random");
+}
+
+#[test]
+fn gemm_portability_row_stays_useful() {
+    // Table 6 scenario distilled: model from GTX 750 steering RTX 2080
+    let bench = Gemm;
+    let input = bench.default_input();
+    let rec_model = record_space(&bench, &GpuSpec::gtx750(), &input);
+    let rec_tune = record_space(&bench, &GpuSpec::rtx2080(), &input);
+    let mut rng = Rng::new(8);
+    let ds = dataset_from_recorded(&rec_model, 1.0, &mut rng);
+    let dtm = DecisionTreeModel::train(&ds, "gtx750", &mut rng);
+    let pre = PrecomputedModel::over(&rec_tune.space, &dtm);
+
+    let gpu = GpuSpec::rtx2080();
+    let reps = 40;
+    let rand = pcat::harness::avg_steps_to_well_performing(
+        &rec_tune,
+        &gpu,
+        reps,
+        0,
+        |s| Box::new(pcat::searcher::RandomSearcher::new(s)),
+    );
+    let prof = pcat::harness::avg_steps_to_well_performing(
+        &rec_tune,
+        &gpu,
+        reps,
+        7,
+        |s| Box::new(pcat::searcher::ProfileSearcher::new(&pre, 0.7, s)),
+    );
+    assert!(
+        prof < rand,
+        "cross-GPU model must still beat random: profile {prof} vs random {rand}"
+    );
+}
+
+#[test]
+fn fig1_stability_premise_holds_in_simulator() {
+    // INST_F32 totals are identical across devices for the same config
+    let bench = Coulomb;
+    let input = bench.default_input();
+    let a = record_space(&bench, &GpuSpec::gtx680(), &input);
+    let b = record_space(&bench, &GpuSpec::rtx2080(), &input);
+    for i in (0..a.space.len()).step_by(37) {
+        assert_eq!(
+            a.records[i].counters.get(Counter::InstF32),
+            b.records[i].counters.get(Counter::InstF32)
+        );
+    }
+}
+
+#[test]
+fn experiment_reports_write_and_contain_csv() {
+    let o = opts(8);
+    let dir = std::env::temp_dir().join("pcat_integration_reports");
+    for id in ["table2", "fig1"] {
+        let r = run_experiment(id, &o).unwrap();
+        r.write_to(&dir).unwrap();
+    }
+    assert!(dir.join("table2.md").exists());
+    assert!(dir.join("fig1.md").exists());
+    assert!(dir.join("fig1_data.csv").exists());
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -1,0 +1,293 @@
+//! Randomized property tests over the coordinator invariants
+//! (DESIGN.md §7). proptest is unavailable in the offline crate set, so
+//! properties are driven by the library's own seedable PRNG with many
+//! random cases per property — shrinkage-free but reproducible.
+
+use pcat::benchmarks::{self, record_space, Benchmark, Input};
+use pcat::counters::{Counter, CounterVec, ALL_COUNTERS};
+use pcat::expert::{analyze, normalize_scores, react, score, DeltaPc};
+use pcat::gpusim::{simulate, GpuSpec, Workload};
+use pcat::model::{OracleModel, TpPcModel};
+use pcat::searcher::{
+    BasinHopping, Budget, CostModel, ProfileSearcher, RandomSearcher,
+    ReplayEnv, Searcher, SimulatedAnnealing,
+};
+use pcat::tuning::{Config, ParamDef, Space};
+use pcat::util::rng::Rng;
+
+/// Random counter vector with plausible scales.
+fn random_counters(rng: &mut Rng) -> CounterVec {
+    let mut v = CounterVec::new();
+    for c in ALL_COUNTERS {
+        let scale = match c {
+            Counter::DramU | Counter::L2U | Counter::TexU | Counter::ShrU => {
+                10.0
+            }
+            Counter::SmE
+            | Counter::WarpE
+            | Counter::WarpNpE
+            | Counter::InstIssueU
+            | Counter::LocO => 100.0,
+            _ => 1e10,
+        };
+        v.set(c, rng.f64() * scale);
+    }
+    v
+}
+
+#[test]
+fn prop_bottlenecks_and_deltas_bounded() {
+    let mut rng = Rng::new(101);
+    for gpu in GpuSpec::all() {
+        for _ in 0..300 {
+            let pc = random_counters(&mut rng);
+            let b = analyze(&pc, &gpu);
+            for x in b.all() {
+                assert!((0.0..=1.0).contains(&x), "bottleneck {x}");
+            }
+            for thr in [0.5, 0.7] {
+                let d = react(&b, thr);
+                for (_, v) in d.0.iter() {
+                    assert!((-1.0..=1.0).contains(&v), "delta {v}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_eq17_normalization_bounds_and_order() {
+    let mut rng = Rng::new(7);
+    for _ in 0..200 {
+        let n = 2 + rng.below(300);
+        let mut raw: Vec<f64> =
+            (0..n).map(|_| rng.f64() * 4.0 - 2.0).collect();
+        let orig = raw.clone();
+        normalize_scores(&mut raw);
+        for &v in &raw {
+            assert!((0.0001..=256.0 + 1e-9).contains(&v), "{v}");
+        }
+        // order preserved among positives
+        for i in 0..n {
+            for j in 0..n {
+                if orig[i] > 0.0 && orig[j] > 0.0 && orig[i] < orig[j] {
+                    assert!(raw[i] <= raw[j] + 1e-9);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_score_antisymmetric_in_candidates() {
+    // swapping profile/candidate flips the score's sign
+    let mut rng = Rng::new(31);
+    for _ in 0..200 {
+        let mut d = DeltaPc::default();
+        d.0.set(Counter::DramRt, rng.f64() * 2.0 - 1.0);
+        d.0.set(Counter::Threads, rng.f64() * 2.0 - 1.0);
+        let mut a = CounterVec::new();
+        let mut b = CounterVec::new();
+        a.set(Counter::DramRt, 1.0 + rng.f64() * 100.0);
+        a.set(Counter::Threads, 1.0 + rng.f64() * 1e6);
+        b.set(Counter::DramRt, 1.0 + rng.f64() * 100.0);
+        b.set(Counter::Threads, 1.0 + rng.f64() * 1e6);
+        let s1 = score(&d, &a, &b);
+        let s2 = score(&d, &b, &a);
+        assert!((s1 + s2).abs() < 1e-12, "{s1} vs {s2}");
+    }
+}
+
+#[test]
+fn prop_space_enumeration_respects_constraints_and_is_unique() {
+    let mut rng = Rng::new(55);
+    for case in 0..40 {
+        let dims = 2 + rng.below(4);
+        let params: Vec<ParamDef> = (0..dims)
+            .map(|d| {
+                let k = 2 + rng.below(4);
+                let vals: Vec<i64> =
+                    (0..k).map(|i| 1 << (i + rng.below(2))).collect();
+                let mut vals = vals;
+                vals.dedup();
+                ParamDef::new(&format!("p{d}"), &vals)
+            })
+            .collect();
+        let limit = 4 + rng.below(60) as i64;
+        let space = Space::enumerate(&format!("s{case}"), params, |v| {
+            v.iter().sum::<i64>() <= limit
+        });
+        let mut seen = std::collections::HashSet::new();
+        for c in &space.configs {
+            assert!(c.0.iter().sum::<i64>() <= limit);
+            assert!(seen.insert(c.clone()), "duplicate config");
+        }
+    }
+}
+
+#[test]
+fn prop_simulator_sane_on_random_workloads() {
+    let mut rng = Rng::new(77);
+    for _ in 0..500 {
+        let w = Workload {
+            threads: 1.0 + rng.f64() * 1e7,
+            block_size: [32.0, 64.0, 128.0, 256.0, 512.0][rng.below(5)],
+            regs_per_thread: 16.0 + rng.f64() * 300.0,
+            shared_bytes_per_block: rng.f64() * 49_000.0,
+            fp32: rng.f64() * 1e10,
+            fp64: rng.f64() * 1e7,
+            int: rng.f64() * 1e9,
+            misc: rng.f64() * 1e8,
+            ldst: rng.f64() * 1e9,
+            cont: rng.f64() * 1e8,
+            bconv: rng.f64() * 1e7,
+            gread: rng.f64() * 1e10,
+            gwrite: rng.f64() * 1e9,
+            tex_fraction: rng.f64(),
+            tex_footprint_per_sm: rng.f64() * 1e6,
+            l2_footprint: rng.f64() * 1e9,
+            shared_load_bytes: rng.f64() * 1e9,
+            shared_store_bytes: rng.f64() * 1e9,
+            local_bytes: 0.0,
+            divergence: rng.f64() * 0.9,
+        };
+        for gpu in GpuSpec::all() {
+            let r = simulate(&gpu, &w);
+            assert!(r.runtime_ms.is_finite() && r.runtime_ms > 0.0);
+            for (c, v) in r.counters.iter() {
+                assert!(v.is_finite() && v >= 0.0, "{c}={v}");
+            }
+            assert!(r.counters.get(Counter::DramU) <= 10.0);
+            assert!(r.counters.get(Counter::SmE) <= 100.0);
+        }
+    }
+}
+
+#[test]
+fn prop_input_scaling_preserves_ops_ratios() {
+    // Eq. 5: the ratio of PC_ops between two configs is input-stable
+    let bench = benchmarks::by_name("nbody").unwrap();
+    let space = bench.space();
+    let gpu = GpuSpec::gtx1070();
+    let mut rng = Rng::new(13);
+    let small = Input::new("s", &[8192]);
+    let large = Input::new("l", &[65536]);
+    for _ in 0..60 {
+        let i = rng.below(space.len());
+        let j = rng.below(space.len());
+        let (wi_s, wj_s) = (
+            bench.workload(&space, &space.configs[i], &small),
+            bench.workload(&space, &space.configs[j], &small),
+        );
+        let (wi_l, wj_l) = (
+            bench.workload(&space, &space.configs[i], &large),
+            bench.workload(&space, &space.configs[j], &large),
+        );
+        let (ri_s, rj_s) = (simulate(&gpu, &wi_s), simulate(&gpu, &wj_s));
+        let (ri_l, rj_l) = (simulate(&gpu, &wi_l), simulate(&gpu, &wj_l));
+        let f = Counter::InstF32;
+        let ratio_s =
+            ri_s.counters.get(f) / rj_s.counters.get(f).max(1e-30);
+        let ratio_l =
+            ri_l.counters.get(f) / rj_l.counters.get(f).max(1e-30);
+        let rel = (ratio_s / ratio_l - 1.0).abs();
+        assert!(rel < 0.25, "config pair ({i},{j}): {ratio_s} vs {ratio_l}");
+    }
+}
+
+#[test]
+fn prop_searchers_never_retest_plain_configs() {
+    // every plain (non-profiled) empirical test targets a fresh config
+    let gpu = GpuSpec::gtx750();
+    let bench = benchmarks::by_name("coulomb").unwrap();
+    let rec = record_space(bench.as_ref(), &gpu, &bench.default_input());
+    let oracle = OracleModel::new(&rec);
+    for seed in 0..12u64 {
+        let searchers: Vec<Box<dyn Searcher>> = vec![
+            Box::new(RandomSearcher::new(seed)),
+            Box::new(ProfileSearcher::new(&oracle, 0.7, seed)),
+            Box::new(BasinHopping::new(seed)),
+            Box::new(SimulatedAnnealing::new(seed)),
+        ];
+        for mut s in searchers {
+            let mut env = ReplayEnv::new(
+                rec.clone(),
+                gpu.clone(),
+                CostModel::default(),
+            );
+            let trace = s.run(&mut env, &Budget::tests(100));
+            let mut seen = std::collections::HashSet::new();
+            for step in &trace.steps {
+                if !step.profiled {
+                    assert!(
+                        seen.insert(step.idx),
+                        "{}: retested config {}",
+                        s.name(),
+                        step.idx
+                    );
+                } else {
+                    seen.insert(step.idx);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_trace_costs_monotone() {
+    let gpu = GpuSpec::gtx750();
+    let bench = benchmarks::by_name("transpose").unwrap();
+    let rec = record_space(bench.as_ref(), &gpu, &bench.default_input());
+    for seed in 0..8u64 {
+        let mut env =
+            ReplayEnv::new(rec.clone(), gpu.clone(), CostModel::with_check());
+        let trace =
+            RandomSearcher::new(seed).run(&mut env, &Budget::tests(60));
+        let mut last = 0.0;
+        for s in &trace.steps {
+            assert!(s.cost_after_s > last);
+            last = s.cost_after_s;
+        }
+    }
+}
+
+#[test]
+fn prop_oracle_profile_search_is_deterministic_per_seed() {
+    let gpu = GpuSpec::gtx1070();
+    let bench = benchmarks::by_name("coulomb").unwrap();
+    let rec = record_space(bench.as_ref(), &gpu, &bench.default_input());
+    let oracle = OracleModel::new(&rec);
+    for seed in [1u64, 42, 999] {
+        let run = |seed| {
+            let mut env = ReplayEnv::new(
+                rec.clone(),
+                gpu.clone(),
+                CostModel::default(),
+            );
+            ProfileSearcher::new(&oracle, 0.5, seed)
+                .run(&mut env, &Budget::tests(40))
+                .steps
+                .iter()
+                .map(|s| s.idx)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(seed), run(seed));
+    }
+}
+
+#[test]
+fn prop_config_hamming_is_a_metric() {
+    let mut rng = Rng::new(5);
+    for _ in 0..200 {
+        let n = 1 + rng.below(8);
+        let mk = |rng: &mut Rng| {
+            Config((0..n).map(|_| rng.below(4) as i64).collect())
+        };
+        let a = mk(&mut rng);
+        let b = mk(&mut rng);
+        let c = mk(&mut rng);
+        assert_eq!(a.hamming(&a), 0);
+        assert_eq!(a.hamming(&b), b.hamming(&a));
+        assert!(a.hamming(&c) <= a.hamming(&b) + b.hamming(&c));
+    }
+}
