@@ -19,12 +19,14 @@
 //! exact counts depend on value sets that the paper does not fully
 //! enumerate).
 
+mod cache;
 mod convolution;
 mod coulomb;
 mod gemm;
 mod nbody;
 mod transpose;
 
+pub use cache::{cached_space, cached_spaces, recorded_count};
 pub use convolution::Convolution;
 pub use coulomb::Coulomb;
 pub use gemm::{Gemm, GemmFull};

@@ -7,7 +7,9 @@
 //! downstream user of the library touches; the experiment harness and
 //! the CLI are built on it.
 
-use crate::benchmarks::{record_space, Benchmark, Input};
+use std::sync::Arc;
+
+use crate::benchmarks::{cached_space, Benchmark, Input};
 use crate::gpusim::GpuSpec;
 use crate::model::TpPcModel;
 use crate::searcher::{
@@ -67,19 +69,26 @@ pub struct Tuner {
 
 impl Tuner {
     /// Tune a benchmark on a simulated GPU (records the space first —
-    /// exactly the paper's replay methodology).
+    /// exactly the paper's replay methodology). The recording comes from
+    /// the process-wide space cache, so repeated tuner construction for
+    /// the same (benchmark, GPU, input) enumerates the space only once.
     pub fn simulated(
         bench: &dyn Benchmark,
         gpu: GpuSpec,
         input: &Input,
         cost: CostModel,
     ) -> Tuner {
-        let rec = record_space(bench, &gpu, input);
+        let rec = cached_space(bench, &gpu, input);
         Tuner::replay(rec, gpu, cost)
     }
 
-    /// Tune over a pre-recorded space.
-    pub fn replay(rec: RecordedSpace, gpu: GpuSpec, cost: CostModel) -> Tuner {
+    /// Tune over a pre-recorded space (owned, or shared via `Arc` from
+    /// the cache).
+    pub fn replay(
+        rec: impl Into<Arc<RecordedSpace>>,
+        gpu: GpuSpec,
+        cost: CostModel,
+    ) -> Tuner {
         Tuner {
             env: Box::new(ReplayEnv::new(rec, gpu, cost)),
             budget: Budget::tests(usize::MAX),
@@ -183,7 +192,7 @@ mod tests {
     #[test]
     fn tuner_runs_profile_end_to_end() {
         let gpu = GpuSpec::gtx1070();
-        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        let rec = cached_space(&Coulomb, &gpu, &Coulomb.default_input());
         let oracle = OracleModel::new(&rec);
         let mut t = Tuner::replay(rec, gpu, CostModel::default())
             .with_budget(Budget::tests(30))

@@ -3,6 +3,8 @@
 //! repetitions, with the paper's plotting convention — curves start at
 //! the time when *all* repetitions have at least one finished kernel.
 
+use std::sync::Arc;
+
 use crate::searcher::{Budget, CostModel, ReplayEnv, Searcher};
 use crate::tuning::RecordedSpace;
 use crate::util::stats::{mean, stddev};
@@ -19,8 +21,9 @@ pub struct ConvergencePoint {
 
 /// Run `make(seed)` searchers `reps` times for `horizon_s` of simulated
 /// tuning time each, and aggregate best-so-far on a regular grid.
+#[allow(clippy::too_many_arguments)]
 pub fn aggregate_convergence<'a, F>(
-    rec: &RecordedSpace,
+    rec: &Arc<RecordedSpace>,
     gpu: &crate::gpusim::GpuSpec,
     cost: &CostModel,
     reps: usize,
@@ -34,7 +37,7 @@ where
 {
     let staircases: Vec<Vec<(f64, f64)>> = par_map_seeds(reps, &|seed| {
         let mut env =
-            ReplayEnv::new(rec.clone(), gpu.clone(), cost.clone());
+            ReplayEnv::new(Arc::clone(rec), gpu.clone(), cost.clone());
         let mut s = make(seed_base.wrapping_add(seed));
         let trace = s.run(&mut env, &Budget::seconds(horizon_s));
         trace.convergence()
@@ -96,7 +99,7 @@ pub fn curves_csv(series: &[(&str, &[ConvergencePoint])]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::benchmarks::{record_space, Benchmark, Coulomb};
+    use crate::benchmarks::{cached_space, Benchmark, Coulomb};
     use crate::gpusim::GpuSpec;
     use crate::searcher::RandomSearcher;
 
@@ -111,7 +114,7 @@ mod tests {
     #[test]
     fn curves_monotone_nonincreasing() {
         let gpu = GpuSpec::gtx1070();
-        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        let rec = cached_space(&Coulomb, &gpu, &Coulomb.default_input());
         let pts = aggregate_convergence(
             &rec,
             &gpu,

@@ -5,7 +5,7 @@
 //! Every figure is emitted as a CSV series (machine-readable artifact)
 //! plus an ASCII rendering in the markdown report.
 
-use crate::benchmarks::{self, record_space, Benchmark, Coulomb, Input};
+use crate::benchmarks::{self, cached_space, Benchmark, Coulomb, Input};
 use crate::counters::Counter;
 use crate::gpusim::GpuSpec;
 use crate::model::{
@@ -44,7 +44,7 @@ pub fn fig1() -> Report {
     let mut md = String::new();
     let mut chart_series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
     for (gpu, input) in &setups {
-        let rec = record_space(&Coulomb, gpu, input);
+        let rec = cached_space(&Coulomb, gpu, input);
         let s = &rec.space;
         // fixed slice through the space, sweeping Z_ITER (as in Fig. 1)
         let sweep: Vec<usize> = [1i64, 2, 4, 8, 16, 32]
@@ -121,7 +121,7 @@ fn model_1070_for(
     seed: u64,
 ) -> PrecomputedModel {
     let gpu_model = GpuSpec::gtx1070();
-    let rec_model = record_space(bench, &gpu_model, input);
+    let rec_model = cached_space(bench, &gpu_model, input);
     let mut rng = Rng::new(seed);
     let ds = dataset_from_recorded(&rec_model, 1.0, &mut rng);
     let dtm = DecisionTreeModel::train(&ds, "GTX1070", &mut rng);
@@ -181,7 +181,7 @@ fn convergence_setup(
     opts: &ExperimentOpts,
 ) -> Curves {
     let gpu = GpuSpec::rtx2080();
-    let rec = record_space(bench, &gpu, input);
+    let rec = cached_space(bench, &gpu, input);
     let model = model_1070_for(bench, input, &rec, opts.seed + 11);
     let ir = if bench.instruction_bound() { 0.5 } else { 0.7 };
     let horizon = horizon_for(rec.space.len());
@@ -304,12 +304,12 @@ pub fn fig8_gemm_full(opts: &ExperimentOpts) -> Report {
     let full = benchmarks::by_name("gemm-full").unwrap();
     let reduced = benchmarks::by_name("gemm").unwrap();
     let input = full.default_input();
-    let rec_full = record_space(full.as_ref(), &gpu, &input);
+    let rec_full = cached_space(full.as_ref(), &gpu, &input);
 
     // model: decision trees trained on the REDUCED space from GTX 1070,
     // remapped onto the full space's parameter layout
     let rec_model =
-        record_space(reduced.as_ref(), &GpuSpec::gtx1070(), &input);
+        cached_space(reduced.as_ref(), &GpuSpec::gtx1070(), &input);
     let mut rng = Rng::new(opts.seed + 23);
     let ds = dataset_from_recorded(&rec_model, 1.0, &mut rng);
     let dtm = DecisionTreeModel::train(&ds, "GTX1070-gemm-reduced", &mut rng);
@@ -368,7 +368,7 @@ pub fn fig9_13_basin_hopping(opts: &ExperimentOpts) -> Report {
     let mut iter_rows = Vec::new();
     for (fig_no, bench) in benchmarks::evaluation_set().iter().enumerate() {
         let input = bench.default_input();
-        let rec = record_space(bench.as_ref(), &gpu, &input);
+        let rec = cached_space(bench.as_ref(), &gpu, &input);
         let model = model_1070_for(
             bench.as_ref(),
             &input,

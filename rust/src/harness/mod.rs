@@ -17,10 +17,15 @@
 
 mod convergence;
 mod figures;
+mod plan;
 mod steps;
 mod tables;
 
 pub use convergence::{aggregate_convergence, ConvergencePoint};
+pub use plan::{
+    run_plan, AggregateRow, ExperimentPlan, JobResult, JobSpec, PlanReport,
+    PLAN_SEARCHERS,
+};
 pub use steps::{avg_steps_to_well_performing, par_map_seeds};
 
 use std::path::Path;

@@ -1,0 +1,536 @@
+//! Parallel, cache-backed experiment runner.
+//!
+//! [`ExperimentPlan`] describes the paper's evaluation as a job matrix
+//! (benchmark × GPU × searcher × seed, §4), expanded into independent
+//! [`JobSpec`]s and executed across the shared worker pool. Every job
+//! replays a [`RecordedSpace`] obtained from the process-wide cache
+//! ([`crate::benchmarks::cached_space`]), so each space is enumerated
+//! and simulated exactly once per process instead of once per run.
+//!
+//! **Determinism contract:** a job's result is a pure function of the
+//! plan and its coordinates — per-job RNG streams are derived with
+//! [`crate::util::rng::stream_seed`] from `(base seed, benchmark, gpu,
+//! searcher, lane)`, never from scheduling. Serial (`jobs = 1`) and
+//! parallel (`jobs = N`) executions therefore produce byte-identical
+//! JSON reports, which is exactly what the CI smoke gate asserts.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::benchmarks::{self, cached_space};
+use crate::coordinator::{SearcherChoice, Tuner};
+use crate::gpusim::GpuSpec;
+use crate::model::OracleModel;
+use crate::searcher::{Budget, CostModel};
+use crate::tuning::RecordedSpace;
+use crate::util::json::{obj, Value};
+use crate::util::pool;
+use crate::util::rng::stream_seed;
+use crate::util::stats::mean;
+
+/// Searcher names the plan runner accepts.
+pub const PLAN_SEARCHERS: [&str; 5] =
+    ["random", "profile", "basin_hopping", "annealing", "starchart"];
+
+/// A benchmark × GPU × searcher × seed job matrix.
+#[derive(Debug, Clone)]
+pub struct ExperimentPlan {
+    pub benchmarks: Vec<String>,
+    pub gpus: Vec<String>,
+    pub searchers: Vec<String>,
+    /// Seeded repetitions per (benchmark, gpu, searcher) cell.
+    pub seeds: usize,
+    /// Base seed every per-job RNG stream is derived from.
+    pub base_seed: u64,
+    /// Per-job cap on empirical tests (each job also stops early once it
+    /// finds a configuration within 1.1× of the exhaustive best).
+    pub max_tests: usize,
+    /// Embed the full per-job trace in the JSON report.
+    pub include_traces: bool,
+}
+
+impl ExperimentPlan {
+    /// The paper's evaluation matrix (§4): 5 benchmarks × 4 GPUs ×
+    /// 5 searchers × `seeds` repetitions.
+    pub fn full(seeds: usize, base_seed: u64) -> Self {
+        ExperimentPlan {
+            benchmarks: ["coulomb", "transpose", "gemm", "nbody", "convolution"]
+                .map(String::from)
+                .to_vec(),
+            gpus: ["gtx680", "gtx750", "gtx1070", "rtx2080"]
+                .map(String::from)
+                .to_vec(),
+            searchers: PLAN_SEARCHERS.map(String::from).to_vec(),
+            seeds,
+            base_seed,
+            max_tests: 1000,
+            include_traces: false,
+        }
+    }
+
+    /// The CI smoke matrix: 2 benchmarks × 1 GPU × 2 searchers ×
+    /// 3 seeds — small enough to gate a PR, rich enough to exercise the
+    /// cache, both searcher families and the aggregation path.
+    pub fn smoke(base_seed: u64) -> Self {
+        ExperimentPlan {
+            benchmarks: vec!["coulomb".into(), "transpose".into()],
+            gpus: vec!["gtx1070".into()],
+            searchers: vec!["random".into(), "profile".into()],
+            seeds: 3,
+            base_seed,
+            max_tests: 80,
+            include_traces: true,
+        }
+    }
+
+    /// Expand into jobs, in deterministic plan order.
+    pub fn jobs(&self) -> Vec<JobSpec> {
+        let mut out = Vec::new();
+        for b in &self.benchmarks {
+            for g in &self.gpus {
+                for s in &self.searchers {
+                    for lane in 0..self.seeds {
+                        out.push(JobSpec {
+                            benchmark: b.clone(),
+                            gpu: g.clone(),
+                            searcher: s.clone(),
+                            lane,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Resolve every name up front so job closures cannot fail later.
+    pub fn validate(&self) -> Result<()> {
+        if self.benchmarks.is_empty()
+            || self.gpus.is_empty()
+            || self.searchers.is_empty()
+            || self.seeds == 0
+        {
+            bail!("empty plan axis (benchmarks/gpus/searchers/seeds)");
+        }
+        for b in &self.benchmarks {
+            benchmarks::by_name(b)
+                .with_context(|| format!("unknown benchmark {b:?} in plan"))?;
+        }
+        for g in &self.gpus {
+            GpuSpec::by_name(g)
+                .with_context(|| format!("unknown GPU {g:?} in plan"))?;
+        }
+        for s in &self.searchers {
+            if !PLAN_SEARCHERS.contains(&s.as_str()) {
+                bail!(
+                    "unknown searcher {s:?} in plan; known: {}",
+                    PLAN_SEARCHERS.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Value {
+        obj(vec![
+            ("benchmarks", Value::from(self.benchmarks.clone())),
+            ("gpus", Value::from(self.gpus.clone())),
+            ("searchers", Value::from(self.searchers.clone())),
+            ("seeds", Value::from(self.seeds)),
+            // as a string: JSON numbers are f64 and would corrupt
+            // seeds above 2^53, breaking re-runs from the report
+            ("base_seed", Value::from(self.base_seed.to_string())),
+            ("max_tests", Value::from(self.max_tests)),
+        ])
+    }
+}
+
+/// One independent job of the matrix.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub benchmark: String,
+    pub gpu: String,
+    pub searcher: String,
+    /// Repetition index within the cell.
+    pub lane: usize,
+}
+
+impl JobSpec {
+    /// The job's private RNG stream seed — a pure function of the plan
+    /// seed and the job coordinates.
+    pub fn rng_seed(&self, base_seed: u64) -> u64 {
+        stream_seed(
+            base_seed,
+            &[&self.benchmark, &self.gpu, &self.searcher],
+            self.lane as u64,
+        )
+    }
+}
+
+/// Outcome of one job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub spec: JobSpec,
+    pub best_ms: f64,
+    /// Empirical tests performed.
+    pub tests: usize,
+    pub profiled_tests: usize,
+    /// 1-based test count at which a well-performing (≤1.1× best)
+    /// configuration was found, if any.
+    pub tests_to_wp: Option<usize>,
+    /// Simulated tuning cost, seconds.
+    pub cost_s: f64,
+    /// (config index, runtime ms, profiled) per step; empty unless the
+    /// plan asked for traces (a full 10k-job matrix would otherwise
+    /// retain hundreds of MB it never serializes).
+    pub trace: Vec<(usize, f64, bool)>,
+}
+
+/// Shared per-(benchmark, gpu) context, built once before the fan-out.
+struct CellCtx {
+    rec: Arc<RecordedSpace>,
+    oracle: Arc<OracleModel>,
+    gpu: GpuSpec,
+    inst_reaction: f64,
+}
+
+/// Run one job through the [`Tuner`] facade (one shared searcher
+/// dispatch for coordinator, CLI and harness).
+fn run_job(spec: &JobSpec, plan: &ExperimentPlan, ctx: &CellCtx) -> JobResult {
+    let thr = ctx.rec.best_time() * 1.1;
+    let choice = match spec.searcher.as_str() {
+        "random" => SearcherChoice::Random,
+        "profile" => SearcherChoice::Profile {
+            model: &*ctx.oracle,
+            inst_reaction: ctx.inst_reaction,
+        },
+        "basin_hopping" => SearcherChoice::BasinHopping,
+        "annealing" => SearcherChoice::Annealing,
+        "starchart" => SearcherChoice::Starchart,
+        other => unreachable!("plan validated, got searcher {other:?}"),
+    };
+    let result = Tuner::replay(
+        Arc::clone(&ctx.rec),
+        ctx.gpu.clone(),
+        CostModel::default(),
+    )
+    .with_budget(Budget::until(thr, plan.max_tests))
+    .with_seed(spec.rng_seed(plan.base_seed))
+    .run(choice);
+
+    JobResult {
+        spec: spec.clone(),
+        best_ms: result.best_ms,
+        tests: result.tests,
+        profiled_tests: result.profiled_tests,
+        tests_to_wp: result.trace.tests_to_threshold(thr),
+        cost_s: result.cost_s,
+        trace: if plan.include_traces {
+            result
+                .trace
+                .steps
+                .iter()
+                .map(|s| (s.idx, s.runtime_ms, s.profiled))
+                .collect()
+        } else {
+            Vec::new()
+        },
+    }
+}
+
+/// A completed plan: per-job results in plan order.
+pub struct PlanReport {
+    pub plan: ExperimentPlan,
+    pub results: Vec<JobResult>,
+}
+
+/// Aggregated statistics for one (benchmark, gpu, searcher) cell.
+#[derive(Debug, Clone)]
+pub struct AggregateRow {
+    pub benchmark: String,
+    pub gpu: String,
+    pub searcher: String,
+    pub runs: usize,
+    pub wp_hits: usize,
+    pub mean_tests_to_wp: f64,
+    pub mean_best_ms: f64,
+    pub mean_cost_s: f64,
+}
+
+impl PlanReport {
+    /// Deterministic JSON document: plan echo, per-job records (plan
+    /// order) and per-cell aggregates.
+    pub fn to_json(&self) -> Value {
+        let jobs: Vec<Value> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut fields = vec![
+                    ("benchmark", Value::from(r.spec.benchmark.clone())),
+                    ("gpu", Value::from(r.spec.gpu.clone())),
+                    ("searcher", Value::from(r.spec.searcher.clone())),
+                    ("lane", Value::from(r.spec.lane)),
+                    ("best_ms", Value::from(r.best_ms)),
+                    ("tests", Value::from(r.tests)),
+                    ("profiled_tests", Value::from(r.profiled_tests)),
+                    (
+                        "tests_to_wp",
+                        r.tests_to_wp.map(Value::from).unwrap_or(Value::Null),
+                    ),
+                    ("cost_s", Value::from(r.cost_s)),
+                ];
+                if self.plan.include_traces {
+                    fields.push((
+                        "trace",
+                        Value::Arr(
+                            r.trace
+                                .iter()
+                                .map(|&(idx, ms, profiled)| {
+                                    obj(vec![
+                                        ("idx", Value::from(idx)),
+                                        ("ms", Value::from(ms)),
+                                        ("profiled", Value::from(profiled)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ));
+                }
+                obj(fields)
+            })
+            .collect();
+
+        let aggregates: Vec<Value> = self
+            .aggregate_rows()
+            .iter()
+            .map(|a| {
+                obj(vec![
+                    ("benchmark", Value::from(a.benchmark.clone())),
+                    ("gpu", Value::from(a.gpu.clone())),
+                    ("searcher", Value::from(a.searcher.clone())),
+                    ("runs", Value::from(a.runs)),
+                    ("wp_hits", Value::from(a.wp_hits)),
+                    ("mean_tests_to_wp", Value::from(a.mean_tests_to_wp)),
+                    ("mean_best_ms", Value::from(a.mean_best_ms)),
+                    ("mean_cost_s", Value::from(a.mean_cost_s)),
+                ])
+            })
+            .collect();
+
+        obj(vec![
+            ("schema", Value::from("pcat-plan-report/v1")),
+            ("plan", self.plan.to_json()),
+            ("jobs", Value::Arr(jobs)),
+            ("aggregates", Value::Arr(aggregates)),
+        ])
+    }
+
+    /// Per-(benchmark, gpu, searcher) aggregates, in sorted key order.
+    pub fn aggregate_rows(&self) -> Vec<AggregateRow> {
+        let mut cells: BTreeMap<(String, String, String), Vec<&JobResult>> =
+            BTreeMap::new();
+        for r in &self.results {
+            cells
+                .entry((
+                    r.spec.benchmark.clone(),
+                    r.spec.gpu.clone(),
+                    r.spec.searcher.clone(),
+                ))
+                .or_default()
+                .push(r);
+        }
+        cells
+            .into_iter()
+            .map(|((benchmark, gpu, searcher), rs)| {
+                let steps: Vec<f64> = rs
+                    .iter()
+                    .map(|r| r.tests_to_wp.unwrap_or(r.tests) as f64)
+                    .collect();
+                let bests: Vec<f64> = rs.iter().map(|r| r.best_ms).collect();
+                let costs: Vec<f64> = rs.iter().map(|r| r.cost_s).collect();
+                AggregateRow {
+                    benchmark,
+                    gpu,
+                    searcher,
+                    runs: rs.len(),
+                    wp_hits: rs
+                        .iter()
+                        .filter(|r| r.tests_to_wp.is_some())
+                        .count(),
+                    mean_tests_to_wp: mean(&steps),
+                    mean_best_ms: mean(&bests),
+                    mean_cost_s: mean(&costs),
+                }
+            })
+            .collect()
+    }
+
+    /// The canonical byte representation compared by the smoke gate.
+    pub fn to_pretty_string(&self) -> String {
+        let mut s = self.to_json().to_string_pretty(1);
+        s.push('\n');
+        s
+    }
+
+    pub fn write_to(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_pretty_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// One summary line per aggregate cell, for CLI output.
+    pub fn summary_lines(&self) -> Vec<String> {
+        self.aggregate_rows()
+            .iter()
+            .map(|a| {
+                format!(
+                    "{:<12} {:<8} {:<14} steps {:>7.1}  best {:>9.4} ms  \
+                     cost {:>7.1} s",
+                    a.benchmark,
+                    a.gpu,
+                    a.searcher,
+                    a.mean_tests_to_wp,
+                    a.mean_best_ms,
+                    a.mean_cost_s,
+                )
+            })
+            .collect()
+    }
+}
+
+/// Execute a plan with up to `jobs` worker threads.
+///
+/// Recording and oracle construction happen once per distinct
+/// (benchmark, gpu) cell in a deterministic pre-pass; the fan-out then
+/// only replays cached data, so worker count affects wall-clock and
+/// nothing else.
+pub fn run_plan(plan: &ExperimentPlan, jobs: usize) -> Result<PlanReport> {
+    plan.validate()?;
+
+    // Pre-pass over the (benchmark, gpu) cross product on the same pool:
+    // recording is the dominant cold-start cost and the cache records
+    // distinct keys concurrently. Order-preserving par_map keeps the
+    // cell list (and thus everything downstream) deterministic.
+    let keys: Vec<(String, String)> = plan
+        .benchmarks
+        .iter()
+        .flat_map(|b| plan.gpus.iter().map(move |g| (b.clone(), g.clone())))
+        .collect();
+    let ctxs = pool::par_map_jobs(keys.len(), jobs, &|i| {
+        let (b, g) = &keys[i];
+        let bench = benchmarks::by_name(b).expect("validated");
+        let gpu = GpuSpec::by_name(g).expect("validated");
+        let rec = cached_space(bench.as_ref(), &gpu, &bench.default_input());
+        let oracle = Arc::new(OracleModel::new(&rec));
+        let inst_reaction = if bench.instruction_bound() {
+            crate::expert::INST_BOUND_REACTION
+        } else {
+            crate::expert::DEFAULT_INST_REACTION
+        };
+        CellCtx {
+            rec,
+            oracle,
+            gpu,
+            inst_reaction,
+        }
+    });
+    let cells: BTreeMap<(String, String), CellCtx> =
+        keys.into_iter().zip(ctxs).collect();
+
+    let specs = plan.jobs();
+    let results = pool::par_map_jobs(specs.len(), jobs, &|i| {
+        let spec = &specs[i];
+        let ctx = &cells[&(spec.benchmark.clone(), spec.gpu.clone())];
+        run_job(spec, plan, ctx)
+    });
+
+    Ok(PlanReport {
+        plan: plan.clone(),
+        results,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ExperimentPlan {
+        ExperimentPlan {
+            benchmarks: vec!["coulomb".into()],
+            gpus: vec!["gtx1070".into()],
+            searchers: vec!["random".into(), "profile".into()],
+            seeds: 2,
+            base_seed: 5,
+            max_tests: 40,
+            include_traces: true,
+        }
+    }
+
+    #[test]
+    fn plan_expansion_order_and_count() {
+        let plan = ExperimentPlan::smoke(0);
+        let jobs = plan.jobs();
+        assert_eq!(jobs.len(), 2 * 2 * 3);
+        assert_eq!(jobs[0].benchmark, "coulomb");
+        assert_eq!(jobs[0].searcher, "random");
+        assert_eq!(jobs[0].lane, 0);
+        assert_eq!(jobs[1].lane, 1);
+        assert_eq!(jobs[3].searcher, "profile");
+    }
+
+    #[test]
+    fn validate_rejects_unknowns() {
+        let mut plan = tiny();
+        plan.searchers = vec!["quantum".into()];
+        assert!(plan.validate().is_err());
+        let mut plan = tiny();
+        plan.benchmarks = vec!["nope".into()];
+        assert!(plan.validate().is_err());
+        let mut plan = tiny();
+        plan.seeds = 0;
+        assert!(plan.validate().is_err());
+        assert!(tiny().validate().is_ok());
+    }
+
+    #[test]
+    fn job_seeds_are_distinct_per_lane_and_searcher() {
+        let plan = tiny();
+        let jobs = plan.jobs();
+        let mut seeds: Vec<u64> =
+            jobs.iter().map(|j| j.rng_seed(plan.base_seed)).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), jobs.len());
+    }
+
+    #[test]
+    fn serial_and_parallel_runs_are_byte_identical() {
+        let plan = tiny();
+        let a = run_plan(&plan, 1).unwrap().to_pretty_string();
+        let b = run_plan(&plan, 8).unwrap().to_pretty_string();
+        assert_eq!(a, b);
+        assert!(a.contains("\"schema\": \"pcat-plan-report/v1\""));
+    }
+
+    #[test]
+    fn report_has_jobs_and_aggregates() {
+        let plan = tiny();
+        let report = run_plan(&plan, 4).unwrap();
+        assert_eq!(report.results.len(), 4);
+        let v = report.to_json();
+        assert_eq!(v.get("jobs").unwrap().as_arr().unwrap().len(), 4);
+        assert_eq!(v.get("aggregates").unwrap().as_arr().unwrap().len(), 2);
+        // every job found a finite best and ran at least one test
+        for r in &report.results {
+            assert!(r.best_ms.is_finite());
+            assert!(r.tests >= 1);
+            assert!(r.tests <= plan.max_tests);
+        }
+        assert!(!report.summary_lines().is_empty());
+    }
+}

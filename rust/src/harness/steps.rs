@@ -1,46 +1,23 @@
 //! Step-count statistics: the "number of empirical tests to reach a
 //! well-performing configuration" metric (§4.1), averaged over many
-//! repetitions of the stochastic search — parallelized across seeds.
+//! repetitions of the stochastic search — parallelized across seeds on
+//! the shared job pool ([`crate::util::pool`]).
+
+use std::sync::Arc;
 
 use crate::searcher::{Budget, CostModel, ReplayEnv, Searcher};
 use crate::tuning::RecordedSpace;
+use crate::util::pool;
 use crate::util::stats::mean;
 
-/// Map `f` over seeds `0..reps` on all available cores, preserving
-/// order. (rayon is unavailable offline; scoped threads suffice — each
-/// seed is an independent search.)
+/// Map `f` over seeds `0..reps` on the shared pool, preserving order.
+/// Results are independent of the worker count (`--jobs`).
 pub fn par_map_seeds<T, F>(reps: usize, f: &F) -> Vec<T>
 where
     T: Send,
     F: Fn(u64) -> T + Sync,
 {
-    if reps == 0 {
-        return Vec::new();
-    }
-    let nthreads = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .min(reps);
-    let chunk = reps.div_ceil(nthreads);
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for t in 0..nthreads {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(reps);
-            if lo >= hi {
-                break;
-            }
-            handles.push(
-                scope.spawn(move || {
-                    (lo..hi).map(|i| f(i as u64)).collect::<Vec<T>>()
-                }),
-            );
-        }
-        handles
-            .into_iter()
-            .flat_map(|h| h.join().expect("seed worker panicked"))
-            .collect()
-    })
+    pool::par_map(reps, &|i| f(i as u64))
 }
 
 /// Average number of empirical tests a searcher needs to find a
@@ -49,9 +26,10 @@ where
 ///
 /// `make` builds a fresh searcher for a seed; the searcher runs until it
 /// hits the threshold (model-build steps excluded from the stop check
-/// but included in the count, matching Table 8's accounting).
+/// but included in the count, matching Table 8's accounting). The
+/// recording is shared by reference across all repetitions.
 pub fn avg_steps_to_well_performing<'a, F>(
-    rec: &RecordedSpace,
+    rec: &Arc<RecordedSpace>,
     gpu: &crate::gpusim::GpuSpec,
     reps: usize,
     seed_base: u64,
@@ -63,7 +41,7 @@ where
     let thr = rec.best_time() * 1.1;
     let counts = par_map_seeds(reps, &|seed| {
         let mut env =
-            ReplayEnv::new(rec.clone(), gpu.clone(), CostModel::default());
+            ReplayEnv::new(Arc::clone(rec), gpu.clone(), CostModel::default());
         let mut searcher = make(seed_base.wrapping_add(seed));
         let trace = env_run(&mut *searcher, &mut env, thr);
         trace as f64
@@ -85,7 +63,7 @@ fn env_run(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::benchmarks::{record_space, Benchmark, Coulomb};
+    use crate::benchmarks::{cached_space, Benchmark, Coulomb};
     use crate::gpusim::GpuSpec;
     use crate::searcher::RandomSearcher;
 
@@ -109,7 +87,7 @@ mod tests {
         // with w well-performing configs out of n, random-without-
         // replacement needs (n+1)/(w+1) tests in expectation
         let gpu = GpuSpec::gtx1070();
-        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        let rec = cached_space(&Coulomb, &gpu, &Coulomb.default_input());
         let n = rec.space.len() as f64;
         let w = rec.well_performing_count(1.1) as f64;
         let expect = (n + 1.0) / (w + 1.0);

@@ -1,7 +1,9 @@
 //! Table reproductions (paper §4.3–§4.8) plus two design-choice
 //! ablations called out in DESIGN.md.
 
-use crate::benchmarks::{self, record_space, Benchmark};
+use std::sync::Arc;
+
+use crate::benchmarks::{self, cached_space, Benchmark};
 use crate::gpusim::GpuSpec;
 use crate::model::{
     dataset_from_recorded, DecisionTreeModel, OracleModel, PrecomputedModel,
@@ -51,14 +53,18 @@ fn inst_reaction_for(b: &dyn Benchmark) -> f64 {
     }
 }
 
-fn random_avg(rec: &RecordedSpace, gpu: &GpuSpec, opts: &ExperimentOpts) -> f64 {
+fn random_avg(
+    rec: &Arc<RecordedSpace>,
+    gpu: &GpuSpec,
+    opts: &ExperimentOpts,
+) -> f64 {
     avg_steps_to_well_performing(rec, gpu, opts.reps, opts.seed, |s| {
         Box::new(RandomSearcher::new(s))
     })
 }
 
 fn profile_avg(
-    rec: &RecordedSpace,
+    rec: &Arc<RecordedSpace>,
     gpu: &GpuSpec,
     model: &(dyn TpPcModel + Sync),
     inst_reaction: f64,
@@ -124,7 +130,7 @@ pub fn table4(opts: &ExperimentOpts) -> Report {
     for (bi, b) in eval_benchmarks().iter().enumerate() {
         let mut row = vec![b.name().to_string()];
         for (gi, gpu) in gpus.iter().enumerate() {
-            let rec = record_space(b.as_ref(), gpu, &b.default_input());
+            let rec = cached_space(b.as_ref(), gpu, &b.default_input());
             let steps = random_avg(&rec, gpu, opts);
             row.push(format!(
                 "{:.0} (paper {:.0})",
@@ -165,7 +171,7 @@ pub fn table5(opts: &ExperimentOpts) -> Report {
     for (bi, b) in eval_benchmarks().iter().enumerate() {
         let mut row = vec![b.name().to_string()];
         for (gi, gpu) in gpus.iter().enumerate() {
-            let rec = record_space(b.as_ref(), gpu, &b.default_input());
+            let rec = cached_space(b.as_ref(), gpu, &b.default_input());
             let rand = random_avg(&rec, gpu, opts);
             let oracle = OracleModel::new(&rec);
             let prof = profile_avg(
@@ -219,9 +225,9 @@ pub fn table6(opts: &ExperimentOpts) -> Report {
         String::from("benchmark,tune_gpu,model_gpu,random,profile,improvement\n");
     for b in eval_benchmarks() {
         // records per GPU (model side and tuning side use the same)
-        let recs: Vec<RecordedSpace> = gpus
+        let recs: Vec<Arc<RecordedSpace>> = gpus
             .iter()
-            .map(|g| record_space(b.as_ref(), g, &b.default_input()))
+            .map(|g| cached_space(b.as_ref(), g, &b.default_input()))
             .collect();
         // decision-tree models trained per model-GPU; predictions are
         // precomputed over the benchmark's (shared) space
@@ -286,9 +292,9 @@ pub fn table7(opts: &ExperimentOpts) -> Report {
     let gpu = GpuSpec::gtx1070();
     let gemm = benchmarks::by_name("gemm").unwrap();
     let inputs = gemm.inputs();
-    let recs: Vec<RecordedSpace> = inputs
+    let recs: Vec<Arc<RecordedSpace>> = inputs
         .iter()
-        .map(|i| record_space(gemm.as_ref(), &gpu, i))
+        .map(|i| cached_space(gemm.as_ref(), &gpu, i))
         .collect();
     let models: Vec<PrecomputedModel> = (0..inputs.len())
         .map(|i| trained_model(&recs[i], &recs[i], opts.seed + 31 + i as u64))
@@ -338,7 +344,7 @@ pub fn table8(opts: &ExperimentOpts) -> Report {
     for gpu in [GpuSpec::gtx1070(), GpuSpec::rtx2080()] {
         let mut rows = Vec::new();
         for b in eval_benchmarks() {
-            let rec = record_space(b.as_ref(), &gpu, &b.default_input());
+            let rec = cached_space(b.as_ref(), &gpu, &b.default_input());
             let thr = rec.best_time() * 1.1;
             let reps = opts.reps.min(200); // Starchart sweeps most of small spaces
             let stats: Vec<(f64, f64)> = par_map_seeds(reps, &|seed| {
@@ -398,8 +404,8 @@ pub fn table9(opts: &ExperimentOpts) -> Report {
     let mut csv = String::from("benchmark,starchart_1070,proposed_1070\n");
     for b in eval_benchmarks() {
         let rec_model =
-            record_space(b.as_ref(), &gpu_model, &b.default_input());
-        let rec_tune = record_space(b.as_ref(), &gpu_tune, &b.default_input());
+            cached_space(b.as_ref(), &gpu_model, &b.default_input());
+        let rec_tune = cached_space(b.as_ref(), &gpu_tune, &b.default_input());
         let thr = rec_tune.best_time() * 1.1;
         let reps = opts.reps.min(200);
 
@@ -467,7 +473,7 @@ pub fn table9(opts: &ExperimentOpts) -> Report {
 pub fn ablation_profile_interval(opts: &ExperimentOpts) -> Report {
     let gpu = GpuSpec::gtx1070();
     let gemm = benchmarks::by_name("gemm").unwrap();
-    let rec = record_space(gemm.as_ref(), &gpu, &gemm.default_input());
+    let rec = cached_space(gemm.as_ref(), &gpu, &gemm.default_input());
     let oracle = OracleModel::new(&rec);
     let thr = rec.best_time() * 1.1;
 
@@ -519,7 +525,7 @@ pub fn ablation_local_search(opts: &ExperimentOpts) -> Report {
     let mut csv = String::from("benchmark,variant,steps\n");
     for name in ["coulomb", "gemm"] {
         let b = benchmarks::by_name(name).unwrap();
-        let rec = record_space(b.as_ref(), &gpu, &b.default_input());
+        let rec = cached_space(b.as_ref(), &gpu, &b.default_input());
         let oracle = OracleModel::new(&rec);
         let ir = inst_reaction_for(b.as_ref());
         let thr = rec.best_time() * 1.1;
@@ -566,7 +572,7 @@ pub fn ablation_model_kind(opts: &ExperimentOpts) -> Report {
     let mut csv = String::from("benchmark,model,steps,improvement\n");
     for name in ["coulomb", "gemm"] {
         let b = benchmarks::by_name(name).unwrap();
-        let rec = record_space(b.as_ref(), &gpu, &b.default_input());
+        let rec = cached_space(b.as_ref(), &gpu, &b.default_input());
         let rand = random_avg(&rec, &gpu, opts);
         let ir = inst_reaction_for(b.as_ref());
 

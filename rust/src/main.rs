@@ -7,8 +7,19 @@
 //! pcat tune    --benchmark gemm --gpu rtx2080 --searcher profile \
 //!              [--model model.json] [--budget 200] [--seed 1]
 //! pcat tune-real --benchmark gemm --artifacts artifacts [--searcher profile]
-//! pcat experiment <id|all> [--out results] [--reps N] [--time-reps N]
+//! pcat experiment <id|all> [--out results] [--reps N] [--time-reps N] \
+//!              [--jobs N]
+//! pcat matrix  [--smoke] [--jobs N] [--seed S] [--seeds K] [--budget B] \
+//!              [--benchmarks a,b] [--gpus x,y] [--searchers p,q] \
+//!              [--traces] [--out report.json]
 //! ```
+//!
+//! `matrix` runs an [`ExperimentPlan`] (benchmark × GPU × searcher ×
+//! seed) across the worker pool and writes a deterministic JSON report;
+//! `--smoke` selects the tiny CI matrix whose report is byte-compared
+//! against `rust/testdata/smoke_golden.json`. `--jobs N` bounds worker
+//! threads everywhere (serial and parallel runs produce identical
+//! reports).
 //!
 //! (clap is unavailable in the offline build; flags are parsed by hand.)
 
@@ -16,19 +27,21 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
-use pcat::benchmarks::{self, Benchmark};
+use pcat::benchmarks::{self, cached_space, Benchmark};
 use pcat::coordinator::{SearcherChoice, Tuner};
 use pcat::gpusim::GpuSpec;
-use pcat::harness::{run_experiment, ExperimentOpts, ALL_EXPERIMENTS};
+use pcat::harness::{
+    run_experiment, run_plan, ExperimentOpts, ExperimentPlan, ALL_EXPERIMENTS,
+};
 use pcat::model::{
     dataset_from_recorded, DecisionTreeModel, OracleModel, PrecomputedModel,
     TpPcModel,
 };
-use pcat::runtime::{load_manifest, PjrtEnv};
-use pcat::searcher::{Budget, CostModel, EvalEnv};
+use pcat::searcher::{Budget, CostModel};
 use pcat::tuning::RecordedSpace;
+use pcat::util::pool;
 use pcat::util::rng::Rng;
 
 fn main() -> ExitCode {
@@ -108,6 +121,9 @@ fn input_arg(args: &Args, bench: &dyn Benchmark) -> Result<benchmarks::Input> {
 
 fn run() -> Result<()> {
     let args = Args::parse();
+    // global worker-count override: 0 (default) = all available cores
+    let jobs = args.num("jobs", 0usize)?;
+    pool::set_default_jobs(jobs);
     match args.positional.first().map(|s| s.as_str()) {
         Some("list") => cmd_list(),
         Some("record") => cmd_record(&args),
@@ -115,6 +131,7 @@ fn run() -> Result<()> {
         Some("tune") => cmd_tune(&args),
         Some("tune-real") => cmd_tune_real(&args),
         Some("experiment") => cmd_experiment(&args),
+        Some("matrix") => cmd_matrix(&args),
         Some("diag") => cmd_diag(&args),
         _ => {
             eprintln!("{}", HELP);
@@ -128,9 +145,11 @@ reproduction)\n\ncommands:\n  list        benchmarks, GPUs, experiments\n  \
 record      exhaustively record a tuning space on a simulated GPU\n  train       \
 train a TP→PC decision-tree model from a recording\n  tune        search a \
 tuning space (replayed/simulated)\n  tune-real   search over really-executing \
-PJRT artifacts\n  experiment  regenerate a paper table/figure (or `all`)\n\n\
-run `pcat <command> --help-flags` is not needed: flags are shown in main.rs \
-docs and README.";
+PJRT artifacts\n  experiment  regenerate a paper table/figure (or `all`)\n  \
+matrix      run a benchmark × GPU × searcher × seed job matrix in \
+parallel\n              (--smoke = the tiny deterministic CI matrix)\n\nglobal \
+flags: --jobs N caps worker threads (results are identical at any N).\nOther \
+flags are shown in main.rs docs and README.";
 
 fn cmd_list() -> Result<()> {
     println!("benchmarks:");
@@ -159,7 +178,7 @@ fn cmd_record(args: &Args) -> Result<()> {
     let gpu = gpu_arg(args)?;
     let input = input_arg(args, bench.as_ref())?;
     let out = PathBuf::from(args.need("out")?);
-    let rec = benchmarks::record_space(bench.as_ref(), &gpu, &input);
+    let rec = cached_space(bench.as_ref(), &gpu, &input);
     rec.save(&out)?;
     println!(
         "recorded {} configs of {} on {} ({}) -> {}",
@@ -198,7 +217,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let seed = args.num("seed", 0u64)?;
     let searcher = args.get("searcher").unwrap_or("profile");
 
-    let rec = benchmarks::record_space(bench.as_ref(), &gpu, &input);
+    let rec = cached_space(bench.as_ref(), &gpu, &input);
     let best = rec.best_time();
     let ir = if bench.instruction_bound() { 0.5 } else { 0.7 };
 
@@ -263,7 +282,12 @@ fn cmd_tune(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_tune_real(args: &Args) -> Result<()> {
+    use anyhow::Context;
+    use pcat::runtime::{load_manifest, PjrtEnv};
+    use pcat::searcher::EvalEnv;
+
     let bench_name = args.need("benchmark")?;
     let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     let entries: Vec<_> = load_manifest(&dir)
@@ -313,6 +337,64 @@ fn cmd_tune_real(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_tune_real(_args: &Args) -> Result<()> {
+    bail!(
+        "this binary was built without the `xla` feature; rebuild with \
+         `--features xla` (and the xla toolchain installed) to tune over \
+         really-executing PJRT artifacts"
+    )
+}
+
+/// Run an [`ExperimentPlan`] job matrix in parallel and write the
+/// deterministic JSON report.
+fn cmd_matrix(args: &Args) -> Result<()> {
+    let seed = args.num("seed", 0u64)?;
+    let plan = if args.get("smoke").is_some() {
+        ExperimentPlan::smoke(seed)
+    } else {
+        let list = |key: &str, plan_axis: &[String]| -> Vec<String> {
+            match args.get(key) {
+                None => plan_axis.to_vec(),
+                Some(csv) => csv
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect(),
+            }
+        };
+        let base = ExperimentPlan::full(args.num("seeds", 100usize)?, seed);
+        ExperimentPlan {
+            benchmarks: list("benchmarks", &base.benchmarks),
+            gpus: list("gpus", &base.gpus),
+            searchers: list("searchers", &base.searchers),
+            max_tests: args.num("budget", base.max_tests)?,
+            include_traces: args.get("traces").is_some(),
+            ..base
+        }
+    };
+    let jobs = match args.num("jobs", 0usize)? {
+        0 => pool::default_jobs(),
+        n => n,
+    };
+    let n_jobs = plan.jobs().len();
+    let out = PathBuf::from(args.get("out").unwrap_or("results/matrix.json"));
+
+    let t0 = std::time::Instant::now();
+    let report = run_plan(&plan, jobs)?;
+    report.write_to(&out)?;
+
+    println!(
+        "ran {n_jobs} jobs on {jobs} worker(s) in {:.1}s -> {}",
+        t0.elapsed().as_secs_f64(),
+        out.display()
+    );
+    for line in report.summary_lines() {
+        println!("  {line}");
+    }
+    Ok(())
+}
+
 /// Hidden diagnostic: random vs profile-with-oracle steps on one
 /// (benchmark, gpu, input) cell, plus a look at the best configs and the
 /// score rank the searcher assigns them.
@@ -325,7 +407,7 @@ fn cmd_diag(args: &Args) -> Result<()> {
     let gpu = gpu_arg(args)?;
     let input = input_arg(args, bench.as_ref())?;
     let reps = args.num("reps", 50usize)?;
-    let rec = benchmarks::record_space(bench.as_ref(), &gpu, &input);
+    let rec = cached_space(bench.as_ref(), &gpu, &input);
     let oracle = OracleModel::new(&rec);
     let ir = if bench.instruction_bound() { 0.5 } else { 0.7 };
 

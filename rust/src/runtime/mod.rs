@@ -13,10 +13,18 @@
 //! op counts; PC_stress are derived from measured runtime against
 //! calibrated host rates.
 
+// The manifest loader is dependency-free and always available; the
+// executor and environment need the `xla` crate (PJRT bindings), which
+// only exists where the prebuilt xla toolchain is installed — they are
+// gated behind the off-by-default `xla` feature (see Cargo.toml).
 mod artifact;
+#[cfg(feature = "xla")]
 mod executor;
+#[cfg(feature = "xla")]
 mod pjrt_env;
 
 pub use artifact::{load_manifest, ArtifactEntry};
+#[cfg(feature = "xla")]
 pub use executor::Executor;
+#[cfg(feature = "xla")]
 pub use pjrt_env::{host_spec, PjrtEnv};

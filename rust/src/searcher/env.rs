@@ -6,6 +6,8 @@
 //! profiling slowdown and optional result checking, so the time-domain
 //! experiments (§4.6) can be reproduced as well.
 
+use std::sync::Arc;
+
 use crate::counters::CounterVec;
 use crate::gpusim::GpuSpec;
 use crate::tuning::{RecordedSpace, Space};
@@ -91,8 +93,12 @@ impl CostModel {
 }
 
 /// Replay of an exhaustively recorded space.
+///
+/// Holds the recording behind an [`Arc`]: the harness repeats each
+/// stochastic search up to 1000× across worker threads, and every
+/// repetition shares one immutable recording instead of cloning it.
 pub struct ReplayEnv {
-    rec: RecordedSpace,
+    rec: Arc<RecordedSpace>,
     gpu: GpuSpec,
     cost: CostModel,
     spent_s: f64,
@@ -101,7 +107,14 @@ pub struct ReplayEnv {
 }
 
 impl ReplayEnv {
-    pub fn new(rec: RecordedSpace, gpu: GpuSpec, cost: CostModel) -> Self {
+    /// Accepts either an owned `RecordedSpace` (wrapped on the way in)
+    /// or a shared `Arc<RecordedSpace>` from the process-wide cache.
+    pub fn new(
+        rec: impl Into<Arc<RecordedSpace>>,
+        gpu: GpuSpec,
+        cost: CostModel,
+    ) -> Self {
+        let rec = rec.into();
         assert_eq!(
             rec.gpu, gpu.name,
             "recorded space {} replayed against device {}",

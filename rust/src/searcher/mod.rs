@@ -142,7 +142,10 @@ impl SearchTrace {
 }
 
 /// A tuning-space search strategy.
-pub trait Searcher {
+///
+/// `Send` so searchers can be constructed by one thread and driven by a
+/// pool worker; all state beyond the (Sync) model reference is owned.
+pub trait Searcher: Send {
     fn name(&self) -> &'static str;
 
     /// Run until the budget is exhausted (or the space is).

@@ -5,6 +5,7 @@
 //! helpers are implemented here instead of pulling serde/rand.
 
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod table;

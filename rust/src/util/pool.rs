@@ -1,0 +1,128 @@
+//! Deterministic job pool: the rayon stand-in for the offline build
+//! (pinned registry version recorded in Cargo.toml).
+//!
+//! Work items are pulled from a shared atomic counter (dynamic load
+//! balancing — experiment jobs vary wildly in cost), but results are
+//! returned **in input order**, so every caller's output is a pure
+//! function of its inputs regardless of worker count or scheduling.
+//! That invariant is what lets CI byte-compare `--jobs 1` against
+//! `--jobs 8` reports.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide default worker count; 0 means "all available cores".
+/// Set once by the CLI's `--jobs` flag, read by every harness driver.
+static DEFAULT_JOBS: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the default worker count (`0` restores auto-detection).
+pub fn set_default_jobs(n: usize) {
+    DEFAULT_JOBS.store(n, Ordering::SeqCst);
+}
+
+/// The worker count used when a caller does not pick one explicitly.
+pub fn default_jobs() -> usize {
+    match DEFAULT_JOBS.load(Ordering::SeqCst) {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4),
+        n => n,
+    }
+}
+
+/// Map `f` over `0..n` with up to `jobs` worker threads.
+///
+/// Output order always equals input order. `jobs <= 1` degenerates to a
+/// plain serial loop on the calling thread (no spawn overhead), which
+/// doubles as the reference execution for determinism checks.
+pub fn par_map_jobs<T, F>(n: usize, jobs: usize, f: &F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let jobs = jobs.clamp(1, n);
+    if jobs == 1 {
+        return (0..n).map(f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let buckets: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..jobs)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut got = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        got.push((i, f(i)));
+                    }
+                    got
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("pool worker panicked"))
+            .collect()
+    });
+
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for bucket in buckets {
+        for (i, v) in bucket {
+            out[i] = Some(v);
+        }
+    }
+    out.into_iter()
+        .map(|v| v.expect("pool lost a job"))
+        .collect()
+}
+
+/// [`par_map_jobs`] with the process-wide default worker count.
+pub fn par_map<T, F>(n: usize, f: &F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    par_map_jobs(n, default_jobs(), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_at_any_width() {
+        for jobs in [1, 2, 7, 64] {
+            let out = par_map_jobs(100, jobs, &|i| i * 3);
+            assert_eq!(out.len(), 100);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * 3, "jobs={jobs}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_items() {
+        let out: Vec<usize> = par_map_jobs(0, 8, &|i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn serial_equals_parallel() {
+        let serial = par_map_jobs(257, 1, &|i| i * i % 1013);
+        let wide = par_map_jobs(257, 16, &|i| i * i % 1013);
+        assert_eq!(serial, wide);
+    }
+
+    #[test]
+    fn default_jobs_override_roundtrip() {
+        set_default_jobs(3);
+        assert_eq!(default_jobs(), 3);
+        set_default_jobs(0);
+        assert!(default_jobs() >= 1);
+    }
+}

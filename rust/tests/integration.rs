@@ -113,7 +113,8 @@ fn gemm_portability_row_stays_useful() {
     let bench = Gemm;
     let input = bench.default_input();
     let rec_model = record_space(&bench, &GpuSpec::gtx750(), &input);
-    let rec_tune = record_space(&bench, &GpuSpec::rtx2080(), &input);
+    let rec_tune =
+        std::sync::Arc::new(record_space(&bench, &GpuSpec::rtx2080(), &input));
     let mut rng = Rng::new(8);
     let ds = dataset_from_recorded(&rec_model, 1.0, &mut rng);
     let dtm = DecisionTreeModel::train(&ds, "gtx750", &mut rng);

@@ -1,0 +1,123 @@
+//! Invariants of the parallel cached experiment harness:
+//!
+//! * the process-wide space cache records each (benchmark, GPU, input)
+//!   exactly once, even under concurrent first access;
+//! * a plan's JSON report is byte-identical for `--jobs 1` and
+//!   `--jobs 8`;
+//! * the smoke report matches the checked-in golden file (bootstrapping
+//!   it on the first run of a fresh checkout).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use pcat::benchmarks::{self, cached_space, recorded_count, Input};
+use pcat::gpusim::GpuSpec;
+use pcat::harness::{run_plan, ExperimentPlan};
+use pcat::tuning::RecordedSpace;
+
+#[test]
+fn concurrent_cache_hits_record_once_and_share_one_arc() {
+    // a key no other test uses, so the exactly-once count is exact
+    let bench = benchmarks::by_name("coulomb").unwrap();
+    let gpu = GpuSpec::gtx680();
+    let input = Input::new("parallel-cache-once", &[48, 128]);
+    assert_eq!(recorded_count(bench.as_ref(), &gpu, &input), 0);
+
+    let arcs: Vec<Arc<RecordedSpace>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| scope.spawn(|| cached_space(bench.as_ref(), &gpu, &input)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("cache fetch panicked"))
+            .collect()
+    });
+
+    for pair in arcs.windows(2) {
+        assert!(
+            Arc::ptr_eq(&pair[0], &pair[1]),
+            "concurrent hits must share one recording"
+        );
+    }
+    assert_eq!(
+        recorded_count(bench.as_ref(), &gpu, &input),
+        1,
+        "space must be recorded exactly once per process"
+    );
+    // later sequential hits don't re-record either
+    let again = cached_space(bench.as_ref(), &gpu, &input);
+    assert!(Arc::ptr_eq(&again, &arcs[0]));
+    assert_eq!(recorded_count(bench.as_ref(), &gpu, &input), 1);
+}
+
+#[test]
+fn smoke_plan_reports_identical_for_jobs_1_and_jobs_8() {
+    let plan = ExperimentPlan::smoke(11);
+    let serial = run_plan(&plan, 1).unwrap().to_pretty_string();
+    let parallel = run_plan(&plan, 8).unwrap().to_pretty_string();
+    assert_eq!(
+        serial, parallel,
+        "plan reports must be a pure function of plan + seed"
+    );
+    // and stable across repeated runs in the same process
+    let repeat = run_plan(&plan, 8).unwrap().to_pretty_string();
+    assert_eq!(parallel, repeat);
+}
+
+#[test]
+fn smoke_plan_covers_the_advertised_matrix() {
+    let plan = ExperimentPlan::smoke(0);
+    let report = run_plan(&plan, 4).unwrap();
+    // 2 benchmarks × 1 GPU × 2 searchers × 3 seeds
+    assert_eq!(report.results.len(), 12);
+    for r in &report.results {
+        assert!(r.best_ms.is_finite(), "job must measure something");
+        assert!(r.tests >= 1 && r.tests <= plan.max_tests);
+        if r.spec.searcher == "random" {
+            assert_eq!(r.profiled_tests, 0);
+        }
+    }
+    // profile jobs actually profile
+    assert!(report
+        .results
+        .iter()
+        .filter(|r| r.spec.searcher == "profile")
+        .all(|r| r.profiled_tests >= 1));
+}
+
+/// Golden-file gate for the CI smoke mode. Once
+/// `testdata/smoke_golden.json` is committed, any drift in the smoke
+/// report fails here and in the CI workflow's diff step. On a fresh
+/// local checkout the golden is bootstrapped (commit the generated
+/// file); under CI a missing golden is only noted — self-blessing
+/// there would make the drift gate vacuous.
+#[test]
+fn smoke_report_matches_checked_in_golden() {
+    let golden =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("testdata/smoke_golden.json");
+    let got = run_plan(&ExperimentPlan::smoke(0), 4)
+        .unwrap()
+        .to_pretty_string();
+    if golden.exists() {
+        let want = std::fs::read_to_string(&golden).unwrap();
+        assert_eq!(
+            got, want,
+            "smoke report drifted from {}; if the change is intentional, \
+             regenerate via `scripts/ci-local.sh bless`",
+            golden.display()
+        );
+    } else if std::env::var_os("CI").is_some() {
+        eprintln!(
+            "smoke golden {} missing in CI — run `scripts/ci-local.sh \
+             bless` locally and commit it to arm the drift gate",
+            golden.display()
+        );
+    } else {
+        std::fs::create_dir_all(golden.parent().unwrap()).unwrap();
+        std::fs::write(&golden, &got).unwrap();
+        eprintln!(
+            "bootstrapped smoke golden at {} — commit it",
+            golden.display()
+        );
+    }
+}

@@ -203,7 +203,7 @@ fn prop_searchers_never_retest_plain_configs() {
     let rec = record_space(bench.as_ref(), &gpu, &bench.default_input());
     let oracle = OracleModel::new(&rec);
     for seed in 0..12u64 {
-        let searchers: Vec<Box<dyn Searcher>> = vec![
+        let searchers: Vec<Box<dyn Searcher + '_>> = vec![
             Box::new(RandomSearcher::new(seed)),
             Box::new(ProfileSearcher::new(&oracle, 0.7, seed)),
             Box::new(BasinHopping::new(seed)),
