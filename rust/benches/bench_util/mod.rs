@@ -1,5 +1,11 @@
 //! Minimal bench harness (criterion is unavailable in the offline crate
-//! set): warmup + timed repetitions, reporting mean/min per iteration.
+//! set): warmup + timed repetitions, reporting mean/min per iteration,
+//! with optional machine-readable JSON output for the perf-trajectory
+//! gate (`scripts/bench.sh` → `BENCH_scoring.json`).
+
+// Each bench binary compiles its own copy of this module and uses a
+// different subset of it (only hotpaths emits JSON).
+#![allow(dead_code)]
 
 use std::time::Instant;
 
@@ -39,4 +45,69 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
 /// Print a section header.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// Collects named results and derived ratios, then writes them as one
+/// JSON document when the `BENCH_JSON` environment variable names an
+/// output path (the hook `scripts/bench.sh` uses to assemble
+/// `BENCH_scoring.json`). A no-op otherwise.
+#[derive(Default)]
+pub struct JsonSink {
+    results: Vec<(String, usize, f64, f64)>,
+    derived: Vec<(String, f64)>,
+}
+
+impl JsonSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a result (pass-through, so call sites stay one-liners).
+    pub fn record(&mut self, r: BenchResult) -> BenchResult {
+        self.results
+            .push((r.name.clone(), r.iters, r.mean_ms, r.min_ms));
+        r
+    }
+
+    /// Record a derived scalar (e.g. a before/after speedup).
+    pub fn derive(&mut self, name: &str, value: f64) {
+        println!("{name:<44} {value:>10.2}x");
+        self.derived.push((name.to_string(), value));
+    }
+
+    /// Write to `$BENCH_JSON` if set; returns the path written.
+    pub fn flush(&self) -> Option<String> {
+        let path = std::env::var("BENCH_JSON").ok()?;
+        use pcat::util::json::{obj, Value};
+        let results: Vec<Value> = self
+            .results
+            .iter()
+            .map(|(name, iters, mean_ms, min_ms)| {
+                obj(vec![
+                    ("name", Value::from(name.clone())),
+                    ("iters", Value::from(*iters)),
+                    ("mean_ms", Value::from(*mean_ms)),
+                    ("min_ms", Value::from(*min_ms)),
+                ])
+            })
+            .collect();
+        let derived: Vec<(&str, Value)> = self
+            .derived
+            .iter()
+            .map(|(name, v)| (name.as_str(), Value::from(*v)))
+            .collect();
+        let doc = obj(vec![
+            ("schema", Value::from("pcat-bench/v1")),
+            ("results", Value::Arr(results)),
+            ("derived", obj(derived)),
+        ]);
+        let mut body = doc.to_string_pretty(1);
+        body.push('\n');
+        if let Some(dir) = std::path::Path::new(&path).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        std::fs::write(&path, body).expect("writing BENCH_JSON");
+        println!("\nwrote {path}");
+        Some(path)
+    }
 }

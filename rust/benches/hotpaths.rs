@@ -1,25 +1,38 @@
 //! Hot-path micro-benchmarks (§Perf): configuration scoring, model
-//! prediction, space enumeration, simulator throughput, JSON replay I/O.
+//! prediction, space enumeration, simulator throughput, JSON replay I/O,
+//! and the columnar scoring engine's before/after trajectory
+//! (AoS + linear-scan baseline vs matrix + Fenwick engine).
 //!
 //! ```bash
 //! cargo bench --bench hotpaths
+//! # machine-readable trajectory (what scripts/bench.sh assembles into
+//! # BENCH_scoring.json):
+//! BENCH_JSON=target/bench_scoring_raw.json cargo bench --bench hotpaths
 //! ```
 
 mod bench_util;
 
-use bench_util::{bench, section};
+use std::sync::Arc;
+
+use bench_util::{bench, section, JsonSink};
 use pcat::benchmarks::{self, record_space};
 use pcat::counters::CounterVec;
-use pcat::expert::{analyze, normalize_scores, react, score};
+use pcat::expert::{
+    active_deltas, analyze, normalize_scores, normalize_scores_in_place,
+    react, score, score_active,
+};
 use pcat::gpusim::{simulate, GpuSpec};
 use pcat::model::{
     dataset_from_recorded, DecisionTreeModel, OracleModel, PrecomputedModel,
-    TpPcModel,
+    PredictionMatrix, TpPcModel,
 };
+use pcat::searcher::{Budget, CostModel, ProfileSearcher, ReplayEnv, Searcher};
+use pcat::util::fenwick::WeightedIndex;
 use pcat::util::rng::Rng;
 
 fn main() {
     let gpu = GpuSpec::gtx1070();
+    let mut sink = JsonSink::new();
 
     section("tuning-space enumeration");
     for name in ["coulomb", "gemm", "gemm-full"] {
@@ -106,6 +119,272 @@ fn main() {
         },
     );
 
+    // ----- the perf-trajectory benches: pre-PR baseline vs engine -----
+    // GEMM-full is the paper's footnote-5 huge space (~O(10^5) configs
+    // after pruning) — the scale the acceptance gate measures at.
+    let gf = benchmarks::by_name("gemm-full").unwrap();
+    let gf_input = gf.default_input();
+    section("gemm-full recording (one-time bench fixture)");
+    let rec_full = record_space(gf.as_ref(), &gpu, &gf_input);
+    let n = rec_full.space.len();
+    println!("gemm-full: {n} configs after pruning");
+    let oracle_full = OracleModel::new(&rec_full);
+
+    section(&format!("prediction data plane (gemm-full, {n} configs)"));
+    let r_rebuild = sink.record(bench(
+        "per-run AoS rebuild (HashMap predict/config)",
+        1,
+        10,
+        || {
+            let preds: Vec<CounterVec> = rec_full
+                .space
+                .configs
+                .iter()
+                .map(|c| oracle_full.predict(c))
+                .collect();
+            std::hint::black_box(&preds);
+        },
+    ));
+    let r_matrix = sink.record(bench(
+        "per-cell matrix build (from_recorded)",
+        1,
+        10,
+        || {
+            let m = PredictionMatrix::from_recorded(&rec_full);
+            std::hint::black_box(&m);
+        },
+    ));
+    sink.derive(
+        "prediction_build_speedup",
+        r_rebuild.mean_ms / r_matrix.mean_ms,
+    );
+
+    // shared fixtures for the round benches
+    let matrix = PredictionMatrix::from_recorded(&rec_full);
+    // three profiling rounds' worth of measured counters + profile idxs
+    let round_idx = [n / 7, n / 3, (2 * n) / 3];
+    let round_counters: Vec<CounterVec> = round_idx
+        .iter()
+        .map(|&i| rec_full.records[i].counters.clone())
+        .collect();
+    let rounds = round_idx.len();
+
+    section(&format!(
+        "profile-searcher scoring rounds (gemm-full, {n} configs, \
+         {rounds} rounds/repetition)"
+    ));
+    // Pre-PR shape of one harness repetition: rebuild the AoS
+    // prediction table, then per round score with score_active, collect
+    // the live scores, normalize, scatter back and draw 5 plain steps
+    // through the O(N) linear-scan sampler.
+    let r_round_aos = sink.record(bench(
+        "rounds incl. rebuild: AoS + linear scan",
+        1,
+        5,
+        || {
+            let preds: Vec<CounterVec> = rec_full
+                .space
+                .configs
+                .iter()
+                .map(|c| oracle_full.predict(c))
+                .collect();
+            let mut rng = Rng::new(42);
+            let mut explored = vec![false; n];
+            let mut scores = vec![0.0f64; n];
+            for r in 0..rounds {
+                let c_profile = round_idx[r];
+                explored[c_profile] = true;
+                let b = analyze(&round_counters[r], &gpu);
+                let delta = react(&b, 0.7);
+                let active = active_deltas(&delta);
+                let pred_profile = &preds[c_profile];
+                for k in 0..n {
+                    scores[k] = if explored[k] {
+                        f64::NEG_INFINITY
+                    } else {
+                        score_active(&active, pred_profile, &preds[k])
+                    };
+                }
+                let mut live: Vec<f64> = scores
+                    .iter()
+                    .copied()
+                    .filter(|s| s.is_finite())
+                    .collect();
+                normalize_scores(&mut live);
+                let mut it = live.into_iter();
+                for s in scores.iter_mut() {
+                    if s.is_finite() {
+                        *s = it.next().unwrap();
+                    } else {
+                        *s = 0.0;
+                    }
+                }
+                for _ in 0..5 {
+                    let l = rng.choose_weighted(&scores).unwrap();
+                    explored[l] = true;
+                    scores[l] = 0.0;
+                }
+            }
+            std::hint::black_box(&scores);
+        },
+    ));
+    // Engine shape of the same repetition: the shared matrix already
+    // exists (built once per cell), rounds score column-wise into the
+    // reusable buffer, normalize in place and draw via the Fenwick tree.
+    let r_round_engine = sink.record(bench(
+        "rounds on shared matrix: columnar + Fenwick",
+        1,
+        5,
+        || {
+            let mut rng = Rng::new(42);
+            let mut explored = vec![false; n];
+            let mut scores = vec![0.0f64; n];
+            for r in 0..rounds {
+                let c_profile = round_idx[r];
+                explored[c_profile] = true;
+                let b = analyze(&round_counters[r], &gpu);
+                let delta = react(&b, 0.7);
+                let active = matrix.active_columns(&delta);
+                matrix.score_all(c_profile, &active, &mut scores);
+                for (k, &done) in explored.iter().enumerate() {
+                    if done {
+                        scores[k] = f64::NEG_INFINITY;
+                    }
+                }
+                normalize_scores_in_place(&mut scores);
+                let mut sampler = WeightedIndex::from_weights(&scores);
+                for _ in 0..5 {
+                    let l = sampler.sample(&mut rng).unwrap();
+                    explored[l] = true;
+                    sampler.set(l, 0.0);
+                }
+            }
+            std::hint::black_box(&scores);
+        },
+    ));
+    sink.derive(
+        "scoring_round_speedup",
+        r_round_aos.mean_ms / r_round_engine.mean_ms,
+    );
+
+    section(&format!("weighted-random draw (N = {n})"));
+    let weights: Vec<f64> = {
+        let mut s = vec![0.0f64; n];
+        let active = matrix.active_columns(&{
+            let b = analyze(&round_counters[0], &gpu);
+            react(&b, 0.7)
+        });
+        matrix.score_all(round_idx[0], &active, &mut s);
+        normalize_scores_in_place(&mut s);
+        s
+    };
+    let draws = 1000usize;
+    let r_lin = sink.record(bench(
+        &format!("choose_weighted x{draws} (linear O(N))"),
+        1,
+        5,
+        || {
+            let mut rng = Rng::new(7);
+            let mut acc = 0usize;
+            for _ in 0..draws {
+                acc ^= rng.choose_weighted(&weights).unwrap();
+            }
+            std::hint::black_box(acc);
+        },
+    ));
+    let r_fen = sink.record(bench(
+        &format!("WeightedIndex build + x{draws} (O(log N))"),
+        1,
+        5,
+        || {
+            let mut rng = Rng::new(7);
+            let sampler = WeightedIndex::from_weights(&weights);
+            let mut acc = 0usize;
+            for _ in 0..draws {
+                acc ^= sampler.sample(&mut rng).unwrap();
+            }
+            std::hint::black_box(acc);
+        },
+    ));
+    sink.derive("weighted_draw_speedup", r_lin.mean_ms / r_fen.mean_ms);
+
+    section("neighbourhood generation (gemm-full)");
+    let from = rec_full.space.configs[n / 2].clone();
+    sink.record(bench(
+        "neighbour index build (incl. space clone)",
+        0,
+        3,
+        || {
+            let s = rec_full.space.clone();
+            let nb = s.neighbours(&from, 1);
+            std::hint::black_box(&nb);
+        },
+    ));
+    let warm = rec_full.space.clone();
+    let _ = warm.neighbours(&from, 1); // build once, then measure queries
+    for radius in [1usize, 2] {
+        let r_scan = sink.record(bench(
+            &format!("neighbours_scan radius {radius}"),
+            1,
+            5,
+            || {
+                let nb = warm.neighbours_scan(&from, radius);
+                std::hint::black_box(&nb);
+            },
+        ));
+        let r_indexed = sink.record(bench(
+            &format!("indexed neighbours radius {radius}"),
+            1,
+            5,
+            || {
+                let nb = warm.neighbours(&from, radius);
+                std::hint::black_box(&nb);
+            },
+        ));
+        sink.derive(
+            &format!("neighbourhood_speedup_r{radius}"),
+            r_scan.mean_ms / r_indexed.mean_ms,
+        );
+    }
+
+    section("end-to-end profile repetition (gemm-full, budget 18)");
+    let shared = Arc::new(PredictionMatrix::from_recorded(&rec_full));
+    let arc_rec = Arc::new(rec_full.clone());
+    let r_run_model = sink.record(bench(
+        "ProfileSearcher::new (per-run densify)",
+        0,
+        3,
+        || {
+            let mut env = ReplayEnv::new(
+                Arc::clone(&arc_rec),
+                gpu.clone(),
+                CostModel::default(),
+            );
+            let t = ProfileSearcher::new(&oracle_full, 0.7, 5)
+                .run(&mut env, &Budget::tests(18));
+            assert_eq!(t.len(), 18);
+        },
+    ));
+    let r_run_shared = sink.record(bench(
+        "ProfileSearcher::shared (per-cell matrix)",
+        0,
+        3,
+        || {
+            let mut env = ReplayEnv::new(
+                Arc::clone(&arc_rec),
+                gpu.clone(),
+                CostModel::default(),
+            );
+            let t = ProfileSearcher::shared(Arc::clone(&shared), 0.7, 5)
+                .run(&mut env, &Budget::tests(18));
+            assert_eq!(t.len(), 18);
+        },
+    ));
+    sink.derive(
+        "profile_repetition_speedup",
+        r_run_model.mean_ms / r_run_shared.mean_ms,
+    );
+
     section("recorded-space JSON roundtrip");
     let json = rec.to_json().to_string_pretty(0);
     println!("payload: {:.1} MB", json.len() as f64 / 1e6);
@@ -117,4 +396,6 @@ fn main() {
         let v = pcat::util::json::parse(&json).unwrap();
         std::hint::black_box(&v);
     });
+
+    sink.flush();
 }

@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use crate::benchmarks::{cached_space, Benchmark, Input};
 use crate::gpusim::GpuSpec;
-use crate::model::TpPcModel;
+use crate::model::{PredictionMatrix, TpPcModel};
 use crate::searcher::{
     BasinHopping, Budget, CostModel, EvalEnv, ProfileSearcher,
     RandomSearcher, ReplayEnv, Searcher, SearchTrace, SimulatedAnnealing,
@@ -22,9 +22,18 @@ use crate::tuning::{Config, RecordedSpace};
 /// Which search strategy to use.
 pub enum SearcherChoice<'m> {
     Random,
-    /// Profile-based with a TP→PC model and an `inst_reaction` threshold.
+    /// Profile-based with a TP→PC model and an `inst_reaction` threshold
+    /// (the model is densified into a [`PredictionMatrix`] at the start
+    /// of the run).
     Profile {
         model: &'m dyn TpPcModel,
+        inst_reaction: f64,
+    },
+    /// Profile-based over a prebuilt prediction matrix shared across
+    /// runs — the harness builds one matrix per (benchmark, GPU) cell
+    /// and every seed-repetition scores against the same `Arc` (§Perf).
+    ProfileShared {
+        matrix: Arc<PredictionMatrix>,
         inst_reaction: f64,
     },
     BasinHopping,
@@ -36,7 +45,8 @@ impl SearcherChoice<'_> {
     pub fn name(&self) -> &'static str {
         match self {
             SearcherChoice::Random => "random",
-            SearcherChoice::Profile { .. } => "profile",
+            SearcherChoice::Profile { .. }
+            | SearcherChoice::ProfileShared { .. } => "profile",
             SearcherChoice::BasinHopping => "basin_hopping",
             SearcherChoice::Starchart => "starchart",
             SearcherChoice::Annealing => "annealing",
@@ -131,6 +141,11 @@ impl Tuner {
                 inst_reaction,
             } => ProfileSearcher::new(model, inst_reaction, self.seed)
                 .run(&mut *self.env, &self.budget),
+            SearcherChoice::ProfileShared {
+                matrix,
+                inst_reaction,
+            } => ProfileSearcher::shared(matrix, inst_reaction, self.seed)
+                .run(&mut *self.env, &self.budget),
             SearcherChoice::BasinHopping => {
                 BasinHopping::new(self.seed).run(&mut *self.env, &self.budget)
             }
@@ -204,6 +219,35 @@ mod tests {
         assert_eq!(r.tests, 30);
         assert!(r.profiled_tests >= 4);
         assert_eq!(r.best_config.len(), 7);
+    }
+
+    #[test]
+    fn shared_matrix_choice_matches_model_choice() {
+        let gpu = GpuSpec::gtx1070();
+        let rec = cached_space(&Coulomb, &gpu, &Coulomb.default_input());
+        let oracle = OracleModel::new(&rec);
+        let matrix = Arc::new(PredictionMatrix::from_recorded(&rec));
+        let run = |choice: SearcherChoice<'_>| {
+            Tuner::replay(Arc::clone(&rec), gpu.clone(), CostModel::default())
+                .with_budget(Budget::tests(30))
+                .with_seed(5)
+                .run(choice)
+        };
+        let a = run(SearcherChoice::Profile {
+            model: &oracle,
+            inst_reaction: 0.5,
+        });
+        let b = run(SearcherChoice::ProfileShared {
+            matrix,
+            inst_reaction: 0.5,
+        });
+        assert_eq!(a.searcher, "profile");
+        assert_eq!(b.searcher, "profile");
+        assert_eq!(a.best_ms, b.best_ms);
+        let idx = |r: &TuningResult| {
+            r.trace.steps.iter().map(|s| s.idx).collect::<Vec<_>>()
+        };
+        assert_eq!(idx(&a), idx(&b));
     }
 
     #[test]

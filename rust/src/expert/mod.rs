@@ -10,5 +10,6 @@ mod scoring;
 pub use bottleneck::{analyze, Bottlenecks};
 pub use reaction::{react, DeltaPc, DEFAULT_INST_REACTION, INST_BOUND_REACTION};
 pub use scoring::{
-    active_deltas, normalize_scores, score, score_active, CUTOFF_GAMMA,
+    active_deltas, normalize_scores, normalize_scores_in_place, score,
+    score_active, CUTOFF_GAMMA,
 };

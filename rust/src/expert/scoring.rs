@@ -91,9 +91,53 @@ pub fn active_deltas(delta: &DeltaPc) -> Vec<(usize, f64)> {
         .collect()
 }
 
+/// Eq. 17 for the scoring engine's reusable buffer: normalize in place,
+/// treating non-finite entries as *excluded* (weight 0.0).
+///
+/// The pre-engine searcher collected the finite entries into a
+/// temporary, normalized that, and scattered the results back — three
+/// allocations plus two extra passes per profiling round. This variant
+/// produces exactly the same weights (identical min/max folds and
+/// per-entry mapping over the finite entries, 0.0 for the rest) in two
+/// allocation-free passes. Excluded entries are how the searcher flags
+/// already-explored configurations (`NEG_INFINITY`) and, in the §3.9.1
+/// local variant, everything outside the neighbourhood.
+pub fn normalize_scores_in_place(scores: &mut [f64]) {
+    let mut s_max = f64::MIN;
+    let mut s_min = f64::MAX;
+    let mut any_finite = false;
+    for &s in scores.iter() {
+        if s.is_finite() {
+            any_finite = true;
+            s_max = s_max.max(s);
+            s_min = s_min.min(s);
+        }
+    }
+    for s in scores.iter_mut() {
+        let raw = *s;
+        *s = if !raw.is_finite() || !any_finite {
+            0.0
+        } else if raw > 0.0 {
+            let base = if s_max > 0.0 { 1.0 + raw / s_max } else { 1.0 };
+            base.powi(8)
+        } else if raw > CUTOFF_GAMMA {
+            if s_min < 0.0 {
+                (1.0 - raw / s_min).powi(8).max(0.0001)
+            } else {
+                0.0001
+            }
+        } else {
+            0.0001
+        };
+    }
+}
+
 /// Eq. 17: normalize raw scores into [0.0001, 256], amplifying positive
 /// scores into (1, 256] and keeping a small non-zero probability for
 /// mildly negative ones (escape hatch from local optima / model error).
+///
+/// Every entry is assumed finite (see [`normalize_scores_in_place`] for
+/// the engine variant that treats non-finite entries as excluded).
 pub fn normalize_scores(scores: &mut [f64]) {
     let finite: Vec<f64> = scores.iter().copied().filter(|s| s.is_finite()).collect();
     if finite.is_empty() {
@@ -252,5 +296,47 @@ mod tests {
         for v in &s {
             assert!((0.0001..=256.0).contains(v));
         }
+    }
+
+    #[test]
+    fn in_place_matches_collect_scatter_flow() {
+        // the exact flow the pre-engine searcher used: collect finite,
+        // normalize, scatter back, zero the excluded entries
+        let mixed = vec![
+            f64::NEG_INFINITY,
+            -5.0,
+            -0.1,
+            f64::NEG_INFINITY,
+            0.0,
+            0.4,
+            2.0,
+            f64::INFINITY,
+            f64::NAN,
+        ];
+        let mut live: Vec<f64> =
+            mixed.iter().copied().filter(|s| s.is_finite()).collect();
+        normalize_scores(&mut live);
+        let mut want = Vec::with_capacity(mixed.len());
+        let mut it = live.into_iter();
+        for s in &mixed {
+            if s.is_finite() {
+                want.push(it.next().unwrap());
+            } else {
+                want.push(0.0);
+            }
+        }
+        let mut got = mixed.clone();
+        normalize_scores_in_place(&mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn in_place_all_excluded_is_all_zero() {
+        let mut s = vec![f64::NEG_INFINITY, f64::NAN, f64::INFINITY];
+        normalize_scores_in_place(&mut s);
+        assert_eq!(s, vec![0.0, 0.0, 0.0]);
+        let mut empty: Vec<f64> = vec![];
+        normalize_scores_in_place(&mut empty);
+        assert!(empty.is_empty());
     }
 }

@@ -23,7 +23,7 @@ use anyhow::{bail, Context, Result};
 use crate::benchmarks::{self, cached_space};
 use crate::coordinator::{SearcherChoice, Tuner};
 use crate::gpusim::GpuSpec;
-use crate::model::OracleModel;
+use crate::model::PredictionMatrix;
 use crate::searcher::{Budget, CostModel};
 use crate::tuning::RecordedSpace;
 use crate::util::json::{obj, Value};
@@ -192,7 +192,10 @@ pub struct JobResult {
 /// Shared per-(benchmark, gpu) context, built once before the fan-out.
 struct CellCtx {
     rec: Arc<RecordedSpace>,
-    oracle: Arc<OracleModel>,
+    /// Dense oracle prediction matrix, shared by every seed-repetition
+    /// of the cell — the profile jobs score against this instead of
+    /// rebuilding per-run prediction tables (§Perf).
+    matrix: Arc<PredictionMatrix>,
     gpu: GpuSpec,
     inst_reaction: f64,
 }
@@ -203,8 +206,8 @@ fn run_job(spec: &JobSpec, plan: &ExperimentPlan, ctx: &CellCtx) -> JobResult {
     let thr = ctx.rec.best_time() * 1.1;
     let choice = match spec.searcher.as_str() {
         "random" => SearcherChoice::Random,
-        "profile" => SearcherChoice::Profile {
-            model: &*ctx.oracle,
+        "profile" => SearcherChoice::ProfileShared {
+            matrix: Arc::clone(&ctx.matrix),
             inst_reaction: ctx.inst_reaction,
         },
         "basin_hopping" => SearcherChoice::BasinHopping,
@@ -405,10 +408,10 @@ impl PlanReport {
 
 /// Execute a plan with up to `jobs` worker threads.
 ///
-/// Recording and oracle construction happen once per distinct
-/// (benchmark, gpu) cell in a deterministic pre-pass; the fan-out then
-/// only replays cached data, so worker count affects wall-clock and
-/// nothing else.
+/// Recording and oracle prediction-matrix construction happen once per
+/// distinct (benchmark, gpu) cell in a deterministic pre-pass; the
+/// fan-out then only replays cached data and scores against the shared
+/// matrix, so worker count affects wall-clock and nothing else.
 pub fn run_plan(plan: &ExperimentPlan, jobs: usize) -> Result<PlanReport> {
     plan.validate()?;
 
@@ -426,7 +429,9 @@ pub fn run_plan(plan: &ExperimentPlan, jobs: usize) -> Result<PlanReport> {
         let bench = benchmarks::by_name(b).expect("validated");
         let gpu = GpuSpec::by_name(g).expect("validated");
         let rec = cached_space(bench.as_ref(), &gpu, &bench.default_input());
-        let oracle = Arc::new(OracleModel::new(&rec));
+        // densify the oracle straight from the recording: no
+        // HashMap<Config, CounterVec> is ever built on this path
+        let matrix = Arc::new(PredictionMatrix::from_recorded(&rec));
         let inst_reaction = if bench.instruction_bound() {
             crate::expert::INST_BOUND_REACTION
         } else {
@@ -434,7 +439,7 @@ pub fn run_plan(plan: &ExperimentPlan, jobs: usize) -> Result<PlanReport> {
         };
         CellCtx {
             rec,
-            oracle,
+            matrix,
             gpu,
             inst_reaction,
         }

@@ -19,7 +19,9 @@
 //!   transposition, GEMM, GEMM-full, n-body, Convolution) as analytic
 //!   workload models over the simulator.
 //! * [`model`] — ML models of the TP→PC_ops relation (§3.4): regression
-//!   decision trees and least-squares quadratic regression.
+//!   decision trees and least-squares quadratic regression, plus the
+//!   dense [`model::PredictionMatrix`] the columnar scoring engine
+//!   shares across seed-repetitions (§Perf).
 //! * [`expert`] — the bottleneck-analysis + ΔPC expert system (§3.5,
 //!   Eqs. 6–15).
 //! * [`searcher`] — the profile-based searcher (Algorithm 1, Eqs. 16–17)

@@ -1,0 +1,273 @@
+//! Dense prediction matrix — the columnar scoring engine's data plane
+//! (§Perf).
+//!
+//! The profile searcher scores *every* unexplored configuration against
+//! the TP→PC model each profiling round (Eqs. 16–17), and the harness
+//! repeats each stochastic search across ~100 seeds per cell. Before
+//! this engine every run rebuilt a `Vec<CounterVec>` by calling
+//! `model.predict()` per configuration — for [`OracleModel`] and
+//! [`PrecomputedModel`] that is a `HashMap<Config, CounterVec>` lookup
+//! (hashing a whole parameter vector) plus a 25-double clone, per
+//! configuration, per repetition.
+//!
+//! [`PredictionMatrix`] stores the predictions once per (model, space)
+//! as a dense `[MODELED_COUNTERS × n_configs]` `Vec<f64>` in
+//! counter-major order: each modeled counter occupies one contiguous
+//! column of `n_configs` doubles. The harness builds it once per
+//! (benchmark, GPU) cell and shares it via `Arc` across every
+//! seed-repetition; the Eq. 16 round then streams the ~8 active columns
+//! straight through a reusable score buffer — branch-free in the hot
+//! case, autovectorizable, and touching only the counters the ΔPC
+//! vector actually activates instead of whole 25-counter rows.
+//!
+//! [`OracleModel`]: super::OracleModel
+//! [`PrecomputedModel`]: super::PrecomputedModel
+
+use crate::counters::{Counter, CounterVec};
+use crate::expert::DeltaPc;
+use crate::tuning::{RecordedSpace, Space};
+
+use super::{TpPcModel, MODELED_COUNTERS};
+
+/// Dense per-space model predictions, one contiguous column per modeled
+/// counter.
+#[derive(Debug, Clone)]
+pub struct PredictionMatrix {
+    kind: &'static str,
+    n_configs: usize,
+    /// Counter-major: `data[j * n_configs + k]` is the prediction of
+    /// `MODELED_COUNTERS[j]` for configuration `k`.
+    data: Vec<f64>,
+}
+
+impl PredictionMatrix {
+    /// Evaluate `model` over every configuration of `space` once.
+    pub fn build(space: &Space, model: &dyn TpPcModel) -> Self {
+        let n = space.len();
+        let mut data = vec![0.0; MODELED_COUNTERS.len() * n];
+        for (k, cfg) in space.configs.iter().enumerate() {
+            let pred = model.predict(cfg);
+            for (j, &c) in MODELED_COUNTERS.iter().enumerate() {
+                data[j * n + k] = pred.get(c);
+            }
+        }
+        PredictionMatrix {
+            kind: model.kind(),
+            n_configs: n,
+            data,
+        }
+    }
+
+    /// Oracle matrix straight from a recording — the exact counters of
+    /// each configuration, with no intermediate `HashMap` or model
+    /// evaluation (the §4.3 experiment path the plan runner uses).
+    pub fn from_recorded(rec: &RecordedSpace) -> Self {
+        let n = rec.records.len();
+        let mut data = vec![0.0; MODELED_COUNTERS.len() * n];
+        for (k, r) in rec.records.iter().enumerate() {
+            for (j, &c) in MODELED_COUNTERS.iter().enumerate() {
+                data[j * n + k] = r.counters.get(c);
+            }
+        }
+        PredictionMatrix {
+            kind: "oracle",
+            n_configs: n,
+            data,
+        }
+    }
+
+    pub fn n_configs(&self) -> usize {
+        self.n_configs
+    }
+
+    pub fn kind(&self) -> &'static str {
+        self.kind
+    }
+
+    /// Column index of a modeled counter.
+    pub fn column_of(c: Counter) -> Option<usize> {
+        MODELED_COUNTERS.iter().position(|&m| m == c)
+    }
+
+    /// The contiguous prediction column of `MODELED_COUNTERS[j]`.
+    #[inline]
+    pub fn column(&self, j: usize) -> &[f64] {
+        &self.data[j * self.n_configs..(j + 1) * self.n_configs]
+    }
+
+    /// Reconstruct the modeled prediction vector of one configuration
+    /// (cold path: reports and tests; the hot path never materializes
+    /// rows).
+    pub fn predict_vec(&self, k: usize) -> CounterVec {
+        let mut v = CounterVec::new();
+        for (j, &c) in MODELED_COUNTERS.iter().enumerate() {
+            v.set(c, self.data[j * self.n_configs + k]);
+        }
+        v
+    }
+
+    /// Project a ΔPC vector onto matrix columns: the non-zero
+    /// (column, delta) pairs the scoring round iterates.
+    ///
+    /// Every counter the expert system reacts on (§3.5.2) is modeled, so
+    /// the projection is total; a delta on an unmodeled counter would be
+    /// a reaction-table bug and panics loudly.
+    pub fn active_columns(&self, delta: &DeltaPc) -> Vec<(usize, f64)> {
+        delta
+            .0
+            .iter()
+            .filter(|(_, d)| *d != 0.0)
+            .map(|(c, d)| {
+                let j = Self::column_of(c).unwrap_or_else(|| {
+                    panic!("ΔPC activates unmodeled counter {c}")
+                });
+                (j, d)
+            })
+            .collect()
+    }
+
+    /// Eq. 16 for the whole space, column-wise, into a reusable buffer.
+    ///
+    /// Arithmetic is identical (term order and all) to
+    /// [`score_active`](crate::expert::score_active) applied per
+    /// configuration — the `p != 0` hot case drops the per-element
+    /// `PC_used` branch entirely (the predicate is decided once per
+    /// column), which is what lets the divide chain autovectorize.
+    pub fn score_all(
+        &self,
+        profile_idx: usize,
+        active: &[(usize, f64)],
+        scores: &mut [f64],
+    ) {
+        assert_eq!(scores.len(), self.n_configs, "score buffer size");
+        scores.fill(0.0);
+        for &(j, d) in active {
+            let col = self.column(j);
+            let p = col[profile_idx];
+            if p != 0.0 {
+                // p != 0 ⇒ the PC_used predicate holds for every
+                // candidate; same expression as score_active, including
+                // the q == -p division by zero (negative predictions
+                // only — counters are non-negative for tree/oracle
+                // models), which Eq. 17 later treats as non-finite.
+                for (s, &q) in scores.iter_mut().zip(col) {
+                    *s += d * (q - p) / (q + p);
+                }
+            } else {
+                // p == 0: the term is d·q/q for q != 0, skipped for the
+                // uninformative both-zero case. Spelled exactly like
+                // score_active's expression so results stay bit-equal.
+                for (s, &q) in scores.iter_mut().zip(col) {
+                    if q != 0.0 {
+                        *s += d * q / q;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Eq. 16 for a single candidate — the §3.9.1 neighbourhood variant
+    /// scores only a Hamming ball, where a full-column pass would waste
+    /// work. Bit-equal to [`score_all`]'s per-entry result.
+    pub fn score_one(
+        &self,
+        profile_idx: usize,
+        active: &[(usize, f64)],
+        k: usize,
+    ) -> f64 {
+        let mut s = 0.0;
+        for &(j, d) in active {
+            let col = self.column(j);
+            let p = col[profile_idx];
+            let q = col[k];
+            if p != 0.0 || q != 0.0 {
+                s += d * (q - p) / (q + p);
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{record_space, Benchmark, Coulomb};
+    use crate::expert::{active_deltas, analyze, react, score_active};
+    use crate::gpusim::GpuSpec;
+    use crate::model::OracleModel;
+
+    fn recorded() -> RecordedSpace {
+        record_space(&Coulomb, &GpuSpec::gtx1070(), &Coulomb.default_input())
+    }
+
+    #[test]
+    fn from_recorded_matches_oracle_predictions() {
+        let rec = recorded();
+        let oracle = OracleModel::new(&rec);
+        let m = PredictionMatrix::from_recorded(&rec);
+        assert_eq!(m.n_configs(), rec.space.len());
+        assert_eq!(m.kind(), "oracle");
+        for k in [0usize, 5, 17, rec.space.len() - 1] {
+            let want = oracle.predict(&rec.space.configs[k]);
+            let got = m.predict_vec(k);
+            for &c in MODELED_COUNTERS.iter() {
+                assert_eq!(got.get(c), want.get(c), "{c} at {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn build_matches_model() {
+        let rec = recorded();
+        let oracle = OracleModel::new(&rec);
+        let m = PredictionMatrix::build(&rec.space, &oracle);
+        let direct = PredictionMatrix::from_recorded(&rec);
+        assert_eq!(m.data, direct.data);
+    }
+
+    #[test]
+    fn columns_are_contiguous_and_indexed() {
+        let rec = recorded();
+        let m = PredictionMatrix::from_recorded(&rec);
+        for (j, &c) in MODELED_COUNTERS.iter().enumerate() {
+            assert_eq!(PredictionMatrix::column_of(c), Some(j));
+            let col = m.column(j);
+            assert_eq!(col.len(), m.n_configs());
+            for k in (0..m.n_configs()).step_by(7) {
+                assert_eq!(col[k], rec.records[k].counters.get(c));
+            }
+        }
+        assert_eq!(PredictionMatrix::column_of(Counter::DramU), None);
+    }
+
+    #[test]
+    fn score_all_and_score_one_match_score_active() {
+        let rec = recorded();
+        let gpu = GpuSpec::gtx1070();
+        let m = PredictionMatrix::from_recorded(&rec);
+        let n = rec.space.len();
+        let profile_idx = n / 3;
+        let b = analyze(&rec.records[profile_idx].counters, &gpu);
+        let delta = react(&b, 0.5);
+        let active = active_deltas(&delta);
+        let cols = m.active_columns(&delta);
+        assert_eq!(active.len(), cols.len());
+
+        let mut scores = vec![f64::NAN; n];
+        m.score_all(profile_idx, &cols, &mut scores);
+        let pred_profile = m.predict_vec(profile_idx);
+        for k in (0..n).step_by(11) {
+            let want = score_active(
+                &active,
+                &pred_profile,
+                &m.predict_vec(k),
+            );
+            assert_eq!(scores[k], want, "score_all vs score_active at {k}");
+            assert_eq!(
+                m.score_one(profile_idx, &cols, k),
+                want,
+                "score_one vs score_active at {k}"
+            );
+        }
+    }
+}

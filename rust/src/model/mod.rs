@@ -13,13 +13,19 @@
 //! * [`OracleModel`] — reads exact recorded counters instead of
 //!   predicting (the §4.3 experiment isolating expert-system quality
 //!   from model error).
+//!
+//! [`PredictionMatrix`] densifies any model over a fixed space into the
+//! columnar scoring engine's shared data plane (§Perf): built once per
+//! (model, space), shared via `Arc` across seed-repetitions.
 
 mod decision_tree;
+mod matrix;
 mod regression;
 mod training;
 mod tree;
 
 pub use decision_tree::DecisionTreeModel;
+pub use matrix::PredictionMatrix;
 pub use regression::RegressionModel;
 pub use training::{dataset_from_recorded, Dataset};
 pub use tree::RegressionTree;

@@ -7,4 +7,4 @@ mod space;
 
 pub use param::{Config, ParamDef};
 pub use recorded::{Record, RecordedSpace};
-pub use space::Space;
+pub use space::{NeighbourIndex, Space};

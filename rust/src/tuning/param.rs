@@ -53,6 +53,16 @@ impl ParamDef {
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct Config(pub Vec<i64>);
 
+/// Lets `HashMap<Config, _>` be probed with a borrowed value slice —
+/// the neighbourhood index looks up candidate configurations without
+/// allocating a `Config` per probe. Sound because `Vec<i64>` hashes and
+/// compares exactly like `[i64]`.
+impl std::borrow::Borrow<[i64]> for Config {
+    fn borrow(&self) -> &[i64] {
+        &self.0
+    }
+}
+
 impl Config {
     #[inline]
     pub fn get(&self, i: usize) -> i64 {

@@ -1,7 +1,9 @@
 //! Tuning-space enumeration: cross product of parameter values pruned by
-//! constraints, with index↔configuration mapping.
+//! constraints, with index↔configuration mapping and an indexed
+//! Hamming-ball neighbourhood generator.
 
 use std::collections::HashMap;
+use std::sync::{Arc, OnceLock};
 
 use super::{Config, ParamDef};
 use crate::util::json::Value;
@@ -13,6 +15,9 @@ pub struct Space {
     pub params: Vec<ParamDef>,
     pub configs: Vec<Config>,
     by_name: HashMap<String, usize>,
+    /// Lazily built neighbourhood index, shared across clones (the
+    /// profile searcher clones the space per run for its local variant).
+    nb_index: OnceLock<Arc<NeighbourIndex>>,
 }
 
 impl Space {
@@ -61,6 +66,7 @@ impl Space {
             params,
             configs,
             by_name,
+            nb_index: OnceLock::new(),
         }
     }
 
@@ -89,9 +95,25 @@ impl Space {
     }
 
     /// Indices of configurations at Hamming distance ≤ `radius` from
-    /// `from` (excluding `from` itself) — the neighbourhood for local
-    /// search baselines.
+    /// `from` (excluding `from` itself) — the neighbourhood for the
+    /// local-search baselines and the profile searcher's §3.9.1 variant.
+    ///
+    /// Served by a lazily built per-dimension index that generates the
+    /// radius-`r` ball combinatorially (odometer arithmetic on full
+    /// cross products, hash lookups on constraint-pruned spaces) instead
+    /// of Hamming-scanning all N configurations per call. Returns
+    /// exactly the same ascending index list as [`neighbours_scan`].
+    ///
+    /// [`neighbours_scan`]: Space::neighbours_scan
     pub fn neighbours(&self, from: &Config, radius: usize) -> Vec<usize> {
+        self.neighbour_index().neighbours(self, from, radius)
+    }
+
+    /// Reference implementation of [`neighbours`](Space::neighbours):
+    /// linear Hamming scan over the whole space, O(N·dims) per call.
+    /// Kept as the fallback for degenerate spaces and as the ground
+    /// truth the property tests compare the index against.
+    pub fn neighbours_scan(&self, from: &Config, radius: usize) -> Vec<usize> {
         self.configs
             .iter()
             .enumerate()
@@ -101,6 +123,14 @@ impl Space {
             })
             .map(|(i, _)| i)
             .collect()
+    }
+
+    /// The space's neighbourhood index, built on first use and shared
+    /// across clones.
+    pub fn neighbour_index(&self) -> &NeighbourIndex {
+        &**self
+            .nb_index
+            .get_or_init(|| Arc::new(NeighbourIndex::build(self)))
     }
 
     pub fn to_json(&self) -> Value {
@@ -134,6 +164,223 @@ impl Space {
             .map(Config::from_json)
             .collect::<anyhow::Result<_>>()?;
         Ok(Space::from_configs(&name, params, configs))
+    }
+}
+
+/// How the neighbourhood index maps a generated candidate configuration
+/// back to its space index.
+#[derive(Debug)]
+enum Lookup {
+    /// The space is the *full* cross product in odometer order: the
+    /// index is pure stride arithmetic over per-dimension value
+    /// positions — no hashing, no per-candidate allocation.
+    Odometer { strides: Vec<usize> },
+    /// Constraint-pruned (or re-ordered) space: configuration → index.
+    /// Probed with borrowed `[i64]` slices, so candidate generation
+    /// never allocates.
+    Hash(HashMap<Config, usize>),
+    /// Degenerate space (duplicate parameter values or duplicate
+    /// configurations): index lookups would be ambiguous, so every call
+    /// falls back to the linear Hamming scan.
+    Scan,
+}
+
+/// Precomputed per-dimension index behind [`Space::neighbours`] (§Perf).
+///
+/// A Hamming ball of radius `r` around `from` is, by definition, every
+/// way of substituting 1..=r coordinates with alternative parameter
+/// values. The pre-index implementation *scanned all N configurations*
+/// computing a full Hamming distance each — O(N·dims) per call, paid
+/// every local-search step and every §3.9.1 profiling round. This index
+/// generates the ball combinatorially instead: O(ball·dims), where the
+/// ball is typically orders of magnitude smaller than the space. When a
+/// pruned space makes the combinatorial ball *larger* than the space
+/// (tiny spaces, huge radii), the call transparently degrades to the
+/// scan, so it is never asymptotically worse.
+#[derive(Debug)]
+pub struct NeighbourIndex {
+    /// Per dimension: value → position in `ParamDef::values`.
+    value_pos: Vec<HashMap<i64, usize>>,
+    lookup: Lookup,
+}
+
+impl NeighbourIndex {
+    fn build(space: &Space) -> NeighbourIndex {
+        let dims = space.dims();
+        let mut value_pos = Vec::with_capacity(dims);
+        let mut dup_value = false;
+        for p in &space.params {
+            let mut m = HashMap::with_capacity(p.values.len());
+            for (i, &v) in p.values.iter().enumerate() {
+                if m.insert(v, i).is_some() {
+                    dup_value = true;
+                }
+            }
+            value_pos.push(m);
+        }
+        if dup_value {
+            // two positions share one value: "the" index of a candidate
+            // is ambiguous, and the scan (which sees both copies) is the
+            // only faithful answer
+            return NeighbourIndex {
+                value_pos,
+                lookup: Lookup::Scan,
+            };
+        }
+
+        // Full cross product in odometer order ⇒ stride arithmetic.
+        let full = space
+            .params
+            .iter()
+            .try_fold(1usize, |a, p| a.checked_mul(p.values.len()));
+        if full == Some(space.len()) && !space.is_empty() {
+            let mut strides = vec![0usize; dims];
+            let mut s = 1usize;
+            for d in (0..dims).rev() {
+                strides[d] = s;
+                s = s.saturating_mul(space.params[d].values.len());
+            }
+            let odometer_order =
+                space.configs.iter().enumerate().all(|(i, c)| {
+                    (0..dims).all(|d| {
+                        let card = space.params[d].values.len();
+                        let pos = i / strides[d] % card;
+                        space.params[d].values[pos] == c.0[d]
+                    })
+                });
+            if odometer_order {
+                return NeighbourIndex {
+                    value_pos,
+                    lookup: Lookup::Odometer { strides },
+                };
+            }
+        }
+
+        // Constraint-pruned: hash every configuration once.
+        let mut map: HashMap<Config, usize> =
+            HashMap::with_capacity(space.len());
+        let mut dup_config = false;
+        for (i, c) in space.configs.iter().enumerate() {
+            if map.insert(c.clone(), i).is_some() {
+                dup_config = true;
+            }
+        }
+        let lookup = if dup_config {
+            Lookup::Scan
+        } else {
+            Lookup::Hash(map)
+        };
+        NeighbourIndex { value_pos, lookup }
+    }
+
+    /// The Hamming ball of `from`, ascending — exactly the set (and
+    /// order) [`Space::neighbours_scan`] returns.
+    pub fn neighbours(
+        &self,
+        space: &Space,
+        from: &Config,
+        radius: usize,
+    ) -> Vec<usize> {
+        let dims = space.dims();
+        if matches!(self.lookup, Lookup::Scan) {
+            return space.neighbours_scan(from, radius);
+        }
+        if radius == 0 || dims == 0 {
+            return Vec::new();
+        }
+        // Degenerate `from` configurations (wrong length, values outside
+        // the space's domain) have no well-defined per-dimension
+        // alternatives — defer to the scan so both paths always agree.
+        if from.len() != dims {
+            return space.neighbours_scan(from, radius);
+        }
+        for d in 0..dims {
+            if !self.value_pos[d].contains_key(&from.0[d]) {
+                return space.neighbours_scan(from, radius);
+            }
+        }
+        if self.ball_candidates(space, radius) > space.len() as u128 {
+            // pruning made the combinatorial ball the bigger job
+            return space.neighbours_scan(from, radius);
+        }
+
+        let mut out = Vec::new();
+        let mut cur: Vec<i64> = from.0.clone();
+        self.gen(space, from, radius, 0, false, &mut cur, &mut out);
+        out.sort_unstable();
+        out
+    }
+
+    /// Number of candidate substitutions a radius-`r` ball enumerates:
+    /// Σ_{j=1..r} e_j(card_1 − 1, …, card_dims − 1), via the elementary
+    /// symmetric polynomial DP (saturating — only compared against N).
+    fn ball_candidates(&self, space: &Space, radius: usize) -> u128 {
+        let rmax = radius.min(space.dims());
+        let mut coeff = vec![0u128; rmax + 1];
+        coeff[0] = 1;
+        for p in &space.params {
+            let a = (p.values.len() - 1) as u128;
+            if a == 0 {
+                continue;
+            }
+            for j in (1..=rmax).rev() {
+                coeff[j] =
+                    coeff[j].saturating_add(coeff[j - 1].saturating_mul(a));
+            }
+        }
+        coeff[1..]
+            .iter()
+            .fold(0u128, |s, &c| s.saturating_add(c))
+    }
+
+    /// DFS over dimensions: at each dimension either keep `from`'s value
+    /// or substitute one alternative (consuming one unit of radius).
+    /// `cur[d..]` always equals `from` on entry, so hitting the radius
+    /// budget completes the candidate immediately.
+    #[allow(clippy::too_many_arguments)]
+    fn gen(
+        &self,
+        space: &Space,
+        from: &Config,
+        remaining: usize,
+        d: usize,
+        changed: bool,
+        cur: &mut Vec<i64>,
+        out: &mut Vec<usize>,
+    ) {
+        if remaining == 0 || d == space.dims() {
+            if changed {
+                if let Some(i) = self.lookup_index(cur) {
+                    out.push(i);
+                }
+            }
+            return;
+        }
+        // keep this dimension
+        self.gen(space, from, remaining, d + 1, changed, cur, out);
+        // substitute each alternative value
+        for &v in &space.params[d].values {
+            if v == from.0[d] {
+                continue;
+            }
+            cur[d] = v;
+            self.gen(space, from, remaining - 1, d + 1, true, cur, out);
+        }
+        cur[d] = from.0[d];
+    }
+
+    fn lookup_index(&self, cur: &[i64]) -> Option<usize> {
+        match &self.lookup {
+            Lookup::Odometer { strides } => {
+                let mut idx = 0usize;
+                for (d, v) in cur.iter().enumerate() {
+                    idx += self.value_pos[d][v] * strides[d];
+                }
+                Some(idx)
+            }
+            Lookup::Hash(map) => map.get(cur).copied(),
+            Lookup::Scan => unreachable!("scan spaces never generate"),
+        }
     }
 }
 
@@ -197,6 +444,72 @@ mod tests {
         let n = s.neighbours(&s.configs[0], 1);
         // (1,0): neighbours at d=1 are (1,1), (2,0), (3,0)
         assert_eq!(n.len(), 3);
+    }
+
+    #[test]
+    fn indexed_neighbours_match_scan_on_full_space() {
+        let s = toy();
+        for radius in 0..=3 {
+            for from in &s.configs {
+                assert_eq!(
+                    s.neighbours(from, radius),
+                    s.neighbours_scan(from, radius),
+                    "radius {radius}, from {from:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn indexed_neighbours_match_scan_on_pruned_space() {
+        let s = Space::enumerate(
+            "pruned",
+            vec![
+                ParamDef::new("a", &[1, 2, 3, 4]),
+                ParamDef::new("b", &[1, 2, 3, 4]),
+                ParamDef::new("c", &[0, 1]),
+            ],
+            |v| v[0] * v[1] <= 6,
+        );
+        assert!(s.len() < 32, "constraint must actually prune");
+        for radius in 1..=3 {
+            for from in s.configs.iter().step_by(3) {
+                assert_eq!(
+                    s.neighbours(from, radius),
+                    s.neighbours_scan(from, radius),
+                    "radius {radius}, from {from:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn neighbours_of_foreign_config_fall_back_to_scan() {
+        let s = toy();
+        // a configuration whose values are outside the space's domain
+        let foreign = Config(vec![99, 0]);
+        assert_eq!(
+            s.neighbours(&foreign, 1),
+            s.neighbours_scan(&foreign, 1)
+        );
+    }
+
+    #[test]
+    fn clones_share_the_built_index() {
+        let s = toy();
+        let _ = s.neighbours(&s.configs[0], 1); // force the build
+        let c = s.clone();
+        assert!(std::ptr::eq(s.neighbour_index(), c.neighbour_index()));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_neighbourhoods() {
+        let s = toy();
+        let back = Space::from_json(&s.to_json()).unwrap();
+        assert_eq!(
+            back.neighbours(&back.configs[2], 2),
+            s.neighbours(&s.configs[2], 2)
+        );
     }
 
     #[test]

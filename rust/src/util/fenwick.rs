@@ -1,0 +1,328 @@
+//! Fenwick-tree cumulative-weight sampler (§Perf).
+//!
+//! The profile searcher draws `n` weighted-random configurations per
+//! profiling round and zeroes the weight of each drawn index so plain
+//! steps never repeat. With a linear scan ([`Rng::choose_weighted`])
+//! every draw costs O(N) — two full passes over a GEMM-full-sized score
+//! vector per step. A Fenwick (binary indexed) tree over the weights
+//! supports an O(log N) draw *and* an O(log N) single-index update, so a
+//! round pays one O(N) build plus a handful of logarithmic operations.
+//!
+//! Weight hygiene matches the fixed linear sampler: non-finite or
+//! non-positive weights are treated as zero (never selectable), and the
+//! numeric-slop guard steps to the nearest selectable index if floating
+//! rounding lands the descent on a zeroed slot.
+
+use super::rng::Rng;
+
+/// Clamp invalid weights to zero — NaN/±inf and negatives are never
+/// selectable and must not poison cumulative sums.
+#[inline]
+fn sanitize(w: f64) -> f64 {
+    if w.is_finite() && w > 0.0 {
+        w
+    } else {
+        0.0
+    }
+}
+
+/// A sampling distribution over `0..len` with mutable weights.
+///
+/// Selection follows the same rule as the linear scan: a uniform draw
+/// `r ∈ [0, total)` selects the smallest index whose cumulative weight
+/// exceeds `r`.
+#[derive(Debug, Clone)]
+pub struct WeightedIndex {
+    n: usize,
+    /// Highest power of two ≤ `n` (0 when empty) — the descent start.
+    msb: usize,
+    /// 1-based Fenwick tree of partial sums.
+    tree: Vec<f64>,
+    /// Sanitized per-index weights (exact deltas for updates, and the
+    /// slop guard's ground truth).
+    w: Vec<f64>,
+}
+
+impl Default for WeightedIndex {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WeightedIndex {
+    /// An empty distribution — pair with [`rebuild`](Self::rebuild) to
+    /// reuse one sampler's buffers across many rounds.
+    pub fn new() -> Self {
+        WeightedIndex {
+            n: 0,
+            msb: 0,
+            tree: vec![0.0],
+            w: Vec::new(),
+        }
+    }
+
+    /// Build from a weight slice in O(N).
+    pub fn from_weights(weights: &[f64]) -> Self {
+        let mut s = Self::new();
+        s.rebuild(weights);
+        s
+    }
+
+    /// Refill from a weight slice in O(N), reusing the existing
+    /// allocations — the profile searcher rebuilds once per round over
+    /// a fixed-size space, so the hot loop never reallocates.
+    pub fn rebuild(&mut self, weights: &[f64]) {
+        let n = weights.len();
+        if n != self.n {
+            self.n = n;
+            self.msb = if n == 0 {
+                0
+            } else {
+                1usize << (usize::BITS - 1 - n.leading_zeros())
+            };
+            self.w.resize(n, 0.0);
+            self.tree.resize(n + 1, 0.0);
+        }
+        for (i, &x) in weights.iter().enumerate() {
+            let x = sanitize(x);
+            self.w[i] = x;
+            self.tree[i + 1] = x;
+        }
+        // propagate partial sums: parent(i) = i + lowbit(i)
+        for i in 1..=n {
+            let j = i + (i & i.wrapping_neg());
+            if j <= n {
+                self.tree[j] += self.tree[i];
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Current (sanitized) weight of index `i`.
+    pub fn get(&self, i: usize) -> f64 {
+        self.w[i]
+    }
+
+    /// Set the weight of index `i` in O(log N).
+    pub fn set(&mut self, i: usize, weight: f64) {
+        let x = sanitize(weight);
+        let delta = x - self.w[i];
+        if delta == 0.0 {
+            return;
+        }
+        self.w[i] = x;
+        let mut j = i + 1;
+        while j <= self.n {
+            self.tree[j] += delta;
+            j += j & j.wrapping_neg();
+        }
+    }
+
+    /// Sum of weights over `0..i` (exclusive), in O(log N).
+    pub fn prefix(&self, mut i: usize) -> f64 {
+        debug_assert!(i <= self.n);
+        let mut t = 0.0;
+        while i > 0 {
+            t += self.tree[i];
+            i &= i - 1;
+        }
+        t
+    }
+
+    /// Total selectable weight.
+    pub fn total(&self) -> f64 {
+        self.prefix(self.n)
+    }
+
+    /// Sample an index with probability proportional to its weight, in
+    /// O(log N). Returns `None` when no weight is selectable — same
+    /// contract as [`Rng::choose_weighted`].
+    pub fn sample(&self, rng: &mut Rng) -> Option<usize> {
+        let total = self.total();
+        if !(total > 0.0) || !total.is_finite() {
+            return None;
+        }
+        let mut rem = rng.f64() * total;
+        // descend: find the largest pos with prefix(pos) <= rem; the
+        // selected 0-based index is then pos itself.
+        let mut pos = 0usize;
+        let mut k = self.msb;
+        while k > 0 {
+            let next = pos + k;
+            if next <= self.n && self.tree[next] <= rem {
+                rem -= self.tree[next];
+                pos = next;
+            }
+            k >>= 1;
+        }
+        if pos >= self.n {
+            // rem rounded up to the full total — clamp into range
+            pos = self.n - 1;
+        }
+        if self.w[pos] == 0.0 {
+            // numeric slop: the exact-arithmetic invariant
+            // prefix(pos) <= r < prefix(pos+1) implies w[pos] > 0, but
+            // floating subtraction in the descent can land on a zeroed
+            // slot at a cumulative-weight boundary. Step to the nearest
+            // selectable neighbour (forward first, mirroring the linear
+            // scan's "first index whose cumsum exceeds r" rule).
+            if let Some(fwd) =
+                (pos + 1..self.n).find(|&i| self.w[i] > 0.0)
+            {
+                pos = fwd;
+            } else if let Some(back) =
+                (0..pos).rev().find(|&i| self.w[i] > 0.0)
+            {
+                pos = back;
+            } else {
+                return None;
+            }
+        }
+        Some(pos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_matches_prefix_sums() {
+        let w = [1.0, 0.0, 2.5, 4.0, 0.5];
+        let s = WeightedIndex::from_weights(&w);
+        assert_eq!(s.len(), 5);
+        let mut acc = 0.0;
+        for i in 0..=5 {
+            assert!((s.prefix(i) - acc).abs() < 1e-12, "prefix({i})");
+            if i < 5 {
+                acc += w[i];
+            }
+        }
+        assert!((s.total() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn never_samples_zero_weight() {
+        let mut rng = Rng::new(3);
+        let s = WeightedIndex::from_weights(&[0.0, 2.0, 0.0, 1.0, 0.0]);
+        for _ in 0..2_000 {
+            let i = s.sample(&mut rng).unwrap();
+            assert!(i == 1 || i == 3, "sampled zero-weight index {i}");
+        }
+    }
+
+    #[test]
+    fn all_zero_or_empty_is_none() {
+        let mut rng = Rng::new(1);
+        assert_eq!(
+            WeightedIndex::from_weights(&[0.0, 0.0]).sample(&mut rng),
+            None
+        );
+        assert_eq!(WeightedIndex::from_weights(&[]).sample(&mut rng), None);
+    }
+
+    #[test]
+    fn non_finite_and_negative_weights_are_ignored() {
+        let mut rng = Rng::new(7);
+        let s = WeightedIndex::from_weights(&[
+            f64::NAN,
+            1.0,
+            f64::INFINITY,
+            -3.0,
+            2.0,
+        ]);
+        assert!((s.total() - 3.0).abs() < 1e-12);
+        for _ in 0..2_000 {
+            let i = s.sample(&mut rng).unwrap();
+            assert!(i == 1 || i == 4, "sampled invalid-weight index {i}");
+        }
+        // a tree of only invalid weights is unselectable, not poisoned
+        let bad =
+            WeightedIndex::from_weights(&[f64::NAN, -1.0, f64::NEG_INFINITY]);
+        assert_eq!(bad.sample(&mut rng), None);
+        assert_eq!(bad.total(), 0.0);
+    }
+
+    #[test]
+    fn set_updates_distribution() {
+        let mut rng = Rng::new(11);
+        let mut s = WeightedIndex::from_weights(&[1.0, 1.0, 1.0]);
+        s.set(1, 0.0);
+        assert_eq!(s.get(1), 0.0);
+        assert!((s.total() - 2.0).abs() < 1e-12);
+        for _ in 0..1_000 {
+            assert_ne!(s.sample(&mut rng), Some(1));
+        }
+        // setting an invalid weight is the same as zeroing it
+        s.set(0, f64::NAN);
+        assert_eq!(s.get(0), 0.0);
+        for _ in 0..1_000 {
+            assert_eq!(s.sample(&mut rng), Some(2));
+        }
+        s.set(0, 5.0);
+        assert!((s.total() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_then_exhaust_returns_none() {
+        let mut rng = Rng::new(5);
+        let mut s = WeightedIndex::from_weights(&[0.5, 0.25]);
+        let a = s.sample(&mut rng).unwrap();
+        s.set(a, 0.0);
+        let b = s.sample(&mut rng).unwrap();
+        assert_ne!(a, b);
+        s.set(b, 0.0);
+        assert_eq!(s.sample(&mut rng), None);
+    }
+
+    #[test]
+    fn proportions_match_weights() {
+        let mut rng = Rng::new(9);
+        let s = WeightedIndex::from_weights(&[1.0, 3.0]);
+        let mut ones = 0usize;
+        let draws = 40_000;
+        for _ in 0..draws {
+            if s.sample(&mut rng).unwrap() == 1 {
+                ones += 1;
+            }
+        }
+        let frac = ones as f64 / draws as f64;
+        assert!((0.72..0.78).contains(&frac), "frac={frac}");
+    }
+
+    #[test]
+    fn rebuild_reuses_buffers_and_matches_fresh_build() {
+        let mut s = WeightedIndex::new();
+        assert_eq!(s.sample(&mut Rng::new(1)), None);
+        s.rebuild(&[1.0, 2.0, 3.0]);
+        let fresh = WeightedIndex::from_weights(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.tree, fresh.tree);
+        assert_eq!(s.w, fresh.w);
+        // stale partial sums must not leak across rebuilds
+        s.set(1, 0.0);
+        s.rebuild(&[4.0, 0.0]);
+        let fresh2 = WeightedIndex::from_weights(&[4.0, 0.0]);
+        assert_eq!(s.tree[1..], fresh2.tree[1..]);
+        assert_eq!(s.w, fresh2.w);
+        assert!((s.total() - 4.0).abs() < 1e-12);
+        // and growing again is fine too
+        s.rebuild(&[1.0; 9]);
+        assert!((s.total() - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_element_tree() {
+        let mut rng = Rng::new(2);
+        let s = WeightedIndex::from_weights(&[0.0001]);
+        for _ in 0..100 {
+            assert_eq!(s.sample(&mut rng), Some(0));
+        }
+    }
+}

@@ -4,6 +4,7 @@
 //! DESIGN.md §2), so JSON (de)serialization, the PRNG and statistics
 //! helpers are implemented here instead of pulling serde/rand.
 
+pub mod fenwick;
 pub mod json;
 pub mod pool;
 pub mod rng;

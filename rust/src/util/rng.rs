@@ -91,18 +91,24 @@ impl Rng {
 
     /// Sample an index with probability proportional to `weights`.
     ///
-    /// Returns `None` when all weights are zero (or the slice is empty) —
-    /// the caller decides the fallback (the paper's Algorithm 1 falls
-    /// back to uniform choice among unexplored configurations).
+    /// Non-finite and non-positive weights are never selectable: a NaN
+    /// or ±inf entry must neither poison the cumulative total nor absorb
+    /// the numeric-slop fallback (a poisoned `r` would otherwise end the
+    /// caller's search early). Returns `None` when no weight is
+    /// selectable (or the slice is empty) — the caller decides the
+    /// fallback (the paper's Algorithm 1 falls back to uniform choice
+    /// among unexplored configurations).
     pub fn choose_weighted(&mut self, weights: &[f64]) -> Option<usize> {
-        let total: f64 = weights.iter().copied().filter(|w| *w > 0.0).sum();
-        if !(total > 0.0) {
+        let selectable = |w: f64| w.is_finite() && w > 0.0;
+        let total: f64 =
+            weights.iter().copied().filter(|&w| selectable(w)).sum();
+        if !(total > 0.0) || !total.is_finite() {
             return None;
         }
         let mut r = self.f64() * total;
         let mut last = None;
         for (i, &w) in weights.iter().enumerate() {
-            if w <= 0.0 {
+            if !selectable(w) {
                 continue;
             }
             last = Some(i);
@@ -111,7 +117,7 @@ impl Rng {
             }
             r -= w;
         }
-        last // numeric slop: fall back to the final positive weight
+        last // numeric slop: fall back to the final selectable weight
     }
 
     /// Fisher–Yates shuffle.
@@ -198,6 +204,27 @@ mod tests {
         let mut r = Rng::new(11);
         assert_eq!(r.choose_weighted(&[0.0, 0.0]), None);
         assert_eq!(r.choose_weighted(&[]), None);
+    }
+
+    #[test]
+    fn weighted_ignores_non_finite_weights() {
+        // regression: a single NaN used to survive the `w <= 0.0` skip
+        // (NaN comparisons are false), poison the running remainder and
+        // both corrupt the selection and the slop fallback.
+        let mut r = Rng::new(17);
+        let w = [1.0, f64::NAN, 3.0, f64::INFINITY, f64::NEG_INFINITY];
+        let mut counts = [0usize; 5];
+        for _ in 0..40_000 {
+            let i = r.choose_weighted(&w).expect("finite mass must select");
+            assert!(i == 0 || i == 2, "selected invalid-weight index {i}");
+            counts[i] += 1;
+        }
+        // proportions follow the finite weights only (1 : 3)
+        let frac = counts[2] as f64 / 40_000.0;
+        assert!((0.72..0.78).contains(&frac), "frac={frac}");
+        // all-invalid slices are unselectable, not an early-exit trap
+        assert_eq!(r.choose_weighted(&[f64::NAN]), None);
+        assert_eq!(r.choose_weighted(&[f64::INFINITY, -1.0]), None);
     }
 
     #[test]

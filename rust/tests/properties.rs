@@ -5,14 +5,20 @@
 
 use pcat::benchmarks::{self, record_space, Benchmark, Input};
 use pcat::counters::{Counter, CounterVec, ALL_COUNTERS};
-use pcat::expert::{analyze, normalize_scores, react, score, DeltaPc};
+use pcat::expert::{
+    active_deltas, analyze, normalize_scores, react, score, score_active,
+    DeltaPc,
+};
 use pcat::gpusim::{simulate, GpuSpec, Workload};
-use pcat::model::{OracleModel, TpPcModel};
+use pcat::model::{
+    OracleModel, PredictionMatrix, TpPcModel, MODELED_COUNTERS,
+};
 use pcat::searcher::{
     BasinHopping, Budget, CostModel, ProfileSearcher, RandomSearcher,
     ReplayEnv, Searcher, SimulatedAnnealing,
 };
 use pcat::tuning::{Config, ParamDef, Space};
+use pcat::util::fenwick::WeightedIndex;
 use pcat::util::rng::Rng;
 
 /// Random counter vector with plausible scales.
@@ -272,6 +278,179 @@ fn prop_oracle_profile_search_is_deterministic_per_seed() {
                 .collect::<Vec<_>>()
         };
         assert_eq!(run(seed), run(seed));
+    }
+}
+
+/// Deterministic synthetic TP→PC model: pseudo-random modeled counters
+/// derived from the configuration itself, with a zero fraction so the
+/// PC_used predicate (both-zero skip, one-sided ±1 signal) is exercised.
+struct SynthModel;
+
+impl TpPcModel for SynthModel {
+    fn predict(&self, cfg: &Config) -> CounterVec {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &v in &cfg.0 {
+            h = (h ^ v as u64).wrapping_mul(0x0100_0000_01b3);
+        }
+        let mut rng = Rng::new(h);
+        let mut v = CounterVec::new();
+        for &c in MODELED_COUNTERS.iter() {
+            let zero = rng.f64() < 0.2;
+            let x = rng.f64() * 1e9;
+            v.set(c, if zero { 0.0 } else { x });
+        }
+        v
+    }
+
+    fn kind(&self) -> &'static str {
+        "synth"
+    }
+}
+
+#[test]
+fn prop_columnar_scorer_matches_scalar_scorers() {
+    // columnar score_all == score_one == score_active == score, to
+    // 1e-12, on random counter vectors and random ΔPC vectors
+    let space = Space::enumerate(
+        "synth",
+        vec![
+            ParamDef::new("a", &[1, 2, 3, 5]),
+            ParamDef::new("b", &[0, 1, 2]),
+            ParamDef::new("c", &[8, 16, 32, 64]),
+        ],
+        |_| true,
+    );
+    let n = space.len();
+    let matrix = PredictionMatrix::build(&space, &SynthModel);
+    assert_eq!(matrix.n_configs(), n);
+
+    let mut rng = Rng::new(2024);
+    let mut scores = vec![0.0f64; n];
+    for _ in 0..40 {
+        // random ΔPC over the modeled counters (some zero)
+        let mut delta = DeltaPc::default();
+        for &c in MODELED_COUNTERS.iter() {
+            if rng.f64() < 0.5 {
+                delta.0.set(c, rng.f64() * 2.0 - 1.0);
+            }
+        }
+        let profile_idx = rng.below(n);
+        let active = active_deltas(&delta);
+        let cols = matrix.active_columns(&delta);
+        assert_eq!(active.len(), cols.len());
+
+        matrix.score_all(profile_idx, &cols, &mut scores);
+        let pred_profile = matrix.predict_vec(profile_idx);
+        for k in 0..n {
+            let via_one = matrix.score_one(profile_idx, &cols, k);
+            let via_active =
+                score_active(&active, &pred_profile, &matrix.predict_vec(k));
+            let via_full =
+                score(&delta, &pred_profile, &matrix.predict_vec(k));
+            assert!(
+                (scores[k] - via_active).abs() <= 1e-12,
+                "score_all {} vs score_active {via_active} at {k}",
+                scores[k]
+            );
+            assert!(
+                (via_one - via_active).abs() <= 1e-12,
+                "score_one {via_one} vs score_active {via_active} at {k}"
+            );
+            assert!(
+                (via_full - via_active).abs() <= 1e-12,
+                "score {via_full} vs score_active {via_active} at {k}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_fenwick_sampler_matches_linear_scan_frequencies() {
+    // the O(log N) sampler and the O(N) linear scan draw from the same
+    // distribution: chi-square against the exact weights stays within
+    // bounds for both, and their empirical frequencies agree
+    let pattern = [0.0, 0.5, 1.0, 2.0, 4.0, 8.0];
+    let n = 60;
+    let weights: Vec<f64> =
+        (0..n).map(|i| pattern[i % pattern.len()]).collect();
+    let total: f64 = weights.iter().sum();
+
+    let draws = 80_000usize;
+    let mut counts_fen = vec![0usize; n];
+    let mut counts_lin = vec![0usize; n];
+    let fen = WeightedIndex::from_weights(&weights);
+    let mut rng_f = Rng::new(31337);
+    let mut rng_l = Rng::new(90210);
+    for _ in 0..draws {
+        counts_fen[fen.sample(&mut rng_f).unwrap()] += 1;
+        counts_lin[rng_l.choose_weighted(&weights).unwrap()] += 1;
+    }
+
+    let chi2 = |counts: &[usize]| {
+        let mut x = 0.0;
+        for (i, &w) in weights.iter().enumerate() {
+            if w == 0.0 {
+                assert_eq!(counts[i], 0, "zero weight {i} was drawn");
+                continue;
+            }
+            let expect = draws as f64 * w / total;
+            let diff = counts[i] as f64 - expect;
+            x += diff * diff / expect;
+        }
+        x
+    };
+    // 50 positive cells ⇒ df = 49: mean 49, sd ≈ 9.9. 110 is ≈ +6σ —
+    // far beyond any plausible sampling fluctuation of a correct
+    // sampler, far below the blow-up a biased one produces.
+    let (xf, xl) = (chi2(&counts_fen), chi2(&counts_lin));
+    assert!(xf < 110.0, "fenwick chi-square {xf}");
+    assert!(xl < 110.0, "linear chi-square {xl}");
+    for i in 0..n {
+        let ff = counts_fen[i] as f64 / draws as f64;
+        let fl = counts_lin[i] as f64 / draws as f64;
+        assert!(
+            (ff - fl).abs() < 0.02,
+            "index {i}: fenwick {ff} vs linear {fl}"
+        );
+    }
+}
+
+#[test]
+fn prop_indexed_neighbours_equal_brute_force_on_pruned_spaces() {
+    let mut rng = Rng::new(4242);
+    for case in 0..25 {
+        let dims = 2 + rng.below(4);
+        let params: Vec<ParamDef> = (0..dims)
+            .map(|d| {
+                let k = 2 + rng.below(4);
+                let vals: Vec<i64> =
+                    (0..k as i64).map(|i| (i + 1) * (d as i64 + 1)).collect();
+                ParamDef::new(&format!("p{d}"), &vals)
+            })
+            .collect();
+        let limit = 6 + rng.below(40) as i64;
+        let space = Space::enumerate(&format!("nb{case}"), params, |v| {
+            v.iter().sum::<i64>() <= limit
+        });
+        if space.is_empty() {
+            continue;
+        }
+        for radius in 1..=3 {
+            for _ in 0..6 {
+                let from = &space.configs[rng.below(space.len())];
+                assert_eq!(
+                    space.neighbours(from, radius),
+                    space.neighbours_scan(from, radius),
+                    "case {case}, radius {radius}, from {from:?}"
+                );
+            }
+        }
+        // radius beyond the dimensionality degrades to the scan path
+        let from = &space.configs[0];
+        assert_eq!(
+            space.neighbours(from, dims + 2),
+            space.neighbours_scan(from, dims + 2)
+        );
     }
 }
 

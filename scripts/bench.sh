@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Perf-trajectory runner: the hot-path benches plus a timed smoke
+# matrix, assembled into one machine-readable report.
+#
+#   scripts/bench.sh [OUT.json]     # default: BENCH_scoring.json
+#
+# The report captures the columnar-scoring-engine before/after numbers
+# (AoS + linear-scan baseline vs matrix + Fenwick engine — see the
+# README "Performance" section) so successive PRs can compare against a
+# recorded baseline instead of folklore.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+OUT=${1:-BENCH_scoring.json}
+RAW=rust/target/bench_scoring_raw.json
+
+(cd rust && cargo build --release)
+
+echo "== hotpaths bench (emitting $RAW) =="
+(cd rust && BENCH_JSON=target/bench_scoring_raw.json cargo bench --bench hotpaths)
+
+echo "== timed smoke matrix =="
+SMOKE_OUT=rust/target/smoke-bench.json
+
+# timing lives in python: `date +%s.%N` is GNU-only and the first
+# toolchain-equipped machine may well be a mac
+python3 - "$RAW" "$OUT" "$SMOKE_OUT" <<'EOF'
+import json, subprocess, sys, time
+
+raw_path, out_path, smoke_out = sys.argv[1:4]
+cmd = [
+    "rust/target/release/pcat", "matrix", "--smoke",
+    "--seed", "0", "--jobs", "8", "--out", smoke_out,
+]
+t0 = time.monotonic()
+subprocess.run(cmd, check=True)
+wall = time.monotonic() - t0
+
+with open(raw_path) as f:
+    doc = json.load(f)
+doc["smoke_matrix"] = {
+    "command": " ".join(cmd[1:]),
+    "wall_s": round(wall, 3),
+}
+with open(out_path, "w") as f:
+    json.dump(doc, f, indent=1)
+    f.write("\n")
+print(f"wrote {out_path}")
+EOF

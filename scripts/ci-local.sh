@@ -40,12 +40,13 @@ run_smoke() {
         cmp "$SMOKE_OUT/jobs8.json" "$GOLDEN"
         echo "smoke: report matches $GOLDEN"
     elif [ -n "${CI:-}" ]; then
-        # In CI, never self-bless (that would make the drift gate
-        # vacuous), but don't hard-fail the whole pipeline on the
-        # bootstrap state either — annotate loudly instead. The
-        # jobs1-vs-jobs8 cmp above remains a real gate.
-        echo "::warning::$GOLDEN is missing — run scripts/ci-local.sh" \
-             "bless locally and commit it to arm the drift gate"
+        # In CI the drift gate is armed unconditionally: a missing
+        # golden is a hard failure, never a self-bless (that would make
+        # the gate vacuous) and no longer a warning (that let the
+        # bootstrap state linger). Bless locally and commit the file.
+        echo "::error::$GOLDEN is missing — run scripts/ci-local.sh" \
+             "bless locally and commit it"
+        exit 1
     else
         mkdir -p "$(dirname "$GOLDEN")"
         cp "$SMOKE_OUT/jobs8.json" "$GOLDEN"
