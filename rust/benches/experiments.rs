@@ -10,7 +10,7 @@
 mod bench_util;
 
 use bench_util::{bench, section};
-use pcat::harness::{run_experiment, ExperimentOpts};
+use pcat::harness::{run_experiment, run_transfer_plan, ExperimentOpts, TransferPlan};
 
 fn main() {
     let quick = ExperimentOpts {
@@ -51,4 +51,16 @@ fn main() {
             assert!(!r.markdown.is_empty());
         });
     }
+
+    // the cross-hardware transfer matrix (smoke shape): exercises the
+    // source-matrix sharing and the per-cell statistics end-to-end;
+    // recordings are warm after the table runs above, so this tracks
+    // the transfer layer's own cost
+    section("transfer matrix (smoke shape)");
+    let workers = pcat::util::pool::default_jobs();
+    bench("transfer_smoke", 0, 2, || {
+        let report =
+            run_transfer_plan(&TransferPlan::smoke(1), workers).unwrap();
+        assert!(!report.results.is_empty());
+    });
 }

@@ -225,6 +225,14 @@ impl Benchmark for GemmFull {
     fn workload(&self, space: &Space, cfg: &Config, input: &Input) -> Workload {
         gemm_workload(space, cfg, input, true)
     }
+
+    /// §4.6: in the evaluation matrices the full space is only
+    /// searched (with a model trained on the reduced space); the
+    /// 205k-config recording cost is reserved for the dedicated fig8
+    /// driver and must not be scheduled by a plan runner.
+    fn exhaustively_recordable(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

@@ -79,6 +79,18 @@ pub trait Benchmark: Send + Sync {
     fn instruction_bound(&self) -> bool {
         false
     }
+
+    /// Should plan runners schedule this space for exhaustive
+    /// recording? GEMM-full (205k configurations) is search-only in
+    /// the paper's evaluation matrices (§4.6): recording it means
+    /// enumerating and simulating the whole space, a cost only the
+    /// dedicated fig8 driver pays — deliberately, once. Plan runners
+    /// reject such benchmarks up front with a typed error
+    /// ([`crate::harness::PlanError::NoRecording`]) instead of paying
+    /// it per matrix.
+    fn exhaustively_recordable(&self) -> bool {
+        true
+    }
 }
 
 /// All benchmarks, in the paper's Table 2 order.

@@ -286,6 +286,36 @@ pub enum CounterSet {
     VoltaPlus,
 }
 
+impl CounterSet {
+    /// Does this generation provide `c` with semantics *comparable
+    /// across the Volta generation boundary*?
+    ///
+    /// Almost every Table 1 counter survives the Volta renaming with a
+    /// documented conversion ratio ([`Counter::new_counter_scale`]).
+    /// The exception is `LOC_O`: pre-Volta `local_memory_overhead` is a
+    /// *percentage* of memory traffic (the Eq. 8 bottleneck divides it
+    /// by 100), while the closest Volta+ metric is a raw local-store
+    /// sector count with no fixed scale relation to it.
+    ///
+    /// `supports(c) == false` therefore means "this generation's `c`
+    /// does not line up with the other generation's `c`" — it does
+    /// *not* forbid same-generation use: a Volta+ model steering a
+    /// Volta+ tuner shares one self-consistent metric and scores it
+    /// freely. Only *cross*-generation transfer drops the counter from
+    /// scoring (see [`PredictionMatrix::restricted_to`] and the
+    /// transfer runner, which applies the restriction exactly when the
+    /// two generations differ).
+    ///
+    /// [`PredictionMatrix::restricted_to`]:
+    ///     crate::model::PredictionMatrix::restricted_to
+    pub fn supports(self, c: Counter) -> bool {
+        match self {
+            CounterSet::PreVolta => true,
+            CounterSet::VoltaPlus => c != Counter::LocO,
+        }
+    }
+}
+
 /// A dense vector of counter values, indexed by [`Counter`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct CounterVec(pub [f64; NUM_COUNTERS]);
@@ -392,6 +422,24 @@ mod tests {
                 "{c}"
             );
         }
+    }
+
+    #[test]
+    fn counter_set_support_is_a_strict_subset_at_volta() {
+        // VoltaPlus ⊂ PreVolta: everything Volta+ provides, pre-Volta
+        // provides too…
+        for c in ALL_COUNTERS {
+            if CounterSet::VoltaPlus.supports(c) {
+                assert!(CounterSet::PreVolta.supports(c), "{c}");
+            }
+        }
+        // …and exactly LOC_O is lost at the generation boundary.
+        let lost: Vec<Counter> = ALL_COUNTERS
+            .iter()
+            .copied()
+            .filter(|&c| !CounterSet::VoltaPlus.supports(c))
+            .collect();
+        assert_eq!(lost, vec![Counter::LocO]);
     }
 
     #[test]

@@ -1,13 +1,20 @@
-//! Time-domain convergence aggregation (§4.6): the searcher's best
-//! kernel runtime as a function of elapsed tuning time, averaged over
-//! repetitions, with the paper's plotting convention — curves start at
-//! the time when *all* repetitions have at least one finished kernel.
+//! Convergence statistics (§4.6 and the transfer-matrix evaluation):
+//! best-so-far curves in the step and time domains, steps-to-within-X%
+//! of the oracle best, and order-invariant aggregation over
+//! repetitions — with the paper's plotting convention for time-domain
+//! curves (start at the time when *all* repetitions have at least one
+//! finished kernel).
+//!
+//! Every aggregation here is a pure function of the *multiset* of input
+//! runs: values are sorted before any floating-point reduction, so
+//! permuting the input runs can never change a single output bit. The
+//! transfer report's byte-identity contract leans on that.
 
 use std::sync::Arc;
 
 use crate::searcher::{Budget, CostModel, ReplayEnv, Searcher};
 use crate::tuning::RecordedSpace;
-use crate::util::stats::{mean, stddev};
+use crate::util::stats::{mean, median, stddev};
 
 use super::par_map_seeds;
 
@@ -17,6 +24,117 @@ pub struct ConvergencePoint {
     pub t_s: f64,
     pub mean_ms: f64,
     pub std_ms: f64,
+}
+
+/// One aggregated point of a step-domain best-so-far curve.
+#[derive(Debug, Clone)]
+pub struct StepCurvePoint {
+    /// 1-based empirical-test count.
+    pub step: usize,
+    pub median_ms: f64,
+    pub mean_ms: f64,
+}
+
+/// Monotone non-increasing best-so-far transform of a runtime trace.
+pub fn best_so_far(runtimes: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(runtimes.len());
+    let mut best = f64::INFINITY;
+    for &r in runtimes {
+        best = best.min(r);
+        out.push(best);
+    }
+    out
+}
+
+/// 1-based number of empirical tests until a runtime within
+/// `(1 + frac)×` of `oracle_best_ms` is found; `None` if never.
+///
+/// `frac = 0.10` is the paper's well-performing threshold (§4.1);
+/// `frac = 0.0` asks for the oracle best itself, so on a trace whose
+/// minimum *is* the oracle best it returns the argmin step.
+pub fn steps_to_within(
+    runtimes: &[f64],
+    oracle_best_ms: f64,
+    frac: f64,
+) -> Option<usize> {
+    let thr = oracle_best_ms * (1.0 + frac);
+    runtimes.iter().position(|&r| r <= thr).map(|p| p + 1)
+}
+
+/// Aggregate per-run runtime traces into a per-step median/mean
+/// best-so-far curve.
+///
+/// Runs may have different lengths (searches stop early at their
+/// threshold): a finished run keeps contributing its final best to
+/// later steps, so every grid point averages over *all* runs and the
+/// curve stays monotone non-increasing. Output is invariant to the
+/// order of `runs` (values are sorted before reduction). Generic over
+/// `AsRef<[f64]>` so callers can pass owned traces (`Vec<f64>`) or
+/// borrowed slices without cloning.
+pub fn aggregate_step_curves<R: AsRef<[f64]>>(
+    runs: &[R],
+) -> Vec<StepCurvePoint> {
+    let max_len = runs.iter().map(|r| r.as_ref().len()).max().unwrap_or(0);
+    let curves: Vec<Vec<f64>> =
+        runs.iter().map(|r| best_so_far(r.as_ref())).collect();
+    let mut out = Vec::with_capacity(max_len);
+    for s in 0..max_len {
+        let mut at_s: Vec<f64> = curves
+            .iter()
+            .filter(|c| !c.is_empty())
+            .map(|c| c[s.min(c.len() - 1)])
+            .collect();
+        if at_s.is_empty() {
+            continue;
+        }
+        at_s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out.push(StepCurvePoint {
+            step: s + 1,
+            median_ms: median(&at_s),
+            mean_ms: mean(&at_s),
+        });
+    }
+    out
+}
+
+/// Aggregate (time, best-so-far) staircases on a regular `grid_points`
+/// grid over `[t_start, horizon_s]`, where `t_start` is the paper's
+/// plotting convention — the moment every run has one finished kernel.
+///
+/// Pure aggregation core of [`aggregate_convergence`]; output is
+/// invariant to the order of `staircases`.
+pub fn aggregate_staircases(
+    staircases: &[Vec<(f64, f64)>],
+    horizon_s: f64,
+    grid_points: usize,
+) -> Vec<ConvergencePoint> {
+    let t_start = staircases
+        .iter()
+        .filter_map(|st| st.first().map(|p| p.0))
+        .fold(0.0f64, f64::max);
+
+    let mut out = Vec::with_capacity(grid_points);
+    for gi in 0..grid_points {
+        let t = t_start
+            + (horizon_s - t_start)
+                * (gi as f64 / (grid_points.saturating_sub(1).max(1)) as f64);
+        let mut at_t: Vec<f64> = staircases
+            .iter()
+            .filter_map(|st| best_at(st, t))
+            .collect();
+        if at_t.is_empty() {
+            continue;
+        }
+        // sorted reduction: permuting the input runs must not change
+        // the floating-point sum order
+        at_t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out.push(ConvergencePoint {
+            t_s: t,
+            mean_ms: mean(&at_t),
+            std_ms: stddev(&at_t),
+        });
+    }
+    out
 }
 
 /// Run `make(seed)` searchers `reps` times for `horizon_s` of simulated
@@ -42,31 +160,7 @@ where
         let trace = s.run(&mut env, &Budget::seconds(horizon_s));
         trace.convergence()
     });
-
-    // the paper plots from the moment every run has one finished kernel
-    let t_start = staircases
-        .iter()
-        .filter_map(|st| st.first().map(|p| p.0))
-        .fold(0.0f64, f64::max);
-
-    let mut out = Vec::with_capacity(grid_points);
-    for gi in 0..grid_points {
-        let t = t_start
-            + (horizon_s - t_start) * (gi as f64 / (grid_points - 1) as f64);
-        let at_t: Vec<f64> = staircases
-            .iter()
-            .filter_map(|st| best_at(st, t))
-            .collect();
-        if at_t.is_empty() {
-            continue;
-        }
-        out.push(ConvergencePoint {
-            t_s: t,
-            mean_ms: mean(&at_t),
-            std_ms: stddev(&at_t),
-        });
-    }
-    out
+    aggregate_staircases(&staircases, horizon_s, grid_points)
 }
 
 /// Best runtime achieved by a staircase at or before time `t`.
@@ -131,6 +225,57 @@ mod tests {
                 w[1].mean_ms <= w[0].mean_ms + 1e-9,
                 "mean best-so-far must not increase"
             );
+        }
+    }
+
+    #[test]
+    fn best_so_far_is_monotone_prefix_min() {
+        assert_eq!(
+            best_so_far(&[5.0, 7.0, 3.0, 4.0]),
+            vec![5.0, 5.0, 3.0, 3.0]
+        );
+        assert!(best_so_far(&[]).is_empty());
+    }
+
+    #[test]
+    fn steps_to_within_thresholds() {
+        let r = [5.0, 3.0, 1.0, 2.0];
+        assert_eq!(steps_to_within(&r, 1.0, 0.0), Some(3));
+        assert_eq!(steps_to_within(&r, 1.0, 2.5), Some(2));
+        assert_eq!(steps_to_within(&r, 0.5, 0.1), None);
+        assert_eq!(steps_to_within(&[], 1.0, 0.0), None);
+    }
+
+    #[test]
+    fn step_curves_carry_finished_runs_forward() {
+        // run A stops after 2 tests (found its threshold), run B keeps
+        // going: A's final best keeps contributing at steps 3 and 4
+        let runs = vec![vec![4.0, 2.0], vec![8.0, 6.0, 5.0, 1.0]];
+        let pts = aggregate_step_curves(&runs);
+        assert_eq!(pts.len(), 4);
+        assert_eq!(pts[0].step, 1);
+        assert_eq!(pts[0].mean_ms, 6.0); // (4 + 8) / 2
+        assert_eq!(pts[2].mean_ms, 3.5); // (2 + 5) / 2
+        assert_eq!(pts[3].mean_ms, 1.5); // (2 + 1) / 2
+        for w in pts.windows(2) {
+            assert!(w[1].median_ms <= w[0].median_ms + 1e-12);
+            assert!(w[1].mean_ms <= w[0].mean_ms + 1e-12);
+        }
+        assert!(aggregate_step_curves::<Vec<f64>>(&[]).is_empty());
+    }
+
+    #[test]
+    fn aggregate_staircases_is_order_invariant() {
+        let a = vec![(1.0, 10.0), (3.0, 4.0)];
+        let b = vec![(2.0, 8.0), (4.0, 2.0)];
+        let c = vec![(1.5, 9.0)];
+        let fwd = aggregate_staircases(&[a.clone(), b.clone(), c.clone()], 6.0, 9);
+        let rev = aggregate_staircases(&[c, b, a], 6.0, 9);
+        assert_eq!(fwd.len(), rev.len());
+        for (x, y) in fwd.iter().zip(&rev) {
+            assert_eq!(x.t_s, y.t_s);
+            assert_eq!(x.mean_ms, y.mean_ms);
+            assert_eq!(x.std_ms, y.std_ms);
         }
     }
 

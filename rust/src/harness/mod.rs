@@ -14,19 +14,35 @@
 //! | fig3–8 | Figures 3–8 | time-domain convergence |
 //! | fig9–13| Figures 9–13 | vs Basin Hopping (time + iterations) |
 //! | ablation_* | — | design-choice ablations called out in DESIGN.md |
+//!
+//! Beyond the per-artifact drivers, two job-matrix runners execute
+//! whole evaluation grids on the shared worker pool with byte-identical
+//! `--jobs`-invariant reports: [`ExperimentPlan`] (benchmark × GPU ×
+//! searcher × seed, same-cell) and [`TransferPlan`] (benchmark ×
+//! source GPU × target GPU × searcher × seed — the paper's
+//! train-on-A / tune-on-B portability experiment).
 
 mod convergence;
 mod figures;
 mod plan;
 mod steps;
 mod tables;
+mod transfer;
 
-pub use convergence::{aggregate_convergence, ConvergencePoint};
+pub use convergence::{
+    aggregate_convergence, aggregate_staircases, aggregate_step_curves,
+    best_so_far, steps_to_within, ConvergencePoint, StepCurvePoint,
+};
 pub use plan::{
-    run_plan, AggregateRow, ExperimentPlan, JobResult, JobSpec, PlanReport,
-    PLAN_SEARCHERS,
+    run_plan, AggregateRow, ExperimentPlan, JobResult, JobSpec, PlanError,
+    PlanReport, PLAN_SEARCHERS,
 };
 pub use steps::{avg_steps_to_well_performing, par_map_seeds};
+pub use tables::transfer_matrix;
+pub use transfer::{
+    run_transfer_plan, TransferAggregate, TransferJobResult, TransferJobSpec,
+    TransferPlan, TransferReport,
+};
 
 use std::path::Path;
 

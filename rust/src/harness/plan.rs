@@ -18,7 +18,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::benchmarks::{self, cached_space};
 use crate::coordinator::{SearcherChoice, Tuner};
@@ -34,6 +34,106 @@ use crate::util::stats::mean;
 /// Searcher names the plan runner accepts.
 pub const PLAN_SEARCHERS: [&str; 5] =
     ["random", "profile", "basin_hopping", "annealing", "starchart"];
+
+/// Typed validation error shared by every plan flavour
+/// ([`ExperimentPlan`], [`crate::harness::TransferPlan`]): callers can
+/// match on the failure class instead of parsing message strings, and
+/// the `NoRecording` variant stops a plan from silently scheduling a
+/// benchmark the replay harness cannot exhaustively record (GEMM-full
+/// would enumerate-and-simulate 205k configurations before the first
+/// job ran).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanError {
+    /// A plan axis (benchmarks/GPUs/searchers/seeds) is empty.
+    EmptyAxis(&'static str),
+    UnknownBenchmark(String),
+    UnknownGpu(String),
+    UnknownSearcher(String),
+    /// Known benchmark, but plan runners must not record its space
+    /// ([`crate::benchmarks::Benchmark::exhaustively_recordable`]):
+    /// the exhaustive enumerate-and-simulate cost is reserved for
+    /// dedicated drivers (fig8), not paid silently inside a matrix.
+    NoRecording(String),
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::EmptyAxis(axis) => {
+                write!(f, "empty plan axis {axis:?}")
+            }
+            PlanError::UnknownBenchmark(b) => {
+                write!(f, "unknown benchmark {b:?} in plan")
+            }
+            PlanError::UnknownGpu(g) => write!(f, "unknown GPU {g:?} in plan"),
+            PlanError::UnknownSearcher(s) => write!(
+                f,
+                "unknown searcher {s:?} in plan; known: {}",
+                PLAN_SEARCHERS.join(", ")
+            ),
+            PlanError::NoRecording(b) => write!(
+                f,
+                "benchmark {b:?} is search-only in plan runners: its \
+                 space is too costly to be exhaustively recorded inside \
+                 a job matrix (§4.6), so it cannot be scheduled into a \
+                 replay plan"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// Shared axis validation — benchmarks must exist *and* be recordable.
+pub(crate) fn validate_benchmarks(
+    axis: &'static str,
+    names: &[String],
+) -> Result<(), PlanError> {
+    if names.is_empty() {
+        return Err(PlanError::EmptyAxis(axis));
+    }
+    for b in names {
+        let Some(bench) = benchmarks::by_name(b) else {
+            return Err(PlanError::UnknownBenchmark(b.clone()));
+        };
+        if !bench.exhaustively_recordable() {
+            return Err(PlanError::NoRecording(b.clone()));
+        }
+    }
+    Ok(())
+}
+
+/// Shared axis validation: every GPU name must resolve to a spec.
+pub(crate) fn validate_gpus(
+    axis: &'static str,
+    names: &[String],
+) -> Result<(), PlanError> {
+    if names.is_empty() {
+        return Err(PlanError::EmptyAxis(axis));
+    }
+    for g in names {
+        if GpuSpec::by_name(g).is_none() {
+            return Err(PlanError::UnknownGpu(g.clone()));
+        }
+    }
+    Ok(())
+}
+
+/// Shared axis validation: searchers must be in [`PLAN_SEARCHERS`].
+pub(crate) fn validate_searchers(
+    axis: &'static str,
+    names: &[String],
+) -> Result<(), PlanError> {
+    if names.is_empty() {
+        return Err(PlanError::EmptyAxis(axis));
+    }
+    for s in names {
+        if !PLAN_SEARCHERS.contains(&s.as_str()) {
+            return Err(PlanError::UnknownSearcher(s.clone()));
+        }
+    }
+    Ok(())
+}
 
 /// A benchmark × GPU × searcher × seed job matrix.
 #[derive(Debug, Clone)]
@@ -107,29 +207,15 @@ impl ExperimentPlan {
     }
 
     /// Resolve every name up front so job closures cannot fail later.
-    pub fn validate(&self) -> Result<()> {
-        if self.benchmarks.is_empty()
-            || self.gpus.is_empty()
-            || self.searchers.is_empty()
-            || self.seeds == 0
-        {
-            bail!("empty plan axis (benchmarks/gpus/searchers/seeds)");
-        }
-        for b in &self.benchmarks {
-            benchmarks::by_name(b)
-                .with_context(|| format!("unknown benchmark {b:?} in plan"))?;
-        }
-        for g in &self.gpus {
-            GpuSpec::by_name(g)
-                .with_context(|| format!("unknown GPU {g:?} in plan"))?;
-        }
-        for s in &self.searchers {
-            if !PLAN_SEARCHERS.contains(&s.as_str()) {
-                bail!(
-                    "unknown searcher {s:?} in plan; known: {}",
-                    PLAN_SEARCHERS.join(", ")
-                );
-            }
+    /// The checks themselves are the hoisted helpers shared with
+    /// [`crate::harness::TransferPlan`], so no plan flavour can skip
+    /// the recordability gate.
+    pub fn validate(&self) -> Result<(), PlanError> {
+        validate_benchmarks("benchmarks", &self.benchmarks)?;
+        validate_gpus("gpus", &self.gpus)?;
+        validate_searchers("searchers", &self.searchers)?;
+        if self.seeds == 0 {
+            return Err(PlanError::EmptyAxis("seeds"));
         }
         Ok(())
     }
@@ -200,21 +286,44 @@ struct CellCtx {
     inst_reaction: f64,
 }
 
-/// Run one job through the [`Tuner`] facade (one shared searcher
-/// dispatch for coordinator, CLI and harness).
-fn run_job(spec: &JobSpec, plan: &ExperimentPlan, ctx: &CellCtx) -> JobResult {
-    let thr = ctx.rec.best_time() * 1.1;
-    let choice = match spec.searcher.as_str() {
+/// Does this searcher consume the cell's model matrix — i.e. can its
+/// results differ across the *source* axis of a transfer plan? Kept
+/// next to [`searcher_choice`] so the transfer fan-out's source-axis
+/// deduplication is mechanically tied to the dispatch: when a new arm
+/// below starts reading the matrix (or `inst_reaction`), this
+/// predicate is the one other place that must change.
+pub(crate) fn reads_model(name: &str) -> bool {
+    name == "profile"
+}
+
+/// The one name → [`SearcherChoice`] dispatch shared by every plan
+/// runner (same-cell and transfer), kept next to [`PLAN_SEARCHERS`] so
+/// the two cannot drift: a name that passes validation always has an
+/// arm here. Profile runs over the cell's shared prediction matrix.
+pub(crate) fn searcher_choice(
+    name: &str,
+    matrix: &Arc<PredictionMatrix>,
+    inst_reaction: f64,
+) -> SearcherChoice<'static> {
+    match name {
         "random" => SearcherChoice::Random,
         "profile" => SearcherChoice::ProfileShared {
-            matrix: Arc::clone(&ctx.matrix),
-            inst_reaction: ctx.inst_reaction,
+            matrix: Arc::clone(matrix),
+            inst_reaction,
         },
         "basin_hopping" => SearcherChoice::BasinHopping,
         "annealing" => SearcherChoice::Annealing,
         "starchart" => SearcherChoice::Starchart,
         other => unreachable!("plan validated, got searcher {other:?}"),
-    };
+    }
+}
+
+/// Run one job through the [`Tuner`] facade (one shared searcher
+/// dispatch for coordinator, CLI and harness).
+fn run_job(spec: &JobSpec, plan: &ExperimentPlan, ctx: &CellCtx) -> JobResult {
+    let thr = ctx.rec.best_time() * 1.1;
+    let choice =
+        searcher_choice(&spec.searcher, &ctx.matrix, ctx.inst_reaction);
     let result = Tuner::replay(
         Arc::clone(&ctx.rec),
         ctx.gpu.clone(),
@@ -489,17 +598,42 @@ mod tests {
     }
 
     #[test]
-    fn validate_rejects_unknowns() {
+    fn validate_rejects_unknowns_with_typed_errors() {
         let mut plan = tiny();
         plan.searchers = vec!["quantum".into()];
-        assert!(plan.validate().is_err());
+        assert_eq!(
+            plan.validate(),
+            Err(PlanError::UnknownSearcher("quantum".into()))
+        );
         let mut plan = tiny();
         plan.benchmarks = vec!["nope".into()];
-        assert!(plan.validate().is_err());
+        assert_eq!(
+            plan.validate(),
+            Err(PlanError::UnknownBenchmark("nope".into()))
+        );
+        let mut plan = tiny();
+        plan.gpus = vec!["titan".into()];
+        assert_eq!(plan.validate(), Err(PlanError::UnknownGpu("titan".into())));
         let mut plan = tiny();
         plan.seeds = 0;
-        assert!(plan.validate().is_err());
+        assert_eq!(plan.validate(), Err(PlanError::EmptyAxis("seeds")));
         assert!(tiny().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_unrecordable_benchmarks() {
+        // gemm-full exists but is search-only (§4.6): scheduling it
+        // into a replay plan must fail up front, not hang recording a
+        // 205k-config space inside the fan-out
+        let mut plan = tiny();
+        plan.benchmarks = vec!["gemm-full".into()];
+        assert_eq!(
+            plan.validate(),
+            Err(PlanError::NoRecording("gemm-full".into()))
+        );
+        // and the error formats with an explanation, not just a name
+        let msg = plan.validate().unwrap_err().to_string();
+        assert!(msg.contains("gemm-full") && msg.contains("recorded"));
     }
 
     #[test]

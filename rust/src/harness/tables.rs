@@ -19,6 +19,7 @@ use crate::util::stats::mean;
 use crate::util::table::{markdown, speedup};
 
 use super::steps::{avg_steps_to_well_performing, par_map_seeds};
+use super::transfer::TransferReport;
 use super::{ExperimentOpts, Report};
 
 /// The five benchmarks of the step-count experiments, in Table 4 order.
@@ -615,9 +616,115 @@ pub fn ablation_model_kind(opts: &ExperimentOpts) -> Report {
     }
 }
 
+// ---------------------------------------------------------------------
+// Transfer matrix — the paper-style train-on-A / tune-on-B table
+// ---------------------------------------------------------------------
+
+/// Render a [`TransferReport`] as the paper's Table 6 shape: one
+/// source × target grid per benchmark, rows = GPU tuned on, columns =
+/// GPU the model was sampled on.
+///
+/// When the plan includes the `random` baseline, each cell shows the
+/// improvement factor (median random steps ÷ median profile steps, on
+/// the same target); otherwise the raw median profile steps. Cells
+/// whose cross-generation restriction dropped counters are marked `†`
+/// with a legend below the grid.
+pub fn transfer_matrix(report: &TransferReport) -> String {
+    // index the cells once: the full plan has 160 aggregate rows and
+    // 80 grid cells, so per-cell linear scans would be O(cells × rows)
+    let index: std::collections::BTreeMap<_, _> = report
+        .aggregate_rows()
+        .iter()
+        .map(|a| {
+            (
+                (
+                    a.benchmark.as_str(),
+                    a.source_gpu.as_str(),
+                    a.target_gpu.as_str(),
+                    a.searcher.as_str(),
+                ),
+                a,
+            )
+        })
+        .collect();
+    let cell = |b: &str, s: &str, t: &str, searcher: &str| {
+        index.get(&(b, s, t, searcher)).copied()
+    };
+    let has_random =
+        report.plan.searchers.iter().any(|s| s == "random");
+    let has_profile =
+        report.plan.searchers.iter().any(|s| s == "profile");
+    // grid values come from the profile searcher when present; any
+    // other plan still renders its first searcher's medians instead of
+    // an all-dash grid
+    let value_searcher = if has_profile {
+        "profile"
+    } else if has_random {
+        "random"
+    } else {
+        report
+            .plan
+            .searchers
+            .first()
+            .map(String::as_str)
+            .unwrap_or("profile")
+    };
+
+    let mut md = String::new();
+    for b in &report.plan.benchmarks {
+        let mut rows = Vec::new();
+        let mut any_dropped = false;
+        for t in &report.plan.target_gpus {
+            let mut row = vec![t.clone()];
+            for s in &report.plan.source_gpus {
+                let Some(a) = cell(b, s, t, value_searcher) else {
+                    row.push("-".into());
+                    continue;
+                };
+                let mark = if a.dropped_counters.is_empty() {
+                    ""
+                } else {
+                    any_dropped = true;
+                    "†"
+                };
+                if has_random && value_searcher == "profile" {
+                    let rand = cell(b, s, t, "random")
+                        .map(|r| r.median_tests_to_wp)
+                        .unwrap_or(0.0);
+                    let imp = rand / a.median_tests_to_wp.max(1.0);
+                    row.push(format!("{}{mark}", speedup(imp)));
+                } else {
+                    row.push(format!(
+                        "{:.1}{mark}",
+                        a.median_tests_to_wp
+                    ));
+                }
+            }
+            rows.push(row);
+        }
+        let header: Vec<String> =
+            std::iter::once("tuned on ↓ \\ model from →".to_string())
+                .chain(report.plan.source_gpus.iter().cloned())
+                .collect();
+        let header_refs: Vec<&str> =
+            header.iter().map(|s| s.as_str()).collect();
+        md.push_str(&format!("\n## {b}\n\n"));
+        md.push_str(&markdown(&header_refs, &rows));
+        if any_dropped {
+            md.push_str(
+                "\n† cross-generation pair: counters unsupported by \
+                 either side were dropped from scoring (see report \
+                 `dropped_counters`).\n",
+            );
+        }
+    }
+    md
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::harness::{run_transfer_plan, TransferPlan};
 
     fn tiny() -> ExperimentOpts {
         ExperimentOpts {
@@ -649,5 +756,27 @@ mod tests {
     fn table7_square_matrix() {
         let r = table7(&tiny());
         assert_eq!(r.csvs[0].1.lines().count(), 17);
+    }
+
+    #[test]
+    fn transfer_matrix_renders_grid_and_mismatch_legend() {
+        let plan = TransferPlan {
+            benchmarks: vec!["coulomb".into()],
+            source_gpus: vec!["gtx1070".into(), "rtx2080".into()],
+            target_gpus: vec!["gtx1070".into()],
+            searchers: vec!["random".into(), "profile".into()],
+            seeds: 2,
+            base_seed: 3,
+            max_tests: 40,
+            within_frac: 0.10,
+            include_curves: false,
+        };
+        let report = run_transfer_plan(&plan, 4).unwrap();
+        let md = transfer_matrix(&report);
+        assert!(md.contains("## coulomb"));
+        assert!(md.contains("gtx1070"));
+        assert!(md.contains("×"), "improvement factors rendered");
+        // the rtx2080→gtx1070 column crosses the generation boundary
+        assert!(md.contains('†') && md.contains("dropped"));
     }
 }

@@ -12,6 +12,9 @@
 //! pcat matrix  [--smoke] [--jobs N] [--seed S] [--seeds K] [--budget B] \
 //!              [--benchmarks a,b] [--gpus x,y] [--searchers p,q] \
 //!              [--traces] [--out report.json]
+//! pcat transfer [--smoke] [--jobs N] [--seed S] [--seeds K] [--budget B] \
+//!              [--benchmarks a,b] [--sources x,y] [--targets x,y] \
+//!              [--searchers p,q] [--curves] [--out TRANSFER_REPORT.json]
 //! ```
 //!
 //! `matrix` runs an [`ExperimentPlan`] (benchmark × GPU × searcher ×
@@ -20,6 +23,13 @@
 //! against `rust/testdata/smoke_golden.json`. `--jobs N` bounds worker
 //! threads everywhere (serial and parallel runs produce identical
 //! reports).
+//!
+//! `transfer` runs a [`TransferPlan`] — the paper's train-on-A /
+//! tune-on-B cross-hardware experiment: the profile searcher's model
+//! matrix is built from each *source* GPU's recording while the search
+//! replays each *target* GPU — and writes `TRANSFER_REPORT.json` under
+//! the same `--jobs`-invariant byte-identity contract (`--smoke` is
+//! gated against `rust/testdata/transfer_golden.json`).
 //!
 //! (clap is unavailable in the offline build; flags are parsed by hand.)
 
@@ -33,7 +43,8 @@ use pcat::benchmarks::{self, cached_space, Benchmark};
 use pcat::coordinator::{SearcherChoice, Tuner};
 use pcat::gpusim::GpuSpec;
 use pcat::harness::{
-    run_experiment, run_plan, ExperimentOpts, ExperimentPlan, ALL_EXPERIMENTS,
+    run_experiment, run_plan, run_transfer_plan, transfer_matrix,
+    ExperimentOpts, ExperimentPlan, TransferPlan, ALL_EXPERIMENTS,
 };
 use pcat::model::{
     dataset_from_recorded, DecisionTreeModel, OracleModel, PrecomputedModel,
@@ -96,6 +107,55 @@ impl Args {
     }
 }
 
+/// Parse a CSV axis flag (`--key a,b,c`), falling back to the plan's
+/// default axis. Shared by `matrix` and `transfer` so the parsing
+/// conventions cannot drift between the two subcommands.
+fn axis_arg(args: &Args, key: &str, plan_axis: &[String]) -> Vec<String> {
+    match args.get(key) {
+        None => plan_axis.to_vec(),
+        Some(csv) => csv
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+    }
+}
+
+/// Canonicalize user-supplied GPU names to the plan spelling
+/// (lower-case spec name): `GpuSpec::by_name` forgives case, dashes
+/// and spaces, but plan names feed RNG stream tags and report keys
+/// verbatim — `--gpus GTX-1070` must produce the same streams (and the
+/// same same-GPU reproduction guarantees) as `--gpus gtx1070`. Unknown
+/// names pass through untouched so validation still reports them.
+fn canon_gpus(names: Vec<String>) -> Vec<String> {
+    names
+        .into_iter()
+        .map(|n| match GpuSpec::by_name(&n) {
+            Some(g) => g.name.to_ascii_lowercase(),
+            None => n,
+        })
+        .collect()
+}
+
+/// Same for benchmark names (`by_name` forgives case).
+fn canon_benchmarks(names: Vec<String>) -> Vec<String> {
+    names
+        .into_iter()
+        .map(|n| match benchmarks::by_name(&n) {
+            Some(b) => b.name().to_string(),
+            None => n,
+        })
+        .collect()
+}
+
+/// Resolve `--jobs` (0 = all available cores) for the plan runners.
+fn jobs_arg(args: &Args) -> Result<usize> {
+    Ok(match args.num("jobs", 0usize)? {
+        0 => pool::default_jobs(),
+        n => n,
+    })
+}
+
 fn bench_arg(args: &Args) -> Result<Box<dyn Benchmark>> {
     let name = args.need("benchmark")?;
     benchmarks::by_name(name)
@@ -132,6 +192,7 @@ fn run() -> Result<()> {
         Some("tune-real") => cmd_tune_real(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("matrix") => cmd_matrix(&args),
+        Some("transfer") => cmd_transfer(&args),
         Some("diag") => cmd_diag(&args),
         _ => {
             eprintln!("{}", HELP);
@@ -147,7 +208,10 @@ train a TP→PC decision-tree model from a recording\n  tune        search a \
 tuning space (replayed/simulated)\n  tune-real   search over really-executing \
 PJRT artifacts\n  experiment  regenerate a paper table/figure (or `all`)\n  \
 matrix      run a benchmark × GPU × searcher × seed job matrix in \
-parallel\n              (--smoke = the tiny deterministic CI matrix)\n\nglobal \
+parallel\n              (--smoke = the tiny deterministic CI matrix)\n  \
+transfer    train-on-A / tune-on-B cross-hardware matrix; writes a \
+paper-style\n              table + TRANSFER_REPORT.json (--smoke = the tiny \
+CI matrix)\n\nglobal \
 flags: --jobs N caps worker threads (results are identical at any N).\nOther \
 flags are shown in main.rs docs and README.";
 
@@ -353,30 +417,21 @@ fn cmd_matrix(args: &Args) -> Result<()> {
     let plan = if args.get("smoke").is_some() {
         ExperimentPlan::smoke(seed)
     } else {
-        let list = |key: &str, plan_axis: &[String]| -> Vec<String> {
-            match args.get(key) {
-                None => plan_axis.to_vec(),
-                Some(csv) => csv
-                    .split(',')
-                    .map(|s| s.trim().to_string())
-                    .filter(|s| !s.is_empty())
-                    .collect(),
-            }
-        };
         let base = ExperimentPlan::full(args.num("seeds", 100usize)?, seed);
         ExperimentPlan {
-            benchmarks: list("benchmarks", &base.benchmarks),
-            gpus: list("gpus", &base.gpus),
-            searchers: list("searchers", &base.searchers),
+            benchmarks: canon_benchmarks(axis_arg(
+                args,
+                "benchmarks",
+                &base.benchmarks,
+            )),
+            gpus: canon_gpus(axis_arg(args, "gpus", &base.gpus)),
+            searchers: axis_arg(args, "searchers", &base.searchers),
             max_tests: args.num("budget", base.max_tests)?,
             include_traces: args.get("traces").is_some(),
             ..base
         }
     };
-    let jobs = match args.num("jobs", 0usize)? {
-        0 => pool::default_jobs(),
-        n => n,
-    };
+    let jobs = jobs_arg(args)?;
     let n_jobs = plan.jobs().len();
     let out = PathBuf::from(args.get("out").unwrap_or("results/matrix.json"));
 
@@ -392,6 +447,51 @@ fn cmd_matrix(args: &Args) -> Result<()> {
     for line in report.summary_lines() {
         println!("  {line}");
     }
+    Ok(())
+}
+
+/// Run a [`TransferPlan`] (train-on-A / tune-on-B matrix) in parallel,
+/// write the deterministic `TRANSFER_REPORT.json` and print the
+/// paper-style source × target table.
+fn cmd_transfer(args: &Args) -> Result<()> {
+    let seed = args.num("seed", 0u64)?;
+    let plan = if args.get("smoke").is_some() {
+        TransferPlan::smoke(seed)
+    } else {
+        let base = TransferPlan::full(args.num("seeds", 100usize)?, seed);
+        TransferPlan {
+            benchmarks: canon_benchmarks(axis_arg(
+                args,
+                "benchmarks",
+                &base.benchmarks,
+            )),
+            source_gpus: canon_gpus(axis_arg(args, "sources", &base.source_gpus)),
+            target_gpus: canon_gpus(axis_arg(args, "targets", &base.target_gpus)),
+            searchers: axis_arg(args, "searchers", &base.searchers),
+            max_tests: args.num("budget", base.max_tests)?,
+            include_curves: args.get("curves").is_some(),
+            ..base
+        }
+    };
+    let jobs = jobs_arg(args)?;
+    let n_jobs = plan.jobs().len();
+    let out = PathBuf::from(
+        args.get("out").unwrap_or("results/TRANSFER_REPORT.json"),
+    );
+
+    let t0 = std::time::Instant::now();
+    let report = run_transfer_plan(&plan, jobs)?;
+    report.write_to(&out)?;
+
+    println!(
+        "ran {n_jobs} transfer jobs on {jobs} worker(s) in {:.1}s -> {}",
+        t0.elapsed().as_secs_f64(),
+        out.display()
+    );
+    for line in report.summary_lines() {
+        println!("  {line}");
+    }
+    println!("{}", transfer_matrix(&report));
     Ok(())
 }
 

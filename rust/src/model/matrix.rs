@@ -23,7 +23,7 @@
 //! [`OracleModel`]: super::OracleModel
 //! [`PrecomputedModel`]: super::PrecomputedModel
 
-use crate::counters::{Counter, CounterVec};
+use crate::counters::{Counter, CounterSet, CounterVec};
 use crate::expert::DeltaPc;
 use crate::tuning::{RecordedSpace, Space};
 
@@ -35,6 +35,13 @@ use super::{TpPcModel, MODELED_COUNTERS};
 pub struct PredictionMatrix {
     kind: &'static str,
     n_configs: usize,
+    /// Column availability: `available[j]` is false when the
+    /// `MODELED_COUNTERS[j]` column must not participate in scoring —
+    /// the cross-generation transfer fallback (see [`restricted_to`]).
+    /// All-true for every same-generation matrix.
+    ///
+    /// [`restricted_to`]: PredictionMatrix::restricted_to
+    available: [bool; MODELED_COUNTERS.len()],
     /// Counter-major: `data[j * n_configs + k]` is the prediction of
     /// `MODELED_COUNTERS[j]` for configuration `k`.
     data: Vec<f64>,
@@ -54,6 +61,7 @@ impl PredictionMatrix {
         PredictionMatrix {
             kind: model.kind(),
             n_configs: n,
+            available: [true; MODELED_COUNTERS.len()],
             data,
         }
     }
@@ -72,8 +80,56 @@ impl PredictionMatrix {
         PredictionMatrix {
             kind: "oracle",
             n_configs: n,
+            available: [true; MODELED_COUNTERS.len()],
             data,
         }
+    }
+
+    /// Cross-generation transfer fallback: keep only the columns whose
+    /// counter semantics survive the source → target generation change
+    /// (`source.supports(c) && target.supports(c)`), so scoring runs on
+    /// the comparable intersection and [`active_columns`] silently
+    /// drops ΔPC components on the rest (documented, tested; never a
+    /// panic).
+    ///
+    /// This method masks mechanically by [`CounterSet::supports`] —
+    /// note that calling it with two *equal* Volta+ sets still drops
+    /// `LOC_O`, because `supports` answers cross-generation
+    /// comparability. The transfer runner therefore applies it **only
+    /// when the two generations differ**: a same-generation pair
+    /// shares one self-consistent metric set and scores it in full,
+    /// which is also what keeps same-GPU transfer cells byte-equal to
+    /// the plain [`ExperimentPlan`] path.
+    ///
+    /// [`active_columns`]: PredictionMatrix::active_columns
+    /// [`ExperimentPlan`]: crate::harness::ExperimentPlan
+    pub fn restricted_to(
+        mut self,
+        source: CounterSet,
+        target: CounterSet,
+    ) -> Self {
+        for (j, &c) in MODELED_COUNTERS.iter().enumerate() {
+            self.available[j] = source.supports(c) && target.supports(c);
+        }
+        self
+    }
+
+    /// Is this modeled counter's column usable for scoring?
+    pub fn is_available(&self, c: Counter) -> bool {
+        Self::column_of(c).map(|j| self.available[j]).unwrap_or(false)
+    }
+
+    /// Modeled counters excluded by a [`restricted_to`] mask (empty for
+    /// same-generation matrices) — surfaced in transfer reports.
+    ///
+    /// [`restricted_to`]: PredictionMatrix::restricted_to
+    pub fn dropped_counters(&self) -> Vec<Counter> {
+        MODELED_COUNTERS
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| !self.available[*j])
+            .map(|(_, &c)| c)
+            .collect()
     }
 
     pub fn n_configs(&self) -> usize {
@@ -111,17 +167,23 @@ impl PredictionMatrix {
     ///
     /// Every counter the expert system reacts on (§3.5.2) is modeled, so
     /// the projection is total; a delta on an unmodeled counter would be
-    /// a reaction-table bug and panics loudly.
+    /// a reaction-table bug and panics loudly. A delta on a modeled
+    /// counter whose column a [`restricted_to`] mask excluded is the
+    /// *expected* cross-generation case and is dropped silently — the
+    /// round scores on the remaining reaction components, the
+    /// documented transfer fallback.
+    ///
+    /// [`restricted_to`]: PredictionMatrix::restricted_to
     pub fn active_columns(&self, delta: &DeltaPc) -> Vec<(usize, f64)> {
         delta
             .0
             .iter()
             .filter(|(_, d)| *d != 0.0)
-            .map(|(c, d)| {
+            .filter_map(|(c, d)| {
                 let j = Self::column_of(c).unwrap_or_else(|| {
                     panic!("ΔPC activates unmodeled counter {c}")
                 });
-                (j, d)
+                self.available[j].then_some((j, d))
             })
             .collect()
     }
@@ -238,6 +300,86 @@ mod tests {
             }
         }
         assert_eq!(PredictionMatrix::column_of(Counter::DramU), None);
+    }
+
+    #[test]
+    fn restriction_follows_gpu_counter_generations() {
+        let rec = recorded();
+        let pre = GpuSpec::gtx1070().counter_set(); // PreVolta
+        let post = GpuSpec::rtx2080().counter_set(); // VoltaPlus
+
+        // pre-Volta on both sides: every counter is comparable, the
+        // mask stays all-true
+        let same = PredictionMatrix::from_recorded(&rec)
+            .restricted_to(pre, pre);
+        assert!(same.dropped_counters().is_empty());
+        assert!(same.is_available(Counter::LocO));
+
+        // any side at the Volta+ generation drops exactly LOC_O —
+        // superset-source (PreVolta model → VoltaPlus tuner),
+        // subset-source (VoltaPlus model → PreVolta tuner), and the
+        // mechanical (VoltaPlus, VoltaPlus) case alike; the transfer
+        // runner never calls restricted_to for that last shape (a
+        // same-generation pair shares one self-consistent metric set),
+        // but the mask itself is a pure function of `supports`
+        for (src, tgt) in [(pre, post), (post, pre), (post, post)] {
+            let m = PredictionMatrix::from_recorded(&rec)
+                .restricted_to(src, tgt);
+            assert_eq!(m.dropped_counters(), vec![Counter::LocO]);
+            assert!(!m.is_available(Counter::LocO));
+            assert!(m.is_available(Counter::DramRt));
+        }
+    }
+
+    #[test]
+    fn restricted_matrix_drops_mismatched_deltas_without_panicking() {
+        // regression for the cross-generation fallback: a ΔPC that
+        // reacts on LOC_O (a local-memory bottleneck measured on the
+        // tuning GPU) must not panic against a matrix whose source
+        // generation lacks the counter — the component is dropped and
+        // the remaining reaction still scores.
+        let rec = recorded();
+        let full = PredictionMatrix::from_recorded(&rec);
+        let restricted = PredictionMatrix::from_recorded(&rec).restricted_to(
+            GpuSpec::rtx2080().counter_set(),
+            GpuSpec::gtx1070().counter_set(),
+        );
+
+        let mut delta = DeltaPc::default();
+        delta.0.set(Counter::LocO, -0.8);
+        delta.0.set(Counter::DramRt, -0.5);
+
+        let cols_full = full.active_columns(&delta);
+        let cols_restricted = restricted.active_columns(&delta);
+        assert_eq!(cols_full.len(), 2);
+        assert_eq!(cols_restricted.len(), 1, "LOC_O dropped");
+
+        // and the restricted score equals scoring with the LOC_O
+        // component removed by hand
+        let mut only_dram = DeltaPc::default();
+        only_dram.0.set(Counter::DramRt, -0.5);
+        let n = restricted.n_configs();
+        let mut a = vec![0.0; n];
+        let mut b = vec![0.0; n];
+        restricted.score_all(0, &cols_restricted, &mut a);
+        full.score_all(0, &full.active_columns(&only_dram), &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "unmodeled counter")]
+    fn unmodeled_delta_still_panics() {
+        // the restriction fallback must not swallow reaction-table
+        // bugs: a delta on a counter outside MODELED_COUNTERS is a
+        // programming error on any matrix, restricted or not
+        let rec = recorded();
+        let m = PredictionMatrix::from_recorded(&rec).restricted_to(
+            GpuSpec::rtx2080().counter_set(),
+            GpuSpec::gtx1070().counter_set(),
+        );
+        let mut delta = DeltaPc::default();
+        delta.0.set(Counter::DramU, -0.3);
+        let _ = m.active_columns(&delta);
     }
 
     #[test]

@@ -72,6 +72,14 @@ impl<'m> ProfileSearcher<'m> {
     /// `Arc<PredictionMatrix>` across the ~100 seed-repetitions of a
     /// harness cell is what removes the per-run rebuild from the
     /// evaluation's critical path.
+    ///
+    /// The matrix may come from a GPU whose
+    /// [`counter_set`](crate::gpusim::GpuSpec::counter_set) differs
+    /// from the environment's — the cross-hardware transfer harness
+    /// hands in matrices restricted to the counters both generations
+    /// support ([`PredictionMatrix::restricted_to`]), and the scoring
+    /// round silently drops ΔPC components on excluded columns instead
+    /// of panicking.
     pub fn shared(
         matrix: Arc<PredictionMatrix>,
         inst_reaction: f64,
@@ -313,6 +321,31 @@ mod tests {
                     .run(&mut env_b, &Budget::tests(30)),
             );
             assert_eq!(via_model, via_shared, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn accepts_a_cross_counter_set_matrix() {
+        // transfer harness path: the matrix comes from a GPU of the
+        // other counter generation (restricted to the shared counters)
+        // and the searcher must run to completion without panicking —
+        // even when the expert reacts on a dropped counter
+        let gpu = GpuSpec::gtx1070();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        let matrix = Arc::new(
+            PredictionMatrix::from_recorded(&rec).restricted_to(
+                GpuSpec::rtx2080().counter_set(), // VoltaPlus source
+                gpu.counter_set(),                // PreVolta target
+            ),
+        );
+        assert!(!matrix.dropped_counters().is_empty());
+        for seed in [0u64, 9] {
+            let mut env =
+                ReplayEnv::new(rec.clone(), gpu.clone(), CostModel::default());
+            let trace = ProfileSearcher::shared(Arc::clone(&matrix), 0.5, seed)
+                .run(&mut env, &Budget::tests(30));
+            assert_eq!(trace.len(), 30);
+            assert!(trace.steps.iter().any(|s| s.profiled));
         }
     }
 

@@ -1,5 +1,8 @@
 //! Statistics helpers for the evaluation harness (means over repeated
-//! stochastic searches, convergence-curve aggregation).
+//! stochastic searches, convergence-curve aggregation, bootstrap
+//! confidence intervals for the transfer-matrix per-cell medians).
+
+use crate::util::rng::Rng;
 
 /// Arithmetic mean; 0.0 for an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {
@@ -33,6 +36,70 @@ pub fn median(xs: &[f64]) -> f64 {
     } else {
         0.5 * (v[n / 2 - 1] + v[n / 2])
     }
+}
+
+/// Linearly interpolated quantile, `q` in [0, 1]; 0.0 for an empty
+/// slice. Copies + sorts, so the result is invariant to input order.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Percentile-bootstrap confidence interval for the **median** of `xs`.
+///
+/// Resamples `xs` with replacement `iters` times (deterministically,
+/// from `seed`), takes the median of each resample, and returns the
+/// (α/2, 1−α/2) quantiles of that bootstrap distribution for
+/// `confidence = 1−α`. The interval is widened to always contain the
+/// sample median itself (the raw percentile method can exclude the
+/// point estimate for tiny, skewed samples — an interval that excludes
+/// its own point estimate is useless in a report).
+///
+/// The input is sorted before resampling, so the result is a pure
+/// function of the *multiset* of values (and `seed`), never of input
+/// order — the transfer report's byte-identity contract depends on
+/// this.
+///
+/// Empty input returns `(0.0, 0.0)`.
+pub fn bootstrap_ci(
+    xs: &[f64],
+    iters: usize,
+    confidence: f64,
+    seed: u64,
+) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let m = median(&sorted);
+    if sorted.len() == 1 || iters == 0 {
+        return (m, m);
+    }
+    let mut rng = Rng::new(seed);
+    let mut resample = vec![0.0f64; sorted.len()];
+    let mut medians = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        for slot in resample.iter_mut() {
+            *slot = sorted[rng.below(sorted.len())];
+        }
+        medians.push(median(&resample));
+    }
+    let alpha = (1.0 - confidence.clamp(0.0, 1.0)) / 2.0;
+    let lo = quantile(&medians, alpha);
+    let hi = quantile(&medians, 1.0 - alpha);
+    (lo.min(m), hi.max(m))
 }
 
 /// Mean absolute error between predictions and targets.
@@ -86,6 +153,39 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(median(&[]), 0.0);
         assert_eq!(stddev(&[]), 0.0);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [4.0, 1.0, 2.0, 3.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&xs, 0.5), 2.5);
+        assert!((quantile(&xs, 0.25) - 1.75).abs() < 1e-12);
+        assert_eq!(quantile(&[], 0.5), 0.0);
+        assert_eq!(quantile(&[7.0], 0.9), 7.0);
+    }
+
+    #[test]
+    fn bootstrap_ci_brackets_median_and_is_deterministic() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let m = median(&xs);
+        let (lo, hi) = bootstrap_ci(&xs, 500, 0.95, 42);
+        assert!(lo <= m && m <= hi, "[{lo}, {hi}] vs median {m}");
+        assert!(lo >= 1.0 && hi <= 9.0, "CI within data range");
+        assert_eq!((lo, hi), bootstrap_ci(&xs, 500, 0.95, 42));
+        // order invariance: same multiset, different order
+        let mut rev = xs;
+        rev.reverse();
+        assert_eq!((lo, hi), bootstrap_ci(&rev, 500, 0.95, 42));
+    }
+
+    #[test]
+    fn bootstrap_ci_degenerate_inputs() {
+        assert_eq!(bootstrap_ci(&[], 100, 0.95, 0), (0.0, 0.0));
+        assert_eq!(bootstrap_ci(&[5.0], 100, 0.95, 0), (5.0, 5.0));
+        let (lo, hi) = bootstrap_ci(&[2.0, 2.0, 2.0], 100, 0.95, 0);
+        assert_eq!((lo, hi), (2.0, 2.0));
     }
 
     #[test]

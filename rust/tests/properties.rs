@@ -10,6 +10,7 @@ use pcat::expert::{
     DeltaPc,
 };
 use pcat::gpusim::{simulate, GpuSpec, Workload};
+use pcat::harness::{aggregate_staircases, aggregate_step_curves, steps_to_within};
 use pcat::model::{
     OracleModel, PredictionMatrix, TpPcModel, MODELED_COUNTERS,
 };
@@ -20,6 +21,7 @@ use pcat::searcher::{
 use pcat::tuning::{Config, ParamDef, Space};
 use pcat::util::fenwick::WeightedIndex;
 use pcat::util::rng::Rng;
+use pcat::util::stats::{bootstrap_ci, median};
 
 /// Random counter vector with plausible scales.
 fn random_counters(rng: &mut Rng) -> CounterVec {
@@ -451,6 +453,116 @@ fn prop_indexed_neighbours_equal_brute_force_on_pruned_spaces() {
             space.neighbours(from, dims + 2),
             space.neighbours_scan(from, dims + 2)
         );
+    }
+}
+
+#[test]
+fn prop_bootstrap_ci_contains_the_sample_median() {
+    // percentile-bootstrap CI of the median, widened to its point
+    // estimate: must bracket the sample median for any sample shape
+    // (uniform, heavy-tailed, tiny, tied) and stay inside the data
+    // range
+    let mut rng = Rng::new(808);
+    for case in 0..150 {
+        let n = 1 + rng.below(40);
+        let heavy = case % 3 == 0;
+        let xs: Vec<f64> = (0..n)
+            .map(|_| {
+                let u = rng.f64();
+                if heavy {
+                    1.0 / (1.0 - u).max(1e-6) // Pareto-ish tail
+                } else {
+                    u * 100.0
+                }
+            })
+            .collect();
+        let m = median(&xs);
+        let (lo, hi) = bootstrap_ci(&xs, 120, 0.95, case as u64);
+        assert!(lo <= m && m <= hi, "case {case}: [{lo}, {hi}] vs {m}");
+        let (dmin, dmax) = xs.iter().fold(
+            (f64::INFINITY, f64::NEG_INFINITY),
+            |(a, b), &x| (a.min(x), b.max(x)),
+        );
+        assert!(dmin <= lo && hi <= dmax, "CI outside data range");
+    }
+}
+
+#[test]
+fn prop_steps_to_within_zero_is_the_argmin_step() {
+    // at 0% slack against the trace's own minimum, steps_to_within is
+    // exactly the (1-based) first argmin position
+    let mut rng = Rng::new(909);
+    for _ in 0..200 {
+        let n = 1 + rng.below(60);
+        let runtimes: Vec<f64> =
+            (0..n).map(|_| 1.0 + (rng.f64() * 20.0).round()).collect();
+        let best = runtimes.iter().copied().fold(f64::INFINITY, f64::min);
+        let argmin = runtimes.iter().position(|&r| r == best).unwrap();
+        assert_eq!(
+            steps_to_within(&runtimes, best, 0.0),
+            Some(argmin + 1),
+            "{runtimes:?}"
+        );
+        // any positive slack can only find it sooner (or equally soon)
+        let relaxed = steps_to_within(&runtimes, best, 0.5).unwrap();
+        assert!(relaxed <= argmin + 1);
+    }
+}
+
+#[test]
+fn prop_convergence_aggregation_is_invariant_to_run_order() {
+    // both the time-domain (aggregate_staircases) and step-domain
+    // (aggregate_step_curves) aggregations are pure functions of the
+    // multiset of runs: a random permutation changes no output bit
+    let mut rng = Rng::new(616);
+    for case in 0..60 {
+        let n_runs = 2 + rng.below(10);
+        let mut staircases: Vec<Vec<(f64, f64)>> = Vec::new();
+        let mut runs: Vec<Vec<f64>> = Vec::new();
+        for _ in 0..n_runs {
+            let len = 1 + rng.below(30);
+            let mut t = 0.0;
+            let mut best = f64::INFINITY;
+            let mut st = Vec::new();
+            let mut run = Vec::new();
+            for _ in 0..len {
+                t += 0.1 + rng.f64();
+                let r = 1.0 + rng.f64() * 50.0;
+                best = best.min(r);
+                st.push((t, best));
+                run.push(r);
+            }
+            staircases.push(st);
+            runs.push(run);
+        }
+        let horizon = 40.0;
+        let grid = 2 + rng.below(12);
+
+        let stairs_fwd = aggregate_staircases(&staircases, horizon, grid);
+        let steps_fwd = aggregate_step_curves(&runs);
+        let mut order: Vec<usize> = (0..n_runs).collect();
+        rng.shuffle(&mut order);
+        let stairs_perm = aggregate_staircases(
+            &order.iter().map(|&i| staircases[i].clone()).collect::<Vec<_>>(),
+            horizon,
+            grid,
+        );
+        let steps_perm = aggregate_step_curves(
+            &order.iter().map(|&i| runs[i].clone()).collect::<Vec<_>>(),
+        );
+
+        assert_eq!(stairs_fwd.len(), stairs_perm.len(), "case {case}");
+        for (a, b) in stairs_fwd.iter().zip(&stairs_perm) {
+            assert_eq!(a.t_s, b.t_s);
+            assert_eq!(a.mean_ms, b.mean_ms, "case {case}");
+            assert_eq!(a.std_ms, b.std_ms, "case {case}");
+        }
+        assert_eq!(steps_fwd.len(), steps_perm.len());
+        for (a, b) in steps_fwd.iter().zip(&steps_perm) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.median_ms, b.median_ms, "case {case}");
+            assert_eq!(a.mean_ms, b.mean_ms, "case {case}");
+        }
     }
 }
 

@@ -1,0 +1,208 @@
+//! Invariants of the cross-hardware transfer evaluation subsystem:
+//!
+//! * a transfer plan's JSON report is byte-identical for `--jobs 1`
+//!   and `--jobs 8` (determinism contract);
+//! * aggregated best-so-far step curves are monotone non-increasing;
+//! * same-GPU transfer cells reproduce the plain [`ExperimentPlan`]
+//!   results bit-for-bit for identical seeds (the transfer path is a
+//!   strict generalization, not a fork);
+//! * plans cannot silently schedule an unrecordable benchmark — the
+//!   validation returns a typed [`PlanError`];
+//! * the smoke report matches the checked-in golden file
+//!   (bootstrapping it on the first run of a fresh checkout).
+
+use std::path::Path;
+
+use pcat::harness::{
+    run_plan, run_transfer_plan, ExperimentPlan, PlanError, TransferPlan,
+};
+
+/// The smoke plan, pinned here so test expectations stay honest about
+/// its shape: 2 benchmarks × 2×2 GPU pairs × 2 searchers × 2 seeds.
+fn smoke() -> TransferPlan {
+    let plan = TransferPlan::smoke(0);
+    assert_eq!(plan.benchmarks.len(), 2);
+    assert_eq!(plan.source_gpus.len(), 2);
+    assert_eq!(plan.target_gpus.len(), 2);
+    assert_eq!(plan.seeds, 2);
+    plan
+}
+
+#[test]
+fn transfer_reports_identical_for_jobs_1_and_jobs_8() {
+    let plan = smoke();
+    let serial = run_transfer_plan(&plan, 1).unwrap().to_pretty_string();
+    let parallel = run_transfer_plan(&plan, 8).unwrap().to_pretty_string();
+    assert_eq!(
+        serial, parallel,
+        "transfer reports must be a pure function of plan + seed"
+    );
+    // and stable across repeated runs in the same process
+    let repeat = run_transfer_plan(&plan, 8).unwrap().to_pretty_string();
+    assert_eq!(parallel, repeat);
+}
+
+#[test]
+fn transfer_curves_are_monotone_non_increasing() {
+    let report = run_transfer_plan(&smoke(), 4).unwrap();
+    let curves = report.step_curves();
+    assert!(!curves.is_empty());
+    for (key, pts) in &curves {
+        assert!(!pts.is_empty(), "{key:?}: empty curve");
+        for w in pts.windows(2) {
+            assert!(
+                w[1].median_ms <= w[0].median_ms + 1e-12,
+                "{key:?}: median best-so-far increased"
+            );
+            assert!(
+                w[1].mean_ms <= w[0].mean_ms + 1e-12,
+                "{key:?}: mean best-so-far increased"
+            );
+        }
+    }
+    // per-job traces are monotone after the best-so-far transform too
+    for r in &report.results {
+        let mut best = f64::INFINITY;
+        for &ms in &r.runtimes {
+            best = best.min(ms);
+        }
+        assert_eq!(best, r.best_ms, "trace and best_ms disagree");
+    }
+}
+
+/// Same-GPU transfer cells must reproduce the plain `ExperimentPlan`
+/// results for identical seeds: same recording, same oracle matrix
+/// (the counter generations trivially agree, so no restriction), same
+/// RNG stream, same budget.
+#[test]
+fn same_gpu_transfer_cells_reproduce_experiment_plan() {
+    let transfer = smoke();
+    let matrix = ExperimentPlan {
+        benchmarks: transfer.benchmarks.clone(),
+        gpus: transfer.target_gpus.clone(),
+        searchers: transfer.searchers.clone(),
+        seeds: transfer.seeds,
+        base_seed: transfer.base_seed,
+        max_tests: transfer.max_tests,
+        include_traces: false,
+    };
+    let t_report = run_transfer_plan(&transfer, 4).unwrap();
+    let m_report = run_plan(&matrix, 4).unwrap();
+
+    let mut compared = 0usize;
+    for tr in t_report
+        .results
+        .iter()
+        .filter(|r| r.spec.source_gpu == r.spec.target_gpu)
+    {
+        let mr = m_report
+            .results
+            .iter()
+            .find(|r| {
+                r.spec.benchmark == tr.spec.benchmark
+                    && r.spec.gpu == tr.spec.target_gpu
+                    && r.spec.searcher == tr.spec.searcher
+                    && r.spec.lane == tr.spec.lane
+            })
+            .expect("matching ExperimentPlan job");
+        assert_eq!(tr.best_ms, mr.best_ms, "{:?}", tr.spec);
+        assert_eq!(tr.tests, mr.tests, "{:?}", tr.spec);
+        assert_eq!(tr.profiled_tests, mr.profiled_tests, "{:?}", tr.spec);
+        assert_eq!(tr.tests_to_wp, mr.tests_to_wp, "{:?}", tr.spec);
+        assert_eq!(tr.cost_s, mr.cost_s, "{:?}", tr.spec);
+        compared += 1;
+    }
+    // 2 benchmarks × 2 diagonal cells × 2 searchers × 2 seeds
+    assert_eq!(compared, 16);
+}
+
+#[test]
+fn unrecordable_benchmarks_are_rejected_before_any_recording() {
+    let mut plan = smoke();
+    plan.benchmarks.push("gemm-full".into());
+    assert_eq!(
+        plan.validate(),
+        Err(PlanError::NoRecording("gemm-full".into()))
+    );
+    let t0 = std::time::Instant::now();
+    assert!(run_transfer_plan(&plan, 2).is_err());
+    // rejection happens in validation, not after a 205k-config
+    // enumerate-and-simulate pass
+    assert!(t0.elapsed().as_secs() < 30, "validation recorded the space");
+
+    // the hoisted validation guards the same-cell plan equally
+    let bad = ExperimentPlan {
+        benchmarks: vec!["gemm-full".into()],
+        ..ExperimentPlan::smoke(0)
+    };
+    assert_eq!(
+        bad.validate(),
+        Err(PlanError::NoRecording("gemm-full".into()))
+    );
+}
+
+#[test]
+fn cross_generation_restriction_is_visible_and_contained() {
+    let report = run_transfer_plan(&smoke(), 4).unwrap();
+    for a in report.aggregate_rows() {
+        let crosses = (a.source_gpu == "rtx2080")
+            != (a.target_gpu == "rtx2080");
+        if crosses {
+            assert_eq!(
+                a.dropped_counters,
+                vec!["LOC_O".to_string()],
+                "{}/{}→{}",
+                a.benchmark,
+                a.source_gpu,
+                a.target_gpu
+            );
+        } else {
+            assert!(
+                a.dropped_counters.is_empty(),
+                "{}/{}→{}",
+                a.benchmark,
+                a.source_gpu,
+                a.target_gpu
+            );
+        }
+    }
+}
+
+/// Golden-file gate for the CI transfer smoke mode — same protocol as
+/// `testdata/smoke_golden.json`: bootstrapped on the first local run
+/// of a fresh toolchain (commit the generated file), byte-compared
+/// forever after; a missing golden under CI stays a warning *here*
+/// (tier-1 `cargo test` must not go red on the bootstrap state) while
+/// the workflow's smoke step hard-fails on it.
+#[test]
+fn transfer_smoke_report_matches_checked_in_golden() {
+    let golden = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("testdata/transfer_golden.json");
+    let got = run_transfer_plan(&TransferPlan::smoke(0), 4)
+        .unwrap()
+        .to_pretty_string();
+    if golden.exists() {
+        let want = std::fs::read_to_string(&golden).unwrap();
+        assert_eq!(
+            got, want,
+            "transfer report drifted from {}; if the change is \
+             intentional, regenerate via `scripts/ci-local.sh bless`",
+            golden.display()
+        );
+    } else if std::env::var_os("CI").is_some() {
+        eprintln!(
+            "transfer golden {} missing in CI — run `scripts/ci-local.sh \
+             bless` locally and commit it (the workflow's smoke step \
+             fails on this state; this test stays green so tier-1 \
+             signal is preserved)",
+            golden.display()
+        );
+    } else {
+        std::fs::create_dir_all(golden.parent().unwrap()).unwrap();
+        std::fs::write(&golden, &got).unwrap();
+        eprintln!(
+            "bootstrapped transfer golden at {} — commit it",
+            golden.display()
+        );
+    }
+}

@@ -8,12 +8,15 @@
 #   scripts/ci-local.sh build      # cargo build --release
 #   scripts/ci-local.sh test      # cargo test -q
 #   scripts/ci-local.sh bench      # cargo bench --no-run (compile only)
-#   scripts/ci-local.sh smoke      # deterministic smoke matrix + golden diff
+#   scripts/ci-local.sh smoke      # deterministic smoke matrices (plain +
+#                                  # transfer) + golden diffs
 #   scripts/ci-local.sh bless      # regenerate rust/testdata/smoke_golden.json
+#                                  # and rust/testdata/transfer_golden.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 GOLDEN=rust/testdata/smoke_golden.json
+TRANSFER_GOLDEN=rust/testdata/transfer_golden.json
 SMOKE_OUT=rust/target/smoke
 
 run_fmt() { (cd rust && cargo fmt --check); }
@@ -23,42 +26,51 @@ run_test() { (cd rust && cargo test -q); }
 run_bench() { (cd rust && cargo bench --no-run); }
 
 smoke_report() {
-    # $1 = jobs, $2 = output path
-    rust/target/release/pcat matrix --smoke --seed 0 --jobs "$1" --out "$2"
+    # $1 = subcommand (matrix|transfer), $2 = jobs, $3 = output path
+    rust/target/release/pcat "$1" --smoke --seed 0 --jobs "$2" --out "$3"
 }
 
-run_smoke() {
-    run_build
-    mkdir -p "$SMOKE_OUT"
-    smoke_report 1 "$SMOKE_OUT/jobs1.json"
-    smoke_report 8 "$SMOKE_OUT/jobs8.json"
+smoke_gate() {
+    # $1 = subcommand, $2 = golden path — determinism + golden diff for
+    # one smoke flavour
+    local cmd="$1" golden="$2"
+    smoke_report "$cmd" 1 "$SMOKE_OUT/$cmd.jobs1.json"
+    smoke_report "$cmd" 8 "$SMOKE_OUT/$cmd.jobs8.json"
     # determinism gate: serial and parallel runs must be byte-identical
-    cmp "$SMOKE_OUT/jobs1.json" "$SMOKE_OUT/jobs8.json"
-    echo "smoke: --jobs 1 and --jobs 8 reports are byte-identical"
-    if [ -f "$GOLDEN" ]; then
+    cmp "$SMOKE_OUT/$cmd.jobs1.json" "$SMOKE_OUT/$cmd.jobs8.json"
+    echo "smoke[$cmd]: --jobs 1 and --jobs 8 reports are byte-identical"
+    if [ -f "$golden" ]; then
         # Drift against the committed golden is a hard failure.
-        cmp "$SMOKE_OUT/jobs8.json" "$GOLDEN"
-        echo "smoke: report matches $GOLDEN"
+        cmp "$SMOKE_OUT/$cmd.jobs8.json" "$golden"
+        echo "smoke[$cmd]: report matches $golden"
     elif [ -n "${CI:-}" ]; then
         # In CI the drift gate is armed unconditionally: a missing
         # golden is a hard failure, never a self-bless (that would make
         # the gate vacuous) and no longer a warning (that let the
         # bootstrap state linger). Bless locally and commit the file.
-        echo "::error::$GOLDEN is missing — run scripts/ci-local.sh" \
+        echo "::error::$golden is missing — run scripts/ci-local.sh" \
              "bless locally and commit it"
         exit 1
     else
-        mkdir -p "$(dirname "$GOLDEN")"
-        cp "$SMOKE_OUT/jobs8.json" "$GOLDEN"
-        echo "smoke: bootstrapped $GOLDEN — review and commit it"
+        mkdir -p "$(dirname "$golden")"
+        cp "$SMOKE_OUT/$cmd.jobs8.json" "$golden"
+        echo "smoke[$cmd]: bootstrapped $golden — review and commit it"
     fi
+}
+
+run_smoke() {
+    run_build
+    mkdir -p "$SMOKE_OUT"
+    smoke_gate matrix "$GOLDEN"
+    smoke_gate transfer "$TRANSFER_GOLDEN"
 }
 
 run_bless() {
     run_build
-    mkdir -p "$(dirname "$GOLDEN")"
-    smoke_report 8 "$GOLDEN"
-    echo "blessed $GOLDEN"
+    mkdir -p "$(dirname "$GOLDEN")" "$(dirname "$TRANSFER_GOLDEN")"
+    smoke_report matrix 8 "$GOLDEN"
+    smoke_report transfer 8 "$TRANSFER_GOLDEN"
+    echo "blessed $GOLDEN and $TRANSFER_GOLDEN"
 }
 
 case "${1:-all}" in
