@@ -10,7 +10,10 @@
 mod bench_util;
 
 use bench_util::{bench, section};
-use pcat::harness::{run_experiment, run_transfer_plan, ExperimentOpts, TransferPlan};
+use pcat::harness::{
+    run_experiment, run_transfer_plan, ExperimentOpts, ModelSource,
+    TransferPlan,
+};
 
 fn main() {
     let quick = ExperimentOpts {
@@ -61,6 +64,16 @@ fn main() {
     bench("transfer_smoke", 0, 2, || {
         let report =
             run_transfer_plan(&TransferPlan::smoke(1), workers).unwrap();
+        assert!(!report.results.is_empty());
+    });
+    // the tree source adds per-endpoint model training to the
+    // pre-pass; this tracks that cost separately from the oracle lane
+    bench("transfer_smoke_tree", 0, 1, || {
+        let plan = TransferPlan {
+            model: ModelSource::Tree,
+            ..TransferPlan::smoke(1)
+        };
+        let report = run_transfer_plan(&plan, workers).unwrap();
         assert!(!report.results.is_empty());
     });
 }

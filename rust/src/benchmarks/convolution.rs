@@ -61,8 +61,17 @@ impl Benchmark for Convolution {
         Input::new("4096x4096", &[4096, 4096])
     }
 
+    /// §4.6 variants: the small square image cuts the thread count 16×
+    /// (parallelism starts to matter against the per-thread tile work),
+    /// and the wide-skewed image stretches each tile row's L2 footprint
+    /// (`w_img × (tile_y + filter)`), shifting pressure toward the
+    /// memory hierarchy.
     fn inputs(&self) -> Vec<Input> {
-        vec![self.default_input(), Input::new("1024x1024", &[1024, 1024])]
+        vec![
+            self.default_input(),
+            Input::new("1024x1024", &[1024, 1024]),
+            Input::new("16384x512", &[16384, 512]),
+        ]
     }
 
     fn workload(&self, space: &Space, cfg: &Config, input: &Input) -> Workload {

@@ -52,10 +52,14 @@ impl Benchmark for Coulomb {
         Input::new("grid256_atoms256", &[256, 256])
     }
 
+    /// §2.3's two contrasting workloads next to the default: few atoms
+    /// shrink the per-thread loop (loop overhead and parallelism take
+    /// over from FP throughput), while the tiny-grid/many-atoms
+    /// instance inverts the balance entirely — the bottleneck shift
+    /// the input-portability experiments need.
     fn inputs(&self) -> Vec<Input> {
         vec![
             self.default_input(),
-            // §2.3's two contrasting workloads
             Input::new("grid256_atoms64", &[256, 64]),
             Input::new("grid25_atoms4096", &[25, 4096]),
         ]

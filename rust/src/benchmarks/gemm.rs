@@ -177,6 +177,10 @@ fn gemm_workload(space: &Space, cfg: &Config, input: &Input, full: bool) -> Work
     }
 }
 
+/// §4.6 (Table 7) variants: the small square turns tail padding into
+/// the dominant cost for big tiles, and the two 16-row/16-column
+/// skews penalize whichever workgroup dimension overhangs the thin
+/// axis — the classic input-sensitivity of GEMM tile shapes.
 const GEMM_INPUTS: &[(&str, [u64; 3])] = &[
     ("2048x2048", [2048, 2048, 2048]),
     ("128x128", [128, 128, 128]),

@@ -66,7 +66,14 @@ pub trait Benchmark: Send + Sync {
     /// The input used when none is specified (the paper's §4.6 sizes).
     fn default_input(&self) -> Input;
 
-    /// Additional inputs exercised by the input-portability experiments.
+    /// The input registry exercised by the input-portability
+    /// experiments (§4.6): must contain [`default_input`] and, for the
+    /// five evaluation benchmarks, at least one variant whose
+    /// size/shape shifts the bottleneck (so the transfer matrix's
+    /// input axis measures something). Plan axes address these by name
+    /// or via the [`resolve_input`] selectors.
+    ///
+    /// [`default_input`]: Benchmark::default_input
     fn inputs(&self) -> Vec<Input> {
         vec![self.default_input()]
     }
@@ -124,6 +131,33 @@ pub fn by_name(name: &str) -> Option<Box<dyn Benchmark>> {
         .find(|b| b.name().to_ascii_lowercase() == needle)
 }
 
+/// Input-axis selector resolving to the benchmark's default input.
+pub const DEFAULT_INPUT_SELECTOR: &str = "default";
+/// Input-axis selector resolving to the first §4.6 variant that
+/// differs from the default — a benchmark-independent way to spell
+/// "some other input" across a multi-benchmark plan axis (concrete
+/// input names are per-benchmark).
+pub const ALT_INPUT_SELECTOR: &str = "alt";
+
+/// Resolve an input selector against a benchmark's input registry:
+/// `"default"` → [`Benchmark::default_input`], `"alt"` → the first
+/// entry of [`Benchmark::inputs`] whose name differs from the default,
+/// anything else → the input with that exact name. `None` when the
+/// benchmark defines no such input (plan validation turns that into a
+/// typed [`PlanError::UnknownInput`]).
+///
+/// [`PlanError::UnknownInput`]: crate::harness::PlanError::UnknownInput
+pub fn resolve_input(bench: &dyn Benchmark, selector: &str) -> Option<Input> {
+    match selector {
+        DEFAULT_INPUT_SELECTOR => Some(bench.default_input()),
+        ALT_INPUT_SELECTOR => {
+            let default = bench.default_input();
+            bench.inputs().into_iter().find(|i| i.name != default.name)
+        }
+        name => bench.inputs().into_iter().find(|i| i.name == name),
+    }
+}
+
 /// Exhaustively explore a benchmark's tuning space on a simulated GPU —
 /// the paper's §4.1 methodology ("perform an exhaustive exploration of
 /// the entire tuning space and save the tuning results").
@@ -164,6 +198,52 @@ mod tests {
     fn by_name_lookup() {
         assert!(by_name("GEMM").is_some());
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn every_evaluation_benchmark_has_portability_inputs() {
+        // the input-portability matrix needs every benchmark to expose
+        // the default plus at least one §4.6 variant, under unique
+        // names, with the default present in the registry
+        for bench in evaluation_set() {
+            let inputs = bench.inputs();
+            let default = bench.default_input();
+            assert!(
+                inputs.len() >= 2,
+                "{}: only {} input(s)",
+                bench.name(),
+                inputs.len()
+            );
+            assert!(
+                inputs.iter().any(|i| i.name == default.name),
+                "{}: default input missing from inputs()",
+                bench.name()
+            );
+            let mut names: Vec<&str> =
+                inputs.iter().map(|i| i.name.as_str()).collect();
+            names.sort_unstable();
+            names.dedup();
+            assert_eq!(names.len(), inputs.len(), "{}", bench.name());
+        }
+    }
+
+    #[test]
+    fn input_selectors_resolve() {
+        for bench in evaluation_set() {
+            let default =
+                resolve_input(bench.as_ref(), DEFAULT_INPUT_SELECTOR)
+                    .unwrap();
+            assert_eq!(default.name, bench.default_input().name);
+            let alt =
+                resolve_input(bench.as_ref(), ALT_INPUT_SELECTOR).unwrap();
+            assert_ne!(alt.name, default.name, "{}", bench.name());
+            // concrete names resolve to themselves; unknowns to None
+            let by_name_res =
+                resolve_input(bench.as_ref(), &alt.name).unwrap();
+            assert_eq!(by_name_res.name, alt.name);
+            assert_eq!(by_name_res.dims, alt.dims);
+            assert!(resolve_input(bench.as_ref(), "no-such-input").is_none());
+        }
     }
 
     #[test]

@@ -47,6 +47,10 @@ impl Benchmark for Transpose {
         Input::new("8192x8192", &[8192, 8192])
     }
 
+    /// §4.6 variants: the small square fits mostly in L2 (the
+    /// partition-camping and write-scatter penalties lose their bite),
+    /// the 4:1 rectangle changes which tile shapes divide the matrix —
+    /// both move the optimum away from the default's.
     fn inputs(&self) -> Vec<Input> {
         vec![
             self.default_input(),

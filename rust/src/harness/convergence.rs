@@ -102,15 +102,18 @@ pub fn aggregate_step_curves<R: AsRef<[f64]>>(
 /// plotting convention — the moment every run has one finished kernel.
 ///
 /// Pure aggregation core of [`aggregate_convergence`]; output is
-/// invariant to the order of `staircases`.
-pub fn aggregate_staircases(
-    staircases: &[Vec<(f64, f64)>],
+/// invariant to the order of `staircases`. Generic over
+/// `AsRef<[(f64, f64)]>` so callers can pass owned staircases
+/// (`Vec<(f64, f64)>`) or borrowed slices without cloning — the
+/// transfer report borrows its per-job traces.
+pub fn aggregate_staircases<S: AsRef<[(f64, f64)]>>(
+    staircases: &[S],
     horizon_s: f64,
     grid_points: usize,
 ) -> Vec<ConvergencePoint> {
     let t_start = staircases
         .iter()
-        .filter_map(|st| st.first().map(|p| p.0))
+        .filter_map(|st| st.as_ref().first().map(|p| p.0))
         .fold(0.0f64, f64::max);
 
     let mut out = Vec::with_capacity(grid_points);
@@ -120,7 +123,7 @@ pub fn aggregate_staircases(
                 * (gi as f64 / (grid_points.saturating_sub(1).max(1)) as f64);
         let mut at_t: Vec<f64> = staircases
             .iter()
-            .filter_map(|st| best_at(st, t))
+            .filter_map(|st| best_at(st.as_ref(), t))
             .collect();
         if at_t.is_empty() {
             continue;
@@ -135,6 +138,25 @@ pub fn aggregate_staircases(
         });
     }
     out
+}
+
+/// Aggregate (cost, best-so-far) staircases on a grid whose horizon is
+/// the **latest final-step time** across runs — the transfer report's
+/// time-domain curves, where no fixed wall-clock horizon exists (jobs
+/// stop at their own budget, at different costs). Runs that finish
+/// early keep contributing their final best to later grid points (the
+/// staircase semantics of [`best_at`]). Order-invariant like
+/// everything in this module: the horizon is a max, the reductions are
+/// sorted.
+pub fn aggregate_time_curves<S: AsRef<[(f64, f64)]>>(
+    staircases: &[S],
+    grid_points: usize,
+) -> Vec<ConvergencePoint> {
+    let horizon = staircases
+        .iter()
+        .filter_map(|st| st.as_ref().last().map(|p| p.0))
+        .fold(0.0f64, f64::max);
+    aggregate_staircases(staircases, horizon, grid_points)
 }
 
 /// Run `make(seed)` searchers `reps` times for `horizon_s` of simulated
@@ -262,6 +284,32 @@ mod tests {
             assert!(w[1].mean_ms <= w[0].mean_ms + 1e-12);
         }
         assert!(aggregate_step_curves::<Vec<f64>>(&[]).is_empty());
+    }
+
+    #[test]
+    fn time_curves_span_to_the_latest_finisher() {
+        // run A stops at t=2, run B at t=5: the grid must reach 5 and
+        // A's final best keeps contributing there
+        let a = vec![(1.0, 10.0), (2.0, 4.0)];
+        let b = vec![(1.5, 8.0), (5.0, 2.0)];
+        let pts = aggregate_time_curves(&[a.clone(), b.clone()], 9);
+        assert!(!pts.is_empty());
+        assert!((pts.last().unwrap().t_s - 5.0).abs() < 1e-12);
+        // at the horizon both runs contribute their final bests
+        assert_eq!(pts.last().unwrap().mean_ms, 3.0); // (4 + 2) / 2
+        for w in pts.windows(2) {
+            assert!(w[1].t_s >= w[0].t_s);
+            assert!(w[1].mean_ms <= w[0].mean_ms + 1e-12);
+        }
+        // order invariance comes from max + the sorted reductions
+        let rev = aggregate_time_curves(&[b, a], 9);
+        assert_eq!(pts.len(), rev.len());
+        for (x, y) in pts.iter().zip(&rev) {
+            assert_eq!(x.t_s, y.t_s);
+            assert_eq!(x.mean_ms, y.mean_ms);
+            assert_eq!(x.std_ms, y.std_ms);
+        }
+        assert!(aggregate_time_curves::<Vec<(f64, f64)>>(&[], 9).is_empty());
     }
 
     #[test]

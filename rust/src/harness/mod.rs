@@ -19,8 +19,11 @@
 //! whole evaluation grids on the shared worker pool with byte-identical
 //! `--jobs`-invariant reports: [`ExperimentPlan`] (benchmark × GPU ×
 //! searcher × seed, same-cell) and [`TransferPlan`] (benchmark ×
-//! source GPU × target GPU × searcher × seed — the paper's
-//! train-on-A / tune-on-B portability experiment).
+//! source (GPU, input) × target (GPU, input) × searcher × seed — the
+//! paper's train-on-A / tune-on-B portability experiment over **both**
+//! axes the paper claims, with a pluggable source-model kind:
+//! [`ModelSource::Oracle`] exact PCs or [`ModelSource::Tree`] trained
+//! decision trees).
 
 mod convergence;
 mod figures;
@@ -31,17 +34,18 @@ mod transfer;
 
 pub use convergence::{
     aggregate_convergence, aggregate_staircases, aggregate_step_curves,
-    best_so_far, steps_to_within, ConvergencePoint, StepCurvePoint,
+    aggregate_time_curves, best_so_far, steps_to_within, ConvergencePoint,
+    StepCurvePoint,
 };
 pub use plan::{
     run_plan, AggregateRow, ExperimentPlan, JobResult, JobSpec, PlanError,
     PlanReport, PLAN_SEARCHERS,
 };
 pub use steps::{avg_steps_to_well_performing, par_map_seeds};
-pub use tables::transfer_matrix;
+pub use tables::{transfer_input_matrix, transfer_matrix};
 pub use transfer::{
-    run_transfer_plan, TransferAggregate, TransferJobResult, TransferJobSpec,
-    TransferPlan, TransferReport,
+    run_transfer_plan, CellId, ModelSource, TransferAggregate,
+    TransferJobResult, TransferJobSpec, TransferPlan, TransferReport,
 };
 
 use std::path::Path;

@@ -54,6 +54,11 @@ pub enum PlanError {
     /// the exhaustive enumerate-and-simulate cost is reserved for
     /// dedicated drivers (fig8), not paid silently inside a matrix.
     NoRecording(String),
+    /// `(benchmark, selector)`: an input-axis selector that some
+    /// benchmark of the plan cannot resolve — the cross product would
+    /// need a source or target recording that can never exist, so the
+    /// plan is rejected up front instead of panicking mid-fan-out.
+    UnknownInput(String, String),
 }
 
 impl std::fmt::Display for PlanError {
@@ -77,6 +82,12 @@ impl std::fmt::Display for PlanError {
                  space is too costly to be exhaustively recorded inside \
                  a job matrix (§4.6), so it cannot be scheduled into a \
                  replay plan"
+            ),
+            PlanError::UnknownInput(b, i) => write!(
+                f,
+                "benchmark {b:?} has no input {i:?} in plan; selectors \
+                 are \"default\", \"alt\", or an input name listed by \
+                 `pcat list`"
             ),
         }
     }
@@ -114,6 +125,32 @@ pub(crate) fn validate_gpus(
     for g in names {
         if GpuSpec::by_name(g).is_none() {
             return Err(PlanError::UnknownGpu(g.clone()));
+        }
+    }
+    Ok(())
+}
+
+/// Shared axis validation for input-selector axes: every selector must
+/// resolve ([`crate::benchmarks::resolve_input`]) for **every**
+/// benchmark of the plan — a selector one benchmark lacks would need a
+/// recording that can never exist. Unknown benchmark names are skipped
+/// here; [`validate_benchmarks`] owns reporting those.
+pub(crate) fn validate_inputs(
+    axis: &'static str,
+    bench_names: &[String],
+    selectors: &[String],
+) -> Result<(), PlanError> {
+    if selectors.is_empty() {
+        return Err(PlanError::EmptyAxis(axis));
+    }
+    for b in bench_names {
+        let Some(bench) = benchmarks::by_name(b) else {
+            continue;
+        };
+        for sel in selectors {
+            if benchmarks::resolve_input(bench.as_ref(), sel).is_none() {
+                return Err(PlanError::UnknownInput(b.clone(), sel.clone()));
+            }
         }
     }
     Ok(())

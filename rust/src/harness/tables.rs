@@ -19,7 +19,7 @@ use crate::util::stats::mean;
 use crate::util::table::{markdown, speedup};
 
 use super::steps::{avg_steps_to_well_performing, par_map_seeds};
-use super::transfer::TransferReport;
+use super::transfer::{TransferAggregate, TransferPlan, TransferReport};
 use super::{ExperimentOpts, Report};
 
 /// The five benchmarks of the step-count experiments, in Table 4 order.
@@ -620,9 +620,50 @@ pub fn ablation_model_kind(opts: &ExperimentOpts) -> Report {
 // Transfer matrix — the paper-style train-on-A / tune-on-B table
 // ---------------------------------------------------------------------
 
+/// Which searcher a transfer grid reads its values from, plus whether
+/// a random baseline exists to normalize against. Grid values come
+/// from the profile searcher when present; any other plan still
+/// renders its first searcher's medians instead of an all-dash grid.
+fn grid_value_searcher(plan: &TransferPlan) -> (&str, bool) {
+    let has_random = plan.searchers.iter().any(|s| s == "random");
+    let has_profile = plan.searchers.iter().any(|s| s == "profile");
+    let value = if has_profile {
+        "profile"
+    } else if has_random {
+        "random"
+    } else {
+        plan.searchers
+            .first()
+            .map(String::as_str)
+            .unwrap_or("profile")
+    };
+    (value, has_random)
+}
+
+/// Format one grid cell: improvement over the random baseline on the
+/// same target when a baseline exists, raw median steps otherwise.
+fn grid_cell_value(
+    a: &TransferAggregate,
+    random: Option<&TransferAggregate>,
+    normalize: bool,
+    mark: &str,
+) -> String {
+    if normalize {
+        let rand = random.map(|r| r.median_tests_to_wp).unwrap_or(0.0);
+        let imp = rand / a.median_tests_to_wp.max(1.0);
+        format!("{}{mark}", speedup(imp))
+    } else {
+        format!("{:.1}{mark}", a.median_tests_to_wp)
+    }
+}
+
 /// Render a [`TransferReport`] as the paper's Table 6 shape: one
-/// source × target grid per benchmark, rows = GPU tuned on, columns =
-/// GPU the model was sampled on.
+/// source-GPU × target-GPU grid per benchmark, rows = GPU tuned on,
+/// columns = GPU the model was sampled on. On plans with input axes,
+/// each GPU cell shows the benchmark's **default-input diagonal**
+/// (source input == target input == default) when recorded, falling
+/// back to the first recorded input pair — the input axis gets its own
+/// grid from [`transfer_input_matrix`].
 ///
 /// When the plan includes the `random` baseline, each cell shows the
 /// improvement factor (median random steps ÷ median profile steps, on
@@ -630,45 +671,50 @@ pub fn ablation_model_kind(opts: &ExperimentOpts) -> Report {
 /// whose cross-generation restriction dropped counters are marked `†`
 /// with a legend below the grid.
 pub fn transfer_matrix(report: &TransferReport) -> String {
-    // index the cells once: the full plan has 160 aggregate rows and
-    // 80 grid cells, so per-cell linear scans would be O(cells × rows)
-    let index: std::collections::BTreeMap<_, _> = report
-        .aggregate_rows()
+    // default input name per benchmark, for the preferred-cell rule
+    let defaults: std::collections::BTreeMap<&str, String> = report
+        .plan
+        .benchmarks
         .iter()
-        .map(|a| {
-            (
-                (
-                    a.benchmark.as_str(),
-                    a.source_gpu.as_str(),
-                    a.target_gpu.as_str(),
-                    a.searcher.as_str(),
-                ),
-                a,
-            )
+        .filter_map(|b| {
+            benchmarks::by_name(b)
+                .map(|bn| (b.as_str(), bn.default_input().name))
         })
         .collect();
+    // index the cells once, preferring the default/default input pair:
+    // the full plan has hundreds of aggregate rows, so per-cell linear
+    // scans would be O(cells × rows)
+    let mut index: std::collections::BTreeMap<
+        (&str, &str, &str, &str),
+        &TransferAggregate,
+    > = std::collections::BTreeMap::new();
+    for a in report.aggregate_rows() {
+        let key = (
+            a.benchmark.as_str(),
+            a.source_gpu.as_str(),
+            a.target_gpu.as_str(),
+            a.searcher.as_str(),
+        );
+        let is_default = defaults
+            .get(a.benchmark.as_str())
+            .map(|d| a.source_input == *d && a.target_input == *d)
+            .unwrap_or(false);
+        match index.entry(key) {
+            std::collections::btree_map::Entry::Vacant(e) => {
+                e.insert(a);
+            }
+            std::collections::btree_map::Entry::Occupied(mut e) => {
+                if is_default {
+                    e.insert(a);
+                }
+            }
+        }
+    }
     let cell = |b: &str, s: &str, t: &str, searcher: &str| {
         index.get(&(b, s, t, searcher)).copied()
     };
-    let has_random =
-        report.plan.searchers.iter().any(|s| s == "random");
-    let has_profile =
-        report.plan.searchers.iter().any(|s| s == "profile");
-    // grid values come from the profile searcher when present; any
-    // other plan still renders its first searcher's medians instead of
-    // an all-dash grid
-    let value_searcher = if has_profile {
-        "profile"
-    } else if has_random {
-        "random"
-    } else {
-        report
-            .plan
-            .searchers
-            .first()
-            .map(String::as_str)
-            .unwrap_or("profile")
-    };
+    let (value_searcher, has_random) = grid_value_searcher(&report.plan);
+    let normalize = has_random && value_searcher == "profile";
 
     let mut md = String::new();
     for b in &report.plan.benchmarks {
@@ -687,18 +733,12 @@ pub fn transfer_matrix(report: &TransferReport) -> String {
                     any_dropped = true;
                     "†"
                 };
-                if has_random && value_searcher == "profile" {
-                    let rand = cell(b, s, t, "random")
-                        .map(|r| r.median_tests_to_wp)
-                        .unwrap_or(0.0);
-                    let imp = rand / a.median_tests_to_wp.max(1.0);
-                    row.push(format!("{}{mark}", speedup(imp)));
-                } else {
-                    row.push(format!(
-                        "{:.1}{mark}",
-                        a.median_tests_to_wp
-                    ));
-                }
+                row.push(grid_cell_value(
+                    a,
+                    cell(b, s, t, "random"),
+                    normalize,
+                    mark,
+                ));
             }
             rows.push(row);
         }
@@ -716,6 +756,86 @@ pub fn transfer_matrix(report: &TransferReport) -> String {
                  either side were dropped from scoring (see report \
                  `dropped_counters`).\n",
             );
+        }
+    }
+    md
+}
+
+/// Render a [`TransferReport`]'s **input axis** as the paper's Table 7
+/// shape: one source-input × target-input grid per (benchmark, GPU)
+/// the plan covers on both GPU axes with more than one input pair —
+/// rows = input tuned on, columns = input the model was sampled on.
+/// Cell values follow the same improvement-over-random convention as
+/// [`transfer_matrix`]. Returns an empty string when the plan has no
+/// input dimension to show (single input pair everywhere), so callers
+/// can print it unconditionally.
+pub fn transfer_input_matrix(report: &TransferReport) -> String {
+    let (value_searcher, has_random) = grid_value_searcher(&report.plan);
+    let normalize = has_random && value_searcher == "profile";
+
+    let mut md = String::new();
+    for b in &report.plan.benchmarks {
+        for g in &report.plan.target_gpus {
+            if !report.plan.source_gpus.contains(g) {
+                continue;
+            }
+            // the same-GPU diagonal isolates the input axis (no
+            // hardware change, no counter-generation restriction)
+            let diagonal: Vec<&TransferAggregate> = report
+                .aggregate_rows()
+                .iter()
+                .filter(|a| {
+                    a.benchmark == *b
+                        && a.source_gpu == *g
+                        && a.target_gpu == *g
+                })
+                .collect();
+            // observed input axes, in sorted (aggregate) order
+            let mut s_inputs: Vec<&str> = Vec::new();
+            let mut t_inputs: Vec<&str> = Vec::new();
+            for a in diagonal.iter().filter(|a| a.searcher == value_searcher)
+            {
+                if !s_inputs.contains(&a.source_input.as_str()) {
+                    s_inputs.push(&a.source_input);
+                }
+                if !t_inputs.contains(&a.target_input.as_str()) {
+                    t_inputs.push(&a.target_input);
+                }
+            }
+            if s_inputs.len() * t_inputs.len() < 2 {
+                continue; // no input dimension to show on this GPU
+            }
+            let cell = |si: &str, ti: &str, searcher: &str| {
+                diagonal.iter().copied().find(|a| {
+                    a.source_input == si
+                        && a.target_input == ti
+                        && a.searcher == searcher
+                })
+            };
+            let mut rows = Vec::new();
+            for ti in &t_inputs {
+                let mut row = vec![ti.to_string()];
+                for si in &s_inputs {
+                    match cell(si, ti, value_searcher) {
+                        Some(a) => row.push(grid_cell_value(
+                            a,
+                            cell(si, ti, "random"),
+                            normalize,
+                            "",
+                        )),
+                        None => row.push("-".into()),
+                    }
+                }
+                rows.push(row);
+            }
+            let header: Vec<String> =
+                std::iter::once("tuned input ↓ \\ model from →".to_string())
+                    .chain(s_inputs.iter().map(|s| s.to_string()))
+                    .collect();
+            let header_refs: Vec<&str> =
+                header.iter().map(|s| s.as_str()).collect();
+            md.push_str(&format!("\n## {b} @ {g} (input × input)\n\n"));
+            md.push_str(&markdown(&header_refs, &rows));
         }
     }
     md
@@ -763,7 +883,10 @@ mod tests {
         let plan = TransferPlan {
             benchmarks: vec!["coulomb".into()],
             source_gpus: vec!["gtx1070".into(), "rtx2080".into()],
+            source_inputs: vec!["default".into()],
             target_gpus: vec!["gtx1070".into()],
+            target_inputs: vec!["default".into()],
+            model: crate::harness::ModelSource::Oracle,
             searchers: vec!["random".into(), "profile".into()],
             seeds: 2,
             base_seed: 3,
@@ -778,5 +901,34 @@ mod tests {
         assert!(md.contains("×"), "improvement factors rendered");
         // the rtx2080→gtx1070 column crosses the generation boundary
         assert!(md.contains('†') && md.contains("dropped"));
+        // no input dimension in this plan → no input grid at all
+        assert!(transfer_input_matrix(&report).is_empty());
+    }
+
+    #[test]
+    fn transfer_input_matrix_renders_the_table7_shape() {
+        let plan = TransferPlan {
+            benchmarks: vec!["coulomb".into()],
+            source_gpus: vec!["gtx1070".into()],
+            source_inputs: vec!["default".into(), "alt".into()],
+            target_gpus: vec!["gtx1070".into()],
+            target_inputs: vec!["default".into(), "alt".into()],
+            model: crate::harness::ModelSource::Oracle,
+            searchers: vec!["random".into(), "profile".into()],
+            seeds: 2,
+            base_seed: 3,
+            max_tests: 40,
+            within_frac: 0.10,
+            include_curves: false,
+        };
+        let report = run_transfer_plan(&plan, 4).unwrap();
+        let md = transfer_input_matrix(&report);
+        assert!(md.contains("## coulomb @ gtx1070 (input × input)"));
+        // both concrete input names appear as axis labels
+        assert!(md.contains("grid256_atoms256"));
+        assert!(md.contains("grid256_atoms64"));
+        assert!(md.contains("×"), "improvement factors rendered");
+        // and the GPU grid still renders its default-input diagonal
+        assert!(transfer_matrix(&report).contains("## coulomb"));
     }
 }

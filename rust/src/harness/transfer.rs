@@ -1,18 +1,30 @@
-//! Cross-hardware transfer evaluation: train-on-A / tune-on-B.
+//! Portability evaluation: train-on-(GPU, input)-A / tune-on-(GPU,
+//! input)-B.
 //!
 //! The paper's headline claim is *portability* — a counter-based model
-//! sampled on one GPU steers the search on different, even unseen,
-//! hardware (§4.4, Table 6). [`TransferPlan`] turns that claim into a
-//! job matrix: the full cross product `(benchmark × source GPU ×
-//! target GPU × searcher × seed)`, where the profile searcher's
-//! [`PredictionMatrix`] is built from the **source** GPU's recording
-//! while the search itself replays the **target** GPU's recording.
+//! sampled on one (GPU, input) pair steers the search on different,
+//! even unseen, hardware **and problem inputs** (§4.4 Table 6, §4.6
+//! Table 7). [`TransferPlan`] turns both axes into one job matrix: the
+//! full cross product `(benchmark × source (GPU, input) × target
+//! (GPU, input) × searcher × seed)`, where the profile searcher's
+//! [`PredictionMatrix`] is built from the **source** endpoint's
+//! recording while the search itself replays the **target** endpoint's
+//! recording.
 //!
-//! Sharing discipline (§Perf): each `(benchmark, source)` model matrix
-//! is built exactly once and shared via `Arc` across *every* target
-//! cell and seed-repetition that consumes it; recordings come from the
-//! process-wide space cache, so each `(benchmark, GPU)` space is
-//! enumerated once per process no matter how many cells touch it.
+//! The source side's matrix comes from a pluggable [`ModelSource`]:
+//! [`ModelSource::Oracle`] reads the exact recorded counters (the
+//! paper's §4.3 setting isolating expert-system quality from model
+//! error), [`ModelSource::Tree`] trains per-counter
+//! [`DecisionTreeModel`]s on the source recording (§3.4.2 — the model
+//! the paper actually ships) and densifies their predictions through
+//! [`PredictionMatrix::build`].
+//!
+//! Sharing discipline (§Perf): each `(benchmark, source GPU, source
+//! input)` model matrix is built (and, for the tree source, trained)
+//! exactly once and shared via `Arc` across *every* target cell and
+//! seed-repetition that consumes it; recordings come from the
+//! process-wide space cache, so each `(benchmark, GPU, input)` space
+//! is enumerated once per process no matter how many cells touch it.
 //!
 //! Counter-generation mismatches (pre-Volta source vs Volta+ target or
 //! vice versa) are handled by restricting the matrix to the counters
@@ -22,48 +34,56 @@
 //! restriction applies **iff the two generations differ**: a
 //! same-generation pair (including every same-GPU diagonal cell)
 //! shares one self-consistent metric set and scores it in full, which
-//! keeps same-GPU transfer cells bit-identical to the plain
-//! [`ExperimentPlan`] path for identical seeds. Consequence worth
-//! knowing when reading a Table 6 column: a same-generation source may
-//! score counters (today: `LOC_O`) that a cross-generation source on
-//! the same target cannot — each source uses the richest counter set
-//! that transfers to that target, and the per-cell `dropped_counters`
-//! field makes the difference explicit.
+//! keeps same-(GPU, input) oracle transfer cells bit-identical to the
+//! plain [`ExperimentPlan`] path for identical seeds. Input mismatches
+//! need no analogous fallback — every benchmark input shares one
+//! tuning space, so a source matrix always covers the target's
+//! configurations; an input *name* no benchmark defines is a typed
+//! [`PlanError::UnknownInput`] at validation, never a panic mid-plan.
 //!
 //! **Determinism contract** (same as [`ExperimentPlan`]): a job's
 //! result is a pure function of the plan and its coordinates. The RNG
-//! stream is keyed by `(base seed, benchmark, target GPU, searcher,
-//! lane)` — deliberately *not* by the source GPU, so (a) same-GPU
-//! cells reproduce `ExperimentPlan` runs exactly and (b) different
-//! sources are compared on identical search randomness (common random
+//! stream is keyed by `(base seed, benchmark, target GPU, target
+//! input, searcher, lane)` — deliberately *not* by the source endpoint
+//! or the model kind, so (a) same-(GPU, default input) cells reproduce
+//! `ExperimentPlan` runs exactly and (b) different sources and model
+//! kinds are compared on identical search randomness (common random
 //! numbers: the only varying factor in a source column is the model).
-//! Serial and parallel executions produce byte-identical
-//! `TRANSFER_REPORT.json` documents; CI smoke-gates that.
+//! The default target input contributes **no** stream tag — that is
+//! what collapses the diagonal onto `ExperimentPlan`'s streams. Tree
+//! training draws from its own stream keyed by the source coordinates,
+//! so worker count and scheduling never touch it. Serial and parallel
+//! executions produce byte-identical `TRANSFER_REPORT.json` documents;
+//! CI smoke-gates that for both model sources.
+//!
+//! [`ExperimentPlan`]: super::ExperimentPlan
+//! [`DecisionTreeModel`]: crate::model::DecisionTreeModel
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::benchmarks::{self, cached_space};
+use crate::benchmarks::{self, cached_space, resolve_input, Input};
 use crate::coordinator::Tuner;
 use crate::counters::CounterSet;
 use crate::gpusim::GpuSpec;
-use crate::model::PredictionMatrix;
+use crate::model::{dataset_full, DecisionTreeModel, PredictionMatrix};
 use crate::searcher::{Budget, CostModel};
 use crate::tuning::RecordedSpace;
 use crate::util::json::{obj, Value};
 use crate::util::pool;
-use crate::util::rng::stream_seed;
+use crate::util::rng::{stream_seed, Rng};
 use crate::util::stats::{bootstrap_ci, mean, median};
 
 use super::convergence::{
-    aggregate_step_curves, steps_to_within, StepCurvePoint,
+    aggregate_step_curves, aggregate_time_curves, steps_to_within,
+    ConvergencePoint, StepCurvePoint,
 };
 use super::plan::{
     reads_model, searcher_choice, validate_benchmarks, validate_gpus,
-    validate_searchers, PlanError,
+    validate_inputs, validate_searchers, PlanError,
 };
 
 /// Bootstrap resamples per cell CI (fixed: part of the report's
@@ -71,17 +91,61 @@ use super::plan::{
 const BOOTSTRAP_ITERS: usize = 200;
 /// Cell confidence level for the tests-to-wp median CI.
 const BOOTSTRAP_CONFIDENCE: f64 = 0.95;
+/// Grid resolution of the per-cell time-domain curves. Fixed: part of
+/// the report's deterministic byte contract.
+const TIME_GRID_POINTS: usize = 32;
 
-/// A benchmark × source-GPU × target-GPU × searcher × seed job matrix.
+/// Where the source side's prediction matrix comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelSource {
+    /// Exact recorded counters of the source endpoint (§4.3: isolates
+    /// expert-system quality from model error).
+    Oracle,
+    /// Per-counter decision trees trained on the source recording
+    /// (§3.4.2: the trained-model setting the paper's portability
+    /// tables actually use).
+    Tree,
+}
+
+impl ModelSource {
+    /// CLI/report spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelSource::Oracle => "oracle",
+            ModelSource::Tree => "tree",
+        }
+    }
+
+    /// Parse a CLI spelling (`--model {oracle,tree}`).
+    pub fn parse(s: &str) -> Option<ModelSource> {
+        match s.to_ascii_lowercase().as_str() {
+            "oracle" => Some(ModelSource::Oracle),
+            "tree" | "decision_tree" | "decision-tree" => {
+                Some(ModelSource::Tree)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// A benchmark × source-(GPU, input) × target-(GPU, input) × searcher
+/// × seed job matrix.
 #[derive(Debug, Clone)]
 pub struct TransferPlan {
     pub benchmarks: Vec<String>,
     /// GPUs the model (prediction matrix) is built from.
     pub source_gpus: Vec<String>,
+    /// Input selectors on the model side: `"default"`, `"alt"`, or a
+    /// concrete input name from [`crate::benchmarks::Benchmark::inputs`].
+    pub source_inputs: Vec<String>,
     /// GPUs the search actually runs on.
     pub target_gpus: Vec<String>,
+    /// Input selectors on the tuning side (same vocabulary).
+    pub target_inputs: Vec<String>,
+    /// How the source matrix is built (exact PCs vs trained trees).
+    pub model: ModelSource,
     pub searchers: Vec<String>,
-    /// Seeded repetitions per (benchmark, source, target, searcher).
+    /// Seeded repetitions per cell.
     pub seeds: usize,
     /// Base seed every per-job RNG stream is derived from.
     pub base_seed: u64,
@@ -91,13 +155,16 @@ pub struct TransferPlan {
     /// The "within X of the oracle best" fraction reported per job
     /// (0.10 = the paper's well-performing threshold).
     pub within_frac: f64,
-    /// Embed per-cell aggregated best-so-far step curves in the report.
+    /// Embed per-cell aggregated best-so-far curves (step **and** time
+    /// domain) in the report.
     pub include_curves: bool,
 }
 
 impl TransferPlan {
     /// The paper's §4.4 hardware-portability matrix: 5 benchmarks ×
-    /// 4×4 GPU pairs × {random, profile} × `seeds` repetitions.
+    /// 4×4 GPU pairs (default inputs) × {random, profile} × `seeds`
+    /// repetitions. Widen the input axes (`--inputs`) for the §4.6
+    /// input-portability experiment.
     pub fn full(seeds: usize, base_seed: u64) -> Self {
         let gpus: Vec<String> = ["gtx680", "gtx750", "gtx1070", "rtx2080"]
             .map(String::from)
@@ -107,7 +174,10 @@ impl TransferPlan {
                 .map(String::from)
                 .to_vec(),
             source_gpus: gpus.clone(),
+            source_inputs: vec!["default".into()],
             target_gpus: gpus,
+            target_inputs: vec!["default".into()],
+            model: ModelSource::Oracle,
             searchers: vec!["random".into(), "profile".into()],
             seeds,
             base_seed,
@@ -119,13 +189,19 @@ impl TransferPlan {
 
     /// The CI smoke matrix: 2 benchmarks × 2×2 GPU pairs (crossing the
     /// Pascal/Turing counter-generation boundary in both directions,
-    /// plus both same-GPU diagonals) × 2 searchers × 2 seeds.
+    /// plus both same-GPU diagonals) × 2×2 input pairs (default and
+    /// the first §4.6 variant, crossing the input axis both ways) ×
+    /// 2 searchers × 2 seeds. The model source stays a knob: CI runs
+    /// the gate once with `Oracle` and once with `Tree`.
     pub fn smoke(base_seed: u64) -> Self {
         let pair: Vec<String> = vec!["gtx1070".into(), "rtx2080".into()];
         TransferPlan {
             benchmarks: vec!["coulomb".into(), "transpose".into()],
             source_gpus: pair.clone(),
+            source_inputs: vec!["default".into(), "alt".into()],
             target_gpus: pair,
+            target_inputs: vec!["default".into(), "alt".into()],
+            model: ModelSource::Oracle,
             searchers: vec!["random".into(), "profile".into()],
             seeds: 2,
             base_seed,
@@ -135,21 +211,71 @@ impl TransferPlan {
         }
     }
 
-    /// Expand into jobs, in deterministic plan order.
+    /// Expand into jobs, in deterministic plan order. Input selectors
+    /// are resolved to concrete input names here (via the same
+    /// [`resolve_input`] the validator uses), so specs, report keys
+    /// and RNG tags always carry canonical names no matter how the
+    /// plan spelled the axis — and selectors that resolve to the
+    /// *same* input (`--inputs default,2048x2048` on GEMM) collapse to
+    /// one axis entry per benchmark, so a cell is never expanded (and
+    /// its aggregate never double-counted) twice.
     pub fn jobs(&self) -> Vec<TransferJobSpec> {
         let mut out = Vec::new();
         for b in &self.benchmarks {
+            let bench = benchmarks::by_name(b);
+            // (resolved name, is the benchmark's default input)
+            let resolve = |sel: &str| -> (String, bool) {
+                match bench
+                    .as_ref()
+                    .and_then(|bn| resolve_input(bn.as_ref(), sel))
+                {
+                    Some(input) => {
+                        let is_default = bench
+                            .as_ref()
+                            .map(|bn| bn.default_input().name == input.name)
+                            .unwrap_or(false);
+                        (input.name, is_default)
+                    }
+                    // unvalidated plan: pass the selector through so
+                    // validation still names the offender
+                    None => (
+                        sel.to_string(),
+                        sel == benchmarks::DEFAULT_INPUT_SELECTOR,
+                    ),
+                }
+            };
+            // resolved axes, order-preserving, deduped by concrete name
+            let resolve_axis = |sels: &[String]| -> Vec<(String, bool)> {
+                let mut axis: Vec<(String, bool)> = Vec::new();
+                for sel in sels {
+                    let entry = resolve(sel);
+                    if !axis.iter().any(|(n, _)| *n == entry.0) {
+                        axis.push(entry);
+                    }
+                }
+                axis
+            };
+            let source_inputs = resolve_axis(&self.source_inputs);
+            let target_inputs = resolve_axis(&self.target_inputs);
             for s in &self.source_gpus {
-                for t in &self.target_gpus {
-                    for sr in &self.searchers {
-                        for lane in 0..self.seeds {
-                            out.push(TransferJobSpec {
-                                benchmark: b.clone(),
-                                source_gpu: s.clone(),
-                                target_gpu: t.clone(),
-                                searcher: sr.clone(),
-                                lane,
-                            });
+                for (source_input, _) in &source_inputs {
+                    for t in &self.target_gpus {
+                        for (target_input, target_default) in &target_inputs
+                        {
+                            for sr in &self.searchers {
+                                for lane in 0..self.seeds {
+                                    out.push(TransferJobSpec {
+                                        benchmark: b.clone(),
+                                        source_gpu: s.clone(),
+                                        source_input: source_input.clone(),
+                                        target_gpu: t.clone(),
+                                        target_input: target_input.clone(),
+                                        target_default: *target_default,
+                                        searcher: sr.clone(),
+                                        lane,
+                                    });
+                                }
+                            }
                         }
                     }
                 }
@@ -161,11 +287,15 @@ impl TransferPlan {
     /// Resolve every name up front (shared helpers with
     /// [`super::ExperimentPlan`]) so job closures cannot fail later —
     /// in particular, a benchmark with no recordable space is a typed
-    /// [`PlanError::NoRecording`], not a silent multi-hour hang.
+    /// [`PlanError::NoRecording`] and an input selector some benchmark
+    /// cannot resolve is a typed [`PlanError::UnknownInput`], not a
+    /// panic inside the fan-out.
     pub fn validate(&self) -> Result<(), PlanError> {
         validate_benchmarks("benchmarks", &self.benchmarks)?;
         validate_gpus("source_gpus", &self.source_gpus)?;
         validate_gpus("target_gpus", &self.target_gpus)?;
+        validate_inputs("source_inputs", &self.benchmarks, &self.source_inputs)?;
+        validate_inputs("target_inputs", &self.benchmarks, &self.target_inputs)?;
         validate_searchers("searchers", &self.searchers)?;
         if self.seeds == 0 {
             return Err(PlanError::EmptyAxis("seeds"));
@@ -177,7 +307,10 @@ impl TransferPlan {
         obj(vec![
             ("benchmarks", Value::from(self.benchmarks.clone())),
             ("source_gpus", Value::from(self.source_gpus.clone())),
+            ("source_inputs", Value::from(self.source_inputs.clone())),
             ("target_gpus", Value::from(self.target_gpus.clone())),
+            ("target_inputs", Value::from(self.target_inputs.clone())),
+            ("model", Value::from(self.model.name())),
             ("searchers", Value::from(self.searchers.clone())),
             ("seeds", Value::from(self.seeds)),
             // string for the same 2^53 reason as ExperimentPlan
@@ -188,34 +321,80 @@ impl TransferPlan {
     }
 }
 
-/// One independent job of the transfer matrix.
+/// One independent job of the transfer matrix. Input fields carry
+/// *resolved* concrete names, not selectors.
 #[derive(Debug, Clone)]
 pub struct TransferJobSpec {
     pub benchmark: String,
     pub source_gpu: String,
+    pub source_input: String,
     pub target_gpu: String,
+    pub target_input: String,
+    /// Is `target_input` the benchmark's default input? (Decides the
+    /// RNG tag shape — see [`rng_seed`](TransferJobSpec::rng_seed).)
+    pub target_default: bool,
     pub searcher: String,
     /// Repetition index within the cell.
     pub lane: usize,
 }
 
 impl TransferJobSpec {
-    /// The job's private RNG stream seed. Keyed by the *target* GPU
-    /// only (not the source): identical to
-    /// [`super::JobSpec::rng_seed`] for the same (benchmark, GPU,
-    /// searcher, lane), which is what makes same-GPU transfer cells
-    /// reproduce `ExperimentPlan` results bit-for-bit, and which
-    /// pairs every source column on common random numbers.
+    /// The job's private RNG stream seed. Keyed by the *target*
+    /// endpoint only (GPU + input, never the source or the model
+    /// kind), which pairs every source column and both model kinds on
+    /// common random numbers. The default target input adds **no**
+    /// tag: the stream collapses to [`super::JobSpec::rng_seed`] for
+    /// the same (benchmark, GPU, searcher, lane), which is what makes
+    /// same-(GPU, default input) transfer cells reproduce
+    /// `ExperimentPlan` results bit-for-bit.
     ///
     /// Names are hashed *verbatim* as stream tags: alias spellings
     /// (`GTX-1070` vs `gtx1070`) would produce different streams, so
-    /// the CLI canonicalizes axis names before building the plan.
+    /// the CLI canonicalizes GPU names and [`TransferPlan::jobs`]
+    /// resolves input selectors before any stream is derived.
     pub fn rng_seed(&self, base_seed: u64) -> u64 {
-        stream_seed(
-            base_seed,
-            &[&self.benchmark, &self.target_gpu, &self.searcher],
-            self.lane as u64,
-        )
+        if self.target_default {
+            stream_seed(
+                base_seed,
+                &[&self.benchmark, &self.target_gpu, &self.searcher],
+                self.lane as u64,
+            )
+        } else {
+            stream_seed(
+                base_seed,
+                &[
+                    &self.benchmark,
+                    &self.target_gpu,
+                    &self.target_input,
+                    &self.searcher,
+                ],
+                self.lane as u64,
+            )
+        }
+    }
+}
+
+/// Report cell coordinates: everything but the lane.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CellId {
+    pub benchmark: String,
+    pub source_gpu: String,
+    pub source_input: String,
+    pub target_gpu: String,
+    pub target_input: String,
+    pub searcher: String,
+}
+
+impl CellId {
+    fn of(spec: &TransferJobSpec) -> CellId {
+        CellId {
+            benchmark: spec.benchmark.clone(),
+            source_gpu: spec.source_gpu.clone(),
+            source_input: spec.source_input.clone(),
+            target_gpu: spec.target_gpu.clone(),
+            target_input: spec.target_input.clone(),
+            searcher: spec.searcher.clone(),
+        }
     }
 }
 
@@ -243,21 +422,26 @@ pub struct TransferJobResult {
     pub steps_to_within: Option<usize>,
     /// Simulated tuning cost, seconds.
     pub cost_s: f64,
-    /// Per-step runtimes, kept for curve aggregation (never serialized
-    /// per job — cells serialize aggregated curves). Empty unless the
-    /// plan asked for curves: a full 16k-job matrix would otherwise
-    /// retain ~100 MB of traces it never reads (the per-job statistics
-    /// above are computed before the trace is dropped).
+    /// Per-step runtimes, kept for step-curve aggregation (never
+    /// serialized per job — cells serialize aggregated curves). Empty
+    /// unless the plan asked for curves: a full 16k-job matrix would
+    /// otherwise retain ~100 MB of traces it never reads (the per-job
+    /// statistics above are computed before the trace is dropped).
     pub runtimes: Vec<f64>,
+    /// (cumulative cost s, best-so-far ms) staircase, kept for
+    /// time-domain curve aggregation under the same `include_curves`
+    /// gate as `runtimes`.
+    pub staircase: Vec<(f64, f64)>,
 }
 
-/// Shared per-(benchmark, source, target) context.
+/// Shared per-(benchmark, source endpoint, target endpoint) context.
 struct TransferCell {
     rec_target: Arc<RecordedSpace>,
     gpu_target: GpuSpec,
-    /// Source-GPU model matrix — the same `Arc` for every target cell
-    /// and repetition when the counter generations agree; a restricted
-    /// copy (intersection of the two generations' counters) otherwise.
+    /// Source-endpoint model matrix — the same `Arc` for every target
+    /// cell and repetition when the counter generations agree; a
+    /// restricted copy (intersection of the two generations' counters)
+    /// otherwise.
     matrix: Arc<PredictionMatrix>,
     inst_reaction: f64,
     /// 1.1× early-stop threshold on the target.
@@ -277,8 +461,9 @@ fn run_transfer_job(
     // measurable instead of being censored by the 1.1× stop. For
     // within_frac >= 0.10 (every shipped plan) this is bit-identical
     // to oracle × 1.1 (1.0 + 0.10 rounds to the same f64 as 1.1), so
-    // the same-GPU ExperimentPlan reproduction contract is unaffected;
-    // a stricter plan trades that contract for an unbiased metric.
+    // the same-(GPU, input) ExperimentPlan reproduction contract is
+    // unaffected; a stricter plan trades that contract for an
+    // unbiased metric.
     let stop_ms = cell
         .thr_ms
         .min(cell.oracle_best_ms * (1.0 + plan.within_frac));
@@ -306,6 +491,11 @@ fn run_transfer_job(
             plan.within_frac,
         ),
         cost_s: result.cost_s,
+        staircase: if plan.include_curves {
+            result.trace.convergence()
+        } else {
+            Vec::new()
+        },
         runtimes: if plan.include_curves {
             runtimes
         } else {
@@ -314,13 +504,15 @@ fn run_transfer_job(
     }
 }
 
-/// Aggregated statistics for one (benchmark, source, target, searcher)
-/// cell: per-cell medians with bootstrap confidence intervals.
+/// Aggregated statistics for one cell: per-cell medians with bootstrap
+/// confidence intervals.
 #[derive(Debug, Clone)]
 pub struct TransferAggregate {
     pub benchmark: String,
     pub source_gpu: String,
+    pub source_input: String,
     pub target_gpu: String,
+    pub target_input: String,
     pub searcher: String,
     pub runs: usize,
     pub wp_hits: usize,
@@ -336,39 +528,31 @@ pub struct TransferAggregate {
 }
 
 /// A completed transfer plan: per-job results in plan order, plus the
-/// per-cell counter-restriction record.
+/// per-GPU-pair counter-restriction record.
 pub struct TransferReport {
     pub plan: TransferPlan,
     pub results: Vec<TransferJobResult>,
-    /// (benchmark, source, target) → dropped counter abbreviations.
+    /// (benchmark, source GPU, target GPU) → dropped counter
+    /// abbreviations (restriction depends only on the GPU generations,
+    /// never on the inputs).
     pub dropped: BTreeMap<(String, String, String), Vec<String>>,
     /// Per-cell aggregates (sorted key order), computed once at
     /// construction — serialization, the CLI summary and the table
-    /// renderer all read this cache instead of re-running the
+    /// renderers all read this cache instead of re-running the
     /// per-cell bootstrap.
     aggregates: Vec<TransferAggregate>,
 }
 
-/// Report cell key: (benchmark, source, target, searcher).
-type CellKey = (String, String, String, String);
-
-/// The one per-cell group-by shared by aggregates and curves, so the
-/// two can never partition the same report differently.
+/// The one per-cell group-by shared by aggregates and both curve
+/// domains, so the three can never partition the same report
+/// differently.
 fn group_by_cell<'a, T>(
     results: &'a [TransferJobResult],
     value: impl Fn(&'a TransferJobResult) -> T,
-) -> BTreeMap<CellKey, Vec<T>> {
-    let mut cells: BTreeMap<CellKey, Vec<T>> = BTreeMap::new();
+) -> BTreeMap<CellId, Vec<T>> {
+    let mut cells: BTreeMap<CellId, Vec<T>> = BTreeMap::new();
     for r in results {
-        cells
-            .entry((
-                r.spec.benchmark.clone(),
-                r.spec.source_gpu.clone(),
-                r.spec.target_gpu.clone(),
-                r.spec.searcher.clone(),
-            ))
-            .or_default()
-            .push(value(r));
+        cells.entry(CellId::of(&r.spec)).or_default().push(value(r));
     }
     cells
 }
@@ -381,7 +565,7 @@ fn compute_aggregates(
 ) -> Vec<TransferAggregate> {
     group_by_cell(results, |r| r)
         .into_iter()
-        .map(|((benchmark, source_gpu, target_gpu, searcher), rs)| {
+        .map(|(id, rs)| {
             // unreached-threshold runs count their full length,
             // like ExperimentPlan's aggregates
             let steps: Vec<f64> = rs
@@ -392,7 +576,15 @@ fn compute_aggregates(
             let costs: Vec<f64> = rs.iter().map(|r| r.cost_s).collect();
             let ci_seed = stream_seed(
                 plan.base_seed,
-                &[&benchmark, &source_gpu, &target_gpu, &searcher, "ci"],
+                &[
+                    &id.benchmark,
+                    &id.source_gpu,
+                    &id.source_input,
+                    &id.target_gpu,
+                    &id.target_input,
+                    &id.searcher,
+                    "ci",
+                ],
                 0,
             );
             let tests_to_wp_ci = bootstrap_ci(
@@ -403,9 +595,9 @@ fn compute_aggregates(
             );
             let cell_dropped = dropped
                 .get(&(
-                    benchmark.clone(),
-                    source_gpu.clone(),
-                    target_gpu.clone(),
+                    id.benchmark.clone(),
+                    id.source_gpu.clone(),
+                    id.target_gpu.clone(),
                 ))
                 .cloned()
                 .unwrap_or_default();
@@ -421,10 +613,12 @@ fn compute_aggregates(
                 median_best_over_oracle: median(&overs),
                 mean_cost_s: mean(&costs),
                 dropped_counters: cell_dropped,
-                benchmark,
-                source_gpu,
-                target_gpu,
-                searcher,
+                benchmark: id.benchmark,
+                source_gpu: id.source_gpu,
+                source_input: id.source_input,
+                target_gpu: id.target_gpu,
+                target_input: id.target_input,
+                searcher: id.searcher,
             }
         })
         .collect()
@@ -454,7 +648,7 @@ impl TransferReport {
     /// Per-cell aggregated best-so-far step curves (sorted key order).
     /// Curves are empty when the plan did not ask for them — per-job
     /// traces are dropped at job completion in that case.
-    pub fn step_curves(&self) -> Vec<(CellKey, Vec<StepCurvePoint>)> {
+    pub fn step_curves(&self) -> Vec<(CellId, Vec<StepCurvePoint>)> {
         // borrow the per-job traces: cloning 16k × 1000-step traces
         // per call would dwarf the aggregation itself
         group_by_cell(&self.results, |r| r.runtimes.as_slice())
@@ -463,8 +657,24 @@ impl TransferReport {
             .collect()
     }
 
+    /// Per-cell aggregated best-so-far curves over the simulated
+    /// tuning-cost axis (sorted key order) — the time-domain view the
+    /// benchmarking literature asks searcher comparisons to include.
+    /// Empty like [`step_curves`](TransferReport::step_curves) when
+    /// the plan did not ask for curves.
+    pub fn time_curves(&self) -> Vec<(CellId, Vec<ConvergencePoint>)> {
+        group_by_cell(&self.results, |r| r.staircase.as_slice())
+            .into_iter()
+            .map(|(k, st)| {
+                let pts = aggregate_time_curves(&st, TIME_GRID_POINTS);
+                (k, pts)
+            })
+            .collect()
+    }
+
     /// Deterministic JSON document: plan echo, per-job records (plan
-    /// order), per-cell aggregates and (optionally) step curves.
+    /// order), per-cell aggregates and (optionally) step- plus
+    /// time-domain curves.
     pub fn to_json(&self) -> Value {
         let jobs: Vec<Value> = self
             .results
@@ -473,7 +683,15 @@ impl TransferReport {
                 obj(vec![
                     ("benchmark", Value::from(r.spec.benchmark.clone())),
                     ("source_gpu", Value::from(r.spec.source_gpu.clone())),
+                    (
+                        "source_input",
+                        Value::from(r.spec.source_input.clone()),
+                    ),
                     ("target_gpu", Value::from(r.spec.target_gpu.clone())),
+                    (
+                        "target_input",
+                        Value::from(r.spec.target_input.clone()),
+                    ),
                     ("searcher", Value::from(r.spec.searcher.clone())),
                     ("lane", Value::from(r.spec.lane)),
                     ("best_ms", Value::from(r.best_ms)),
@@ -502,7 +720,9 @@ impl TransferReport {
                 obj(vec![
                     ("benchmark", Value::from(a.benchmark.clone())),
                     ("source_gpu", Value::from(a.source_gpu.clone())),
+                    ("source_input", Value::from(a.source_input.clone())),
                     ("target_gpu", Value::from(a.target_gpu.clone())),
+                    ("target_input", Value::from(a.target_input.clone())),
                     ("searcher", Value::from(a.searcher.clone())),
                     ("runs", Value::from(a.runs)),
                     ("wp_hits", Value::from(a.wp_hits)),
@@ -527,21 +747,29 @@ impl TransferReport {
             .collect();
 
         let mut fields = vec![
-            ("schema", Value::from("pcat-transfer-report/v1")),
+            ("schema", Value::from("pcat-transfer-report/v2")),
             ("plan", self.plan.to_json()),
             ("jobs", Value::Arr(jobs)),
             ("aggregates", Value::Arr(aggregates)),
         ];
         if self.plan.include_curves {
-            let curves: Vec<Value> = self
-                .step_curves()
+            // one entry per cell carrying BOTH curve domains; the two
+            // group-bys share group_by_cell, so the zip below pairs
+            // identical keys by construction (asserted anyway)
+            let steps = self.step_curves();
+            let times = self.time_curves();
+            let curves: Vec<Value> = steps
                 .into_iter()
-                .map(|((b, s, t, sr), pts)| {
+                .zip(times)
+                .map(|((id, pts), (tid, tpts))| {
+                    debug_assert_eq!(id, tid);
                     obj(vec![
-                        ("benchmark", Value::from(b)),
-                        ("source_gpu", Value::from(s)),
-                        ("target_gpu", Value::from(t)),
-                        ("searcher", Value::from(sr)),
+                        ("benchmark", Value::from(id.benchmark)),
+                        ("source_gpu", Value::from(id.source_gpu)),
+                        ("source_input", Value::from(id.source_input)),
+                        ("target_gpu", Value::from(id.target_gpu)),
+                        ("target_input", Value::from(id.target_input)),
+                        ("searcher", Value::from(id.searcher)),
                         (
                             "points",
                             Value::Arr(
@@ -556,6 +784,26 @@ impl TransferReport {
                                             (
                                                 "mean_ms",
                                                 Value::from(p.mean_ms),
+                                            ),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                        (
+                            "time",
+                            Value::Arr(
+                                tpts.iter()
+                                    .map(|p| {
+                                        obj(vec![
+                                            ("t_s", Value::from(p.t_s)),
+                                            (
+                                                "mean_ms",
+                                                Value::from(p.mean_ms),
+                                            ),
+                                            (
+                                                "std_ms",
+                                                Value::from(p.std_ms),
                                             ),
                                         ])
                                     })
@@ -591,11 +839,13 @@ impl TransferReport {
             .iter()
             .map(|a| {
                 format!(
-                    "{:<12} {:>8} -> {:<8} {:<14} steps {:>6.1} \
+                    "{:<12} {}:{} -> {}:{} {:<10} steps {:>6.1} \
                      [{:>6.1}, {:>6.1}]  best {:>5.2}x oracle{}",
                     a.benchmark,
                     a.source_gpu,
+                    a.source_input,
                     a.target_gpu,
+                    a.target_input,
                     a.searcher,
                     a.median_tests_to_wp,
                     a.tests_to_wp_ci.0,
@@ -612,66 +862,139 @@ impl TransferReport {
     }
 }
 
+/// Build the source-side prediction matrix for one (benchmark, source
+/// GPU, source input) recording, per the plan's [`ModelSource`].
+///
+/// The tree path is deterministic by construction: the training RNG
+/// stream is keyed by the source coordinates (never by scheduling),
+/// the dataset is the full recording in canonical space order
+/// ([`dataset_full`]), and [`DecisionTreeModel::train`] collects its
+/// per-counter trees in `MODELED_COUNTERS` order regardless of thread
+/// interleaving — so `--jobs 1` and `--jobs 8` build bit-identical
+/// matrices.
+fn build_source_matrix(
+    model: ModelSource,
+    base_seed: u64,
+    benchmark: &str,
+    source_gpu: &str,
+    source_input: &str,
+    rec: &RecordedSpace,
+) -> PredictionMatrix {
+    match model {
+        ModelSource::Oracle => PredictionMatrix::from_recorded(rec),
+        ModelSource::Tree => {
+            let mut rng = Rng::new(stream_seed(
+                base_seed,
+                &[benchmark, source_gpu, source_input, "train"],
+                0,
+            ));
+            let ds = dataset_full(rec);
+            let tree = DecisionTreeModel::train(
+                &ds,
+                &format!("{source_gpu}/{source_input}"),
+                &mut rng,
+            );
+            PredictionMatrix::build(&rec.space, &tree)
+        }
+    }
+}
+
 /// Execute a transfer plan with up to `jobs` worker threads.
 ///
 /// Three deterministic pre-passes on the shared pool precede the
-/// fan-out: (1) record every distinct (benchmark, GPU) space once (the
-/// process cache dedupes against everything else in the process);
-/// (2) build every distinct (benchmark, source) prediction matrix once;
-/// (3) assemble per-(benchmark, source, target) cells, reusing the
-/// source matrix `Arc` whenever the counter generations agree and one
-/// restricted copy per distinct target generation when they do not.
-/// The fan-out then only replays cached data, so worker count affects
-/// wall-clock and nothing else.
+/// fan-out: (1) record every distinct (benchmark, GPU, input) endpoint
+/// once (the process cache dedupes against everything else in the
+/// process); (2) build — and for [`ModelSource::Tree`], train — every
+/// distinct (benchmark, source GPU, source input) prediction matrix
+/// once; (3) assemble per-(benchmark, source endpoint, target
+/// endpoint) cells, reusing the source matrix `Arc` whenever the
+/// counter generations agree and one restricted copy per distinct
+/// target generation when they do not. The fan-out then only replays
+/// cached data, so worker count affects wall-clock and nothing else.
 pub fn run_transfer_plan(
     plan: &TransferPlan,
     jobs: usize,
 ) -> Result<TransferReport> {
     plan.validate()?;
 
-    // distinct GPU axis (sources ∪ targets), order-preserving
-    let mut gpu_axis: Vec<String> = Vec::new();
-    for g in plan.source_gpus.iter().chain(&plan.target_gpus) {
-        if !gpu_axis.contains(g) {
-            gpu_axis.push(g.clone());
+    // resolved (benchmark, selector) → Input, shared by both axes
+    let mut sel_inputs: BTreeMap<(String, String), Input> = BTreeMap::new();
+    for b in &plan.benchmarks {
+        let bench = benchmarks::by_name(b).expect("validated");
+        for sel in plan.source_inputs.iter().chain(&plan.target_inputs) {
+            sel_inputs
+                .entry((b.clone(), sel.clone()))
+                .or_insert_with(|| {
+                    resolve_input(bench.as_ref(), sel).expect("validated")
+                });
         }
     }
 
-    // (1) recordings
-    let rec_keys: Vec<(String, String)> = plan
-        .benchmarks
-        .iter()
-        .flat_map(|b| gpu_axis.iter().map(move |g| (b.clone(), g.clone())))
-        .collect();
-    let recs_v = pool::par_map_jobs(rec_keys.len(), jobs, &|i| {
-        let (b, g) = &rec_keys[i];
-        let bench = benchmarks::by_name(b).expect("validated");
-        let gpu = GpuSpec::by_name(g).expect("validated");
-        cached_space(bench.as_ref(), &gpu, &bench.default_input())
-    });
-    let recs: BTreeMap<(String, String), Arc<RecordedSpace>> =
-        rec_keys.into_iter().zip(recs_v).collect();
-
-    // (2) one prediction matrix per distinct (benchmark, source)
-    let mut src_keys: Vec<(String, String)> = Vec::new();
-    for b in &plan.benchmarks {
-        for s in &plan.source_gpus {
-            let k = (b.clone(), s.clone());
-            if !src_keys.contains(&k) {
-                src_keys.push(k);
+    // (1) recordings: distinct (benchmark, GPU, input) endpoints,
+    // order-preserving (sources before targets)
+    let mut rec_keys: Vec<(String, String, Input)> = Vec::new();
+    {
+        let mut seen: BTreeSet<(String, String, String)> = BTreeSet::new();
+        for b in &plan.benchmarks {
+            for (gpus, sels) in [
+                (&plan.source_gpus, &plan.source_inputs),
+                (&plan.target_gpus, &plan.target_inputs),
+            ] {
+                for g in gpus.iter() {
+                    for sel in sels.iter() {
+                        let input = &sel_inputs[&(b.clone(), sel.clone())];
+                        if seen.insert((
+                            b.clone(),
+                            g.clone(),
+                            input.name.clone(),
+                        )) {
+                            rec_keys.push((b.clone(), g.clone(), input.clone()));
+                        }
+                    }
+                }
             }
         }
     }
-    let mats_v = pool::par_map_jobs(src_keys.len(), jobs, &|i| {
-        let rec = &recs[&src_keys[i]];
-        Arc::new(PredictionMatrix::from_recorded(rec))
+    let recs_v = pool::par_map_jobs(rec_keys.len(), jobs, &|i| {
+        let (b, g, input) = &rec_keys[i];
+        let bench = benchmarks::by_name(b).expect("validated");
+        let gpu = GpuSpec::by_name(g).expect("validated");
+        cached_space(bench.as_ref(), &gpu, input)
     });
-    let matrices: BTreeMap<(String, String), Arc<PredictionMatrix>> =
+    let recs: BTreeMap<(String, String, String), Arc<RecordedSpace>> = rec_keys
+        .iter()
+        .map(|(b, g, i)| (b.clone(), g.clone(), i.name.clone()))
+        .zip(recs_v)
+        .collect();
+
+    // (2) one prediction matrix per distinct (benchmark, source GPU,
+    // source input) — trained here for the tree source, so training
+    // cost is paid once per endpoint, not once per cell
+    let mut src_keys: Vec<(String, String, String)> = Vec::new();
+    for b in &plan.benchmarks {
+        for s in &plan.source_gpus {
+            for sel in &plan.source_inputs {
+                let name = sel_inputs[&(b.clone(), sel.clone())].name.clone();
+                let k = (b.clone(), s.clone(), name);
+                if !src_keys.contains(&k) {
+                    src_keys.push(k);
+                }
+            }
+        }
+    }
+    let model = plan.model;
+    let base_seed = plan.base_seed;
+    let mats_v = pool::par_map_jobs(src_keys.len(), jobs, &|i| {
+        let (b, g, input) = &src_keys[i];
+        let rec = &recs[&src_keys[i]];
+        Arc::new(build_source_matrix(model, base_seed, b, g, input, rec))
+    });
+    let matrices: BTreeMap<(String, String, String), Arc<PredictionMatrix>> =
         src_keys.into_iter().zip(mats_v).collect();
 
     // (3) cells
-    let mut cells: BTreeMap<(String, String, String), TransferCell> =
-        BTreeMap::new();
+    type EndpointKey = (String, String, String, String, String);
+    let mut cells: BTreeMap<EndpointKey, TransferCell> = BTreeMap::new();
     let mut dropped: BTreeMap<(String, String, String), Vec<String>> =
         BTreeMap::new();
     for b in &plan.benchmarks {
@@ -684,58 +1007,78 @@ pub fn run_transfer_plan(
         for s in &plan.source_gpus {
             let gpu_source = GpuSpec::by_name(s).expect("validated");
             let src_set = gpu_source.counter_set();
-            let base = &matrices[&(b.clone(), s.clone())];
-            // restriction depends only on the target's counter
-            // generation, so all cross-generation targets of one
-            // source share a single restricted Arc instead of cloning
-            // the dense data per cell
-            let mut restricted: Vec<(CounterSet, Arc<PredictionMatrix>)> =
-                Vec::new();
-            for t in &plan.target_gpus {
-                let key = (b.clone(), s.clone(), t.clone());
-                if cells.contains_key(&key) {
-                    continue;
+            for s_sel in &plan.source_inputs {
+                let si =
+                    sel_inputs[&(b.clone(), s_sel.clone())].name.clone();
+                let base = &matrices[&(b.clone(), s.clone(), si.clone())];
+                // restriction depends only on the target's counter
+                // generation, so all cross-generation targets of one
+                // source matrix share a single restricted Arc instead
+                // of cloning the dense data per cell
+                let mut restricted: Vec<(CounterSet, Arc<PredictionMatrix>)> =
+                    Vec::new();
+                for t in &plan.target_gpus {
+                    let gpu_target = GpuSpec::by_name(t).expect("validated");
+                    let tgt_set = gpu_target.counter_set();
+                    // owned lookup first: an `if let` on the cache's
+                    // iter would hold the borrow across the arm that
+                    // pushes
+                    let cached = restricted
+                        .iter()
+                        .find(|(set, _)| *set == tgt_set)
+                        .map(|(_, m)| Arc::clone(m));
+                    let matrix = if src_set == tgt_set {
+                        Arc::clone(base)
+                    } else if let Some(m) = cached {
+                        m
+                    } else {
+                        let m = Arc::new(
+                            base.as_ref()
+                                .clone()
+                                .restricted_to(src_set, tgt_set),
+                        );
+                        restricted.push((tgt_set, Arc::clone(&m)));
+                        m
+                    };
+                    let drops: Vec<String> = matrix
+                        .dropped_counters()
+                        .iter()
+                        .map(|c| c.abbr().to_string())
+                        .collect();
+                    dropped
+                        .entry((b.clone(), s.clone(), t.clone()))
+                        .or_insert(drops);
+                    for t_sel in &plan.target_inputs {
+                        let ti = sel_inputs[&(b.clone(), t_sel.clone())]
+                            .name
+                            .clone();
+                        let key = (
+                            b.clone(),
+                            s.clone(),
+                            si.clone(),
+                            t.clone(),
+                            ti.clone(),
+                        );
+                        if cells.contains_key(&key) {
+                            continue;
+                        }
+                        let rec_target = Arc::clone(
+                            &recs[&(b.clone(), t.clone(), ti.clone())],
+                        );
+                        let oracle_best_ms = rec_target.best_time();
+                        cells.insert(
+                            key,
+                            TransferCell {
+                                rec_target,
+                                gpu_target: gpu_target.clone(),
+                                matrix: Arc::clone(&matrix),
+                                inst_reaction,
+                                thr_ms: oracle_best_ms * 1.1,
+                                oracle_best_ms,
+                            },
+                        );
+                    }
                 }
-                let gpu_target = GpuSpec::by_name(t).expect("validated");
-                let tgt_set = gpu_target.counter_set();
-                // owned lookup first: an `if let` on the cache's iter
-                // would hold the borrow across the arm that pushes
-                let cached = restricted
-                    .iter()
-                    .find(|(set, _)| *set == tgt_set)
-                    .map(|(_, m)| Arc::clone(m));
-                let matrix = if src_set == tgt_set {
-                    Arc::clone(base)
-                } else if let Some(m) = cached {
-                    m
-                } else {
-                    let m = Arc::new(
-                        base.as_ref()
-                            .clone()
-                            .restricted_to(src_set, tgt_set),
-                    );
-                    restricted.push((tgt_set, Arc::clone(&m)));
-                    m
-                };
-                let drops: Vec<String> = matrix
-                    .dropped_counters()
-                    .iter()
-                    .map(|c| c.abbr().to_string())
-                    .collect();
-                let rec_target = Arc::clone(&recs[&(b.clone(), t.clone())]);
-                let oracle_best_ms = rec_target.best_time();
-                dropped.insert(key.clone(), drops);
-                cells.insert(
-                    key,
-                    TransferCell {
-                        rec_target,
-                        gpu_target,
-                        matrix,
-                        inst_reaction,
-                        thr_ms: oracle_best_ms * 1.1,
-                        oracle_best_ms,
-                    },
-                );
             }
         }
     }
@@ -744,16 +1087,16 @@ pub fn run_transfer_plan(
     // read the source matrix ([`reads_model`], kept next to the
     // dispatch in plan.rs) can differ across sources — for every
     // other searcher a job's outcome is a pure function of
-    // (benchmark, target, searcher, lane) (the RNG stream
-    // deliberately ignores the source), so the full 4×4 matrix would
-    // re-run each random baseline identically once per source column.
-    // Run each distinct job once and replicate the result into every
-    // source row (same values, relabelled spec) — byte-identical to
-    // the naive fan-out.
+    // (benchmark, target GPU, target input, searcher, lane) (the RNG
+    // stream deliberately ignores the source), so the full matrix
+    // would re-run each random baseline identically once per source
+    // column. Run each distinct job once and replicate the result
+    // into every source row (same values, relabelled spec) —
+    // byte-identical to the naive fan-out.
     let specs = plan.jobs();
     let mut unique: Vec<usize> = Vec::new();
     let mut run_of: Vec<usize> = Vec::with_capacity(specs.len());
-    let mut seen: BTreeMap<(String, String, String, usize), usize> =
+    let mut seen: BTreeMap<(String, String, String, String, usize), usize> =
         BTreeMap::new();
     for (i, s) in specs.iter().enumerate() {
         if reads_model(&s.searcher) {
@@ -764,6 +1107,7 @@ pub fn run_transfer_plan(
         let key = (
             s.benchmark.clone(),
             s.target_gpu.clone(),
+            s.target_input.clone(),
             s.searcher.clone(),
             s.lane,
         );
@@ -780,7 +1124,9 @@ pub fn run_transfer_plan(
         let cell = &cells[&(
             spec.benchmark.clone(),
             spec.source_gpu.clone(),
+            spec.source_input.clone(),
             spec.target_gpu.clone(),
+            spec.target_input.clone(),
         )];
         run_transfer_job(spec, plan, cell)
     });
@@ -805,7 +1151,10 @@ mod tests {
         TransferPlan {
             benchmarks: vec!["coulomb".into()],
             source_gpus: vec!["gtx1070".into(), "rtx2080".into()],
+            source_inputs: vec!["default".into()],
             target_gpus: vec!["gtx1070".into()],
+            target_inputs: vec!["default".into()],
+            model: ModelSource::Oracle,
             searchers: vec!["random".into(), "profile".into()],
             seeds: 2,
             base_seed: 5,
@@ -816,17 +1165,73 @@ mod tests {
     }
 
     #[test]
+    fn model_source_parses_and_names() {
+        assert_eq!(ModelSource::parse("oracle"), Some(ModelSource::Oracle));
+        assert_eq!(ModelSource::parse("Tree"), Some(ModelSource::Tree));
+        assert_eq!(
+            ModelSource::parse("decision_tree"),
+            Some(ModelSource::Tree)
+        );
+        assert_eq!(ModelSource::parse("svm"), None);
+        assert_eq!(ModelSource::Oracle.name(), "oracle");
+        assert_eq!(ModelSource::Tree.name(), "tree");
+    }
+
+    #[test]
     fn plan_expansion_order_and_count() {
         let plan = TransferPlan::smoke(0);
         let jobs = plan.jobs();
-        assert_eq!(jobs.len(), 2 * 2 * 2 * 2 * 2);
+        // b × sg × si × tg × ti × searcher × lane
+        assert_eq!(jobs.len(), 2 * 2 * 2 * 2 * 2 * 2 * 2);
         assert_eq!(jobs[0].benchmark, "coulomb");
         assert_eq!(jobs[0].source_gpu, "gtx1070");
+        assert_eq!(jobs[0].source_input, "grid256_atoms256");
         assert_eq!(jobs[0].target_gpu, "gtx1070");
+        assert_eq!(jobs[0].target_input, "grid256_atoms256");
+        assert!(jobs[0].target_default);
         assert_eq!(jobs[0].searcher, "random");
         assert_eq!(jobs[1].lane, 1);
         assert_eq!(jobs[2].searcher, "profile");
-        assert_eq!(jobs[4].target_gpu, "rtx2080");
+        // target-input axis flips after searchers × lanes
+        assert_eq!(jobs[4].target_input, "grid256_atoms64");
+        assert!(!jobs[4].target_default);
+        // target-GPU axis flips after inputs × searchers × lanes
+        assert_eq!(jobs[8].target_gpu, "rtx2080");
+        // source-input axis flips after the whole target block
+        assert_eq!(jobs[16].source_input, "grid256_atoms64");
+    }
+
+    #[test]
+    fn selectors_resolve_to_concrete_names() {
+        let mut plan = tiny();
+        plan.source_inputs = vec!["alt".into()];
+        plan.target_inputs = vec!["grid256_atoms256".into()];
+        let jobs = plan.jobs();
+        assert_eq!(jobs[0].source_input, "grid256_atoms64");
+        // a concrete spelling of the default input is still the
+        // default for RNG-tag purposes
+        assert_eq!(jobs[0].target_input, "grid256_atoms256");
+        assert!(jobs[0].target_default);
+    }
+
+    #[test]
+    fn overlapping_selectors_collapse_to_one_cell() {
+        // "default" and the default's concrete name resolve to the
+        // same input: the axis must dedup, or every cell would run
+        // twice and its aggregate double-count observations (runs,
+        // wp_hits, and a spuriously narrow bootstrap CI)
+        let mut plan = tiny();
+        plan.source_inputs =
+            vec!["default".into(), "grid256_atoms256".into()];
+        plan.target_inputs =
+            vec!["default".into(), "grid256_atoms256".into()];
+        assert!(plan.validate().is_ok());
+        assert_eq!(plan.jobs().len(), tiny().jobs().len());
+        let report = run_transfer_plan(&plan, 2).unwrap();
+        assert_eq!(report.results.len(), tiny().jobs().len());
+        for a in report.aggregate_rows() {
+            assert_eq!(a.runs, plan.seeds, "cell double-counted");
+        }
     }
 
     #[test]
@@ -846,6 +1251,21 @@ mod tests {
             plan.validate(),
             Err(PlanError::NoRecording("gemm-full".into()))
         );
+        let mut plan = tiny();
+        plan.source_inputs = vec![];
+        assert_eq!(
+            plan.validate(),
+            Err(PlanError::EmptyAxis("source_inputs"))
+        );
+        let mut plan = tiny();
+        plan.target_inputs = vec!["grid999".into()];
+        assert_eq!(
+            plan.validate(),
+            Err(PlanError::UnknownInput(
+                "coulomb".into(),
+                "grid999".into()
+            ))
+        );
         assert!(tiny().validate().is_ok());
         // and the runner surfaces it before recording anything
         let mut plan = tiny();
@@ -854,28 +1274,44 @@ mod tests {
     }
 
     #[test]
-    fn seed_streams_ignore_source_gpu() {
-        let plan = tiny();
+    fn seed_streams_ignore_source_endpoint_and_model() {
+        let mut plan = tiny();
+        plan.source_inputs = vec!["default".into(), "alt".into()];
         let jobs = plan.jobs();
-        // same (benchmark, target, searcher, lane), different source
+        // same (benchmark, target endpoint, searcher, lane), different
+        // source GPU and source input
         let a = jobs
             .iter()
-            .find(|j| j.source_gpu == "gtx1070" && j.searcher == "profile")
+            .find(|j| {
+                j.source_gpu == "gtx1070"
+                    && j.source_input == "grid256_atoms256"
+                    && j.searcher == "profile"
+            })
             .unwrap();
         let b = jobs
             .iter()
             .find(|j| {
                 j.source_gpu == "rtx2080"
+                    && j.source_input == "grid256_atoms64"
                     && j.searcher == "profile"
                     && j.lane == a.lane
             })
             .unwrap();
         assert_eq!(a.rng_seed(5), b.rng_seed(5));
-        // …but distinct across searchers and lanes
+        // the model kind is not part of the stream either: rng_seed
+        // reads only the spec, and specs carry no model field
+        // …but streams stay distinct across searchers and lanes
         assert_ne!(
             stream_seed(5, &["coulomb", "gtx1070", "random"], 0),
             stream_seed(5, &["coulomb", "gtx1070", "profile"], 0)
         );
+        // a non-default target input gets its own stream
+        let c = TransferJobSpec {
+            target_input: "grid256_atoms64".into(),
+            target_default: false,
+            ..a.clone()
+        };
+        assert_ne!(a.rng_seed(5), c.rng_seed(5));
     }
 
     #[test]
@@ -884,8 +1320,24 @@ mod tests {
         let a = run_transfer_plan(&plan, 1).unwrap().to_pretty_string();
         let b = run_transfer_plan(&plan, 8).unwrap().to_pretty_string();
         assert_eq!(a, b);
-        assert!(a.contains("\"schema\": \"pcat-transfer-report/v1\""));
+        assert!(a.contains("\"schema\": \"pcat-transfer-report/v2\""));
         assert!(a.contains("\"curves\""));
+        assert!(a.contains("\"time\""));
+        assert!(a.contains("\"model\": \"oracle\""));
+    }
+
+    #[test]
+    fn tree_model_runs_are_byte_identical_too() {
+        // the tree source trains models in the pre-pass; training must
+        // be a pure function of the plan, not of worker scheduling
+        let plan = TransferPlan {
+            model: ModelSource::Tree,
+            ..tiny()
+        };
+        let a = run_transfer_plan(&plan, 1).unwrap().to_pretty_string();
+        let b = run_transfer_plan(&plan, 8).unwrap().to_pretty_string();
+        assert_eq!(a, b);
+        assert!(a.contains("\"model\": \"tree\""));
     }
 
     #[test]
@@ -910,14 +1362,16 @@ mod tests {
     #[test]
     fn matrix_independent_searchers_are_shared_across_sources() {
         // random never reads the source model and its RNG stream
-        // ignores the source axis, so every source column must carry
+        // ignores the source axes, so every source column must carry
         // identical values while keeping its own spec label (the
         // deduplicated fan-out replicates instead of re-running)
-        let plan = tiny();
+        let mut plan = tiny();
+        plan.source_inputs = vec!["default".into(), "alt".into()];
         let report = run_transfer_plan(&plan, 4).unwrap();
         // results come back in plan order with faithful spec labels
         for (spec, r) in plan.jobs().iter().zip(&report.results) {
             assert_eq!(spec.source_gpu, r.spec.source_gpu);
+            assert_eq!(spec.source_input, r.spec.source_input);
             assert_eq!(spec.searcher, r.spec.searcher);
             assert_eq!(spec.lane, r.spec.lane);
         }
@@ -933,10 +1387,12 @@ mod tests {
                     o.spec.searcher == "random"
                         && o.spec.benchmark == r.spec.benchmark
                         && o.spec.target_gpu == r.spec.target_gpu
+                        && o.spec.target_input == r.spec.target_input
                         && o.spec.lane == r.spec.lane
-                        && o.spec.source_gpu != r.spec.source_gpu
+                        && (o.spec.source_gpu != r.spec.source_gpu
+                            || o.spec.source_input != r.spec.source_input)
                 })
-                .expect("two source columns in the tiny plan");
+                .expect("several source columns in the plan");
             assert_eq!(r.best_ms, twin.best_ms);
             assert_eq!(r.tests, twin.tests);
             assert_eq!(r.cost_s, twin.cost_s);
@@ -946,15 +1402,20 @@ mod tests {
     #[test]
     fn traces_are_dropped_when_curves_are_off() {
         // the full 16k-job matrix must not retain ~100 MB of per-step
-        // traces it never serializes: runtimes are kept only when the
-        // plan asks for curves, and every per-job statistic is already
-        // computed before the trace is dropped
+        // traces it never serializes: runtimes and staircases are kept
+        // only when the plan asks for curves, and every per-job
+        // statistic is already computed before the trace is dropped
         let mut plan = tiny();
         plan.include_curves = false;
         let report = run_transfer_plan(&plan, 2).unwrap();
         assert!(report.results.iter().all(|r| r.runtimes.is_empty()));
+        assert!(report.results.iter().all(|r| r.staircase.is_empty()));
         assert!(report
             .step_curves()
+            .iter()
+            .all(|(_, pts)| pts.is_empty()));
+        assert!(report
+            .time_curves()
             .iter()
             .all(|(_, pts)| pts.is_empty()));
         let text = report.to_pretty_string();
@@ -977,6 +1438,22 @@ mod tests {
                 "CI [{lo}, {hi}] excludes median {}",
                 a.median_tests_to_wp
             );
+        }
+    }
+
+    #[test]
+    fn time_curves_span_the_cost_axis() {
+        let report = run_transfer_plan(&tiny(), 2).unwrap();
+        for (id, pts) in report.time_curves() {
+            assert!(!pts.is_empty(), "{id:?}: empty time curve");
+            // grid is increasing in t and best-so-far non-increasing
+            for w in pts.windows(2) {
+                assert!(w[1].t_s >= w[0].t_s, "{id:?}: t grid not sorted");
+                assert!(
+                    w[1].mean_ms <= w[0].mean_ms + 1e-9,
+                    "{id:?}: mean best-so-far increased over time"
+                );
+            }
         }
     }
 }

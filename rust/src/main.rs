@@ -14,7 +14,9 @@
 //!              [--traces] [--out report.json]
 //! pcat transfer [--smoke] [--jobs N] [--seed S] [--seeds K] [--budget B] \
 //!              [--benchmarks a,b] [--sources x,y] [--targets x,y] \
-//!              [--searchers p,q] [--curves] [--out TRANSFER_REPORT.json]
+//!              [--inputs i,j] [--source-inputs i,j] [--target-inputs i,j] \
+//!              [--model oracle|tree] [--searchers p,q] [--curves] \
+//!              [--out TRANSFER_REPORT.json]
 //! ```
 //!
 //! `matrix` runs an [`ExperimentPlan`] (benchmark × GPU × searcher ×
@@ -25,11 +27,18 @@
 //! reports).
 //!
 //! `transfer` runs a [`TransferPlan`] — the paper's train-on-A /
-//! tune-on-B cross-hardware experiment: the profile searcher's model
-//! matrix is built from each *source* GPU's recording while the search
-//! replays each *target* GPU — and writes `TRANSFER_REPORT.json` under
-//! the same `--jobs`-invariant byte-identity contract (`--smoke` is
-//! gated against `rust/testdata/transfer_golden.json`).
+//! tune-on-B portability experiment over **both** axes the paper
+//! claims: the profile searcher's model matrix is built from each
+//! *source* (GPU, input) recording (`--model oracle` exact PCs, or
+//! `--model tree` per-counter decision trees trained on the source)
+//! while the search replays each *target* (GPU, input) — and writes
+//! `TRANSFER_REPORT.json` (with step- and time-domain best-so-far
+//! curves under `--curves`) under the same `--jobs`-invariant
+//! byte-identity contract. `--inputs` takes selectors (`default`,
+//! `alt`, or concrete input names) and sets both axes;
+//! `--source-inputs`/`--target-inputs` override one side. `--smoke` is
+//! gated against `rust/testdata/transfer_golden.json` (oracle) and
+//! `rust/testdata/transfer_tree_golden.json` (`--model tree`).
 //!
 //! (clap is unavailable in the offline build; flags are parsed by hand.)
 
@@ -43,8 +52,9 @@ use pcat::benchmarks::{self, cached_space, Benchmark};
 use pcat::coordinator::{SearcherChoice, Tuner};
 use pcat::gpusim::GpuSpec;
 use pcat::harness::{
-    run_experiment, run_plan, run_transfer_plan, transfer_matrix,
-    ExperimentOpts, ExperimentPlan, TransferPlan, ALL_EXPERIMENTS,
+    run_experiment, run_plan, run_transfer_plan, transfer_input_matrix,
+    transfer_matrix, ExperimentOpts, ExperimentPlan, ModelSource,
+    TransferPlan, ALL_EXPERIMENTS,
 };
 use pcat::model::{
     dataset_from_recorded, DecisionTreeModel, OracleModel, PrecomputedModel,
@@ -171,11 +181,11 @@ fn gpu_arg(args: &Args) -> Result<GpuSpec> {
 fn input_arg(args: &Args, bench: &dyn Benchmark) -> Result<benchmarks::Input> {
     match args.get("input") {
         None => Ok(bench.default_input()),
-        Some(name) => bench
-            .inputs()
-            .into_iter()
-            .find(|i| i.name == name)
-            .ok_or_else(|| anyhow!("unknown input {name:?} for this benchmark")),
+        // same selector vocabulary as the plan axes: "default", "alt",
+        // or a concrete input name
+        Some(name) => benchmarks::resolve_input(bench, name).ok_or_else(|| {
+            anyhow!("unknown input {name:?} for this benchmark (see `pcat list`)")
+        }),
     }
 }
 
@@ -209,9 +219,10 @@ tuning space (replayed/simulated)\n  tune-real   search over really-executing \
 PJRT artifacts\n  experiment  regenerate a paper table/figure (or `all`)\n  \
 matrix      run a benchmark × GPU × searcher × seed job matrix in \
 parallel\n              (--smoke = the tiny deterministic CI matrix)\n  \
-transfer    train-on-A / tune-on-B cross-hardware matrix; writes a \
-paper-style\n              table + TRANSFER_REPORT.json (--smoke = the tiny \
-CI matrix)\n\nglobal \
+transfer    train-on-(GPU,input)-A / tune-on-B portability matrix; writes\n              \
+paper-style tables (GPU×GPU + input×input) + TRANSFER_REPORT.json\n              \
+(--model oracle|tree picks the source model; --inputs widens the\n              \
+input axes; --smoke = the tiny CI matrix)\n\nglobal \
 flags: --jobs N caps worker threads (results are identical at any N).\nOther \
 flags are shown in main.rs docs and README.";
 
@@ -219,11 +230,14 @@ fn cmd_list() -> Result<()> {
     println!("benchmarks:");
     for b in benchmarks::all() {
         let s = b.space();
+        let inputs: Vec<String> =
+            b.inputs().iter().map(|i| i.name.clone()).collect();
         println!(
-            "  {:<12} {} params, {} configurations",
+            "  {:<12} {} params, {} configurations; inputs: {}",
             b.name(),
             s.dims(),
-            s.len()
+            s.len(),
+            inputs.join(", ")
         );
     }
     println!("\nGPUs (simulated, paper Table 3):");
@@ -450,15 +464,31 @@ fn cmd_matrix(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Run a [`TransferPlan`] (train-on-A / tune-on-B matrix) in parallel,
-/// write the deterministic `TRANSFER_REPORT.json` and print the
-/// paper-style source × target table.
+/// Run a [`TransferPlan`] (train-on-(GPU, input)-A / tune-on-B matrix)
+/// in parallel, write the deterministic `TRANSFER_REPORT.json` and
+/// print the paper-style source × target tables (GPU × GPU, and
+/// input × input when the plan has an input dimension).
 fn cmd_transfer(args: &Args) -> Result<()> {
     let seed = args.num("seed", 0u64)?;
+    let model = match args.get("model") {
+        None => ModelSource::Oracle,
+        Some(s) => ModelSource::parse(s)
+            .ok_or_else(|| anyhow!("--model expects oracle|tree, got {s:?}"))?,
+    };
     let plan = if args.get("smoke").is_some() {
-        TransferPlan::smoke(seed)
+        // the smoke matrix is pinned except for the model source, so
+        // CI gates `--smoke` and `--smoke --model tree` as two lanes
+        TransferPlan {
+            model,
+            ..TransferPlan::smoke(seed)
+        }
     } else {
         let base = TransferPlan::full(args.num("seeds", 100usize)?, seed);
+        // --inputs sets both axes; --source-inputs/--target-inputs
+        // override one side (selectors resolve per benchmark, so they
+        // are deliberately NOT canonicalized here — TransferPlan::jobs
+        // resolves them to concrete names before any RNG tag)
+        let both_inputs = axis_arg(args, "inputs", &base.source_inputs);
         TransferPlan {
             benchmarks: canon_benchmarks(axis_arg(
                 args,
@@ -466,7 +496,10 @@ fn cmd_transfer(args: &Args) -> Result<()> {
                 &base.benchmarks,
             )),
             source_gpus: canon_gpus(axis_arg(args, "sources", &base.source_gpus)),
+            source_inputs: axis_arg(args, "source-inputs", &both_inputs),
             target_gpus: canon_gpus(axis_arg(args, "targets", &base.target_gpus)),
+            target_inputs: axis_arg(args, "target-inputs", &both_inputs),
+            model,
             searchers: axis_arg(args, "searchers", &base.searchers),
             max_tests: args.num("budget", base.max_tests)?,
             include_curves: args.get("curves").is_some(),
@@ -492,6 +525,10 @@ fn cmd_transfer(args: &Args) -> Result<()> {
         println!("  {line}");
     }
     println!("{}", transfer_matrix(&report));
+    let input_grid = transfer_input_matrix(&report);
+    if !input_grid.is_empty() {
+        println!("{input_grid}");
+    }
     Ok(())
 }
 

@@ -34,6 +34,13 @@ pub struct DecisionTreeModel {
 impl DecisionTreeModel {
     /// Train on a dataset (paper: 50/50 random train/test split per
     /// candidate; lowest MAE wins, ties broken by RMSE).
+    ///
+    /// Deterministic for a fixed `(ds, rng)` pair: the only randomness
+    /// is the split shuffle drawn from `rng` before any thread spawns,
+    /// per-counter fits are pure functions of that split, and the
+    /// trees are collected in [`MODELED_COUNTERS`] order regardless of
+    /// thread interleaving — property-tested, and load-bearing for the
+    /// transfer runner's `--jobs`-invariant byte contract.
     pub fn train(ds: &Dataset, trained_on: &str, rng: &mut Rng) -> Self {
         assert!(ds.len() >= 4, "need at least 4 samples");
         let n = ds.len();
@@ -91,6 +98,18 @@ impl DecisionTreeModel {
             trees,
             trained_on: trained_on.to_string(),
         }
+    }
+
+    /// The trained tree for one modeled counter (`None` for counters
+    /// outside [`MODELED_COUNTERS`]) — reports and property tests.
+    pub fn tree_for(
+        &self,
+        c: crate::counters::Counter,
+    ) -> Option<&RegressionTree> {
+        MODELED_COUNTERS
+            .iter()
+            .position(|&m| m == c)
+            .map(|j| &self.trees[j])
     }
 
     pub fn to_json(&self) -> Value {

@@ -48,7 +48,12 @@ pub struct PredictionMatrix {
 }
 
 impl PredictionMatrix {
-    /// Evaluate `model` over every configuration of `space` once.
+    /// Evaluate `model` over every configuration of `space` once —
+    /// the densification step for *trained* models (the transfer
+    /// runner's `ModelSource::Tree` feeds per-counter decision trees
+    /// through here; the oracle path uses [`from_recorded`] instead).
+    ///
+    /// [`from_recorded`]: PredictionMatrix::from_recorded
     pub fn build(space: &Space, model: &dyn TpPcModel) -> Self {
         let n = space.len();
         let mut data = vec![0.0; MODELED_COUNTERS.len() * n];

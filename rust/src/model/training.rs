@@ -29,6 +29,22 @@ pub fn features_of(cfg: &Config) -> Vec<f64> {
     cfg.0.iter().map(|&v| v as f64).collect()
 }
 
+/// The whole recorded space, in canonical space order, as a training
+/// set — the deterministic full-exploration variant the transfer
+/// runner's tree source trains on. No sampling RNG touches it, so row
+/// order (and therefore every float-accumulation order downstream in
+/// tree fitting) is a pure function of the recording: byte-stable
+/// across worker counts by construction. The train/test split inside
+/// [`crate::model::DecisionTreeModel::train`] still draws from the
+/// caller's seeded RNG.
+pub fn dataset_full(rec: &RecordedSpace) -> Dataset {
+    Dataset {
+        features: rec.space.configs.iter().map(features_of).collect(),
+        targets: rec.records.iter().map(|r| r.counters.clone()).collect(),
+        configs: rec.space.configs.clone(),
+    }
+}
+
 /// Sample `fraction` of a recorded space (without replacement) as a
 /// training set. `fraction = 1.0` uses the whole space (the paper trains
 /// on full or partial exhaustive explorations).
@@ -71,6 +87,22 @@ mod tests {
         assert_eq!(half.len(), rec.space.len().div_ceil(2));
         let full = dataset_from_recorded(&rec, 1.0, &mut rng);
         assert_eq!(full.len(), rec.space.len());
+    }
+
+    #[test]
+    fn dataset_full_is_the_space_in_order() {
+        let rec = record_space(
+            &Coulomb,
+            &GpuSpec::gtx750(),
+            &Coulomb.default_input(),
+        );
+        let ds = dataset_full(&rec);
+        assert_eq!(ds.len(), rec.space.len());
+        for (i, cfg) in rec.space.configs.iter().enumerate() {
+            assert_eq!(&ds.configs[i], cfg);
+            assert_eq!(ds.features[i], features_of(cfg));
+            assert_eq!(ds.targets[i], rec.records[i].counters);
+        }
     }
 
     #[test]

@@ -12,7 +12,8 @@ use pcat::expert::{
 use pcat::gpusim::{simulate, GpuSpec, Workload};
 use pcat::harness::{aggregate_staircases, aggregate_step_curves, steps_to_within};
 use pcat::model::{
-    OracleModel, PredictionMatrix, TpPcModel, MODELED_COUNTERS,
+    dataset_full, DecisionTreeModel, OracleModel, PredictionMatrix,
+    RegressionTree, TpPcModel, MODELED_COUNTERS,
 };
 use pcat::searcher::{
     BasinHopping, Budget, CostModel, ProfileSearcher, RandomSearcher,
@@ -562,6 +563,96 @@ fn prop_convergence_aggregation_is_invariant_to_run_order() {
             assert_eq!(a.step, b.step);
             assert_eq!(a.median_ms, b.median_ms, "case {case}");
             assert_eq!(a.mean_ms, b.mean_ms, "case {case}");
+        }
+    }
+}
+
+/// One recorded space for the model-layer properties (small space, so
+/// training the 18-counter model a few times stays cheap).
+fn model_recording() -> pcat::tuning::RecordedSpace {
+    let bench = benchmarks::by_name("coulomb").unwrap();
+    record_space(bench.as_ref(), &GpuSpec::gtx750(), &bench.default_input())
+}
+
+#[test]
+fn prop_decision_tree_training_is_deterministic_per_seed() {
+    // the transfer runner's byte contract leans on this: training is a
+    // pure function of (dataset, seed) — per-counter fits run on their
+    // own threads, but the only randomness (the 50/50 split shuffle)
+    // is drawn before any thread spawns and trees are collected in
+    // MODELED_COUNTERS order
+    let rec = model_recording();
+    let ds = dataset_full(&rec);
+    for seed in [0u64, 7, 91] {
+        let a = DecisionTreeModel::train(&ds, "gtx750", &mut Rng::new(seed));
+        let b = DecisionTreeModel::train(&ds, "gtx750", &mut Rng::new(seed));
+        assert_eq!(
+            a.to_json().to_string_pretty(1),
+            b.to_json().to_string_pretty(1),
+            "seed {seed}: two trainings diverged"
+        );
+    }
+}
+
+#[test]
+fn prop_decision_tree_json_roundtrip_is_bit_exact() {
+    // save → load → save must reproduce the file byte-for-byte (the
+    // JSON writer emits shortest-roundtrip floats, so parse∘format is
+    // the identity on its own output), and the reloaded model must
+    // predict identically
+    let rec = model_recording();
+    let ds = dataset_full(&rec);
+    let m = DecisionTreeModel::train(&ds, "gtx750", &mut Rng::new(3));
+    let text = m.to_json().to_string_pretty(1);
+    let back =
+        DecisionTreeModel::from_json(&pcat::util::json::parse(&text).unwrap())
+            .unwrap();
+    assert_eq!(back.to_json().to_string_pretty(1), text);
+    for cfg in rec.space.configs.iter().step_by(17) {
+        assert_eq!(m.predict(cfg), back.predict(cfg));
+    }
+    // the per-counter accessor exposes the same trees the JSON carries
+    for &c in MODELED_COUNTERS.iter() {
+        assert_eq!(m.tree_for(c), back.tree_for(c));
+    }
+}
+
+#[test]
+fn prop_tree_training_mse_monotone_in_depth() {
+    // trained and evaluated on the same recording, a deeper tree can
+    // only refine the greedy partition (each extra split strictly
+    // reduces SSE, shallower prefixes are identical), so training MSE
+    // is monotone non-increasing with depth
+    let rec = model_recording();
+    let xs: Vec<Vec<f64>> = rec
+        .space
+        .configs
+        .iter()
+        .map(|c| c.0.iter().map(|&v| v as f64).collect())
+        .collect();
+    for target in [Counter::InstF32, Counter::DramRt, Counter::ShrLt] {
+        let ys: Vec<f64> = rec
+            .records
+            .iter()
+            .map(|r| r.counters.get(target))
+            .collect();
+        let mut prev = f64::INFINITY;
+        for depth in [1usize, 2, 4, 6, 8, 12] {
+            let t = RegressionTree::fit(&xs, &ys, depth, 2);
+            let mse = xs
+                .iter()
+                .zip(&ys)
+                .map(|(x, y)| {
+                    let e = t.predict(x) - y;
+                    e * e
+                })
+                .sum::<f64>()
+                / ys.len() as f64;
+            assert!(
+                mse <= prev + prev.abs() * 1e-12 + 1e-12,
+                "{target}: MSE rose from {prev} to {mse} at depth {depth}"
+            );
+            prev = mse;
         }
     }
 }

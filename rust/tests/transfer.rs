@@ -1,29 +1,42 @@
-//! Invariants of the cross-hardware transfer evaluation subsystem:
+//! Invariants of the portability (transfer) evaluation subsystem:
 //!
 //! * a transfer plan's JSON report is byte-identical for `--jobs 1`
-//!   and `--jobs 8` (determinism contract);
-//! * aggregated best-so-far step curves are monotone non-increasing;
-//! * same-GPU transfer cells reproduce the plain [`ExperimentPlan`]
-//!   results bit-for-bit for identical seeds (the transfer path is a
-//!   strict generalization, not a fork);
-//! * plans cannot silently schedule an unrecordable benchmark — the
-//!   validation returns a typed [`PlanError`];
-//! * the smoke report matches the checked-in golden file
-//!   (bootstrapping it on the first run of a fresh checkout).
+//!   and `--jobs 8` (determinism contract) — for **both** model
+//!   sources, since the tree source trains models inside the run;
+//! * aggregated best-so-far curves are monotone non-increasing in the
+//!   step domain and span the cost axis in the time domain;
+//! * same-(GPU, default input) oracle transfer cells reproduce the
+//!   plain [`ExperimentPlan`] results bit-for-bit for identical seeds
+//!   (the transfer path is a strict generalization, not a fork);
+//! * the trained-tree source clears the paper's minimum bar on the
+//!   diagonal: no slower (median steps to well-performing) than the
+//!   random baseline;
+//! * plans cannot silently schedule an unrecordable benchmark or an
+//!   input some benchmark lacks — validation returns typed
+//!   [`PlanError`]s;
+//! * the smoke reports match the checked-in goldens (bootstrapping
+//!   them on the first run of a fresh checkout): one oracle golden
+//!   with cross-input cells, one tree-model golden.
 
 use std::path::Path;
 
 use pcat::harness::{
-    run_plan, run_transfer_plan, ExperimentPlan, PlanError, TransferPlan,
+    run_plan, run_transfer_plan, ExperimentPlan, ModelSource, PlanError,
+    TransferPlan,
 };
+use pcat::util::stats::median;
 
 /// The smoke plan, pinned here so test expectations stay honest about
-/// its shape: 2 benchmarks × 2×2 GPU pairs × 2 searchers × 2 seeds.
+/// its shape: 2 benchmarks × 2×2 GPU pairs × 2×2 input pairs ×
+/// 2 searchers × 2 seeds, oracle model.
 fn smoke() -> TransferPlan {
     let plan = TransferPlan::smoke(0);
     assert_eq!(plan.benchmarks.len(), 2);
     assert_eq!(plan.source_gpus.len(), 2);
+    assert_eq!(plan.source_inputs, vec!["default", "alt"]);
     assert_eq!(plan.target_gpus.len(), 2);
+    assert_eq!(plan.target_inputs, vec!["default", "alt"]);
+    assert_eq!(plan.model, ModelSource::Oracle);
     assert_eq!(plan.seeds, 2);
     plan
 }
@@ -40,6 +53,25 @@ fn transfer_reports_identical_for_jobs_1_and_jobs_8() {
     // and stable across repeated runs in the same process
     let repeat = run_transfer_plan(&plan, 8).unwrap().to_pretty_string();
     assert_eq!(parallel, repeat);
+}
+
+#[test]
+fn tree_model_reports_identical_for_jobs_1_and_jobs_8() {
+    // the tree source trains 18 per-counter trees per source endpoint
+    // inside the run; training must be keyed by the plan, never by
+    // worker scheduling, or the byte contract breaks here
+    let plan = TransferPlan {
+        model: ModelSource::Tree,
+        ..smoke()
+    };
+    let serial = run_transfer_plan(&plan, 1).unwrap().to_pretty_string();
+    let parallel = run_transfer_plan(&plan, 8).unwrap().to_pretty_string();
+    assert_eq!(serial, parallel);
+    assert!(serial.contains("\"model\": \"tree\""));
+    // the two model sources genuinely differ (the tree is not a
+    // pass-through of the oracle matrix)
+    let oracle = run_transfer_plan(&smoke(), 8).unwrap().to_pretty_string();
+    assert_ne!(serial, oracle);
 }
 
 #[test]
@@ -70,10 +102,51 @@ fn transfer_curves_are_monotone_non_increasing() {
     }
 }
 
-/// Same-GPU transfer cells must reproduce the plain `ExperimentPlan`
-/// results for identical seeds: same recording, same oracle matrix
-/// (the counter generations trivially agree, so no restriction), same
-/// RNG stream, same budget.
+#[test]
+fn transfer_time_curves_cover_the_cost_axis() {
+    let report = run_transfer_plan(&smoke(), 4).unwrap();
+    let curves = report.time_curves();
+    assert!(!curves.is_empty());
+    for (key, pts) in &curves {
+        assert!(!pts.is_empty(), "{key:?}: empty time curve");
+        for w in pts.windows(2) {
+            assert!(w[1].t_s >= w[0].t_s, "{key:?}: t grid not sorted");
+            assert!(
+                w[1].mean_ms <= w[0].mean_ms + 1e-9,
+                "{key:?}: mean best-so-far increased over time"
+            );
+        }
+        // the grid reaches the latest finisher among the cell's runs
+        let cell_max_cost = report
+            .results
+            .iter()
+            .filter(|r| {
+                r.spec.benchmark == key.benchmark
+                    && r.spec.source_gpu == key.source_gpu
+                    && r.spec.source_input == key.source_input
+                    && r.spec.target_gpu == key.target_gpu
+                    && r.spec.target_input == key.target_input
+                    && r.spec.searcher == key.searcher
+            })
+            .map(|r| r.cost_s)
+            .fold(0.0f64, f64::max);
+        let horizon = pts.last().unwrap().t_s;
+        assert!(
+            (horizon - cell_max_cost).abs() <= 1e-9 * cell_max_cost.max(1.0),
+            "{key:?}: horizon {horizon} vs max cost {cell_max_cost}"
+        );
+    }
+    // both domains serialize side by side in the report
+    let text = report.to_pretty_string();
+    assert!(text.contains("\"points\""));
+    assert!(text.contains("\"time\""));
+}
+
+/// Same-(GPU, default input) oracle transfer cells must reproduce the
+/// plain `ExperimentPlan` results for identical seeds: same recording,
+/// same oracle matrix (the counter generations trivially agree, so no
+/// restriction), same RNG stream (the default input adds no tag), same
+/// budget.
 #[test]
 fn same_gpu_transfer_cells_reproduce_experiment_plan() {
     let transfer = smoke();
@@ -90,11 +163,11 @@ fn same_gpu_transfer_cells_reproduce_experiment_plan() {
     let m_report = run_plan(&matrix, 4).unwrap();
 
     let mut compared = 0usize;
-    for tr in t_report
-        .results
-        .iter()
-        .filter(|r| r.spec.source_gpu == r.spec.target_gpu)
-    {
+    for tr in t_report.results.iter().filter(|r| {
+        r.spec.source_gpu == r.spec.target_gpu
+            && r.spec.source_input == r.spec.target_input
+            && r.spec.target_default
+    }) {
         let mr = m_report
             .results
             .iter()
@@ -112,8 +185,49 @@ fn same_gpu_transfer_cells_reproduce_experiment_plan() {
         assert_eq!(tr.cost_s, mr.cost_s, "{:?}", tr.spec);
         compared += 1;
     }
-    // 2 benchmarks × 2 diagonal cells × 2 searchers × 2 seeds
+    // 2 benchmarks × 2 diagonal GPU cells × 1 default/default input
+    // pair × 2 searchers × 2 seeds
     assert_eq!(compared, 16);
+}
+
+/// The paper's minimum bar for a *useful* trained model: steering with
+/// per-counter decision trees on the same-(GPU, input) diagonal must
+/// converge no slower than random search (median steps to the 1.1×
+/// well-performing threshold over seeds).
+#[test]
+fn tree_model_diagonal_no_slower_than_random() {
+    let plan = TransferPlan {
+        benchmarks: vec!["coulomb".into()],
+        source_gpus: vec!["gtx1070".into()],
+        source_inputs: vec!["default".into()],
+        target_gpus: vec!["gtx1070".into()],
+        target_inputs: vec!["default".into()],
+        model: ModelSource::Tree,
+        searchers: vec!["random".into(), "profile".into()],
+        seeds: 12,
+        base_seed: 11,
+        max_tests: 200,
+        within_frac: 0.10,
+        include_curves: false,
+    };
+    let report = run_transfer_plan(&plan, 4).unwrap();
+    let med = |searcher: &str| {
+        let steps: Vec<f64> = report
+            .results
+            .iter()
+            .filter(|r| r.spec.searcher == searcher)
+            .map(|r| r.tests_to_wp.unwrap_or(r.tests) as f64)
+            .collect();
+        assert_eq!(steps.len(), plan.seeds);
+        median(&steps)
+    };
+    let profile = med("profile");
+    let random = med("random");
+    assert!(
+        profile <= random,
+        "tree-steered profile searcher (median {profile}) slower than \
+         random (median {random}) on the same-(GPU, input) diagonal"
+    );
 }
 
 #[test]
@@ -139,6 +253,44 @@ fn unrecordable_benchmarks_are_rejected_before_any_recording() {
         bad.validate(),
         Err(PlanError::NoRecording("gemm-full".into()))
     );
+}
+
+/// Input-portability fallback: an input that exists for one benchmark
+/// of the plan but not another (so the cross product would need a
+/// source recording that can never exist) is a typed error at
+/// validation — mirroring the PR 3 counter-generation fallback tests,
+/// the failure mode is never a panic inside the fan-out.
+#[test]
+fn unknown_inputs_are_typed_errors_not_panics() {
+    // coulomb defines grid25_atoms4096; transpose does not
+    let mut plan = smoke();
+    plan.source_inputs = vec!["grid25_atoms4096".into()];
+    assert_eq!(
+        plan.validate(),
+        Err(PlanError::UnknownInput(
+            "transpose".into(),
+            "grid25_atoms4096".into()
+        ))
+    );
+    let t0 = std::time::Instant::now();
+    assert!(run_transfer_plan(&plan, 2).is_err());
+    assert!(t0.elapsed().as_secs() < 30, "validation recorded a space");
+
+    // same guard on the target axis
+    let mut plan = smoke();
+    plan.target_inputs = vec!["grid25_atoms4096".into()];
+    assert_eq!(
+        plan.validate(),
+        Err(PlanError::UnknownInput(
+            "transpose".into(),
+            "grid25_atoms4096".into()
+        ))
+    );
+
+    // and the error formats with the selector vocabulary, not just a
+    // name
+    let msg = plan.validate().unwrap_err().to_string();
+    assert!(msg.contains("transpose") && msg.contains("alt"));
 }
 
 #[test]
@@ -168,23 +320,20 @@ fn cross_generation_restriction_is_visible_and_contained() {
     }
 }
 
-/// Golden-file gate for the CI transfer smoke mode — same protocol as
-/// `testdata/smoke_golden.json`: bootstrapped on the first local run
-/// of a fresh toolchain (commit the generated file), byte-compared
+/// Shared golden-file protocol for both CI transfer smoke lanes — same
+/// as `testdata/smoke_golden.json`: bootstrapped on the first local
+/// run of a fresh toolchain (commit the generated file), byte-compared
 /// forever after; a missing golden under CI stays a warning *here*
 /// (tier-1 `cargo test` must not go red on the bootstrap state) while
 /// the workflow's smoke step hard-fails on it.
-#[test]
-fn transfer_smoke_report_matches_checked_in_golden() {
-    let golden = Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("testdata/transfer_golden.json");
-    let got = run_transfer_plan(&TransferPlan::smoke(0), 4)
-        .unwrap()
-        .to_pretty_string();
+fn golden_gate(file: &str, got: &str) {
+    let golden =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("testdata").join(file);
     if golden.exists() {
         let want = std::fs::read_to_string(&golden).unwrap();
         assert_eq!(
-            got, want,
+            got,
+            want,
             "transfer report drifted from {}; if the change is \
              intentional, regenerate via `scripts/ci-local.sh bless`",
             golden.display()
@@ -199,10 +348,39 @@ fn transfer_smoke_report_matches_checked_in_golden() {
         );
     } else {
         std::fs::create_dir_all(golden.parent().unwrap()).unwrap();
-        std::fs::write(&golden, &got).unwrap();
+        std::fs::write(&golden, got).unwrap();
         eprintln!(
             "bootstrapped transfer golden at {} — commit it",
             golden.display()
         );
     }
+}
+
+/// The oracle smoke golden: covers cross-GPU, cross-generation **and**
+/// cross-input cells (the smoke plan's input axes are
+/// `[default, alt]`).
+#[test]
+fn transfer_smoke_report_matches_checked_in_golden() {
+    let got = run_transfer_plan(&TransferPlan::smoke(0), 4)
+        .unwrap()
+        .to_pretty_string();
+    // the new report shape carries the input axes and both curve
+    // domains — pin that before gating bytes
+    assert!(got.contains("\"schema\": \"pcat-transfer-report/v2\""));
+    assert!(got.contains("\"source_input\""));
+    assert!(got.contains("\"target_input\""));
+    assert!(got.contains("\"time\""));
+    golden_gate("transfer_golden.json", &got);
+}
+
+/// The tree-model smoke golden: same plan shape, `--model tree`.
+#[test]
+fn transfer_tree_smoke_report_matches_checked_in_golden() {
+    let plan = TransferPlan {
+        model: ModelSource::Tree,
+        ..TransferPlan::smoke(0)
+    };
+    let got = run_transfer_plan(&plan, 4).unwrap().to_pretty_string();
+    assert!(got.contains("\"model\": \"tree\""));
+    golden_gate("transfer_tree_golden.json", &got);
 }

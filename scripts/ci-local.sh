@@ -9,14 +9,24 @@
 #   scripts/ci-local.sh test      # cargo test -q
 #   scripts/ci-local.sh bench      # cargo bench --no-run (compile only)
 #   scripts/ci-local.sh smoke      # deterministic smoke matrices (plain +
-#                                  # transfer) + golden diffs
-#   scripts/ci-local.sh bless      # regenerate rust/testdata/smoke_golden.json
-#                                  # and rust/testdata/transfer_golden.json
+#                                  # transfer oracle + transfer tree) +
+#                                  # golden diffs
+#   scripts/ci-local.sh bless      # regenerate all three goldens:
+#                                  #   rust/testdata/smoke_golden.json
+#                                  #     (pcat matrix --smoke)
+#                                  #   rust/testdata/transfer_golden.json
+#                                  #     (pcat transfer --smoke: oracle model,
+#                                  #      incl. cross-input + cross-generation
+#                                  #      cells and step+time curves)
+#                                  #   rust/testdata/transfer_tree_golden.json
+#                                  #     (pcat transfer --smoke --model tree:
+#                                  #      trained decision-tree source)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 GOLDEN=rust/testdata/smoke_golden.json
 TRANSFER_GOLDEN=rust/testdata/transfer_golden.json
+TRANSFER_TREE_GOLDEN=rust/testdata/transfer_tree_golden.json
 SMOKE_OUT=rust/target/smoke
 
 run_fmt() { (cd rust && cargo fmt --check); }
@@ -26,8 +36,20 @@ run_test() { (cd rust && cargo test -q); }
 run_bench() { (cd rust && cargo bench --no-run); }
 
 smoke_report() {
-    # $1 = subcommand (matrix|transfer), $2 = jobs, $3 = output path
-    rust/target/release/pcat "$1" --smoke --seed 0 --jobs "$2" --out "$3"
+    # $1 = lane (matrix|transfer|transfer-tree), $2 = jobs, $3 = output
+    case "$1" in
+        matrix)
+            rust/target/release/pcat matrix --smoke --seed 0 \
+                --jobs "$2" --out "$3" ;;
+        transfer)
+            rust/target/release/pcat transfer --smoke --seed 0 \
+                --jobs "$2" --out "$3" ;;
+        transfer-tree)
+            rust/target/release/pcat transfer --smoke --model tree \
+                --seed 0 --jobs "$2" --out "$3" ;;
+        *)
+            echo "unknown smoke lane $1" >&2; exit 2 ;;
+    esac
 }
 
 smoke_gate() {
@@ -63,6 +85,7 @@ run_smoke() {
     mkdir -p "$SMOKE_OUT"
     smoke_gate matrix "$GOLDEN"
     smoke_gate transfer "$TRANSFER_GOLDEN"
+    smoke_gate transfer-tree "$TRANSFER_TREE_GOLDEN"
 }
 
 run_bless() {
@@ -70,7 +93,8 @@ run_bless() {
     mkdir -p "$(dirname "$GOLDEN")" "$(dirname "$TRANSFER_GOLDEN")"
     smoke_report matrix 8 "$GOLDEN"
     smoke_report transfer 8 "$TRANSFER_GOLDEN"
-    echo "blessed $GOLDEN and $TRANSFER_GOLDEN"
+    smoke_report transfer-tree 8 "$TRANSFER_TREE_GOLDEN"
+    echo "blessed $GOLDEN, $TRANSFER_GOLDEN and $TRANSFER_TREE_GOLDEN"
 }
 
 case "${1:-all}" in
