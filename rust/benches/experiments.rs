@@ -11,8 +11,8 @@ mod bench_util;
 
 use bench_util::{bench, section};
 use pcat::harness::{
-    run_experiment, run_transfer_plan, ExperimentOpts, ModelSource,
-    TransferPlan,
+    run_experiment, run_sweep_plan, run_transfer_plan, ExperimentOpts,
+    ModelSource, SweepPlan, TransferPlan,
 };
 
 fn main() {
@@ -75,5 +75,14 @@ fn main() {
         };
         let report = run_transfer_plan(&plan, workers).unwrap();
         assert!(!report.results.is_empty());
+    });
+
+    // the sample-efficiency sweep (smoke shape): one tree training per
+    // fraction plus the oracle reference — tracks the cost of the
+    // fraction axis end-to-end (recordings are warm by now)
+    section("sample-efficiency sweep (smoke shape)");
+    bench("sweep_smoke", 0, 1, || {
+        let report = run_sweep_plan(&SweepPlan::smoke(1), workers).unwrap();
+        assert!(!report.cells.is_empty());
     });
 }

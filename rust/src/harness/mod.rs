@@ -15,20 +15,25 @@
 //! | fig9–13| Figures 9–13 | vs Basin Hopping (time + iterations) |
 //! | ablation_* | — | design-choice ablations called out in DESIGN.md |
 //!
-//! Beyond the per-artifact drivers, two job-matrix runners execute
+//! Beyond the per-artifact drivers, three job-matrix runners execute
 //! whole evaluation grids on the shared worker pool with byte-identical
 //! `--jobs`-invariant reports: [`ExperimentPlan`] (benchmark × GPU ×
-//! searcher × seed, same-cell) and [`TransferPlan`] (benchmark ×
+//! input × searcher × seed, same-cell), [`TransferPlan`] (benchmark ×
 //! source (GPU, input) × target (GPU, input) × searcher × seed — the
 //! paper's train-on-A / tune-on-B portability experiment over **both**
 //! axes the paper claims, with a pluggable source-model kind:
 //! [`ModelSource::Oracle`] exact PCs or [`ModelSource::Tree`] trained
-//! decision trees).
+//! decision trees, trained on a `train_fraction` stratified sample of
+//! the source recording with per-endpoint MAE/RMSE/R² quality metrics
+//! embedded in the report), and [`SweepPlan`] (the sample-efficiency
+//! sensitivity sweep: train-fraction × model × benchmark convergence
+//! curves, `pcat sweep`).
 
 mod convergence;
 mod figures;
 mod plan;
 mod steps;
+mod sweep;
 mod tables;
 mod transfer;
 
@@ -42,10 +47,15 @@ pub use plan::{
     PlanReport, PLAN_SEARCHERS,
 };
 pub use steps::{avg_steps_to_well_performing, par_map_seeds};
-pub use tables::{transfer_input_matrix, transfer_matrix};
+pub use sweep::{run_sweep_plan, SweepCell, SweepPlan, SweepReport};
+pub use tables::{
+    model_quality_matrix, sweep_matrix, transfer_input_matrix,
+    transfer_matrix,
+};
 pub use transfer::{
-    run_transfer_plan, CellId, ModelSource, TransferAggregate,
-    TransferJobResult, TransferJobSpec, TransferPlan, TransferReport,
+    run_transfer_plan, CellId, CounterQuality, EndpointQuality, ModelSource,
+    TransferAggregate, TransferJobResult, TransferJobSpec, TransferPlan,
+    TransferReport,
 };
 
 use std::path::Path;

@@ -1,18 +1,23 @@
 //! Parallel, cache-backed experiment runner.
 //!
 //! [`ExperimentPlan`] describes the paper's evaluation as a job matrix
-//! (benchmark × GPU × searcher × seed, §4), expanded into independent
-//! [`JobSpec`]s and executed across the shared worker pool. Every job
-//! replays a [`RecordedSpace`] obtained from the process-wide cache
-//! ([`crate::benchmarks::cached_space`]), so each space is enumerated
-//! and simulated exactly once per process instead of once per run.
+//! (benchmark × GPU × input × searcher × seed, §4), expanded into
+//! independent [`JobSpec`]s and executed across the shared worker
+//! pool. Every job replays a [`RecordedSpace`] obtained from the
+//! process-wide cache ([`crate::benchmarks::cached_space`]), so each
+//! space is enumerated and simulated exactly once per process instead
+//! of once per run.
 //!
 //! **Determinism contract:** a job's result is a pure function of the
 //! plan and its coordinates — per-job RNG streams are derived with
 //! [`crate::util::rng::stream_seed`] from `(base seed, benchmark, gpu,
-//! searcher, lane)`, never from scheduling. Serial (`jobs = 1`) and
-//! parallel (`jobs = N`) executions therefore produce byte-identical
-//! JSON reports, which is exactly what the CI smoke gate asserts.
+//! input, searcher, lane)`, never from scheduling; the default input
+//! contributes **no** stream tag, so historical default-input plans
+//! keep their exact streams (and, since input fields serialize only on
+//! plans with a real input axis, their exact report bytes). Serial
+//! (`jobs = 1`) and parallel (`jobs = N`) executions therefore produce
+//! byte-identical JSON reports, which is exactly what the CI smoke
+//! gate asserts.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -42,13 +47,19 @@ pub const PLAN_SEARCHERS: [&str; 5] =
 /// benchmark the replay harness cannot exhaustively record (GEMM-full
 /// would enumerate-and-simulate 205k configurations before the first
 /// job ran).
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum PlanError {
     /// A plan axis (benchmarks/GPUs/searchers/seeds) is empty.
     EmptyAxis(&'static str),
     UnknownBenchmark(String),
     UnknownGpu(String),
     UnknownSearcher(String),
+    /// A training fraction outside `(0, 1]` (or non-finite): sampling
+    /// zero rows of a recording trains nothing, and more than the
+    /// whole recording does not exist. `axis` names the offending plan
+    /// field (`train_fraction` for transfer plans, `fractions` for the
+    /// sweep axis).
+    InvalidFraction { axis: &'static str, value: f64 },
     /// Known benchmark, but plan runners must not record its space
     /// ([`crate::benchmarks::Benchmark::exhaustively_recordable`]):
     /// the exhaustive enumerate-and-simulate cost is reserved for
@@ -88,6 +99,12 @@ impl std::fmt::Display for PlanError {
                 "benchmark {b:?} has no input {i:?} in plan; selectors \
                  are \"default\", \"alt\", or an input name listed by \
                  `pcat list`"
+            ),
+            PlanError::InvalidFraction { axis, value } => write!(
+                f,
+                "invalid training fraction {value} in plan axis \
+                 {axis:?}: must be within (0, 1] (1.0 = the full \
+                 recording, the pre-sampling behaviour)"
             ),
         }
     }
@@ -156,6 +173,64 @@ pub(crate) fn validate_inputs(
     Ok(())
 }
 
+/// Shared fraction validation: training fractions must be finite and
+/// within `(0, 1]` ([`PlanError::InvalidFraction`] otherwise). Used by
+/// [`crate::harness::TransferPlan`] (`train_fraction`) and
+/// [`crate::harness::SweepPlan`] (the `fractions` axis).
+pub(crate) fn validate_fraction(
+    axis: &'static str,
+    value: f64,
+) -> Result<(), PlanError> {
+    if value.is_finite() && value > 0.0 && value <= 1.0 {
+        Ok(())
+    } else {
+        Err(PlanError::InvalidFraction { axis, value })
+    }
+}
+
+/// Resolve an input-selector axis for one benchmark into
+/// `(concrete input name, is the benchmark's default)` pairs —
+/// order-preserving, deduped by concrete name so overlapping selectors
+/// (`default` plus its concrete spelling) never expand a cell twice.
+/// Unresolvable selectors pass through verbatim so validation still
+/// names the offender. Shared by [`ExperimentPlan::jobs`] and
+/// [`crate::harness::TransferPlan::jobs`], so the two planners cannot
+/// diverge on selector semantics.
+pub(crate) fn resolve_input_axis(
+    bench_name: &str,
+    selectors: &[String],
+) -> Vec<(String, bool)> {
+    let bench = benchmarks::by_name(bench_name);
+    let resolve = |sel: &str| -> (String, bool) {
+        match bench
+            .as_ref()
+            .and_then(|bn| benchmarks::resolve_input(bn.as_ref(), sel))
+        {
+            Some(input) => {
+                let is_default = bench
+                    .as_ref()
+                    .map(|bn| bn.default_input().name == input.name)
+                    .unwrap_or(false);
+                (input.name, is_default)
+            }
+            // unvalidated plan: pass the selector through so
+            // validation still names the offender
+            None => (
+                sel.to_string(),
+                sel == benchmarks::DEFAULT_INPUT_SELECTOR,
+            ),
+        }
+    };
+    let mut axis: Vec<(String, bool)> = Vec::new();
+    for sel in selectors {
+        let entry = resolve(sel);
+        if !axis.iter().any(|(n, _)| *n == entry.0) {
+            axis.push(entry);
+        }
+    }
+    axis
+}
+
 /// Shared axis validation: searchers must be in [`PLAN_SEARCHERS`].
 pub(crate) fn validate_searchers(
     axis: &'static str,
@@ -172,11 +247,20 @@ pub(crate) fn validate_searchers(
     Ok(())
 }
 
-/// A benchmark × GPU × searcher × seed job matrix.
+/// A benchmark × GPU × input × searcher × seed job matrix.
 #[derive(Debug, Clone)]
 pub struct ExperimentPlan {
     pub benchmarks: Vec<String>,
     pub gpus: Vec<String>,
+    /// Input selectors (`"default"`, `"alt"`, or concrete names from
+    /// [`crate::benchmarks::Benchmark::inputs`]), resolved per
+    /// benchmark at expansion. The historical plans pinned the default
+    /// input; a `["default"]` axis reproduces them **bit-for-bit** —
+    /// same RNG streams (the default input adds no stream tag, exactly
+    /// like [`crate::harness::TransferPlan`]'s convention) and the
+    /// same report bytes (input fields are only serialized when the
+    /// plan actually has an input dimension).
+    pub inputs: Vec<String>,
     pub searchers: Vec<String>,
     /// Seeded repetitions per (benchmark, gpu, searcher) cell.
     pub seeds: usize,
@@ -200,6 +284,7 @@ impl ExperimentPlan {
             gpus: ["gtx680", "gtx750", "gtx1070", "rtx2080"]
                 .map(String::from)
                 .to_vec(),
+            inputs: vec!["default".into()],
             searchers: PLAN_SEARCHERS.map(String::from).to_vec(),
             seeds,
             base_seed,
@@ -215,6 +300,7 @@ impl ExperimentPlan {
         ExperimentPlan {
             benchmarks: vec!["coulomb".into(), "transpose".into()],
             gpus: vec!["gtx1070".into()],
+            inputs: vec!["default".into()],
             searchers: vec!["random".into(), "profile".into()],
             seeds: 3,
             base_seed,
@@ -223,19 +309,36 @@ impl ExperimentPlan {
         }
     }
 
-    /// Expand into jobs, in deterministic plan order.
+    /// Does this plan have an input dimension beyond the historical
+    /// pinned default? Serialization keys off this so `["default"]`
+    /// plans keep producing the exact pre-input-axis report bytes.
+    pub fn has_input_axis(&self) -> bool {
+        self.inputs.len() != 1
+            || self.inputs[0] != benchmarks::DEFAULT_INPUT_SELECTOR
+    }
+
+    /// Expand into jobs, in deterministic plan order. Input selectors
+    /// resolve to concrete per-benchmark names here (shared
+    /// [`resolve_input_axis`] helper with the transfer planner), so
+    /// report keys and RNG tags always carry canonical names and
+    /// overlapping selectors collapse to one axis entry.
     pub fn jobs(&self) -> Vec<JobSpec> {
         let mut out = Vec::new();
         for b in &self.benchmarks {
+            let inputs = resolve_input_axis(b, &self.inputs);
             for g in &self.gpus {
-                for s in &self.searchers {
-                    for lane in 0..self.seeds {
-                        out.push(JobSpec {
-                            benchmark: b.clone(),
-                            gpu: g.clone(),
-                            searcher: s.clone(),
-                            lane,
-                        });
+                for (input, input_default) in &inputs {
+                    for s in &self.searchers {
+                        for lane in 0..self.seeds {
+                            out.push(JobSpec {
+                                benchmark: b.clone(),
+                                gpu: g.clone(),
+                                input: input.clone(),
+                                input_default: *input_default,
+                                searcher: s.clone(),
+                                lane,
+                            });
+                        }
                     }
                 }
             }
@@ -250,6 +353,7 @@ impl ExperimentPlan {
     pub fn validate(&self) -> Result<(), PlanError> {
         validate_benchmarks("benchmarks", &self.benchmarks)?;
         validate_gpus("gpus", &self.gpus)?;
+        validate_inputs("inputs", &self.benchmarks, &self.inputs)?;
         validate_searchers("searchers", &self.searchers)?;
         if self.seeds == 0 {
             return Err(PlanError::EmptyAxis("seeds"));
@@ -258,7 +362,7 @@ impl ExperimentPlan {
     }
 
     fn to_json(&self) -> Value {
-        obj(vec![
+        let mut fields = vec![
             ("benchmarks", Value::from(self.benchmarks.clone())),
             ("gpus", Value::from(self.gpus.clone())),
             ("searchers", Value::from(self.searchers.clone())),
@@ -267,15 +371,26 @@ impl ExperimentPlan {
             // seeds above 2^53, breaking re-runs from the report
             ("base_seed", Value::from(self.base_seed.to_string())),
             ("max_tests", Value::from(self.max_tests)),
-        ])
+        ];
+        if self.has_input_axis() {
+            // only when the plan genuinely has an input dimension:
+            // default-input plans must keep their pre-axis bytes
+            fields.push(("inputs", Value::from(self.inputs.clone())));
+        }
+        obj(fields)
     }
 }
 
-/// One independent job of the matrix.
+/// One independent job of the matrix. `input` carries a *resolved*
+/// concrete input name, not a selector.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
     pub benchmark: String,
     pub gpu: String,
+    pub input: String,
+    /// Is `input` the benchmark's default? (Decides the RNG tag shape
+    /// — see [`rng_seed`](JobSpec::rng_seed).)
+    pub input_default: bool,
     pub searcher: String,
     /// Repetition index within the cell.
     pub lane: usize,
@@ -283,13 +398,26 @@ pub struct JobSpec {
 
 impl JobSpec {
     /// The job's private RNG stream seed — a pure function of the plan
-    /// seed and the job coordinates.
+    /// seed and the job coordinates. The default input adds **no**
+    /// stream tag (same convention as
+    /// [`crate::harness::TransferJobSpec::rng_seed`]): default-input
+    /// jobs keep the exact streams of the pre-input-axis plans, and
+    /// same-(GPU, default input) transfer diagonals keep reproducing
+    /// them. Non-default inputs get their own streams.
     pub fn rng_seed(&self, base_seed: u64) -> u64 {
-        stream_seed(
-            base_seed,
-            &[&self.benchmark, &self.gpu, &self.searcher],
-            self.lane as u64,
-        )
+        if self.input_default {
+            stream_seed(
+                base_seed,
+                &[&self.benchmark, &self.gpu, &self.searcher],
+                self.lane as u64,
+            )
+        } else {
+            stream_seed(
+                base_seed,
+                &[&self.benchmark, &self.gpu, &self.input, &self.searcher],
+                self.lane as u64,
+            )
+        }
     }
 }
 
@@ -396,11 +524,14 @@ pub struct PlanReport {
     pub results: Vec<JobResult>,
 }
 
-/// Aggregated statistics for one (benchmark, gpu, searcher) cell.
+/// Aggregated statistics for one (benchmark, gpu, input, searcher)
+/// cell.
 #[derive(Debug, Clone)]
 pub struct AggregateRow {
     pub benchmark: String,
     pub gpu: String,
+    /// Resolved input name (the default input on historical plans).
+    pub input: String,
     pub searcher: String,
     pub runs: usize,
     pub wp_hits: usize,
@@ -422,6 +553,11 @@ impl PlanReport {
                     ("gpu", Value::from(r.spec.gpu.clone())),
                     ("searcher", Value::from(r.spec.searcher.clone())),
                     ("lane", Value::from(r.spec.lane)),
+                ];
+                if self.plan.has_input_axis() {
+                    fields.push(("input", Value::from(r.spec.input.clone())));
+                }
+                fields.extend(vec![
                     ("best_ms", Value::from(r.best_ms)),
                     ("tests", Value::from(r.tests)),
                     ("profiled_tests", Value::from(r.profiled_tests)),
@@ -430,7 +566,7 @@ impl PlanReport {
                         r.tests_to_wp.map(Value::from).unwrap_or(Value::Null),
                     ),
                     ("cost_s", Value::from(r.cost_s)),
-                ];
+                ]);
                 if self.plan.include_traces {
                     fields.push((
                         "trace",
@@ -456,7 +592,7 @@ impl PlanReport {
             .aggregate_rows()
             .iter()
             .map(|a| {
-                obj(vec![
+                let mut fields = vec![
                     ("benchmark", Value::from(a.benchmark.clone())),
                     ("gpu", Value::from(a.gpu.clone())),
                     ("searcher", Value::from(a.searcher.clone())),
@@ -465,7 +601,11 @@ impl PlanReport {
                     ("mean_tests_to_wp", Value::from(a.mean_tests_to_wp)),
                     ("mean_best_ms", Value::from(a.mean_best_ms)),
                     ("mean_cost_s", Value::from(a.mean_cost_s)),
-                ])
+                ];
+                if self.plan.has_input_axis() {
+                    fields.push(("input", Value::from(a.input.clone())));
+                }
+                obj(fields)
             })
             .collect();
 
@@ -477,15 +617,18 @@ impl PlanReport {
         ])
     }
 
-    /// Per-(benchmark, gpu, searcher) aggregates, in sorted key order.
+    /// Per-(benchmark, gpu, input, searcher) aggregates, in sorted key
+    /// order (on default-only plans the input component is constant,
+    /// so the ordering matches the historical three-part key).
     pub fn aggregate_rows(&self) -> Vec<AggregateRow> {
-        let mut cells: BTreeMap<(String, String, String), Vec<&JobResult>> =
-            BTreeMap::new();
+        type Key = (String, String, String, String);
+        let mut cells: BTreeMap<Key, Vec<&JobResult>> = BTreeMap::new();
         for r in &self.results {
             cells
                 .entry((
                     r.spec.benchmark.clone(),
                     r.spec.gpu.clone(),
+                    r.spec.input.clone(),
                     r.spec.searcher.clone(),
                 ))
                 .or_default()
@@ -493,7 +636,7 @@ impl PlanReport {
         }
         cells
             .into_iter()
-            .map(|((benchmark, gpu, searcher), rs)| {
+            .map(|((benchmark, gpu, input, searcher), rs)| {
                 let steps: Vec<f64> = rs
                     .iter()
                     .map(|r| r.tests_to_wp.unwrap_or(r.tests) as f64)
@@ -503,6 +646,7 @@ impl PlanReport {
                 AggregateRow {
                     benchmark,
                     gpu,
+                    input,
                     searcher,
                     runs: rs.len(),
                     wp_hits: rs
@@ -532,16 +676,23 @@ impl PlanReport {
             .with_context(|| format!("writing {}", path.display()))
     }
 
-    /// One summary line per aggregate cell, for CLI output.
+    /// One summary line per aggregate cell, for CLI output. The target
+    /// column shows `gpu:input` when the plan has an input dimension.
     pub fn summary_lines(&self) -> Vec<String> {
+        let with_input = self.plan.has_input_axis();
         self.aggregate_rows()
             .iter()
             .map(|a| {
+                let target = if with_input {
+                    format!("{}:{}", a.gpu, a.input)
+                } else {
+                    a.gpu.clone()
+                };
                 format!(
                     "{:<12} {:<8} {:<14} steps {:>7.1}  best {:>9.4} ms  \
                      cost {:>7.1} s",
                     a.benchmark,
-                    a.gpu,
+                    target,
                     a.searcher,
                     a.mean_tests_to_wp,
                     a.mean_best_ms,
@@ -555,26 +706,34 @@ impl PlanReport {
 /// Execute a plan with up to `jobs` worker threads.
 ///
 /// Recording and oracle prediction-matrix construction happen once per
-/// distinct (benchmark, gpu) cell in a deterministic pre-pass; the
-/// fan-out then only replays cached data and scores against the shared
-/// matrix, so worker count affects wall-clock and nothing else.
+/// distinct (benchmark, gpu, input) cell in a deterministic pre-pass;
+/// the fan-out then only replays cached data and scores against the
+/// shared matrix, so worker count affects wall-clock and nothing else.
 pub fn run_plan(plan: &ExperimentPlan, jobs: usize) -> Result<PlanReport> {
     plan.validate()?;
 
-    // Pre-pass over the (benchmark, gpu) cross product on the same pool:
-    // recording is the dominant cold-start cost and the cache records
-    // distinct keys concurrently. Order-preserving par_map keeps the
-    // cell list (and thus everything downstream) deterministic.
-    let keys: Vec<(String, String)> = plan
-        .benchmarks
-        .iter()
-        .flat_map(|b| plan.gpus.iter().map(move |g| (b.clone(), g.clone())))
-        .collect();
+    // Pre-pass over the (benchmark, gpu, input) cross product on the
+    // same pool: recording is the dominant cold-start cost and the
+    // cache records distinct keys concurrently. Order-preserving
+    // par_map keeps the cell list (and thus everything downstream)
+    // deterministic. Selectors resolve per benchmark, deduped, so a
+    // cell is never recorded (or keyed) twice.
+    let mut keys: Vec<(String, String, benchmarks::Input)> = Vec::new();
+    for b in &plan.benchmarks {
+        let bench = benchmarks::by_name(b).expect("validated");
+        for g in &plan.gpus {
+            for (name, _) in resolve_input_axis(b, &plan.inputs) {
+                let input = benchmarks::resolve_input(bench.as_ref(), &name)
+                    .expect("validated");
+                keys.push((b.clone(), g.clone(), input));
+            }
+        }
+    }
     let ctxs = pool::par_map_jobs(keys.len(), jobs, &|i| {
-        let (b, g) = &keys[i];
+        let (b, g, input) = &keys[i];
         let bench = benchmarks::by_name(b).expect("validated");
         let gpu = GpuSpec::by_name(g).expect("validated");
-        let rec = cached_space(bench.as_ref(), &gpu, &bench.default_input());
+        let rec = cached_space(bench.as_ref(), &gpu, input);
         // densify the oracle straight from the recording: no
         // HashMap<Config, CounterVec> is ever built on this path
         let matrix = Arc::new(PredictionMatrix::from_recorded(&rec));
@@ -590,13 +749,20 @@ pub fn run_plan(plan: &ExperimentPlan, jobs: usize) -> Result<PlanReport> {
             inst_reaction,
         }
     });
-    let cells: BTreeMap<(String, String), CellCtx> =
-        keys.into_iter().zip(ctxs).collect();
+    let cells: BTreeMap<(String, String, String), CellCtx> = keys
+        .into_iter()
+        .map(|(b, g, input)| (b, g, input.name))
+        .zip(ctxs)
+        .collect();
 
     let specs = plan.jobs();
     let results = pool::par_map_jobs(specs.len(), jobs, &|i| {
         let spec = &specs[i];
-        let ctx = &cells[&(spec.benchmark.clone(), spec.gpu.clone())];
+        let ctx = &cells[&(
+            spec.benchmark.clone(),
+            spec.gpu.clone(),
+            spec.input.clone(),
+        )];
         run_job(spec, plan, ctx)
     });
 
@@ -614,6 +780,7 @@ mod tests {
         ExperimentPlan {
             benchmarks: vec!["coulomb".into()],
             gpus: vec!["gtx1070".into()],
+            inputs: vec!["default".into()],
             searchers: vec!["random".into(), "profile".into()],
             seeds: 2,
             base_seed: 5,
@@ -671,6 +838,95 @@ mod tests {
         // and the error formats with an explanation, not just a name
         let msg = plan.validate().unwrap_err().to_string();
         assert!(msg.contains("gemm-full") && msg.contains("recorded"));
+    }
+
+    #[test]
+    fn input_axis_expands_resolves_and_tags_streams() {
+        let mut plan = tiny();
+        plan.inputs = vec!["default".into(), "alt".into()];
+        assert!(plan.has_input_axis());
+        assert!(plan.validate().is_ok());
+        let jobs = plan.jobs();
+        // 1 benchmark × 1 gpu × (input × searcher × lane)
+        assert_eq!(jobs.len(), 2 * 2 * 2);
+        assert_eq!(jobs[0].input, "grid256_atoms256");
+        assert!(jobs[0].input_default);
+        assert_eq!(jobs[4].input, "grid256_atoms64");
+        assert!(!jobs[4].input_default);
+        // default-input jobs keep the historical three-tag stream;
+        // non-default inputs get their own
+        assert_eq!(
+            jobs[0].rng_seed(5),
+            stream_seed(5, &["coulomb", "gtx1070", "random"], 0)
+        );
+        assert_eq!(
+            jobs[4].rng_seed(5),
+            stream_seed(
+                5,
+                &["coulomb", "gtx1070", "grid256_atoms64", "random"],
+                0
+            )
+        );
+        assert_ne!(jobs[0].rng_seed(5), jobs[4].rng_seed(5));
+        // overlapping selectors collapse to one axis entry
+        plan.inputs = vec!["default".into(), "grid256_atoms256".into()];
+        assert_eq!(plan.jobs().len(), tiny().jobs().len());
+    }
+
+    #[test]
+    fn input_axis_validation_and_unknown_selectors() {
+        let mut plan = tiny();
+        plan.inputs = vec![];
+        assert_eq!(plan.validate(), Err(PlanError::EmptyAxis("inputs")));
+        let mut plan = tiny();
+        plan.inputs = vec!["grid999".into()];
+        assert_eq!(
+            plan.validate(),
+            Err(PlanError::UnknownInput("coulomb".into(), "grid999".into()))
+        );
+    }
+
+    #[test]
+    fn default_input_plans_serialize_without_input_fields() {
+        // the bit-for-bit contract with pre-input-axis reports: a
+        // ["default"] axis must not leak new keys into the JSON
+        let plan = tiny();
+        assert!(!plan.has_input_axis());
+        let report = run_plan(&plan, 2).unwrap();
+        let text = report.to_pretty_string();
+        assert!(!text.contains("\"inputs\""));
+        assert!(!text.contains("\"input\""));
+        // a real input axis does serialize, in plan echo, jobs and
+        // aggregates
+        let mut plan = tiny();
+        plan.inputs = vec!["default".into(), "alt".into()];
+        let report = run_plan(&plan, 2).unwrap();
+        let text = report.to_pretty_string();
+        assert!(text.contains("\"inputs\""));
+        assert!(text.contains("\"input\": \"grid256_atoms64\""));
+        assert_eq!(report.aggregate_rows().len(), 4);
+        for a in report.aggregate_rows() {
+            assert_eq!(a.runs, plan.seeds, "cell double-counted");
+        }
+    }
+
+    #[test]
+    fn invalid_fraction_is_typed_and_formats() {
+        assert!(validate_fraction("train_fraction", 1.0).is_ok());
+        assert!(validate_fraction("train_fraction", 0.25).is_ok());
+        for bad in [0.0, -0.5, 1.5, f64::NAN, f64::INFINITY] {
+            let err = validate_fraction("train_fraction", bad).unwrap_err();
+            match err {
+                PlanError::InvalidFraction { axis, .. } => {
+                    assert_eq!(axis, "train_fraction")
+                }
+                other => panic!("wrong error {other:?}"),
+            }
+        }
+        let msg = validate_fraction("fractions", 2.0)
+            .unwrap_err()
+            .to_string();
+        assert!(msg.contains("fractions") && msg.contains("(0, 1]"));
     }
 
     #[test]

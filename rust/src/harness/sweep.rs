@@ -1,0 +1,598 @@
+//! Sample-efficiency sensitivity sweep: convergence vs training
+//! fraction.
+//!
+//! The paper's method is only economical because the source model is
+//! supposed to work when trained on a *fraction* of the tuning space
+//! ("requires the tuning space to be sampled on any GPU", §5) — and
+//! the sample-size literature (PAPERS.md: "The Impact of Sample
+//! Sizes", "Benchmarking optimization algorithms for auto-tuning GPU
+//! kernels") says such a claim needs a controlled sweep, not a single
+//! point. [`SweepPlan`] crosses `train-fraction × model × benchmark`
+//! on one fixed (source GPU → target GPU) endpoint pair and reports,
+//! per combination: the per-cell convergence statistics (median
+//! tests-to-well-performing with the same deterministic bootstrap CI
+//! the transfer report uses), the source model's quality at that
+//! fraction (median MAE / R² from [`EndpointQuality`]), and the
+//! aggregated step-domain best-so-far curve
+//! ([`super::aggregate_step_curves`] via the transfer report).
+//!
+//! Each combination is executed as a [`TransferPlan`] — the sweep is a
+//! thin deterministic driver over the transfer subsystem, so every
+//! guarantee transfers verbatim: RNG streams ignore the model kind and
+//! the fraction (common random numbers — a fraction changes the
+//! *model*, never the search's luck), recordings come from the
+//! process-wide cache (recorded once across all combinations), and
+//! serial/parallel runs produce byte-identical `SWEEP_REPORT.json`
+//! documents, which CI smoke-gates against a golden. Model-independent
+//! searchers (random, …) run **once** as a `"baseline"` lane instead
+//! of once per combination — see [`run_sweep_plan`].
+//!
+//! The oracle source reads exact counters and has nothing to train, so
+//! [`SweepPlan::combos`] collapses every `(Oracle, fraction)` pair to
+//! a single `(Oracle, 1.0)` reference row instead of re-running
+//! identical jobs per fraction.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{obj, Value};
+
+use super::convergence::StepCurvePoint;
+use super::plan::{
+    reads_model, validate_benchmarks, validate_fraction, validate_gpus,
+    validate_searchers, PlanError,
+};
+use super::transfer::{
+    run_transfer_plan, ModelSource, TransferPlan, TransferReport,
+};
+
+/// A train-fraction × model × benchmark sensitivity grid over one
+/// (source GPU → target GPU) endpoint pair.
+#[derive(Debug, Clone)]
+pub struct SweepPlan {
+    pub benchmarks: Vec<String>,
+    /// GPU the source model is sampled/trained on.
+    pub source_gpu: String,
+    /// GPU the search runs on (may equal `source_gpu`; a differing
+    /// pair measures sample efficiency *under* hardware portability).
+    pub target_gpu: String,
+    /// Training fractions to sweep, each in `(0, 1]`.
+    pub fractions: Vec<f64>,
+    /// Model sources to cross with the fractions (oracle rows collapse
+    /// to one fraction-independent reference, see [`SweepPlan::combos`]).
+    pub models: Vec<ModelSource>,
+    pub searchers: Vec<String>,
+    /// Seeded repetitions per cell.
+    pub seeds: usize,
+    pub base_seed: u64,
+    pub max_tests: usize,
+    pub within_frac: f64,
+}
+
+impl SweepPlan {
+    /// The full sensitivity sweep: 5 benchmarks, the paper's §4.4
+    /// cross-generation pair (gtx1070 → rtx2080), five fractions, tree
+    /// model plus the oracle reference.
+    pub fn full(seeds: usize, base_seed: u64) -> Self {
+        SweepPlan {
+            benchmarks: ["coulomb", "transpose", "gemm", "nbody", "convolution"]
+                .map(String::from)
+                .to_vec(),
+            source_gpu: "gtx1070".into(),
+            target_gpu: "rtx2080".into(),
+            fractions: vec![0.05, 0.1, 0.25, 0.5, 1.0],
+            models: vec![ModelSource::Tree, ModelSource::Oracle],
+            searchers: vec!["random".into(), "profile".into()],
+            seeds,
+            base_seed,
+            max_tests: 1000,
+            within_frac: 0.10,
+        }
+    }
+
+    /// The CI smoke sweep: 1 benchmark, the cross-generation pair,
+    /// three fractions × {tree, oracle-reference} — small enough to
+    /// gate a PR, wide enough to exercise fractional sampling, quality
+    /// metrics and the curve embedding end-to-end.
+    pub fn smoke(base_seed: u64) -> Self {
+        SweepPlan {
+            benchmarks: vec!["coulomb".into()],
+            source_gpu: "gtx1070".into(),
+            target_gpu: "rtx2080".into(),
+            fractions: vec![0.25, 0.5, 1.0],
+            models: vec![ModelSource::Tree, ModelSource::Oracle],
+            searchers: vec!["random".into(), "profile".into()],
+            seeds: 2,
+            base_seed,
+            max_tests: 60,
+            within_frac: 0.10,
+        }
+    }
+
+    /// The (model, fraction) combinations actually executed, in
+    /// deterministic plan order (models outer, fractions inner).
+    /// Oracle rows are fraction-independent (exact counters, nothing
+    /// to train), so they collapse to a single `(Oracle, 1.0)` entry —
+    /// re-running them per fraction would duplicate byte-identical
+    /// jobs.
+    pub fn combos(&self) -> Vec<(ModelSource, f64)> {
+        let mut out: Vec<(ModelSource, f64)> = Vec::new();
+        for &m in &self.models {
+            match m {
+                ModelSource::Oracle => {
+                    if !out.contains(&(ModelSource::Oracle, 1.0)) {
+                        out.push((ModelSource::Oracle, 1.0));
+                    }
+                }
+                ModelSource::Tree => {
+                    for &f in &self.fractions {
+                        if !out.contains(&(ModelSource::Tree, f)) {
+                            out.push((ModelSource::Tree, f));
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The [`TransferPlan`] realizing one (model, fraction) combination
+    /// over the given searcher subset — the single place the sweep's
+    /// axes are lowered onto the transfer subsystem.
+    fn transfer_plan(
+        &self,
+        model: ModelSource,
+        fraction: f64,
+        searchers: Vec<String>,
+    ) -> TransferPlan {
+        TransferPlan {
+            benchmarks: self.benchmarks.clone(),
+            source_gpus: vec![self.source_gpu.clone()],
+            source_inputs: vec!["default".into()],
+            target_gpus: vec![self.target_gpu.clone()],
+            target_inputs: vec!["default".into()],
+            model,
+            train_fraction: fraction,
+            searchers,
+            seeds: self.seeds,
+            base_seed: self.base_seed,
+            max_tests: self.max_tests,
+            within_frac: self.within_frac,
+            include_curves: true,
+        }
+    }
+
+    /// Typed validation, sharing every axis helper with the other plan
+    /// flavours; each fraction must lie in `(0, 1]`
+    /// ([`PlanError::InvalidFraction`]).
+    pub fn validate(&self) -> Result<(), PlanError> {
+        validate_benchmarks("benchmarks", &self.benchmarks)?;
+        validate_gpus("source_gpu", std::slice::from_ref(&self.source_gpu))?;
+        validate_gpus("target_gpu", std::slice::from_ref(&self.target_gpu))?;
+        if self.fractions.is_empty() {
+            return Err(PlanError::EmptyAxis("fractions"));
+        }
+        for &f in &self.fractions {
+            validate_fraction("fractions", f)?;
+        }
+        if self.models.is_empty() {
+            return Err(PlanError::EmptyAxis("models"));
+        }
+        validate_searchers("searchers", &self.searchers)?;
+        if self.seeds == 0 {
+            return Err(PlanError::EmptyAxis("seeds"));
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Value {
+        obj(vec![
+            ("benchmarks", Value::from(self.benchmarks.clone())),
+            ("source_gpu", Value::from(self.source_gpu.clone())),
+            ("target_gpu", Value::from(self.target_gpu.clone())),
+            (
+                "fractions",
+                Value::Arr(
+                    self.fractions.iter().map(|&f| Value::from(f)).collect(),
+                ),
+            ),
+            (
+                "models",
+                Value::from(
+                    self.models
+                        .iter()
+                        .map(|m| m.name().to_string())
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+            ("searchers", Value::from(self.searchers.clone())),
+            ("seeds", Value::from(self.seeds)),
+            // string for the same 2^53 reason as the other plan echoes
+            ("base_seed", Value::from(self.base_seed.to_string())),
+            ("max_tests", Value::from(self.max_tests)),
+            ("within_frac", Value::from(self.within_frac)),
+        ])
+    }
+}
+
+/// One (benchmark, model, fraction, searcher) point of the sweep.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub benchmark: String,
+    /// Model-source name (`"oracle"` | `"tree"`), or `"baseline"` for
+    /// the once-run model-independent searcher lane (random etc.),
+    /// whose quality columns are zeroed — no model is read there.
+    pub model: &'static str,
+    pub fraction: f64,
+    pub searcher: String,
+    pub runs: usize,
+    pub wp_hits: usize,
+    pub median_tests_to_wp: f64,
+    /// Deterministic percentile-bootstrap CI around the median above
+    /// (inherited from the transfer aggregates).
+    pub tests_to_wp_ci: (f64, f64),
+    pub mean_tests_to_wp: f64,
+    pub median_best_over_oracle: f64,
+    /// Source-model quality at this fraction: median MAE / R² across
+    /// the modeled counters (0 / 1 for the oracle reference).
+    pub median_mae: f64,
+    pub median_r2: f64,
+    /// Rows the source model trained on.
+    pub n_train: usize,
+    /// Aggregated step-domain best-so-far curve for this cell
+    /// ([`super::aggregate_step_curves`] output, via the transfer
+    /// report).
+    pub curve: Vec<StepCurvePoint>,
+}
+
+/// A completed sweep: one [`SweepCell`] per (combination, benchmark,
+/// searcher), in deterministic plan order.
+pub struct SweepReport {
+    pub plan: SweepPlan,
+    pub cells: Vec<SweepCell>,
+}
+
+impl SweepReport {
+    /// Deterministic JSON document (`SWEEP_REPORT.json`).
+    pub fn to_json(&self) -> Value {
+        let cells: Vec<Value> = self
+            .cells
+            .iter()
+            .map(|c| {
+                obj(vec![
+                    ("benchmark", Value::from(c.benchmark.clone())),
+                    ("model", Value::from(c.model)),
+                    ("fraction", Value::from(c.fraction)),
+                    ("searcher", Value::from(c.searcher.clone())),
+                    ("runs", Value::from(c.runs)),
+                    ("wp_hits", Value::from(c.wp_hits)),
+                    (
+                        "median_tests_to_wp",
+                        Value::from(c.median_tests_to_wp),
+                    ),
+                    ("tests_to_wp_ci_lo", Value::from(c.tests_to_wp_ci.0)),
+                    ("tests_to_wp_ci_hi", Value::from(c.tests_to_wp_ci.1)),
+                    ("mean_tests_to_wp", Value::from(c.mean_tests_to_wp)),
+                    (
+                        "median_best_over_oracle",
+                        Value::from(c.median_best_over_oracle),
+                    ),
+                    ("median_mae", Value::from(c.median_mae)),
+                    ("median_r2", Value::from(c.median_r2)),
+                    ("n_train", Value::from(c.n_train)),
+                    (
+                        "curve",
+                        Value::Arr(
+                            c.curve
+                                .iter()
+                                .map(|p| {
+                                    obj(vec![
+                                        ("step", Value::from(p.step)),
+                                        (
+                                            "median_ms",
+                                            Value::from(p.median_ms),
+                                        ),
+                                        ("mean_ms", Value::from(p.mean_ms)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("schema", Value::from("pcat-sweep-report/v1")),
+            ("plan", self.plan.to_json()),
+            ("cells", Value::Arr(cells)),
+        ])
+    }
+
+    /// The canonical byte representation compared by the smoke gate.
+    pub fn to_pretty_string(&self) -> String {
+        let mut s = self.to_json().to_string_pretty(1);
+        s.push('\n');
+        s
+    }
+
+    pub fn write_to(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_pretty_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// One summary line per cell (profile rows carry the model-quality
+    /// columns; the random baseline is model-independent).
+    pub fn summary_lines(&self) -> Vec<String> {
+        self.cells
+            .iter()
+            .map(|c| {
+                format!(
+                    "{:<12} {:<7} f={:<5} {:<10} steps {:>6.1} \
+                     [{:>6.1}, {:>6.1}]  best {:>5.2}x  mae {:>10.3} \
+                     r2 {:>6.3}  n_train {:>5}",
+                    c.benchmark,
+                    c.model,
+                    c.fraction,
+                    c.searcher,
+                    c.median_tests_to_wp,
+                    c.tests_to_wp_ci.0,
+                    c.tests_to_wp_ci.1,
+                    c.median_best_over_oracle,
+                    c.median_mae,
+                    c.median_r2,
+                    c.n_train,
+                )
+            })
+            .collect()
+    }
+}
+
+/// Extract [`SweepCell`]s from one lowered transfer report. `quality`
+/// is false for the baseline lane, whose searchers never read the
+/// source model — its rows carry zeroed quality columns instead of a
+/// misleading endpoint fit.
+fn extract_cells(
+    report: &TransferReport,
+    model: &'static str,
+    fraction: f64,
+    quality: bool,
+    cells: &mut Vec<SweepCell>,
+) {
+    let curves = report.step_curves();
+    for a in report.aggregate_rows() {
+        let q = if quality {
+            // one source endpoint per benchmark in a lowered plan
+            report
+                .model_quality
+                .iter()
+                .find(|q| q.benchmark == a.benchmark)
+        } else {
+            None
+        };
+        let curve = curves
+            .iter()
+            .find(|(id, _)| {
+                id.benchmark == a.benchmark && id.searcher == a.searcher
+            })
+            .map(|(_, pts)| pts.clone())
+            .unwrap_or_default();
+        cells.push(SweepCell {
+            benchmark: a.benchmark.clone(),
+            model,
+            fraction,
+            searcher: a.searcher.clone(),
+            runs: a.runs,
+            wp_hits: a.wp_hits,
+            median_tests_to_wp: a.median_tests_to_wp,
+            tests_to_wp_ci: a.tests_to_wp_ci,
+            mean_tests_to_wp: a.mean_tests_to_wp,
+            median_best_over_oracle: a.median_best_over_oracle,
+            median_mae: q.map(|q| q.median_mae()).unwrap_or(0.0),
+            median_r2: q.map(|q| q.median_r2()).unwrap_or(0.0),
+            n_train: q.map(|q| q.n_train).unwrap_or(0),
+            curve,
+        });
+    }
+}
+
+/// Execute a sweep with up to `jobs` worker threads: one baseline
+/// [`TransferPlan`] for the model-independent searchers (run **once**
+/// — their RNG streams ignore the model and the fraction, so running
+/// them per combination would repeat byte-identical searches; the
+/// transfer runner's own fan-out dedup only covers one plan, not a
+/// sequence of them), then one [`TransferPlan`] per (model, fraction)
+/// combination over the model-reading searchers, in plan order.
+///
+/// Determinism is inherited wholesale from the transfer runner — every
+/// lowered report is a pure function of its plan, the combinations are
+/// lowered in a fixed order, and the extraction only reads aggregate
+/// rows (sorted key order) and the endpoint-quality list (plan order).
+/// Worker count affects wall-clock and nothing else; the recording
+/// cache makes the recordings a one-time cost across all combinations.
+pub fn run_sweep_plan(plan: &SweepPlan, jobs: usize) -> Result<SweepReport> {
+    plan.validate()?;
+
+    let (dependent, independent): (Vec<String>, Vec<String>) = plan
+        .searchers
+        .iter()
+        .cloned()
+        .partition(|s| reads_model(s));
+
+    let mut cells: Vec<SweepCell> = Vec::new();
+    if !independent.is_empty() {
+        // baseline lane: the oracle matrix is built (cheaply, no
+        // training) but never read by these searchers; label the rows
+        // "baseline" with zeroed quality columns
+        let tp = plan.transfer_plan(ModelSource::Oracle, 1.0, independent);
+        let report = run_transfer_plan(&tp, jobs)?;
+        extract_cells(&report, "baseline", 1.0, false, &mut cells);
+    }
+    if !dependent.is_empty() {
+        for (model, fraction) in plan.combos() {
+            let tp =
+                plan.transfer_plan(model, fraction, dependent.clone());
+            let report = run_transfer_plan(&tp, jobs)?;
+            extract_cells(
+                &report,
+                model.name(),
+                fraction,
+                true,
+                &mut cells,
+            );
+        }
+    }
+
+    Ok(SweepReport {
+        plan: plan.clone(),
+        cells,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SweepPlan {
+        SweepPlan {
+            benchmarks: vec!["coulomb".into()],
+            source_gpu: "gtx1070".into(),
+            target_gpu: "gtx1070".into(),
+            fractions: vec![0.5, 1.0],
+            models: vec![ModelSource::Tree, ModelSource::Oracle],
+            searchers: vec!["random".into(), "profile".into()],
+            seeds: 2,
+            base_seed: 7,
+            max_tests: 40,
+            within_frac: 0.10,
+        }
+    }
+
+    #[test]
+    fn combos_collapse_the_oracle_reference() {
+        let plan = tiny();
+        assert_eq!(
+            plan.combos(),
+            vec![
+                (ModelSource::Tree, 0.5),
+                (ModelSource::Tree, 1.0),
+                (ModelSource::Oracle, 1.0),
+            ]
+        );
+        // duplicate fractions collapse too
+        let mut plan = tiny();
+        plan.fractions = vec![0.5, 0.5];
+        assert_eq!(plan.combos().len(), 2);
+    }
+
+    #[test]
+    fn validation_rejects_bad_axes_with_typed_errors() {
+        let mut plan = tiny();
+        plan.fractions = vec![];
+        assert_eq!(plan.validate(), Err(PlanError::EmptyAxis("fractions")));
+        let mut plan = tiny();
+        plan.fractions = vec![0.5, 1.5];
+        match plan.validate() {
+            Err(PlanError::InvalidFraction { axis, value }) => {
+                assert_eq!(axis, "fractions");
+                assert_eq!(value, 1.5);
+            }
+            other => panic!("got {other:?}"),
+        }
+        let mut plan = tiny();
+        plan.models = vec![];
+        assert_eq!(plan.validate(), Err(PlanError::EmptyAxis("models")));
+        let mut plan = tiny();
+        plan.target_gpu = "titan".into();
+        assert_eq!(plan.validate(), Err(PlanError::UnknownGpu("titan".into())));
+        let mut plan = tiny();
+        plan.benchmarks = vec!["gemm-full".into()];
+        assert_eq!(
+            plan.validate(),
+            Err(PlanError::NoRecording("gemm-full".into()))
+        );
+        assert!(tiny().validate().is_ok());
+        // the runner surfaces validation before any recording
+        let mut plan = tiny();
+        plan.fractions = vec![0.0];
+        assert!(run_sweep_plan(&plan, 2).is_err());
+    }
+
+    #[test]
+    fn serial_and_parallel_sweeps_are_byte_identical() {
+        let plan = tiny();
+        let a = run_sweep_plan(&plan, 1).unwrap().to_pretty_string();
+        let b = run_sweep_plan(&plan, 8).unwrap().to_pretty_string();
+        assert_eq!(a, b);
+        assert!(a.contains("\"schema\": \"pcat-sweep-report/v1\""));
+        assert!(a.contains("\"curve\""));
+    }
+
+    #[test]
+    fn cells_cover_the_grid_and_carry_quality() {
+        let plan = tiny();
+        let report = run_sweep_plan(&plan, 4).unwrap();
+        // 1 baseline (random, run once) + 3 combos × 1 profile row
+        assert_eq!(report.cells.len(), 4);
+        for c in &report.cells {
+            assert_eq!(c.runs, plan.seeds);
+            assert!(!c.curve.is_empty(), "curves embedded");
+            let (lo, hi) = c.tests_to_wp_ci;
+            assert!(lo <= c.median_tests_to_wp && c.median_tests_to_wp <= hi);
+        }
+        // the model-independent random searcher runs exactly once —
+        // its streams ignore model and fraction, so per-combo re-runs
+        // would duplicate byte-identical searches — and carries no
+        // model-quality numbers
+        let randoms: Vec<&SweepCell> = report
+            .cells
+            .iter()
+            .filter(|c| c.searcher == "random")
+            .collect();
+        assert_eq!(randoms.len(), 1);
+        assert_eq!(randoms[0].model, "baseline");
+        assert_eq!(randoms[0].median_mae, 0.0);
+        assert_eq!(randoms[0].n_train, 0);
+        // oracle reference: exact-zero model error
+        let oracle = report
+            .cells
+            .iter()
+            .find(|c| c.model == "oracle" && c.searcher == "profile")
+            .unwrap();
+        assert_eq!(oracle.median_mae, 0.0);
+        assert_eq!(oracle.median_r2, 1.0);
+        assert!(oracle.n_train > 0);
+        // tree rows: n_train follows the fraction
+        let half = report
+            .cells
+            .iter()
+            .find(|c| c.model == "tree" && c.fraction == 0.5)
+            .unwrap();
+        let full = report
+            .cells
+            .iter()
+            .find(|c| c.model == "tree" && c.fraction == 1.0)
+            .unwrap();
+        assert!(half.n_train < full.n_train);
+    }
+
+    #[test]
+    fn model_independent_only_plans_skip_the_combo_lane() {
+        // a searcher axis with no model reader still validates and
+        // produces only the baseline lane (and vice versa: no
+        // EmptyAxis from an empty lowered searcher list)
+        let mut plan = tiny();
+        plan.searchers = vec!["random".into()];
+        let report = run_sweep_plan(&plan, 2).unwrap();
+        assert_eq!(report.cells.len(), 1);
+        assert_eq!(report.cells[0].model, "baseline");
+        let mut plan = tiny();
+        plan.searchers = vec!["profile".into()];
+        let report = run_sweep_plan(&plan, 2).unwrap();
+        assert_eq!(report.cells.len(), 3);
+        assert!(report.cells.iter().all(|c| c.searcher == "profile"));
+    }
+}

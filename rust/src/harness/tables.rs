@@ -19,6 +19,7 @@ use crate::util::stats::mean;
 use crate::util::table::{markdown, speedup};
 
 use super::steps::{avg_steps_to_well_performing, par_map_seeds};
+use super::sweep::SweepReport;
 use super::transfer::{TransferAggregate, TransferPlan, TransferReport};
 use super::{ExperimentOpts, Report};
 
@@ -841,6 +842,129 @@ pub fn transfer_input_matrix(report: &TransferReport) -> String {
     md
 }
 
+/// Render a [`TransferReport`]'s per-source-endpoint model quality as
+/// a grid: one table per benchmark, rows = modeled counters, columns =
+/// source endpoints (`gpu:input`), cell = R² of the trained source
+/// model on the recording's held-out remainder (the full recording at
+/// `train_fraction = 1.0`). Two summary rows carry the median MAE and
+/// median R² across counters. Empty when the report carries no quality
+/// entries, so callers can print unconditionally.
+pub fn model_quality_matrix(report: &TransferReport) -> String {
+    let mut md = String::new();
+    for b in &report.plan.benchmarks {
+        let endpoints: Vec<&crate::harness::EndpointQuality> = report
+            .model_quality
+            .iter()
+            .filter(|q| q.benchmark == *b)
+            .collect();
+        if endpoints.is_empty() {
+            continue;
+        }
+        let header: Vec<String> = std::iter::once("counter".to_string())
+            .chain(endpoints.iter().map(|q| {
+                format!("{}:{}", q.source_gpu, q.source_input)
+            }))
+            .collect();
+        let header_refs: Vec<&str> =
+            header.iter().map(|s| s.as_str()).collect();
+        let n_counters = endpoints[0].counters.len();
+        let mut rows = Vec::new();
+        for ci in 0..n_counters {
+            let mut row = vec![endpoints[0].counters[ci].counter.to_string()];
+            for q in &endpoints {
+                row.push(format!("{:.3}", q.counters[ci].r2));
+            }
+            rows.push(row);
+        }
+        let mut mae_row = vec!["median MAE".to_string()];
+        let mut r2_row = vec!["median R²".to_string()];
+        for q in &endpoints {
+            mae_row.push(format!("{:.3}", q.median_mae()));
+            r2_row.push(format!("{:.3}", q.median_r2()));
+        }
+        rows.push(mae_row);
+        rows.push(r2_row);
+        // the fraction actually applied at these endpoints (1.0 for
+        // the oracle source regardless of the plan knob)
+        md.push_str(&format!(
+            "\n## {b} — source-model quality (R² per counter, \
+             train fraction {})\n\n",
+            endpoints[0].train_fraction
+        ));
+        md.push_str(&markdown(&header_refs, &rows));
+    }
+    md
+}
+
+/// Render a [`SweepReport`] as a convergence-vs-fraction grid: one
+/// table per benchmark, rows = training fractions, one column per
+/// model source with the profile searcher's median tests-to-wp (and
+/// its bootstrap CI), plus the model's median MAE at that fraction and
+/// the fraction-independent random baseline. The shape the sample-size
+/// literature asks for: does convergence survive smaller samples?
+pub fn sweep_matrix(report: &SweepReport) -> String {
+    let mut md = String::new();
+    for b in &report.plan.benchmarks {
+        let cells: Vec<_> = report
+            .cells
+            .iter()
+            .filter(|c| c.benchmark == *b)
+            .collect();
+        if cells.is_empty() {
+            continue;
+        }
+        let random = cells
+            .iter()
+            .find(|c| c.searcher == "random")
+            .map(|c| c.median_tests_to_wp);
+        let mut rows = Vec::new();
+        for c in cells.iter().filter(|c| c.searcher == "profile") {
+            rows.push(vec![
+                c.model.to_string(),
+                format!("{}", c.fraction),
+                format!("{}", c.n_train),
+                format!(
+                    "{:.1} [{:.1}, {:.1}]",
+                    c.median_tests_to_wp,
+                    c.tests_to_wp_ci.0,
+                    c.tests_to_wp_ci.1
+                ),
+                match random {
+                    Some(r) => {
+                        speedup(r / c.median_tests_to_wp.max(1.0))
+                    }
+                    None => "-".into(),
+                },
+                format!("{:.3}", c.median_mae),
+                format!("{:.3}", c.median_r2),
+            ]);
+        }
+        md.push_str(&format!(
+            "\n## {b} — convergence vs training fraction \
+             ({} → {}{})\n\n",
+            report.plan.source_gpu,
+            report.plan.target_gpu,
+            match random {
+                Some(r) => format!(", random baseline {r:.1} steps"),
+                None => String::new(),
+            }
+        ));
+        md.push_str(&markdown(
+            &[
+                "model",
+                "fraction",
+                "n_train",
+                "median steps [95% CI]",
+                "vs random",
+                "median MAE",
+                "median R²",
+            ],
+            &rows,
+        ));
+    }
+    md
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -887,6 +1011,7 @@ mod tests {
             target_gpus: vec!["gtx1070".into()],
             target_inputs: vec!["default".into()],
             model: crate::harness::ModelSource::Oracle,
+            train_fraction: 1.0,
             searchers: vec!["random".into(), "profile".into()],
             seeds: 2,
             base_seed: 3,
@@ -914,6 +1039,7 @@ mod tests {
             target_gpus: vec!["gtx1070".into()],
             target_inputs: vec!["default".into(), "alt".into()],
             model: crate::harness::ModelSource::Oracle,
+            train_fraction: 1.0,
             searchers: vec!["random".into(), "profile".into()],
             seeds: 2,
             base_seed: 3,
@@ -930,5 +1056,62 @@ mod tests {
         assert!(md.contains("×"), "improvement factors rendered");
         // and the GPU grid still renders its default-input diagonal
         assert!(transfer_matrix(&report).contains("## coulomb"));
+    }
+
+    #[test]
+    fn model_quality_matrix_renders_per_counter_grid() {
+        let plan = TransferPlan {
+            benchmarks: vec!["coulomb".into()],
+            source_gpus: vec!["gtx1070".into(), "rtx2080".into()],
+            source_inputs: vec!["default".into()],
+            target_gpus: vec!["gtx1070".into()],
+            target_inputs: vec!["default".into()],
+            model: crate::harness::ModelSource::Tree,
+            train_fraction: 0.5,
+            searchers: vec!["random".into(), "profile".into()],
+            seeds: 2,
+            base_seed: 3,
+            max_tests: 40,
+            within_frac: 0.10,
+            include_curves: false,
+        };
+        let report = run_transfer_plan(&plan, 4).unwrap();
+        let md = model_quality_matrix(&report);
+        assert!(md.contains("source-model quality"));
+        assert!(md.contains("train fraction 0.5"));
+        // both endpoints as columns, counters as rows, summary rows
+        assert!(md.contains("gtx1070:grid256_atoms256"));
+        assert!(md.contains("rtx2080:grid256_atoms256"));
+        assert!(md.contains("INST_F32"));
+        assert!(md.contains("median MAE"));
+        assert!(md.contains("median R²"));
+    }
+
+    #[test]
+    fn sweep_matrix_renders_fraction_rows() {
+        use crate::harness::{run_sweep_plan, SweepPlan};
+        let plan = SweepPlan {
+            benchmarks: vec!["coulomb".into()],
+            source_gpu: "gtx1070".into(),
+            target_gpu: "gtx1070".into(),
+            fractions: vec![0.5, 1.0],
+            models: vec![
+                crate::harness::ModelSource::Tree,
+                crate::harness::ModelSource::Oracle,
+            ],
+            searchers: vec!["random".into(), "profile".into()],
+            seeds: 2,
+            base_seed: 3,
+            max_tests: 40,
+            within_frac: 0.10,
+        };
+        let report = run_sweep_plan(&plan, 4).unwrap();
+        let md = sweep_matrix(&report);
+        assert!(md.contains("## coulomb — convergence vs training fraction"));
+        assert!(md.contains("random baseline"));
+        // one profile row per combo: tree×2 fractions + oracle ref
+        assert_eq!(md.matches("| tree |").count(), 2);
+        assert_eq!(md.matches("| oracle |").count(), 1);
+        assert!(md.contains("×"), "vs-random factors rendered");
     }
 }

@@ -17,7 +17,13 @@
 //! error), [`ModelSource::Tree`] trains per-counter
 //! [`DecisionTreeModel`]s on the source recording (§3.4.2 — the model
 //! the paper actually ships) and densifies their predictions through
-//! [`PredictionMatrix::build`].
+//! [`PredictionMatrix::build`]. The tree source trains on
+//! `train_fraction` of the recording (a deterministic stratified
+//! sample, [`crate::model::stratified_indices`]) — the paper's §5
+//! partial-exploration setting — and every source endpoint's model
+//! quality (per-counter MAE/RMSE/R² vs the held-out remainder) is
+//! computed once in the pre-pass and embedded in the schema-v3 report
+//! as [`EndpointQuality`].
 //!
 //! Sharing discipline (§Perf): each `(benchmark, source GPU, source
 //! input)` model matrix is built (and, for the tree source, trained)
@@ -69,21 +75,25 @@ use crate::benchmarks::{self, cached_space, resolve_input, Input};
 use crate::coordinator::Tuner;
 use crate::counters::CounterSet;
 use crate::gpusim::GpuSpec;
-use crate::model::{dataset_full, DecisionTreeModel, PredictionMatrix};
+use crate::model::{
+    dataset_from_indices, dataset_full, sample_size, stratified_indices,
+    DecisionTreeModel, PredictionMatrix, MODELED_COUNTERS,
+};
 use crate::searcher::{Budget, CostModel};
 use crate::tuning::RecordedSpace;
 use crate::util::json::{obj, Value};
 use crate::util::pool;
 use crate::util::rng::{stream_seed, Rng};
-use crate::util::stats::{bootstrap_ci, mean, median};
+use crate::util::stats::{bootstrap_ci, mae, mean, median, r_squared, rmse};
 
 use super::convergence::{
     aggregate_step_curves, aggregate_time_curves, steps_to_within,
     ConvergencePoint, StepCurvePoint,
 };
 use super::plan::{
-    reads_model, searcher_choice, validate_benchmarks, validate_gpus,
-    validate_inputs, validate_searchers, PlanError,
+    reads_model, resolve_input_axis, searcher_choice, validate_benchmarks,
+    validate_fraction, validate_gpus, validate_inputs, validate_searchers,
+    PlanError,
 };
 
 /// Bootstrap resamples per cell CI (fixed: part of the report's
@@ -144,6 +154,18 @@ pub struct TransferPlan {
     pub target_inputs: Vec<String>,
     /// How the source matrix is built (exact PCs vs trained trees).
     pub model: ModelSource,
+    /// Fraction of each source recording the tree source trains on
+    /// (§5: the method only pays off when the source model works from
+    /// a *partial* exploration). Sampling is stratified over the
+    /// space, nested across fractions and keyed by the source
+    /// endpoint's own RNG stream
+    /// ([`crate::model::stratified_indices`]), so it is byte-identical
+    /// across `--jobs`. `1.0` trains on the full recording —
+    /// bit-for-bit the pre-fraction behaviour (no sampling randomness
+    /// is consumed). The oracle source reads exact counters and
+    /// ignores this knob. Must lie in `(0, 1]`
+    /// ([`PlanError::InvalidFraction`] otherwise).
+    pub train_fraction: f64,
     pub searchers: Vec<String>,
     /// Seeded repetitions per cell.
     pub seeds: usize,
@@ -178,6 +200,7 @@ impl TransferPlan {
             target_gpus: gpus,
             target_inputs: vec!["default".into()],
             model: ModelSource::Oracle,
+            train_fraction: 1.0,
             searchers: vec!["random".into(), "profile".into()],
             seeds,
             base_seed,
@@ -202,6 +225,7 @@ impl TransferPlan {
             target_gpus: pair,
             target_inputs: vec!["default".into(), "alt".into()],
             model: ModelSource::Oracle,
+            train_fraction: 1.0,
             searchers: vec!["random".into(), "profile".into()],
             seeds: 2,
             base_seed,
@@ -222,41 +246,11 @@ impl TransferPlan {
     pub fn jobs(&self) -> Vec<TransferJobSpec> {
         let mut out = Vec::new();
         for b in &self.benchmarks {
-            let bench = benchmarks::by_name(b);
-            // (resolved name, is the benchmark's default input)
-            let resolve = |sel: &str| -> (String, bool) {
-                match bench
-                    .as_ref()
-                    .and_then(|bn| resolve_input(bn.as_ref(), sel))
-                {
-                    Some(input) => {
-                        let is_default = bench
-                            .as_ref()
-                            .map(|bn| bn.default_input().name == input.name)
-                            .unwrap_or(false);
-                        (input.name, is_default)
-                    }
-                    // unvalidated plan: pass the selector through so
-                    // validation still names the offender
-                    None => (
-                        sel.to_string(),
-                        sel == benchmarks::DEFAULT_INPUT_SELECTOR,
-                    ),
-                }
-            };
-            // resolved axes, order-preserving, deduped by concrete name
-            let resolve_axis = |sels: &[String]| -> Vec<(String, bool)> {
-                let mut axis: Vec<(String, bool)> = Vec::new();
-                for sel in sels {
-                    let entry = resolve(sel);
-                    if !axis.iter().any(|(n, _)| *n == entry.0) {
-                        axis.push(entry);
-                    }
-                }
-                axis
-            };
-            let source_inputs = resolve_axis(&self.source_inputs);
-            let target_inputs = resolve_axis(&self.target_inputs);
+            // resolved (name, is-default) axes, order-preserving and
+            // deduped — the [`resolve_input_axis`] helper shared with
+            // [`super::ExperimentPlan`]
+            let source_inputs = resolve_input_axis(b, &self.source_inputs);
+            let target_inputs = resolve_input_axis(b, &self.target_inputs);
             for s in &self.source_gpus {
                 for (source_input, _) in &source_inputs {
                     for t in &self.target_gpus {
@@ -296,6 +290,7 @@ impl TransferPlan {
         validate_gpus("target_gpus", &self.target_gpus)?;
         validate_inputs("source_inputs", &self.benchmarks, &self.source_inputs)?;
         validate_inputs("target_inputs", &self.benchmarks, &self.target_inputs)?;
+        validate_fraction("train_fraction", self.train_fraction)?;
         validate_searchers("searchers", &self.searchers)?;
         if self.seeds == 0 {
             return Err(PlanError::EmptyAxis("seeds"));
@@ -311,6 +306,7 @@ impl TransferPlan {
             ("target_gpus", Value::from(self.target_gpus.clone())),
             ("target_inputs", Value::from(self.target_inputs.clone())),
             ("model", Value::from(self.model.name())),
+            ("train_fraction", Value::from(self.train_fraction)),
             ("searchers", Value::from(self.searchers.clone())),
             ("seeds", Value::from(self.seeds)),
             // string for the same 2^53 reason as ExperimentPlan
@@ -504,6 +500,93 @@ fn run_transfer_job(
     }
 }
 
+/// Goodness-of-fit of one modeled counter's source-side predictions
+/// against the recording.
+#[derive(Debug, Clone)]
+pub struct CounterQuality {
+    /// Counter abbreviation ([`crate::counters::Counter::abbr`]).
+    pub counter: &'static str,
+    pub mae: f64,
+    pub rmse: f64,
+    pub r2: f64,
+}
+
+/// Per-source-endpoint model quality: how well the source matrix
+/// (trained trees, or the oracle itself) predicts the recorded
+/// counters — computed **once** per (benchmark, source GPU, source
+/// input) in the deterministic pre-pass and embedded in the report, so
+/// portability numbers can be read next to the model error that
+/// produced them (ROADMAP item (d)).
+///
+/// Metrics are evaluated on the **held-out remainder** of the
+/// recording (the configurations the fractional sampler did not hand
+/// to training) whenever that remainder is non-empty; at
+/// `train_fraction = 1.0` there is no remainder, so they fall back to
+/// the full recording — the training split — and `holdout` is false.
+/// The oracle source reproduces the recording by construction, so its
+/// metrics are exactly zero error (R² = 1) at any fraction — a
+/// property-tested calibration anchor for the pipeline.
+#[derive(Debug, Clone)]
+pub struct EndpointQuality {
+    pub benchmark: String,
+    pub source_gpu: String,
+    pub source_input: String,
+    /// The fraction actually **applied** to this endpoint's training —
+    /// the plan's `train_fraction` for the tree source, always `1.0`
+    /// for the oracle (which ignores the knob).
+    pub train_fraction: f64,
+    /// Rows the model trained on.
+    pub n_train: usize,
+    /// Rows the metrics were evaluated on.
+    pub n_eval: usize,
+    /// True when the evaluation rows are a held-out remainder disjoint
+    /// from training; false when they are the full recording.
+    pub holdout: bool,
+    /// Per-counter fit, in [`MODELED_COUNTERS`] order.
+    pub counters: Vec<CounterQuality>,
+}
+
+impl EndpointQuality {
+    /// Median MAE across the modeled counters — the one-number summary
+    /// the sweep report tracks against the training fraction.
+    pub fn median_mae(&self) -> f64 {
+        median(&self.counters.iter().map(|c| c.mae).collect::<Vec<_>>())
+    }
+
+    /// Median R² across the modeled counters.
+    pub fn median_r2(&self) -> f64 {
+        median(&self.counters.iter().map(|c| c.r2).collect::<Vec<_>>())
+    }
+
+    fn to_json(&self) -> Value {
+        obj(vec![
+            ("benchmark", Value::from(self.benchmark.clone())),
+            ("source_gpu", Value::from(self.source_gpu.clone())),
+            ("source_input", Value::from(self.source_input.clone())),
+            ("train_fraction", Value::from(self.train_fraction)),
+            ("n_train", Value::from(self.n_train)),
+            ("n_eval", Value::from(self.n_eval)),
+            ("holdout", Value::from(self.holdout)),
+            (
+                "counters",
+                Value::Arr(
+                    self.counters
+                        .iter()
+                        .map(|c| {
+                            obj(vec![
+                                ("counter", Value::from(c.counter)),
+                                ("mae", Value::from(c.mae)),
+                                ("rmse", Value::from(c.rmse)),
+                                ("r2", Value::from(c.r2)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
 /// Aggregated statistics for one cell: per-cell medians with bootstrap
 /// confidence intervals.
 #[derive(Debug, Clone)]
@@ -536,6 +619,11 @@ pub struct TransferReport {
     /// abbreviations (restriction depends only on the GPU generations,
     /// never on the inputs).
     pub dropped: BTreeMap<(String, String, String), Vec<String>>,
+    /// Per-source-endpoint model quality (MAE/RMSE/R² per modeled
+    /// counter vs the recording's held-out remainder), in plan order —
+    /// computed once in the pre-pass, embedded under `model_quality`
+    /// in the schema-v3 document.
+    pub model_quality: Vec<EndpointQuality>,
     /// Per-cell aggregates (sorted key order), computed once at
     /// construction — serialization, the CLI summary and the table
     /// renderers all read this cache instead of re-running the
@@ -630,12 +718,14 @@ impl TransferReport {
         plan: TransferPlan,
         results: Vec<TransferJobResult>,
         dropped: BTreeMap<(String, String, String), Vec<String>>,
+        model_quality: Vec<EndpointQuality>,
     ) -> Self {
         let aggregates = compute_aggregates(&plan, &results, &dropped);
         TransferReport {
             plan,
             results,
             dropped,
+            model_quality,
             aggregates,
         }
     }
@@ -747,10 +837,19 @@ impl TransferReport {
             .collect();
 
         let mut fields = vec![
-            ("schema", Value::from("pcat-transfer-report/v2")),
+            ("schema", Value::from("pcat-transfer-report/v3")),
             ("plan", self.plan.to_json()),
             ("jobs", Value::Arr(jobs)),
             ("aggregates", Value::Arr(aggregates)),
+            (
+                "model_quality",
+                Value::Arr(
+                    self.model_quality
+                        .iter()
+                        .map(|q| q.to_json())
+                        .collect(),
+                ),
+            ),
         ];
         if self.plan.include_curves {
             // one entry per cell carrying BOTH curve domains; the two
@@ -862,41 +961,116 @@ impl TransferReport {
     }
 }
 
+/// Per-counter fit of a source matrix against its recording, on the
+/// rows in `eval` — a pure (matrix, recording, row set) function, so
+/// quality is byte-stable wherever the matrix is.
+fn quality_on(
+    matrix: &PredictionMatrix,
+    rec: &RecordedSpace,
+    eval: &[usize],
+) -> Vec<CounterQuality> {
+    MODELED_COUNTERS
+        .iter()
+        .enumerate()
+        .map(|(j, &c)| {
+            let col = matrix.column(j);
+            let pred: Vec<f64> = eval.iter().map(|&i| col[i]).collect();
+            let truth: Vec<f64> = eval
+                .iter()
+                .map(|&i| rec.records[i].counters.get(c))
+                .collect();
+            CounterQuality {
+                counter: c.abbr(),
+                mae: mae(&pred, &truth),
+                rmse: rmse(&pred, &truth),
+                r2: r_squared(&pred, &truth),
+            }
+        })
+        .collect()
+}
+
 /// Build the source-side prediction matrix for one (benchmark, source
-/// GPU, source input) recording, per the plan's [`ModelSource`].
+/// GPU, source input) recording, per the plan's [`ModelSource`] and
+/// `train_fraction`, together with its [`EndpointQuality`].
 ///
 /// The tree path is deterministic by construction: the training RNG
 /// stream is keyed by the source coordinates (never by scheduling),
-/// the dataset is the full recording in canonical space order
-/// ([`dataset_full`]), and [`DecisionTreeModel::train`] collects its
-/// per-counter trees in `MODELED_COUNTERS` order regardless of thread
-/// interleaving — so `--jobs 1` and `--jobs 8` build bit-identical
-/// matrices.
-fn build_source_matrix(
+/// the dataset is a pure function of that stream and the fraction
+/// ([`stratified_indices`] at `< 1.0`; the full recording in canonical
+/// space order via [`dataset_full`] at `1.0`, consuming no sampling
+/// randomness — bit-for-bit the pre-fraction behaviour), and
+/// [`DecisionTreeModel::train`] collects its per-counter trees in
+/// `MODELED_COUNTERS` order regardless of thread interleaving — so
+/// `--jobs 1` and `--jobs 8` build bit-identical matrices.
+fn build_source_model(
     model: ModelSource,
     base_seed: u64,
+    train_fraction: f64,
     benchmark: &str,
     source_gpu: &str,
     source_input: &str,
     rec: &RecordedSpace,
-) -> PredictionMatrix {
-    match model {
-        ModelSource::Oracle => PredictionMatrix::from_recorded(rec),
+) -> (PredictionMatrix, EndpointQuality) {
+    let n = rec.space.len();
+    let (matrix, train_idx): (PredictionMatrix, Vec<usize>) = match model {
+        // the oracle reads exact counters — no training, no sampling
+        ModelSource::Oracle => {
+            (PredictionMatrix::from_recorded(rec), (0..n).collect())
+        }
         ModelSource::Tree => {
             let mut rng = Rng::new(stream_seed(
                 base_seed,
                 &[benchmark, source_gpu, source_input, "train"],
                 0,
             ));
-            let ds = dataset_full(rec);
+            let (ds, train_idx) = if train_fraction >= 1.0 {
+                (dataset_full(rec), (0..n).collect())
+            } else {
+                let idx = stratified_indices(
+                    n,
+                    sample_size(n, train_fraction),
+                    &mut rng,
+                );
+                (dataset_from_indices(rec, &idx), idx)
+            };
             let tree = DecisionTreeModel::train(
                 &ds,
                 &format!("{source_gpu}/{source_input}"),
                 &mut rng,
             );
-            PredictionMatrix::build(&rec.space, &tree)
+            (PredictionMatrix::build(&rec.space, &tree), train_idx)
         }
+    };
+    // evaluation rows: the held-out remainder when any, else the full
+    // recording (= the training split at fraction 1.0)
+    let mut is_train = vec![false; n];
+    for &i in &train_idx {
+        is_train[i] = true;
     }
+    let holdout = train_idx.len() < n;
+    let eval: Vec<usize> = if holdout {
+        (0..n).filter(|&i| !is_train[i]).collect()
+    } else {
+        (0..n).collect()
+    };
+    let quality = EndpointQuality {
+        benchmark: benchmark.to_string(),
+        source_gpu: source_gpu.to_string(),
+        source_input: source_input.to_string(),
+        // the fraction actually APPLIED, not the plan echo: the oracle
+        // reads exact counters and ignores the knob, so reporting the
+        // plan's sub-1.0 fraction for it would claim a sampling that
+        // never happened
+        train_fraction: match model {
+            ModelSource::Oracle => 1.0,
+            ModelSource::Tree => train_fraction,
+        },
+        n_train: train_idx.len(),
+        n_eval: eval.len(),
+        holdout,
+        counters: quality_on(&matrix, rec, &eval),
+    };
+    (matrix, quality)
 }
 
 /// Execute a transfer plan with up to `jobs` worker threads.
@@ -984,13 +1158,30 @@ pub fn run_transfer_plan(
     }
     let model = plan.model;
     let base_seed = plan.base_seed;
+    let train_fraction = plan.train_fraction;
     let mats_v = pool::par_map_jobs(src_keys.len(), jobs, &|i| {
         let (b, g, input) = &src_keys[i];
         let rec = &recs[&src_keys[i]];
-        Arc::new(build_source_matrix(model, base_seed, b, g, input, rec))
+        let (matrix, quality) = build_source_model(
+            model,
+            base_seed,
+            train_fraction,
+            b,
+            g,
+            input,
+            rec,
+        );
+        (Arc::new(matrix), quality)
     });
+    // model quality in src_keys order (deterministic plan order) — the
+    // report embeds it verbatim
+    let model_quality: Vec<EndpointQuality> =
+        mats_v.iter().map(|(_, q)| q.clone()).collect();
     let matrices: BTreeMap<(String, String, String), Arc<PredictionMatrix>> =
-        src_keys.into_iter().zip(mats_v).collect();
+        src_keys
+            .into_iter()
+            .zip(mats_v.into_iter().map(|(m, _)| m))
+            .collect();
 
     // (3) cells
     type EndpointKey = (String, String, String, String, String);
@@ -1140,7 +1331,7 @@ pub fn run_transfer_plan(
         })
         .collect();
 
-    Ok(TransferReport::new(plan.clone(), results, dropped))
+    Ok(TransferReport::new(plan.clone(), results, dropped, model_quality))
 }
 
 #[cfg(test)]
@@ -1155,6 +1346,7 @@ mod tests {
             target_gpus: vec!["gtx1070".into()],
             target_inputs: vec!["default".into()],
             model: ModelSource::Oracle,
+            train_fraction: 1.0,
             searchers: vec!["random".into(), "profile".into()],
             seeds: 2,
             base_seed: 5,
@@ -1320,10 +1512,12 @@ mod tests {
         let a = run_transfer_plan(&plan, 1).unwrap().to_pretty_string();
         let b = run_transfer_plan(&plan, 8).unwrap().to_pretty_string();
         assert_eq!(a, b);
-        assert!(a.contains("\"schema\": \"pcat-transfer-report/v2\""));
+        assert!(a.contains("\"schema\": \"pcat-transfer-report/v3\""));
         assert!(a.contains("\"curves\""));
         assert!(a.contains("\"time\""));
         assert!(a.contains("\"model\": \"oracle\""));
+        assert!(a.contains("\"model_quality\""));
+        assert!(a.contains("\"train_fraction\": 1"));
     }
 
     #[test]
@@ -1338,6 +1532,78 @@ mod tests {
         let b = run_transfer_plan(&plan, 8).unwrap().to_pretty_string();
         assert_eq!(a, b);
         assert!(a.contains("\"model\": \"tree\""));
+    }
+
+    #[test]
+    fn fractional_tree_training_is_deterministic_across_jobs() {
+        // the acceptance shape: a partial-exploration tree source must
+        // keep the byte contract — sampling draws from the endpoint's
+        // own stream, never from worker scheduling
+        let plan = TransferPlan {
+            model: ModelSource::Tree,
+            train_fraction: 0.25,
+            ..tiny()
+        };
+        let a = run_transfer_plan(&plan, 1).unwrap();
+        let b = run_transfer_plan(&plan, 8).unwrap();
+        assert_eq!(a.to_pretty_string(), b.to_pretty_string());
+        assert!(a
+            .to_pretty_string()
+            .contains("\"train_fraction\": 0.25"));
+        // quality was evaluated on a genuine held-out remainder
+        for q in &a.model_quality {
+            assert!(q.holdout, "{}: no holdout at fraction 0.25", q.benchmark);
+            assert!(q.n_train > 0 && q.n_eval > 0);
+            assert!(q.n_train < q.n_eval, "0.25 of the space trains");
+            assert_eq!(q.counters.len(), MODELED_COUNTERS.len());
+        }
+        // and the fraction genuinely changes the trained model
+        let full = run_transfer_plan(
+            &TransferPlan {
+                model: ModelSource::Tree,
+                ..tiny()
+            },
+            8,
+        )
+        .unwrap();
+        assert_ne!(a.to_pretty_string(), full.to_pretty_string());
+    }
+
+    #[test]
+    fn invalid_train_fractions_are_typed_errors() {
+        for bad in [0.0, -1.0, 1.25, f64::NAN] {
+            let plan = TransferPlan {
+                train_fraction: bad,
+                ..tiny()
+            };
+            match plan.validate() {
+                Err(PlanError::InvalidFraction { axis, .. }) => {
+                    assert_eq!(axis, "train_fraction")
+                }
+                other => panic!("fraction {bad}: got {other:?}"),
+            }
+            assert!(run_transfer_plan(&plan, 2).is_err());
+        }
+    }
+
+    #[test]
+    fn oracle_quality_is_exact_zero_error() {
+        // the oracle matrix *is* the recording: MAE = RMSE = 0 and
+        // R² = 1 on every modeled counter — the calibration anchor for
+        // the quality pipeline
+        let report = run_transfer_plan(&tiny(), 2).unwrap();
+        assert_eq!(report.model_quality.len(), 2, "one entry per endpoint");
+        for q in &report.model_quality {
+            assert!(!q.holdout);
+            assert_eq!(q.n_train, q.n_eval);
+            for c in &q.counters {
+                assert_eq!(c.mae, 0.0, "{}: MAE", c.counter);
+                assert_eq!(c.rmse, 0.0, "{}: RMSE", c.counter);
+                assert_eq!(c.r2, 1.0, "{}: R²", c.counter);
+            }
+            assert_eq!(q.median_mae(), 0.0);
+            assert_eq!(q.median_r2(), 1.0);
+        }
     }
 
     #[test]

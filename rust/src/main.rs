@@ -10,17 +10,24 @@
 //! pcat experiment <id|all> [--out results] [--reps N] [--time-reps N] \
 //!              [--jobs N]
 //! pcat matrix  [--smoke] [--jobs N] [--seed S] [--seeds K] [--budget B] \
-//!              [--benchmarks a,b] [--gpus x,y] [--searchers p,q] \
-//!              [--traces] [--out report.json]
+//!              [--benchmarks a,b] [--gpus x,y] [--inputs i,j] \
+//!              [--searchers p,q] [--traces] [--out report.json]
 //! pcat transfer [--smoke] [--jobs N] [--seed S] [--seeds K] [--budget B] \
 //!              [--benchmarks a,b] [--sources x,y] [--targets x,y] \
 //!              [--inputs i,j] [--source-inputs i,j] [--target-inputs i,j] \
-//!              [--model oracle|tree] [--searchers p,q] [--curves] \
-//!              [--out TRANSFER_REPORT.json]
+//!              [--model oracle|tree] [--train-fraction F] \
+//!              [--searchers p,q] [--curves] [--out TRANSFER_REPORT.json]
+//! pcat sweep   [--smoke] [--jobs N] [--seed S] [--seeds K] [--budget B] \
+//!              [--benchmarks a,b] [--source g] [--target g] \
+//!              [--fractions 0.1,0.25,1.0] [--models tree,oracle] \
+//!              [--searchers p,q] [--out SWEEP_REPORT.json]
 //! ```
 //!
-//! `matrix` runs an [`ExperimentPlan`] (benchmark × GPU × searcher ×
-//! seed) across the worker pool and writes a deterministic JSON report;
+//! `matrix` runs an [`ExperimentPlan`] (benchmark × GPU × input ×
+//! searcher × seed; `--inputs` takes the same selectors as `transfer`
+//! and a default-input plan reproduces pre-input-axis reports
+//! bit-for-bit) across the worker pool and writes a deterministic
+//! JSON report;
 //! `--smoke` selects the tiny CI matrix whose report is byte-compared
 //! against `rust/testdata/smoke_golden.json`. `--jobs N` bounds worker
 //! threads everywhere (serial and parallel runs produce identical
@@ -30,15 +37,25 @@
 //! tune-on-B portability experiment over **both** axes the paper
 //! claims: the profile searcher's model matrix is built from each
 //! *source* (GPU, input) recording (`--model oracle` exact PCs, or
-//! `--model tree` per-counter decision trees trained on the source)
-//! while the search replays each *target* (GPU, input) — and writes
-//! `TRANSFER_REPORT.json` (with step- and time-domain best-so-far
-//! curves under `--curves`) under the same `--jobs`-invariant
-//! byte-identity contract. `--inputs` takes selectors (`default`,
-//! `alt`, or concrete input names) and sets both axes;
-//! `--source-inputs`/`--target-inputs` override one side. `--smoke` is
-//! gated against `rust/testdata/transfer_golden.json` (oracle) and
-//! `rust/testdata/transfer_tree_golden.json` (`--model tree`).
+//! `--model tree` per-counter decision trees trained on
+//! `--train-fraction` of the source — a deterministic stratified
+//! sample) while the search replays each *target* (GPU, input) — and
+//! writes the schema-v3 `TRANSFER_REPORT.json` (per-endpoint
+//! MAE/RMSE/R² model-quality metrics always embedded; step- and
+//! time-domain best-so-far curves under `--curves`) under the same
+//! `--jobs`-invariant byte-identity contract. `--inputs` takes
+//! selectors (`default`, `alt`, or concrete input names) and sets both
+//! axes; `--source-inputs`/`--target-inputs` override one side.
+//! `--smoke` is gated against `rust/testdata/transfer_golden.json`
+//! (oracle) and `rust/testdata/transfer_tree_golden.json`
+//! (`--model tree`).
+//!
+//! `sweep` runs a [`SweepPlan`] — the sample-efficiency sensitivity
+//! sweep crossing `--fractions × --models × --benchmarks` on one
+//! source → target GPU pair, writing `SWEEP_REPORT.json`
+//! (convergence-vs-fraction cells with bootstrap CIs, model quality
+//! per fraction, aggregated step curves). `--smoke` is gated against
+//! `rust/testdata/sweep_golden.json`.
 //!
 //! (clap is unavailable in the offline build; flags are parsed by hand.)
 
@@ -52,9 +69,10 @@ use pcat::benchmarks::{self, cached_space, Benchmark};
 use pcat::coordinator::{SearcherChoice, Tuner};
 use pcat::gpusim::GpuSpec;
 use pcat::harness::{
-    run_experiment, run_plan, run_transfer_plan, transfer_input_matrix,
-    transfer_matrix, ExperimentOpts, ExperimentPlan, ModelSource,
-    TransferPlan, ALL_EXPERIMENTS,
+    model_quality_matrix, run_experiment, run_plan, run_sweep_plan,
+    run_transfer_plan, sweep_matrix, transfer_input_matrix, transfer_matrix,
+    ExperimentOpts, ExperimentPlan, ModelSource, SweepPlan, TransferPlan,
+    ALL_EXPERIMENTS,
 };
 use pcat::model::{
     dataset_from_recorded, DecisionTreeModel, OracleModel, PrecomputedModel,
@@ -203,6 +221,7 @@ fn run() -> Result<()> {
         Some("experiment") => cmd_experiment(&args),
         Some("matrix") => cmd_matrix(&args),
         Some("transfer") => cmd_transfer(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("diag") => cmd_diag(&args),
         _ => {
             eprintln!("{}", HELP);
@@ -217,12 +236,17 @@ record      exhaustively record a tuning space on a simulated GPU\n  train      
 train a TP→PC decision-tree model from a recording\n  tune        search a \
 tuning space (replayed/simulated)\n  tune-real   search over really-executing \
 PJRT artifacts\n  experiment  regenerate a paper table/figure (or `all`)\n  \
-matrix      run a benchmark × GPU × searcher × seed job matrix in \
+matrix      run a benchmark × GPU × input × searcher × seed job matrix in \
 parallel\n              (--smoke = the tiny deterministic CI matrix)\n  \
 transfer    train-on-(GPU,input)-A / tune-on-B portability matrix; writes\n              \
-paper-style tables (GPU×GPU + input×input) + TRANSFER_REPORT.json\n              \
-(--model oracle|tree picks the source model; --inputs widens the\n              \
-input axes; --smoke = the tiny CI matrix)\n\nglobal \
+paper-style tables (GPU×GPU + input×input + model quality) +\n              \
+TRANSFER_REPORT.json (--model oracle|tree picks the source model;\n              \
+--train-fraction F trains on a stratified sample; --inputs widens\n              \
+the input axes; --smoke = the tiny CI matrix)\n  \
+sweep       sample-efficiency sensitivity sweep (train-fraction × model ×\n              \
+benchmark convergence curves); writes SWEEP_REPORT.json\n              \
+(--fractions 0.1,0.25,1.0; --models tree,oracle; --smoke = the\n              \
+tiny CI sweep)\n\nglobal \
 flags: --jobs N caps worker threads (results are identical at any N).\nOther \
 flags are shown in main.rs docs and README.";
 
@@ -439,6 +463,11 @@ fn cmd_matrix(args: &Args) -> Result<()> {
                 &base.benchmarks,
             )),
             gpus: canon_gpus(axis_arg(args, "gpus", &base.gpus)),
+            // selectors resolve per benchmark, so they are deliberately
+            // NOT canonicalized here — ExperimentPlan::jobs resolves
+            // them to concrete names before any RNG tag; a ["default"]
+            // axis reproduces pre-input-axis reports bit-for-bit
+            inputs: axis_arg(args, "inputs", &base.inputs),
             searchers: axis_arg(args, "searchers", &base.searchers),
             max_tests: args.num("budget", base.max_tests)?,
             include_traces: args.get("traces").is_some(),
@@ -475,11 +504,17 @@ fn cmd_transfer(args: &Args) -> Result<()> {
         Some(s) => ModelSource::parse(s)
             .ok_or_else(|| anyhow!("--model expects oracle|tree, got {s:?}"))?,
     };
+    // sampling knob for the tree source; 1.0 = full recording (the
+    // pre-fraction behaviour, also the smoke/golden setting)
+    let train_fraction = args.num("train-fraction", 1.0f64)?;
     let plan = if args.get("smoke").is_some() {
-        // the smoke matrix is pinned except for the model source, so
-        // CI gates `--smoke` and `--smoke --model tree` as two lanes
+        // the smoke matrix is pinned except for the model source and
+        // the training fraction (CI invokes it without
+        // --train-fraction), so CI gates `--smoke` and `--smoke
+        // --model tree` as two lanes
         TransferPlan {
             model,
+            train_fraction,
             ..TransferPlan::smoke(seed)
         }
     } else {
@@ -500,6 +535,7 @@ fn cmd_transfer(args: &Args) -> Result<()> {
             target_gpus: canon_gpus(axis_arg(args, "targets", &base.target_gpus)),
             target_inputs: axis_arg(args, "target-inputs", &both_inputs),
             model,
+            train_fraction,
             searchers: axis_arg(args, "searchers", &base.searchers),
             max_tests: args.num("budget", base.max_tests)?,
             include_curves: args.get("curves").is_some(),
@@ -529,6 +565,91 @@ fn cmd_transfer(args: &Args) -> Result<()> {
     if !input_grid.is_empty() {
         println!("{input_grid}");
     }
+    let quality_grid = model_quality_matrix(&report);
+    if !quality_grid.is_empty() {
+        println!("{quality_grid}");
+    }
+    Ok(())
+}
+
+/// Run a [`SweepPlan`] (sample-efficiency sensitivity sweep:
+/// train-fraction × model × benchmark) in parallel, write the
+/// deterministic `SWEEP_REPORT.json` and print the
+/// convergence-vs-fraction grid.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let seed = args.num("seed", 0u64)?;
+    let plan = if args.get("smoke").is_some() {
+        SweepPlan::smoke(seed)
+    } else {
+        let base = SweepPlan::full(args.num("seeds", 100usize)?, seed);
+        let fractions = match args.get("fractions") {
+            None => base.fractions.clone(),
+            Some(csv) => csv
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse::<f64>().map_err(|_| {
+                        anyhow!("--fractions expects numbers, got {s:?}")
+                    })
+                })
+                .collect::<Result<Vec<f64>>>()?,
+        };
+        let models = match args.get("models") {
+            None => base.models.clone(),
+            Some(csv) => csv
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    ModelSource::parse(s).ok_or_else(|| {
+                        anyhow!("--models expects oracle|tree, got {s:?}")
+                    })
+                })
+                .collect::<Result<Vec<ModelSource>>>()?,
+        };
+        SweepPlan {
+            benchmarks: canon_benchmarks(axis_arg(
+                args,
+                "benchmarks",
+                &base.benchmarks,
+            )),
+            source_gpu: canon_gpus(vec![args
+                .get("source")
+                .unwrap_or(base.source_gpu.as_str())
+                .to_string()])
+            .remove(0),
+            target_gpu: canon_gpus(vec![args
+                .get("target")
+                .unwrap_or(base.target_gpu.as_str())
+                .to_string()])
+            .remove(0),
+            fractions,
+            models,
+            searchers: axis_arg(args, "searchers", &base.searchers),
+            max_tests: args.num("budget", base.max_tests)?,
+            ..base
+        }
+    };
+    let jobs = jobs_arg(args)?;
+    let n_combos = plan.combos().len();
+    let out =
+        PathBuf::from(args.get("out").unwrap_or("results/SWEEP_REPORT.json"));
+
+    let t0 = std::time::Instant::now();
+    let report = run_sweep_plan(&plan, jobs)?;
+    report.write_to(&out)?;
+
+    println!(
+        "swept {n_combos} (model, fraction) combinations on {jobs} \
+         worker(s) in {:.1}s -> {}",
+        t0.elapsed().as_secs_f64(),
+        out.display()
+    );
+    for line in report.summary_lines() {
+        println!("  {line}");
+    }
+    println!("{}", sweep_matrix(&report));
     Ok(())
 }
 

@@ -27,7 +27,10 @@ mod tree;
 pub use decision_tree::DecisionTreeModel;
 pub use matrix::PredictionMatrix;
 pub use regression::RegressionModel;
-pub use training::{dataset_from_recorded, dataset_full, Dataset};
+pub use training::{
+    dataset_from_indices, dataset_from_recorded, dataset_full, sample_size,
+    stratified_indices, Dataset,
+};
 pub use tree::RegressionTree;
 
 use std::collections::HashMap;

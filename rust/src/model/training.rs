@@ -1,4 +1,21 @@
 //! Training-set extraction from recorded tuning spaces.
+//!
+//! Two flavours feed the model layer:
+//!
+//! * [`dataset_full`] — the whole recording in canonical space order,
+//!   the deterministic full-exploration variant;
+//! * [`dataset_from_recorded`] — the paper's partial-exploration
+//!   setting: a deterministic, *stratified*, *nested* sample of the
+//!   recording. The sampler draws exactly one scramble word from the
+//!   caller's RNG (keyed by the source endpoint in the transfer
+//!   runner), so the selected row set is a pure function of
+//!   `(endpoint stream, fraction)` — byte-identical across worker
+//!   counts — and samples at a larger fraction are supersets of
+//!   samples at a smaller one under the same stream
+//!   ([`stratified_indices`] documents the construction). At
+//!   `fraction = 1.0` it short-circuits to [`dataset_full`] and
+//!   consumes **no** randomness, which keeps full-dataset tree
+//!   training bit-for-bit identical to the pre-fraction code path.
 
 use crate::counters::CounterVec;
 use crate::tuning::{Config, RecordedSpace};
@@ -45,28 +62,100 @@ pub fn dataset_full(rec: &RecordedSpace) -> Dataset {
     }
 }
 
-/// Sample `fraction` of a recorded space (without replacement) as a
-/// training set. `fraction = 1.0` uses the whole space (the paper trains
-/// on full or partial exhaustive explorations).
-pub fn dataset_from_recorded(
-    rec: &RecordedSpace,
-    fraction: f64,
-    rng: &mut Rng,
-) -> Dataset {
-    let n = rec.space.len();
-    let k = ((n as f64 * fraction).round() as usize).clamp(1, n);
-    let idx = rng.sample_indices(n, k);
+/// Sample size for a fractional exploration: `round(n · fraction)`,
+/// clamped into `[1, n]` (0 for an empty space).
+pub fn sample_size(n: usize, fraction: f64) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    ((n as f64 * fraction).round() as usize).clamp(1, n)
+}
+
+/// `k` distinct indices of `0..n`, stratified over the index range and
+/// **nested** across `k` for a fixed RNG stream.
+///
+/// Construction: a seed-keyed permutation of `0..n` ordered by the
+/// XOR-scrambled bit-reversal key `rev_bits(i) ^ scramble` (one
+/// `scramble` word drawn from `rng` — the only randomness consumed).
+/// Taking the `k` smallest keys:
+///
+/// * is **stratified**: bit reversal maps adjacent indices far apart,
+///   so for any power-of-two `k` the selected indices form an exact
+///   arithmetic progression across the (padded) index range, and
+///   approximately even coverage otherwise — the canonical
+///   (odometer-ordered) space is sampled across all parameter regions
+///   instead of clustering;
+/// * is **nested/monotone**: the key of an index does not depend on
+///   `k`, so the selection at a larger `k` is a superset of the
+///   selection at a smaller `k` under the same stream — the
+///   sensitivity sweep's fractions measure *more data*, never
+///   *different data*;
+/// * is **deterministic** per (stream, n, k): one draw, then a pure
+///   sort.
+///
+/// The returned indices are sorted ascending (canonical space order),
+/// so downstream float-accumulation order is a pure function of the
+/// selected set.
+pub fn stratified_indices(n: usize, k: usize, rng: &mut Rng) -> Vec<usize> {
+    let k = k.min(n);
+    if n == 0 || k == 0 {
+        return Vec::new();
+    }
+    if n == 1 {
+        return vec![0];
+    }
+    // bits = ceil(log2(n)); n >= 2 here so bits >= 1
+    let bits = usize::BITS - (n - 1).leading_zeros();
+    let mask: u64 = (1u64 << bits) - 1;
+    let scramble = rng.next_u64() & mask;
+    let mut keyed: Vec<(u64, usize)> = (0..n)
+        .map(|i| (((i as u64).reverse_bits() >> (64 - bits)) ^ scramble, i))
+        .collect();
+    // keys are distinct (bit reversal is injective on 0..2^bits and
+    // XOR is a bijection), so this sort has no ties to break
+    keyed.sort_unstable();
+    let mut idx: Vec<usize> = keyed[..k].iter().map(|&(_, i)| i).collect();
+    idx.sort_unstable();
+    idx
+}
+
+/// Materialize the rows at `idx` (ascending canonical order by
+/// convention) as a training set.
+pub fn dataset_from_indices(rec: &RecordedSpace, idx: &[usize]) -> Dataset {
     let mut ds = Dataset {
-        features: Vec::with_capacity(k),
-        targets: Vec::with_capacity(k),
-        configs: Vec::with_capacity(k),
+        features: Vec::with_capacity(idx.len()),
+        targets: Vec::with_capacity(idx.len()),
+        configs: Vec::with_capacity(idx.len()),
     };
-    for i in idx {
+    for &i in idx {
         ds.features.push(features_of(&rec.space.configs[i]));
         ds.targets.push(rec.records[i].counters.clone());
         ds.configs.push(rec.space.configs[i].clone());
     }
     ds
+}
+
+/// Sample `fraction` of a recorded space (without replacement) as a
+/// training set — the paper's partial-exploration setting ("requires
+/// the tuning space to be sampled on any GPU", §5).
+///
+/// `fraction = 1.0` (or more) short-circuits to [`dataset_full`]:
+/// canonical row order, **no** RNG consumed — full-dataset training is
+/// bit-for-bit the pre-fraction behaviour (regression-tested). Smaller
+/// fractions select [`stratified_indices`]`(n, round(n·fraction))`,
+/// deterministic per (RNG stream, fraction) and nested across
+/// fractions on the same stream.
+pub fn dataset_from_recorded(
+    rec: &RecordedSpace,
+    fraction: f64,
+    rng: &mut Rng,
+) -> Dataset {
+    if fraction >= 1.0 {
+        return dataset_full(rec);
+    }
+    let n = rec.space.len();
+    let idx = stratified_indices(n, sample_size(n, fraction), rng);
+    dataset_from_indices(rec, &idx)
 }
 
 #[cfg(test)]
@@ -75,27 +164,25 @@ mod tests {
     use crate::benchmarks::{record_space, Benchmark, Coulomb};
     use crate::gpusim::GpuSpec;
 
+    fn recorded() -> RecordedSpace {
+        record_space(&Coulomb, &GpuSpec::gtx750(), &Coulomb.default_input())
+    }
+
     #[test]
     fn fraction_controls_size() {
-        let rec = record_space(
-            &Coulomb,
-            &GpuSpec::gtx750(),
-            &Coulomb.default_input(),
-        );
+        let rec = recorded();
         let mut rng = Rng::new(1);
         let half = dataset_from_recorded(&rec, 0.5, &mut rng);
-        assert_eq!(half.len(), rec.space.len().div_ceil(2));
+        assert_eq!(half.len(), sample_size(rec.space.len(), 0.5));
         let full = dataset_from_recorded(&rec, 1.0, &mut rng);
         assert_eq!(full.len(), rec.space.len());
+        assert_eq!(sample_size(10, 0.0001), 1, "clamped to at least one row");
+        assert_eq!(sample_size(10, 1.0), 10);
     }
 
     #[test]
     fn dataset_full_is_the_space_in_order() {
-        let rec = record_space(
-            &Coulomb,
-            &GpuSpec::gtx750(),
-            &Coulomb.default_input(),
-        );
+        let rec = recorded();
         let ds = dataset_full(&rec);
         assert_eq!(ds.len(), rec.space.len());
         for (i, cfg) in rec.space.configs.iter().enumerate() {
@@ -106,18 +193,73 @@ mod tests {
     }
 
     #[test]
+    fn fraction_one_is_dataset_full_and_consumes_no_rng() {
+        // the bit-for-bit contract: full-fraction sampling must leave
+        // the caller's RNG stream untouched (tree training draws its
+        // split shuffle from the same stream) and return canonical
+        // space order
+        let rec = recorded();
+        let mut rng = Rng::new(9);
+        let mut untouched = rng.clone();
+        let ds = dataset_from_recorded(&rec, 1.0, &mut rng);
+        assert_eq!(rng.next_u64(), untouched.next_u64(), "RNG was advanced");
+        let full = dataset_full(&rec);
+        assert_eq!(ds.configs, full.configs);
+        assert_eq!(ds.features, full.features);
+        assert_eq!(ds.targets, full.targets);
+    }
+
+    #[test]
     fn features_match_configs() {
-        let rec = record_space(
-            &Coulomb,
-            &GpuSpec::gtx750(),
-            &Coulomb.default_input(),
-        );
+        let rec = recorded();
         let mut rng = Rng::new(2);
         let ds = dataset_from_recorded(&rec, 0.3, &mut rng);
         for (f, c) in ds.features.iter().zip(&ds.configs) {
             assert_eq!(f.len(), c.len());
             for (a, b) in f.iter().zip(&c.0) {
                 assert_eq!(*a, *b as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn stratified_indices_are_distinct_sorted_and_spread() {
+        let mut rng = Rng::new(7);
+        let n = 210;
+        let k = 52;
+        let idx = stratified_indices(n, k, &mut rng);
+        assert_eq!(idx.len(), k);
+        for w in idx.windows(2) {
+            assert!(w[0] < w[1], "not sorted/distinct: {idx:?}");
+        }
+        // stratification: every quarter of the index range gets a
+        // meaningful share (a uniform shuffle can starve a quarter;
+        // the bit-reversal construction cannot)
+        for q in 0..4 {
+            let lo = q * n / 4;
+            let hi = (q + 1) * n / 4;
+            let got = idx.iter().filter(|&&i| i >= lo && i < hi).count();
+            assert!(
+                got >= k / 8,
+                "quarter {q} has only {got} of {k} samples: {idx:?}"
+            );
+        }
+        // degenerate shapes
+        assert_eq!(stratified_indices(0, 3, &mut rng), Vec::<usize>::new());
+        assert_eq!(stratified_indices(1, 1, &mut rng), vec![0]);
+        let all = stratified_indices(5, 9, &mut rng);
+        assert_eq!(all, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn stratified_indices_nest_across_k() {
+        // same stream state → sample at larger k contains the sample
+        // at smaller k (the sweep's monotone-information contract)
+        for seed in [0u64, 3, 11] {
+            let small = stratified_indices(210, 21, &mut Rng::new(seed));
+            let big = stratified_indices(210, 105, &mut Rng::new(seed));
+            for i in &small {
+                assert!(big.contains(i), "seed {seed}: {i} lost at larger k");
             }
         }
     }

@@ -123,6 +123,35 @@ pub fn rmse(pred: &[f64], target: &[f64]) -> f64 {
     .sqrt()
 }
 
+/// Coefficient of determination R² = 1 − SS_res/SS_tot.
+///
+/// Degenerate targets (zero variance) are mapped to finite values so
+/// the result can always be serialized: a constant target predicted
+/// exactly is a perfect fit (1.0), predicted inexactly a failed one
+/// (0.0). Empty input is 0.0.
+pub fn r_squared(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    if target.is_empty() {
+        return 0.0;
+    }
+    let m = mean(target);
+    let ss_tot: f64 = target.iter().map(|t| (t - m) * (t - m)).sum();
+    let ss_res: f64 = pred
+        .iter()
+        .zip(target)
+        .map(|(p, t)| (p - t) * (p - t))
+        .sum();
+    if ss_tot == 0.0 {
+        if ss_res == 0.0 {
+            1.0
+        } else {
+            0.0
+        }
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
 /// Median relative error |p-t|/|t| over pairs with t != 0 — the
 /// Starchart (§4.8) model-accuracy stopping criterion.
 pub fn median_relative_error(pred: &[f64], target: &[f64]) -> f64 {
@@ -195,5 +224,21 @@ mod tests {
         assert_eq!(mae(&p, &t), 0.5);
         assert!((rmse(&p, &t) - (0.5f64).sqrt()).abs() < 1e-12);
         assert_eq!(median_relative_error(&p, &t), 0.25);
+    }
+
+    #[test]
+    fn r_squared_behaviour() {
+        let t = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(r_squared(&t, &t), 1.0);
+        // predicting the mean everywhere explains no variance
+        let mean_pred = [2.5, 2.5, 2.5, 2.5];
+        assert_eq!(r_squared(&mean_pred, &t), 0.0);
+        // worse than the mean is negative
+        let bad = [4.0, 3.0, 2.0, 1.0];
+        assert!(r_squared(&bad, &t) < 0.0);
+        // degenerate targets stay finite (serializable)
+        assert_eq!(r_squared(&[5.0, 5.0], &[5.0, 5.0]), 1.0);
+        assert_eq!(r_squared(&[5.0, 6.0], &[5.0, 5.0]), 0.0);
+        assert_eq!(r_squared(&[], &[]), 0.0);
     }
 }

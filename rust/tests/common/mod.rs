@@ -1,0 +1,48 @@
+//! Helpers shared by the integration-test binaries (each test file is
+//! its own crate; this module is included per-binary via `mod common;`).
+
+use std::path::Path;
+
+/// The one golden-file protocol every CI smoke lane shares
+/// (`smoke_golden.json`, `transfer_golden.json`,
+/// `transfer_tree_golden.json`, `sweep_golden.json`):
+///
+/// * a committed golden is byte-compared — drift fails the test (and
+///   the workflow's dedicated smoke step);
+/// * on a fresh local checkout the golden is **bootstrapped** (written
+///   from the current run; review and commit it);
+/// * a missing golden under CI stays a warning *here* — the tier-1
+///   `cargo test` signal must not go red on the bootstrap state —
+///   while `ci-local.sh smoke` hard-fails on it (since PR 2), which is
+///   what forces the golden to land without the gate ever
+///   self-blessing.
+///
+/// Keeping this in one place means a protocol change (wording, bless
+/// instructions, CI semantics) cannot silently fork between lanes.
+pub fn golden_gate(file: &str, got: &str) {
+    let golden = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("testdata")
+        .join(file);
+    if golden.exists() {
+        let want = std::fs::read_to_string(&golden).unwrap();
+        assert_eq!(
+            got,
+            want,
+            "report drifted from {}; if the change is intentional, \
+             regenerate via `scripts/ci-local.sh bless`",
+            golden.display()
+        );
+    } else if std::env::var_os("CI").is_some() {
+        eprintln!(
+            "golden {} missing in CI — run `scripts/ci-local.sh bless` \
+             locally and commit it (the workflow's smoke step fails on \
+             this state; this test stays green so tier-1 signal is \
+             preserved)",
+            golden.display()
+        );
+    } else {
+        std::fs::create_dir_all(golden.parent().unwrap()).unwrap();
+        std::fs::write(&golden, got).unwrap();
+        eprintln!("bootstrapped golden at {} — commit it", golden.display());
+    }
+}

@@ -7,9 +7,11 @@
 //! * the smoke report matches the checked-in golden file (bootstrapping
 //!   it on the first run of a fresh checkout).
 
-use std::path::Path;
+mod common;
+
 use std::sync::Arc;
 
+use common::golden_gate;
 use pcat::benchmarks::{self, cached_space, recorded_count, Input};
 use pcat::gpusim::GpuSpec;
 use pcat::harness::{run_plan, ExperimentPlan};
@@ -85,44 +87,15 @@ fn smoke_plan_covers_the_advertised_matrix() {
         .all(|r| r.profiled_tests >= 1));
 }
 
-/// Golden-file gate for the CI smoke mode. Once
-/// `testdata/smoke_golden.json` is committed, any drift in the smoke
-/// report fails here and in the CI workflow's diff step. On a fresh
-/// local checkout the golden is bootstrapped (commit the generated
-/// file). A missing golden under CI stays a warning *here* — the
-/// tier-1 `cargo test` signal must not go red on the bootstrap state —
-/// while the workflow's dedicated smoke step (`ci-local.sh smoke`)
-/// hard-fails on it since PR 2, which is what forces the golden to
-/// land without ever self-blessing.
+/// Golden-file gate for the CI smoke mode, sharing the one
+/// bootstrap/CI-warn/compare protocol of all four goldens
+/// ([`common::golden_gate`]). Once `testdata/smoke_golden.json` is
+/// committed, any drift in the smoke report fails here and in the CI
+/// workflow's diff step.
 #[test]
 fn smoke_report_matches_checked_in_golden() {
-    let golden =
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("testdata/smoke_golden.json");
     let got = run_plan(&ExperimentPlan::smoke(0), 4)
         .unwrap()
         .to_pretty_string();
-    if golden.exists() {
-        let want = std::fs::read_to_string(&golden).unwrap();
-        assert_eq!(
-            got, want,
-            "smoke report drifted from {}; if the change is intentional, \
-             regenerate via `scripts/ci-local.sh bless`",
-            golden.display()
-        );
-    } else if std::env::var_os("CI").is_some() {
-        eprintln!(
-            "smoke golden {} missing in CI — run `scripts/ci-local.sh \
-             bless` locally and commit it (the workflow's smoke step \
-             fails on this state; this test stays green so tier-1 \
-             signal is preserved)",
-            golden.display()
-        );
-    } else {
-        std::fs::create_dir_all(golden.parent().unwrap()).unwrap();
-        std::fs::write(&golden, &got).unwrap();
-        eprintln!(
-            "bootstrapped smoke golden at {} — commit it",
-            golden.display()
-        );
-    }
+    golden_gate("smoke_golden.json", &got);
 }

@@ -12,8 +12,9 @@ use pcat::expert::{
 use pcat::gpusim::{simulate, GpuSpec, Workload};
 use pcat::harness::{aggregate_staircases, aggregate_step_curves, steps_to_within};
 use pcat::model::{
-    dataset_full, DecisionTreeModel, OracleModel, PredictionMatrix,
-    RegressionTree, TpPcModel, MODELED_COUNTERS,
+    dataset_from_recorded, dataset_full, sample_size, stratified_indices,
+    DecisionTreeModel, OracleModel, PredictionMatrix, RegressionTree,
+    TpPcModel, MODELED_COUNTERS,
 };
 use pcat::searcher::{
     BasinHopping, Budget, CostModel, ProfileSearcher, RandomSearcher,
@@ -654,6 +655,127 @@ fn prop_tree_training_mse_monotone_in_depth() {
             );
             prev = mse;
         }
+    }
+}
+
+#[test]
+fn prop_fractional_sampling_is_deterministic_per_seed_and_fraction() {
+    // the transfer runner keys the sampling RNG by the source endpoint:
+    // for a fixed (stream, fraction) the selected rows must be a pure
+    // function of the pair — the --jobs byte contract leans on it
+    let rec = model_recording();
+    let mut seed_matters = false;
+    for seed in [0u64, 5, 42] {
+        for fraction in [0.1, 0.33, 0.5, 0.9] {
+            let a = dataset_from_recorded(&rec, fraction, &mut Rng::new(seed));
+            let b = dataset_from_recorded(&rec, fraction, &mut Rng::new(seed));
+            assert_eq!(a.configs, b.configs, "seed {seed} f {fraction}");
+            assert_eq!(a.features, b.features);
+            assert_eq!(a.len(), sample_size(rec.space.len(), fraction));
+            let c = dataset_from_recorded(
+                &rec,
+                fraction,
+                &mut Rng::new(seed ^ 0xdead),
+            );
+            seed_matters |= a.configs != c.configs;
+        }
+    }
+    // the sample is seed-keyed, not a fixed stencil: across 12
+    // (seed, fraction) pairs at least one differing seed must select a
+    // different subset
+    assert!(seed_matters, "sampling ignored the seed everywhere");
+}
+
+#[test]
+fn prop_fractional_sampling_is_monotone_in_fraction() {
+    // nested samples: under one stream, a larger fraction's row set
+    // contains every smaller fraction's rows — the sensitivity sweep
+    // measures *more data*, never *different data*
+    let rec = model_recording();
+    let n = rec.space.len();
+    for seed in [1u64, 9, 77] {
+        let fractions = [0.05, 0.1, 0.25, 0.5, 0.75, 1.0];
+        let sets: Vec<Vec<usize>> = fractions
+            .iter()
+            .map(|&f| {
+                if f >= 1.0 {
+                    (0..n).collect()
+                } else {
+                    stratified_indices(
+                        n,
+                        sample_size(n, f),
+                        &mut Rng::new(seed),
+                    )
+                }
+            })
+            .collect();
+        for w in sets.windows(2) {
+            for i in &w[0] {
+                assert!(
+                    w[1].contains(i),
+                    "seed {seed}: index {i} lost at larger fraction"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_full_fraction_training_is_bit_identical_to_dataset_full() {
+    // the regression contract behind `--train-fraction 1.0`: the
+    // sampler must not perturb full-dataset training in any way — not
+    // the row order, not the RNG stream the split shuffle draws from
+    let rec = model_recording();
+    for seed in [0u64, 13] {
+        let sampled = DecisionTreeModel::train(
+            &dataset_from_recorded(&rec, 1.0, &mut Rng::new(seed)),
+            "gtx750",
+            &mut Rng::new(seed),
+        );
+        let full = DecisionTreeModel::train(
+            &dataset_full(&rec),
+            "gtx750",
+            &mut Rng::new(seed),
+        );
+        assert_eq!(
+            sampled.to_json().to_string_pretty(1),
+            full.to_json().to_string_pretty(1),
+            "seed {seed}: fraction 1.0 perturbed training"
+        );
+    }
+}
+
+#[test]
+fn prop_oracle_quality_metrics_are_exact_zero_at_full_fraction() {
+    // quality-metric calibration: at fraction 1.0 the evaluation rows
+    // are the training split (the full recording), and the oracle
+    // source reproduces it exactly — MAE/RMSE must be *exactly* zero
+    // and R² exactly one for every modeled counter
+    use pcat::harness::{run_transfer_plan, ModelSource, TransferPlan};
+    let plan = TransferPlan {
+        benchmarks: vec!["coulomb".into()],
+        source_gpus: vec!["gtx750".into()],
+        source_inputs: vec!["default".into()],
+        target_gpus: vec!["gtx750".into()],
+        target_inputs: vec!["default".into()],
+        model: ModelSource::Oracle,
+        train_fraction: 1.0,
+        searchers: vec!["random".into()],
+        seeds: 1,
+        base_seed: 3,
+        max_tests: 10,
+        within_frac: 0.10,
+        include_curves: false,
+    };
+    let report = run_transfer_plan(&plan, 2).unwrap();
+    assert_eq!(report.model_quality.len(), 1);
+    let q = &report.model_quality[0];
+    assert!(!q.holdout, "fraction 1.0 has no held-out remainder");
+    assert_eq!(q.counters.len(), MODELED_COUNTERS.len());
+    for c in &q.counters {
+        assert_eq!(c.mae, 0.0, "{}", c.counter);
+        assert_eq!(c.rmse, 0.0, "{}", c.counter);
+        assert_eq!(c.r2, 1.0, "{}", c.counter);
     }
 }
 

@@ -1,0 +1,114 @@
+//! Invariants of the sample-efficiency sweep subsystem (`pcat sweep`):
+//!
+//! * a sweep's `SWEEP_REPORT.json` is byte-identical for `--jobs 1`
+//!   and `--jobs 8` — each (model, fraction) combination is a lowered
+//!   [`TransferPlan`], so the determinism contract is inherited, and
+//!   the fractional sampler draws only from endpoint-keyed streams;
+//! * the grid is covered: one cell per (combination, benchmark,
+//!   searcher), with the oracle reference collapsed to a single
+//!   fraction-independent row;
+//! * convergence cells carry the bootstrap CI around their median and
+//!   a non-empty aggregated step curve; model quality degrades (or at
+//!   least never has *more* training rows) as the fraction shrinks;
+//! * the smoke report matches the checked-in golden
+//!   (`rust/testdata/sweep_golden.json`, same bless/bootstrap protocol
+//!   as the other three goldens).
+
+mod common;
+
+use common::golden_gate;
+use pcat::harness::{run_sweep_plan, SweepPlan};
+
+/// The smoke plan, pinned here so test expectations stay honest about
+/// its shape: 1 benchmark, gtx1070 → rtx2080 (cross-generation), three
+/// fractions × {tree, oracle-reference}, 2 searchers × 2 seeds.
+fn smoke() -> SweepPlan {
+    let plan = SweepPlan::smoke(0);
+    assert_eq!(plan.benchmarks, vec!["coulomb"]);
+    assert_eq!(plan.source_gpu, "gtx1070");
+    assert_eq!(plan.target_gpu, "rtx2080");
+    assert_eq!(plan.fractions, vec![0.25, 0.5, 1.0]);
+    assert_eq!(plan.seeds, 2);
+    // tree × 3 fractions + 1 oracle reference
+    assert_eq!(plan.combos().len(), 4);
+    plan
+}
+
+#[test]
+fn sweep_reports_identical_for_jobs_1_and_jobs_8() {
+    let plan = smoke();
+    let serial = run_sweep_plan(&plan, 1).unwrap().to_pretty_string();
+    let parallel = run_sweep_plan(&plan, 8).unwrap().to_pretty_string();
+    assert_eq!(
+        serial, parallel,
+        "sweep reports must be a pure function of plan + seed"
+    );
+    // and stable across repeated runs in the same process
+    let repeat = run_sweep_plan(&plan, 8).unwrap().to_pretty_string();
+    assert_eq!(parallel, repeat);
+}
+
+#[test]
+fn sweep_covers_the_grid_with_statistics_and_curves() {
+    let plan = smoke();
+    let report = run_sweep_plan(&plan, 4).unwrap();
+    // 1 baseline row (random runs once — its RNG streams ignore model
+    // and fraction) + 4 combos × 1 profile row
+    assert_eq!(report.cells.len(), 5);
+    let baselines: Vec<_> = report
+        .cells
+        .iter()
+        .filter(|c| c.searcher == "random")
+        .collect();
+    assert_eq!(baselines.len(), 1, "baseline deduplicated");
+    assert_eq!(baselines[0].model, "baseline");
+    for c in &report.cells {
+        assert_eq!(c.runs, plan.seeds);
+        let (lo, hi) = c.tests_to_wp_ci;
+        assert!(
+            lo <= c.median_tests_to_wp && c.median_tests_to_wp <= hi,
+            "CI [{lo}, {hi}] excludes median {}",
+            c.median_tests_to_wp
+        );
+        assert!(!c.curve.is_empty(), "step curve embedded");
+        for w in c.curve.windows(2) {
+            assert!(
+                w[1].median_ms <= w[0].median_ms + 1e-12,
+                "best-so-far increased"
+            );
+        }
+    }
+    // the training-set size follows the fraction monotonically
+    let mut tree: Vec<_> = report
+        .cells
+        .iter()
+        .filter(|c| c.model == "tree" && c.searcher == "profile")
+        .collect();
+    tree.sort_by(|a, b| a.fraction.partial_cmp(&b.fraction).unwrap());
+    assert_eq!(tree.len(), 3);
+    for w in tree.windows(2) {
+        assert!(
+            w[0].n_train < w[1].n_train,
+            "n_train not monotone in fraction"
+        );
+    }
+    // the oracle reference is exact
+    let oracle = report
+        .cells
+        .iter()
+        .find(|c| c.model == "oracle" && c.searcher == "profile")
+        .unwrap();
+    assert_eq!(oracle.median_mae, 0.0);
+    assert_eq!(oracle.median_r2, 1.0);
+}
+
+/// Golden gate, sharing the one bootstrap/CI-warn/compare protocol of
+/// all four goldens ([`common::golden_gate`]).
+#[test]
+fn sweep_smoke_report_matches_checked_in_golden() {
+    let got = run_sweep_plan(&smoke(), 4).unwrap().to_pretty_string();
+    assert!(got.contains("\"schema\": \"pcat-sweep-report/v1\""));
+    assert!(got.contains("\"fraction\": 0.25"));
+    assert!(got.contains("\"median_mae\""));
+    golden_gate("sweep_golden.json", &got);
+}

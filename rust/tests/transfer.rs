@@ -18,8 +18,9 @@
 //!   them on the first run of a fresh checkout): one oracle golden
 //!   with cross-input cells, one tree-model golden.
 
-use std::path::Path;
+mod common;
 
+use common::golden_gate;
 use pcat::harness::{
     run_plan, run_transfer_plan, ExperimentPlan, ModelSource, PlanError,
     TransferPlan,
@@ -37,8 +38,46 @@ fn smoke() -> TransferPlan {
     assert_eq!(plan.target_gpus.len(), 2);
     assert_eq!(plan.target_inputs, vec!["default", "alt"]);
     assert_eq!(plan.model, ModelSource::Oracle);
+    assert_eq!(plan.train_fraction, 1.0);
     assert_eq!(plan.seeds, 2);
     plan
+}
+
+/// The acceptance shape for the sample-efficiency subsystem: a
+/// fractionally-trained tree source keeps the `--jobs` byte contract
+/// and embeds per-endpoint model quality in the schema-v3 report.
+#[test]
+fn fractional_tree_transfer_keeps_the_byte_contract() {
+    let plan = TransferPlan {
+        model: ModelSource::Tree,
+        train_fraction: 0.25,
+        ..smoke()
+    };
+    let serial = run_transfer_plan(&plan, 1).unwrap();
+    let parallel = run_transfer_plan(&plan, 8).unwrap();
+    assert_eq!(serial.to_pretty_string(), parallel.to_pretty_string());
+    let text = serial.to_pretty_string();
+    assert!(text.contains("\"schema\": \"pcat-transfer-report/v3\""));
+    assert!(text.contains("\"train_fraction\": 0.25"));
+    assert!(text.contains("\"mae\"") && text.contains("\"rmse\""));
+    // every source endpoint trained on a genuine quarter and was
+    // evaluated on the held-out remainder
+    for q in &serial.model_quality {
+        assert!(q.holdout, "{}: no holdout", q.benchmark);
+        assert!(q.n_train > 0 && q.n_eval > 0);
+        assert!(q.n_train < q.n_eval);
+    }
+    // sample-size sanity: the fraction changed the model (bytes differ
+    // from the full-fraction tree lane)
+    let full = run_transfer_plan(
+        &TransferPlan {
+            model: ModelSource::Tree,
+            ..smoke()
+        },
+        8,
+    )
+    .unwrap();
+    assert_ne!(serial.to_pretty_string(), full.to_pretty_string());
 }
 
 #[test]
@@ -153,6 +192,7 @@ fn same_gpu_transfer_cells_reproduce_experiment_plan() {
     let matrix = ExperimentPlan {
         benchmarks: transfer.benchmarks.clone(),
         gpus: transfer.target_gpus.clone(),
+        inputs: vec!["default".into()],
         searchers: transfer.searchers.clone(),
         seeds: transfer.seeds,
         base_seed: transfer.base_seed,
@@ -203,6 +243,7 @@ fn tree_model_diagonal_no_slower_than_random() {
         target_gpus: vec!["gtx1070".into()],
         target_inputs: vec!["default".into()],
         model: ModelSource::Tree,
+        train_fraction: 1.0,
         searchers: vec!["random".into(), "profile".into()],
         seeds: 12,
         base_seed: 11,
@@ -320,42 +361,6 @@ fn cross_generation_restriction_is_visible_and_contained() {
     }
 }
 
-/// Shared golden-file protocol for both CI transfer smoke lanes — same
-/// as `testdata/smoke_golden.json`: bootstrapped on the first local
-/// run of a fresh toolchain (commit the generated file), byte-compared
-/// forever after; a missing golden under CI stays a warning *here*
-/// (tier-1 `cargo test` must not go red on the bootstrap state) while
-/// the workflow's smoke step hard-fails on it.
-fn golden_gate(file: &str, got: &str) {
-    let golden =
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("testdata").join(file);
-    if golden.exists() {
-        let want = std::fs::read_to_string(&golden).unwrap();
-        assert_eq!(
-            got,
-            want,
-            "transfer report drifted from {}; if the change is \
-             intentional, regenerate via `scripts/ci-local.sh bless`",
-            golden.display()
-        );
-    } else if std::env::var_os("CI").is_some() {
-        eprintln!(
-            "transfer golden {} missing in CI — run `scripts/ci-local.sh \
-             bless` locally and commit it (the workflow's smoke step \
-             fails on this state; this test stays green so tier-1 \
-             signal is preserved)",
-            golden.display()
-        );
-    } else {
-        std::fs::create_dir_all(golden.parent().unwrap()).unwrap();
-        std::fs::write(&golden, got).unwrap();
-        eprintln!(
-            "bootstrapped transfer golden at {} — commit it",
-            golden.display()
-        );
-    }
-}
-
 /// The oracle smoke golden: covers cross-GPU, cross-generation **and**
 /// cross-input cells (the smoke plan's input axes are
 /// `[default, alt]`).
@@ -364,12 +369,15 @@ fn transfer_smoke_report_matches_checked_in_golden() {
     let got = run_transfer_plan(&TransferPlan::smoke(0), 4)
         .unwrap()
         .to_pretty_string();
-    // the new report shape carries the input axes and both curve
-    // domains — pin that before gating bytes
-    assert!(got.contains("\"schema\": \"pcat-transfer-report/v2\""));
+    // the report shape carries the input axes, both curve domains and
+    // (since v3) per-endpoint model quality — pin that before gating
+    // bytes
+    assert!(got.contains("\"schema\": \"pcat-transfer-report/v3\""));
     assert!(got.contains("\"source_input\""));
     assert!(got.contains("\"target_input\""));
     assert!(got.contains("\"time\""));
+    assert!(got.contains("\"model_quality\""));
+    assert!(got.contains("\"train_fraction\": 1"));
     golden_gate("transfer_golden.json", &got);
 }
 

@@ -2,31 +2,44 @@
 # Mirror of .github/workflows/ci.yml so contributors can run the exact
 # CI gate locally.
 #
-#   scripts/ci-local.sh            # everything, in workflow order
+#   scripts/ci-local.sh            # everything, in workflow order; runs ALL
+#                                  # gates even after a failure and prints a
+#                                  # PASS/FAIL summary table (exit nonzero if
+#                                  # any gate failed)
 #   scripts/ci-local.sh fmt        # cargo fmt --check
 #   scripts/ci-local.sh clippy     # cargo clippy --all-targets -D warnings
 #   scripts/ci-local.sh build      # cargo build --release
 #   scripts/ci-local.sh test      # cargo test -q
 #   scripts/ci-local.sh bench      # cargo bench --no-run (compile only)
 #   scripts/ci-local.sh smoke      # deterministic smoke matrices (plain +
-#                                  # transfer oracle + transfer tree) +
-#                                  # golden diffs
-#   scripts/ci-local.sh bless      # regenerate all three goldens:
+#                                  # transfer oracle + transfer tree + sweep)
+#                                  # + golden diffs
+#   scripts/ci-local.sh bless      # regenerate all four goldens:
 #                                  #   rust/testdata/smoke_golden.json
 #                                  #     (pcat matrix --smoke)
 #                                  #   rust/testdata/transfer_golden.json
 #                                  #     (pcat transfer --smoke: oracle model,
 #                                  #      incl. cross-input + cross-generation
-#                                  #      cells and step+time curves)
+#                                  #      cells, step+time curves and
+#                                  #      model-quality metrics)
 #                                  #   rust/testdata/transfer_tree_golden.json
 #                                  #     (pcat transfer --smoke --model tree:
 #                                  #      trained decision-tree source)
+#                                  #   rust/testdata/sweep_golden.json
+#                                  #     (pcat sweep --smoke: the
+#                                  #      sample-efficiency sensitivity sweep)
 set -euo pipefail
+# Absolute self-path BEFORE the cd: run_all re-invokes each gate as
+# `"$SELF" <gate>` in a child process, and a relative $0 (e.g.
+# `cd scripts && ./ci-local.sh`) would no longer resolve from the repo
+# root we cd into next.
+SELF="$(cd "$(dirname "$0")" && pwd)/$(basename "$0")"
 cd "$(dirname "$0")/.."
 
 GOLDEN=rust/testdata/smoke_golden.json
 TRANSFER_GOLDEN=rust/testdata/transfer_golden.json
 TRANSFER_TREE_GOLDEN=rust/testdata/transfer_tree_golden.json
+SWEEP_GOLDEN=rust/testdata/sweep_golden.json
 SMOKE_OUT=rust/target/smoke
 
 run_fmt() { (cd rust && cargo fmt --check); }
@@ -36,7 +49,8 @@ run_test() { (cd rust && cargo test -q); }
 run_bench() { (cd rust && cargo bench --no-run); }
 
 smoke_report() {
-    # $1 = lane (matrix|transfer|transfer-tree), $2 = jobs, $3 = output
+    # $1 = lane (matrix|transfer|transfer-tree|sweep), $2 = jobs,
+    # $3 = output
     case "$1" in
         matrix)
             rust/target/release/pcat matrix --smoke --seed 0 \
@@ -47,6 +61,9 @@ smoke_report() {
         transfer-tree)
             rust/target/release/pcat transfer --smoke --model tree \
                 --seed 0 --jobs "$2" --out "$3" ;;
+        sweep)
+            rust/target/release/pcat sweep --smoke --seed 0 \
+                --jobs "$2" --out "$3" ;;
         *)
             echo "unknown smoke lane $1" >&2; exit 2 ;;
     esac
@@ -86,6 +103,7 @@ run_smoke() {
     smoke_gate matrix "$GOLDEN"
     smoke_gate transfer "$TRANSFER_GOLDEN"
     smoke_gate transfer-tree "$TRANSFER_TREE_GOLDEN"
+    smoke_gate sweep "$SWEEP_GOLDEN"
 }
 
 run_bless() {
@@ -94,7 +112,42 @@ run_bless() {
     smoke_report matrix 8 "$GOLDEN"
     smoke_report transfer 8 "$TRANSFER_GOLDEN"
     smoke_report transfer-tree 8 "$TRANSFER_TREE_GOLDEN"
-    echo "blessed $GOLDEN, $TRANSFER_GOLDEN and $TRANSFER_TREE_GOLDEN"
+    smoke_report sweep 8 "$SWEEP_GOLDEN"
+    echo "blessed $GOLDEN, $TRANSFER_GOLDEN, $TRANSFER_TREE_GOLDEN" \
+         "and $SWEEP_GOLDEN"
+}
+
+# Run every gate even when one fails (each in its own process so
+# `set -e` semantics inside a gate are preserved — a bash function
+# called from an `if` would have -e silently disabled), record PASS /
+# FAIL per gate, print a summary table and exit nonzero if anything
+# failed. This is what lets one CI round report *all* broken gates
+# instead of only the first.
+run_all() {
+    local gates=(fmt clippy build test bench smoke)
+    local names=() statuses=() failed=0
+    for gate in "${gates[@]}"; do
+        echo
+        echo "=== ci-local: $gate ==="
+        if "$SELF" "$gate"; then
+            names+=("$gate"); statuses+=("PASS")
+        else
+            names+=("$gate"); statuses+=("FAIL"); failed=1
+        fi
+    done
+    echo
+    echo "=== ci-local summary ==="
+    printf '%-10s %s\n' "gate" "status"
+    printf '%-10s %s\n' "----" "------"
+    local i
+    for i in "${!names[@]}"; do
+        printf '%-10s %s\n' "${names[$i]}" "${statuses[$i]}"
+    done
+    if [ "$failed" -ne 0 ]; then
+        echo "ci-local: FAILED (see table above)"
+        return 1
+    fi
+    echo "ci-local: all gates passed"
 }
 
 case "${1:-all}" in
@@ -105,15 +158,7 @@ case "${1:-all}" in
     bench) run_bench ;;
     smoke) run_smoke ;;
     bless) run_bless ;;
-    all)
-        run_fmt
-        run_clippy
-        run_build
-        run_test
-        run_bench
-        run_smoke
-        echo "ci-local: all gates passed"
-        ;;
+    all) run_all ;;
     *)
         echo "usage: $0 [all|fmt|clippy|build|test|bench|smoke|bless]" >&2
         exit 2
