@@ -78,6 +78,7 @@ impl JsonSink {
     /// Write to `$BENCH_JSON` if set; returns the path written.
     pub fn flush(&self) -> Option<String> {
         let path = std::env::var("BENCH_JSON").ok()?;
+        use pcat::harness::{plan_hash, Provenance, BENCH_REPORT_SCHEMA};
         use pcat::util::json::{obj, Value};
         let results: Vec<Value> = self
             .results
@@ -96,8 +97,29 @@ impl JsonSink {
             .iter()
             .map(|(name, v)| (name.as_str(), Value::from(*v)))
             .collect();
+        // the bench "plan" is what was asked for — the named benches
+        // and their iteration counts, never the measured times — so
+        // the plan hash is stable across runs of the same suite
+        let plan = obj(vec![(
+            "benches",
+            Value::Arr(
+                self.results
+                    .iter()
+                    .map(|(name, iters, _, _)| {
+                        obj(vec![
+                            ("iters", Value::from(*iters)),
+                            ("name", Value::from(name.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )]);
+        let hash = plan_hash(BENCH_REPORT_SCHEMA, &plan);
         let doc = obj(vec![
-            ("schema", Value::from("pcat-bench/v1")),
+            ("schema", Value::from(BENCH_REPORT_SCHEMA)),
+            ("plan", plan),
+            ("plan_hash", Value::from(hash)),
+            ("provenance", Provenance::from_env().to_json()),
             ("results", Value::Arr(results)),
             ("derived", obj(derived)),
         ]);

@@ -28,10 +28,17 @@
 //! embedded in the report), and [`SweepPlan`] (the sample-efficiency
 //! sensitivity sweep: train-fraction × model × benchmark convergence
 //! curves, `pcat sweep`).
+//!
+//! Every runner's report is experiment-registry material: it carries a
+//! [`plan_hash`] + [`Provenance`] identity stamp, [`extract_rows`]
+//! flattens its KPIs into [`RegistryRow`]s, and [`compare_rows`] gates
+//! them against a blessed baseline under typed [`Tolerance`]s
+//! (`pcat registry append|query|compare`).
 
 mod convergence;
 mod figures;
 mod plan;
+mod registry;
 mod steps;
 mod sweep;
 mod tables;
@@ -46,11 +53,18 @@ pub use plan::{
     run_plan, AggregateRow, ExperimentPlan, JobResult, JobSpec, PlanError,
     PlanReport, PLAN_SEARCHERS,
 };
+pub use registry::{
+    compare_rows, default_tolerances, extract_rows, has_failures, plan_hash,
+    CompareFinding, CompareStatus, CsvStore, Direction, MemStore, Provenance,
+    RegistryError, RegistryRow, RegistryStore, Tolerance,
+    BENCH_REPORT_SCHEMA, KNOWN_REPORT_SCHEMAS, PLAN_REPORT_SCHEMA,
+    REGISTRY_HEADER, SWEEP_REPORT_SCHEMA, TRANSFER_REPORT_SCHEMA,
+};
 pub use steps::{avg_steps_to_well_performing, par_map_seeds};
 pub use sweep::{run_sweep_plan, SweepCell, SweepPlan, SweepReport};
 pub use tables::{
-    model_quality_matrix, sweep_matrix, transfer_input_matrix,
-    transfer_matrix,
+    model_quality_matrix, registry_compare_table, registry_query_table,
+    sweep_matrix, transfer_input_matrix, transfer_matrix,
 };
 pub use transfer::{
     run_transfer_plan, CellId, CounterQuality, EndpointQuality, ModelSource,

@@ -27,6 +27,7 @@ use anyhow::{Context, Result};
 
 use crate::benchmarks::{self, cached_space};
 use crate::coordinator::{SearcherChoice, Tuner};
+use crate::harness::registry;
 use crate::gpusim::GpuSpec;
 use crate::model::PredictionMatrix;
 use crate::searcher::{Budget, CostModel};
@@ -609,9 +610,13 @@ impl PlanReport {
             })
             .collect();
 
+        let plan = self.plan.to_json();
+        let plan_hash = registry::plan_hash(registry::PLAN_REPORT_SCHEMA, &plan);
         obj(vec![
-            ("schema", Value::from("pcat-plan-report/v1")),
-            ("plan", self.plan.to_json()),
+            ("schema", Value::from(registry::PLAN_REPORT_SCHEMA)),
+            ("plan", plan),
+            ("plan_hash", Value::from(plan_hash)),
+            ("provenance", registry::Provenance::from_env().to_json()),
             ("jobs", Value::Arr(jobs)),
             ("aggregates", Value::Arr(aggregates)),
         ])

@@ -1,0 +1,1143 @@
+//! Experiment registry: plan-hash provenance + KPI trend tracking.
+//!
+//! Every MATRIX/TRANSFER/SWEEP/BENCH report carries a stable **plan
+//! hash** ([`plan_hash`]: FNV-1a over the canonical compact JSON of the
+//! report schema version + plan echo — axes, seeds, budgets; never
+//! provenance) and a **provenance block** ([`Provenance`]: commit,
+//! toolchain cachekey and creation timestamp, all sourced from the
+//! environment with stable defaults so report bytes stay deterministic
+//! — the `--jobs 1` vs `--jobs 8` byte-identity contract and the CI
+//! golden gates are unaffected by who runs the plan or when).
+//!
+//! [`extract_rows`] lowers a report into flat [`RegistryRow`]s (one per
+//! cell KPI), which a [`RegistryStore`] persists: [`MemStore`] for
+//! in-process use, [`CsvStore`] for the append-only on-disk registry
+//! (`registry/pcat.csv`). Rows whose report schema version the
+//! registry does not know are a typed [`RegistryError::UnknownSchema`]
+//! — never a silent skip — so a schema bump forces an explicit
+//! migration instead of quietly corrupting the trend series.
+//!
+//! [`compare_rows`] evaluates typed per-KPI tolerances
+//! ([`Tolerance`]: optional hard `min`/`max` bounds on the current
+//! value plus `abs` + `rel` drift allowances against the baseline,
+//! directional so improvements never fail) and returns pass/fail
+//! findings — the primitive `pcat registry compare` and the CI
+//! `registry-gate` lane turn into a per-PR perf/quality trend gate.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::csv;
+use crate::util::hash::fnv1a_hex;
+use crate::util::json::{obj, Value};
+use crate::util::stats::median;
+
+/// Report schema versions, centralized here and used by the emitters
+/// ([`super::PlanReport`], [`super::TransferReport`],
+/// [`super::SweepReport`], the bench JSON sink) so the known-schema
+/// list below can never drift from what the reports actually say.
+pub const PLAN_REPORT_SCHEMA: &str = "pcat-plan-report/v1";
+pub const TRANSFER_REPORT_SCHEMA: &str = "pcat-transfer-report/v3";
+pub const SWEEP_REPORT_SCHEMA: &str = "pcat-sweep-report/v1";
+pub const BENCH_REPORT_SCHEMA: &str = "pcat-bench-report/v1";
+
+/// Every report schema the registry can ingest. Anything else —
+/// including *older* versions of these schemas — is
+/// [`RegistryError::UnknownSchema`].
+pub const KNOWN_REPORT_SCHEMAS: [&str; 4] = [
+    PLAN_REPORT_SCHEMA,
+    TRANSFER_REPORT_SCHEMA,
+    SWEEP_REPORT_SCHEMA,
+    BENCH_REPORT_SCHEMA,
+];
+
+/// Column order of the registry CSV (also its header line).
+pub const REGISTRY_HEADER: [&str; 9] = [
+    "schema",
+    "plan",
+    "plan_hash",
+    "commit",
+    "created_at",
+    "toolchain",
+    "scope",
+    "kpi",
+    "value",
+];
+
+/// Stable plan fingerprint: FNV-1a over the canonical **compact** JSON
+/// of `{"plan": <plan echo>, "schema": <report schema>}`. The plan
+/// echo carries every axis, the seeds and the budget; provenance and
+/// results are deliberately excluded, so the hash is a pure function
+/// of *what was asked for* — identical across `--jobs` counts,
+/// commits, machines and reruns, and different the moment any axis,
+/// seed or schema version changes.
+pub fn plan_hash(schema: &str, plan: &Value) -> String {
+    let canonical = obj(vec![
+        ("plan", plan.clone()),
+        ("schema", Value::from(schema)),
+    ])
+    .to_string_pretty(0);
+    fnv1a_hex(canonical.as_bytes())
+}
+
+/// Environment variables the provenance block reads. Timestamps and
+/// identities come from the *environment*, never from the hasher or
+/// the clock, so reports (and registry rows) stay deterministic: two
+/// runs in the same environment produce identical bytes.
+pub const ENV_COMMIT: &str = "PCAT_COMMIT";
+pub const ENV_CREATED_AT: &str = "PCAT_CREATED_AT";
+pub const ENV_TOOLCHAIN: &str = "PCAT_TOOLCHAIN";
+
+/// Report provenance: who/when/what produced a report. Deliberately
+/// stable defaults (the exemplar registries pin `created_at` to the
+/// epoch and `commit` to `"unknown"` for the same reason): a report
+/// generated with no environment set is byte-identical everywhere,
+/// which is what keeps the golden gates meaningful.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Provenance {
+    pub commit: String,
+    pub created_at: String,
+    pub toolchain: String,
+}
+
+impl Provenance {
+    pub const DEFAULT_COMMIT: &'static str = "unknown";
+    pub const DEFAULT_CREATED_AT: &'static str = "1970-01-01T00:00:00Z";
+    pub const DEFAULT_TOOLCHAIN: &'static str = "unknown";
+
+    /// Provenance for a freshly generated report: environment
+    /// variables with stable defaults.
+    pub fn from_env() -> Provenance {
+        Provenance::resolve_with(|k| std::env::var(k).ok(), None)
+    }
+
+    /// Provenance for registry rows extracted from `report`: an
+    /// environment variable set *at append time* wins over the block
+    /// embedded in the report (CI appends golden-stable reports while
+    /// still stamping the real commit into the rows), which wins over
+    /// the defaults.
+    pub fn for_rows(report: &Value) -> Provenance {
+        let embedded = report.as_obj().and_then(|o| o.get("provenance"));
+        Provenance::resolve_with(|k| std::env::var(k).ok(), embedded)
+    }
+
+    /// The resolution order, parameterized over the environment lookup
+    /// so tests never mutate real process environment (env mutation
+    /// races with the byte-identity tests running in parallel).
+    fn resolve_with(
+        lookup: impl Fn(&str) -> Option<String>,
+        report: Option<&Value>,
+    ) -> Provenance {
+        let field = |env: &str, key: &str, default: &str| {
+            lookup(env)
+                .or_else(|| {
+                    report
+                        .and_then(|p| p.as_obj())
+                        .and_then(|o| o.get(key))
+                        .and_then(|v| v.as_str())
+                        .map(str::to_string)
+                })
+                .unwrap_or_else(|| default.to_string())
+        };
+        Provenance {
+            commit: field(ENV_COMMIT, "commit", Self::DEFAULT_COMMIT),
+            created_at: field(
+                ENV_CREATED_AT,
+                "created_at",
+                Self::DEFAULT_CREATED_AT,
+            ),
+            toolchain: field(
+                ENV_TOOLCHAIN,
+                "toolchain",
+                Self::DEFAULT_TOOLCHAIN,
+            ),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("commit", Value::from(self.commit.clone())),
+            ("created_at", Value::from(self.created_at.clone())),
+            ("toolchain", Value::from(self.toolchain.clone())),
+        ])
+    }
+}
+
+/// One registry row: a single KPI value of a single cell of a single
+/// report, keyed by (plan name, plan hash, scope, kpi) and stamped
+/// with the report's provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegistryRow {
+    /// Report schema version ([`KNOWN_REPORT_SCHEMAS`]).
+    pub schema: String,
+    /// Plan name (`matrix`, `transfer-oracle`, `transfer-tree`,
+    /// `sweep`, `bench`, or a `--plan` override).
+    pub plan: String,
+    pub plan_hash: String,
+    pub commit: String,
+    pub created_at: String,
+    pub toolchain: String,
+    /// Cell coordinates inside the plan
+    /// (e.g. `coulomb/gtx1070->rtx2080:.../profile`).
+    pub scope: String,
+    pub kpi: String,
+    pub value: f64,
+}
+
+impl RegistryRow {
+    fn to_record(&self) -> String {
+        csv::write_record(&[
+            &self.schema,
+            &self.plan,
+            &self.plan_hash,
+            &self.commit,
+            &self.created_at,
+            &self.toolchain,
+            &self.scope,
+            &self.kpi,
+            &fmt_value(self.value),
+        ])
+    }
+
+    fn from_record(
+        fields: &[String],
+        line: usize,
+    ) -> Result<RegistryRow, RegistryError> {
+        if fields.len() != REGISTRY_HEADER.len() {
+            return Err(RegistryError::Malformed(format!(
+                "row {line}: expected {} columns, got {}",
+                REGISTRY_HEADER.len(),
+                fields.len()
+            )));
+        }
+        let schema = fields[0].clone();
+        if !KNOWN_REPORT_SCHEMAS.contains(&schema.as_str()) {
+            return Err(RegistryError::UnknownSchema(schema));
+        }
+        let value: f64 = fields[8].parse().map_err(|_| {
+            RegistryError::Malformed(format!(
+                "row {line}: value {:?} is not a number",
+                fields[8]
+            ))
+        })?;
+        Ok(RegistryRow {
+            schema,
+            plan: fields[1].clone(),
+            plan_hash: fields[2].clone(),
+            commit: fields[3].clone(),
+            created_at: fields[4].clone(),
+            toolchain: fields[5].clone(),
+            scope: fields[6].clone(),
+            kpi: fields[7].clone(),
+            value,
+        })
+    }
+}
+
+/// Canonical number spelling shared with the JSON writer (integers
+/// render without a fractional part), so a CSV write → parse → write
+/// round trip is byte-exact.
+fn fmt_value(v: f64) -> String {
+    Value::from(v).to_string_pretty(0)
+}
+
+/// Typed registry failure classes — callers match on these instead of
+/// parsing message strings (same convention as
+/// [`super::PlanError`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RegistryError {
+    /// A report (or a persisted row) carries a schema version the
+    /// registry does not know. Rejecting is deliberate: silently
+    /// skipping would let a schema bump hollow out the trend series.
+    UnknownSchema(String),
+    /// Structurally broken input: missing keys, wrong column counts,
+    /// non-numeric values, header mismatch.
+    Malformed(String),
+    /// Filesystem failure (missing registry file, unreadable path).
+    Io(String),
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::UnknownSchema(s) => write!(
+                f,
+                "unknown report schema {s:?}; the registry ingests: {}",
+                KNOWN_REPORT_SCHEMAS.join(", ")
+            ),
+            RegistryError::Malformed(m) => write!(f, "malformed registry data: {m}"),
+            RegistryError::Io(m) => write!(f, "registry I/O error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// Storage backend for registry rows. Two implementations today
+/// ([`MemStore`], [`CsvStore`]); the tuning-as-a-service direction can
+/// add SQLite or a network store behind the same trait.
+pub trait RegistryStore {
+    /// Append rows (append-only: existing rows are never rewritten).
+    fn append(&mut self, rows: &[RegistryRow]) -> Result<(), RegistryError>;
+    /// Load every row, in append order.
+    fn load(&self) -> Result<Vec<RegistryRow>, RegistryError>;
+}
+
+/// In-memory store (tests, service embedding).
+#[derive(Debug, Default)]
+pub struct MemStore {
+    rows: Vec<RegistryRow>,
+}
+
+impl MemStore {
+    pub fn new() -> MemStore {
+        MemStore::default()
+    }
+}
+
+impl RegistryStore for MemStore {
+    fn append(&mut self, rows: &[RegistryRow]) -> Result<(), RegistryError> {
+        validate_rows(rows)?;
+        self.rows.extend(rows.iter().cloned());
+        Ok(())
+    }
+
+    fn load(&self) -> Result<Vec<RegistryRow>, RegistryError> {
+        Ok(self.rows.clone())
+    }
+}
+
+/// Append-only CSV store (`registry/pcat.csv`): a header line followed
+/// by one record per row. The header is validated on every touch so a
+/// foreign CSV cannot be silently extended with incompatible columns.
+#[derive(Debug, Clone)]
+pub struct CsvStore {
+    path: PathBuf,
+}
+
+impl CsvStore {
+    pub fn new(path: impl Into<PathBuf>) -> CsvStore {
+        CsvStore { path: path.into() }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn header_line() -> String {
+        csv::write_record(&REGISTRY_HEADER)
+    }
+}
+
+impl RegistryStore for CsvStore {
+    fn append(&mut self, rows: &[RegistryRow]) -> Result<(), RegistryError> {
+        validate_rows(rows)?;
+        let mut text = match std::fs::read_to_string(&self.path) {
+            Ok(existing) => {
+                check_header(&existing, &self.path)?;
+                existing
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                format!("{}\n", Self::header_line())
+            }
+            Err(e) => {
+                return Err(RegistryError::Io(format!(
+                    "reading {}: {e}",
+                    self.path.display()
+                )))
+            }
+        };
+        if !text.ends_with('\n') {
+            text.push('\n');
+        }
+        for row in rows {
+            text.push_str(&row.to_record());
+            text.push('\n');
+        }
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| {
+                    RegistryError::Io(format!(
+                        "creating {}: {e}",
+                        dir.display()
+                    ))
+                })?;
+            }
+        }
+        std::fs::write(&self.path, text).map_err(|e| {
+            RegistryError::Io(format!("writing {}: {e}", self.path.display()))
+        })
+    }
+
+    fn load(&self) -> Result<Vec<RegistryRow>, RegistryError> {
+        let text = std::fs::read_to_string(&self.path).map_err(|e| {
+            RegistryError::Io(format!("reading {}: {e}", self.path.display()))
+        })?;
+        check_header(&text, &self.path)?;
+        let records = csv::parse(&text)
+            .map_err(|e| RegistryError::Malformed(e.to_string()))?;
+        records
+            .iter()
+            .skip(1) // header
+            .enumerate()
+            .map(|(i, fields)| RegistryRow::from_record(fields, i + 2))
+            .collect()
+    }
+}
+
+fn validate_rows(rows: &[RegistryRow]) -> Result<(), RegistryError> {
+    for r in rows {
+        if !KNOWN_REPORT_SCHEMAS.contains(&r.schema.as_str()) {
+            return Err(RegistryError::UnknownSchema(r.schema.clone()));
+        }
+    }
+    Ok(())
+}
+
+fn check_header(text: &str, path: &Path) -> Result<(), RegistryError> {
+    let first = text.lines().next().unwrap_or("");
+    if first != CsvStore::header_line() {
+        return Err(RegistryError::Malformed(format!(
+            "{} does not start with the registry header ({}); got {:?}",
+            path.display(),
+            CsvStore::header_line(),
+            first
+        )));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Report → rows extraction
+// ---------------------------------------------------------------------------
+
+fn get<'a>(v: &'a Value, key: &str) -> Result<&'a Value, RegistryError> {
+    v.as_obj().and_then(|o| o.get(key)).ok_or_else(|| {
+        RegistryError::Malformed(format!("missing report key {key:?}"))
+    })
+}
+
+fn get_str<'a>(v: &'a Value, key: &str) -> Result<&'a str, RegistryError> {
+    get(v, key)?.as_str().ok_or_else(|| {
+        RegistryError::Malformed(format!("report key {key:?} is not a string"))
+    })
+}
+
+fn get_f64(v: &Value, key: &str) -> Result<f64, RegistryError> {
+    get(v, key)?.as_f64().ok_or_else(|| {
+        RegistryError::Malformed(format!("report key {key:?} is not a number"))
+    })
+}
+
+fn get_arr<'a>(v: &'a Value, key: &str) -> Result<&'a [Value], RegistryError> {
+    get(v, key)?.as_arr().ok_or_else(|| {
+        RegistryError::Malformed(format!("report key {key:?} is not an array"))
+    })
+}
+
+/// Lower a report document into registry rows — one row per (cell,
+/// KPI). The report's embedded `plan_hash` is preferred (it is part of
+/// the deterministic byte contract); reports from before the stamping
+/// era fall back to hashing the embedded plan echo. `plan_override`
+/// replaces the derived plan name (`--plan` on the CLI).
+///
+/// KPIs per report kind:
+/// * **matrix** — per aggregate cell: `mean_tests_to_wp`,
+///   `mean_best_ms`, `mean_cost_s`, `wp_rate`.
+/// * **transfer** — per aggregate cell: `median_tests_to_wp`,
+///   `median_best_over_oracle`, `mean_cost_s`, `wp_rate`; per source
+///   endpoint: `median_mae`, `median_r2`.
+/// * **sweep** — per cell: `median_tests_to_wp`,
+///   `median_best_over_oracle`, `median_mae`, `median_r2`.
+/// * **bench** — per result: `mean_ms`, `min_ms`; every derived
+///   scalar; the timed smoke matrix's `wall_s` (scoring-round
+///   latency) when present.
+pub fn extract_rows(
+    report: &Value,
+    plan_override: Option<&str>,
+) -> Result<Vec<RegistryRow>, RegistryError> {
+    let schema = get_str(report, "schema")?.to_string();
+    if !KNOWN_REPORT_SCHEMAS.contains(&schema.as_str()) {
+        return Err(RegistryError::UnknownSchema(schema));
+    }
+    let plan_echo = get(report, "plan").cloned().unwrap_or_else(|_| obj(vec![]));
+    let hash = match report.as_obj().and_then(|o| o.get("plan_hash")) {
+        Some(Value::Str(h)) => h.clone(),
+        _ => plan_hash(&schema, &plan_echo),
+    };
+    let prov = Provenance::for_rows(report);
+
+    let derived_plan_name = match schema.as_str() {
+        PLAN_REPORT_SCHEMA => "matrix".to_string(),
+        TRANSFER_REPORT_SCHEMA => {
+            // oracle and tree lanes share cell scopes, so the model
+            // kind must live in the plan name or the two lanes would
+            // shadow each other in the (plan, scope, kpi) key space
+            let model = plan_echo
+                .as_obj()
+                .and_then(|o| o.get("model"))
+                .and_then(|v| v.as_str())
+                .unwrap_or("oracle");
+            format!("transfer-{model}")
+        }
+        SWEEP_REPORT_SCHEMA => "sweep".to_string(),
+        BENCH_REPORT_SCHEMA => "bench".to_string(),
+        _ => unreachable!("schema validated above"),
+    };
+    let plan_name = plan_override.unwrap_or(&derived_plan_name).to_string();
+
+    let row = |scope: String, kpi: &str, value: f64| RegistryRow {
+        schema: schema.clone(),
+        plan: plan_name.clone(),
+        plan_hash: hash.clone(),
+        commit: prov.commit.clone(),
+        created_at: prov.created_at.clone(),
+        toolchain: prov.toolchain.clone(),
+        scope,
+        kpi: kpi.to_string(),
+        value,
+    };
+
+    let mut rows = Vec::new();
+    match schema.as_str() {
+        PLAN_REPORT_SCHEMA => {
+            for a in get_arr(report, "aggregates")? {
+                let mut target = get_str(a, "gpu")?.to_string();
+                // input key only exists on plans with a real input axis
+                if let Some(input) =
+                    a.as_obj().and_then(|o| o.get("input")).and_then(|v| v.as_str())
+                {
+                    target = format!("{target}:{input}");
+                }
+                let scope = format!(
+                    "{}/{}/{}",
+                    get_str(a, "benchmark")?,
+                    target,
+                    get_str(a, "searcher")?
+                );
+                rows.push(row(
+                    scope.clone(),
+                    "mean_tests_to_wp",
+                    get_f64(a, "mean_tests_to_wp")?,
+                ));
+                rows.push(row(
+                    scope.clone(),
+                    "mean_best_ms",
+                    get_f64(a, "mean_best_ms")?,
+                ));
+                rows.push(row(
+                    scope.clone(),
+                    "mean_cost_s",
+                    get_f64(a, "mean_cost_s")?,
+                ));
+                rows.push(row(scope, "wp_rate", wp_rate(a)?));
+            }
+        }
+        TRANSFER_REPORT_SCHEMA => {
+            for a in get_arr(report, "aggregates")? {
+                let scope = format!(
+                    "{}/{}:{}->{}:{}/{}",
+                    get_str(a, "benchmark")?,
+                    get_str(a, "source_gpu")?,
+                    get_str(a, "source_input")?,
+                    get_str(a, "target_gpu")?,
+                    get_str(a, "target_input")?,
+                    get_str(a, "searcher")?
+                );
+                rows.push(row(
+                    scope.clone(),
+                    "median_tests_to_wp",
+                    get_f64(a, "median_tests_to_wp")?,
+                ));
+                rows.push(row(
+                    scope.clone(),
+                    "median_best_over_oracle",
+                    get_f64(a, "median_best_over_oracle")?,
+                ));
+                rows.push(row(
+                    scope.clone(),
+                    "mean_cost_s",
+                    get_f64(a, "mean_cost_s")?,
+                ));
+                rows.push(row(scope, "wp_rate", wp_rate(a)?));
+            }
+            for q in get_arr(report, "model_quality")? {
+                let scope = format!(
+                    "model/{}/{}:{}",
+                    get_str(q, "benchmark")?,
+                    get_str(q, "source_gpu")?,
+                    get_str(q, "source_input")?
+                );
+                let maes = counter_metric(q, "mae")?;
+                let r2s = counter_metric(q, "r2")?;
+                rows.push(row(scope.clone(), "median_mae", median(&maes)));
+                rows.push(row(scope, "median_r2", median(&r2s)));
+            }
+        }
+        SWEEP_REPORT_SCHEMA => {
+            for c in get_arr(report, "cells")? {
+                let scope = format!(
+                    "{}/{}@{}/{}",
+                    get_str(c, "benchmark")?,
+                    get_str(c, "model")?,
+                    fmt_value(get_f64(c, "fraction")?),
+                    get_str(c, "searcher")?
+                );
+                rows.push(row(
+                    scope.clone(),
+                    "median_tests_to_wp",
+                    get_f64(c, "median_tests_to_wp")?,
+                ));
+                rows.push(row(
+                    scope.clone(),
+                    "median_best_over_oracle",
+                    get_f64(c, "median_best_over_oracle")?,
+                ));
+                rows.push(row(
+                    scope.clone(),
+                    "median_mae",
+                    get_f64(c, "median_mae")?,
+                ));
+                rows.push(row(scope, "median_r2", get_f64(c, "median_r2")?));
+            }
+        }
+        BENCH_REPORT_SCHEMA => {
+            for r in get_arr(report, "results")? {
+                let scope = format!("result/{}", get_str(r, "name")?);
+                rows.push(row(
+                    scope.clone(),
+                    "mean_ms",
+                    get_f64(r, "mean_ms")?,
+                ));
+                rows.push(row(scope, "min_ms", get_f64(r, "min_ms")?));
+            }
+            if let Some(derived) =
+                report.as_obj().and_then(|o| o.get("derived")).and_then(|v| v.as_obj())
+            {
+                for (name, v) in derived {
+                    if let Some(x) = v.as_f64() {
+                        rows.push(row("derived".to_string(), name, x));
+                    }
+                }
+            }
+            // scripts/bench.sh merges the timed smoke matrix in after
+            // the bench run — the scoring-round-latency trend KPI
+            if let Some(sm) =
+                report.as_obj().and_then(|o| o.get("smoke_matrix"))
+            {
+                if let Ok(wall) = get_f64(sm, "wall_s") {
+                    rows.push(row("smoke_matrix".to_string(), "wall_s", wall));
+                }
+            }
+        }
+        _ => unreachable!("schema validated above"),
+    }
+    Ok(rows)
+}
+
+/// `wp_hits / runs` of one aggregate/cell object (0 when `runs` is 0).
+fn wp_rate(cell: &Value) -> Result<f64, RegistryError> {
+    let runs = get_f64(cell, "runs")?;
+    let hits = get_f64(cell, "wp_hits")?;
+    Ok(if runs > 0.0 { hits / runs } else { 0.0 })
+}
+
+/// One per-counter metric column of an `EndpointQuality` JSON block.
+fn counter_metric(q: &Value, key: &str) -> Result<Vec<f64>, RegistryError> {
+    get_arr(q, "counters")?
+        .iter()
+        .map(|c| get_f64(c, key))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Typed KPI tolerances + comparison
+// ---------------------------------------------------------------------------
+
+/// Which direction of drift degrades the KPI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Steps, latency, error metrics: only an *increase* beyond the
+    /// allowance fails; improvements always pass.
+    LowerIsBetter,
+    /// Hit rates, R²: only a *decrease* beyond the allowance fails.
+    HigherIsBetter,
+    /// Determinism-style KPIs: any drift beyond the allowance fails.
+    TwoSided,
+}
+
+/// Typed tolerance for one KPI: optional hard `min`/`max` bounds on
+/// the **current** value, plus an `abs` + `rel` drift allowance
+/// against the **baseline** value (allowed drift =
+/// `abs + rel × |baseline|`), applied directionally.
+#[derive(Debug, Clone)]
+pub struct Tolerance {
+    /// KPI name this tolerance applies to (exact match).
+    pub kpi: String,
+    pub direction: Direction,
+    pub abs: f64,
+    pub rel: f64,
+    pub min: Option<f64>,
+    pub max: Option<f64>,
+}
+
+impl Tolerance {
+    pub fn new(kpi: &str, direction: Direction, abs: f64, rel: f64) -> Self {
+        Tolerance {
+            kpi: kpi.to_string(),
+            direction,
+            abs,
+            rel,
+            min: None,
+            max: None,
+        }
+    }
+
+    /// Catch-all used for KPIs with no listed tolerance: two-sided
+    /// 25% relative drift.
+    pub fn fallback() -> Self {
+        Tolerance::new("*", Direction::TwoSided, 1e-9, 0.25)
+    }
+
+    /// Evaluate `current` against `baseline`. `Ok(())` on pass;
+    /// `Err(bound)` names the violated bound (rendered into the
+    /// pass/fail table and the CLI error).
+    pub fn check(&self, baseline: f64, current: f64) -> Result<(), String> {
+        if let Some(min) = self.min {
+            if current < min {
+                return Err(format!("value {current} < hard min {min}"));
+            }
+        }
+        if let Some(max) = self.max {
+            if current > max {
+                return Err(format!("value {current} > hard max {max}"));
+            }
+        }
+        let allowed = self.abs + self.rel * baseline.abs();
+        let bound = |limit: f64, cmp: &str| {
+            format!(
+                "value {current} {cmp} {limit} (baseline {baseline}, \
+                 allowance abs {} + rel {})",
+                self.abs, self.rel
+            )
+        };
+        match self.direction {
+            Direction::LowerIsBetter if current > baseline + allowed => {
+                Err(bound(baseline + allowed, ">"))
+            }
+            Direction::HigherIsBetter if current < baseline - allowed => {
+                Err(bound(baseline - allowed, "<"))
+            }
+            Direction::TwoSided if (current - baseline).abs() > allowed => {
+                Err(if current > baseline {
+                    bound(baseline + allowed, ">")
+                } else {
+                    bound(baseline - allowed, "<")
+                })
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+/// The default tolerance table for the KPIs [`extract_rows`] emits.
+/// Convergence/latency KPIs are `LowerIsBetter` with generous
+/// allowances (searcher medians are noisy at smoke scale); quality
+/// KPIs are directional with hard bounds where the metric has a
+/// closed range.
+pub fn default_tolerances() -> Vec<Tolerance> {
+    use Direction::*;
+    let t = Tolerance::new;
+    vec![
+        // convergence: median/mean steps-to-within-X% may regress by
+        // at most 25% + 2 steps before the gate trips
+        t("median_tests_to_wp", LowerIsBetter, 2.0, 0.25),
+        t("mean_tests_to_wp", LowerIsBetter, 2.0, 0.25),
+        // tuned-result quality
+        t("mean_best_ms", LowerIsBetter, 1e-9, 0.10),
+        t("median_best_over_oracle", LowerIsBetter, 0.02, 0.10),
+        Tolerance {
+            min: Some(0.0),
+            max: Some(1.0),
+            ..t("wp_rate", HigherIsBetter, 0.15, 0.0)
+        },
+        // simulated tuning cost
+        t("mean_cost_s", LowerIsBetter, 0.5, 0.25),
+        // model quality
+        t("median_mae", LowerIsBetter, 1e-6, 0.25),
+        Tolerance {
+            max: Some(1.0 + 1e-9),
+            ..t("median_r2", HigherIsBetter, 0.02, 0.05)
+        },
+        // bench latencies (scoring-round + smoke wall clock): wall
+        // clock on shared CI runners is noisy, hence the wide band
+        t("mean_ms", LowerIsBetter, 0.05, 0.30),
+        t("min_ms", LowerIsBetter, 0.05, 0.30),
+        t("wall_s", LowerIsBetter, 0.5, 0.30),
+    ]
+}
+
+fn tolerance_for<'a>(tols: &'a [Tolerance], kpi: &str) -> Option<&'a Tolerance> {
+    tols.iter().find(|t| t.kpi == kpi)
+}
+
+/// Outcome of one compared (plan, scope, kpi) key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompareStatus {
+    Pass,
+    Fail,
+    /// Present in the current rows only (a new cell/KPI — informational).
+    New,
+    /// Present in the baseline only (a cell/KPI disappeared —
+    /// informational, surfaced so coverage loss is visible).
+    Gone,
+}
+
+impl CompareStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompareStatus::Pass => "PASS",
+            CompareStatus::Fail => "FAIL",
+            CompareStatus::New => "NEW",
+            CompareStatus::Gone => "GONE",
+        }
+    }
+}
+
+/// One row of the compare verdict: the key, both values and the bound
+/// that passed or failed.
+#[derive(Debug, Clone)]
+pub struct CompareFinding {
+    pub plan: String,
+    pub scope: String,
+    pub kpi: String,
+    pub baseline: Option<f64>,
+    pub current: Option<f64>,
+    pub status: CompareStatus,
+    /// Violated bound on `Fail` (value, limit, allowance); empty on
+    /// `Pass`.
+    pub bound: String,
+}
+
+/// Latest row per (plan, scope, kpi), preserving append order within a
+/// key (the registry is an append-only series; the newest entry is the
+/// one a comparison should read).
+fn latest_by_key(
+    rows: &[RegistryRow],
+) -> BTreeMap<(String, String, String), &RegistryRow> {
+    let mut map = BTreeMap::new();
+    for r in rows {
+        map.insert((r.plan.clone(), r.scope.clone(), r.kpi.clone()), r);
+    }
+    map
+}
+
+/// Compare the latest current rows against the latest baseline rows
+/// under the given tolerances. Keys present on only one side become
+/// informational `New`/`Gone` findings (never failures); keys present
+/// on both are checked and become `Pass`/`Fail`. Output is sorted by
+/// (plan, scope, kpi) — deterministic for rendering and tests.
+pub fn compare_rows(
+    baseline: &[RegistryRow],
+    current: &[RegistryRow],
+    tolerances: &[Tolerance],
+) -> Vec<CompareFinding> {
+    let base = latest_by_key(baseline);
+    let cur = latest_by_key(current);
+    let fallback = Tolerance::fallback();
+    let mut keys: Vec<&(String, String, String)> =
+        base.keys().chain(cur.keys()).collect();
+    keys.sort();
+    keys.dedup();
+    keys.into_iter()
+        .map(|key| {
+            let (plan, scope, kpi) = key.clone();
+            let b = base.get(key).map(|r| r.value);
+            let c = cur.get(key).map(|r| r.value);
+            let (status, bound) = match (b, c) {
+                (Some(bv), Some(cv)) => {
+                    let tol =
+                        tolerance_for(tolerances, &kpi).unwrap_or(&fallback);
+                    match tol.check(bv, cv) {
+                        Ok(()) => (CompareStatus::Pass, String::new()),
+                        Err(bound) => (CompareStatus::Fail, bound),
+                    }
+                }
+                (None, Some(_)) => (CompareStatus::New, String::new()),
+                (Some(_), None) => (CompareStatus::Gone, String::new()),
+                (None, None) => unreachable!("key from one of the maps"),
+            };
+            CompareFinding {
+                plan,
+                scope,
+                kpi,
+                baseline: b,
+                current: c,
+                status,
+                bound,
+            }
+        })
+        .collect()
+}
+
+/// Did any compared key fail?
+pub fn has_failures(findings: &[CompareFinding]) -> bool {
+    findings.iter().any(|f| f.status == CompareStatus::Fail)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn sample_row(kpi: &str, value: f64) -> RegistryRow {
+        RegistryRow {
+            schema: PLAN_REPORT_SCHEMA.to_string(),
+            plan: "matrix".to_string(),
+            plan_hash: "0123456789abcdef".to_string(),
+            commit: "unknown".to_string(),
+            created_at: Provenance::DEFAULT_CREATED_AT.to_string(),
+            toolchain: "unknown".to_string(),
+            scope: "coulomb/gtx1070/profile".to_string(),
+            kpi: kpi.to_string(),
+            value,
+        }
+    }
+
+    #[test]
+    fn plan_hash_depends_on_schema_and_plan_only() {
+        let plan = obj(vec![("seeds", Value::from(3usize))]);
+        let a = plan_hash(PLAN_REPORT_SCHEMA, &plan);
+        assert_eq!(a, plan_hash(PLAN_REPORT_SCHEMA, &plan));
+        assert_eq!(a.len(), 16);
+        assert_ne!(a, plan_hash(SWEEP_REPORT_SCHEMA, &plan));
+        let other = obj(vec![("seeds", Value::from(4usize))]);
+        assert_ne!(a, plan_hash(PLAN_REPORT_SCHEMA, &other));
+    }
+
+    #[test]
+    fn provenance_resolution_order_env_report_default() {
+        let report_prov = obj(vec![
+            ("commit", Value::from("reportsha")),
+            ("created_at", Value::from("2026-01-01T00:00:00Z")),
+            ("toolchain", Value::from("rustc-x")),
+        ]);
+        // no env, no report: defaults
+        let p = Provenance::resolve_with(|_| None, None);
+        assert_eq!(p.commit, Provenance::DEFAULT_COMMIT);
+        assert_eq!(p.created_at, Provenance::DEFAULT_CREATED_AT);
+        // report wins over defaults
+        let p = Provenance::resolve_with(|_| None, Some(&report_prov));
+        assert_eq!(p.commit, "reportsha");
+        assert_eq!(p.toolchain, "rustc-x");
+        // env wins over report
+        let p = Provenance::resolve_with(
+            |k| (k == ENV_COMMIT).then(|| "envsha".to_string()),
+            Some(&report_prov),
+        );
+        assert_eq!(p.commit, "envsha");
+        assert_eq!(p.created_at, "2026-01-01T00:00:00Z");
+    }
+
+    #[test]
+    fn mem_store_round_trips_and_rejects_unknown_schema() {
+        let mut store = MemStore::new();
+        let rows = vec![sample_row("mean_tests_to_wp", 12.5)];
+        store.append(&rows).unwrap();
+        assert_eq!(store.load().unwrap(), rows);
+        let mut bad = sample_row("x", 1.0);
+        bad.schema = "pcat-plan-report/v99".to_string();
+        assert_eq!(
+            store.append(&[bad]),
+            Err(RegistryError::UnknownSchema(
+                "pcat-plan-report/v99".to_string()
+            ))
+        );
+    }
+
+    #[test]
+    fn csv_store_round_trips_bit_identically() {
+        let dir = std::env::temp_dir().join("pcat_registry_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.csv");
+        std::fs::remove_file(&path).ok();
+        let mut store = CsvStore::new(&path);
+        let rows = vec![
+            sample_row("mean_tests_to_wp", 12.5),
+            sample_row("mean_best_ms", 0.03125),
+            sample_row("wp_rate", 1.0),
+        ];
+        store.append(&rows[..2]).unwrap();
+        store.append(&rows[2..]).unwrap(); // append-only across calls
+        let loaded = store.load().unwrap();
+        assert_eq!(loaded, rows);
+        // a second write of the loaded rows produces identical bytes
+        let text = std::fs::read_to_string(&path).unwrap();
+        let path2 = dir.join("roundtrip2.csv");
+        std::fs::remove_file(&path2).ok();
+        let mut store2 = CsvStore::new(&path2);
+        store2.append(&loaded).unwrap();
+        assert_eq!(std::fs::read_to_string(&path2).unwrap(), text);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&path2).ok();
+    }
+
+    #[test]
+    fn csv_store_rejects_unknown_schema_rows_on_load() {
+        let dir = std::env::temp_dir().join("pcat_registry_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("badschema.csv");
+        let text = format!(
+            "{}\npcat-bench/v0,bench,00,unknown,t,unknown,s,kpi,1\n",
+            csv::write_record(&REGISTRY_HEADER)
+        );
+        std::fs::write(&path, text).unwrap();
+        let err = CsvStore::new(&path).load().unwrap_err();
+        assert_eq!(
+            err,
+            RegistryError::UnknownSchema("pcat-bench/v0".to_string())
+        );
+        // the error formats with the known-schema list, not just a name
+        assert!(err.to_string().contains(PLAN_REPORT_SCHEMA));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn csv_store_rejects_foreign_header() {
+        let dir = std::env::temp_dir().join("pcat_registry_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("foreign.csv");
+        std::fs::write(&path, "a,b,c\n1,2,3\n").unwrap();
+        assert!(matches!(
+            CsvStore::new(&path).load(),
+            Err(RegistryError::Malformed(_))
+        ));
+        assert!(matches!(
+            CsvStore::new(&path).append(&[sample_row("k", 1.0)]),
+            Err(RegistryError::Malformed(_))
+        ));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn extract_rejects_unknown_report_schema() {
+        let report = parse(
+            r#"{"schema": "pcat-plan-report/v99", "plan": {}, "aggregates": []}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            extract_rows(&report, None),
+            Err(RegistryError::UnknownSchema(
+                "pcat-plan-report/v99".to_string()
+            ))
+        );
+    }
+
+    #[test]
+    fn tolerance_abs_vs_rel() {
+        // pure absolute allowance
+        let abs = Tolerance::new("k", Direction::LowerIsBetter, 2.0, 0.0);
+        assert!(abs.check(10.0, 12.0).is_ok()); // exactly at the bound
+        assert!(abs.check(10.0, 12.1).is_err());
+        // pure relative allowance: 25% of baseline
+        let rel = Tolerance::new("k", Direction::LowerIsBetter, 0.0, 0.25);
+        assert!(rel.check(100.0, 125.0).is_ok());
+        assert!(rel.check(100.0, 125.5).is_err());
+        // the two compose additively
+        let both = Tolerance::new("k", Direction::LowerIsBetter, 2.0, 0.25);
+        assert!(both.check(100.0, 127.0).is_ok());
+        assert!(both.check(100.0, 127.5).is_err());
+        // rel scales with |baseline|, so a zero baseline leaves only abs
+        assert!(rel.check(0.0, 0.1).is_err());
+        assert!(abs.check(0.0, 1.9).is_ok());
+    }
+
+    #[test]
+    fn tolerance_directions() {
+        let lower = Tolerance::new("k", Direction::LowerIsBetter, 1.0, 0.0);
+        // improvements never fail, however large
+        assert!(lower.check(100.0, 1.0).is_ok());
+        assert!(lower.check(100.0, 102.0).is_err());
+        let higher = Tolerance::new("k", Direction::HigherIsBetter, 1.0, 0.0);
+        assert!(higher.check(0.5, 1.0).is_ok());
+        assert!(higher.check(0.5, 0.4).is_ok()); // within abs 1.0
+        assert!(higher.check(2.0, 0.5).is_err());
+        let two = Tolerance::new("k", Direction::TwoSided, 1.0, 0.0);
+        assert!(two.check(10.0, 10.9).is_ok());
+        assert!(two.check(10.0, 11.5).is_err());
+        assert!(two.check(10.0, 8.5).is_err());
+    }
+
+    #[test]
+    fn tolerance_min_max_edges() {
+        let t = Tolerance {
+            min: Some(0.0),
+            max: Some(1.0),
+            ..Tolerance::new("wp_rate", Direction::HigherIsBetter, 10.0, 0.0)
+        };
+        // hard bounds trump the (here huge) drift allowance
+        assert!(t.check(0.5, 1.5).is_err());
+        assert!(t.check(0.5, -0.1).is_err());
+        // exactly on the bounds passes
+        assert!(t.check(0.5, 1.0).is_ok());
+        assert!(t.check(0.5, 0.0).is_ok());
+        // the failure message names the violated bound
+        let msg = t.check(0.5, 1.5).unwrap_err();
+        assert!(msg.contains("hard max"), "{msg}");
+    }
+
+    #[test]
+    fn compare_flags_failures_new_and_gone() {
+        let base = vec![
+            sample_row("mean_tests_to_wp", 10.0),
+            sample_row("mean_cost_s", 1.0),
+        ];
+        let mut degraded = sample_row("mean_tests_to_wp", 100.0);
+        degraded.scope = base[0].scope.clone();
+        let mut extra = sample_row("mean_best_ms", 0.5);
+        extra.scope = "coulomb/gtx1070/random".to_string();
+        let cur = vec![degraded, extra];
+        let findings = compare_rows(&base, &cur, &default_tolerances());
+        assert!(has_failures(&findings));
+        let fail = findings
+            .iter()
+            .find(|f| f.status == CompareStatus::Fail)
+            .unwrap();
+        assert_eq!(fail.kpi, "mean_tests_to_wp");
+        assert_eq!(fail.current, Some(100.0));
+        assert!(fail.bound.contains("100"), "bound: {}", fail.bound);
+        assert!(findings.iter().any(|f| f.status == CompareStatus::New));
+        assert!(findings.iter().any(|f| f.status == CompareStatus::Gone));
+        // New/Gone alone are never failures
+        let informational: Vec<RegistryRow> = Vec::new();
+        let only_new = compare_rows(&informational, &base, &default_tolerances());
+        assert!(!has_failures(&only_new));
+        assert!(only_new.iter().all(|f| f.status == CompareStatus::New));
+    }
+
+    #[test]
+    fn compare_uses_latest_row_per_key() {
+        let base = vec![sample_row("mean_tests_to_wp", 10.0)];
+        // an older bad value followed by a newer good one: the series'
+        // latest entry is what counts
+        let cur = vec![
+            sample_row("mean_tests_to_wp", 500.0),
+            sample_row("mean_tests_to_wp", 10.5),
+        ];
+        let findings = compare_rows(&base, &cur, &default_tolerances());
+        assert!(!has_failures(&findings));
+        assert_eq!(findings[0].current, Some(10.5));
+    }
+
+    #[test]
+    fn value_formatting_matches_json_writer() {
+        assert_eq!(fmt_value(42.0), "42");
+        assert_eq!(fmt_value(0.25), "0.25");
+        assert_eq!(fmt_value(-1.5), "-1.5");
+        // round-trips exactly through parse
+        for v in [42.0, 0.25, 1.0 / 3.0, 123456.789] {
+            let s = fmt_value(v);
+            assert_eq!(s.parse::<f64>().unwrap(), v);
+        }
+    }
+}

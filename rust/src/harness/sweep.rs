@@ -43,6 +43,7 @@ use super::plan::{
     reads_model, validate_benchmarks, validate_fraction, validate_gpus,
     validate_searchers, PlanError,
 };
+use super::registry;
 use super::transfer::{
     run_transfer_plan, ModelSource, TransferPlan, TransferReport,
 };
@@ -302,9 +303,14 @@ impl SweepReport {
                 ])
             })
             .collect();
+        let plan = self.plan.to_json();
+        let plan_hash =
+            registry::plan_hash(registry::SWEEP_REPORT_SCHEMA, &plan);
         obj(vec![
-            ("schema", Value::from("pcat-sweep-report/v1")),
-            ("plan", self.plan.to_json()),
+            ("schema", Value::from(registry::SWEEP_REPORT_SCHEMA)),
+            ("plan", plan),
+            ("plan_hash", Value::from(plan_hash)),
+            ("provenance", registry::Provenance::from_env().to_json()),
             ("cells", Value::Arr(cells)),
         ])
     }

@@ -18,6 +18,7 @@ use crate::util::rng::Rng;
 use crate::util::stats::mean;
 use crate::util::table::{markdown, speedup};
 
+use super::registry::{CompareFinding, RegistryRow};
 use super::steps::{avg_steps_to_well_performing, par_map_seeds};
 use super::sweep::SweepReport;
 use super::transfer::{TransferAggregate, TransferPlan, TransferReport};
@@ -963,6 +964,57 @@ pub fn sweep_matrix(report: &SweepReport) -> String {
         ));
     }
     md
+}
+
+/// Registry rows as a markdown table (`pcat registry query`): one row
+/// per registry entry, in store (append) order.
+pub fn registry_query_table(rows: &[RegistryRow]) -> String {
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.plan.clone(),
+                r.plan_hash.clone(),
+                r.scope.clone(),
+                r.kpi.clone(),
+                format!("{}", r.value),
+                r.commit.clone(),
+                r.created_at.clone(),
+            ]
+        })
+        .collect();
+    markdown(
+        &["plan", "plan_hash", "scope", "kpi", "value", "commit", "created_at"],
+        &body,
+    )
+}
+
+/// Compare verdict as a markdown table (`pcat registry compare`): one
+/// row per compared (plan, scope, kpi) key, naming the violated bound
+/// on failures so the CI log says *which* KPI drifted and by how much.
+pub fn registry_compare_table(findings: &[CompareFinding]) -> String {
+    let fmt = |v: Option<f64>| match v {
+        Some(x) => format!("{x}"),
+        None => "-".to_string(),
+    };
+    let body: Vec<Vec<String>> = findings
+        .iter()
+        .map(|f| {
+            vec![
+                f.status.name().to_string(),
+                f.plan.clone(),
+                f.scope.clone(),
+                f.kpi.clone(),
+                fmt(f.baseline),
+                fmt(f.current),
+                f.bound.clone(),
+            ]
+        })
+        .collect();
+    markdown(
+        &["status", "plan", "scope", "kpi", "baseline", "current", "bound"],
+        &body,
+    )
 }
 
 #[cfg(test)]

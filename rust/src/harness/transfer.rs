@@ -95,6 +95,7 @@ use super::plan::{
     validate_fraction, validate_gpus, validate_inputs, validate_searchers,
     PlanError,
 };
+use super::registry;
 
 /// Bootstrap resamples per cell CI (fixed: part of the report's
 /// deterministic byte contract).
@@ -836,9 +837,14 @@ impl TransferReport {
             })
             .collect();
 
+        let plan = self.plan.to_json();
+        let plan_hash =
+            registry::plan_hash(registry::TRANSFER_REPORT_SCHEMA, &plan);
         let mut fields = vec![
-            ("schema", Value::from("pcat-transfer-report/v3")),
-            ("plan", self.plan.to_json()),
+            ("schema", Value::from(registry::TRANSFER_REPORT_SCHEMA)),
+            ("plan", plan),
+            ("plan_hash", Value::from(plan_hash)),
+            ("provenance", registry::Provenance::from_env().to_json()),
             ("jobs", Value::Arr(jobs)),
             ("aggregates", Value::Arr(aggregates)),
             (

@@ -21,6 +21,12 @@
 //!              [--benchmarks a,b] [--source g] [--target g] \
 //!              [--fractions 0.1,0.25,1.0] [--models tree,oracle] \
 //!              [--searchers p,q] [--out SWEEP_REPORT.json]
+//! pcat registry append <report.json> [--registry registry/pcat.csv] \
+//!              [--plan NAME]
+//! pcat registry query [--registry PATH] [--plan NAME] [--kpi K]
+//! pcat registry compare --baseline baseline.csv [--registry PATH] \
+//!              [--plan NAME]
+//! pcat registry hash <report.json>
 //! ```
 //!
 //! `matrix` runs an [`ExperimentPlan`] (benchmark × GPU × input ×
@@ -56,6 +62,15 @@
 //! (convergence-vs-fraction cells with bootstrap CIs, model quality
 //! per fraction, aggregated step curves). `--smoke` is gated against
 //! `rust/testdata/sweep_golden.json`.
+//!
+//! `registry` maintains the append-only experiment registry
+//! (`registry/pcat.csv` by default): `append` flattens a report's KPIs
+//! into plan-hash + provenance-stamped rows (`PCAT_COMMIT` /
+//! `PCAT_CREATED_AT` / `PCAT_TOOLCHAIN` override the embedded
+//! provenance at append time), `query` filters and prints them,
+//! `compare` gates the registry's latest rows against a blessed
+//! baseline under typed per-KPI tolerances and exits nonzero on any
+//! out-of-tolerance KPI, and `hash` prints a report's plan hash.
 //!
 //! (clap is unavailable in the offline build; flags are parsed by hand.)
 
@@ -222,6 +237,7 @@ fn run() -> Result<()> {
         Some("matrix") => cmd_matrix(&args),
         Some("transfer") => cmd_transfer(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("registry") => cmd_registry(&args),
         Some("diag") => cmd_diag(&args),
         _ => {
             eprintln!("{}", HELP);
@@ -246,7 +262,11 @@ the input axes; --smoke = the tiny CI matrix)\n  \
 sweep       sample-efficiency sensitivity sweep (train-fraction × model ×\n              \
 benchmark convergence curves); writes SWEEP_REPORT.json\n              \
 (--fractions 0.1,0.25,1.0; --models tree,oracle; --smoke = the\n              \
-tiny CI sweep)\n\nglobal \
+tiny CI sweep)\n  \
+registry    append-only experiment registry + KPI trend gate\n              \
+(append <report.json> | query [--plan P] [--kpi K] |\n              \
+compare --baseline rows.csv | hash <report.json>;\n              \
+--registry PATH, default registry/pcat.csv)\n\nglobal \
 flags: --jobs N caps worker threads (results are identical at any N).\nOther \
 flags are shown in main.rs docs and README.";
 
@@ -651,6 +671,93 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     println!("{}", sweep_matrix(&report));
     Ok(())
+}
+
+/// Maintain the append-only experiment registry and run the KPI trend
+/// gate (`pcat registry append|query|compare|hash`).
+fn cmd_registry(args: &Args) -> Result<()> {
+    use pcat::harness::{
+        compare_rows, default_tolerances, extract_rows, plan_hash,
+        registry_compare_table, registry_query_table, CompareStatus,
+        CsvStore, RegistryStore,
+    };
+    use pcat::util::json;
+
+    let store_path =
+        PathBuf::from(args.get("registry").unwrap_or("registry/pcat.csv"));
+    let report_arg = |action: &str| -> Result<pcat::util::json::Value> {
+        let path = args.positional.get(2).ok_or_else(|| {
+            anyhow!("usage: pcat registry {action} <report.json>")
+        })?;
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {path}: {e}"))?;
+        json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))
+    };
+
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("append") => {
+            let report = report_arg("append")?;
+            let rows = extract_rows(&report, args.get("plan"))?;
+            let mut store = CsvStore::new(&store_path);
+            store.append(&rows)?;
+            println!(
+                "appended {} row(s) ({}, plan_hash {}) -> {}",
+                rows.len(),
+                rows.first().map(|r| r.plan.as_str()).unwrap_or("empty"),
+                rows.first().map(|r| r.plan_hash.as_str()).unwrap_or("-"),
+                store_path.display()
+            );
+            Ok(())
+        }
+        Some("query") => {
+            let mut rows = CsvStore::new(&store_path).load()?;
+            if let Some(plan) = args.get("plan") {
+                rows.retain(|r| r.plan == plan);
+            }
+            if let Some(kpi) = args.get("kpi") {
+                rows.retain(|r| r.kpi == kpi);
+            }
+            println!("{}", registry_query_table(&rows));
+            println!("{} row(s)", rows.len());
+            Ok(())
+        }
+        Some("compare") => {
+            let mut baseline =
+                CsvStore::new(PathBuf::from(args.need("baseline")?)).load()?;
+            let mut current = CsvStore::new(&store_path).load()?;
+            if let Some(plan) = args.get("plan") {
+                baseline.retain(|r| r.plan == plan);
+                current.retain(|r| r.plan == plan);
+            }
+            let findings =
+                compare_rows(&baseline, &current, &default_tolerances());
+            println!("{}", registry_compare_table(&findings));
+            let fails = findings
+                .iter()
+                .filter(|f| f.status == CompareStatus::Fail)
+                .count();
+            if fails > 0 {
+                bail!("{fails} KPI(s) out of tolerance (see table above)");
+            }
+            println!(
+                "registry compare: {} key(s), all within tolerance",
+                findings.len()
+            );
+            Ok(())
+        }
+        Some("hash") => {
+            let report = report_arg("hash")?;
+            let schema = report.get("schema")?.as_str().ok_or_else(|| {
+                anyhow!("report \"schema\" field is not a string")
+            })?;
+            println!("{}", plan_hash(schema, report.get("plan")?));
+            Ok(())
+        }
+        other => bail!(
+            "unknown registry action {other:?}; expected \
+             append|query|compare|hash"
+        ),
+    }
 }
 
 /// Hidden diagnostic: random vs profile-with-oracle steps on one

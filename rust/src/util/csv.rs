@@ -1,0 +1,176 @@
+//! Minimal RFC-4180-style CSV reading and writing (the offline crate
+//! set has no `csv` crate).
+//!
+//! Backs the experiment registry's append-only CSV store: fields
+//! containing commas, quotes or newlines are quoted on write, and the
+//! parser understands quoted fields (including escaped `""` quotes and
+//! embedded line breaks), so registry rows survive a byte-exact
+//! write → parse → write round trip.
+
+use anyhow::{bail, Result};
+
+/// Render one record as a CSV line (no trailing newline). Fields are
+/// quoted only when they need to be, so simple rows stay `grep`-able.
+pub fn write_record(fields: &[&str]) -> String {
+    let mut out = String::new();
+    for (i, f) in fields.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if f.contains(',') || f.contains('"') || f.contains('\n') || f.contains('\r')
+        {
+            out.push('"');
+            for c in f.chars() {
+                if c == '"' {
+                    out.push('"');
+                }
+                out.push(c);
+            }
+            out.push('"');
+        } else {
+            out.push_str(f);
+        }
+    }
+    out
+}
+
+/// Parse a CSV document into records. Handles quoted fields (escaped
+/// `""` quotes, embedded commas and newlines) and both `\n` and `\r\n`
+/// line endings; a trailing newline does not produce an empty record.
+/// Stray quotes inside unquoted fields or an unterminated quoted field
+/// are errors (line numbers are 1-based).
+pub fn parse(text: &str) -> Result<Vec<Vec<String>>> {
+    let mut records = Vec::new();
+    let mut record: Vec<String> = Vec::new();
+    let mut field = String::new();
+    // was the *current* field opened with a quote? (decides whether a
+    // closing quote is legal)
+    let mut quoted = false;
+    let mut in_quotes = false;
+    let mut line = 1usize;
+    let mut chars = text.chars().peekable();
+    // did the current record see any content (field chars or commas)?
+    let mut any = false;
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                '\n' => {
+                    line += 1;
+                    field.push(c);
+                }
+                _ => field.push(c),
+            }
+            continue;
+        }
+        match c {
+            '"' => {
+                if field.is_empty() && !quoted {
+                    quoted = true;
+                    in_quotes = true;
+                    any = true;
+                } else {
+                    bail!("stray quote in unquoted CSV field on line {line}");
+                }
+            }
+            ',' => {
+                record.push(std::mem::take(&mut field));
+                quoted = false;
+                any = true;
+            }
+            '\r' => {
+                // swallow the \r of \r\n; a lone \r is treated as a
+                // newline as well
+                if chars.peek() == Some(&'\n') {
+                    continue;
+                }
+                end_record(&mut records, &mut record, &mut field, &mut any);
+                quoted = false;
+                line += 1;
+            }
+            '\n' => {
+                end_record(&mut records, &mut record, &mut field, &mut any);
+                quoted = false;
+                line += 1;
+            }
+            _ => {
+                field.push(c);
+                any = true;
+            }
+        }
+    }
+    if in_quotes {
+        bail!("unterminated quoted CSV field starting before line {line}");
+    }
+    end_record(&mut records, &mut record, &mut field, &mut any);
+    Ok(records)
+}
+
+/// Close the current record if it carried any content; empty lines are
+/// skipped rather than becoming `[""]` records.
+fn end_record(
+    records: &mut Vec<Vec<String>>,
+    record: &mut Vec<String>,
+    field: &mut String,
+    any: &mut bool,
+) {
+    if *any || !record.is_empty() {
+        record.push(std::mem::take(field));
+        records.push(std::mem::take(record));
+    }
+    *any = false;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_records_roundtrip() {
+        let text = "a,b,c\n1,2,3\n";
+        let rows = parse(text).unwrap();
+        assert_eq!(rows, vec![vec!["a", "b", "c"], vec!["1", "2", "3"]]);
+        assert_eq!(write_record(&["a", "b", "c"]), "a,b,c");
+    }
+
+    #[test]
+    fn quoting_roundtrips_special_fields() {
+        let fields = ["plain", "with,comma", "with\"quote", "with\nnewline", ""];
+        let line = write_record(&fields);
+        let rows = parse(&format!("{line}\n")).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0], fields.to_vec());
+    }
+
+    #[test]
+    fn crlf_and_missing_trailing_newline() {
+        let rows = parse("a,b\r\nc,d").unwrap();
+        assert_eq!(rows, vec![vec!["a", "b"], vec!["c", "d"]]);
+    }
+
+    #[test]
+    fn empty_lines_are_skipped() {
+        let rows = parse("a,b\n\n\nc,d\n").unwrap();
+        assert_eq!(rows.len(), 2);
+    }
+
+    #[test]
+    fn empty_fields_survive() {
+        let rows = parse("a,,c\n,,\n").unwrap();
+        assert_eq!(rows[0], vec!["a", "", "c"]);
+        assert_eq!(rows[1], vec!["", "", ""]);
+    }
+
+    #[test]
+    fn malformed_quotes_are_errors() {
+        assert!(parse("a,b\"c\n").is_err());
+        assert!(parse("\"unterminated\n").is_err());
+    }
+}

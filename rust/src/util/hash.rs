@@ -1,0 +1,59 @@
+//! Vendored FNV-1a 64-bit hashing (the offline crate set has neither
+//! `fnv` nor `twox-hash`).
+//!
+//! The experiment registry keys every report row by a **plan hash** —
+//! the FNV-1a digest of the canonical compact JSON of `(report schema,
+//! plan echo)` — so rows from different plans can never be compared
+//! against each other by accident. FNV-1a is not cryptographic; it is
+//! used purely as a stable, dependency-free fingerprint, the same
+//! trade-off [`crate::util::rng::stream_seed`] already makes for RNG
+//! stream derivation.
+
+/// FNV-1a 64-bit offset basis.
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+/// FNV-1a 64-bit prime.
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// FNV-1a 64-bit digest of a byte string.
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a 64-bit digest rendered as 16 lower-case hex characters —
+/// the spelling registry rows and report `plan_hash` fields carry.
+pub fn fnv1a_hex(bytes: &[u8]) -> String {
+    format!("{:016x}", fnv1a_64(bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Reference values from the FNV specification / the classic
+        // Noll test suite.
+        assert_eq!(fnv1a_64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a_64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a_64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn hex_is_zero_padded_and_stable() {
+        let h = fnv1a_hex(b"pcat");
+        assert_eq!(h.len(), 16);
+        assert_eq!(h, fnv1a_hex(b"pcat"));
+        assert_ne!(h, fnv1a_hex(b"pcat2"));
+        assert!(h.chars().all(|c| c.is_ascii_hexdigit()));
+        assert_eq!(h, h.to_ascii_lowercase());
+    }
+
+    #[test]
+    fn order_sensitive() {
+        assert_ne!(fnv1a_64(b"ab"), fnv1a_64(b"ba"));
+    }
+}

@@ -4,7 +4,9 @@
 //! DESIGN.md §2), so JSON (de)serialization, the PRNG and statistics
 //! helpers are implemented here instead of pulling serde/rand.
 
+pub mod csv;
 pub mod fenwick;
+pub mod hash;
 pub mod json;
 pub mod pool;
 pub mod rng;

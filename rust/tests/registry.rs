@@ -1,0 +1,222 @@
+//! Experiment-registry integration: real smoke reports flattened into
+//! registry rows, append → query round-trips through the CSV store,
+//! plan-hash stability across worker counts (and sensitivity to plan
+//! axes), the compare gate on synthetically degraded KPIs, and typed
+//! rejection of unknown report schemas.
+
+use pcat::harness::{
+    compare_rows, default_tolerances, extract_rows, has_failures, plan_hash,
+    run_plan, run_sweep_plan, run_transfer_plan, CompareStatus, CsvStore,
+    ExperimentPlan, MemStore, RegistryError, RegistryRow, RegistryStore,
+    SweepPlan, TransferPlan,
+};
+use pcat::util::json::{parse, Value};
+
+fn matrix_report(jobs: usize) -> Value {
+    let report = run_plan(&ExperimentPlan::smoke(0), jobs).unwrap();
+    parse(&report.to_pretty_string()).unwrap()
+}
+
+fn temp_path(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("pcat_registry_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    std::fs::remove_file(&path).ok();
+    path
+}
+
+#[test]
+fn smoke_report_carries_plan_hash_and_provenance() {
+    let v = matrix_report(4);
+    let schema = v.get("schema").unwrap().as_str().unwrap();
+    let hash = v.get("plan_hash").unwrap().as_str().unwrap();
+    assert_eq!(hash.len(), 16);
+    assert!(hash.chars().all(|c| c.is_ascii_hexdigit()));
+    // the embedded hash is exactly the hash of the embedded plan echo
+    assert_eq!(hash, plan_hash(schema, v.get("plan").unwrap()));
+    // provenance block present with all three identity fields (values
+    // come from PCAT_* env with stable defaults, so only presence and
+    // type are asserted here)
+    let prov = v.get("provenance").unwrap();
+    for key in ["commit", "created_at", "toolchain"] {
+        assert!(
+            prov.get(key).unwrap().as_str().is_some(),
+            "provenance {key} must be a string"
+        );
+    }
+}
+
+#[test]
+fn plan_hash_is_stable_across_jobs_and_sensitive_to_axes() {
+    let v1 = matrix_report(1);
+    let v8 = matrix_report(8);
+    let h1 = v1.get("plan_hash").unwrap().as_str().unwrap();
+    let h8 = v8.get("plan_hash").unwrap().as_str().unwrap();
+    assert_eq!(h1, h8, "plan hash must not depend on worker count");
+
+    // any axis change must change the hash
+    let schema = v1.get("schema").unwrap().as_str().unwrap();
+    let echo = v1.get("plan").unwrap();
+    for (key, mutated) in [
+        ("seeds", Value::from(99usize)),
+        ("base_seed", Value::from("12345")),
+        ("max_tests", Value::from(7usize)),
+        ("benchmarks", Value::from(vec!["gemm"])),
+        ("searchers", Value::from(vec!["random"])),
+    ] {
+        let mut altered = echo.clone();
+        match &mut altered {
+            Value::Obj(m) => {
+                m.insert(key.to_string(), mutated);
+            }
+            _ => unreachable!("plan echo is an object"),
+        }
+        assert_ne!(
+            h1,
+            plan_hash(schema, &altered),
+            "changing plan axis {key:?} must change the plan hash"
+        );
+    }
+    // a different base seed through the real constructor too
+    let seeded = run_plan(&ExperimentPlan::smoke(1), 4).unwrap();
+    let vs = parse(&seeded.to_pretty_string()).unwrap();
+    assert_ne!(h1, vs.get("plan_hash").unwrap().as_str().unwrap());
+}
+
+#[test]
+fn append_query_round_trip_is_bit_identical() {
+    let rows = extract_rows(&matrix_report(4), None).unwrap();
+    assert!(!rows.is_empty());
+    assert!(rows.iter().all(|r| r.plan == "matrix"));
+
+    // memory store: load returns exactly what was appended
+    let mut mem = MemStore::new();
+    mem.append(&rows).unwrap();
+    assert_eq!(mem.load().unwrap(), rows);
+
+    // CSV store: rows survive the file round trip exactly, and
+    // re-writing the loaded rows reproduces the file byte-for-byte
+    let path = temp_path("roundtrip.csv");
+    let mut store = CsvStore::new(&path);
+    store.append(&rows).unwrap();
+    let loaded = store.load().unwrap();
+    assert_eq!(loaded, rows);
+    let path2 = temp_path("roundtrip2.csv");
+    let mut store2 = CsvStore::new(&path2);
+    store2.append(&loaded).unwrap();
+    assert_eq!(
+        std::fs::read_to_string(&path).unwrap(),
+        std::fs::read_to_string(&path2).unwrap(),
+        "row → CSV → row → CSV must be byte-stable"
+    );
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&path2).ok();
+}
+
+#[test]
+fn extraction_is_identical_for_jobs_1_and_jobs_8() {
+    let r1 = extract_rows(&matrix_report(1), None).unwrap();
+    let r8 = extract_rows(&matrix_report(8), None).unwrap();
+    assert_eq!(r1, r8, "registry rows must not depend on worker count");
+}
+
+#[test]
+fn transfer_and_sweep_reports_flatten_with_model_kpis() {
+    let transfer = run_transfer_plan(&TransferPlan::smoke(0), 8).unwrap();
+    let tv = parse(&transfer.to_pretty_string()).unwrap();
+    let trows = extract_rows(&tv, None).unwrap();
+    // the model kind lives in the plan name so oracle and tree lanes
+    // cannot shadow each other in the (plan, scope, kpi) key space
+    assert!(trows.iter().all(|r| r.plan == "transfer-oracle"));
+    assert!(trows.iter().any(|r| r.kpi == "median_tests_to_wp"));
+    assert!(
+        trows
+            .iter()
+            .any(|r| r.kpi == "median_mae" && r.scope.starts_with("model/")),
+        "per-endpoint model-quality KPIs must be registry rows"
+    );
+
+    let sweep = run_sweep_plan(&SweepPlan::smoke(0), 8).unwrap();
+    let sv = parse(&sweep.to_pretty_string()).unwrap();
+    let srows = extract_rows(&sv, None).unwrap();
+    assert!(srows.iter().all(|r| r.plan == "sweep"));
+    assert!(srows.iter().any(|r| r.kpi == "median_r2"));
+    // --plan overrides the derived name
+    let named = extract_rows(&sv, Some("sweep-nightly")).unwrap();
+    assert!(named.iter().all(|r| r.plan == "sweep-nightly"));
+}
+
+#[test]
+fn compare_gate_fails_on_synthetically_degraded_kpi() {
+    let baseline = extract_rows(&matrix_report(4), None).unwrap();
+
+    // the un-degraded registry passes against itself
+    let clean = compare_rows(&baseline, &baseline, &default_tolerances());
+    assert!(!has_failures(&clean));
+    assert!(clean
+        .iter()
+        .all(|f| f.status == CompareStatus::Pass));
+
+    // degrade one convergence KPI far past any tolerance
+    let mut degraded: Vec<RegistryRow> = baseline.clone();
+    let victim = degraded
+        .iter_mut()
+        .find(|r| r.kpi == "mean_tests_to_wp")
+        .expect("matrix reports always carry mean_tests_to_wp");
+    let scope = victim.scope.clone();
+    victim.value = victim.value * 10.0 + 100.0;
+
+    let findings = compare_rows(&baseline, &degraded, &default_tolerances());
+    assert!(has_failures(&findings));
+    let fail: Vec<_> = findings
+        .iter()
+        .filter(|f| f.status == CompareStatus::Fail)
+        .collect();
+    assert_eq!(fail.len(), 1, "only the degraded key may fail");
+    // the finding names the offending (plan, scope, KPI) and the bound
+    assert_eq!(fail[0].plan, "matrix");
+    assert_eq!(fail[0].scope, scope);
+    assert_eq!(fail[0].kpi, "mean_tests_to_wp");
+    assert!(
+        fail[0].bound.contains("allowance"),
+        "bound must be rendered: {}",
+        fail[0].bound
+    );
+}
+
+#[test]
+fn unknown_schema_is_a_typed_rejection_not_a_silent_skip() {
+    // at extraction time
+    let mut v = matrix_report(4);
+    match &mut v {
+        Value::Obj(m) => {
+            m.insert(
+                "schema".to_string(),
+                Value::from("pcat-plan-report/v999"),
+            );
+        }
+        _ => unreachable!(),
+    }
+    match extract_rows(&v, None) {
+        Err(RegistryError::UnknownSchema(s)) => {
+            assert_eq!(s, "pcat-plan-report/v999")
+        }
+        other => panic!("expected UnknownSchema, got {other:?}"),
+    }
+
+    // at load time, from a hand-written registry file
+    let path = temp_path("unknown_schema.csv");
+    std::fs::write(
+        &path,
+        "schema,plan,plan_hash,commit,created_at,toolchain,scope,kpi,value\n\
+         pcat-plan-report/v999,matrix,00,unknown,t,unknown,s,k,1\n",
+    )
+    .unwrap();
+    match CsvStore::new(&path).load() {
+        Err(RegistryError::UnknownSchema(s)) => {
+            assert_eq!(s, "pcat-plan-report/v999")
+        }
+        other => panic!("expected UnknownSchema, got {other:?}"),
+    }
+    std::fs::remove_file(&path).ok();
+}

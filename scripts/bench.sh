@@ -16,6 +16,12 @@ RAW=rust/target/bench_scoring_raw.json
 
 (cd rust && cargo build --release)
 
+# registry-grade provenance: the bench report is never golden-gated, so
+# (unlike the smoke reports) it carries the real commit/toolchain/time
+export PCAT_COMMIT="${PCAT_COMMIT:-$(git rev-parse HEAD 2>/dev/null || echo unknown)}"
+export PCAT_TOOLCHAIN="${PCAT_TOOLCHAIN:-$(rustc -V 2>/dev/null | tr ' ' '-' || echo unknown)}"
+export PCAT_CREATED_AT="${PCAT_CREATED_AT:-$(python3 -c 'import datetime; print(datetime.datetime.now(datetime.timezone.utc).strftime("%Y-%m-%dT%H:%M:%SZ"))')}"
+
 echo "== hotpaths bench (emitting $RAW) =="
 (cd rust && BENCH_JSON=target/bench_scoring_raw.json cargo bench --bench hotpaths)
 

@@ -14,6 +14,13 @@
 #   scripts/ci-local.sh smoke      # deterministic smoke matrices (plain +
 #                                  # transfer oracle + transfer tree + sweep)
 #                                  # + golden diffs
+#   scripts/ci-local.sh registry   # experiment-registry trend gate: append
+#                                  # the four smoke reports to a scratch
+#                                  # registry, check the append→query
+#                                  # round-trip, compare KPIs against
+#                                  # rust/testdata/registry_baseline.csv
+#                                  # (warn-only until that baseline is
+#                                  # blessed)
 #   scripts/ci-local.sh bless      # regenerate all four goldens:
 #                                  #   rust/testdata/smoke_golden.json
 #                                  #     (pcat matrix --smoke)
@@ -28,6 +35,9 @@
 #                                  #   rust/testdata/sweep_golden.json
 #                                  #     (pcat sweep --smoke: the
 #                                  #      sample-efficiency sensitivity sweep)
+#                                  # and derives the registry KPI baseline
+#                                  #   rust/testdata/registry_baseline.csv
+#                                  # from the just-blessed reports
 set -euo pipefail
 # Absolute self-path BEFORE the cd: run_all re-invokes each gate as
 # `"$SELF" <gate>` in a child process, and a relative $0 (e.g.
@@ -40,7 +50,9 @@ GOLDEN=rust/testdata/smoke_golden.json
 TRANSFER_GOLDEN=rust/testdata/transfer_golden.json
 TRANSFER_TREE_GOLDEN=rust/testdata/transfer_tree_golden.json
 SWEEP_GOLDEN=rust/testdata/sweep_golden.json
+REGISTRY_BASELINE=rust/testdata/registry_baseline.csv
 SMOKE_OUT=rust/target/smoke
+REGISTRY_SCRATCH=rust/target/registry/pcat.csv
 
 run_fmt() { (cd rust && cargo fmt --check); }
 run_clippy() { (cd rust && cargo clippy --all-targets -- -D warnings); }
@@ -106,6 +118,46 @@ run_smoke() {
     smoke_gate sweep "$SWEEP_GOLDEN"
 }
 
+# Append the four smoke reports (jobs 8) to a fresh scratch registry.
+# $1 = scratch CSV path.
+build_scratch_registry() {
+    rm -f "$1"
+    mkdir -p "$SMOKE_OUT"
+    local lane
+    for lane in matrix transfer transfer-tree sweep; do
+        smoke_report "$lane" 8 "$SMOKE_OUT/registry-$lane.json"
+        rust/target/release/pcat registry append \
+            "$SMOKE_OUT/registry-$lane.json" --registry "$1"
+    done
+}
+
+run_registry() {
+    run_build
+    build_scratch_registry "$REGISTRY_SCRATCH"
+    # append → query round-trip: two reads render byte-identically
+    rust/target/release/pcat registry query \
+        --registry "$REGISTRY_SCRATCH" > rust/target/registry/query1.txt
+    rust/target/release/pcat registry query \
+        --registry "$REGISTRY_SCRATCH" > rust/target/registry/query2.txt
+    cmp rust/target/registry/query1.txt rust/target/registry/query2.txt
+    echo "registry: append + query round-trip is deterministic"
+    if [ -f "$REGISTRY_BASELINE" ]; then
+        # KPI trend gate: out-of-tolerance drift vs the blessed
+        # baseline is a hard failure (pcat exits nonzero)
+        rust/target/release/pcat registry compare \
+            --baseline "$REGISTRY_BASELINE" --registry "$REGISTRY_SCRATCH"
+        echo "registry: KPIs within tolerance of $REGISTRY_BASELINE"
+    else
+        # warn-only until the first baseline is blessed; the compare
+        # still runs (against the scratch rows themselves) so the gate
+        # code path is exercised end to end
+        rust/target/release/pcat registry compare \
+            --baseline "$REGISTRY_SCRATCH" --registry "$REGISTRY_SCRATCH"
+        echo "registry: WARN — $REGISTRY_BASELINE missing (self-compare" \
+             "only); run scripts/ci-local.sh bless and commit it"
+    fi
+}
+
 run_bless() {
     run_build
     mkdir -p "$(dirname "$GOLDEN")" "$(dirname "$TRANSFER_GOLDEN")"
@@ -115,6 +167,18 @@ run_bless() {
     smoke_report sweep 8 "$SWEEP_GOLDEN"
     echo "blessed $GOLDEN, $TRANSFER_GOLDEN, $TRANSFER_TREE_GOLDEN" \
          "and $SWEEP_GOLDEN"
+    # registry KPI baseline, derived from the just-blessed reports so
+    # the two artifacts can never disagree
+    local bless_csv=rust/target/registry/bless.csv
+    rm -f "$bless_csv"
+    local report
+    for report in "$GOLDEN" "$TRANSFER_GOLDEN" "$TRANSFER_TREE_GOLDEN" \
+                  "$SWEEP_GOLDEN"; do
+        rust/target/release/pcat registry append "$report" \
+            --registry "$bless_csv"
+    done
+    cp "$bless_csv" "$REGISTRY_BASELINE"
+    echo "blessed $REGISTRY_BASELINE"
 }
 
 # Run every gate even when one fails (each in its own process so
@@ -124,7 +188,7 @@ run_bless() {
 # failed. This is what lets one CI round report *all* broken gates
 # instead of only the first.
 run_all() {
-    local gates=(fmt clippy build test bench smoke)
+    local gates=(fmt clippy build test bench smoke registry)
     local names=() statuses=() failed=0
     for gate in "${gates[@]}"; do
         echo
@@ -157,10 +221,11 @@ case "${1:-all}" in
     test) run_test ;;
     bench) run_bench ;;
     smoke) run_smoke ;;
+    registry) run_registry ;;
     bless) run_bless ;;
     all) run_all ;;
     *)
-        echo "usage: $0 [all|fmt|clippy|build|test|bench|smoke|bless]" >&2
+        echo "usage: $0 [all|fmt|clippy|build|test|bench|smoke|registry|bless]" >&2
         exit 2
         ;;
 esac
