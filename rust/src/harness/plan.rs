@@ -21,7 +21,7 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -30,7 +30,10 @@ use crate::coordinator::{SearcherChoice, Tuner};
 use crate::harness::registry;
 use crate::gpusim::GpuSpec;
 use crate::model::PredictionMatrix;
-use crate::searcher::{Budget, CostModel};
+use crate::searcher::{
+    Budget, CostModel, FaultModel, FaultProfile, FaultStats, FaultyEnv,
+    ReplayEnv,
+};
 use crate::tuning::RecordedSpace;
 use crate::util::json::{obj, Value};
 use crate::util::pool;
@@ -272,6 +275,13 @@ pub struct ExperimentPlan {
     pub max_tests: usize,
     /// Embed the full per-job trace in the JSON report.
     pub include_traces: bool,
+    /// Fault/noise injection profile
+    /// ([`crate::searcher::FaultProfile`]). `None` (the default) keeps
+    /// the replay environment untouched — same streams, same report
+    /// bytes as before the fault layer existed; fault fields serialize
+    /// only when a profile is active, mirroring the input-axis
+    /// convention.
+    pub fault_profile: FaultProfile,
 }
 
 impl ExperimentPlan {
@@ -291,6 +301,7 @@ impl ExperimentPlan {
             base_seed,
             max_tests: 1000,
             include_traces: false,
+            fault_profile: FaultProfile::None,
         }
     }
 
@@ -307,6 +318,7 @@ impl ExperimentPlan {
             base_seed,
             max_tests: 80,
             include_traces: true,
+            fault_profile: FaultProfile::None,
         }
     }
 
@@ -316,6 +328,14 @@ impl ExperimentPlan {
     pub fn has_input_axis(&self) -> bool {
         self.inputs.len() != 1
             || self.inputs[0] != benchmarks::DEFAULT_INPUT_SELECTOR
+    }
+
+    /// Does this plan inject faults? Fault fields (plan echo, per-job
+    /// and per-cell accounting) serialize only when it does, so
+    /// `fault_profile: none` plans keep their exact pre-fault-layer
+    /// report bytes and plan hashes.
+    pub fn has_faults(&self) -> bool {
+        self.fault_profile.is_active()
     }
 
     /// Expand into jobs, in deterministic plan order. Input selectors
@@ -378,6 +398,14 @@ impl ExperimentPlan {
             // default-input plans must keep their pre-axis bytes
             fields.push(("inputs", Value::from(self.inputs.clone())));
         }
+        if self.has_faults() {
+            // same convention as the input axis: only active fault
+            // profiles appear in the plan echo (and thus the plan hash)
+            fields.push((
+                "fault_profile",
+                Value::from(self.fault_profile.name()),
+            ));
+        }
         obj(fields)
     }
 }
@@ -420,6 +448,54 @@ impl JobSpec {
             )
         }
     }
+
+    /// Seed of the *cell* fault stream: keyed by the hardware cell
+    /// (benchmark, gpu, input) only — never searcher or lane — so a
+    /// persistently broken config is broken for every searcher and
+    /// every repetition on that cell, the way a real compile failure
+    /// would be. Default inputs add no tag (the [`rng_seed`] shape).
+    ///
+    /// [`rng_seed`]: JobSpec::rng_seed
+    pub fn fault_cell_seed(&self, base_seed: u64) -> u64 {
+        if self.input_default {
+            stream_seed(
+                base_seed,
+                &[&self.benchmark, &self.gpu, "fault-cell"],
+                0,
+            )
+        } else {
+            stream_seed(
+                base_seed,
+                &[&self.benchmark, &self.gpu, &self.input, "fault-cell"],
+                0,
+            )
+        }
+    }
+
+    /// Seed of the per-job fault stream (transient flips, noise,
+    /// dropout): the job's own coordinates plus a `"faults"` tag, so it
+    /// is decorrelated from the searcher stream and scheduling-free.
+    pub fn fault_job_seed(&self, base_seed: u64) -> u64 {
+        if self.input_default {
+            stream_seed(
+                base_seed,
+                &[&self.benchmark, &self.gpu, &self.searcher, "faults"],
+                self.lane as u64,
+            )
+        } else {
+            stream_seed(
+                base_seed,
+                &[
+                    &self.benchmark,
+                    &self.gpu,
+                    &self.input,
+                    &self.searcher,
+                    "faults",
+                ],
+                self.lane as u64,
+            )
+        }
+    }
 }
 
 /// Outcome of one job.
@@ -439,6 +515,8 @@ pub struct JobResult {
     /// plan asked for traces (a full 10k-job matrix would otherwise
     /// retain hundreds of MB it never serializes).
     pub trace: Vec<(usize, f64, bool)>,
+    /// Fault accounting for this job; `None` on fault-free plans.
+    pub faults: Option<FaultStats>,
 }
 
 /// Shared per-(benchmark, gpu) context, built once before the fan-out.
@@ -490,14 +568,42 @@ fn run_job(spec: &JobSpec, plan: &ExperimentPlan, ctx: &CellCtx) -> JobResult {
     let thr = ctx.rec.best_time() * 1.1;
     let choice =
         searcher_choice(&spec.searcher, &ctx.matrix, ctx.inst_reaction);
-    let result = Tuner::replay(
-        Arc::clone(&ctx.rec),
-        ctx.gpu.clone(),
-        CostModel::default(),
-    )
-    .with_budget(Budget::until(thr, plan.max_tests))
-    .with_seed(spec.rng_seed(plan.base_seed))
-    .run(choice);
+    let budget = Budget::until(thr, plan.max_tests);
+    let seed = spec.rng_seed(plan.base_seed);
+
+    // fault-free plans take the exact historical path (no wrapper, no
+    // stats); active profiles wrap the replay env in a FaultyEnv whose
+    // streams derive from the plan coordinates, never from scheduling
+    let (result, faults) = if plan.has_faults() {
+        let stats = Arc::new(Mutex::new(FaultStats::default()));
+        let env = FaultyEnv::new(
+            ReplayEnv::new(
+                Arc::clone(&ctx.rec),
+                ctx.gpu.clone(),
+                CostModel::default(),
+            ),
+            FaultModel::for_profile(plan.fault_profile),
+            spec.fault_cell_seed(plan.base_seed),
+            spec.fault_job_seed(plan.base_seed),
+            Arc::clone(&stats),
+        );
+        let result = Tuner::over(Box::new(env))
+            .with_budget(budget)
+            .with_seed(seed)
+            .run(choice);
+        let faults = stats.lock().unwrap().clone();
+        (result, Some(faults))
+    } else {
+        let result = Tuner::replay(
+            Arc::clone(&ctx.rec),
+            ctx.gpu.clone(),
+            CostModel::default(),
+        )
+        .with_budget(budget)
+        .with_seed(seed)
+        .run(choice);
+        (result, None)
+    };
 
     JobResult {
         spec: spec.clone(),
@@ -516,6 +622,7 @@ fn run_job(spec: &JobSpec, plan: &ExperimentPlan, ctx: &CellCtx) -> JobResult {
         } else {
             Vec::new()
         },
+        faults,
     }
 }
 
@@ -539,6 +646,13 @@ pub struct AggregateRow {
     pub mean_tests_to_wp: f64,
     pub mean_best_ms: f64,
     pub mean_cost_s: f64,
+    /// Failed runs / total tests over the cell, in `[0, 1]`; zero on
+    /// fault-free plans (serialized only when faults are active).
+    pub failure_rate: f64,
+    /// Mean transient retries per job.
+    pub mean_retries: f64,
+    /// Mean tuning cost wasted on failed attempts per job, seconds.
+    pub mean_wasted_cost_s: f64,
 }
 
 impl PlanReport {
@@ -568,6 +682,13 @@ impl PlanReport {
                     ),
                     ("cost_s", Value::from(r.cost_s)),
                 ]);
+                if let Some(f) = &r.faults {
+                    fields.extend(vec![
+                        ("failed_runs", Value::from(f.failed_runs)),
+                        ("retries", Value::from(f.retries)),
+                        ("wasted_cost_s", Value::from(f.wasted_cost_s)),
+                    ]);
+                }
                 if self.plan.include_traces {
                     fields.push((
                         "trace",
@@ -605,6 +726,16 @@ impl PlanReport {
                 ];
                 if self.plan.has_input_axis() {
                     fields.push(("input", Value::from(a.input.clone())));
+                }
+                if self.plan.has_faults() {
+                    fields.extend(vec![
+                        ("failure_rate", Value::from(a.failure_rate)),
+                        ("mean_retries", Value::from(a.mean_retries)),
+                        (
+                            "mean_wasted_cost_s",
+                            Value::from(a.mean_wasted_cost_s),
+                        ),
+                    ]);
                 }
                 obj(fields)
             })
@@ -648,6 +779,39 @@ impl PlanReport {
                     .collect();
                 let bests: Vec<f64> = rs.iter().map(|r| r.best_ms).collect();
                 let costs: Vec<f64> = rs.iter().map(|r| r.cost_s).collect();
+                // denominator is *attempts* (every retried transient
+                // attempt is both a failure and an attempt), keeping
+                // the rate within [0, 1] by construction
+                let total_attempts: usize = rs
+                    .iter()
+                    .map(|r| {
+                        r.tests
+                            + r.faults.as_ref().map(|f| f.retries).unwrap_or(0)
+                    })
+                    .sum();
+                let failed: usize = rs
+                    .iter()
+                    .filter_map(|r| r.faults.as_ref())
+                    .map(|f| f.failed_runs)
+                    .sum();
+                let retries: Vec<f64> = rs
+                    .iter()
+                    .map(|r| {
+                        r.faults
+                            .as_ref()
+                            .map(|f| f.retries as f64)
+                            .unwrap_or(0.0)
+                    })
+                    .collect();
+                let wasted: Vec<f64> = rs
+                    .iter()
+                    .map(|r| {
+                        r.faults
+                            .as_ref()
+                            .map(|f| f.wasted_cost_s)
+                            .unwrap_or(0.0)
+                    })
+                    .collect();
                 AggregateRow {
                     benchmark,
                     gpu,
@@ -661,6 +825,13 @@ impl PlanReport {
                     mean_tests_to_wp: mean(&steps),
                     mean_best_ms: mean(&bests),
                     mean_cost_s: mean(&costs),
+                    failure_rate: if total_attempts == 0 {
+                        0.0
+                    } else {
+                        failed as f64 / total_attempts as f64
+                    },
+                    mean_retries: mean(&retries),
+                    mean_wasted_cost_s: mean(&wasted),
                 }
             })
             .collect()
@@ -791,6 +962,7 @@ mod tests {
             base_seed: 5,
             max_tests: 40,
             include_traces: true,
+            fault_profile: FaultProfile::None,
         }
     }
 
@@ -952,6 +1124,101 @@ mod tests {
         let b = run_plan(&plan, 8).unwrap().to_pretty_string();
         assert_eq!(a, b);
         assert!(a.contains("\"schema\": \"pcat-plan-report/v1\""));
+    }
+
+    #[test]
+    fn faultless_plans_serialize_without_fault_fields() {
+        // the bit-for-bit contract: fault_profile none leaks no new
+        // keys into the JSON (plan echo, jobs or aggregates)
+        let plan = tiny();
+        assert!(!plan.has_faults());
+        let text = run_plan(&plan, 2).unwrap().to_pretty_string();
+        for key in [
+            "fault_profile",
+            "failed_runs",
+            "retries",
+            "wasted_cost_s",
+            "failure_rate",
+        ] {
+            assert!(!text.contains(key), "leaked {key:?}");
+        }
+    }
+
+    #[test]
+    fn hostile_runs_complete_and_account_for_faults() {
+        let plan = ExperimentPlan {
+            fault_profile: FaultProfile::Hostile,
+            searchers: vec![
+                "random".into(),
+                "profile".into(),
+                "basin_hopping".into(),
+                "annealing".into(),
+                "starchart".into(),
+            ],
+            max_tests: 60,
+            ..tiny()
+        };
+        let report = run_plan(&plan, 2).unwrap();
+        // every searcher completed and the accounting is present
+        assert_eq!(report.results.len(), 5 * plan.seeds);
+        assert!(report.results.iter().all(|r| r.faults.is_some()));
+        let total_failed: usize = report
+            .results
+            .iter()
+            .map(|r| r.faults.as_ref().unwrap().failed_runs)
+            .sum();
+        assert!(total_failed > 0, "hostile profile failed nothing");
+        for a in report.aggregate_rows() {
+            assert!((0.0..=1.0).contains(&a.failure_rate));
+            assert!(a.mean_wasted_cost_s >= 0.0);
+        }
+        let text = report.to_pretty_string();
+        assert!(text.contains("\"fault_profile\": \"hostile\""));
+        assert!(text.contains("\"failure_rate\""));
+    }
+
+    #[test]
+    fn fault_injection_is_jobs_independent_and_seed_stable() {
+        let plan = ExperimentPlan {
+            fault_profile: FaultProfile::Hostile,
+            ..tiny()
+        };
+        let a = run_plan(&plan, 1).unwrap().to_pretty_string();
+        let b = run_plan(&plan, 8).unwrap().to_pretty_string();
+        assert_eq!(a, b, "fault streams must not depend on scheduling");
+        // same seed reruns reproduce the exact fault sequence
+        let c = run_plan(&plan, 4).unwrap().to_pretty_string();
+        assert_eq!(a, c);
+        // a different base seed draws a different fault sequence
+        let plan2 = ExperimentPlan {
+            base_seed: 6,
+            ..plan.clone()
+        };
+        assert_ne!(a, run_plan(&plan2, 1).unwrap().to_pretty_string());
+    }
+
+    #[test]
+    fn fault_cell_seed_ignores_searcher_and_lane() {
+        let plan = tiny();
+        let jobs = plan.jobs();
+        // random lane 0/1 and profile lane 0 share one cell stream
+        let seeds: Vec<u64> = jobs
+            .iter()
+            .map(|j| j.fault_cell_seed(plan.base_seed))
+            .collect();
+        assert!(seeds.windows(2).all(|w| w[0] == w[1]));
+        // but job fault streams are all distinct
+        let mut js: Vec<u64> = jobs
+            .iter()
+            .map(|j| j.fault_job_seed(plan.base_seed))
+            .collect();
+        js.sort_unstable();
+        js.dedup();
+        assert_eq!(js.len(), jobs.len());
+        // and decorrelated from the searcher streams
+        for j in &jobs {
+            assert_ne!(j.fault_job_seed(plan.base_seed), j.rng_seed(plan.base_seed));
+        }
     }
 
     #[test]

@@ -443,9 +443,13 @@ fn get_arr<'a>(v: &'a Value, key: &str) -> Result<&'a [Value], RegistryError> {
 ///
 /// KPIs per report kind:
 /// * **matrix** — per aggregate cell: `mean_tests_to_wp`,
-///   `mean_best_ms`, `mean_cost_s`, `wp_rate`.
+///   `mean_best_ms`, `mean_cost_s`, `wp_rate`; under an active fault
+///   profile additionally `failure_rate`, `mean_retries`,
+///   `mean_wasted_cost_s` (and the plan name gains a `-<profile>`
+///   suffix, so hostile lanes keep their own trend series).
 /// * **transfer** — per aggregate cell: `median_tests_to_wp`,
-///   `median_best_over_oracle`, `mean_cost_s`, `wp_rate`; per source
+///   `median_best_over_oracle`, `mean_cost_s`, `wp_rate` (plus the
+///   same fault KPIs and plan-name suffix under faults); per source
 ///   endpoint: `median_mae`, `median_r2`.
 /// * **sweep** — per cell: `median_tests_to_wp`,
 ///   `median_best_over_oracle`, `median_mae`, `median_r2`.
@@ -467,8 +471,17 @@ pub fn extract_rows(
     };
     let prov = Provenance::for_rows(report);
 
+    // fault-injected lanes get their own plan-name suffix: a hostile
+    // run's failure rates and step counts must never be compared
+    // against (or shadow) the fault-free baseline's trend series
+    let fault_suffix = plan_echo
+        .as_obj()
+        .and_then(|o| o.get("fault_profile"))
+        .and_then(|v| v.as_str())
+        .map(|p| format!("-{p}"))
+        .unwrap_or_default();
     let derived_plan_name = match schema.as_str() {
-        PLAN_REPORT_SCHEMA => "matrix".to_string(),
+        PLAN_REPORT_SCHEMA => format!("matrix{fault_suffix}"),
         TRANSFER_REPORT_SCHEMA => {
             // oracle and tree lanes share cell scopes, so the model
             // kind must live in the plan name or the two lanes would
@@ -478,7 +491,7 @@ pub fn extract_rows(
                 .and_then(|o| o.get("model"))
                 .and_then(|v| v.as_str())
                 .unwrap_or("oracle");
-            format!("transfer-{model}")
+            format!("transfer-{model}{fault_suffix}")
         }
         SWEEP_REPORT_SCHEMA => "sweep".to_string(),
         BENCH_REPORT_SCHEMA => "bench".to_string(),
@@ -530,6 +543,7 @@ pub fn extract_rows(
                     "mean_cost_s",
                     get_f64(a, "mean_cost_s")?,
                 ));
+                push_fault_kpis(&mut rows, &row, &scope, a)?;
                 rows.push(row(scope, "wp_rate", wp_rate(a)?));
             }
         }
@@ -559,6 +573,7 @@ pub fn extract_rows(
                     "mean_cost_s",
                     get_f64(a, "mean_cost_s")?,
                 ));
+                push_fault_kpis(&mut rows, &row, &scope, a)?;
                 rows.push(row(scope, "wp_rate", wp_rate(a)?));
             }
             for q in get_arr(report, "model_quality")? {
@@ -633,6 +648,29 @@ pub fn extract_rows(
         _ => unreachable!("schema validated above"),
     }
     Ok(rows)
+}
+
+/// Fault-accounting KPIs of one aggregate cell, if present. The keys
+/// exist only under an active fault profile (the conditional
+/// serialization contract), so presence is the signal — but once one
+/// fault key exists, all three must, hence `get_f64` errors instead of
+/// skipping.
+fn push_fault_kpis(
+    rows: &mut Vec<RegistryRow>,
+    row: &impl Fn(String, &str, f64) -> RegistryRow,
+    scope: &str,
+    cell: &Value,
+) -> Result<(), RegistryError> {
+    let present = cell
+        .as_obj()
+        .map_or(false, |o| o.contains_key("failure_rate"));
+    if !present {
+        return Ok(());
+    }
+    for kpi in ["failure_rate", "mean_retries", "mean_wasted_cost_s"] {
+        rows.push(row(scope.to_string(), kpi, get_f64(cell, kpi)?));
+    }
+    Ok(())
 }
 
 /// `wp_hits / runs` of one aggregate/cell object (0 when `runs` is 0).
@@ -763,6 +801,15 @@ pub fn default_tolerances() -> Vec<Tolerance> {
         },
         // simulated tuning cost
         t("mean_cost_s", LowerIsBetter, 0.5, 0.25),
+        // fault robustness (hostile smoke lane): rate is a closed-range
+        // ratio by construction, the other two absorb retry noise
+        Tolerance {
+            min: Some(0.0),
+            max: Some(1.0),
+            ..t("failure_rate", LowerIsBetter, 0.05, 0.25)
+        },
+        t("mean_retries", LowerIsBetter, 1.0, 0.25),
+        t("mean_wasted_cost_s", LowerIsBetter, 0.5, 0.25),
         // model quality
         t("median_mae", LowerIsBetter, 1e-6, 0.25),
         Tolerance {
@@ -1127,6 +1174,52 @@ mod tests {
         let findings = compare_rows(&base, &cur, &default_tolerances());
         assert!(!has_failures(&findings));
         assert_eq!(findings[0].current, Some(10.5));
+    }
+
+    #[test]
+    fn fault_lanes_get_their_own_plan_name_and_kpis() {
+        let report = parse(
+            r#"{"schema": "pcat-plan-report/v1",
+                "plan": {"fault_profile": "hostile"},
+                "aggregates": [{"benchmark": "coulomb", "gpu": "gtx1070",
+                    "searcher": "random", "runs": 2, "wp_hits": 1,
+                    "mean_tests_to_wp": 5, "mean_best_ms": 1,
+                    "mean_cost_s": 2, "failure_rate": 0.2,
+                    "mean_retries": 1.5, "mean_wasted_cost_s": 0.4}]}"#,
+        )
+        .unwrap();
+        let rows = extract_rows(&report, None).unwrap();
+        // the hostile lane keeps its own trend series
+        assert!(rows.iter().all(|r| r.plan == "matrix-hostile"));
+        for kpi in ["failure_rate", "mean_retries", "mean_wasted_cost_s"] {
+            assert!(
+                rows.iter().any(|r| r.kpi == kpi),
+                "missing fault KPI {kpi}"
+            );
+        }
+        // a fault-free report keeps the baseline name and no fault KPIs
+        let clean = parse(
+            r#"{"schema": "pcat-plan-report/v1", "plan": {},
+                "aggregates": [{"benchmark": "coulomb", "gpu": "gtx1070",
+                    "searcher": "random", "runs": 2, "wp_hits": 1,
+                    "mean_tests_to_wp": 5, "mean_best_ms": 1,
+                    "mean_cost_s": 2}]}"#,
+        )
+        .unwrap();
+        let rows = extract_rows(&clean, None).unwrap();
+        assert!(rows.iter().all(|r| r.plan == "matrix"));
+        assert!(rows.iter().all(|r| r.kpi != "failure_rate"));
+    }
+
+    #[test]
+    fn fault_tolerances_are_directional_with_hard_range() {
+        let tols = default_tolerances();
+        let t = tols.iter().find(|t| t.kpi == "failure_rate").unwrap();
+        assert!(t.check(0.2, 0.1).is_ok(), "improvement must pass");
+        assert!(t.check(0.2, 0.5).is_err(), "large regression must fail");
+        assert!(t.check(0.2, 1.1).is_err(), "hard max 1.0 must trip");
+        assert!(tols.iter().any(|t| t.kpi == "mean_retries"));
+        assert!(tols.iter().any(|t| t.kpi == "mean_wasted_cost_s"));
     }
 
     #[test]

@@ -47,6 +47,7 @@ use super::registry;
 use super::transfer::{
     run_transfer_plan, ModelSource, TransferPlan, TransferReport,
 };
+use crate::searcher::FaultProfile;
 
 /// A train-fraction × model × benchmark sensitivity grid over one
 /// (source GPU → target GPU) endpoint pair.
@@ -161,6 +162,9 @@ impl SweepPlan {
             max_tests: self.max_tests,
             within_frac: self.within_frac,
             include_curves: true,
+            // the sweep studies model quality vs sample budget; fault
+            // robustness has its own lanes in the other harnesses
+            fault_profile: FaultProfile::None,
         }
     }
 

@@ -18,6 +18,7 @@ use crate::util::rng::Rng;
 use crate::util::stats::mean;
 use crate::util::table::{markdown, speedup};
 
+use super::plan::PlanReport;
 use super::registry::{CompareFinding, RegistryRow};
 use super::steps::{avg_steps_to_well_performing, par_map_seeds};
 use super::sweep::SweepReport;
@@ -966,6 +967,50 @@ pub fn sweep_matrix(report: &SweepReport) -> String {
     md
 }
 
+/// Render a [`PlanReport`]'s fault accounting as a markdown table: one
+/// row per (benchmark, GPU[, input], searcher) cell with its failure
+/// rate, mean transient retries and mean wasted tuning cost. Empty on
+/// fault-free plans, so callers can print it unconditionally next to
+/// the main matrix summary.
+pub fn robustness_table(report: &PlanReport) -> String {
+    if !report.plan.has_faults() {
+        return String::new();
+    }
+    let with_input = report.plan.has_input_axis();
+    let rows: Vec<Vec<String>> = report
+        .aggregate_rows()
+        .iter()
+        .map(|a| {
+            let mut row = vec![a.benchmark.clone(), a.gpu.clone()];
+            if with_input {
+                row.push(a.input.clone());
+            }
+            row.extend([
+                a.searcher.clone(),
+                format!("{:.1}%", a.failure_rate * 100.0),
+                format!("{:.2}", a.mean_retries),
+                format!("{:.2}", a.mean_wasted_cost_s),
+            ]);
+            row
+        })
+        .collect();
+    let mut header = vec!["benchmark", "gpu"];
+    if with_input {
+        header.push("input");
+    }
+    header.extend([
+        "searcher",
+        "failure rate",
+        "mean retries",
+        "wasted cost (s)",
+    ]);
+    format!(
+        "\n## Robustness under `{}` fault profile\n\n{}",
+        report.plan.fault_profile.name(),
+        markdown(&header, &rows)
+    )
+}
+
 /// Registry rows as a markdown table (`pcat registry query`): one row
 /// per registry entry, in store (append) order.
 pub fn registry_query_table(rows: &[RegistryRow]) -> String {
@@ -1070,6 +1115,7 @@ mod tests {
             max_tests: 40,
             within_frac: 0.10,
             include_curves: false,
+            fault_profile: crate::searcher::FaultProfile::None,
         };
         let report = run_transfer_plan(&plan, 4).unwrap();
         let md = transfer_matrix(&report);
@@ -1098,6 +1144,7 @@ mod tests {
             max_tests: 40,
             within_frac: 0.10,
             include_curves: false,
+            fault_profile: crate::searcher::FaultProfile::None,
         };
         let report = run_transfer_plan(&plan, 4).unwrap();
         let md = transfer_input_matrix(&report);
@@ -1126,6 +1173,7 @@ mod tests {
             max_tests: 40,
             within_frac: 0.10,
             include_curves: false,
+            fault_profile: crate::searcher::FaultProfile::None,
         };
         let report = run_transfer_plan(&plan, 4).unwrap();
         let md = model_quality_matrix(&report);
@@ -1137,6 +1185,24 @@ mod tests {
         assert!(md.contains("INST_F32"));
         assert!(md.contains("median MAE"));
         assert!(md.contains("median R²"));
+    }
+
+    #[test]
+    fn robustness_table_renders_only_under_faults() {
+        use crate::harness::{run_plan, ExperimentPlan};
+        use crate::searcher::FaultProfile;
+        let mut plan = ExperimentPlan::smoke(0);
+        plan.benchmarks = vec!["coulomb".into()];
+        plan.searchers = vec!["random".into()];
+        plan.seeds = 2;
+        let clean = run_plan(&plan, 2).unwrap();
+        assert!(robustness_table(&clean).is_empty());
+        plan.fault_profile = FaultProfile::Hostile;
+        let faulty = run_plan(&plan, 2).unwrap();
+        let md = robustness_table(&faulty);
+        assert!(md.contains("hostile"));
+        assert!(md.contains("failure rate"));
+        assert!(md.contains("coulomb"));
     }
 
     #[test]

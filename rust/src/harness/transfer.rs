@@ -67,7 +67,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -79,7 +79,10 @@ use crate::model::{
     dataset_from_indices, dataset_full, sample_size, stratified_indices,
     DecisionTreeModel, PredictionMatrix, MODELED_COUNTERS,
 };
-use crate::searcher::{Budget, CostModel};
+use crate::searcher::{
+    Budget, CostModel, FaultModel, FaultProfile, FaultStats, FaultyEnv,
+    ReplayEnv,
+};
 use crate::tuning::RecordedSpace;
 use crate::util::json::{obj, Value};
 use crate::util::pool;
@@ -181,6 +184,15 @@ pub struct TransferPlan {
     /// Embed per-cell aggregated best-so-far curves (step **and** time
     /// domain) in the report.
     pub include_curves: bool,
+    /// Fault/noise injection on the **target** environment
+    /// ([`crate::searcher::FaultProfile`]). Streams are keyed by the
+    /// target endpoint only (like [`rng_seed`]), so the source-axis
+    /// deduplication stays valid and every source column faces the
+    /// identical hostile hardware. `None` keeps the exact
+    /// pre-fault-layer bytes.
+    ///
+    /// [`rng_seed`]: TransferJobSpec::rng_seed
+    pub fault_profile: FaultProfile,
 }
 
 impl TransferPlan {
@@ -208,6 +220,7 @@ impl TransferPlan {
             max_tests: 1000,
             within_frac: 0.10,
             include_curves: false,
+            fault_profile: FaultProfile::None,
         }
     }
 
@@ -233,7 +246,14 @@ impl TransferPlan {
             max_tests: 80,
             within_frac: 0.10,
             include_curves: true,
+            fault_profile: FaultProfile::None,
         }
+    }
+
+    /// Does this plan inject faults? (Serialization gate, like
+    /// [`super::ExperimentPlan::has_faults`].)
+    pub fn has_faults(&self) -> bool {
+        self.fault_profile.is_active()
     }
 
     /// Expand into jobs, in deterministic plan order. Input selectors
@@ -300,7 +320,7 @@ impl TransferPlan {
     }
 
     fn to_json(&self) -> Value {
-        obj(vec![
+        let mut fields = vec![
             ("benchmarks", Value::from(self.benchmarks.clone())),
             ("source_gpus", Value::from(self.source_gpus.clone())),
             ("source_inputs", Value::from(self.source_inputs.clone())),
@@ -314,7 +334,16 @@ impl TransferPlan {
             ("base_seed", Value::from(self.base_seed.to_string())),
             ("max_tests", Value::from(self.max_tests)),
             ("within_frac", Value::from(self.within_frac)),
-        ])
+        ];
+        if self.has_faults() {
+            // serialized (and hashed) only when active, so fault-free
+            // plans keep their exact plan hashes
+            fields.push((
+                "fault_profile",
+                Value::from(self.fault_profile.name()),
+            ));
+        }
+        obj(fields)
     }
 }
 
@@ -364,6 +393,63 @@ impl TransferJobSpec {
                     &self.target_gpu,
                     &self.target_input,
                     &self.searcher,
+                ],
+                self.lane as u64,
+            )
+        }
+    }
+
+    /// Cell fault-stream seed: target endpoint only (no source, no
+    /// searcher, no lane) — persistent config verdicts belong to the
+    /// hardware, so every source column, searcher and repetition on one
+    /// target faces the same broken configs. Matches
+    /// [`super::JobSpec::fault_cell_seed`] on same-(GPU, default input)
+    /// cells.
+    pub fn fault_cell_seed(&self, base_seed: u64) -> u64 {
+        if self.target_default {
+            stream_seed(
+                base_seed,
+                &[&self.benchmark, &self.target_gpu, "fault-cell"],
+                0,
+            )
+        } else {
+            stream_seed(
+                base_seed,
+                &[
+                    &self.benchmark,
+                    &self.target_gpu,
+                    &self.target_input,
+                    "fault-cell",
+                ],
+                0,
+            )
+        }
+    }
+
+    /// Per-job fault-stream seed: target coordinates plus a `"faults"`
+    /// tag — deliberately source-free so the source-axis deduplication
+    /// of non-model searchers stays byte-exact under injection.
+    pub fn fault_job_seed(&self, base_seed: u64) -> u64 {
+        if self.target_default {
+            stream_seed(
+                base_seed,
+                &[
+                    &self.benchmark,
+                    &self.target_gpu,
+                    &self.searcher,
+                    "faults",
+                ],
+                self.lane as u64,
+            )
+        } else {
+            stream_seed(
+                base_seed,
+                &[
+                    &self.benchmark,
+                    &self.target_gpu,
+                    &self.target_input,
+                    &self.searcher,
+                    "faults",
                 ],
                 self.lane as u64,
             )
@@ -429,6 +515,8 @@ pub struct TransferJobResult {
     /// time-domain curve aggregation under the same `include_curves`
     /// gate as `runtimes`.
     pub staircase: Vec<(f64, f64)>,
+    /// Fault accounting for this job; `None` on fault-free plans.
+    pub faults: Option<FaultStats>,
 }
 
 /// Shared per-(benchmark, source endpoint, target endpoint) context.
@@ -464,14 +552,41 @@ fn run_transfer_job(
     let stop_ms = cell
         .thr_ms
         .min(cell.oracle_best_ms * (1.0 + plan.within_frac));
-    let result = Tuner::replay(
-        Arc::clone(&cell.rec_target),
-        cell.gpu_target.clone(),
-        CostModel::default(),
-    )
-    .with_budget(Budget::until(stop_ms, plan.max_tests))
-    .with_seed(spec.rng_seed(plan.base_seed))
-    .run(choice);
+    let budget = Budget::until(stop_ms, plan.max_tests);
+    let seed = spec.rng_seed(plan.base_seed);
+    let (result, faults) = if plan.has_faults() {
+        // Wrap the replay environment in the fault injector. Streams
+        // are keyed off target-side plan coordinates only, so the
+        // source-axis deduplication below stays byte-exact.
+        let stats = Arc::new(Mutex::new(FaultStats::default()));
+        let env = FaultyEnv::new(
+            ReplayEnv::new(
+                Arc::clone(&cell.rec_target),
+                cell.gpu_target.clone(),
+                CostModel::default(),
+            ),
+            FaultModel::for_profile(plan.fault_profile),
+            spec.fault_cell_seed(plan.base_seed),
+            spec.fault_job_seed(plan.base_seed),
+            Arc::clone(&stats),
+        );
+        let result = Tuner::over(Box::new(env))
+            .with_budget(budget)
+            .with_seed(seed)
+            .run(choice);
+        let stats = stats.lock().unwrap().clone();
+        (result, Some(stats))
+    } else {
+        let result = Tuner::replay(
+            Arc::clone(&cell.rec_target),
+            cell.gpu_target.clone(),
+            CostModel::default(),
+        )
+        .with_budget(budget)
+        .with_seed(seed)
+        .run(choice);
+        (result, None)
+    };
 
     let runtimes: Vec<f64> =
         result.trace.steps.iter().map(|s| s.runtime_ms).collect();
@@ -498,6 +613,7 @@ fn run_transfer_job(
         } else {
             Vec::new()
         },
+        faults,
     }
 }
 
@@ -609,6 +725,14 @@ pub struct TransferAggregate {
     /// Counter abbreviations dropped by the cross-generation
     /// restriction (empty for same-generation pairs).
     pub dropped_counters: Vec<String>,
+    /// Failed attempts over total attempts (tests + retries) across the
+    /// cell's runs; 0.0 on fault-free plans.
+    pub failure_rate: f64,
+    /// Mean transient-retry count per run; 0.0 on fault-free plans.
+    pub mean_retries: f64,
+    /// Mean simulated seconds billed to failed/retried attempts per
+    /// run; 0.0 on fault-free plans.
+    pub mean_wasted_cost_s: f64,
 }
 
 /// A completed transfer plan: per-job results in plan order, plus the
@@ -690,7 +814,31 @@ fn compute_aggregates(
                 ))
                 .cloned()
                 .unwrap_or_default();
+            // fault accounting: failure rate over *attempts* (trace
+            // steps + transient retries), so retried-then-failed runs
+            // cannot push the rate past 1.0
+            let mut failed = 0u64;
+            let mut retries = 0u64;
+            let mut wasted = 0.0f64;
+            let mut attempts = 0u64;
+            for r in &rs {
+                attempts += r.tests as u64;
+                if let Some(f) = &r.faults {
+                    failed += f.failed_runs;
+                    retries += f.retries;
+                    wasted += f.wasted_cost_s;
+                    attempts += f.retries;
+                }
+            }
+            let n = rs.len() as f64;
             TransferAggregate {
+                failure_rate: if attempts == 0 {
+                    0.0
+                } else {
+                    failed as f64 / attempts as f64
+                },
+                mean_retries: retries as f64 / n,
+                mean_wasted_cost_s: wasted / n,
                 runs: rs.len(),
                 wp_hits: rs
                     .iter()
@@ -771,7 +919,7 @@ impl TransferReport {
             .results
             .iter()
             .map(|r| {
-                obj(vec![
+                let mut fields = vec![
                     ("benchmark", Value::from(r.spec.benchmark.clone())),
                     ("source_gpu", Value::from(r.spec.source_gpu.clone())),
                     (
@@ -800,15 +948,26 @@ impl TransferReport {
                             .unwrap_or(Value::Null),
                     ),
                     ("cost_s", Value::from(r.cost_s)),
-                ])
+                ];
+                if let Some(f) = &r.faults {
+                    // only present under an active fault profile, so
+                    // fault-free reports keep their exact bytes
+                    fields.extend([
+                        ("failed_runs", Value::from(f.failed_runs)),
+                        ("retries", Value::from(f.retries)),
+                        ("wasted_cost_s", Value::from(f.wasted_cost_s)),
+                    ]);
+                }
+                obj(fields)
             })
             .collect();
 
+        let has_faults = self.plan.has_faults();
         let aggregates: Vec<Value> = self
             .aggregate_rows()
             .iter()
             .map(|a| {
-                obj(vec![
+                let mut fields = vec![
                     ("benchmark", Value::from(a.benchmark.clone())),
                     ("source_gpu", Value::from(a.source_gpu.clone())),
                     ("source_input", Value::from(a.source_input.clone())),
@@ -833,7 +992,18 @@ impl TransferReport {
                         "dropped_counters",
                         Value::from(a.dropped_counters.clone()),
                     ),
-                ])
+                ];
+                if has_faults {
+                    fields.extend([
+                        ("failure_rate", Value::from(a.failure_rate)),
+                        ("mean_retries", Value::from(a.mean_retries)),
+                        (
+                            "mean_wasted_cost_s",
+                            Value::from(a.mean_wasted_cost_s),
+                        ),
+                    ]);
+                }
+                obj(fields)
             })
             .collect();
 
@@ -1359,6 +1529,7 @@ mod tests {
             max_tests: 40,
             within_frac: 0.10,
             include_curves: true,
+            fault_profile: FaultProfile::None,
         }
     }
 
@@ -1524,6 +1695,109 @@ mod tests {
         assert!(a.contains("\"model\": \"oracle\""));
         assert!(a.contains("\"model_quality\""));
         assert!(a.contains("\"train_fraction\": 1"));
+    }
+
+    #[test]
+    fn faultless_transfer_serializes_without_fault_fields() {
+        // the conditional-serialization contract: a fault-free plan's
+        // report must not gain a single byte from this subsystem
+        let report = run_transfer_plan(&tiny(), 2).unwrap();
+        assert!(report.results.iter().all(|r| r.faults.is_none()));
+        let text = report.to_pretty_string();
+        assert!(!text.contains("\"fault_profile\""));
+        assert!(!text.contains("\"failed_runs\""));
+        assert!(!text.contains("\"failure_rate\""));
+        assert!(!text.contains("\"wasted_cost_s\""));
+    }
+
+    #[test]
+    fn hostile_transfer_is_jobs_independent_and_accounted() {
+        let plan = TransferPlan {
+            fault_profile: FaultProfile::Hostile,
+            ..tiny()
+        };
+        let a = run_transfer_plan(&plan, 1).unwrap();
+        let b = run_transfer_plan(&plan, 8).unwrap();
+        assert_eq!(a.to_pretty_string(), b.to_pretty_string());
+        let text = a.to_pretty_string();
+        assert!(text.contains("\"fault_profile\": \"hostile\""));
+        assert!(text.contains("\"failed_runs\""));
+        assert!(text.contains("\"failure_rate\""));
+        // every job completed with a bounded fault ledger
+        assert!(a.results.iter().all(|r| r.faults.is_some()));
+        for agg in a.aggregate_rows() {
+            assert!(
+                (0.0..=1.0).contains(&agg.failure_rate),
+                "failure_rate {} out of [0, 1]",
+                agg.failure_rate
+            );
+            assert!(agg.mean_retries >= 0.0);
+            assert!(agg.mean_wasted_cost_s >= 0.0);
+        }
+        // a hostile profile genuinely perturbs the search
+        assert_ne!(
+            text,
+            run_transfer_plan(&tiny(), 8).unwrap().to_pretty_string()
+        );
+    }
+
+    #[test]
+    fn fault_streams_ignore_source_endpoint() {
+        // fault seeds are keyed off the target side only, so the
+        // source-axis deduplication of non-model searchers stays
+        // byte-exact under injection — and a given target's broken
+        // configs are broken for every searcher and lane
+        let mut plan = TransferPlan {
+            fault_profile: FaultProfile::Flaky,
+            ..tiny()
+        };
+        plan.source_inputs = vec!["default".into(), "alt".into()];
+        let jobs = plan.jobs();
+        let a = &jobs[0];
+        let b = jobs
+            .iter()
+            .find(|j| {
+                j.source_gpu != a.source_gpu
+                    && j.searcher == a.searcher
+                    && j.lane == a.lane
+            })
+            .unwrap();
+        assert_eq!(a.fault_cell_seed(5), b.fault_cell_seed(5));
+        assert_eq!(a.fault_job_seed(5), b.fault_job_seed(5));
+        let c = jobs
+            .iter()
+            .find(|j| j.searcher != a.searcher && j.lane == a.lane)
+            .unwrap();
+        assert_eq!(a.fault_cell_seed(5), c.fault_cell_seed(5));
+        assert_ne!(a.fault_job_seed(5), c.fault_job_seed(5));
+        // and on the default (GPU, input) cell the transfer fault cell
+        // agrees with the matrix harness's, so the same hardware
+        // breaks the same way in both harnesses
+        let matrix_cell =
+            stream_seed(5, &["coulomb", a.target_gpu.as_str(), "fault-cell"], 0);
+        assert_eq!(a.fault_cell_seed(5), matrix_cell);
+
+        let report = run_transfer_plan(&plan, 4).unwrap();
+        for r in report
+            .results
+            .iter()
+            .filter(|r| r.spec.searcher == "random")
+        {
+            let twin = report
+                .results
+                .iter()
+                .find(|o| {
+                    o.spec.searcher == "random"
+                        && o.spec.target_gpu == r.spec.target_gpu
+                        && o.spec.target_input == r.spec.target_input
+                        && o.spec.lane == r.spec.lane
+                        && (o.spec.source_gpu != r.spec.source_gpu
+                            || o.spec.source_input != r.spec.source_input)
+                })
+                .expect("several source columns in the plan");
+            assert_eq!(r.best_ms, twin.best_ms);
+            assert_eq!(r.faults, twin.faults);
+        }
     }
 
     #[test]

@@ -11,12 +11,16 @@
 //!              [--jobs N]
 //! pcat matrix  [--smoke] [--jobs N] [--seed S] [--seeds K] [--budget B] \
 //!              [--benchmarks a,b] [--gpus x,y] [--inputs i,j] \
-//!              [--searchers p,q] [--traces] [--out report.json]
+//!              [--searchers p,q] [--traces] \
+//!              [--fault-profile none|flaky|noisy|hostile] \
+//!              [--out report.json]
 //! pcat transfer [--smoke] [--jobs N] [--seed S] [--seeds K] [--budget B] \
 //!              [--benchmarks a,b] [--sources x,y] [--targets x,y] \
 //!              [--inputs i,j] [--source-inputs i,j] [--target-inputs i,j] \
 //!              [--model oracle|tree] [--train-fraction F] \
-//!              [--searchers p,q] [--curves] [--out TRANSFER_REPORT.json]
+//!              [--searchers p,q] [--curves] \
+//!              [--fault-profile none|flaky|noisy|hostile] \
+//!              [--out TRANSFER_REPORT.json]
 //! pcat sweep   [--smoke] [--jobs N] [--seed S] [--seeds K] [--budget B] \
 //!              [--benchmarks a,b] [--source g] [--target g] \
 //!              [--fractions 0.1,0.25,1.0] [--models tree,oracle] \
@@ -37,7 +41,12 @@
 //! `--smoke` selects the tiny CI matrix whose report is byte-compared
 //! against `rust/testdata/smoke_golden.json`. `--jobs N` bounds worker
 //! threads everywhere (serial and parallel runs produce identical
-//! reports).
+//! reports). `--fault-profile` wraps every measurement in the
+//! deterministic fault injector ([`pcat::searcher::FaultyEnv`]):
+//! persistent/transient config failures, runtime noise and counter
+//! dropout, with failure/retry/wasted-cost accounting in the report and
+//! a robustness table on stdout; the `--smoke --fault-profile hostile`
+//! lane is gated against `rust/testdata/faults_golden.json`.
 //!
 //! `transfer` runs a [`TransferPlan`] — the paper's train-on-A /
 //! tune-on-B portability experiment over **both** axes the paper
@@ -84,16 +93,16 @@ use pcat::benchmarks::{self, cached_space, Benchmark};
 use pcat::coordinator::{SearcherChoice, Tuner};
 use pcat::gpusim::GpuSpec;
 use pcat::harness::{
-    model_quality_matrix, run_experiment, run_plan, run_sweep_plan,
-    run_transfer_plan, sweep_matrix, transfer_input_matrix, transfer_matrix,
-    ExperimentOpts, ExperimentPlan, ModelSource, SweepPlan, TransferPlan,
-    ALL_EXPERIMENTS,
+    model_quality_matrix, robustness_table, run_experiment, run_plan,
+    run_sweep_plan, run_transfer_plan, sweep_matrix, transfer_input_matrix,
+    transfer_matrix, ExperimentOpts, ExperimentPlan, ModelSource, SweepPlan,
+    TransferPlan, ALL_EXPERIMENTS,
 };
 use pcat::model::{
     dataset_from_recorded, DecisionTreeModel, OracleModel, PrecomputedModel,
     TpPcModel,
 };
-use pcat::searcher::{Budget, CostModel};
+use pcat::searcher::{Budget, CostModel, FaultProfile};
 use pcat::tuning::RecordedSpace;
 use pcat::util::pool;
 use pcat::util::rng::Rng;
@@ -191,6 +200,22 @@ fn canon_benchmarks(names: Vec<String>) -> Vec<String> {
         .collect()
 }
 
+/// Resolve `--fault-profile` for the matrix/transfer runners. Unknown
+/// names are a typed error listing the valid profiles.
+fn fault_profile_arg(args: &Args) -> Result<FaultProfile> {
+    match args.get("fault-profile") {
+        None => Ok(FaultProfile::None),
+        Some(s) => FaultProfile::parse(s).ok_or_else(|| {
+            let names: Vec<&str> =
+                FaultProfile::ALL.iter().map(|p| p.name()).collect();
+            anyhow!(
+                "--fault-profile expects one of {}, got {s:?}",
+                names.join("|")
+            )
+        }),
+    }
+}
+
 /// Resolve `--jobs` (0 = all available cores) for the plan runners.
 fn jobs_arg(args: &Args) -> Result<usize> {
     Ok(match args.num("jobs", 0usize)? {
@@ -253,7 +278,9 @@ train a TP→PC decision-tree model from a recording\n  tune        search a \
 tuning space (replayed/simulated)\n  tune-real   search over really-executing \
 PJRT artifacts\n  experiment  regenerate a paper table/figure (or `all`)\n  \
 matrix      run a benchmark × GPU × input × searcher × seed job matrix in \
-parallel\n              (--smoke = the tiny deterministic CI matrix)\n  \
+parallel\n              (--smoke = the tiny deterministic CI matrix;\n              \
+--fault-profile none|flaky|noisy|hostile injects deterministic\n              \
+measurement faults and reports failure/retry accounting)\n  \
 transfer    train-on-(GPU,input)-A / tune-on-B portability matrix; writes\n              \
 paper-style tables (GPU×GPU + input×input + model quality) +\n              \
 TRANSFER_REPORT.json (--model oracle|tree picks the source model;\n              \
@@ -472,8 +499,15 @@ fn cmd_tune_real(_args: &Args) -> Result<()> {
 /// deterministic JSON report.
 fn cmd_matrix(args: &Args) -> Result<()> {
     let seed = args.num("seed", 0u64)?;
+    // fault injection composes with both plan shapes; the smoke matrix
+    // stays pinned otherwise, so CI gates `--smoke` and `--smoke
+    // --fault-profile hostile` as separate golden lanes
+    let fault_profile = fault_profile_arg(args)?;
     let plan = if args.get("smoke").is_some() {
-        ExperimentPlan::smoke(seed)
+        ExperimentPlan {
+            fault_profile,
+            ..ExperimentPlan::smoke(seed)
+        }
     } else {
         let base = ExperimentPlan::full(args.num("seeds", 100usize)?, seed);
         ExperimentPlan {
@@ -491,6 +525,7 @@ fn cmd_matrix(args: &Args) -> Result<()> {
             searchers: axis_arg(args, "searchers", &base.searchers),
             max_tests: args.num("budget", base.max_tests)?,
             include_traces: args.get("traces").is_some(),
+            fault_profile,
             ..base
         }
     };
@@ -510,6 +545,10 @@ fn cmd_matrix(args: &Args) -> Result<()> {
     for line in report.summary_lines() {
         println!("  {line}");
     }
+    let robustness = robustness_table(&report);
+    if !robustness.is_empty() {
+        println!("{robustness}");
+    }
     Ok(())
 }
 
@@ -527,14 +566,16 @@ fn cmd_transfer(args: &Args) -> Result<()> {
     // sampling knob for the tree source; 1.0 = full recording (the
     // pre-fraction behaviour, also the smoke/golden setting)
     let train_fraction = args.num("train-fraction", 1.0f64)?;
+    let fault_profile = fault_profile_arg(args)?;
     let plan = if args.get("smoke").is_some() {
-        // the smoke matrix is pinned except for the model source and
-        // the training fraction (CI invokes it without
-        // --train-fraction), so CI gates `--smoke` and `--smoke
-        // --model tree` as two lanes
+        // the smoke matrix is pinned except for the model source, the
+        // training fraction and the fault profile (CI invokes it
+        // without --train-fraction), so CI gates `--smoke` and
+        // `--smoke --model tree` as two lanes
         TransferPlan {
             model,
             train_fraction,
+            fault_profile,
             ..TransferPlan::smoke(seed)
         }
     } else {
@@ -559,6 +600,7 @@ fn cmd_transfer(args: &Args) -> Result<()> {
             searchers: axis_arg(args, "searchers", &base.searchers),
             max_tests: args.num("budget", base.max_tests)?,
             include_curves: args.get("curves").is_some(),
+            fault_profile,
             ..base
         }
     };

@@ -180,10 +180,7 @@ impl EvalEnv for PjrtEnv {
             add_stress(&mut c, runtime_ms);
             c
         });
-        Measurement {
-            runtime_ms,
-            counters,
-        }
+        Measurement::ok(runtime_ms, counters)
     }
 
     fn cost_so_far(&self) -> f64 {

@@ -74,12 +74,20 @@ impl Searcher for SimulatedAnnealing {
                 cost_after_s: env.cost_so_far(),
                 build: false,
             });
-            let accept = m.runtime_ms < t_cur
-                || self.rng.f64()
-                    < (-(m.runtime_ms - t_cur) / temp.max(1e-12)).exp();
+            // failed runs (infinite runtime) are never accepted as the
+            // incumbent: the walk keeps exploring from where it stood
+            let accept = m.is_ok()
+                && (m.runtime_ms < t_cur
+                    || self.rng.f64()
+                        < (-(m.runtime_ms - t_cur) / temp.max(1e-12)).exp());
             if accept {
                 current = next;
                 t_cur = m.runtime_ms;
+                if !temp.is_finite() {
+                    // the walk started on a failed config (t0 × ∞):
+                    // re-anchor the temperature on the first real runtime
+                    temp = self.t0 * t_cur;
+                }
                 temp *= self.cooling;
             }
         }

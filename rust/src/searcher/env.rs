@@ -8,16 +8,89 @@
 
 use std::sync::Arc;
 
-use crate::counters::CounterVec;
+use crate::counters::{Counter, CounterVec};
 use crate::gpusim::GpuSpec;
 use crate::tuning::{RecordedSpace, Space};
+
+/// Why an empirical test produced no usable runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailReason {
+    /// The configuration itself is broken (compile/launch error,
+    /// resource exhaustion): it fails on every attempt.
+    Persistent,
+    /// A one-off environment hiccup; retrying may succeed.
+    Transient,
+}
+
+impl FailReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FailReason::Persistent => "persistent",
+            FailReason::Transient => "transient",
+        }
+    }
+}
+
+/// Typed outcome of one empirical test. Anything but [`Ok`]
+/// (`MeasureOutcome::Ok`) means `runtime_ms` is `f64::INFINITY` and
+/// `counters` is `None` — searchers must branch on this instead of
+/// trusting the runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MeasureOutcome {
+    /// The run completed; `runtime_ms` is valid (counters may still be
+    /// missing on a profiled run whose profiling pass failed).
+    Ok,
+    /// The run failed outright.
+    Failed { reason: FailReason },
+    /// The run exceeded the watchdog limit (treated as a failure with
+    /// its own label — timeouts dominate wasted cost in real tuning).
+    TimedOut,
+}
 
 /// Result of one empirical test.
 #[derive(Debug, Clone)]
 pub struct Measurement {
     pub runtime_ms: f64,
-    /// Present only when the run was profiled.
+    /// Present only when the run was profiled (and the profiling pass
+    /// did not fail).
     pub counters: Option<CounterVec>,
+    /// What happened to the run. Infallible environments always report
+    /// [`MeasureOutcome::Ok`].
+    pub outcome: MeasureOutcome,
+    /// Counters the profiler failed to collect this run (zeroed in
+    /// `counters`); empty for healthy environments. Searchers mask
+    /// these out of their scoring reaction.
+    pub dropped: Vec<Counter>,
+}
+
+impl Measurement {
+    /// A successful measurement (the only shape infallible
+    /// environments produce).
+    pub fn ok(runtime_ms: f64, counters: Option<CounterVec>) -> Measurement {
+        Measurement {
+            runtime_ms,
+            counters,
+            outcome: MeasureOutcome::Ok,
+            dropped: Vec::new(),
+        }
+    }
+
+    /// A failed measurement: infinite runtime (so best-so-far folds and
+    /// thresholds ignore it naturally), no counters.
+    pub fn failed(outcome: MeasureOutcome) -> Measurement {
+        debug_assert!(outcome != MeasureOutcome::Ok);
+        Measurement {
+            runtime_ms: f64::INFINITY,
+            counters: None,
+            outcome,
+            dropped: Vec::new(),
+        }
+    }
+
+    /// Did the run produce a usable runtime?
+    pub fn is_ok(&self) -> bool {
+        self.outcome == MeasureOutcome::Ok
+    }
 }
 
 /// Where empirical tests execute.
@@ -148,10 +221,7 @@ impl EvalEnv for ReplayEnv {
         let r = &self.rec.records[idx];
         self.spent_s += self.cost.cost_of(r.runtime_ms, profile);
         self.measurements += 1;
-        Measurement {
-            runtime_ms: r.runtime_ms,
-            counters: profile.then(|| r.counters.clone()),
-        }
+        Measurement::ok(r.runtime_ms, profile.then(|| r.counters.clone()))
     }
 
     fn cost_so_far(&self) -> f64 {
@@ -185,8 +255,11 @@ mod tests {
         let m = e.measure(3, false);
         assert_eq!(m.runtime_ms, want);
         assert!(m.counters.is_none());
+        assert!(m.is_ok());
+        assert!(m.dropped.is_empty());
         let m2 = e.measure(3, true);
         assert!(m2.counters.is_some());
+        assert_eq!(m2.outcome, MeasureOutcome::Ok);
     }
 
     #[test]

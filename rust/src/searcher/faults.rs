@@ -1,0 +1,569 @@
+//! Deterministic fault-and-noise injection: survive hostile hardware.
+//!
+//! The replay layer is infallible and noiseless; real tuning spaces
+//! are not. The kernel-tuner benchmarking literature (PAPERS.md:
+//! arxiv 2303.08976, 2210.01465) treats failed/invalid configurations
+//! and noisy objectives as first-class properties of these spaces:
+//! configs fail outright (compile/launch errors, resource
+//! exhaustion), profiled runs return partial or no counters, and
+//! timings carry measurement noise. [`FaultyEnv`] wraps any
+//! [`EvalEnv`] and injects exactly those failure modes, keyed off
+//! [`crate::util::rng::stream_seed`] streams so injection is
+//! reproducible, `--jobs`-independent and a pure function of the plan:
+//!
+//! * **persistent config failures** — a per-config verdict derived
+//!   deterministically from the config index hashed against the
+//!   *cell* seed (benchmark/GPU/input coordinates), so a broken
+//!   config is broken for every searcher and every lane on that
+//!   hardware, the way a real compile error would be;
+//! * **transient failures** — per-attempt coin flips from the *job*
+//!   fault stream, retried under a typed [`RetryPolicy`] with every
+//!   attempt billed through the inner environment's cost model;
+//! * **multiplicative log-normal runtime noise** — observed runtimes
+//!   are scaled by `exp(σ·z)`, `z ~ N(0,1)`; the cost model keeps
+//!   billing the true runtime (noise pollutes observations, not
+//!   wall-clock);
+//! * **counter dropout** — a profiled run succeeds but a
+//!   deterministic subset of counters is missing (zeroed and listed
+//!   in [`Measurement::dropped`] so the searcher can mask its
+//!   reaction), or the whole profiling pass fails (`counters: None`
+//!   with a valid runtime — the searcher degrades to a plain step).
+//!
+//! Failed runs return [`Measurement::failed`]: infinite runtime (so
+//! best-so-far folds and thresholds ignore them naturally), no
+//! counters, and a typed [`MeasureOutcome`]. Failure, retry and
+//! wasted-cost counts accumulate in a shared [`FaultStats`] the
+//! harness embeds in its reports.
+
+use std::sync::{Arc, Mutex};
+
+use crate::counters::ALL_COUNTERS;
+use crate::gpusim::GpuSpec;
+use crate::tuning::Space;
+use crate::util::rng::{stream_seed, Rng};
+
+use super::env::{EvalEnv, FailReason, MeasureOutcome, Measurement};
+
+/// Named fault profile selecting a [`FaultModel`] — the
+/// `--fault-profile {none,flaky,noisy,hostile}` axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FaultProfile {
+    /// No injection at all: the wrapped environment's behaviour (and
+    /// every report byte) is exactly the pre-fault-layer behaviour.
+    #[default]
+    None,
+    /// Failure-dominated: persistent broken configs, transient
+    /// hiccups with retries, occasional profile failures — no noise.
+    Flaky,
+    /// Noise-dominated: log-normal runtime noise and counter dropout
+    /// — every config still works.
+    Noisy,
+    /// Everything at once, at the acceptance-criteria rates (≥10%
+    /// persistent config failures, counter dropout, log-normal
+    /// noise).
+    Hostile,
+}
+
+impl FaultProfile {
+    pub const ALL: [FaultProfile; 4] = [
+        FaultProfile::None,
+        FaultProfile::Flaky,
+        FaultProfile::Noisy,
+        FaultProfile::Hostile,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultProfile::None => "none",
+            FaultProfile::Flaky => "flaky",
+            FaultProfile::Noisy => "noisy",
+            FaultProfile::Hostile => "hostile",
+        }
+    }
+
+    /// Case-insensitive parse of the CLI spelling.
+    pub fn parse(s: &str) -> Option<FaultProfile> {
+        let lower = s.to_ascii_lowercase();
+        FaultProfile::ALL
+            .iter()
+            .copied()
+            .find(|p| p.name() == lower)
+    }
+
+    /// Does this profile inject anything at all?
+    pub fn is_active(&self) -> bool {
+        *self != FaultProfile::None
+    }
+}
+
+/// Typed retry policy for transient failures: how many times one
+/// `measure` call may attempt the run in total. Every attempt —
+/// including the failed ones — is billed through the inner cost
+/// model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts per measurement (≥ 1); 1 means no retries.
+    pub max_attempts: usize,
+}
+
+impl RetryPolicy {
+    pub fn none() -> RetryPolicy {
+        RetryPolicy { max_attempts: 1 }
+    }
+}
+
+/// The injection rates one [`FaultProfile`] lowers to. All rates are
+/// probabilities in `[0, 1]`; a zero rate consumes no randomness, so
+/// lighter profiles keep their fault streams short.
+#[derive(Debug, Clone)]
+pub struct FaultModel {
+    pub profile: FaultProfile,
+    /// Fraction of configs that fail on every attempt.
+    pub persistent_rate: f64,
+    /// Share of persistent failures that manifest as timeouts rather
+    /// than hard failures.
+    pub timeout_share: f64,
+    /// Per-attempt probability of a transient failure.
+    pub transient_rate: f64,
+    pub retry: RetryPolicy,
+    /// σ of the multiplicative log-normal runtime noise (0 = exact).
+    pub noise_sigma: f64,
+    /// Per-counter probability that a profiled run loses a counter.
+    pub counter_dropout_rate: f64,
+    /// Probability that a profiled run loses its *whole* counter set
+    /// (the run itself still times correctly).
+    pub profile_fail_rate: f64,
+}
+
+impl FaultModel {
+    /// The rates behind each named profile. `hostile` meets the
+    /// acceptance floor: ≥10% persistent config failures plus counter
+    /// dropout plus log-normal noise.
+    pub fn for_profile(profile: FaultProfile) -> FaultModel {
+        let off = FaultModel {
+            profile,
+            persistent_rate: 0.0,
+            timeout_share: 0.0,
+            transient_rate: 0.0,
+            retry: RetryPolicy::none(),
+            noise_sigma: 0.0,
+            counter_dropout_rate: 0.0,
+            profile_fail_rate: 0.0,
+        };
+        match profile {
+            FaultProfile::None => off,
+            FaultProfile::Flaky => FaultModel {
+                persistent_rate: 0.10,
+                timeout_share: 0.25,
+                transient_rate: 0.05,
+                retry: RetryPolicy { max_attempts: 3 },
+                profile_fail_rate: 0.05,
+                ..off
+            },
+            FaultProfile::Noisy => FaultModel {
+                noise_sigma: 0.05,
+                counter_dropout_rate: 0.10,
+                ..off
+            },
+            FaultProfile::Hostile => FaultModel {
+                persistent_rate: 0.12,
+                timeout_share: 0.25,
+                transient_rate: 0.05,
+                retry: RetryPolicy { max_attempts: 3 },
+                noise_sigma: 0.10,
+                counter_dropout_rate: 0.15,
+                profile_fail_rate: 0.05,
+                ..off
+            },
+        }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.profile.is_active()
+    }
+}
+
+/// Failure/retry/wasted-cost accounting, shared between the wrapper
+/// and the harness via `Arc<Mutex<_>>` (the tuner owns the boxed env,
+/// so the harness reads the stats through its own handle after the
+/// search returns).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultStats {
+    /// `measure` calls that returned a non-[`MeasureOutcome::Ok`]
+    /// measurement.
+    pub failed_runs: usize,
+    /// Transient attempts that were retried (each also billed).
+    pub retries: usize,
+    /// Simulated tuning cost spent on attempts that produced no
+    /// usable runtime.
+    pub wasted_cost_s: f64,
+}
+
+/// An [`EvalEnv`] wrapper injecting the faults of one [`FaultModel`].
+///
+/// Two decorrelated streams drive the injection: the **cell seed**
+/// (hashed per config index) decides the persistent verdicts, so they
+/// are a pure function of (plan seed, benchmark, GPU, input, config)
+/// — identical for every searcher and lane on that cell; the **job
+/// stream** drives transient flips, noise and dropout, advancing one
+/// deterministic step pattern per `measure` call, so a same-seed
+/// rerun reproduces the exact fault sequence and worker scheduling
+/// can never reorder it.
+pub struct FaultyEnv<E: EvalEnv> {
+    inner: E,
+    model: FaultModel,
+    cell_seed: u64,
+    rng: Rng,
+    stats: Arc<Mutex<FaultStats>>,
+}
+
+impl<E: EvalEnv> FaultyEnv<E> {
+    pub fn new(
+        inner: E,
+        model: FaultModel,
+        cell_seed: u64,
+        job_seed: u64,
+        stats: Arc<Mutex<FaultStats>>,
+    ) -> Self {
+        FaultyEnv {
+            inner,
+            model,
+            cell_seed,
+            rng: Rng::new(job_seed),
+            stats,
+        }
+    }
+
+    /// The persistent verdict for config `idx`: `None` = healthy.
+    /// Pure function of (cell seed, idx) — no stream state involved,
+    /// so re-measuring a config cannot flip its verdict.
+    fn persistent_verdict(&self, idx: usize) -> Option<MeasureOutcome> {
+        if self.model.persistent_rate <= 0.0 {
+            return None;
+        }
+        let u = hash_unit(stream_seed(
+            self.cell_seed,
+            &["persistent"],
+            idx as u64,
+        ));
+        if u >= self.model.persistent_rate {
+            return None;
+        }
+        let t = hash_unit(stream_seed(self.cell_seed, &["timeout"], idx as u64));
+        Some(if t < self.model.timeout_share {
+            MeasureOutcome::TimedOut
+        } else {
+            MeasureOutcome::Failed {
+                reason: FailReason::Persistent,
+            }
+        })
+    }
+
+    fn note_failure(&self, wasted_s: f64) {
+        let mut s = self.stats.lock().unwrap();
+        s.failed_runs += 1;
+        s.wasted_cost_s += wasted_s;
+    }
+}
+
+/// Map a hashed u64 onto [0, 1) (same mantissa trick as `Rng::f64`).
+fn hash_unit(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+impl<E: EvalEnv> EvalEnv for FaultyEnv<E> {
+    fn space(&self) -> &Space {
+        self.inner.space()
+    }
+
+    fn measure(&mut self, idx: usize, profile: bool) -> Measurement {
+        if !self.model.is_active() {
+            // transparent passthrough: no stats, no randomness, byte-
+            // identical behaviour to the bare environment
+            return self.inner.measure(idx, profile);
+        }
+        if let Some(outcome) = self.persistent_verdict(idx) {
+            // the doomed attempt is still billed (compiling a broken
+            // config costs real time) but yields nothing
+            let before = self.inner.cost_so_far();
+            let _ = self.inner.measure(idx, profile);
+            self.note_failure(self.inner.cost_so_far() - before);
+            return Measurement::failed(outcome);
+        }
+        let attempts = self.model.retry.max_attempts.max(1);
+        for attempt in 1..=attempts {
+            let before = self.inner.cost_so_far();
+            let mut m = self.inner.measure(idx, profile);
+            if self.model.transient_rate > 0.0
+                && self.rng.f64() < self.model.transient_rate
+            {
+                self.note_failure(self.inner.cost_so_far() - before);
+                if attempt < attempts {
+                    self.stats.lock().unwrap().retries += 1;
+                    continue;
+                }
+                return Measurement::failed(MeasureOutcome::Failed {
+                    reason: FailReason::Transient,
+                });
+            }
+            if self.model.noise_sigma > 0.0 {
+                // multiplicative log-normal observation noise; the
+                // inner env already billed the true runtime
+                m.runtime_ms *=
+                    (self.model.noise_sigma * self.rng.normal()).exp();
+            }
+            if profile && m.counters.is_some() {
+                if self.model.profile_fail_rate > 0.0
+                    && self.rng.f64() < self.model.profile_fail_rate
+                {
+                    // whole profiling pass failed: the runtime stands,
+                    // the searcher falls back to a plain step
+                    m.counters = None;
+                } else if self.model.counter_dropout_rate > 0.0 {
+                    let c = m.counters.as_mut().expect("checked above");
+                    for &counter in ALL_COUNTERS.iter() {
+                        if self.rng.f64() < self.model.counter_dropout_rate {
+                            c.set(counter, 0.0);
+                            m.dropped.push(counter);
+                        }
+                    }
+                }
+            }
+            return m;
+        }
+        unreachable!("attempt loop always returns")
+    }
+
+    fn cost_so_far(&self) -> f64 {
+        self.inner.cost_so_far()
+    }
+
+    fn gpu(&self) -> &GpuSpec {
+        self.inner.gpu()
+    }
+
+    fn known_best_ms(&self) -> Option<f64> {
+        self.inner.known_best_ms()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{record_space, Benchmark, Coulomb};
+    use crate::searcher::{CostModel, ReplayEnv};
+
+    fn replay() -> ReplayEnv {
+        let gpu = GpuSpec::gtx750();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        ReplayEnv::new(rec, gpu, CostModel::default())
+    }
+
+    fn faulty(
+        model: FaultModel,
+        cell_seed: u64,
+        job_seed: u64,
+    ) -> (FaultyEnv<ReplayEnv>, Arc<Mutex<FaultStats>>) {
+        let stats = Arc::new(Mutex::new(FaultStats::default()));
+        let env = FaultyEnv::new(
+            replay(),
+            model,
+            cell_seed,
+            job_seed,
+            Arc::clone(&stats),
+        );
+        (env, stats)
+    }
+
+    #[test]
+    fn profile_parses_and_names() {
+        for p in FaultProfile::ALL {
+            assert_eq!(FaultProfile::parse(p.name()), Some(p));
+        }
+        assert_eq!(FaultProfile::parse("HOSTILE"), Some(FaultProfile::Hostile));
+        assert_eq!(FaultProfile::parse("chaos"), None);
+        assert!(!FaultProfile::None.is_active());
+        assert!(FaultProfile::Hostile.is_active());
+        assert_eq!(FaultProfile::default(), FaultProfile::None);
+    }
+
+    #[test]
+    fn none_profile_is_transparent() {
+        let mut bare = replay();
+        let (mut env, stats) =
+            faulty(FaultModel::for_profile(FaultProfile::None), 1, 2);
+        for idx in [0, 3, 7] {
+            for profile in [false, true] {
+                let a = bare.measure(idx, profile);
+                let b = env.measure(idx, profile);
+                assert_eq!(a.runtime_ms, b.runtime_ms);
+                assert_eq!(a.counters.is_some(), b.counters.is_some());
+                assert!(b.is_ok());
+                assert!(b.dropped.is_empty());
+            }
+        }
+        assert_eq!(bare.cost_so_far(), env.cost_so_far());
+        assert_eq!(*stats.lock().unwrap(), FaultStats::default());
+    }
+
+    #[test]
+    fn persistent_verdicts_are_deterministic_and_config_keyed() {
+        let model = FaultModel::for_profile(FaultProfile::Hostile);
+        let (env_a, _) = faulty(model.clone(), 42, 0);
+        // different job seed, same cell seed: identical verdicts —
+        // a broken config is broken for every searcher and lane
+        let (env_b, _) = faulty(model.clone(), 42, 999);
+        let n = env_a.space().len();
+        let verdicts: Vec<bool> = (0..n)
+            .map(|i| env_a.persistent_verdict(i).is_some())
+            .collect();
+        for i in 0..n {
+            assert_eq!(verdicts[i], env_b.persistent_verdict(i).is_some());
+        }
+        // the rate is roughly honoured (12% ± slack on a real space)
+        let failed = verdicts.iter().filter(|&&v| v).count();
+        let frac = failed as f64 / n as f64;
+        assert!(
+            (0.05..0.25).contains(&frac),
+            "persistent fraction {frac} ({failed}/{n})"
+        );
+        // a different cell sees a different failure set
+        let (env_c, _) = faulty(model, 43, 0);
+        let other: Vec<bool> = (0..n)
+            .map(|i| env_c.persistent_verdict(i).is_some())
+            .collect();
+        assert_ne!(verdicts, other);
+        // and some verdicts are timeouts, some hard failures
+        let kinds: Vec<MeasureOutcome> =
+            (0..n).filter_map(|i| env_a.persistent_verdict(i)).collect();
+        assert!(kinds.iter().any(|k| *k == MeasureOutcome::TimedOut));
+        assert!(kinds.iter().any(|k| matches!(
+            k,
+            MeasureOutcome::Failed {
+                reason: FailReason::Persistent
+            }
+        )));
+    }
+
+    #[test]
+    fn persistent_failures_bill_and_count() {
+        let model = FaultModel::for_profile(FaultProfile::Hostile);
+        let (mut env, stats) = faulty(model, 42, 0);
+        let broken = (0..env.space().len())
+            .find(|&i| env.persistent_verdict(i).is_some())
+            .expect("hostile profile fails some config");
+        let m = env.measure(broken, false);
+        assert!(!m.is_ok());
+        assert!(m.runtime_ms.is_infinite());
+        assert!(m.counters.is_none());
+        let s = stats.lock().unwrap().clone();
+        assert_eq!(s.failed_runs, 1);
+        assert!(s.wasted_cost_s > 0.0);
+        assert_eq!(s.wasted_cost_s, env.cost_so_far());
+        // re-measuring cannot flip the verdict
+        drop(s);
+        let m2 = env.measure(broken, true);
+        assert_eq!(m2.outcome, m.outcome);
+    }
+
+    #[test]
+    fn transient_failures_retry_and_bill_every_attempt() {
+        let mut model = FaultModel::for_profile(FaultProfile::Flaky);
+        model.persistent_rate = 0.0;
+        model.transient_rate = 1.0; // every attempt fails
+        model.retry = RetryPolicy { max_attempts: 3 };
+        model.profile_fail_rate = 0.0;
+        let (mut env, stats) = faulty(model, 0, 7);
+        let m = env.measure(0, false);
+        assert_eq!(
+            m.outcome,
+            MeasureOutcome::Failed {
+                reason: FailReason::Transient
+            }
+        );
+        let s = stats.lock().unwrap().clone();
+        assert_eq!(s.retries, 2, "3 attempts = 2 retries");
+        assert_eq!(s.failed_runs, 3, "every attempt counted");
+        // all three attempts billed and all wasted
+        assert!((s.wasted_cost_s - env.cost_so_far()).abs() < 1e-12);
+        let one_run = {
+            let mut bare = replay();
+            bare.measure(0, false);
+            bare.cost_so_far()
+        };
+        assert!((env.cost_so_far() - 3.0 * one_run).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noise_is_multiplicative_and_seed_reproducible() {
+        let model = FaultModel::for_profile(FaultProfile::Noisy);
+        let (mut a, _) = faulty(model.clone(), 5, 17);
+        let (mut b, _) = faulty(model.clone(), 5, 17);
+        let (mut c, _) = faulty(model.clone(), 5, 18);
+        let truth = replay().measure(4, false).runtime_ms;
+        let ra = a.measure(4, false).runtime_ms;
+        assert_eq!(ra, b.measure(4, false).runtime_ms, "same seed, same noise");
+        assert_ne!(ra, c.measure(4, false).runtime_ms, "job streams differ");
+        assert_ne!(ra, truth, "noise applied");
+        assert!(ra > 0.0 && ra.is_finite(), "log-normal stays positive");
+        // billing uses the true runtime, not the noisy observation
+        let mut bare = replay();
+        bare.measure(4, false);
+        assert_eq!(a.cost_so_far(), bare.cost_so_far());
+    }
+
+    #[test]
+    fn counter_dropout_zeroes_and_reports() {
+        let mut model = FaultModel::for_profile(FaultProfile::Noisy);
+        model.noise_sigma = 0.0;
+        model.counter_dropout_rate = 1.0; // drop everything
+        let (mut env, _) = faulty(model, 0, 3);
+        let m = env.measure(2, true);
+        assert!(m.is_ok());
+        assert_eq!(m.dropped.len(), ALL_COUNTERS.len());
+        let c = m.counters.expect("profile still yields a vector");
+        assert!(c.iter().all(|(_, v)| v == 0.0));
+        // plain runs never touch counters or the dropout stream
+        let m2 = env.measure(3, false);
+        assert!(m2.dropped.is_empty());
+        assert!(m2.counters.is_none());
+    }
+
+    #[test]
+    fn whole_profile_failure_keeps_the_runtime() {
+        let mut model = FaultModel::for_profile(FaultProfile::Flaky);
+        model.persistent_rate = 0.0;
+        model.transient_rate = 0.0;
+        model.profile_fail_rate = 1.0;
+        let (mut env, stats) = faulty(model, 0, 9);
+        let truth = replay().measure(5, true).runtime_ms;
+        let m = env.measure(5, true);
+        assert!(m.is_ok(), "the run itself succeeded");
+        assert_eq!(m.runtime_ms, truth);
+        assert!(m.counters.is_none(), "profiling pass failed");
+        // a lost profile is not a failed run
+        assert_eq!(stats.lock().unwrap().failed_runs, 0);
+    }
+
+    #[test]
+    fn same_seed_reruns_reproduce_the_exact_fault_sequence() {
+        let model = FaultModel::for_profile(FaultProfile::Hostile);
+        let run = |job_seed: u64| -> (Vec<(f64, bool, usize)>, FaultStats) {
+            let (mut env, stats) = faulty(model.clone(), 11, job_seed);
+            let seq: Vec<(f64, bool, usize)> = (0..env.space().len().min(40))
+                .map(|i| {
+                    let m = env.measure(i, i % 3 == 0);
+                    (m.runtime_ms, m.is_ok(), m.dropped.len())
+                })
+                .collect();
+            let s = stats.lock().unwrap().clone();
+            (seq, s)
+        };
+        let (seq_a, stats_a) = run(21);
+        let (seq_b, stats_b) = run(21);
+        assert_eq!(seq_a, seq_b);
+        assert_eq!(stats_a, stats_b);
+        let (seq_c, _) = run(22);
+        assert_ne!(seq_a, seq_c, "different lanes see different faults");
+    }
+}

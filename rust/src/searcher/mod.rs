@@ -16,13 +16,17 @@
 mod annealing;
 mod basin_hopping;
 mod env;
+mod faults;
 mod profile;
 mod random;
 mod starchart;
 
 pub use annealing::SimulatedAnnealing;
 pub use basin_hopping::BasinHopping;
-pub use env::{CostModel, EvalEnv, Measurement, ReplayEnv};
+pub use env::{
+    CostModel, EvalEnv, FailReason, MeasureOutcome, Measurement, ReplayEnv,
+};
+pub use faults::{FaultModel, FaultProfile, FaultStats, FaultyEnv, RetryPolicy};
 pub use profile::ProfileSearcher;
 pub use random::RandomSearcher;
 pub use starchart::Starchart;

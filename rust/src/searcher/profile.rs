@@ -135,6 +135,12 @@ impl Searcher for ProfileSearcher<'_> {
         });
 
         let mut explored = vec![false; size];
+        // `selectable` mirrors `!explored` so the sampler's uniform
+        // fallback can draw without rebuilding an eligibility mask per
+        // draw. Failed configs are quarantined the same way: explored +
+        // unselectable + zero sampler weight, so they are never
+        // re-drawn (Algorithm 1 never revisits a plain step either).
+        let mut selectable = vec![true; size];
         let mut trace = SearchTrace::default();
         // reusable per-round buffers: raw Eq. 16 scores / Eq. 17
         // weights, and the cumulative-weight sampler — no per-round
@@ -151,6 +157,7 @@ impl Searcher for ProfileSearcher<'_> {
             // --- profile the current configuration -----------------------
             let m = env.measure(c_profile, true);
             explored[c_profile] = true;
+            selectable[c_profile] = false;
             trace.push(Step {
                 idx: c_profile,
                 runtime_ms: m.runtime_ms,
@@ -158,12 +165,30 @@ impl Searcher for ProfileSearcher<'_> {
                 cost_after_s: env.cost_so_far(),
                 build: false,
             });
+            // A failed or counter-less profiled run gives the expert
+            // system nothing to react on: quarantine the config if it
+            // failed outright, then fall back to profiling a fresh
+            // uniform draw next round instead of ending the search.
+            if !m.is_ok() || m.counters.is_none() {
+                match next_unexplored(&explored, &mut self.rng) {
+                    Some(next) => {
+                        c_profile = next;
+                        continue 'outer;
+                    }
+                    None => break 'outer,
+                }
+            }
             let mut t_best_round = m.runtime_ms;
 
             // --- expert system -------------------------------------------
-            let counters = m.counters.expect("profiled run must yield counters");
+            let counters = m.counters.expect("checked above");
             let bottlenecks = analyze(&counters, env.gpu());
-            let delta = react(&bottlenecks, self.inst_reaction);
+            let mut delta = react(&bottlenecks, self.inst_reaction);
+            // mask counters the profiler failed to collect: the scoring
+            // round must not react on values we never observed
+            for &c in &m.dropped {
+                delta.0.set(c, 0.0);
+            }
 
             // --- score the candidate set (Eqs. 16–17) --------------------
             // candidate set: whole space, or the §3.9.1 neighbourhood
@@ -213,11 +238,17 @@ impl Searcher for ProfileSearcher<'_> {
                 if budget_done(&trace, budget, env) {
                     break 'outer;
                 }
-                let Some(l) = sampler.sample(&mut self.rng) else {
+                // degenerate-sampler edge: when every scored weight is
+                // zero (mass-starved round under quarantine) fall back
+                // to a uniform draw over what's still selectable
+                // instead of ending the search early
+                let Some(l) = sampler.sample_or_uniform(&mut self.rng, &selectable)
+                else {
                     break 'outer; // nothing selectable left
                 };
                 let m = env.measure(l, false);
                 explored[l] = true;
+                selectable[l] = false;
                 sampler.set(l, 0.0);
                 trace.push(Step {
                     idx: l,
@@ -226,9 +257,12 @@ impl Searcher for ProfileSearcher<'_> {
                     cost_after_s: env.cost_so_far(),
                     build: false,
                 });
+                // failed configs are quarantined above (explored +
+                // unselectable + zero weight); their infinite runtime
+                // also keeps them out of the best-of-round fold
                 // Algorithm 1 line 20: the round's fastest kernel becomes
                 // the next configuration to profile.
-                if m.runtime_ms <= t_best_round {
+                if m.is_ok() && m.runtime_ms <= t_best_round {
                     t_best_round = m.runtime_ms;
                     c_profile = l;
                 }
@@ -239,6 +273,22 @@ impl Searcher for ProfileSearcher<'_> {
             // re-profiles the incumbent; we follow the paper).
         }
         trace
+    }
+}
+
+/// Uniform draw over the unexplored configurations (profile-fallback
+/// path when a profiling round yields nothing to react on).
+fn next_unexplored(explored: &[bool], rng: &mut Rng) -> Option<usize> {
+    let pool: Vec<usize> = explored
+        .iter()
+        .enumerate()
+        .filter(|(_, &done)| !done)
+        .map(|(i, _)| i)
+        .collect();
+    if pool.is_empty() {
+        None
+    } else {
+        Some(pool[rng.below(pool.len())])
     }
 }
 
@@ -443,5 +493,64 @@ mod tests {
         // profiled re-visits allowed; plain steps never repeat, so the
         // trace is bounded and the searcher terminates
         assert!(trace.len() <= n * 3);
+    }
+
+    #[test]
+    fn survives_hostile_faults_and_never_reselects_quarantined() {
+        use crate::searcher::{FaultModel, FaultProfile, FaultStats, FaultyEnv};
+        use std::sync::{Arc, Mutex};
+
+        let gpu = GpuSpec::gtx1070();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        let oracle = OracleModel::new(&rec);
+        for seed in [0u64, 5, 11] {
+            let inner =
+                ReplayEnv::new(rec.clone(), gpu.clone(), CostModel::default());
+            let stats = Arc::new(Mutex::new(FaultStats::default()));
+            let mut env = FaultyEnv::new(
+                inner,
+                FaultModel::for_profile(FaultProfile::Hostile),
+                42,
+                seed.wrapping_mul(7919) + 1,
+                Arc::clone(&stats),
+            );
+            let trace = ProfileSearcher::new(&oracle, 0.5, seed)
+                .run(&mut env, &Budget::tests(60));
+            assert!(!trace.is_empty());
+            // a quarantined (failed) config is never drawn again
+            for step in trace.steps.iter().filter(|s| s.runtime_ms.is_infinite())
+            {
+                let times =
+                    trace.steps.iter().filter(|s| s.idx == step.idx).count();
+                assert_eq!(times, 1, "failed config {} re-selected", step.idx);
+            }
+            // hostile rates really did fail something across seeds — and
+            // the search still made progress on the healthy remainder
+            assert!(trace.steps.iter().any(|s| s.runtime_ms.is_finite()));
+        }
+    }
+
+    #[test]
+    fn whole_profile_failure_falls_back_instead_of_panicking() {
+        use crate::searcher::{FaultModel, FaultProfile, FaultStats, FaultyEnv};
+        use std::sync::{Arc, Mutex};
+
+        let gpu = GpuSpec::gtx1070();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        let oracle = OracleModel::new(&rec);
+        // every profiling pass fails: the searcher must degrade to
+        // uniform exploration rather than panic on missing counters
+        let mut model = FaultModel::for_profile(FaultProfile::Flaky);
+        model.persistent_rate = 0.0;
+        model.transient_rate = 0.0;
+        model.profile_fail_rate = 1.0;
+        let inner = ReplayEnv::new(rec, gpu, CostModel::default());
+        let stats = Arc::new(Mutex::new(FaultStats::default()));
+        let mut env = FaultyEnv::new(inner, model, 1, 2, stats);
+        let trace = ProfileSearcher::new(&oracle, 0.5, 4)
+            .run(&mut env, &Budget::tests(30));
+        assert_eq!(trace.len(), 30);
+        assert!(trace.steps.iter().all(|s| s.runtime_ms.is_finite()));
+        assert!(trace.steps.iter().all(|s| s.profiled));
     }
 }

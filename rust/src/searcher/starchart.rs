@@ -105,25 +105,33 @@ impl Searcher for Starchart {
                 || env.cost_so_far() >= budget.max_cost_s
         };
 
-        let tree = if let Some(t) = self.pretrained.clone() {
-            t
+        let tree: Option<RegressionTree> = if let Some(t) =
+            self.pretrained.clone()
+        {
+            Some(t)
         } else {
             // --- validation set ------------------------------------------
             let val_n = self.validation_points.min(size / 2).max(1);
             let val_idx = self.rng.sample_indices(size, val_n);
+            let mut val_x: Vec<Vec<f64>> = Vec::with_capacity(val_n);
             let mut val_y = Vec::with_capacity(val_n);
             for &i in &val_idx {
                 if hard(&trace, env) {
                     return trace;
                 }
-                val_y.push(eval(env, &mut trace, &mut measured, i, true));
+                let y = eval(env, &mut trace, &mut measured, i, true);
+                // failed runs (infinite runtime) carry no target: keep
+                // them out of the error estimate
+                if y.is_finite() {
+                    val_x.push(features(env, i));
+                    val_y.push(y);
+                }
             }
-            let val_x: Vec<Vec<f64>> =
-                val_idx.iter().map(|&i| features(env, i)).collect();
 
             // --- iterative training --------------------------------------
             let mut train_idx: Vec<usize> = Vec::new();
-            let mut tree;
+            let mut tree = None;
+            let cap = self.max_train.min(size.saturating_sub(1)).max(1);
             loop {
                 // grow the training sample
                 let want = (train_idx.len() + self.train_step)
@@ -141,15 +149,31 @@ impl Searcher for Starchart {
                     if hard(&trace, env) {
                         return trace;
                     }
-                    train_y
-                        .push(eval(env, &mut trace, &mut measured, i, true));
-                    train_x.push(features(env, i));
+                    let y = eval(env, &mut trace, &mut measured, i, true);
+                    // same masking as validation: infinite targets would
+                    // poison leaf means into NaN predictions
+                    if y.is_finite() {
+                        train_y.push(y);
+                        train_x.push(features(env, i));
+                    }
                 }
-                tree = RegressionTree::fit(&train_x, &train_y, 10, 2);
+                if train_y.is_empty() {
+                    // every sampled config failed so far: keep growing,
+                    // or give up on modelling entirely at the cap
+                    if train_idx.len() >= cap {
+                        break;
+                    }
+                    continue;
+                }
+                let t = RegressionTree::fit(&train_x, &train_y, 10, 2);
                 let pred: Vec<f64> =
-                    val_x.iter().map(|x| tree.predict(x)).collect();
-                let err = median_relative_error(&pred, &val_y);
-                let cap = self.max_train.min(size.saturating_sub(1)).max(1);
+                    val_x.iter().map(|x| t.predict(x)).collect();
+                let err = if val_y.is_empty() {
+                    f64::INFINITY
+                } else {
+                    median_relative_error(&pred, &val_y)
+                };
+                tree = Some(t);
                 if err < self.target_error || train_idx.len() >= cap {
                     break;
                 }
@@ -158,12 +182,17 @@ impl Searcher for Starchart {
         };
 
         // --- exploitation: walk configs by predicted runtime ------------
+        // (natural index order when no model could be trained at all)
         let mut order: Vec<usize> = (0..size).collect();
-        let pred: Vec<f64> = (0..size)
-            .map(|i| tree.predict(&features(env, i)))
-            .collect();
-        order.sort_by(|&a, &b| pred[a].partial_cmp(&pred[b]).unwrap());
-        self.trained_tree = Some(tree);
+        if let Some(t) = &tree {
+            let pred: Vec<f64> = (0..size)
+                .map(|i| t.predict(&features(env, i)))
+                .collect();
+            // total_cmp: NaN-proof ordering even if a hostile profile
+            // slips a degenerate prediction through
+            order.sort_by(|&a, &b| pred[a].total_cmp(&pred[b]));
+        }
+        self.trained_tree = tree;
         for idx in order {
             if budget_done(&trace, budget, env) {
                 break;

@@ -187,6 +187,35 @@ impl WeightedIndex {
         }
         Some(pos)
     }
+
+    /// [`sample`](Self::sample), with a deterministic uniform fallback
+    /// over the still-`eligible` indices when every weight is zero.
+    ///
+    /// The fault-injection quarantine zeroes failed configurations the
+    /// same way exploration zeroes drawn ones, so a hostile space can
+    /// legitimately zero out *all* weights mid-round (e.g. scoring
+    /// produced only non-finite values, sanitized to 0). The search
+    /// must then degrade to uniform choice among the eligible
+    /// remainder — Algorithm 1's fallback — not end early. Returns
+    /// `None` only when nothing is eligible at all.
+    pub fn sample_or_uniform(
+        &self,
+        rng: &mut Rng,
+        eligible: &[bool],
+    ) -> Option<usize> {
+        debug_assert_eq!(eligible.len(), self.n);
+        if let Some(i) = self.sample(rng) {
+            if eligible.get(i).copied().unwrap_or(false) {
+                return Some(i);
+            }
+        }
+        let pool: Vec<usize> =
+            (0..self.n).filter(|&i| eligible[i]).collect();
+        if pool.is_empty() {
+            return None;
+        }
+        Some(pool[rng.below(pool.len())])
+    }
 }
 
 #[cfg(test)]
@@ -315,6 +344,46 @@ mod tests {
         // and growing again is fine too
         s.rebuild(&[1.0; 9]);
         assert!((s.total() - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_or_uniform_survives_all_zero_weights() {
+        // regression (fault-injection quarantine): quarantining every
+        // scored config zeroes the whole distribution; the fallback
+        // draws uniformly over the eligible remainder instead of
+        // returning None and ending the round
+        let mut rng = Rng::new(13);
+        let mut s = WeightedIndex::from_weights(&[1.0, 2.0, 3.0, 4.0]);
+        for i in 0..4 {
+            s.set(i, 0.0);
+        }
+        assert_eq!(s.sample(&mut rng), None);
+        let eligible = [true, false, true, false];
+        let mut counts = [0usize; 4];
+        for _ in 0..4_000 {
+            let i = s.sample_or_uniform(&mut rng, &eligible).unwrap();
+            assert!(eligible[i], "drew ineligible index {i}");
+            counts[i] += 1;
+        }
+        assert!(counts[0] > 1_500 && counts[2] > 1_500, "{counts:?}");
+        // nothing eligible: the space really is exhausted
+        assert_eq!(s.sample_or_uniform(&mut rng, &[false; 4]), None);
+        // non-degenerate distributions keep the weighted behaviour
+        let s = WeightedIndex::from_weights(&[0.0, 5.0, 0.0, 0.0]);
+        for _ in 0..200 {
+            assert_eq!(
+                s.sample_or_uniform(&mut rng, &[true; 4]),
+                Some(1)
+            );
+        }
+        // a weighted draw landing on an ineligible index (stale
+        // sampler) re-draws uniformly from the eligible set
+        for _ in 0..200 {
+            let i = s
+                .sample_or_uniform(&mut rng, &[true, false, true, true])
+                .unwrap();
+            assert!(i != 1, "drew quarantined index 1");
+        }
     }
 
     #[test]

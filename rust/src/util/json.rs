@@ -131,7 +131,12 @@ fn newline(out: &mut String, indent: usize, level: usize) {
 }
 
 fn write_num(out: &mut String, n: f64) {
-    if n.fract() == 0.0 && n.abs() < 9e15 {
+    if !n.is_finite() {
+        // JSON has no inf/NaN spelling; fault-injected runs carry
+        // infinite runtimes, which must degrade to null rather than
+        // emit unparseable bytes
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 9e15 {
         let _ = write!(out, "{}", n as i64);
     } else {
         let _ = write!(out, "{n}");
@@ -390,6 +395,17 @@ mod tests {
         for src in ["null", "true", "false", "42", "-1.5", "\"hi\""] {
             let v = parse(src).unwrap();
             assert_eq!(parse(&v.to_string_pretty(0)).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn non_finite_numbers_render_as_null() {
+        // fault-injected runs carry infinite runtimes; the writer must
+        // never emit `inf`/`NaN` (unparseable JSON)
+        for bad in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let text = Value::from(bad).to_string_pretty(0);
+            assert_eq!(text, "null");
+            assert_eq!(parse(&text).unwrap(), Value::Null);
         }
     }
 

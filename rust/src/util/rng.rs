@@ -120,6 +120,46 @@ impl Rng {
         last // numeric slop: fall back to the final selectable weight
     }
 
+    /// Standard normal deviate (Box–Muller; one value per call, the
+    /// second is discarded to keep the stream position predictable —
+    /// the fault-injection noise path consumes exactly two uniforms
+    /// per sample regardless of caller history).
+    pub fn normal(&mut self) -> f64 {
+        // u in (0, 1]: ln(0) would be -inf
+        let u = 1.0 - self.f64();
+        let v = self.f64();
+        (-2.0 * u.ln()).sqrt() * (std::f64::consts::TAU * v).cos()
+    }
+
+    /// [`choose_weighted`](Rng::choose_weighted), with a deterministic
+    /// uniform fallback over the still-`eligible` indices when no
+    /// weight is selectable. Quarantined/explored configurations zero
+    /// their weights; once *all* remaining weights are zeroed (e.g.
+    /// every unexplored config is quarantined, or scoring produced only
+    /// non-finite values) the search must degrade to uniform choice
+    /// among the eligible remainder — the paper's Algorithm 1 fallback
+    /// — instead of ending early. Returns `None` only when nothing is
+    /// eligible at all.
+    pub fn choose_weighted_or_uniform(
+        &mut self,
+        weights: &[f64],
+        eligible: &[bool],
+    ) -> Option<usize> {
+        debug_assert_eq!(weights.len(), eligible.len());
+        if let Some(i) = self.choose_weighted(weights) {
+            if eligible.get(i).copied().unwrap_or(false) {
+                return Some(i);
+            }
+        }
+        let pool: Vec<usize> = (0..eligible.len())
+            .filter(|&i| eligible[i])
+            .collect();
+        if pool.is_empty() {
+            return None;
+        }
+        Some(pool[self.below(pool.len())])
+    }
+
     /// Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, items: &mut [T]) {
         for i in (1..items.len()).rev() {
@@ -239,6 +279,60 @@ mod tests {
         }
         let frac = ones as f64 / 40_000.0;
         assert!((0.72..0.78).contains(&frac), "frac={frac}");
+    }
+
+    #[test]
+    fn normal_has_zero_mean_unit_variance() {
+        let mut r = Rng::new(23);
+        let n = 50_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            assert!(z.is_finite());
+            sum += z;
+            sq += z * z;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((0.95..1.05).contains(&var), "var={var}");
+    }
+
+    #[test]
+    fn weighted_or_uniform_falls_back_over_eligible() {
+        // regression (fault-injection quarantine): all weights zeroed
+        // must degrade to a uniform draw over the eligible remainder,
+        // not end the search
+        let mut r = Rng::new(31);
+        let w = [0.0, 0.0, 0.0, 0.0];
+        let eligible = [false, true, false, true];
+        let mut counts = [0usize; 4];
+        for _ in 0..4_000 {
+            let i = r.choose_weighted_or_uniform(&w, &eligible).unwrap();
+            assert!(eligible[i], "drew ineligible index {i}");
+            counts[i] += 1;
+        }
+        assert!(counts[1] > 1_500 && counts[3] > 1_500, "{counts:?}");
+        // nothing eligible at all: None, same as an exhausted space
+        assert_eq!(
+            r.choose_weighted_or_uniform(&w, &[false; 4]),
+            None
+        );
+        // a selectable weight pointing at an ineligible index (stale
+        // sampler state) is re-drawn uniformly from the eligible set
+        let stale = [5.0, 0.0, 0.0, 0.0];
+        for _ in 0..200 {
+            let i = r
+                .choose_weighted_or_uniform(&stale, &[false, true, true, false])
+                .unwrap();
+            assert!(i == 1 || i == 2);
+        }
+        // the normal path is untouched: selectable + eligible wins
+        let healthy = [0.0, 2.0, 0.0, 0.0];
+        assert_eq!(
+            r.choose_weighted_or_uniform(&healthy, &[true; 4]),
+            Some(1)
+        );
     }
 
     #[test]

@@ -1,0 +1,90 @@
+//! Fault-injection lane: the hostile smoke matrix must converge on the
+//! same contracts as the clean one —
+//!
+//! * byte-identical reports at any `--jobs` count;
+//! * byte-identical to the checked-in `testdata/faults_golden.json`
+//!   (bootstrapping protocol shared with the other smoke lanes);
+//! * every searcher completes under the hostile profile without
+//!   panicking;
+//! * a fault-free plan reproduces the pre-faults smoke report exactly
+//!   (the subsystem is invisible when off).
+
+mod common;
+
+use common::golden_gate;
+
+use pcat::harness::{run_plan, ExperimentPlan};
+use pcat::searcher::FaultProfile;
+
+fn hostile_smoke(seed: u64) -> ExperimentPlan {
+    ExperimentPlan {
+        fault_profile: FaultProfile::Hostile,
+        ..ExperimentPlan::smoke(seed)
+    }
+}
+
+#[test]
+fn hostile_smoke_reports_identical_for_jobs_1_and_jobs_8() {
+    let plan = hostile_smoke(11);
+    let serial = run_plan(&plan, 1).unwrap().to_pretty_string();
+    let parallel = run_plan(&plan, 8).unwrap().to_pretty_string();
+    assert_eq!(
+        serial, parallel,
+        "fault streams must be keyed off plan coordinates, not scheduling"
+    );
+    let repeat = run_plan(&plan, 8).unwrap().to_pretty_string();
+    assert_eq!(parallel, repeat, "fault injection must be rerun-stable");
+}
+
+#[test]
+fn every_searcher_survives_the_hostile_profile() {
+    let mut plan = hostile_smoke(3);
+    plan.searchers = vec![
+        "random".into(),
+        "profile".into(),
+        "basin_hopping".into(),
+        "starchart".into(),
+        "annealing".into(),
+    ];
+    plan.max_tests = 60;
+    let report = run_plan(&plan, 4).unwrap();
+    assert_eq!(report.results.len(), plan.jobs().len());
+    for r in &report.results {
+        let faults = r.faults.as_ref().expect("hostile plan records faults");
+        assert!(r.tests >= 1, "{}: no tests ran", r.spec.searcher);
+        assert!(
+            faults.wasted_cost_s >= 0.0 && faults.wasted_cost_s.is_finite()
+        );
+    }
+    for a in report.aggregate_rows() {
+        assert!(
+            (0.0..=1.0).contains(&a.failure_rate),
+            "{}/{}: failure_rate {}",
+            a.benchmark,
+            a.searcher,
+            a.failure_rate
+        );
+    }
+}
+
+#[test]
+fn fault_free_plans_are_unchanged_by_the_subsystem() {
+    // FaultProfile::None is the default everywhere; its report must be
+    // byte-identical to the pre-faults smoke report (same golden, no
+    // new keys) — proven here by the absence of every fault field
+    let report = run_plan(&ExperimentPlan::smoke(0), 4).unwrap();
+    let text = report.to_pretty_string();
+    assert!(!text.contains("fault_profile"));
+    assert!(!text.contains("failed_runs"));
+    assert!(!text.contains("failure_rate"));
+}
+
+/// Golden-file gate for the hostile CI smoke lane, sharing the one
+/// bless/bootstrap protocol ([`common::golden_gate`]) with the other
+/// four lanes. CI runs `pcat matrix --smoke --fault-profile hostile
+/// --seed 0` and compares against this file.
+#[test]
+fn hostile_smoke_report_matches_checked_in_golden() {
+    let got = run_plan(&hostile_smoke(0), 4).unwrap().to_pretty_string();
+    golden_gate("faults_golden.json", &got);
+}

@@ -88,7 +88,7 @@ fn smoke_plan_covers_the_advertised_matrix() {
 }
 
 /// Golden-file gate for the CI smoke mode, sharing the one
-/// bootstrap/CI-warn/compare protocol of all four goldens
+/// bootstrap/CI-warn/compare protocol of all five goldens
 /// ([`common::golden_gate`]). Once `testdata/smoke_golden.json` is
 /// committed, any drift in the smoke report fails here and in the CI
 /// workflow's diff step.

@@ -103,7 +103,7 @@ fn sweep_covers_the_grid_with_statistics_and_curves() {
 }
 
 /// Golden gate, sharing the one bootstrap/CI-warn/compare protocol of
-/// all four goldens ([`common::golden_gate`]).
+/// all five goldens ([`common::golden_gate`]).
 #[test]
 fn sweep_smoke_report_matches_checked_in_golden() {
     let got = run_sweep_plan(&smoke(), 4).unwrap().to_pretty_string();

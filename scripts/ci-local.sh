@@ -12,16 +12,16 @@
 #   scripts/ci-local.sh test      # cargo test -q
 #   scripts/ci-local.sh bench      # cargo bench --no-run (compile only)
 #   scripts/ci-local.sh smoke      # deterministic smoke matrices (plain +
-#                                  # transfer oracle + transfer tree + sweep)
-#                                  # + golden diffs
+#                                  # transfer oracle + transfer tree + sweep
+#                                  # + hostile fault profile) + golden diffs
 #   scripts/ci-local.sh registry   # experiment-registry trend gate: append
-#                                  # the four smoke reports to a scratch
+#                                  # the five smoke reports to a scratch
 #                                  # registry, check the append→query
 #                                  # round-trip, compare KPIs against
 #                                  # rust/testdata/registry_baseline.csv
 #                                  # (warn-only until that baseline is
 #                                  # blessed)
-#   scripts/ci-local.sh bless      # regenerate all four goldens:
+#   scripts/ci-local.sh bless      # regenerate all five goldens:
 #                                  #   rust/testdata/smoke_golden.json
 #                                  #     (pcat matrix --smoke)
 #                                  #   rust/testdata/transfer_golden.json
@@ -35,6 +35,10 @@
 #                                  #   rust/testdata/sweep_golden.json
 #                                  #     (pcat sweep --smoke: the
 #                                  #      sample-efficiency sensitivity sweep)
+#                                  #   rust/testdata/faults_golden.json
+#                                  #     (pcat matrix --smoke --fault-profile
+#                                  #      hostile: deterministic fault
+#                                  #      injection + failure accounting)
 #                                  # and derives the registry KPI baseline
 #                                  #   rust/testdata/registry_baseline.csv
 #                                  # from the just-blessed reports
@@ -50,6 +54,7 @@ GOLDEN=rust/testdata/smoke_golden.json
 TRANSFER_GOLDEN=rust/testdata/transfer_golden.json
 TRANSFER_TREE_GOLDEN=rust/testdata/transfer_tree_golden.json
 SWEEP_GOLDEN=rust/testdata/sweep_golden.json
+FAULTS_GOLDEN=rust/testdata/faults_golden.json
 REGISTRY_BASELINE=rust/testdata/registry_baseline.csv
 SMOKE_OUT=rust/target/smoke
 REGISTRY_SCRATCH=rust/target/registry/pcat.csv
@@ -61,12 +66,15 @@ run_test() { (cd rust && cargo test -q); }
 run_bench() { (cd rust && cargo bench --no-run); }
 
 smoke_report() {
-    # $1 = lane (matrix|transfer|transfer-tree|sweep), $2 = jobs,
+    # $1 = lane (matrix|transfer|transfer-tree|sweep|faults), $2 = jobs,
     # $3 = output
     case "$1" in
         matrix)
             rust/target/release/pcat matrix --smoke --seed 0 \
                 --jobs "$2" --out "$3" ;;
+        faults)
+            rust/target/release/pcat matrix --smoke --seed 0 \
+                --fault-profile hostile --jobs "$2" --out "$3" ;;
         transfer)
             rust/target/release/pcat transfer --smoke --seed 0 \
                 --jobs "$2" --out "$3" ;;
@@ -116,15 +124,19 @@ run_smoke() {
     smoke_gate transfer "$TRANSFER_GOLDEN"
     smoke_gate transfer-tree "$TRANSFER_TREE_GOLDEN"
     smoke_gate sweep "$SWEEP_GOLDEN"
+    smoke_gate faults "$FAULTS_GOLDEN"
 }
 
-# Append the four smoke reports (jobs 8) to a fresh scratch registry.
+# Append the five smoke reports (jobs 8) to a fresh scratch registry.
+# The faults lane lands under its own plan name (matrix-hostile), so
+# its failure/retry KPIs get a trend series without shadowing the
+# fault-free matrix lane.
 # $1 = scratch CSV path.
 build_scratch_registry() {
     rm -f "$1"
     mkdir -p "$SMOKE_OUT"
     local lane
-    for lane in matrix transfer transfer-tree sweep; do
+    for lane in matrix transfer transfer-tree sweep faults; do
         smoke_report "$lane" 8 "$SMOKE_OUT/registry-$lane.json"
         rust/target/release/pcat registry append \
             "$SMOKE_OUT/registry-$lane.json" --registry "$1"
@@ -165,15 +177,16 @@ run_bless() {
     smoke_report transfer 8 "$TRANSFER_GOLDEN"
     smoke_report transfer-tree 8 "$TRANSFER_TREE_GOLDEN"
     smoke_report sweep 8 "$SWEEP_GOLDEN"
-    echo "blessed $GOLDEN, $TRANSFER_GOLDEN, $TRANSFER_TREE_GOLDEN" \
-         "and $SWEEP_GOLDEN"
+    smoke_report faults 8 "$FAULTS_GOLDEN"
+    echo "blessed $GOLDEN, $TRANSFER_GOLDEN, $TRANSFER_TREE_GOLDEN," \
+         "$SWEEP_GOLDEN and $FAULTS_GOLDEN"
     # registry KPI baseline, derived from the just-blessed reports so
     # the two artifacts can never disagree
     local bless_csv=rust/target/registry/bless.csv
     rm -f "$bless_csv"
     local report
     for report in "$GOLDEN" "$TRANSFER_GOLDEN" "$TRANSFER_TREE_GOLDEN" \
-                  "$SWEEP_GOLDEN"; do
+                  "$SWEEP_GOLDEN" "$FAULTS_GOLDEN"; do
         rust/target/release/pcat registry append "$report" \
             --registry "$bless_csv"
     done
