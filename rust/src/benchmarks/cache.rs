@@ -1,21 +1,32 @@
-//! Process-wide cache of exhaustively recorded tuning spaces.
+//! Process-wide cache of exhaustively recorded tuning spaces and their
+//! derived prediction matrices.
 //!
 //! Recording a space is by far the most expensive primitive in the
 //! harness (|space| simulator evaluations), and the paper's evaluation
 //! replays the *same* `(benchmark, GPU, input)` spaces across dozens of
-//! tables, figures and repetition loops. The cache guarantees each such
-//! space is enumerated and simulated **exactly once per process**, no
-//! matter how many threads ask for it concurrently: the map lock is
-//! held only to hand out a per-key [`OnceLock`] slot, so distinct
-//! spaces record in parallel while racing requests for the same space
-//! block on one recording.
+//! tables, figures, repetition loops and — since the serve layer —
+//! concurrent cache-miss searches. The cache guarantees each such space
+//! is enumerated and simulated **exactly once per process**, no matter
+//! how many threads ask for it concurrently; the dense
+//! [`PredictionMatrix`] derived from each recording is shared the same
+//! way, so every profile search over a given endpoint scores the same
+//! `Arc`.
+//!
+//! Both caches are [`OnceMap`]s: the map lock is held only to hand out
+//! a per-key slot, so distinct spaces record in parallel while racing
+//! requests for the same space block on one recording. A panicking
+//! recording leaves its slot empty and the maps unpoisoned
+//! (`util::sync` recovers the guard), so one crashed worker can never
+//! brick every later request — a prerequisite for a long-lived serve
+//! process.
 
-use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::{record_space, Benchmark, Input};
 use crate::gpusim::GpuSpec;
+use crate::model::PredictionMatrix;
 use crate::tuning::RecordedSpace;
+use crate::util::sync::{lock_unpoisoned, OnceMap};
 
 /// Cache key: benchmark name, the GPU's full spec (all fields are
 /// public, so a caller may hand in a registry-named spec with tweaked
@@ -24,12 +35,14 @@ use crate::tuning::RecordedSpace;
 /// a display name but differ in size).
 type SpaceKey = (String, String, String);
 
-type Slot = Arc<OnceLock<Arc<RecordedSpace>>>;
-
-static CACHE: OnceLock<Mutex<HashMap<SpaceKey, Slot>>> = OnceLock::new();
+static CACHE: OnceMap<SpaceKey, Arc<RecordedSpace>> = OnceMap::new();
+static MATRICES: OnceMap<SpaceKey, Arc<PredictionMatrix>> = OnceMap::new();
 /// How many times each key was actually recorded (test instrumentation
-/// for the exactly-once guarantee).
-static RECORDINGS: OnceLock<Mutex<HashMap<SpaceKey, usize>>> = OnceLock::new();
+/// for the exactly-once guarantee). Counts successful recordings only:
+/// a panicking recording leaves both the slot and the counter
+/// untouched, so retries keep the count honest.
+static RECORDINGS: OnceLock<Mutex<std::collections::HashMap<SpaceKey, usize>>> =
+    OnceLock::new();
 
 fn key_of(bench: &dyn Benchmark, gpu: &GpuSpec, input: &Input) -> SpaceKey {
     (
@@ -48,32 +61,36 @@ pub fn cached_space(
     input: &Input,
 ) -> Arc<RecordedSpace> {
     let key = key_of(bench, gpu, input);
-    let slot: Slot = {
-        let mut map = CACHE
-            .get_or_init(Default::default)
-            .lock()
-            .expect("space cache poisoned");
-        map.entry(key.clone()).or_default().clone()
-    };
-    slot.get_or_init(|| {
-        *RECORDINGS
-            .get_or_init(Default::default)
-            .lock()
-            .expect("recording counter poisoned")
+    CACHE.get_or_init(&key, || {
+        let rec = Arc::new(record_space(bench, gpu, input));
+        *lock_unpoisoned(RECORDINGS.get_or_init(Default::default))
             .entry(key.clone())
             .or_insert(0) += 1;
-        Arc::new(record_space(bench, gpu, input))
+        rec
     })
-    .clone()
+}
+
+/// Fetch the shared [`PredictionMatrix`] for `(bench, gpu, input)`,
+/// deriving it from the cached recording on first use. Concurrent
+/// callers all receive the same `Arc`, so every profile search over an
+/// endpoint scores one dense matrix instead of rebuilding it per job.
+pub fn cached_matrix(
+    bench: &dyn Benchmark,
+    gpu: &GpuSpec,
+    input: &Input,
+) -> Arc<PredictionMatrix> {
+    let key = key_of(bench, gpu, input);
+    MATRICES.get_or_init(&key, || {
+        Arc::new(PredictionMatrix::from_recorded(&cached_space(
+            bench, gpu, input,
+        )))
+    })
 }
 
 /// Number of times this `(bench, gpu, input)` space has been recorded
 /// in this process — `1` after any number of [`cached_space`] calls.
 pub fn recorded_count(bench: &dyn Benchmark, gpu: &GpuSpec, input: &Input) -> usize {
-    RECORDINGS
-        .get_or_init(Default::default)
-        .lock()
-        .expect("recording counter poisoned")
+    lock_unpoisoned(RECORDINGS.get_or_init(Default::default))
         .get(&key_of(bench, gpu, input))
         .copied()
         .unwrap_or(0)
@@ -81,17 +98,15 @@ pub fn recorded_count(bench: &dyn Benchmark, gpu: &GpuSpec, input: &Input) -> us
 
 /// Number of distinct spaces currently cached.
 pub fn cached_spaces() -> usize {
-    CACHE
-        .get_or_init(Default::default)
-        .lock()
-        .expect("space cache poisoned")
-        .len()
+    CACHE.len()
 }
 
 #[cfg(test)]
 mod tests {
     use super::super::Coulomb;
     use super::*;
+    use crate::tuning::{Config, Space, Workload};
+    use std::sync::atomic::{AtomicBool, Ordering};
 
     #[test]
     fn same_key_returns_same_arc_and_records_once() {
@@ -135,5 +150,64 @@ mod tests {
         assert_eq!(cached.space.len(), direct.space.len());
         assert_eq!(cached.best_time(), direct.best_time());
         assert_eq!(cached.gpu, direct.gpu);
+    }
+
+    #[test]
+    fn matrix_is_shared_and_matches_direct_derivation() {
+        let gpu = GpuSpec::gtx750();
+        let input = Input::new("cache-matrix", &[32, 64]);
+        let a = cached_matrix(&Coulomb, &gpu, &input);
+        let b = cached_matrix(&Coulomb, &gpu, &input);
+        assert!(Arc::ptr_eq(&a, &b));
+        // deriving the matrix must not re-record the space
+        assert_eq!(recorded_count(&Coulomb, &gpu, &input), 1);
+        let direct =
+            PredictionMatrix::from_recorded(&cached_space(&Coulomb, &gpu, &input));
+        assert_eq!(a.n_configs(), direct.n_configs());
+    }
+
+    /// A benchmark whose first recording panics (space enumeration
+    /// blows up), then behaves like [`Coulomb`] — the injected failure
+    /// for the poison-cascade regression test below.
+    struct PanicsOnce;
+
+    static ARMED: AtomicBool = AtomicBool::new(true);
+
+    impl Benchmark for PanicsOnce {
+        fn name(&self) -> &'static str {
+            "cache-panics-once"
+        }
+        fn space(&self) -> Space {
+            if ARMED.swap(false, Ordering::SeqCst) {
+                panic!("injected recording failure");
+            }
+            Coulomb.space()
+        }
+        fn default_input(&self) -> Input {
+            Coulomb.default_input()
+        }
+        fn workload(&self, space: &Space, cfg: &Config, input: &Input) -> Workload {
+            Coulomb.workload(space, cfg, input)
+        }
+    }
+
+    #[test]
+    fn panicking_recording_does_not_brick_the_cache() {
+        let gpu = GpuSpec::gtx750();
+        let input = Input::new("cache-panic", &[32, 64]);
+        let attempt =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                cached_space(&PanicsOnce, &gpu, &input)
+            }));
+        assert!(attempt.is_err(), "first recording must panic");
+        // The failed recording counted nothing and poisoned nothing:
+        // the same key retries cleanly...
+        assert_eq!(recorded_count(&PanicsOnce, &gpu, &input), 0);
+        let rec = cached_space(&PanicsOnce, &gpu, &input);
+        assert!(!rec.space.is_empty());
+        assert_eq!(recorded_count(&PanicsOnce, &gpu, &input), 1);
+        // ...and unrelated keys were never at risk.
+        let other = cached_space(&Coulomb, &gpu, &input);
+        assert!(!other.space.is_empty());
     }
 }

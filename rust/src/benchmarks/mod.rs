@@ -26,7 +26,7 @@ mod gemm;
 mod nbody;
 mod transpose;
 
-pub use cache::{cached_space, cached_spaces, recorded_count};
+pub use cache::{cached_matrix, cached_space, cached_spaces, recorded_count};
 pub use convolution::Convolution;
 pub use coulomb::Coulomb;
 pub use gemm::{Gemm, GemmFull};

@@ -87,7 +87,7 @@ pub fn aggregate_step_curves<R: AsRef<[f64]>>(
         if at_s.is_empty() {
             continue;
         }
-        at_s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        at_s.sort_by(f64::total_cmp);
         out.push(StepCurvePoint {
             step: s + 1,
             median_ms: median(&at_s),
@@ -129,8 +129,9 @@ pub fn aggregate_staircases<S: AsRef<[(f64, f64)]>>(
             continue;
         }
         // sorted reduction: permuting the input runs must not change
-        // the floating-point sum order
-        at_t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // the floating-point sum order (total_cmp: fault-injected runs
+        // can legitimately carry non-finite bests)
+        at_t.sort_by(f64::total_cmp);
         out.push(ConvergencePoint {
             t_s: t,
             mean_ms: mean(&at_t),

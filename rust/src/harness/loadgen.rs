@@ -1,0 +1,569 @@
+//! Deterministic load generator for the serving layer: replay a seeded
+//! request mix against a [`ServeEngine`](super::serve::ServeEngine) and
+//! report throughput, hit rate and latency percentiles as a
+//! registry-stamped `SERVE_REPORT.json`.
+//!
+//! Everything the report contains is a pure function of the
+//! [`LoadPlan`]:
+//!
+//! * The endpoint universe is the plan's `benchmarks × gpus × inputs`
+//!   cross product in plan order.
+//! * Which endpoints start **warm** is a seeded permutation of that
+//!   universe (`miss_ratio` controls how many stay cold), pre-filled
+//!   through the engine before the clock starts — the kubecl-style
+//!   "ship a cache file with the deployment" scenario.
+//! * The request mix is Zipf-distributed over the universe (exponent
+//!   `zipf_s`; `0` = uniform), drawn from its own RNG stream.
+//! * Hit/miss accounting is **logical**: a request misses iff it is the
+//!   first occurrence of a cold endpoint in the mix. This matches what
+//!   a serial replay of the same mix observes, so the counts — and the
+//!   report bytes — are identical for `--jobs 1` and `--jobs 8`, even
+//!   though under concurrency a racing request may physically wait on
+//!   another thread's in-flight search.
+//! * Latencies are **simulated**, not wall-clock: a hit costs
+//!   [`HIT_LATENCY_S`], a (logical) miss additionally pays the filled
+//!   entry's deterministic search cost `cost_s`. Wall-clock latency
+//!   would differ across thread counts and machines; simulated latency
+//!   keeps the percentiles golden-gateable while still being driven by
+//!   real per-endpoint search costs.
+//!
+//! The exactly-once invariant is externally checked: the engine's fill
+//! counter must equal the number of logical misses — if concurrent
+//! requests ever double-searched an endpoint, `run_load_plan` reports
+//! it as a hard error rather than a skewed percentile.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+use crate::util::json::{obj, Value};
+use crate::util::rng::{stream_seed, Rng};
+use crate::util::{pool, stats};
+
+use super::plan::{
+    resolve_input_axis, validate_benchmarks, validate_gpus, validate_inputs,
+    validate_knob, validate_ratio, PlanError,
+};
+use super::registry::{plan_hash, Provenance, SERVE_REPORT_SCHEMA};
+use super::serve::{
+    ServeConfig, ServeEngine, ServeKey, TuningStore,
+};
+
+/// Simulated service overhead of answering from the store, seconds.
+/// Every request pays it; a logical miss additionally pays the search
+/// cost of the entry that fills the endpoint.
+pub const HIT_LATENCY_S: f64 = 5e-5;
+
+/// A seeded serving workload: endpoint axes, request count and mix
+/// shape. The report is a pure function of this struct.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadPlan {
+    pub benchmarks: Vec<String>,
+    pub gpus: Vec<String>,
+    /// Input selectors, resolved per benchmark like every other plan.
+    pub inputs: Vec<String>,
+    /// Requests to draw from the mix.
+    pub requests: usize,
+    /// Zipf popularity exponent over the endpoint universe
+    /// (`0` = uniform, larger = more skew toward early endpoints).
+    pub zipf_s: f64,
+    /// Fraction of the endpoint universe left cold at start; the rest
+    /// is pre-warmed through the engine before the run.
+    pub miss_ratio: f64,
+    pub base_seed: u64,
+    /// Budget cap per miss search.
+    pub max_tests: usize,
+}
+
+impl LoadPlan {
+    /// The nightly serving matrix: every recordable benchmark × all
+    /// four GPUs, a skewed mix with a mostly-warm store.
+    pub fn full(base_seed: u64) -> Self {
+        LoadPlan {
+            benchmarks: ["coulomb", "transpose", "gemm", "nbody", "convolution"]
+                .map(String::from)
+                .to_vec(),
+            gpus: ["gtx680", "gtx750", "gtx1070", "rtx2080"]
+                .map(String::from)
+                .to_vec(),
+            inputs: vec!["default".into()],
+            requests: 100_000,
+            zipf_s: 1.1,
+            miss_ratio: 0.25,
+            base_seed,
+            max_tests: 400,
+        }
+    }
+
+    /// The CI smoke workload: 4 endpoints, half cold, a mix small
+    /// enough to gate a PR but large enough that every endpoint is hit
+    /// from multiple workers.
+    pub fn smoke(base_seed: u64) -> Self {
+        LoadPlan {
+            benchmarks: vec!["coulomb".into(), "transpose".into()],
+            gpus: vec!["gtx1070".into(), "gtx750".into()],
+            inputs: vec!["default".into()],
+            requests: 400,
+            zipf_s: 1.0,
+            miss_ratio: 0.5,
+            base_seed,
+            max_tests: 80,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), PlanError> {
+        validate_benchmarks("benchmarks", &self.benchmarks)?;
+        validate_gpus("gpus", &self.gpus)?;
+        validate_inputs("inputs", &self.benchmarks, &self.inputs)?;
+        validate_ratio("miss_ratio", self.miss_ratio)?;
+        validate_knob("zipf_s", self.zipf_s)?;
+        if self.requests == 0 {
+            return Err(PlanError::EmptyAxis("requests"));
+        }
+        Ok(())
+    }
+
+    /// The endpoint universe in plan order: benchmarks × gpus ×
+    /// resolved inputs. Canonical keys — the plan must already be
+    /// validated.
+    fn endpoints(&self) -> Vec<ServeKey> {
+        let mut keys = Vec::new();
+        for b in &self.benchmarks {
+            for g in &self.gpus {
+                for (input, _) in resolve_input_axis(b, &self.inputs) {
+                    keys.push(
+                        ServeKey::resolve(b, g, &input)
+                            .expect("plan validated"),
+                    );
+                }
+            }
+        }
+        keys
+    }
+
+    pub fn to_json(&self) -> Value {
+        let strs = |xs: &[String]| {
+            Value::Arr(xs.iter().map(|s| Value::from(s.clone())).collect())
+        };
+        obj(vec![
+            // u64 seeds ride as strings (f64 would corrupt > 2^53)
+            ("base_seed", Value::from(self.base_seed.to_string())),
+            ("benchmarks", strs(&self.benchmarks)),
+            ("gpus", strs(&self.gpus)),
+            ("inputs", strs(&self.inputs)),
+            ("max_tests", Value::from(self.max_tests)),
+            ("miss_ratio", Value::from(self.miss_ratio)),
+            ("requests", Value::from(self.requests)),
+            ("zipf_s", Value::from(self.zipf_s)),
+        ])
+    }
+}
+
+/// Logical per-endpoint accounting plus the stored answer (if the
+/// endpoint was ever filled or pre-warmed).
+#[derive(Debug, Clone)]
+pub struct EndpointReport {
+    pub key: ServeKey,
+    pub requests: usize,
+    pub hits: usize,
+    pub misses: usize,
+    /// `None` when the mix never touched the endpoint and it was not
+    /// pre-warmed, so the store holds no answer for it.
+    pub best_ms: Option<f64>,
+    pub config: Option<Vec<i64>>,
+}
+
+/// Aggregate results of one load run.
+#[derive(Debug, Clone)]
+pub struct LoadResults {
+    pub requests: usize,
+    pub hits: usize,
+    pub misses: usize,
+    /// Searches the engine ran during the timed run — the exactly-once
+    /// invariant makes this equal `misses`.
+    pub fills: usize,
+    /// Endpoints pre-filled before the clock started.
+    pub prewarmed: usize,
+    pub hit_rate: f64,
+    pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p95_latency_s: f64,
+    pub p99_latency_s: f64,
+    /// Sum of simulated request latencies, seconds.
+    pub total_cost_s: f64,
+    pub throughput_rps: f64,
+}
+
+/// A completed load run: the plan echo, per-endpoint accounting and
+/// aggregate serving KPIs, stamped with plan hash + provenance.
+pub struct ServeReport {
+    pub plan: LoadPlan,
+    pub endpoints: Vec<EndpointReport>,
+    pub results: LoadResults,
+}
+
+impl ServeReport {
+    pub fn to_json(&self) -> Value {
+        let plan = self.plan.to_json();
+        let hash = plan_hash(SERVE_REPORT_SCHEMA, &plan);
+        let endpoints = self
+            .endpoints
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("benchmark", Value::from(e.key.benchmark.clone())),
+                    ("gpu", Value::from(e.key.gpu.clone())),
+                    ("input", Value::from(e.key.input.clone())),
+                    ("requests", Value::from(e.requests)),
+                    ("hits", Value::from(e.hits)),
+                    ("misses", Value::from(e.misses)),
+                    (
+                        "best_ms",
+                        e.best_ms.map(Value::from).unwrap_or(Value::Null),
+                    ),
+                    (
+                        "config",
+                        e.config
+                            .as_ref()
+                            .map(|c| {
+                                Value::Arr(
+                                    c.iter()
+                                        .map(|&v| Value::from(v))
+                                        .collect(),
+                                )
+                            })
+                            .unwrap_or(Value::Null),
+                    ),
+                ])
+            })
+            .collect();
+        let r = &self.results;
+        let results = obj(vec![
+            ("fills", Value::from(r.fills)),
+            ("hit_rate", Value::from(r.hit_rate)),
+            ("hits", Value::from(r.hits)),
+            ("mean_latency_s", Value::from(r.mean_latency_s)),
+            ("misses", Value::from(r.misses)),
+            ("p50_latency_s", Value::from(r.p50_latency_s)),
+            ("p95_latency_s", Value::from(r.p95_latency_s)),
+            ("p99_latency_s", Value::from(r.p99_latency_s)),
+            ("prewarmed", Value::from(r.prewarmed)),
+            ("requests", Value::from(r.requests)),
+            ("throughput_rps", Value::from(r.throughput_rps)),
+            ("total_cost_s", Value::from(r.total_cost_s)),
+        ]);
+        obj(vec![
+            ("endpoints", Value::Arr(endpoints)),
+            ("plan", plan),
+            ("plan_hash", Value::from(hash)),
+            ("provenance", Provenance::from_env().to_json()),
+            ("results", results),
+            ("schema", Value::from(SERVE_REPORT_SCHEMA)),
+        ])
+    }
+
+    pub fn to_pretty_string(&self) -> String {
+        let mut s = self.to_json().to_string_pretty(1);
+        s.push('\n');
+        s
+    }
+
+    pub fn write_to(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_pretty_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Aggregate + per-endpoint summary lines for CLI output.
+    pub fn summary_lines(&self) -> Vec<String> {
+        let r = &self.results;
+        let mut lines = vec![
+            format!(
+                "requests {:>6}  hit rate {:>6.1}%  misses {:>4}  \
+                 fills {:>4}  prewarmed {:>4}",
+                r.requests,
+                r.hit_rate * 100.0,
+                r.misses,
+                r.fills,
+                r.prewarmed,
+            ),
+            format!(
+                "latency p50 {:>9.3} ms  p95 {:>9.3} ms  p99 {:>9.3} ms  \
+                 throughput {:>9.1} req/s",
+                r.p50_latency_s * 1e3,
+                r.p95_latency_s * 1e3,
+                r.p99_latency_s * 1e3,
+                r.throughput_rps,
+            ),
+        ];
+        for e in &self.endpoints {
+            lines.push(format!(
+                "{:<32} requests {:>6}  hits {:>6}  misses {:>4}  best {}",
+                e.key.to_string(),
+                e.requests,
+                e.hits,
+                e.misses,
+                e.best_ms
+                    .map(|b| format!("{b:>9.4} ms"))
+                    .unwrap_or_else(|| "     (cold)".to_string()),
+            ));
+        }
+        lines
+    }
+}
+
+/// Seeded Fisher–Yates permutation of `0..n` from its own RNG stream.
+fn warm_permutation(n: usize, base_seed: u64) -> Vec<usize> {
+    let mut rng = Rng::new(stream_seed(base_seed, &["loadgen", "warm"], 0));
+    let mut idx: Vec<usize> = (0..n).collect();
+    for i in (1..n).rev() {
+        idx.swap(i, rng.below(i + 1));
+    }
+    idx
+}
+
+/// Draw the request mix: Zipf weights `1/(rank+1)^s` over the universe
+/// in plan order, sampled by inverse CDF from the mix stream.
+fn request_mix(plan: &LoadPlan, n_endpoints: usize) -> Vec<usize> {
+    let mut rng =
+        Rng::new(stream_seed(plan.base_seed, &["loadgen", "mix"], 0));
+    let weights: Vec<f64> = (0..n_endpoints)
+        .map(|rank| 1.0 / ((rank + 1) as f64).powf(plan.zipf_s))
+        .collect();
+    let mut cum = Vec::with_capacity(n_endpoints);
+    let mut total = 0.0;
+    for w in &weights {
+        total += w;
+        cum.push(total);
+    }
+    (0..plan.requests)
+        .map(|_| {
+            let r = rng.f64() * total;
+            cum.partition_point(|&c| c <= r).min(n_endpoints - 1)
+        })
+        .collect()
+}
+
+/// Run a load plan against a store: pre-warm, replay the mix across
+/// `jobs` workers, verify the exactly-once invariant and aggregate the
+/// serving KPIs. The report is byte-identical for any `jobs`.
+pub fn run_load_plan(
+    plan: &LoadPlan,
+    store: Arc<dyn TuningStore>,
+    jobs: usize,
+) -> Result<ServeReport> {
+    plan.validate()?;
+    let keys = plan.endpoints();
+    let n = keys.len();
+    let engine = ServeEngine::new(store, ServeConfig {
+        base_seed: plan.base_seed,
+        max_tests: plan.max_tests,
+    });
+
+    // pre-warm a seeded subset of the universe through the ordinary
+    // query path, so warm entries are bit-for-bit what a fill produces
+    let n_warm = ((1.0 - plan.miss_ratio) * n as f64).round() as usize;
+    let perm = warm_permutation(n, plan.base_seed);
+    for &i in perm.iter().take(n_warm) {
+        engine
+            .query(&keys[i])
+            .with_context(|| format!("pre-warming {}", keys[i]))?;
+    }
+    let prewarm_fills = engine.fills();
+
+    // logical hit/miss classification: a request misses iff it is the
+    // first occurrence of an endpoint the store cannot answer yet —
+    // exactly what a serial replay of this mix observes
+    let mix = request_mix(plan, n);
+    let mut known: Vec<bool> = keys
+        .iter()
+        .map(|k| engine.store().get(k).is_some())
+        .collect();
+    let miss_of_request: Vec<bool> = mix
+        .iter()
+        .map(|&i| {
+            let miss = !known[i];
+            known[i] = true;
+            miss
+        })
+        .collect();
+
+    // the timed run: replay the mix across the worker pool
+    let outcomes = pool::par_map_jobs(plan.requests, jobs, &|r| {
+        engine.query(&keys[mix[r]])
+    });
+    let mut entries_by_endpoint: Vec<Option<f64>> = vec![None; n];
+    for (r, outcome) in outcomes.iter().enumerate() {
+        match outcome {
+            Ok(out) => {
+                entries_by_endpoint[mix[r]] = Some(out.entry.cost_s);
+            }
+            Err(e) => bail!("request {r} ({}) failed: {e}", keys[mix[r]]),
+        }
+    }
+    let fills = engine.fills() - prewarm_fills;
+
+    // exactly-once invariant: every logical miss ran one search, and
+    // nothing else did — a violation means the inflight dedup broke
+    let misses = miss_of_request.iter().filter(|&&m| m).count();
+    if fills != misses {
+        bail!(
+            "serve fill accounting broken: {fills} searches ran for \
+             {misses} logical misses"
+        );
+    }
+
+    // simulated latencies: deterministic per request, so percentiles
+    // are identical across jobs counts
+    let latencies: Vec<f64> = mix
+        .iter()
+        .zip(&miss_of_request)
+        .map(|(&i, &miss)| {
+            let mut lat = HIT_LATENCY_S;
+            if miss {
+                lat += entries_by_endpoint[i]
+                    .expect("missed endpoint was filled");
+            }
+            lat
+        })
+        .collect();
+    let total_cost_s: f64 = latencies.iter().sum();
+
+    let mut endpoints = Vec::with_capacity(n);
+    for (i, key) in keys.iter().enumerate() {
+        let requests = mix.iter().filter(|&&m| m == i).count();
+        let misses = mix
+            .iter()
+            .zip(&miss_of_request)
+            .filter(|(&m, &miss)| m == i && miss)
+            .count();
+        let entry = engine.store().get(key);
+        endpoints.push(EndpointReport {
+            key: key.clone(),
+            requests,
+            hits: requests - misses,
+            misses,
+            best_ms: entry.as_ref().map(|e| e.best_ms),
+            config: entry.map(|e| e.config),
+        });
+    }
+
+    let hits = plan.requests - misses;
+    let results = LoadResults {
+        requests: plan.requests,
+        hits,
+        misses,
+        fills,
+        prewarmed: prewarm_fills,
+        hit_rate: hits as f64 / plan.requests as f64,
+        mean_latency_s: stats::mean(&latencies),
+        p50_latency_s: stats::quantile(&latencies, 0.50),
+        p95_latency_s: stats::quantile(&latencies, 0.95),
+        p99_latency_s: stats::quantile(&latencies, 0.99),
+        total_cost_s,
+        throughput_rps: plan.requests as f64 / total_cost_s,
+    };
+
+    Ok(ServeReport {
+        plan: plan.clone(),
+        endpoints,
+        results,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::serve::MemTuningStore;
+    use super::*;
+
+    #[test]
+    fn smoke_plan_validates() {
+        assert_eq!(LoadPlan::smoke(0).validate(), Ok(()));
+        assert_eq!(LoadPlan::full(0).validate(), Ok(()));
+    }
+
+    #[test]
+    fn validation_rejects_bad_knobs() {
+        let mut p = LoadPlan::smoke(0);
+        p.miss_ratio = 1.5;
+        assert_eq!(
+            p.validate(),
+            Err(PlanError::InvalidRatio {
+                axis: "miss_ratio",
+                value: 1.5
+            })
+        );
+        let mut p = LoadPlan::smoke(0);
+        p.zipf_s = -1.0;
+        assert_eq!(
+            p.validate(),
+            Err(PlanError::InvalidKnob {
+                axis: "zipf_s",
+                value: -1.0
+            })
+        );
+        let mut p = LoadPlan::smoke(0);
+        p.requests = 0;
+        assert_eq!(p.validate(), Err(PlanError::EmptyAxis("requests")));
+        let mut p = LoadPlan::smoke(0);
+        p.benchmarks = vec!["gemm-full".into()];
+        assert_eq!(
+            p.validate(),
+            Err(PlanError::NoRecording("gemm-full".into()))
+        );
+    }
+
+    #[test]
+    fn mix_is_deterministic_and_skewed() {
+        let plan = LoadPlan::smoke(7);
+        let a = request_mix(&plan, 4);
+        let b = request_mix(&plan, 4);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), plan.requests);
+        assert!(a.iter().all(|&i| i < 4));
+        // zipf_s = 1.0 must favour rank 0 over rank 3
+        let count = |xs: &[usize], v: usize| {
+            xs.iter().filter(|&&x| x == v).count()
+        };
+        assert!(count(&a, 0) > count(&a, 3));
+    }
+
+    #[test]
+    fn warm_permutation_is_seeded_and_complete() {
+        let a = warm_permutation(16, 3);
+        assert_eq!(a, warm_permutation(16, 3));
+        assert_ne!(a, warm_permutation(16, 4));
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..16).collect::<Vec<usize>>());
+    }
+
+    #[test]
+    fn report_counts_are_consistent() {
+        let mut plan = LoadPlan::smoke(1);
+        plan.requests = 60;
+        plan.max_tests = 40;
+        let report = run_load_plan(
+            &plan,
+            Arc::new(MemTuningStore::new()),
+            2,
+        )
+        .unwrap();
+        let r = &report.results;
+        assert_eq!(r.requests, 60);
+        assert_eq!(r.hits + r.misses, r.requests);
+        assert_eq!(r.fills, r.misses);
+        assert!((0.0..=1.0).contains(&r.hit_rate));
+        assert!(r.p50_latency_s <= r.p95_latency_s);
+        assert!(r.p95_latency_s <= r.p99_latency_s);
+        assert!(r.throughput_rps > 0.0);
+        let per_endpoint: usize =
+            report.endpoints.iter().map(|e| e.requests).sum();
+        assert_eq!(per_endpoint, r.requests);
+        let per_endpoint_misses: usize =
+            report.endpoints.iter().map(|e| e.misses).sum();
+        assert_eq!(per_endpoint_misses, r.misses);
+    }
+}

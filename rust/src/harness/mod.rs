@@ -34,11 +34,22 @@
 //! flattens its KPIs into [`RegistryRow`]s, and [`compare_rows`] gates
 //! them against a blessed baseline under typed [`Tolerance`]s
 //! (`pcat registry append|query|compare`).
+//!
+//! The serving layer turns the same machinery into
+//! tuning-as-a-service: [`ServeEngine`] answers (benchmark, GPU,
+//! input) → best-config queries from a [`TuningStore`] (in-memory or
+//! versioned JSON file, exportable for pre-warming), searching on miss
+//! exactly once per endpoint; [`run_load_plan`] replays a seeded
+//! Zipf request mix against it and emits a registry-stamped
+//! [`ServeReport`] with throughput, hit-rate and latency-percentile
+//! KPIs (`pcat serve`, `pcat serve-query`, `pcat cache`).
 
 mod convergence;
 mod figures;
+mod loadgen;
 mod plan;
 mod registry;
+mod serve;
 mod steps;
 mod sweep;
 mod tables;
@@ -49,6 +60,10 @@ pub use convergence::{
     aggregate_time_curves, best_so_far, steps_to_within, ConvergencePoint,
     StepCurvePoint,
 };
+pub use loadgen::{
+    run_load_plan, EndpointReport, LoadPlan, LoadResults, ServeReport,
+    HIT_LATENCY_S,
+};
 pub use plan::{
     run_plan, AggregateRow, ExperimentPlan, JobResult, JobSpec, PlanError,
     PlanReport, PLAN_SEARCHERS,
@@ -58,7 +73,13 @@ pub use registry::{
     CompareFinding, CompareStatus, CsvStore, Direction, MemStore, Provenance,
     RegistryError, RegistryRow, RegistryStore, Tolerance,
     BENCH_REPORT_SCHEMA, KNOWN_REPORT_SCHEMAS, PLAN_REPORT_SCHEMA,
-    REGISTRY_HEADER, SWEEP_REPORT_SCHEMA, TRANSFER_REPORT_SCHEMA,
+    REGISTRY_HEADER, SERVE_REPORT_SCHEMA, SWEEP_REPORT_SCHEMA,
+    TRANSFER_REPORT_SCHEMA,
+};
+pub use serve::{
+    export_store, import_store, render_store, JsonFileStore, MemTuningStore,
+    QueryOutcome, ServeConfig, ServeEngine, ServeError, ServeKey, TuningEntry,
+    TuningStore, TUNING_STORE_SCHEMA,
 };
 pub use steps::{avg_steps_to_well_performing, par_map_seeds};
 pub use sweep::{run_sweep_plan, SweepCell, SweepPlan, SweepReport};

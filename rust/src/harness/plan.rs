@@ -74,6 +74,15 @@ pub enum PlanError {
     /// need a source or target recording that can never exist, so the
     /// plan is rejected up front instead of panicking mid-fan-out.
     UnknownInput(String, String),
+    /// A probability-like knob outside `[0, 1]` (or non-finite) —
+    /// e.g. the serve load generator's `miss_ratio`, where both
+    /// endpoints are meaningful (0 = fully pre-warmed, 1 = fully
+    /// cold), unlike the strictly positive training fractions.
+    InvalidRatio { axis: &'static str, value: f64 },
+    /// A knob that only needs to be finite and non-negative — e.g. the
+    /// load generator's Zipf exponent, where `0` (uniform popularity)
+    /// is meaningful but there is no upper bound to enforce.
+    InvalidKnob { axis: &'static str, value: f64 },
 }
 
 impl std::fmt::Display for PlanError {
@@ -109,6 +118,16 @@ impl std::fmt::Display for PlanError {
                 "invalid training fraction {value} in plan axis \
                  {axis:?}: must be within (0, 1] (1.0 = the full \
                  recording, the pre-sampling behaviour)"
+            ),
+            PlanError::InvalidRatio { axis, value } => write!(
+                f,
+                "invalid ratio {value} in plan axis {axis:?}: must be \
+                 within [0, 1]"
+            ),
+            PlanError::InvalidKnob { axis, value } => write!(
+                f,
+                "invalid value {value} for plan knob {axis:?}: must be \
+                 finite and non-negative"
             ),
         }
     }
@@ -189,6 +208,34 @@ pub(crate) fn validate_fraction(
         Ok(())
     } else {
         Err(PlanError::InvalidFraction { axis, value })
+    }
+}
+
+/// Shared ratio validation: probability-like knobs must be finite and
+/// within `[0, 1]` ([`PlanError::InvalidRatio`] otherwise). Used by
+/// [`crate::harness::LoadPlan`] (`miss_ratio`).
+pub(crate) fn validate_ratio(
+    axis: &'static str,
+    value: f64,
+) -> Result<(), PlanError> {
+    if value.is_finite() && (0.0..=1.0).contains(&value) {
+        Ok(())
+    } else {
+        Err(PlanError::InvalidRatio { axis, value })
+    }
+}
+
+/// Shared knob validation: scale-like knobs (the load generator's Zipf
+/// exponent) must be finite and non-negative
+/// ([`PlanError::InvalidKnob`] otherwise).
+pub(crate) fn validate_knob(
+    axis: &'static str,
+    value: f64,
+) -> Result<(), PlanError> {
+    if value.is_finite() && value >= 0.0 {
+        Ok(())
+    } else {
+        Err(PlanError::InvalidKnob { axis, value })
     }
 }
 
@@ -530,6 +577,18 @@ struct CellCtx {
     inst_reaction: f64,
 }
 
+/// The expert reaction strength for a benchmark's boundedness class —
+/// the one knob [`searcher_choice`]'s profile arm needs besides the
+/// matrix. Shared by the plan pre-pass and the serve engine's
+/// cache-miss search so the two cannot drift.
+pub(crate) fn inst_reaction_for(bench: &dyn benchmarks::Benchmark) -> f64 {
+    if bench.instruction_bound() {
+        crate::expert::INST_BOUND_REACTION
+    } else {
+        crate::expert::DEFAULT_INST_REACTION
+    }
+}
+
 /// Does this searcher consume the cell's model matrix — i.e. can its
 /// results differ across the *source* axis of a transfer plan? Kept
 /// next to [`searcher_choice`] so the transfer fan-out's source-axis
@@ -591,7 +650,7 @@ fn run_job(spec: &JobSpec, plan: &ExperimentPlan, ctx: &CellCtx) -> JobResult {
             .with_budget(budget)
             .with_seed(seed)
             .run(choice);
-        let faults = stats.lock().unwrap().clone();
+        let faults = crate::util::sync::lock_unpoisoned(&stats).clone();
         (result, Some(faults))
     } else {
         let result = Tuner::replay(
@@ -910,14 +969,12 @@ pub fn run_plan(plan: &ExperimentPlan, jobs: usize) -> Result<PlanReport> {
         let bench = benchmarks::by_name(b).expect("validated");
         let gpu = GpuSpec::by_name(g).expect("validated");
         let rec = cached_space(bench.as_ref(), &gpu, input);
-        // densify the oracle straight from the recording: no
-        // HashMap<Config, CounterVec> is ever built on this path
-        let matrix = Arc::new(PredictionMatrix::from_recorded(&rec));
-        let inst_reaction = if bench.instruction_bound() {
-            crate::expert::INST_BOUND_REACTION
-        } else {
-            crate::expert::DEFAULT_INST_REACTION
-        };
+        // shared dense oracle matrix from the process-wide cache: the
+        // serve engine and every later plan over this endpoint score
+        // the same Arc (densified straight from the recording — no
+        // HashMap<Config, CounterVec> is ever built on this path)
+        let matrix = benchmarks::cached_matrix(bench.as_ref(), &gpu, input);
+        let inst_reaction = inst_reaction_for(bench.as_ref());
         CellCtx {
             rec,
             matrix,

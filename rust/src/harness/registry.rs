@@ -34,21 +34,24 @@ use crate::util::stats::median;
 
 /// Report schema versions, centralized here and used by the emitters
 /// ([`super::PlanReport`], [`super::TransferReport`],
-/// [`super::SweepReport`], the bench JSON sink) so the known-schema
-/// list below can never drift from what the reports actually say.
+/// [`super::SweepReport`], [`super::ServeReport`], the bench JSON
+/// sink) so the known-schema list below can never drift from what the
+/// reports actually say.
 pub const PLAN_REPORT_SCHEMA: &str = "pcat-plan-report/v1";
 pub const TRANSFER_REPORT_SCHEMA: &str = "pcat-transfer-report/v3";
 pub const SWEEP_REPORT_SCHEMA: &str = "pcat-sweep-report/v1";
 pub const BENCH_REPORT_SCHEMA: &str = "pcat-bench-report/v1";
+pub const SERVE_REPORT_SCHEMA: &str = "pcat-serve-report/v1";
 
 /// Every report schema the registry can ingest. Anything else —
 /// including *older* versions of these schemas — is
 /// [`RegistryError::UnknownSchema`].
-pub const KNOWN_REPORT_SCHEMAS: [&str; 4] = [
+pub const KNOWN_REPORT_SCHEMAS: [&str; 5] = [
     PLAN_REPORT_SCHEMA,
     TRANSFER_REPORT_SCHEMA,
     SWEEP_REPORT_SCHEMA,
     BENCH_REPORT_SCHEMA,
+    SERVE_REPORT_SCHEMA,
 ];
 
 /// Column order of the registry CSV (also its header line).
@@ -456,6 +459,9 @@ fn get_arr<'a>(v: &'a Value, key: &str) -> Result<&'a [Value], RegistryError> {
 /// * **bench** — per result: `mean_ms`, `min_ms`; every derived
 ///   scalar; the timed smoke matrix's `wall_s` (scoring-round
 ///   latency) when present.
+/// * **serve** — aggregate `load` scope: `throughput_rps`, `hit_rate`,
+///   `mean_latency_s`, `p50/p95/p99_latency_s`, `fills`; per warm
+///   endpoint: `best_ms` (cold endpoints carry no answer to trend).
 pub fn extract_rows(
     report: &Value,
     plan_override: Option<&str>,
@@ -495,6 +501,7 @@ pub fn extract_rows(
         }
         SWEEP_REPORT_SCHEMA => "sweep".to_string(),
         BENCH_REPORT_SCHEMA => "bench".to_string(),
+        SERVE_REPORT_SCHEMA => "serve".to_string(),
         _ => unreachable!("schema validated above"),
     };
     let plan_name = plan_override.unwrap_or(&derived_plan_name).to_string();
@@ -642,6 +649,41 @@ pub fn extract_rows(
             {
                 if let Ok(wall) = get_f64(sm, "wall_s") {
                     rows.push(row("smoke_matrix".to_string(), "wall_s", wall));
+                }
+            }
+        }
+        SERVE_REPORT_SCHEMA => {
+            let results = get(report, "results")?;
+            for kpi in [
+                "throughput_rps",
+                "hit_rate",
+                "mean_latency_s",
+                "p50_latency_s",
+                "p95_latency_s",
+                "p99_latency_s",
+                "fills",
+            ] {
+                rows.push(row(
+                    "load".to_string(),
+                    kpi,
+                    get_f64(results, kpi)?,
+                ));
+            }
+            for e in get_arr(report, "endpoints")? {
+                // cold endpoints serialize best_ms as null — never
+                // answered, so there is no quality value to trend
+                let best = e
+                    .as_obj()
+                    .and_then(|o| o.get("best_ms"))
+                    .and_then(|v| v.as_f64());
+                if let Some(best) = best {
+                    let scope = format!(
+                        "{}/{}:{}",
+                        get_str(e, "benchmark")?,
+                        get_str(e, "gpu")?,
+                        get_str(e, "input")?
+                    );
+                    rows.push(row(scope, "best_ms", best));
                 }
             }
         }
@@ -821,6 +863,22 @@ pub fn default_tolerances() -> Vec<Tolerance> {
         t("mean_ms", LowerIsBetter, 0.05, 0.30),
         t("min_ms", LowerIsBetter, 0.05, 0.30),
         t("wall_s", LowerIsBetter, 0.5, 0.30),
+        // serving KPIs: all simulated, so bands are tight. Hit rate is
+        // a closed-range ratio; fills is an exact integer invariant
+        // (== logical misses), so any drift at all is a regression.
+        Tolerance {
+            min: Some(0.0),
+            max: Some(1.0),
+            ..t("hit_rate", HigherIsBetter, 0.05, 0.0)
+        },
+        t("throughput_rps", HigherIsBetter, 1e-9, 0.25),
+        t("mean_latency_s", LowerIsBetter, 1e-6, 0.25),
+        t("p50_latency_s", LowerIsBetter, 1e-6, 0.25),
+        t("p95_latency_s", LowerIsBetter, 1e-6, 0.25),
+        t("p99_latency_s", LowerIsBetter, 1e-6, 0.25),
+        t("fills", TwoSided, 0.5, 0.0),
+        // served answer quality per endpoint
+        t("best_ms", LowerIsBetter, 1e-9, 0.10),
     ]
 }
 
@@ -866,15 +924,26 @@ pub struct CompareFinding {
     pub bound: String,
 }
 
-/// Latest row per (plan, scope, kpi), preserving append order within a
-/// key (the registry is an append-only series; the newest entry is the
-/// one a comparison should read).
+/// Latest row per (plan, scope, kpi): newest `created_at` wins
+/// (ISO-8601 strings compare lexicographically), with ties broken on
+/// append order — later row wins. The tie-break matters on the
+/// deterministic CI path, which deliberately leaves `PCAT_CREATED_AT`
+/// unset so *every* row shares the constant default timestamp; without
+/// it the join would be ambiguous there. It also keeps the join total
+/// when registries are merged out of chronological order.
 fn latest_by_key(
     rows: &[RegistryRow],
 ) -> BTreeMap<(String, String, String), &RegistryRow> {
-    let mut map = BTreeMap::new();
+    let mut map: BTreeMap<(String, String, String), &RegistryRow> =
+        BTreeMap::new();
     for r in rows {
-        map.insert((r.plan.clone(), r.scope.clone(), r.kpi.clone()), r);
+        let key = (r.plan.clone(), r.scope.clone(), r.kpi.clone());
+        match map.get(&key) {
+            Some(prev) if prev.created_at > r.created_at => {}
+            _ => {
+                map.insert(key, r);
+            }
+        }
     }
     map
 }
@@ -1081,6 +1150,69 @@ mod tests {
     }
 
     #[test]
+    fn extract_serve_report_rows() {
+        let report = parse(
+            r#"{
+                "schema": "pcat-serve-report/v1",
+                "plan": {"base_seed": "0", "requests": 400},
+                "plan_hash": "cafe1234",
+                "provenance": {
+                    "commit": "unknown",
+                    "created_at": "1970-01-01T00:00:00Z",
+                    "toolchain": "unknown"
+                },
+                "endpoints": [
+                    {"benchmark": "coulomb", "gpu": "gtx1070",
+                     "input": "default", "requests": 300, "hits": 299,
+                     "misses": 1, "best_ms": 1.25, "config": [1, 2]},
+                    {"benchmark": "transpose", "gpu": "gtx750",
+                     "input": "default", "requests": 0, "hits": 0,
+                     "misses": 0, "best_ms": null, "config": null}
+                ],
+                "results": {
+                    "requests": 400, "hits": 399, "misses": 1,
+                    "fills": 1, "prewarmed": 3, "hit_rate": 0.9975,
+                    "mean_latency_s": 0.0001, "p50_latency_s": 0.00005,
+                    "p95_latency_s": 0.00005, "p99_latency_s": 0.0002,
+                    "total_cost_s": 0.04, "throughput_rps": 10000.0
+                }
+            }"#,
+        )
+        .unwrap();
+        let rows = extract_rows(&report, None).unwrap();
+        // 7 aggregate KPIs + 1 warm endpoint (the cold one is skipped)
+        assert_eq!(rows.len(), 8);
+        assert!(rows.iter().all(|r| r.plan == "serve"));
+        assert!(rows.iter().all(|r| r.plan_hash == "cafe1234"));
+        let load = |kpi: &str| {
+            rows.iter()
+                .find(|r| r.scope == "load" && r.kpi == kpi)
+                .map(|r| r.value)
+        };
+        assert_eq!(load("hit_rate"), Some(0.9975));
+        assert_eq!(load("throughput_rps"), Some(10000.0));
+        assert_eq!(load("fills"), Some(1.0));
+        let ep = rows
+            .iter()
+            .find(|r| r.scope == "coulomb/gtx1070:default")
+            .unwrap();
+        assert_eq!(ep.kpi, "best_ms");
+        assert_eq!(ep.value, 1.25);
+        assert!(!rows
+            .iter()
+            .any(|r| r.scope.starts_with("transpose/")));
+        // every serve KPI has a gate tolerance configured
+        let tols = default_tolerances();
+        for r in &rows {
+            assert!(
+                tolerance_for(&tols, &r.kpi).is_some(),
+                "no tolerance for serve KPI {}",
+                r.kpi
+            );
+        }
+    }
+
+    #[test]
     fn tolerance_abs_vs_rel() {
         // pure absolute allowance
         let abs = Tolerance::new("k", Direction::LowerIsBetter, 2.0, 0.0);
@@ -1174,6 +1306,34 @@ mod tests {
         let findings = compare_rows(&base, &cur, &default_tolerances());
         assert!(!has_failures(&findings));
         assert_eq!(findings[0].current, Some(10.5));
+    }
+
+    #[test]
+    fn equal_timestamps_tie_break_on_append_order() {
+        // The deterministic CI path unsets PCAT_CREATED_AT, so every
+        // row shares the constant default timestamp; the latest-row
+        // join must still be unambiguous: later append wins.
+        let a = sample_row("mean_tests_to_wp", 500.0);
+        let b = sample_row("mean_tests_to_wp", 10.5);
+        assert_eq!(a.created_at, b.created_at);
+        let rows = vec![a, b];
+        let latest = latest_by_key(&rows);
+        assert_eq!(latest.len(), 1);
+        assert_eq!(latest.values().next().unwrap().value, 10.5);
+    }
+
+    #[test]
+    fn newer_timestamp_beats_later_append() {
+        // Merged registries can interleave timestamps out of append
+        // order; the row with the newest created_at wins regardless of
+        // its position in the file.
+        let mut newer = sample_row("mean_tests_to_wp", 7.0);
+        newer.created_at = "2026-02-01T00:00:00Z".to_string();
+        let mut older = sample_row("mean_tests_to_wp", 900.0);
+        older.created_at = "2026-01-01T00:00:00Z".to_string();
+        let rows = vec![newer, older];
+        let latest = latest_by_key(&rows);
+        assert_eq!(latest.values().next().unwrap().value, 7.0);
     }
 
     #[test]

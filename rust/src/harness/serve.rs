@@ -1,0 +1,715 @@
+//! Tuning-as-a-service: a persistent, versioned tuning cache plus
+//! query engine (`pcat serve-query` / `pcat cache export|import`).
+//!
+//! The paper's promise — a counter-trained model makes tuning results
+//! *reusable* — only pays off in production if "best config for
+//! (benchmark, GPU, input)" is answered without re-searching. This
+//! module is that serving layer:
+//!
+//! * [`TuningStore`] abstracts the answer cache. [`MemTuningStore`]
+//!   serves from memory; [`JsonFileStore`] persists every fill to a
+//!   versioned JSON document (schema [`TUNING_STORE_SCHEMA`]) whose
+//!   bytes equal its own [`export_store`] rendering, so a store file
+//!   can be shipped with a deployment and imported to kill cold starts
+//!   (the kubecl exemplar's pre-warming story).
+//! * [`ServeEngine`] is the query engine. Reads go through the store
+//!   and the process-wide `Arc`-shared recording/matrix caches
+//!   ([`crate::benchmarks::cached_space`] /
+//!   [`crate::benchmarks::cached_matrix`]); a miss falls through to a
+//!   bounded profile search over the replay environment and persists
+//!   the result stamped with a plan hash + provenance identity.
+//!   Concurrent misses for one endpoint are collapsed onto a single
+//!   search by an [`OnceMap`] slot, so every answer is computed
+//!   **exactly once per process** no matter how many worker threads
+//!   race on it.
+//!
+//! **Determinism contract:** an entry is a pure function of the
+//! endpoint key and the engine's [`ServeConfig`] — the search seed
+//! derives from `(base seed, benchmark, gpu, input)` via
+//! [`stream_seed`], never from scheduling — so serial and concurrent
+//! query mixes produce byte-identical answers (asserted by the
+//! `tests/serve.rs` hammer and the CI serve smoke lane).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::benchmarks;
+use crate::coordinator::Tuner;
+use crate::gpusim::GpuSpec;
+use crate::searcher::{Budget, CostModel};
+use crate::util::json::{obj, Value};
+use crate::util::rng::stream_seed;
+use crate::util::sync::{lock_unpoisoned, OnceMap};
+
+use super::plan::{
+    inst_reaction_for, searcher_choice, validate_benchmarks, validate_gpus,
+    validate_inputs, PlanError,
+};
+use super::registry::{plan_hash, Provenance};
+
+/// Version tag of the on-disk tuning-store document. Bump on any
+/// incompatible entry-layout change; [`import_store`] rejects every
+/// other value (including older versions).
+pub const TUNING_STORE_SCHEMA: &str = "pcat-tuning-store/v1";
+
+/// One serving endpoint: canonical benchmark name, canonical GPU name,
+/// concrete input name. Construct via [`ServeKey::resolve`] so
+/// case-insensitive aliases (`Coulomb`, `GTX-1070`, `default`) collapse
+/// onto one cache key.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ServeKey {
+    pub benchmark: String,
+    pub gpu: String,
+    pub input: String,
+}
+
+impl ServeKey {
+    /// Validate and canonicalize an endpoint. Rejects unknown names,
+    /// benchmarks the replay harness cannot exhaustively record
+    /// (serving GEMM-full would silently enumerate 205k configs on the
+    /// first miss), and input selectors the benchmark lacks.
+    pub fn resolve(
+        benchmark: &str,
+        gpu: &str,
+        input: &str,
+    ) -> Result<ServeKey, ServeError> {
+        let benches = vec![benchmark.to_string()];
+        validate_benchmarks("benchmark", &benches)?;
+        validate_gpus("gpu", &[gpu.to_string()])?;
+        validate_inputs("input", &benches, &[input.to_string()])?;
+        let bench = benchmarks::by_name(benchmark).expect("validated");
+        let spec = GpuSpec::by_name(gpu).expect("validated");
+        let concrete = benchmarks::resolve_input(bench.as_ref(), input)
+            .expect("validated");
+        Ok(ServeKey {
+            benchmark: bench.name().to_string(),
+            gpu: spec.name.to_string(),
+            input: concrete.name,
+        })
+    }
+
+    fn to_fields(&self) -> Vec<(&'static str, Value)> {
+        vec![
+            ("benchmark", Value::from(self.benchmark.clone())),
+            ("gpu", Value::from(self.gpu.clone())),
+            ("input", Value::from(self.input.clone())),
+        ]
+    }
+}
+
+impl std::fmt::Display for ServeKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}:{}", self.benchmark, self.gpu, self.input)
+    }
+}
+
+/// One cached answer: the winning configuration plus enough identity
+/// (search recipe hash, provenance) to audit where it came from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuningEntry {
+    /// Winning configuration, in the space's parameter order.
+    pub config: Vec<i64>,
+    pub best_ms: f64,
+    /// Empirical tests the search spent before its budget tripped.
+    pub tests: usize,
+    pub profiled_tests: usize,
+    /// Simulated search cost, seconds — a miss's serving latency.
+    pub cost_s: f64,
+    /// Searcher that produced the entry (always `"profile"` today).
+    pub searcher: String,
+    /// Search recipe: budget cap and RNG base the entry derives from.
+    pub max_tests: usize,
+    pub base_seed: u64,
+    /// FNV-1a hash of the search recipe (schema + key + budget + seed)
+    /// — same identity scheme as the experiment reports.
+    pub plan_hash: String,
+    pub provenance: Provenance,
+}
+
+impl TuningEntry {
+    pub fn to_json(&self, key: &ServeKey) -> Value {
+        let mut fields = key.to_fields();
+        fields.extend(vec![
+            (
+                "config",
+                Value::Arr(
+                    self.config.iter().map(|&v| Value::from(v)).collect(),
+                ),
+            ),
+            ("best_ms", Value::from(self.best_ms)),
+            ("tests", Value::from(self.tests)),
+            ("profiled_tests", Value::from(self.profiled_tests)),
+            ("cost_s", Value::from(self.cost_s)),
+            ("searcher", Value::from(self.searcher.clone())),
+            ("max_tests", Value::from(self.max_tests)),
+            // u64 seeds ride as strings (f64 would corrupt > 2^53)
+            ("base_seed", Value::from(self.base_seed.to_string())),
+            ("plan_hash", Value::from(self.plan_hash.clone())),
+            ("provenance", self.provenance.to_json()),
+        ]);
+        obj(fields)
+    }
+
+    fn from_json(v: &Value) -> Result<(ServeKey, TuningEntry), ServeError> {
+        let field = |k: &str| {
+            v.get(k).map_err(|_| {
+                ServeError::Malformed(format!("entry missing key {k:?}"))
+            })
+        };
+        let str_field = |k: &str| -> Result<String, ServeError> {
+            field(k)?.as_str().map(str::to_string).ok_or_else(|| {
+                ServeError::Malformed(format!("entry key {k:?} not a string"))
+            })
+        };
+        let num_field = |k: &str| -> Result<f64, ServeError> {
+            field(k)?.as_f64().ok_or_else(|| {
+                ServeError::Malformed(format!("entry key {k:?} not a number"))
+            })
+        };
+        let key = ServeKey {
+            benchmark: str_field("benchmark")?,
+            gpu: str_field("gpu")?,
+            input: str_field("input")?,
+        };
+        let config = field("config")?
+            .as_arr()
+            .ok_or_else(|| {
+                ServeError::Malformed("entry config not an array".into())
+            })?
+            .iter()
+            .map(|c| {
+                c.as_i64().ok_or_else(|| {
+                    ServeError::Malformed(
+                        "entry config value not an integer".into(),
+                    )
+                })
+            })
+            .collect::<Result<Vec<i64>, ServeError>>()?;
+        let base_seed = str_field("base_seed")?.parse::<u64>().map_err(|_| {
+            ServeError::Malformed("entry base_seed not a u64 string".into())
+        })?;
+        let prov = field("provenance")?;
+        let prov_field = |k: &str| -> Result<String, ServeError> {
+            prov.get(k)
+                .ok()
+                .and_then(|x| x.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| {
+                    ServeError::Malformed(format!(
+                        "entry provenance missing {k:?}"
+                    ))
+                })
+        };
+        let entry = TuningEntry {
+            config,
+            best_ms: num_field("best_ms")?,
+            tests: num_field("tests")? as usize,
+            profiled_tests: num_field("profiled_tests")? as usize,
+            cost_s: num_field("cost_s")?,
+            searcher: str_field("searcher")?,
+            max_tests: num_field("max_tests")? as usize,
+            base_seed,
+            plan_hash: str_field("plan_hash")?,
+            provenance: Provenance {
+                commit: prov_field("commit")?,
+                created_at: prov_field("created_at")?,
+                toolchain: prov_field("toolchain")?,
+            },
+        };
+        Ok((key, entry))
+    }
+}
+
+/// Serving-layer error: plan-style validation failures plus store
+/// (de)serialization and I/O problems.
+#[derive(Debug)]
+pub enum ServeError {
+    Plan(PlanError),
+    /// Store document schema is not [`TUNING_STORE_SCHEMA`].
+    UnknownSchema(String),
+    Malformed(String),
+    Io(String),
+}
+
+impl From<PlanError> for ServeError {
+    fn from(e: PlanError) -> Self {
+        ServeError::Plan(e)
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Plan(e) => write!(f, "{e}"),
+            ServeError::UnknownSchema(s) => write!(
+                f,
+                "unknown tuning-store schema {s:?}; this build reads \
+                 {TUNING_STORE_SCHEMA:?}"
+            ),
+            ServeError::Malformed(m) => {
+                write!(f, "malformed tuning store: {m}")
+            }
+            ServeError::Io(m) => write!(f, "tuning store I/O: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// The answer cache behind the serve engine. Implementations must be
+/// safe to hammer from the worker pool; `get` is the concurrent read
+/// path, `put` the (rarer) fill path.
+pub trait TuningStore: Send + Sync {
+    fn get(&self, key: &ServeKey) -> Option<TuningEntry>;
+    fn put(&self, key: &ServeKey, entry: &TuningEntry)
+        -> Result<(), ServeError>;
+    /// All entries in sorted key order (the canonical export order).
+    fn entries(&self) -> Vec<(ServeKey, TuningEntry)>;
+    fn len(&self) -> usize {
+        self.entries().len()
+    }
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Render a store as its canonical, versioned JSON document — sorted
+/// entries under the [`TUNING_STORE_SCHEMA`] tag. [`JsonFileStore`]
+/// writes exactly these bytes, so exporting a file-backed store
+/// reproduces its own file byte-for-byte.
+pub fn export_store(store: &dyn TuningStore) -> Value {
+    store_doc(&store.entries())
+}
+
+fn store_doc(entries: &[(ServeKey, TuningEntry)]) -> Value {
+    obj(vec![
+        (
+            "entries",
+            Value::Arr(
+                entries.iter().map(|(k, e)| e.to_json(k)).collect(),
+            ),
+        ),
+        ("schema", Value::from(TUNING_STORE_SCHEMA)),
+    ])
+}
+
+/// The rendered form shared by [`export_store`] output and the
+/// [`JsonFileStore`] file.
+pub fn render_store(doc: &Value) -> String {
+    let mut s = doc.to_string_pretty(1);
+    s.push('\n');
+    s
+}
+
+/// Load every entry of an exported document into `store` (schema
+/// checked, existing keys overwritten). Returns the number of entries
+/// imported.
+pub fn import_store(
+    store: &dyn TuningStore,
+    doc: &Value,
+) -> Result<usize, ServeError> {
+    let entries = parse_store_doc(doc)?;
+    let n = entries.len();
+    for (key, entry) in &entries {
+        store.put(key, entry)?;
+    }
+    Ok(n)
+}
+
+fn parse_store_doc(
+    doc: &Value,
+) -> Result<Vec<(ServeKey, TuningEntry)>, ServeError> {
+    let schema = doc
+        .get("schema")
+        .ok()
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| {
+            ServeError::Malformed("store document has no schema".into())
+        })?;
+    if schema != TUNING_STORE_SCHEMA {
+        return Err(ServeError::UnknownSchema(schema.to_string()));
+    }
+    let arr = doc
+        .get("entries")
+        .ok()
+        .and_then(|v| v.as_arr().map(<[Value]>::to_vec))
+        .ok_or_else(|| {
+            ServeError::Malformed("store document has no entries array".into())
+        })?;
+    arr.iter().map(TuningEntry::from_json).collect()
+}
+
+/// In-memory [`TuningStore`] — the default backend for `pcat serve`
+/// load generation and tests.
+#[derive(Default)]
+pub struct MemTuningStore {
+    entries: Mutex<BTreeMap<ServeKey, TuningEntry>>,
+}
+
+impl MemTuningStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl TuningStore for MemTuningStore {
+    fn get(&self, key: &ServeKey) -> Option<TuningEntry> {
+        lock_unpoisoned(&self.entries).get(key).cloned()
+    }
+
+    fn put(
+        &self,
+        key: &ServeKey,
+        entry: &TuningEntry,
+    ) -> Result<(), ServeError> {
+        lock_unpoisoned(&self.entries).insert(key.clone(), entry.clone());
+        Ok(())
+    }
+
+    fn entries(&self) -> Vec<(ServeKey, TuningEntry)> {
+        lock_unpoisoned(&self.entries)
+            .iter()
+            .map(|(k, e)| (k.clone(), e.clone()))
+            .collect()
+    }
+
+    fn len(&self) -> usize {
+        lock_unpoisoned(&self.entries).len()
+    }
+}
+
+/// On-disk [`TuningStore`]: a JSON document (schema
+/// [`TUNING_STORE_SCHEMA`]) rewritten atomically-enough for a single
+/// process on every fill. Opening a missing file starts empty; opening
+/// an existing one validates the schema and loads every entry.
+pub struct JsonFileStore {
+    path: PathBuf,
+    entries: Mutex<BTreeMap<ServeKey, TuningEntry>>,
+}
+
+impl JsonFileStore {
+    pub fn open(path: &Path) -> Result<JsonFileStore, ServeError> {
+        let mut entries = BTreeMap::new();
+        if path.exists() {
+            let text = std::fs::read_to_string(path).map_err(|e| {
+                ServeError::Io(format!("reading {}: {e}", path.display()))
+            })?;
+            let doc = crate::util::json::parse(&text).map_err(|e| {
+                ServeError::Malformed(format!("{}: {e}", path.display()))
+            })?;
+            for (key, entry) in parse_store_doc(&doc)? {
+                entries.insert(key, entry);
+            }
+        }
+        Ok(JsonFileStore {
+            path: path.to_path_buf(),
+            entries: Mutex::new(entries),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn persist(
+        &self,
+        entries: &BTreeMap<ServeKey, TuningEntry>,
+    ) -> Result<(), ServeError> {
+        let flat: Vec<(ServeKey, TuningEntry)> = entries
+            .iter()
+            .map(|(k, e)| (k.clone(), e.clone()))
+            .collect();
+        if let Some(dir) = self.path.parent() {
+            std::fs::create_dir_all(dir).map_err(|e| {
+                ServeError::Io(format!("creating {}: {e}", dir.display()))
+            })?;
+        }
+        std::fs::write(&self.path, render_store(&store_doc(&flat))).map_err(
+            |e| ServeError::Io(format!("writing {}: {e}", self.path.display())),
+        )
+    }
+}
+
+impl TuningStore for JsonFileStore {
+    fn get(&self, key: &ServeKey) -> Option<TuningEntry> {
+        lock_unpoisoned(&self.entries).get(key).cloned()
+    }
+
+    fn put(
+        &self,
+        key: &ServeKey,
+        entry: &TuningEntry,
+    ) -> Result<(), ServeError> {
+        // hold the lock across the write so concurrent fills can never
+        // interleave a torn document
+        let mut entries = lock_unpoisoned(&self.entries);
+        entries.insert(key.clone(), entry.clone());
+        self.persist(&entries)
+    }
+
+    fn entries(&self) -> Vec<(ServeKey, TuningEntry)> {
+        lock_unpoisoned(&self.entries)
+            .iter()
+            .map(|(k, e)| (k.clone(), e.clone()))
+            .collect()
+    }
+
+    fn len(&self) -> usize {
+        lock_unpoisoned(&self.entries).len()
+    }
+}
+
+/// Engine knobs; an entry is a pure function of (key, this config).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// RNG stream base for miss searches.
+    pub base_seed: u64,
+    /// Budget cap per miss search (the convergence threshold is the
+    /// usual 1.1× best-time, same as the plan runners).
+    pub max_tests: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            base_seed: 0,
+            max_tests: 400,
+        }
+    }
+}
+
+/// One answered query: the entry plus whether it was served without
+/// running a search in this call (`hit`).
+#[derive(Debug, Clone)]
+pub struct QueryOutcome {
+    pub key: ServeKey,
+    pub entry: TuningEntry,
+    /// `false` exactly when this call ran (and persisted) the search.
+    pub hit: bool,
+}
+
+/// The query engine: concurrent read path over the store +
+/// `Arc`-shared caches, exactly-once write path on miss.
+pub struct ServeEngine {
+    store: Arc<dyn TuningStore>,
+    cfg: ServeConfig,
+    /// Collapses concurrent misses for one endpoint onto one search.
+    inflight: OnceMap<ServeKey, TuningEntry>,
+    fills: AtomicUsize,
+}
+
+impl ServeEngine {
+    pub fn new(store: Arc<dyn TuningStore>, cfg: ServeConfig) -> ServeEngine {
+        ServeEngine {
+            store,
+            cfg,
+            inflight: OnceMap::new(),
+            fills: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn store(&self) -> &Arc<dyn TuningStore> {
+        &self.store
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Searches this engine has run (and persisted) so far — equals
+    /// the number of distinct endpoints that ever missed.
+    pub fn fills(&self) -> usize {
+        self.fills.load(Ordering::SeqCst)
+    }
+
+    /// Answer "best config for this endpoint". Hits return the stored
+    /// entry; misses run one bounded profile search (concurrent misses
+    /// for the same endpoint share it) and persist the result.
+    pub fn query(&self, key: &ServeKey) -> Result<QueryOutcome, ServeError> {
+        // re-resolve: keys are plain data, so a hand-built or imported
+        // key must be validated before it can reach the search path
+        let key = ServeKey::resolve(&key.benchmark, &key.gpu, &key.input)?;
+        if let Some(entry) = self.store.get(&key) {
+            return Ok(QueryOutcome {
+                key,
+                entry,
+                hit: true,
+            });
+        }
+        let (entry, ran) = self
+            .inflight
+            .get_or_init_tracked(&key, || self.search(&key));
+        if ran {
+            self.fills.fetch_add(1, Ordering::SeqCst);
+            self.store.put(&key, &entry)?;
+        }
+        Ok(QueryOutcome {
+            key,
+            entry,
+            hit: !ran,
+        })
+    }
+
+    /// The miss path: bounded profile search over the shared recording
+    /// and prediction matrix, seeded purely by the endpoint key.
+    fn search(&self, key: &ServeKey) -> TuningEntry {
+        let bench =
+            benchmarks::by_name(&key.benchmark).expect("resolved serve key");
+        let gpu = GpuSpec::by_name(&key.gpu).expect("resolved serve key");
+        let input = benchmarks::resolve_input(bench.as_ref(), &key.input)
+            .expect("resolved serve key");
+        let rec = benchmarks::cached_space(bench.as_ref(), &gpu, &input);
+        let matrix = benchmarks::cached_matrix(bench.as_ref(), &gpu, &input);
+        let thr = rec.best_time() * 1.1;
+        let seed = stream_seed(
+            self.cfg.base_seed,
+            &[&key.benchmark, &key.gpu, &key.input, "serve"],
+            0,
+        );
+        let choice =
+            searcher_choice("profile", &matrix, inst_reaction_for(bench.as_ref()));
+        let result = Tuner::replay(rec, gpu, CostModel::default())
+            .with_budget(Budget::until(thr, self.cfg.max_tests))
+            .with_seed(seed)
+            .run(choice);
+        TuningEntry {
+            config: result.best_config.0.clone(),
+            best_ms: result.best_ms,
+            tests: result.tests,
+            profiled_tests: result.profiled_tests,
+            cost_s: result.cost_s,
+            searcher: "profile".to_string(),
+            max_tests: self.cfg.max_tests,
+            base_seed: self.cfg.base_seed,
+            plan_hash: recipe_hash(key, &self.cfg),
+            provenance: Provenance::from_env(),
+        }
+    }
+}
+
+/// The entry's identity: FNV-1a over the canonical search recipe, same
+/// scheme as the experiment reports — a pure function of *what was
+/// asked for*, identical across thread counts, machines and reruns.
+fn recipe_hash(key: &ServeKey, cfg: &ServeConfig) -> String {
+    let mut fields = key.to_fields();
+    fields.extend(vec![
+        ("base_seed", Value::from(cfg.base_seed.to_string())),
+        ("max_tests", Value::from(cfg.max_tests)),
+        ("searcher", Value::from("profile")),
+    ]);
+    plan_hash(TUNING_STORE_SCHEMA, &obj(fields))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key() -> ServeKey {
+        ServeKey::resolve("coulomb", "gtx1070", "default").unwrap()
+    }
+
+    #[test]
+    fn resolve_canonicalizes_and_validates() {
+        let k = ServeKey::resolve("Coulomb", "GTX-1070", "default").unwrap();
+        assert_eq!(k, key());
+        assert!(matches!(
+            ServeKey::resolve("nope", "gtx1070", "default"),
+            Err(ServeError::Plan(PlanError::UnknownBenchmark(_)))
+        ));
+        assert!(matches!(
+            ServeKey::resolve("gemm-full", "gtx1070", "default"),
+            Err(ServeError::Plan(PlanError::NoRecording(_)))
+        ));
+        assert!(matches!(
+            ServeKey::resolve("coulomb", "gtx9999", "default"),
+            Err(ServeError::Plan(PlanError::UnknownGpu(_)))
+        ));
+        assert!(matches!(
+            ServeKey::resolve("coulomb", "gtx1070", "no-such-input"),
+            Err(ServeError::Plan(PlanError::UnknownInput(_, _)))
+        ));
+    }
+
+    #[test]
+    fn miss_then_hit_returns_identical_entry() {
+        let engine = ServeEngine::new(
+            Arc::new(MemTuningStore::new()),
+            ServeConfig {
+                base_seed: 11,
+                max_tests: 60,
+            },
+        );
+        let k = key();
+        let first = engine.query(&k).unwrap();
+        assert!(!first.hit);
+        assert_eq!(engine.fills(), 1);
+        let second = engine.query(&k).unwrap();
+        assert!(second.hit);
+        assert_eq!(engine.fills(), 1);
+        assert_eq!(first.entry, second.entry);
+        assert!(!first.entry.config.is_empty());
+        assert!(first.entry.best_ms.is_finite());
+    }
+
+    #[test]
+    fn entries_are_pure_functions_of_key_and_config() {
+        let cfg = ServeConfig {
+            base_seed: 5,
+            max_tests: 60,
+        };
+        let a = ServeEngine::new(Arc::new(MemTuningStore::new()), cfg.clone());
+        let b = ServeEngine::new(Arc::new(MemTuningStore::new()), cfg);
+        assert_eq!(
+            a.query(&key()).unwrap().entry,
+            b.query(&key()).unwrap().entry
+        );
+    }
+
+    #[test]
+    fn entry_json_round_trips() {
+        let engine = ServeEngine::new(
+            Arc::new(MemTuningStore::new()),
+            ServeConfig::default(),
+        );
+        let out = engine.query(&key()).unwrap();
+        let v = out.entry.to_json(&out.key);
+        let (k2, e2) = TuningEntry::from_json(&v).unwrap();
+        assert_eq!(k2, out.key);
+        assert_eq!(e2, out.entry);
+    }
+
+    #[test]
+    fn import_rejects_wrong_schema() {
+        let store = MemTuningStore::new();
+        let doc = obj(vec![
+            ("entries", Value::Arr(vec![])),
+            ("schema", Value::from("pcat-tuning-store/v0")),
+        ]);
+        assert!(matches!(
+            import_store(&store, &doc),
+            Err(ServeError::UnknownSchema(_))
+        ));
+    }
+
+    #[test]
+    fn export_import_round_trip_is_byte_identical() {
+        let store = MemTuningStore::new();
+        let engine =
+            ServeEngine::new(Arc::new(MemTuningStore::new()), ServeConfig {
+                base_seed: 3,
+                max_tests: 60,
+            });
+        let out = engine.query(&key()).unwrap();
+        store.put(&out.key, &out.entry).unwrap();
+        let doc = export_store(&store);
+        let twin = MemTuningStore::new();
+        assert_eq!(import_store(&twin, &doc).unwrap(), 1);
+        assert_eq!(
+            render_store(&export_store(&twin)),
+            render_store(&doc)
+        );
+        assert_eq!(twin.get(&out.key).unwrap(), out.entry);
+    }
+}

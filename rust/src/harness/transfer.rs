@@ -574,7 +574,7 @@ fn run_transfer_job(
             .with_budget(budget)
             .with_seed(seed)
             .run(choice);
-        let stats = stats.lock().unwrap().clone();
+        let stats = crate::util::sync::lock_unpoisoned(&stats).clone();
         (result, Some(stats))
     } else {
         let result = Tuner::replay(

@@ -31,6 +31,14 @@
 //! pcat registry compare --baseline baseline.csv [--registry PATH] \
 //!              [--plan NAME]
 //! pcat registry hash <report.json>
+//! pcat serve   [--smoke] [--jobs N] [--seed S] [--requests R] \
+//!              [--benchmarks a,b] [--gpus x,y] [--inputs i,j] \
+//!              [--zipf S] [--miss-ratio F] [--budget B] [--store PATH] \
+//!              [--out SERVE_REPORT.json]
+//! pcat serve-query --benchmark gemm [--gpu gtx1070] [--input NAME] \
+//!              [--store PATH] [--seed S] [--budget B]
+//! pcat cache export --store PATH [--out store.json]
+//! pcat cache import <store.json> --store PATH
 //! ```
 //!
 //! `matrix` runs an [`ExperimentPlan`] (benchmark × GPU × input ×
@@ -81,11 +89,23 @@
 //! baseline under typed per-KPI tolerances and exits nonzero on any
 //! out-of-tolerance KPI, and `hash` prints a report's plan hash.
 //!
+//! `serve` runs the tuning-as-a-service load generator: a seeded Zipf
+//! request mix over the benchmark × GPU × input endpoint universe
+//! against a [`pcat::harness::ServeEngine`], reporting throughput, hit
+//! rate and p50/p95/p99 (simulated) latency as the registry-stamped
+//! `SERVE_REPORT.json` — byte-identical at any `--jobs`. `--store PATH`
+//! backs the engine with a persistent JSON store instead of memory.
+//! `--smoke` is gated against `rust/testdata/serve_golden.json`.
+//! `serve-query` answers one endpoint query (search-on-miss, persisted
+//! when `--store` is given); `cache export|import` moves a store
+//! between files for pre-warming deployments.
+//!
 //! (clap is unavailable in the offline build; flags are parsed by hand.)
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -93,10 +113,12 @@ use pcat::benchmarks::{self, cached_space, Benchmark};
 use pcat::coordinator::{SearcherChoice, Tuner};
 use pcat::gpusim::GpuSpec;
 use pcat::harness::{
-    model_quality_matrix, robustness_table, run_experiment, run_plan,
-    run_sweep_plan, run_transfer_plan, sweep_matrix, transfer_input_matrix,
-    transfer_matrix, ExperimentOpts, ExperimentPlan, ModelSource, SweepPlan,
-    TransferPlan, ALL_EXPERIMENTS,
+    export_store, import_store, model_quality_matrix, render_store,
+    robustness_table, run_experiment, run_load_plan, run_plan, run_sweep_plan,
+    run_transfer_plan, sweep_matrix, transfer_input_matrix, transfer_matrix,
+    ExperimentOpts, ExperimentPlan, JsonFileStore, LoadPlan, MemTuningStore,
+    ModelSource, ServeConfig, ServeEngine, ServeKey, SweepPlan, TransferPlan,
+    TuningStore, ALL_EXPERIMENTS,
 };
 use pcat::model::{
     dataset_from_recorded, DecisionTreeModel, OracleModel, PrecomputedModel,
@@ -263,6 +285,9 @@ fn run() -> Result<()> {
         Some("transfer") => cmd_transfer(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("registry") => cmd_registry(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("serve-query") => cmd_serve_query(&args),
+        Some("cache") => cmd_cache(&args),
         Some("diag") => cmd_diag(&args),
         _ => {
             eprintln!("{}", HELP);
@@ -293,7 +318,15 @@ tiny CI sweep)\n  \
 registry    append-only experiment registry + KPI trend gate\n              \
 (append <report.json> | query [--plan P] [--kpi K] |\n              \
 compare --baseline rows.csv | hash <report.json>;\n              \
---registry PATH, default registry/pcat.csv)\n\nglobal \
+--registry PATH, default registry/pcat.csv)\n  \
+serve       tuning-as-a-service load generator: seeded Zipf request mix\n              \
+against the persistent tuning cache; writes SERVE_REPORT.json\n              \
+with throughput/hit-rate/latency-percentile KPIs (--smoke = the\n              \
+tiny CI workload; --store PATH = persistent JSON store)\n  \
+serve-query answer one (benchmark, GPU, input) -> best-config query,\n              \
+searching on miss (--store PATH persists the answer)\n  \
+cache       export | import a tuning store file for pre-warming\n              \
+(export --store PATH [--out FILE] | import <FILE> --store PATH)\n\nglobal \
 flags: --jobs N caps worker threads (results are identical at any N).\nOther \
 flags are shown in main.rs docs and README.";
 
@@ -802,6 +835,152 @@ fn cmd_registry(args: &Args) -> Result<()> {
     }
 }
 
+/// Pick the tuning-store backend shared by the serving subcommands:
+/// `--store PATH` opens (or creates) a persistent JSON store, no flag
+/// means in-memory.
+fn store_arg(args: &Args) -> Result<Arc<dyn TuningStore>> {
+    Ok(match args.get("store") {
+        Some(path) => Arc::new(JsonFileStore::open(&PathBuf::from(path))?),
+        None => Arc::new(MemTuningStore::new()),
+    })
+}
+
+/// Run the tuning-as-a-service load generator ([`LoadPlan`]) and write
+/// the deterministic `SERVE_REPORT.json`.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let seed = args.num("seed", 0u64)?;
+    let plan = if args.get("smoke").is_some() {
+        LoadPlan::smoke(seed)
+    } else {
+        let base = LoadPlan::full(seed);
+        LoadPlan {
+            benchmarks: canon_benchmarks(axis_arg(
+                args,
+                "benchmarks",
+                &base.benchmarks,
+            )),
+            gpus: canon_gpus(axis_arg(args, "gpus", &base.gpus)),
+            // selectors resolve per benchmark (same contract as the
+            // plan runners), so they are deliberately NOT canonicalized
+            inputs: axis_arg(args, "inputs", &base.inputs),
+            requests: args.num("requests", base.requests)?,
+            zipf_s: args.num("zipf", base.zipf_s)?,
+            miss_ratio: args.num("miss-ratio", base.miss_ratio)?,
+            max_tests: args.num("budget", base.max_tests)?,
+            ..base
+        }
+    };
+    let jobs = jobs_arg(args)?;
+    let store = store_arg(args)?;
+    let out = PathBuf::from(
+        args.get("out").unwrap_or("results/SERVE_REPORT.json"),
+    );
+
+    let t0 = std::time::Instant::now();
+    let report = run_load_plan(&plan, store, jobs)?;
+    report.write_to(&out)?;
+
+    println!(
+        "served {} requests on {jobs} worker(s) in {:.1}s -> {}",
+        plan.requests,
+        t0.elapsed().as_secs_f64(),
+        out.display()
+    );
+    for line in report.summary_lines() {
+        println!("  {line}");
+    }
+    Ok(())
+}
+
+/// Answer one endpoint query through the serve engine: store hit, or a
+/// bounded profile search persisted back to the store.
+fn cmd_serve_query(args: &Args) -> Result<()> {
+    let benchmark = args.need("benchmark")?;
+    let gpu = args.get("gpu").unwrap_or("gtx1070");
+    let input = args
+        .get("input")
+        .unwrap_or(benchmarks::DEFAULT_INPUT_SELECTOR);
+    let key = ServeKey::resolve(benchmark, gpu, input)?;
+    let engine = ServeEngine::new(store_arg(args)?, ServeConfig {
+        base_seed: args.num("seed", 0u64)?,
+        max_tests: args.num("budget", 400usize)?,
+    });
+    let out = engine.query(&key)?;
+    println!(
+        "{}: {} — best {:.4} ms after {} tests ({} profiled), \
+         search cost {:.1}s",
+        out.key,
+        if out.hit { "cache hit" } else { "miss, searched" },
+        out.entry.best_ms,
+        out.entry.tests,
+        out.entry.profiled_tests,
+        out.entry.cost_s,
+    );
+    let bench = benchmarks::by_name(&out.key.benchmark)
+        .ok_or_else(|| anyhow!("unknown benchmark in key"))?;
+    print!("  config:");
+    for (p, v) in bench.space().params.iter().zip(&out.entry.config) {
+        print!(" {}={}", p.name, v);
+    }
+    println!();
+    println!(
+        "  plan_hash {}  (searcher {}, budget {}, seed {})",
+        out.entry.plan_hash,
+        out.entry.searcher,
+        out.entry.max_tests,
+        out.entry.base_seed,
+    );
+    Ok(())
+}
+
+/// Move a tuning store between files (`pcat cache export|import`) so a
+/// deployment can ship pre-warmed answers.
+fn cmd_cache(args: &Args) -> Result<()> {
+    use pcat::util::json;
+
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("export") => {
+            let store =
+                JsonFileStore::open(&PathBuf::from(args.need("store")?))?;
+            let text = render_store(&export_store(&store));
+            match args.get("out") {
+                Some(path) => {
+                    std::fs::write(path, &text)
+                        .map_err(|e| anyhow!("writing {path}: {e}"))?;
+                    println!(
+                        "exported {} entr{} -> {path}",
+                        store.len(),
+                        if store.len() == 1 { "y" } else { "ies" },
+                    );
+                }
+                None => print!("{text}"),
+            }
+            Ok(())
+        }
+        Some("import") => {
+            let doc_path = args.positional.get(2).ok_or_else(|| {
+                anyhow!("usage: pcat cache import <store.json> --store PATH")
+            })?;
+            let text = std::fs::read_to_string(doc_path)
+                .map_err(|e| anyhow!("reading {doc_path}: {e}"))?;
+            let doc = json::parse(&text)
+                .map_err(|e| anyhow!("parsing {doc_path}: {e}"))?;
+            let store =
+                JsonFileStore::open(&PathBuf::from(args.need("store")?))?;
+            let n = import_store(&store, &doc)?;
+            println!(
+                "imported {n} entr{} -> {}",
+                if n == 1 { "y" } else { "ies" },
+                store.path().display()
+            );
+            Ok(())
+        }
+        other => {
+            bail!("unknown cache action {other:?}; expected export|import")
+        }
+    }
+}
+
 /// Hidden diagnostic: random vs profile-with-oracle steps on one
 /// (benchmark, gpu, input) cell, plus a look at the best configs and the
 /// score rank the searcher assigns them.
@@ -842,8 +1021,7 @@ fn cmd_diag(args: &Args) -> Result<()> {
         order.sort_by(|&a, &b| {
             rec.records[a]
                 .runtime_ms
-                .partial_cmp(&rec.records[b].runtime_ms)
-                .unwrap()
+                .total_cmp(&rec.records[b].runtime_ms)
         });
         order[rec.space.len() / 2]
     };

@@ -67,7 +67,7 @@ impl Executor {
         for _ in 0..reps.max(1) {
             times.push(self.run_once()?);
         }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times.sort_by(f64::total_cmp);
         Ok(times[times.len() / 2])
     }
 }

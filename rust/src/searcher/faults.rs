@@ -260,7 +260,11 @@ impl<E: EvalEnv> FaultyEnv<E> {
     }
 
     fn note_failure(&self, wasted_s: f64) {
-        let mut s = self.stats.lock().unwrap();
+        // lock_unpoisoned: a worker panicking elsewhere (e.g. a hostile
+        // recording) must not cascade into every later stats update —
+        // the counters are consistent at every point a panic can unwind
+        // through.
+        let mut s = crate::util::sync::lock_unpoisoned(&self.stats);
         s.failed_runs += 1;
         s.wasted_cost_s += wasted_s;
     }
@@ -299,7 +303,8 @@ impl<E: EvalEnv> EvalEnv for FaultyEnv<E> {
             {
                 self.note_failure(self.inner.cost_so_far() - before);
                 if attempt < attempts {
-                    self.stats.lock().unwrap().retries += 1;
+                    crate::util::sync::lock_unpoisoned(&self.stats)
+                        .retries += 1;
                     continue;
                 }
                 return Measurement::failed(MeasureOutcome::Failed {

@@ -4,6 +4,20 @@
 
 use crate::util::rng::Rng;
 
+/// Finite values of `xs`, sorted with the IEEE total order.
+///
+/// Fault-injected runs can carry `inf` (timed-out configs) and `NaN`
+/// (failed counter reads) into aggregation; `partial_cmp(..).unwrap()`
+/// panics on the first NaN and a single `inf` observation would
+/// swallow every quantile above it. Order statistics therefore reduce
+/// over the finite observations only — a report must degrade, never
+/// crash, when a cell is hostile.
+fn finite_sorted(xs: &[f64]) -> Vec<f64> {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    v.sort_by(f64::total_cmp);
+    v
+}
+
 /// Arithmetic mean; 0.0 for an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -23,13 +37,13 @@ pub fn stddev(xs: &[f64]) -> f64 {
         .sqrt()
 }
 
-/// Median (copies + sorts).
+/// Median of the finite values (copies + sorts); 0.0 when none are
+/// finite.
 pub fn median(xs: &[f64]) -> f64 {
-    if xs.is_empty() {
+    let v = finite_sorted(xs);
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -38,14 +52,14 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
-/// Linearly interpolated quantile, `q` in [0, 1]; 0.0 for an empty
-/// slice. Copies + sorts, so the result is invariant to input order.
+/// Linearly interpolated quantile of the finite values, `q` in
+/// [0, 1]; 0.0 when none are finite. Copies + sorts, so the result is
+/// invariant to input order.
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
-    if xs.is_empty() {
+    let v = finite_sorted(xs);
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -71,18 +85,18 @@ pub fn quantile(xs: &[f64], q: f64) -> f64 {
 /// order — the transfer report's byte-identity contract depends on
 /// this.
 ///
-/// Empty input returns `(0.0, 0.0)`.
+/// Non-finite observations are dropped before resampling; input with
+/// no finite values returns `(0.0, 0.0)`.
 pub fn bootstrap_ci(
     xs: &[f64],
     iters: usize,
     confidence: f64,
     seed: u64,
 ) -> (f64, f64) {
-    if xs.is_empty() {
+    let sorted = finite_sorted(xs);
+    if sorted.is_empty() {
         return (0.0, 0.0);
     }
-    let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let m = median(&sorted);
     if sorted.len() == 1 || iters == 0 {
         return (m, m);
@@ -215,6 +229,35 @@ mod tests {
         assert_eq!(bootstrap_ci(&[5.0], 100, 0.95, 0), (5.0, 5.0));
         let (lo, hi) = bootstrap_ci(&[2.0, 2.0, 2.0], 100, 0.95, 0);
         assert_eq!((lo, hi), (2.0, 2.0));
+    }
+
+    #[test]
+    fn hostile_cell_with_non_finite_observations_aggregates() {
+        // Regression: a hostile-profile cell can hand aggregation a mix
+        // of real runtimes, timed-out configs (inf) and failed counter
+        // reads (NaN). partial_cmp(..).unwrap() panicked here; now the
+        // non-finite observations are filtered before reduction.
+        let cell = [
+            3.0,
+            f64::NAN,
+            1.0,
+            f64::INFINITY,
+            2.0,
+            f64::NEG_INFINITY,
+            4.0,
+        ];
+        assert_eq!(median(&cell), 2.5);
+        assert_eq!(quantile(&cell, 0.0), 1.0);
+        assert_eq!(quantile(&cell, 1.0), 4.0);
+        let m = median(&cell);
+        let (lo, hi) = bootstrap_ci(&cell, 200, 0.95, 7);
+        assert!(lo.is_finite() && hi.is_finite());
+        assert!(lo <= m && m <= hi);
+        // all-hostile input degrades to the empty-slice behaviour
+        let dead = [f64::NAN, f64::INFINITY];
+        assert_eq!(median(&dead), 0.0);
+        assert_eq!(quantile(&dead, 0.99), 0.0);
+        assert_eq!(bootstrap_ci(&dead, 100, 0.95, 0), (0.0, 0.0));
     }
 
     #[test]

@@ -1,0 +1,163 @@
+//! Poison-tolerant synchronization primitives for long-lived serving
+//! processes.
+//!
+//! A `std::sync::Mutex` is *poisoned* when a thread panics while
+//! holding it; every later `.lock().unwrap()` then panics too, turning
+//! one crashed worker into a process-wide cascade. All mutexes in this
+//! crate guard state that is left consistent at every await-free point
+//! (counters, insert-only maps), so recovery is always safe:
+//! [`lock_unpoisoned`] simply takes the inner guard and carries on.
+//!
+//! [`OnceMap`] packages the crate's recurring "exactly-once per key"
+//! pattern (the map lock is held only to hand out a per-key
+//! [`OnceLock`] slot, so distinct keys initialize in parallel while
+//! racing requests for the same key block on one initialization) with
+//! poison recovery built in.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+///
+/// Only sound when the guarded state is consistent at every point a
+/// panic can unwind through — true for all mutexes in this crate
+/// (insert-only maps and plain counters).
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// A concurrent map whose values are initialized exactly once per key.
+///
+/// `get_or_init` holds the map lock only long enough to hand out the
+/// key's [`OnceLock`] slot; the (possibly expensive) initializer runs
+/// outside it, so distinct keys fill in parallel while racing callers
+/// for the same key block on a single initialization. A panicking
+/// initializer leaves the slot empty ([`OnceLock`] semantics) and the
+/// map unpoisoned, so the key can simply be retried.
+pub struct OnceMap<K, V> {
+    map: OnceLock<Mutex<HashMap<K, Arc<OnceLock<V>>>>>,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> OnceMap<K, V> {
+    pub const fn new() -> Self {
+        OnceMap { map: OnceLock::new() }
+    }
+
+    fn slot(&self, key: &K) -> Arc<OnceLock<V>> {
+        let mut map = lock_unpoisoned(self.map.get_or_init(Default::default));
+        map.entry(key.clone()).or_default().clone()
+    }
+
+    /// Fetch the value for `key`, running `init` if (and only if) no
+    /// call has successfully initialized it yet.
+    pub fn get_or_init(&self, key: &K, init: impl FnOnce() -> V) -> V {
+        self.get_or_init_tracked(key, init).0
+    }
+
+    /// Like [`OnceMap::get_or_init`], additionally reporting whether
+    /// *this* call ran the initializer (`true` exactly once per key
+    /// across all threads — the serve engine's fill accounting).
+    pub fn get_or_init_tracked(
+        &self,
+        key: &K,
+        init: impl FnOnce() -> V,
+    ) -> (V, bool) {
+        let slot = self.slot(key);
+        let mut ran = false;
+        let v = slot
+            .get_or_init(|| {
+                ran = true;
+                init()
+            })
+            .clone();
+        (v, ran)
+    }
+
+    /// The value for `key`, if some call has already initialized it.
+    pub fn get(&self, key: &K) -> Option<V> {
+        let slot = {
+            let map =
+                lock_unpoisoned(self.map.get_or_init(Default::default));
+            map.get(key).cloned()
+        }?;
+        slot.get().cloned()
+    }
+
+    /// Number of keys with a slot (including any still initializing).
+    pub fn len(&self) -> usize {
+        lock_unpoisoned(self.map.get_or_init(Default::default)).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Default for OnceMap<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn initializes_exactly_once_across_threads() {
+        let map: OnceMap<u32, u64> = OnceMap::new();
+        let runs = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for k in 0..4u32 {
+                        let (v, _) = map.get_or_init_tracked(&k, || {
+                            runs.fetch_add(1, Ordering::SeqCst);
+                            u64::from(k) * 10
+                        });
+                        assert_eq!(v, u64::from(k) * 10);
+                    }
+                });
+            }
+        });
+        assert_eq!(runs.load(Ordering::SeqCst), 4);
+        assert_eq!(map.len(), 4);
+        assert_eq!(map.get(&2), Some(20));
+        assert_eq!(map.get(&9), None);
+    }
+
+    #[test]
+    fn panicking_initializer_is_retryable() {
+        let map: OnceMap<&'static str, u32> = OnceMap::new();
+        let attempt = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                map.get_or_init(&"k", || panic!("injected init failure"))
+            }),
+        );
+        assert!(attempt.is_err());
+        // The slot is still empty, not stuck: the next caller fills it.
+        let (v, ran) = map.get_or_init_tracked(&"k", || 7);
+        assert!(ran);
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn poisoned_map_lock_is_recovered() {
+        let map: OnceMap<&'static str, u32> = OnceMap::new();
+        map.get_or_init(&"before", || 1);
+        // Poison the map mutex: panic while holding the guard.
+        std::thread::scope(|s| {
+            let h = s.spawn(|| {
+                let _g = map.map.get_or_init(Default::default).lock();
+                panic!("injected poisoning panic");
+            });
+            assert!(h.join().is_err());
+        });
+        // Every operation still works on the recovered guard.
+        assert_eq!(map.get(&"before"), Some(1));
+        assert_eq!(map.get_or_init(&"after", || 2), 2);
+        assert_eq!(map.len(), 2);
+    }
+}

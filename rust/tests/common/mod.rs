@@ -6,7 +6,7 @@ use std::path::Path;
 /// The one golden-file protocol every CI smoke lane shares
 /// (`smoke_golden.json`, `transfer_golden.json`,
 /// `transfer_tree_golden.json`, `sweep_golden.json`,
-/// `faults_golden.json`):
+/// `faults_golden.json`, `serve_golden.json`):
 ///
 /// * a committed golden is byte-compared — drift fails the test (and
 ///   the workflow's dedicated smoke step);

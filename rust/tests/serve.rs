@@ -1,0 +1,273 @@
+//! Invariants of the tuning-as-a-service layer (`pcat serve` /
+//! `serve-query` / `cache export|import`):
+//!
+//! * a load run's `SERVE_REPORT.json` is byte-identical for `--jobs 1`
+//!   and `--jobs 8` — hit/miss accounting is logical (first-occurrence
+//!   over the seeded mix) and latencies are simulated, so scheduling
+//!   never leaks into the report;
+//! * hammering one engine from many threads with a mixed hit/miss
+//!   query stream produces a store byte-identical to a serial replay,
+//!   with **exactly one** search per cold endpoint (the fills counter
+//!   equals the unique-cold-key count, and exactly one call per
+//!   endpoint observes `hit == false`);
+//! * `cache export` bytes equal the [`JsonFileStore`] file bytes, and
+//!   an export → import cycle answers the same queries with identical
+//!   configs, zero new searches, and each space recorded exactly once
+//!   per process;
+//! * the smoke report matches the checked-in golden
+//!   (`rust/testdata/serve_golden.json`, same bless/bootstrap protocol
+//!   as the other goldens).
+
+mod common;
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use common::golden_gate;
+use pcat::benchmarks::{self, recorded_count};
+use pcat::gpusim::GpuSpec;
+use pcat::harness::{
+    export_store, import_store, render_store, run_load_plan, JsonFileStore,
+    LoadPlan, MemTuningStore, ServeConfig, ServeEngine, ServeKey, TuningStore,
+};
+
+/// The smoke workload, pinned here so test expectations stay honest
+/// about its shape: 2 benchmarks × 2 GPUs × the default input = 4
+/// endpoints, half pre-warmed, 400 Zipf(1.0) requests.
+fn smoke() -> LoadPlan {
+    let plan = LoadPlan::smoke(0);
+    assert_eq!(plan.benchmarks, vec!["coulomb", "transpose"]);
+    assert_eq!(plan.gpus, vec!["gtx1070", "gtx750"]);
+    assert_eq!(plan.requests, 400);
+    assert_eq!(plan.miss_ratio, 0.5);
+    plan
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pcat_serve_test_{name}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn serve_reports_identical_for_jobs_1_and_jobs_8() {
+    let plan = smoke();
+    let serial = run_load_plan(&plan, Arc::new(MemTuningStore::new()), 1)
+        .unwrap()
+        .to_pretty_string();
+    let parallel = run_load_plan(&plan, Arc::new(MemTuningStore::new()), 8)
+        .unwrap()
+        .to_pretty_string();
+    assert_eq!(
+        serial, parallel,
+        "serve reports must be a pure function of plan + seed"
+    );
+    // and stable across repeated runs in the same process (the global
+    // recording cache is warm the second time — must not matter)
+    let repeat = run_load_plan(&plan, Arc::new(MemTuningStore::new()), 8)
+        .unwrap()
+        .to_pretty_string();
+    assert_eq!(parallel, repeat);
+}
+
+#[test]
+fn serve_accounting_is_exact() {
+    let plan = smoke();
+    let report = run_load_plan(&plan, Arc::new(MemTuningStore::new()), 4)
+        .unwrap();
+    let r = &report.results;
+    assert_eq!(r.requests, plan.requests);
+    assert_eq!(r.hits + r.misses, r.requests);
+    // the exactly-once invariant, re-checked from the outside
+    assert_eq!(r.fills, r.misses);
+    // miss_ratio 0.5 over 4 endpoints: 2 pre-warmed, and with 400
+    // requests over 4 endpoints every cold endpoint is touched
+    assert_eq!(r.prewarmed, 2);
+    assert_eq!(r.fills, 2);
+    assert_eq!(report.endpoints.len(), 4);
+    // every endpoint was answered, so none is cold in the report
+    for e in &report.endpoints {
+        assert!(e.best_ms.is_some(), "{} never answered", e.key);
+        assert!(e.config.is_some());
+        assert_eq!(e.hits + e.misses, e.requests);
+    }
+    // simulated latency ordering: a miss pays the search on top of the
+    // hit latency, so p99 >= p50 and the mean sits between
+    assert!(r.p50_latency_s <= r.p95_latency_s);
+    assert!(r.p95_latency_s <= r.p99_latency_s);
+    assert!(r.p50_latency_s > 0.0);
+    assert!(r.throughput_rps > 0.0);
+}
+
+/// N threads hammer one engine with a mixed hit/miss stream; the
+/// resulting store must be byte-identical to a serial replay of the
+/// same stream, with exactly one search per cold endpoint.
+#[test]
+fn concurrent_hammer_matches_serial_reference() {
+    let cfg = ServeConfig {
+        base_seed: 42,
+        max_tests: 60,
+    };
+    let keys: Vec<ServeKey> = [
+        ("coulomb", "gtx1070"),
+        ("coulomb", "gtx750"),
+        ("transpose", "gtx1070"),
+        ("transpose", "gtx750"),
+    ]
+    .iter()
+    .map(|(b, g)| ServeKey::resolve(b, g, "default").unwrap())
+    .collect();
+    // mixed stream: every thread walks the keys at its own stride, so
+    // each endpoint sees first-query races and plenty of repeat hits
+    let hammer = ServeEngine::new(Arc::new(MemTuningStore::new()), cfg.clone());
+    let n_threads = 8;
+    let per_thread = 25;
+    let miss_flags: Vec<bool> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_threads)
+            .map(|t| {
+                let engine = &hammer;
+                let keys = &keys;
+                s.spawn(move || {
+                    let mut flags = Vec::new();
+                    for i in 0..per_thread {
+                        let key = &keys[(t + i) % keys.len()];
+                        let out = engine.query(key).unwrap();
+                        flags.push(!out.hit);
+                    }
+                    flags
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect()
+    });
+    // exactly one call per endpoint ran the search, no matter how many
+    // threads raced on it
+    let searched = miss_flags.iter().filter(|&&m| m).count();
+    assert_eq!(searched, keys.len());
+    assert_eq!(hammer.fills(), keys.len());
+
+    // serial reference over the same endpoints
+    let serial = ServeEngine::new(Arc::new(MemTuningStore::new()), cfg);
+    for key in &keys {
+        serial.query(key).unwrap();
+        serial.query(key).unwrap(); // second query must hit
+    }
+    assert_eq!(serial.fills(), keys.len());
+    let a = render_store(&export_store(hammer.store().as_ref()));
+    let b = render_store(&export_store(serial.store().as_ref()));
+    assert_eq!(a, b, "concurrent store diverged from serial reference");
+}
+
+#[test]
+fn export_import_cycle_prewarms_a_fresh_engine() {
+    let dir = fresh_dir("roundtrip");
+    let store_path = dir.join("store.json");
+    let cfg = ServeConfig {
+        base_seed: 7,
+        max_tests: 60,
+    };
+
+    // fill a persistent store through the ordinary query path
+    let keys: Vec<ServeKey> = [
+        ("coulomb", "gtx1070"),
+        ("transpose", "gtx1070"),
+    ]
+    .iter()
+    .map(|(b, g)| ServeKey::resolve(b, g, "default").unwrap())
+    .collect();
+    let engine = ServeEngine::new(
+        Arc::new(JsonFileStore::open(&store_path).unwrap()),
+        cfg.clone(),
+    );
+    let mut configs = Vec::new();
+    for key in &keys {
+        let out = engine.query(key).unwrap();
+        assert!(!out.hit);
+        configs.push(out.entry.config.clone());
+    }
+    assert_eq!(engine.fills(), keys.len());
+
+    // the store file IS the export: byte-for-byte
+    let file_bytes = std::fs::read_to_string(&store_path).unwrap();
+    let export_bytes =
+        render_store(&export_store(engine.store().as_ref()));
+    assert_eq!(file_bytes, export_bytes);
+
+    // import into a fresh in-memory store: same queries are all hits,
+    // zero new searches, identical configs
+    let doc = pcat::util::json::parse(&file_bytes).unwrap();
+    let warm = MemTuningStore::new();
+    assert_eq!(import_store(&warm, &doc).unwrap(), keys.len());
+    let prewarmed = ServeEngine::new(Arc::new(warm), cfg);
+    for (key, config) in keys.iter().zip(&configs) {
+        let out = prewarmed.query(key).unwrap();
+        assert!(out.hit, "{key} missed after import");
+        assert_eq!(&out.entry.config, config);
+    }
+    assert_eq!(prewarmed.fills(), 0);
+
+    // reopening the file store loads the same entries
+    let reopened = JsonFileStore::open(&store_path).unwrap();
+    assert_eq!(
+        render_store(&export_store(&reopened)),
+        export_bytes
+    );
+
+    // each missed space was recorded exactly once in this process,
+    // however many engines and tests have touched it
+    for key in &keys {
+        let bench = benchmarks::by_name(&key.benchmark).unwrap();
+        let gpu = GpuSpec::by_name(&key.gpu).unwrap();
+        let input =
+            benchmarks::resolve_input(bench.as_ref(), &key.input).unwrap();
+        assert_eq!(recorded_count(bench.as_ref(), &gpu, &input), 1);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn report_endpoints_cover_the_universe_without_duplicates() {
+    let report = run_load_plan(
+        &smoke(),
+        Arc::new(MemTuningStore::new()),
+        2,
+    )
+    .unwrap();
+    let scopes: BTreeSet<String> = report
+        .endpoints
+        .iter()
+        .map(|e| e.key.to_string())
+        .collect();
+    assert_eq!(scopes.len(), report.endpoints.len(), "duplicate endpoint");
+    assert_eq!(
+        scopes,
+        [
+            "coulomb/gtx1070:default",
+            "coulomb/gtx750:default",
+            "transpose/gtx1070:default",
+            "transpose/gtx750:default",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+    );
+}
+
+/// Golden gate, sharing the one bootstrap/CI-warn/compare protocol of
+/// all the smoke goldens ([`common::golden_gate`]).
+#[test]
+fn serve_smoke_report_matches_checked_in_golden() {
+    let got = run_load_plan(&smoke(), Arc::new(MemTuningStore::new()), 8)
+        .unwrap()
+        .to_pretty_string();
+    assert!(got.contains("\"schema\": \"pcat-serve-report/v1\""));
+    assert!(got.contains("\"hit_rate\""));
+    assert!(got.contains("\"p99_latency_s\""));
+    assert!(got.contains("\"throughput_rps\""));
+    golden_gate("serve_golden.json", &got);
+}

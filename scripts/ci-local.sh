@@ -13,15 +13,16 @@
 #   scripts/ci-local.sh bench      # cargo bench --no-run (compile only)
 #   scripts/ci-local.sh smoke      # deterministic smoke matrices (plain +
 #                                  # transfer oracle + transfer tree + sweep
-#                                  # + hostile fault profile) + golden diffs
+#                                  # + hostile fault profile + serve load
+#                                  # generator) + golden diffs
 #   scripts/ci-local.sh registry   # experiment-registry trend gate: append
-#                                  # the five smoke reports to a scratch
+#                                  # the six smoke reports to a scratch
 #                                  # registry, check the append→query
 #                                  # round-trip, compare KPIs against
 #                                  # rust/testdata/registry_baseline.csv
 #                                  # (warn-only until that baseline is
 #                                  # blessed)
-#   scripts/ci-local.sh bless      # regenerate all five goldens:
+#   scripts/ci-local.sh bless      # regenerate all six goldens:
 #                                  #   rust/testdata/smoke_golden.json
 #                                  #     (pcat matrix --smoke)
 #                                  #   rust/testdata/transfer_golden.json
@@ -39,6 +40,9 @@
 #                                  #     (pcat matrix --smoke --fault-profile
 #                                  #      hostile: deterministic fault
 #                                  #      injection + failure accounting)
+#                                  #   rust/testdata/serve_golden.json
+#                                  #     (pcat serve --smoke: the
+#                                  #      tuning-as-a-service load generator)
 #                                  # and derives the registry KPI baseline
 #                                  #   rust/testdata/registry_baseline.csv
 #                                  # from the just-blessed reports
@@ -55,6 +59,7 @@ TRANSFER_GOLDEN=rust/testdata/transfer_golden.json
 TRANSFER_TREE_GOLDEN=rust/testdata/transfer_tree_golden.json
 SWEEP_GOLDEN=rust/testdata/sweep_golden.json
 FAULTS_GOLDEN=rust/testdata/faults_golden.json
+SERVE_GOLDEN=rust/testdata/serve_golden.json
 REGISTRY_BASELINE=rust/testdata/registry_baseline.csv
 SMOKE_OUT=rust/target/smoke
 REGISTRY_SCRATCH=rust/target/registry/pcat.csv
@@ -66,8 +71,8 @@ run_test() { (cd rust && cargo test -q); }
 run_bench() { (cd rust && cargo bench --no-run); }
 
 smoke_report() {
-    # $1 = lane (matrix|transfer|transfer-tree|sweep|faults), $2 = jobs,
-    # $3 = output
+    # $1 = lane (matrix|transfer|transfer-tree|sweep|faults|serve),
+    # $2 = jobs, $3 = output
     case "$1" in
         matrix)
             rust/target/release/pcat matrix --smoke --seed 0 \
@@ -83,6 +88,9 @@ smoke_report() {
                 --seed 0 --jobs "$2" --out "$3" ;;
         sweep)
             rust/target/release/pcat sweep --smoke --seed 0 \
+                --jobs "$2" --out "$3" ;;
+        serve)
+            rust/target/release/pcat serve --smoke --seed 0 \
                 --jobs "$2" --out "$3" ;;
         *)
             echo "unknown smoke lane $1" >&2; exit 2 ;;
@@ -125,9 +133,10 @@ run_smoke() {
     smoke_gate transfer-tree "$TRANSFER_TREE_GOLDEN"
     smoke_gate sweep "$SWEEP_GOLDEN"
     smoke_gate faults "$FAULTS_GOLDEN"
+    smoke_gate serve "$SERVE_GOLDEN"
 }
 
-# Append the five smoke reports (jobs 8) to a fresh scratch registry.
+# Append the six smoke reports (jobs 8) to a fresh scratch registry.
 # The faults lane lands under its own plan name (matrix-hostile), so
 # its failure/retry KPIs get a trend series without shadowing the
 # fault-free matrix lane.
@@ -136,7 +145,7 @@ build_scratch_registry() {
     rm -f "$1"
     mkdir -p "$SMOKE_OUT"
     local lane
-    for lane in matrix transfer transfer-tree sweep faults; do
+    for lane in matrix transfer transfer-tree sweep faults serve; do
         smoke_report "$lane" 8 "$SMOKE_OUT/registry-$lane.json"
         rust/target/release/pcat registry append \
             "$SMOKE_OUT/registry-$lane.json" --registry "$1"
@@ -178,15 +187,16 @@ run_bless() {
     smoke_report transfer-tree 8 "$TRANSFER_TREE_GOLDEN"
     smoke_report sweep 8 "$SWEEP_GOLDEN"
     smoke_report faults 8 "$FAULTS_GOLDEN"
+    smoke_report serve 8 "$SERVE_GOLDEN"
     echo "blessed $GOLDEN, $TRANSFER_GOLDEN, $TRANSFER_TREE_GOLDEN," \
-         "$SWEEP_GOLDEN and $FAULTS_GOLDEN"
+         "$SWEEP_GOLDEN, $FAULTS_GOLDEN and $SERVE_GOLDEN"
     # registry KPI baseline, derived from the just-blessed reports so
     # the two artifacts can never disagree
     local bless_csv=rust/target/registry/bless.csv
     rm -f "$bless_csv"
     local report
     for report in "$GOLDEN" "$TRANSFER_GOLDEN" "$TRANSFER_TREE_GOLDEN" \
-                  "$SWEEP_GOLDEN" "$FAULTS_GOLDEN"; do
+                  "$SWEEP_GOLDEN" "$FAULTS_GOLDEN" "$SERVE_GOLDEN"; do
         rust/target/release/pcat registry append "$report" \
             --registry "$bless_csv"
     done
