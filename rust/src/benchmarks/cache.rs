@@ -22,7 +22,7 @@
 
 use std::sync::{Arc, Mutex, OnceLock};
 
-use super::{record_space, Benchmark, Input};
+use super::{by_name, record_space, Benchmark, Input, OnDemandRecorder};
 use crate::gpusim::GpuSpec;
 use crate::model::PredictionMatrix;
 use crate::tuning::RecordedSpace;
@@ -37,6 +37,7 @@ type SpaceKey = (String, String, String);
 
 static CACHE: OnceMap<SpaceKey, Arc<RecordedSpace>> = OnceMap::new();
 static MATRICES: OnceMap<SpaceKey, Arc<PredictionMatrix>> = OnceMap::new();
+static RECORDERS: OnceMap<SpaceKey, Arc<OnDemandRecorder>> = OnceMap::new();
 /// How many times each key was actually recorded (test instrumentation
 /// for the exactly-once guarantee). Counts successful recordings only:
 /// a panicking recording leaves both the slot and the counter
@@ -84,6 +85,27 @@ pub fn cached_matrix(
         Arc::new(PredictionMatrix::from_recorded(&cached_space(
             bench, gpu, input,
         )))
+    })
+}
+
+/// Fetch the shared [`OnDemandRecorder`] for `(bench, gpu, input)` —
+/// the lazy counterpart of [`cached_space`], for benchmarks whose
+/// [`recording_mode`] is `OnDemand`. All concurrent jobs tuning the
+/// same endpoint share one memo, so a configuration is simulated at
+/// most once per process no matter how many searches visit it.
+///
+/// [`recording_mode`]: super::Benchmark::recording_mode
+pub fn cached_recorder(
+    bench: &dyn Benchmark,
+    gpu: &GpuSpec,
+    input: &Input,
+) -> Arc<OnDemandRecorder> {
+    let key = key_of(bench, gpu, input);
+    RECORDERS.get_or_init(&key, || {
+        let owned = by_name(bench.name()).unwrap_or_else(|| {
+            panic!("benchmark {:?} not in registry", bench.name())
+        });
+        Arc::new(OnDemandRecorder::new(owned, gpu.clone(), input.clone()))
     })
 }
 
@@ -164,6 +186,18 @@ mod tests {
         let direct =
             PredictionMatrix::from_recorded(&cached_space(&Coulomb, &gpu, &input));
         assert_eq!(a.n_configs(), direct.n_configs());
+    }
+
+    #[test]
+    fn recorder_is_shared_and_memo_is_process_wide() {
+        let gpu = GpuSpec::gtx750();
+        let input = Input::new("cache-recorder", &[64]);
+        let bench = super::super::by_name("synth-grid").unwrap();
+        let a = cached_recorder(bench.as_ref(), &gpu, &input);
+        let b = cached_recorder(bench.as_ref(), &gpu, &input);
+        assert!(Arc::ptr_eq(&a, &b));
+        let _ = a.record(42);
+        assert_eq!(b.visited(), 1, "memo must be shared through the cache");
     }
 
     /// A benchmark whose first recording panics (space enumeration

@@ -233,9 +233,11 @@ impl Benchmark for GemmFull {
     /// §4.6: in the evaluation matrices the full space is only
     /// searched (with a model trained on the reduced space); the
     /// 205k-config recording cost is reserved for the dedicated fig8
-    /// driver and must not be scheduled by a plan runner.
-    fn exhaustively_recordable(&self) -> bool {
-        false
+    /// driver. Tuning/serving plan runners now go through the
+    /// on-demand recorder instead of rejecting this benchmark;
+    /// training-based plans (transfer/sweep) still refuse it.
+    fn recording_mode(&self) -> super::RecordingMode {
+        super::RecordingMode::OnDemand
     }
 }
 

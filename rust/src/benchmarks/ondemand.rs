@@ -1,0 +1,165 @@
+//! On-demand (lazy) recording of vast tuning spaces.
+//!
+//! Eager recording ([`super::record_space`]) enumerates and simulates
+//! every configuration — O(|space|) simulator calls and O(|space|)
+//! memory before a single search step runs. That is the right trade for
+//! the paper's 10²–10⁴-config spaces, whose recordings are replayed
+//! across dozens of repetitions, but it caps the architecture far below
+//! production-sized spaces: GEMM-full (205k) was carved out entirely
+//! and a ≥1M-config space was unrepresentable.
+//!
+//! An [`OnDemandRecorder`] inverts the cost model: it holds only the
+//! space geometry (implicit spaces store *no* configurations at all —
+//! see [`Space::enumerate_implicit`]) and simulates a configuration the
+//! first time any searcher visits it, memoizing the [`Record`] so
+//! repeated visits — and concurrent jobs sharing the recorder through
+//! [`super::cached_recorder`] — pay once. Because the gpusim engine is
+//! a pure function of (GPU, workload), an on-demand record is
+//! bit-for-bit identical to the record eager recording would have
+//! produced at the same index; a property test pins that.
+//!
+//! [`Space::enumerate_implicit`]: crate::tuning::Space::enumerate_implicit
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::{Benchmark, Input};
+use crate::gpusim::{simulate, GpuSpec};
+use crate::tuning::{Record, Space};
+use crate::util::sync::lock_unpoisoned;
+
+/// Lazily simulates and memoizes records for one
+/// (benchmark, GPU, input) endpoint. Thread-safe; share via `Arc`.
+pub struct OnDemandRecorder {
+    bench: Box<dyn Benchmark>,
+    gpu: GpuSpec,
+    input: Input,
+    space: Arc<Space>,
+    memo: Mutex<HashMap<usize, Record>>,
+}
+
+impl OnDemandRecorder {
+    pub fn new(bench: Box<dyn Benchmark>, gpu: GpuSpec, input: Input) -> Self {
+        let space = Arc::new(bench.space());
+        OnDemandRecorder {
+            bench,
+            gpu,
+            input,
+            space,
+            memo: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn space(&self) -> &Space {
+        &self.space
+    }
+
+    pub fn space_arc(&self) -> Arc<Space> {
+        Arc::clone(&self.space)
+    }
+
+    pub fn gpu(&self) -> &GpuSpec {
+        &self.gpu
+    }
+
+    pub fn input(&self) -> &Input {
+        &self.input
+    }
+
+    /// The record for configuration `idx`, simulating it on first
+    /// visit. The simulation runs outside the memo lock so concurrent
+    /// visits to *different* configurations never serialize; a racing
+    /// double-simulation of the same index is harmless (pure function —
+    /// both produce identical bits) and the first insert wins.
+    pub fn record(&self, idx: usize) -> Record {
+        if let Some(r) = lock_unpoisoned(&self.memo).get(&idx) {
+            return r.clone();
+        }
+        let cfg = self.space.config_at(idx);
+        let w = self.bench.workload(&self.space, &cfg, &self.input);
+        let sim = simulate(&self.gpu, &w);
+        let rec = Record {
+            runtime_ms: sim.runtime_ms,
+            counters: sim.counters,
+        };
+        lock_unpoisoned(&self.memo)
+            .entry(idx)
+            .or_insert(rec)
+            .clone()
+    }
+
+    /// Runtime of configuration `idx` (simulating on first visit).
+    pub fn runtime_ms(&self, idx: usize) -> f64 {
+        self.record(idx).runtime_ms
+    }
+
+    /// How many distinct configurations have been simulated — the
+    /// bounded-memory acceptance metric: after a lazy tuning run this
+    /// must be ≪ |space|.
+    pub fn visited(&self) -> usize {
+        lock_unpoisoned(&self.memo).len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{by_name, record_space, Coulomb, SynthGrid};
+    use super::*;
+
+    #[test]
+    fn on_demand_records_match_eager_bit_for_bit() {
+        let gpu = GpuSpec::gtx1070();
+        let input = Coulomb.default_input();
+        let eager = record_space(&Coulomb, &gpu, &input);
+        let lazy = OnDemandRecorder::new(
+            Box::new(Coulomb),
+            gpu.clone(),
+            input.clone(),
+        );
+        for idx in (0..eager.space.len()).step_by(7) {
+            let want = &eager.records[idx];
+            let got = lazy.record(idx);
+            assert_eq!(
+                got.runtime_ms.to_bits(),
+                want.runtime_ms.to_bits(),
+                "runtime at {idx}"
+            );
+            for (g, w) in got.counters.0.iter().zip(want.counters.0.iter()) {
+                assert_eq!(g.to_bits(), w.to_bits(), "counter at {idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn memoization_counts_distinct_visits_only() {
+        let lazy = OnDemandRecorder::new(
+            Box::new(Coulomb),
+            GpuSpec::gtx750(),
+            Coulomb.default_input(),
+        );
+        let a = lazy.record(3);
+        let b = lazy.record(3);
+        assert_eq!(a.runtime_ms.to_bits(), b.runtime_ms.to_bits());
+        let _ = lazy.record(5);
+        assert_eq!(lazy.visited(), 2);
+    }
+
+    #[test]
+    fn million_config_recorder_is_cheap_until_visited() {
+        let bench = by_name("synth-grid").unwrap();
+        let lazy = OnDemandRecorder::new(
+            bench,
+            GpuSpec::rtx2080(),
+            SynthGrid.default_input(),
+        );
+        assert!(lazy.space().len() >= 1_000_000);
+        assert!(lazy.space().is_implicit());
+        assert_eq!(lazy.visited(), 0);
+        // touching a handful of far-apart indices simulates exactly those
+        for idx in [0, 999_999, 524_287, 1] {
+            let r = lazy.record(idx);
+            assert!(r.runtime_ms.is_finite() && r.runtime_ms > 0.0);
+        }
+        assert_eq!(lazy.visited(), 4);
+    }
+}

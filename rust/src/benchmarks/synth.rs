@@ -1,0 +1,164 @@
+//! Synthetic ≥1M-configuration benchmark — the large-space stress
+//! fixture behind the on-demand recording path.
+//!
+//! Not part of any paper experiment: the paper's largest space is
+//! GEMM-full (205k configs), but the follow-up tuning literature
+//! evaluates on 10⁵–10⁶+ spaces, and the serve-heavy-traffic north star
+//! needs the architecture to hold at that scale. `synth-grid` is a
+//! GEMM-like tiled kernel model over 10 four-valued parameters — a full
+//! cross product of exactly 4¹⁰ = 1,048,576 configurations, stored
+//! *implicitly* (odometer decode, zero per-config memory) so the lazy
+//! tuning path can be exercised and benchmarked without ever
+//! materializing the space.
+
+use super::{Benchmark, Input, RecordingMode};
+use crate::gpusim::Workload;
+use crate::tuning::{Config, ParamDef, Space};
+
+pub struct SynthGrid;
+
+impl Benchmark for SynthGrid {
+    fn name(&self) -> &'static str {
+        "synth-grid"
+    }
+
+    fn space(&self) -> Space {
+        // 10 params × 4 values, unconstrained: 4^10 = 1,048,576.
+        let params = vec![
+            ParamDef::new("BLOCK_X", &[8, 16, 32, 64]),
+            ParamDef::new("BLOCK_Y", &[2, 4, 8, 16]),
+            ParamDef::new("TILE_M", &[1, 2, 4, 8]),
+            ParamDef::new("TILE_N", &[1, 2, 4, 8]),
+            ParamDef::new("UNROLL", &[1, 2, 4, 8]),
+            ParamDef::new("VECTOR", &[1, 2, 4, 8]),
+            ParamDef::new("PREFETCH", &[0, 1, 2, 4]),
+            ParamDef::new("USE_SMEM", &[0, 1, 2, 3]),
+            ParamDef::new("SPLIT_K", &[1, 2, 4, 8]),
+            ParamDef::new("SWIZZLE", &[0, 1, 2, 3]),
+        ];
+        Space::enumerate_implicit("synth-grid", params)
+    }
+
+    fn default_input(&self) -> Input {
+        Input::new("4096", &[4096])
+    }
+
+    fn workload(&self, space: &Space, cfg: &Config, input: &Input) -> Workload {
+        let bx = space.value(cfg, "BLOCK_X") as f64;
+        let by = space.value(cfg, "BLOCK_Y") as f64;
+        let tm = space.value(cfg, "TILE_M") as f64;
+        let tn = space.value(cfg, "TILE_N") as f64;
+        let unroll = space.value(cfg, "UNROLL") as f64;
+        let vec = space.value(cfg, "VECTOR") as f64;
+        let pf = space.value(cfg, "PREFETCH") as f64;
+        let smem = space.value(cfg, "USE_SMEM") as f64;
+        let sk = space.value(cfg, "SPLIT_K") as f64;
+        let sw = space.value(cfg, "SWIZZLE") as f64;
+
+        let n = input.dim(0);
+        let block_size = bx * by;
+        let tile = tm * tn;
+        // each thread owns a TILE_M×TILE_N output tile; SPLIT_K
+        // parallelizes the reduction at the cost of a merge pass
+        let threads = (n * n / tile).max(1.0) * sk;
+
+        // inner-product work per thread: 2 flops per MAC over n/SPLIT_K
+        // k-steps, amortized by vector loads and unrolling
+        let k_steps = n / sk;
+        let fp32 = 2.0 * k_steps * tile;
+        let int = 12.0 + k_steps * (2.0 / unroll + 2.0 / vec) + 4.0 * sw;
+        let cont = k_steps / unroll + 8.0;
+        let ldst = k_steps * (tm + tn) / vec + tile;
+        let misc = 2.0 + pf;
+        let bconv = 2.0;
+
+        // registers: accumulator tile + staging for vector loads and
+        // prefetch double-buffers — the spill cliff lives up here
+        let regs = 14.0 + 2.0 * tile + 2.0 * vec + 3.0 * pf + smem;
+
+        // memory traffic: operand reads shrink with shared-memory
+        // blocking, writes grow with SPLIT_K partial sums
+        let reuse = 1.0 + smem * (tm + tn) / 4.0;
+        let gread = threads * k_steps * (tm + tn) * 4.0 / reuse / vec.sqrt();
+        let gwrite = n * n * 4.0 * sk;
+
+        let warp_fill = (block_size / 32.0).min(1.0);
+        let divergence = (1.0 - warp_fill) * 0.8 + 0.02;
+
+        Workload {
+            threads,
+            block_size,
+            regs_per_thread: regs,
+            fp32: fp32 * threads,
+            int: int * threads,
+            cont: cont * threads,
+            ldst: ldst * threads,
+            misc: misc * threads,
+            bconv: bconv * threads,
+            gread,
+            gwrite,
+            tex_fraction: if smem > 0.5 { 0.3 } else { 0.7 },
+            tex_footprint_per_sm: n * 4.0 * (tm + tn),
+            l2_footprint: n * n * 4.0 / reuse,
+            divergence,
+            ..Default::default()
+        }
+    }
+
+    fn recording_mode(&self) -> RecordingMode {
+        RecordingMode::OnDemand
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{simulate, GpuSpec};
+
+    #[test]
+    fn space_is_implicit_and_exceeds_a_million() {
+        let s = SynthGrid.space();
+        assert!(s.is_implicit());
+        assert_eq!(s.len(), 1 << 20);
+        assert_eq!(s.dims(), 10);
+        assert!(s.configs.is_empty(), "must not materialize configs");
+    }
+
+    #[test]
+    fn sampled_workloads_are_sane() {
+        let s = SynthGrid.space();
+        let input = SynthGrid.default_input();
+        let gpu = GpuSpec::gtx1070();
+        // a deterministic scatter across the full index range
+        for i in (0..s.len()).step_by(65_537) {
+            let cfg = s.config_at(i);
+            let w = SynthGrid.workload(&s, &cfg, &input);
+            assert!(w.threads > 0.0);
+            assert!(w.total_inst() > 0.0);
+            let sim = simulate(&gpu, &w);
+            assert!(
+                sim.runtime_ms.is_finite() && sim.runtime_ms > 0.0,
+                "bad runtime at {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn configs_actually_differ_in_performance() {
+        // the space must be non-trivial for searchers: runtimes at
+        // scattered indices should span a real range
+        let s = SynthGrid.space();
+        let input = SynthGrid.default_input();
+        let gpu = GpuSpec::rtx2080();
+        let mut lo = f64::MAX;
+        let mut hi = 0.0f64;
+        for i in (0..s.len()).step_by(131_071) {
+            let cfg = s.config_at(i);
+            let t = simulate(&gpu, &SynthGrid.workload(&s, &cfg, &input))
+                .runtime_ms;
+            lo = lo.min(t);
+            hi = hi.max(t);
+        }
+        assert!(hi / lo > 2.0, "runtime spread too flat: {lo}..{hi}");
+    }
+}

@@ -9,13 +9,13 @@
 
 use std::sync::Arc;
 
-use crate::benchmarks::{cached_space, Benchmark, Input};
+use crate::benchmarks::{cached_space, Benchmark, Input, OnDemandRecorder};
 use crate::gpusim::GpuSpec;
 use crate::model::{PredictionMatrix, TpPcModel};
 use crate::searcher::{
-    BasinHopping, Budget, CostModel, EvalEnv, ProfileSearcher,
-    RandomSearcher, ReplayEnv, Searcher, SearchTrace, SimulatedAnnealing,
-    Starchart,
+    BasinHopping, Budget, CostModel, EvalEnv, LazyProfileSearcher,
+    OnDemandEnv, ProfileSearcher, RandomSearcher, ReplayEnv, Searcher,
+    SearchTrace, SimulatedAnnealing, Starchart,
 };
 use crate::tuning::{Config, RecordedSpace};
 
@@ -36,6 +36,13 @@ pub enum SearcherChoice<'m> {
         matrix: Arc<PredictionMatrix>,
         inst_reaction: f64,
     },
+    /// Profile-based over an on-demand recorder — the large-space arm:
+    /// neighbourhood-only scoring with lazily simulated predictions,
+    /// for spaces too big to densify into a matrix.
+    ProfileLazy {
+        recorder: Arc<OnDemandRecorder>,
+        inst_reaction: f64,
+    },
     BasinHopping,
     Starchart,
     Annealing,
@@ -46,7 +53,8 @@ impl SearcherChoice<'_> {
         match self {
             SearcherChoice::Random => "random",
             SearcherChoice::Profile { .. }
-            | SearcherChoice::ProfileShared { .. } => "profile",
+            | SearcherChoice::ProfileShared { .. }
+            | SearcherChoice::ProfileLazy { .. } => "profile",
             SearcherChoice::BasinHopping => "basin_hopping",
             SearcherChoice::Starchart => "starchart",
             SearcherChoice::Annealing => "annealing",
@@ -106,6 +114,13 @@ impl Tuner {
         }
     }
 
+    /// Tune a large space lazily: configurations are simulated on
+    /// first visit through the shared on-demand recorder, so nothing
+    /// space-sized is ever materialized.
+    pub fn on_demand(recorder: Arc<OnDemandRecorder>, cost: CostModel) -> Tuner {
+        Tuner::over(Box::new(OnDemandEnv::new(recorder, cost)))
+    }
+
     /// Tune over any environment (e.g. the PJRT adapter).
     pub fn over(env: Box<dyn EvalEnv>) -> Tuner {
         Tuner {
@@ -146,6 +161,11 @@ impl Tuner {
                 inst_reaction,
             } => ProfileSearcher::shared(matrix, inst_reaction, self.seed)
                 .run(&mut *self.env, &self.budget),
+            SearcherChoice::ProfileLazy {
+                recorder,
+                inst_reaction,
+            } => LazyProfileSearcher::new(recorder, inst_reaction, self.seed)
+                .run(&mut *self.env, &self.budget),
             SearcherChoice::BasinHopping => {
                 BasinHopping::new(self.seed).run(&mut *self.env, &self.budget)
             }
@@ -170,7 +190,7 @@ impl Tuner {
         TuningResult {
             space_name: self.env.space().name.clone(),
             searcher: name,
-            best_config: self.env.space().configs[best_idx].clone(),
+            best_config: self.env.space().config_at(best_idx),
             best_ms,
             tests: trace.len(),
             profiled_tests: trace.steps.iter().filter(|s| s.profiled).count(),
@@ -248,6 +268,32 @@ mod tests {
             r.trace.steps.iter().map(|s| s.idx).collect::<Vec<_>>()
         };
         assert_eq!(idx(&a), idx(&b));
+    }
+
+    #[test]
+    fn tuner_runs_on_demand_end_to_end() {
+        let bench = crate::benchmarks::by_name("synth-grid").unwrap();
+        let recorder = crate::benchmarks::cached_recorder(
+            &*bench,
+            &GpuSpec::gtx1070(),
+            &bench.default_input(),
+        );
+        let mut t =
+            Tuner::on_demand(Arc::clone(&recorder), CostModel::default())
+                .with_budget(Budget::tests(20))
+                .with_seed(11);
+        assert!(t.space_len() > 1_000_000);
+        let r = t.run(SearcherChoice::ProfileLazy {
+            recorder: Arc::clone(&recorder),
+            inst_reaction: 0.5,
+        });
+        assert_eq!(r.tests, 20);
+        assert_eq!(r.searcher, "profile");
+        assert_eq!(r.best_config.len(), 10);
+        assert!(r.best_ms.is_finite());
+        // On-demand means only the visited corner of the space was
+        // ever simulated.
+        assert!(recorder.visited() < 10_000);
     }
 
     #[test]

@@ -25,14 +25,16 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::benchmarks::{self, cached_space};
+use crate::benchmarks::{
+    self, cached_recorder, cached_space, OnDemandRecorder, RecordingMode,
+};
 use crate::coordinator::{SearcherChoice, Tuner};
 use crate::harness::registry;
 use crate::gpusim::GpuSpec;
 use crate::model::PredictionMatrix;
 use crate::searcher::{
     Budget, CostModel, FaultModel, FaultProfile, FaultStats, FaultyEnv,
-    ReplayEnv,
+    OnDemandEnv, ReplayEnv,
 };
 use crate::tuning::RecordedSpace;
 use crate::util::json::{obj, Value};
@@ -47,10 +49,9 @@ pub const PLAN_SEARCHERS: [&str; 5] =
 /// Typed validation error shared by every plan flavour
 /// ([`ExperimentPlan`], [`crate::harness::TransferPlan`]): callers can
 /// match on the failure class instead of parsing message strings, and
-/// the `NoRecording` variant stops a plan from silently scheduling a
-/// benchmark the replay harness cannot exhaustively record (GEMM-full
-/// would enumerate-and-simulate 205k configurations before the first
-/// job ran).
+/// the `NoRecording` variant stops a *training-based* plan from
+/// silently scheduling a benchmark whose space is never exhaustively
+/// recorded (sampling a recording that does not exist trains nothing).
 #[derive(Debug, Clone, PartialEq)]
 pub enum PlanError {
     /// A plan axis (benchmarks/GPUs/searchers/seeds) is empty.
@@ -64,10 +65,12 @@ pub enum PlanError {
     /// field (`train_fraction` for transfer plans, `fractions` for the
     /// sweep axis).
     InvalidFraction { axis: &'static str, value: f64 },
-    /// Known benchmark, but plan runners must not record its space
-    /// ([`crate::benchmarks::Benchmark::exhaustively_recordable`]):
-    /// the exhaustive enumerate-and-simulate cost is reserved for
-    /// dedicated drivers (fig8), not paid silently inside a matrix.
+    /// Known benchmark, but its space is tuned lazily
+    /// ([`crate::benchmarks::Benchmark::recording_mode`] is
+    /// `OnDemand`), so no exhaustive recording exists for a
+    /// training-based plan (transfer/sweep) to sample from. Replay
+    /// plans and the serve layer accept these benchmarks — they run
+    /// through the on-demand recorder instead.
     NoRecording(String),
     /// `(benchmark, selector)`: an input-axis selector that some
     /// benchmark of the plan cannot resolve — the cross product would
@@ -102,10 +105,10 @@ impl std::fmt::Display for PlanError {
             ),
             PlanError::NoRecording(b) => write!(
                 f,
-                "benchmark {b:?} is search-only in plan runners: its \
-                 space is too costly to be exhaustively recorded inside \
-                 a job matrix (§4.6), so it cannot be scheduled into a \
-                 replay plan"
+                "benchmark {b:?} is tuned on demand: its space is never \
+                 exhaustively recorded (§4.6), so a training-based plan \
+                 has no recording to sample from — schedule it into a \
+                 search plan or the serve layer instead"
             ),
             PlanError::UnknownInput(b, i) => write!(
                 f,
@@ -135,7 +138,11 @@ impl std::fmt::Display for PlanError {
 
 impl std::error::Error for PlanError {}
 
-/// Shared axis validation — benchmarks must exist *and* be recordable.
+/// Shared axis validation — every benchmark name must exist. Both
+/// recording modes are tunable here: eager benchmarks replay their
+/// cached recording, on-demand benchmarks run through the lazy
+/// recorder, so search plans and the serve layer accept the whole
+/// registry.
 pub(crate) fn validate_benchmarks(
     axis: &'static str,
     names: &[String],
@@ -144,10 +151,26 @@ pub(crate) fn validate_benchmarks(
         return Err(PlanError::EmptyAxis(axis));
     }
     for b in names {
-        let Some(bench) = benchmarks::by_name(b) else {
+        if benchmarks::by_name(b).is_none() {
             return Err(PlanError::UnknownBenchmark(b.clone()));
-        };
-        if !bench.exhaustively_recordable() {
+        }
+    }
+    Ok(())
+}
+
+/// Axis validation for training-based plans (transfer/sweep): the plan
+/// samples rows of an exhaustive recording to train a model, so every
+/// benchmark must additionally be recorded eagerly
+/// ([`RecordingMode::Eager`]) — an on-demand space has no recording to
+/// sample from.
+pub(crate) fn validate_trainable_benchmarks(
+    axis: &'static str,
+    names: &[String],
+) -> Result<(), PlanError> {
+    validate_benchmarks(axis, names)?;
+    for b in names {
+        let bench = benchmarks::by_name(b).expect("validated above");
+        if bench.recording_mode() != RecordingMode::Eager {
             return Err(PlanError::NoRecording(b.clone()));
         }
     }
@@ -568,13 +591,28 @@ pub struct JobResult {
 
 /// Shared per-(benchmark, gpu) context, built once before the fan-out.
 struct CellCtx {
-    rec: Arc<RecordedSpace>,
-    /// Dense oracle prediction matrix, shared by every seed-repetition
-    /// of the cell — the profile jobs score against this instead of
-    /// rebuilding per-run prediction tables (§Perf).
-    matrix: Arc<PredictionMatrix>,
+    data: CellData,
     gpu: GpuSpec,
     inst_reaction: f64,
+}
+
+/// How a cell's space is evaluated — matches the benchmark's
+/// [`RecordingMode`].
+enum CellData {
+    /// The historical replay path: exhaustive recording plus the dense
+    /// oracle prediction matrix, shared by every seed-repetition of the
+    /// cell — the profile jobs score against this instead of rebuilding
+    /// per-run prediction tables (§Perf).
+    Eager {
+        rec: Arc<RecordedSpace>,
+        matrix: Arc<PredictionMatrix>,
+    },
+    /// The large-space path: configurations are simulated the first
+    /// time any job visits them and memoized process-wide. Nothing
+    /// space-sized is materialized, and the true best runtime is
+    /// unknown — lazy jobs run to their test budget and report
+    /// convergence post-hoc.
+    Lazy { recorder: Arc<OnDemandRecorder> },
 }
 
 /// The expert reaction strength for a benchmark's boundedness class —
@@ -621,46 +659,96 @@ pub(crate) fn searcher_choice(
     }
 }
 
+/// [`searcher_choice`] for on-demand cells: the profile arm scores
+/// lazily through the shared recorder instead of a dense matrix; the
+/// model-free searchers are unchanged (they only ever see the
+/// environment).
+pub(crate) fn searcher_choice_lazy(
+    name: &str,
+    recorder: &Arc<OnDemandRecorder>,
+    inst_reaction: f64,
+) -> SearcherChoice<'static> {
+    match name {
+        "profile" => SearcherChoice::ProfileLazy {
+            recorder: Arc::clone(recorder),
+            inst_reaction,
+        },
+        "random" => SearcherChoice::Random,
+        "basin_hopping" => SearcherChoice::BasinHopping,
+        "annealing" => SearcherChoice::Annealing,
+        "starchart" => SearcherChoice::Starchart,
+        other => unreachable!("plan validated, got searcher {other:?}"),
+    }
+}
+
 /// Run one job through the [`Tuner`] facade (one shared searcher
 /// dispatch for coordinator, CLI and harness).
 fn run_job(spec: &JobSpec, plan: &ExperimentPlan, ctx: &CellCtx) -> JobResult {
-    let thr = ctx.rec.best_time() * 1.1;
-    let choice =
-        searcher_choice(&spec.searcher, &ctx.matrix, ctx.inst_reaction);
-    let budget = Budget::until(thr, plan.max_tests);
+    // Eager cells stop early at 1.1× the known best (the paper's
+    // well-performing threshold); lazy cells have no known best, so
+    // they run to the test budget and convergence is judged post-hoc.
+    let (choice, thr) = match &ctx.data {
+        CellData::Eager { rec, matrix } => (
+            searcher_choice(&spec.searcher, matrix, ctx.inst_reaction),
+            Some(rec.best_time() * 1.1),
+        ),
+        CellData::Lazy { recorder } => (
+            searcher_choice_lazy(&spec.searcher, recorder, ctx.inst_reaction),
+            None,
+        ),
+    };
+    let budget = match thr {
+        Some(thr) => Budget::until(thr, plan.max_tests),
+        None => Budget::tests(plan.max_tests),
+    };
     let seed = spec.rng_seed(plan.base_seed);
 
     // fault-free plans take the exact historical path (no wrapper, no
-    // stats); active profiles wrap the replay env in a FaultyEnv whose
+    // stats); active profiles wrap the cell's env in a FaultyEnv whose
     // streams derive from the plan coordinates, never from scheduling
     let (result, faults) = if plan.has_faults() {
         let stats = Arc::new(Mutex::new(FaultStats::default()));
-        let env = FaultyEnv::new(
-            ReplayEnv::new(
-                Arc::clone(&ctx.rec),
-                ctx.gpu.clone(),
-                CostModel::default(),
-            ),
-            FaultModel::for_profile(plan.fault_profile),
-            spec.fault_cell_seed(plan.base_seed),
-            spec.fault_job_seed(plan.base_seed),
-            Arc::clone(&stats),
-        );
-        let result = Tuner::over(Box::new(env))
+        let model = FaultModel::for_profile(plan.fault_profile);
+        let cell_seed = spec.fault_cell_seed(plan.base_seed);
+        let job_seed = spec.fault_job_seed(plan.base_seed);
+        let env: Box<dyn crate::searcher::EvalEnv> = match &ctx.data {
+            CellData::Eager { rec, .. } => Box::new(FaultyEnv::new(
+                ReplayEnv::new(
+                    Arc::clone(rec),
+                    ctx.gpu.clone(),
+                    CostModel::default(),
+                ),
+                model,
+                cell_seed,
+                job_seed,
+                Arc::clone(&stats),
+            )),
+            CellData::Lazy { recorder } => Box::new(FaultyEnv::new(
+                OnDemandEnv::new(Arc::clone(recorder), CostModel::default()),
+                model,
+                cell_seed,
+                job_seed,
+                Arc::clone(&stats),
+            )),
+        };
+        let result = Tuner::over(env)
             .with_budget(budget)
             .with_seed(seed)
             .run(choice);
         let faults = crate::util::sync::lock_unpoisoned(&stats).clone();
         (result, Some(faults))
     } else {
-        let result = Tuner::replay(
-            Arc::clone(&ctx.rec),
-            ctx.gpu.clone(),
-            CostModel::default(),
-        )
-        .with_budget(budget)
-        .with_seed(seed)
-        .run(choice);
+        let tuner = match &ctx.data {
+            CellData::Eager { rec, .. } => Tuner::replay(
+                Arc::clone(rec),
+                ctx.gpu.clone(),
+                CostModel::default(),
+            ),
+            CellData::Lazy { recorder } => Tuner::over(Box::new(
+                OnDemandEnv::new(Arc::clone(recorder), CostModel::default()),
+            )),
+        };
+        let result = tuner.with_budget(budget).with_seed(seed).run(choice);
         (result, None)
     };
 
@@ -669,7 +757,7 @@ fn run_job(spec: &JobSpec, plan: &ExperimentPlan, ctx: &CellCtx) -> JobResult {
         best_ms: result.best_ms,
         tests: result.tests,
         profiled_tests: result.profiled_tests,
-        tests_to_wp: result.trace.tests_to_threshold(thr),
+        tests_to_wp: thr.and_then(|t| result.trace.tests_to_threshold(t)),
         cost_s: result.cost_s,
         trace: if plan.include_traces {
             result
@@ -968,16 +1056,24 @@ pub fn run_plan(plan: &ExperimentPlan, jobs: usize) -> Result<PlanReport> {
         let (b, g, input) = &keys[i];
         let bench = benchmarks::by_name(b).expect("validated");
         let gpu = GpuSpec::by_name(g).expect("validated");
-        let rec = cached_space(bench.as_ref(), &gpu, input);
-        // shared dense oracle matrix from the process-wide cache: the
-        // serve engine and every later plan over this endpoint score
-        // the same Arc (densified straight from the recording — no
-        // HashMap<Config, CounterVec> is ever built on this path)
-        let matrix = benchmarks::cached_matrix(bench.as_ref(), &gpu, input);
         let inst_reaction = inst_reaction_for(bench.as_ref());
+        let data = match bench.recording_mode() {
+            // shared dense oracle matrix from the process-wide cache:
+            // the serve engine and every later plan over this endpoint
+            // score the same Arc (densified straight from the recording
+            // — no HashMap<Config, CounterVec> is ever built here)
+            RecordingMode::Eager => CellData::Eager {
+                rec: cached_space(bench.as_ref(), &gpu, input),
+                matrix: benchmarks::cached_matrix(bench.as_ref(), &gpu, input),
+            },
+            // nothing is simulated up front: the shared recorder fills
+            // its memo as jobs visit configurations
+            RecordingMode::OnDemand => CellData::Lazy {
+                recorder: cached_recorder(bench.as_ref(), &gpu, input),
+            },
+        };
         CellCtx {
-            rec,
-            matrix,
+            data,
             gpu,
             inst_reaction,
         }
@@ -1059,19 +1155,50 @@ mod tests {
     }
 
     #[test]
-    fn validate_rejects_unrecordable_benchmarks() {
-        // gemm-full exists but is search-only (§4.6): scheduling it
-        // into a replay plan must fail up front, not hang recording a
-        // 205k-config space inside the fan-out
+    fn on_demand_benchmarks_validate_into_search_plans() {
+        // the historical carve-out is retired: gemm-full (205k configs,
+        // tuned on demand) now schedules into a search plan like any
+        // other benchmark — only training-based plans still reject it
         let mut plan = tiny();
         plan.benchmarks = vec!["gemm-full".into()];
+        assert!(plan.validate().is_ok());
         assert_eq!(
-            plan.validate(),
+            validate_trainable_benchmarks(
+                "benchmarks",
+                &["gemm-full".to_string()]
+            ),
             Err(PlanError::NoRecording("gemm-full".into()))
         );
-        // and the error formats with an explanation, not just a name
-        let msg = plan.validate().unwrap_err().to_string();
+        // and the trainable rejection formats with an explanation
+        let msg = PlanError::NoRecording("gemm-full".into()).to_string();
         assert!(msg.contains("gemm-full") && msg.contains("recorded"));
+    }
+
+    #[test]
+    fn lazy_plan_tunes_a_million_config_space_end_to_end() {
+        // the tentpole contract: a ≥1M-config benchmark runs through
+        // the standard plan machinery — fan-out, determinism, faults —
+        // without ever materializing its space
+        let mut plan = tiny();
+        plan.benchmarks = vec!["synth-grid".into()];
+        plan.gpus = vec!["gtx1070".into()];
+        plan.searchers = vec!["profile".into(), "random".into()];
+        plan.seeds = 2;
+        plan.max_tests = 18;
+        let report = run_plan(&plan, 2).unwrap();
+        assert_eq!(report.results.len(), 4);
+        for r in &report.results {
+            assert_eq!(r.tests, 18);
+            assert!(r.best_ms.is_finite());
+            // no known best on the lazy path → no threshold metric
+            assert_eq!(r.tests_to_wp, None);
+        }
+        // jobs=1 and jobs=8 must still agree byte-for-byte
+        let serial = run_plan(&plan, 1).unwrap();
+        assert_eq!(
+            report.to_json().to_string_pretty(1),
+            serial.to_json().to_string_pretty(1)
+        );
     }
 
     #[test]

@@ -35,17 +35,17 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::benchmarks;
+use crate::benchmarks::{self, RecordingMode};
 use crate::coordinator::Tuner;
 use crate::gpusim::GpuSpec;
-use crate::searcher::{Budget, CostModel};
+use crate::searcher::{Budget, CostModel, OnDemandEnv};
 use crate::util::json::{obj, Value};
 use crate::util::rng::stream_seed;
 use crate::util::sync::{lock_unpoisoned, OnceMap};
 
 use super::plan::{
-    inst_reaction_for, searcher_choice, validate_benchmarks, validate_gpus,
-    validate_inputs, PlanError,
+    inst_reaction_for, searcher_choice, searcher_choice_lazy,
+    validate_benchmarks, validate_gpus, validate_inputs, PlanError,
 };
 use super::registry::{plan_hash, Provenance};
 
@@ -66,10 +66,11 @@ pub struct ServeKey {
 }
 
 impl ServeKey {
-    /// Validate and canonicalize an endpoint. Rejects unknown names,
-    /// benchmarks the replay harness cannot exhaustively record
-    /// (serving GEMM-full would silently enumerate 205k configs on the
-    /// first miss), and input selectors the benchmark lacks.
+    /// Validate and canonicalize an endpoint. Rejects unknown names
+    /// and input selectors the benchmark lacks. Benchmarks of either
+    /// recording mode serve: eager ones replay their cached recording,
+    /// on-demand ones (GEMM-full, synth-grid) search lazily through
+    /// the shared recorder on the first miss.
     pub fn resolve(
         benchmark: &str,
         gpu: &str,
@@ -552,28 +553,51 @@ impl ServeEngine {
         })
     }
 
-    /// The miss path: bounded profile search over the shared recording
-    /// and prediction matrix, seeded purely by the endpoint key.
+    /// The miss path: bounded profile search seeded purely by the
+    /// endpoint key — over the shared recording and prediction matrix
+    /// (eager benchmarks), or lazily through the shared on-demand
+    /// recorder (large-space benchmarks; nothing space-sized is ever
+    /// materialized, and the memo carries over between misses).
     fn search(&self, key: &ServeKey) -> TuningEntry {
         let bench =
             benchmarks::by_name(&key.benchmark).expect("resolved serve key");
         let gpu = GpuSpec::by_name(&key.gpu).expect("resolved serve key");
         let input = benchmarks::resolve_input(bench.as_ref(), &key.input)
             .expect("resolved serve key");
-        let rec = benchmarks::cached_space(bench.as_ref(), &gpu, &input);
-        let matrix = benchmarks::cached_matrix(bench.as_ref(), &gpu, &input);
-        let thr = rec.best_time() * 1.1;
         let seed = stream_seed(
             self.cfg.base_seed,
             &[&key.benchmark, &key.gpu, &key.input, "serve"],
             0,
         );
-        let choice =
-            searcher_choice("profile", &matrix, inst_reaction_for(bench.as_ref()));
-        let result = Tuner::replay(rec, gpu, CostModel::default())
-            .with_budget(Budget::until(thr, self.cfg.max_tests))
-            .with_seed(seed)
-            .run(choice);
+        let inst_reaction = inst_reaction_for(bench.as_ref());
+        let result = match bench.recording_mode() {
+            RecordingMode::Eager => {
+                let rec =
+                    benchmarks::cached_space(bench.as_ref(), &gpu, &input);
+                let matrix =
+                    benchmarks::cached_matrix(bench.as_ref(), &gpu, &input);
+                let thr = rec.best_time() * 1.1;
+                let choice = searcher_choice("profile", &matrix, inst_reaction);
+                Tuner::replay(rec, gpu, CostModel::default())
+                    .with_budget(Budget::until(thr, self.cfg.max_tests))
+                    .with_seed(seed)
+                    .run(choice)
+            }
+            RecordingMode::OnDemand => {
+                let recorder =
+                    benchmarks::cached_recorder(bench.as_ref(), &gpu, &input);
+                let choice =
+                    searcher_choice_lazy("profile", &recorder, inst_reaction);
+                // no known best to stop at — run to the test budget
+                Tuner::over(Box::new(OnDemandEnv::new(
+                    recorder,
+                    CostModel::default(),
+                )))
+                .with_budget(Budget::tests(self.cfg.max_tests))
+                .with_seed(seed)
+                .run(choice)
+            }
+        };
         TuningEntry {
             config: result.best_config.0.clone(),
             best_ms: result.best_ms,
@@ -618,10 +642,9 @@ mod tests {
             ServeKey::resolve("nope", "gtx1070", "default"),
             Err(ServeError::Plan(PlanError::UnknownBenchmark(_)))
         ));
-        assert!(matches!(
-            ServeKey::resolve("gemm-full", "gtx1070", "default"),
-            Err(ServeError::Plan(PlanError::NoRecording(_)))
-        ));
+        // the carve-out is retired: on-demand benchmarks serve too
+        assert!(ServeKey::resolve("gemm-full", "gtx1070", "default").is_ok());
+        assert!(ServeKey::resolve("synth-grid", "gtx1070", "default").is_ok());
         assert!(matches!(
             ServeKey::resolve("coulomb", "gtx9999", "default"),
             Err(ServeError::Plan(PlanError::UnknownGpu(_)))
@@ -630,6 +653,28 @@ mod tests {
             ServeKey::resolve("coulomb", "gtx1070", "no-such-input"),
             Err(ServeError::Plan(PlanError::UnknownInput(_, _)))
         ));
+    }
+
+    #[test]
+    fn on_demand_endpoint_serves_without_materializing_the_space() {
+        // a ≥1M-config endpoint must answer its first miss in bounded
+        // work: the lazy search simulates only what it visits/scores
+        let engine = ServeEngine::new(
+            Arc::new(MemTuningStore::new()),
+            ServeConfig {
+                base_seed: 23,
+                max_tests: 18,
+            },
+        );
+        let k = ServeKey::resolve("synth-grid", "gtx1070", "default").unwrap();
+        let first = engine.query(&k).unwrap();
+        assert!(!first.hit);
+        assert_eq!(first.entry.tests, 18);
+        assert!(first.entry.best_ms.is_finite());
+        assert_eq!(first.entry.config.len(), 10);
+        let second = engine.query(&k).unwrap();
+        assert!(second.hit);
+        assert_eq!(first.entry, second.entry);
     }
 
     #[test]

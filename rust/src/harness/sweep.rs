@@ -40,8 +40,8 @@ use crate::util::json::{obj, Value};
 
 use super::convergence::StepCurvePoint;
 use super::plan::{
-    reads_model, validate_benchmarks, validate_fraction, validate_gpus,
-    validate_searchers, PlanError,
+    reads_model, validate_fraction, validate_gpus, validate_searchers,
+    validate_trainable_benchmarks, PlanError,
 };
 use super::registry;
 use super::transfer::{
@@ -172,7 +172,9 @@ impl SweepPlan {
     /// flavours; each fraction must lie in `(0, 1]`
     /// ([`PlanError::InvalidFraction`]).
     pub fn validate(&self) -> Result<(), PlanError> {
-        validate_benchmarks("benchmarks", &self.benchmarks)?;
+        // training-based: the sweep samples rows of an exhaustive
+        // recording, so on-demand benchmarks are rejected up front
+        validate_trainable_benchmarks("benchmarks", &self.benchmarks)?;
         validate_gpus("source_gpu", std::slice::from_ref(&self.source_gpu))?;
         validate_gpus("target_gpu", std::slice::from_ref(&self.target_gpu))?;
         if self.fractions.is_empty() {

@@ -94,9 +94,9 @@ use super::convergence::{
     ConvergencePoint, StepCurvePoint,
 };
 use super::plan::{
-    reads_model, resolve_input_axis, searcher_choice, validate_benchmarks,
-    validate_fraction, validate_gpus, validate_inputs, validate_searchers,
-    PlanError,
+    reads_model, resolve_input_axis, searcher_choice, validate_fraction,
+    validate_gpus, validate_inputs, validate_searchers,
+    validate_trainable_benchmarks, PlanError,
 };
 use super::registry;
 
@@ -301,12 +301,13 @@ impl TransferPlan {
 
     /// Resolve every name up front (shared helpers with
     /// [`super::ExperimentPlan`]) so job closures cannot fail later —
-    /// in particular, a benchmark with no recordable space is a typed
-    /// [`PlanError::NoRecording`] and an input selector some benchmark
-    /// cannot resolve is a typed [`PlanError::UnknownInput`], not a
-    /// panic inside the fan-out.
+    /// in particular, a benchmark tuned on demand (no exhaustive
+    /// recording to train from) is a typed [`PlanError::NoRecording`]
+    /// and an input selector some benchmark cannot resolve is a typed
+    /// [`PlanError::UnknownInput`], not a panic inside the fan-out.
     pub fn validate(&self) -> Result<(), PlanError> {
-        validate_benchmarks("benchmarks", &self.benchmarks)?;
+        // training-based: models are fit on sampled recording rows
+        validate_trainable_benchmarks("benchmarks", &self.benchmarks)?;
         validate_gpus("source_gpus", &self.source_gpus)?;
         validate_gpus("target_gpus", &self.target_gpus)?;
         validate_inputs("source_inputs", &self.benchmarks, &self.source_inputs)?;

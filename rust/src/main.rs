@@ -109,7 +109,9 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use pcat::benchmarks::{self, cached_space, Benchmark};
+use pcat::benchmarks::{
+    self, cached_recorder, cached_space, Benchmark, RecordingMode,
+};
 use pcat::coordinator::{SearcherChoice, Tuner};
 use pcat::gpusim::GpuSpec;
 use pcat::harness::{
@@ -398,6 +400,58 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let budget = Budget::tests(args.num("budget", 200usize)?);
     let seed = args.num("seed", 0u64)?;
     let searcher = args.get("searcher").unwrap_or("profile");
+
+    // On-demand benchmarks (§4.6 large spaces) are never exhaustively
+    // recorded: tune through the lazy recorder, which simulates only
+    // the configurations the search actually visits.
+    if bench.recording_mode() == RecordingMode::OnDemand {
+        let recorder = cached_recorder(bench.as_ref(), &gpu, &input);
+        let ir = if bench.instruction_bound() { 0.5 } else { 0.7 };
+        let mut tuner =
+            Tuner::on_demand(Arc::clone(&recorder), CostModel::default())
+                .with_budget(budget)
+                .with_seed(seed);
+        let choice = match searcher {
+            "random" => SearcherChoice::Random,
+            "profile" => SearcherChoice::ProfileLazy {
+                recorder: Arc::clone(&recorder),
+                inst_reaction: ir,
+            },
+            other => bail!(
+                "on-demand benchmark {:?} supports random|profile, got \
+                 {other:?}",
+                bench.name()
+            ),
+        };
+        let result = tuner.run(choice);
+        println!(
+            "tuned {} on {} ({}) with {} [on-demand: {} of {} configs \
+             simulated]",
+            bench.name(),
+            gpu.name,
+            input.name,
+            result.searcher,
+            recorder.visited(),
+            recorder.space().len(),
+        );
+        println!(
+            "  tests: {} ({} profiled), simulated tuning cost {:.1}s",
+            result.tests, result.profiled_tests, result.cost_s
+        );
+        println!(
+            "  best: {:.4} ms (exhaustive best unknown: space is never \
+             fully recorded)",
+            result.best_ms
+        );
+        print!("  config:");
+        for (p, v) in
+            recorder.space().params.iter().zip(&result.best_config.0)
+        {
+            print!(" {}={}", p.name, v);
+        }
+        println!();
+        return Ok(());
+    }
 
     let rec = cached_space(bench.as_ref(), &gpu, &input);
     let best = rec.best_time();

@@ -233,6 +233,76 @@ impl PredictionMatrix {
         }
     }
 
+    /// [`score_all`](PredictionMatrix::score_all) fanned across the
+    /// worker pool in cache-friendly batches of the config axis.
+    ///
+    /// Every element's arithmetic — term order over `active`, the
+    /// per-column `p != 0` predicate, the division chain — is *exactly*
+    /// the serial expression, and distinct batches touch disjoint
+    /// `scores` ranges, so the result is byte-identical to the serial
+    /// path for every `jobs` value (property-tested). Batches are
+    /// `BATCH`-sized so each worker streams column sub-slices that fit
+    /// in cache instead of whole multi-MB columns.
+    pub fn score_all_batched(
+        &self,
+        profile_idx: usize,
+        active: &[(usize, f64)],
+        scores: &mut [f64],
+        jobs: usize,
+    ) {
+        assert_eq!(scores.len(), self.n_configs, "score buffer size");
+        /// 8192 doubles = 64 KiB per column sub-slice.
+        const BATCH: usize = 8192;
+        if jobs <= 1 || self.n_configs <= BATCH {
+            self.score_all(profile_idx, active, scores);
+            return;
+        }
+        let this = &*self;
+        crate::util::pool::par_chunks_mut(
+            scores,
+            BATCH,
+            jobs,
+            |off, chunk| {
+                chunk.fill(0.0);
+                for &(j, d) in active {
+                    let col = this.column(j);
+                    let p = col[profile_idx];
+                    let col = &col[off..off + chunk.len()];
+                    if p != 0.0 {
+                        for (s, &q) in chunk.iter_mut().zip(col) {
+                            *s += d * (q - p) / (q + p);
+                        }
+                    } else {
+                        for (s, &q) in chunk.iter_mut().zip(col) {
+                            if q != 0.0 {
+                                *s += d * q / q;
+                            }
+                        }
+                    }
+                }
+            },
+        );
+    }
+
+    /// Synthetic matrix for benches and scale tests: entry
+    /// `(column j, config k)` is `f(j, k)`. Lets the 1M-config scoring
+    /// lane exercise batching without paying a million simulator calls
+    /// to record a real space first.
+    pub fn from_fn(n: usize, f: impl Fn(usize, usize) -> f64) -> Self {
+        let mut data = vec![0.0; MODELED_COUNTERS.len() * n];
+        for j in 0..MODELED_COUNTERS.len() {
+            for k in 0..n {
+                data[j * n + k] = f(j, k);
+            }
+        }
+        PredictionMatrix {
+            kind: "synthetic",
+            n_configs: n,
+            available: [true; MODELED_COUNTERS.len()],
+            data,
+        }
+    }
+
     /// Eq. 16 for a single candidate — the §3.9.1 neighbourhood variant
     /// scores only a Hamming ball, where a full-column pass would waste
     /// work. Bit-equal to [`score_all`]'s per-entry result.
@@ -385,6 +455,35 @@ mod tests {
         let mut delta = DeltaPc::default();
         delta.0.set(Counter::DramU, -0.3);
         let _ = m.active_columns(&delta);
+    }
+
+    #[test]
+    fn batched_scoring_is_byte_identical_to_serial() {
+        // a matrix big enough to actually split into several batches,
+        // with values exercising both p != 0 and p == 0 column paths
+        let n = 50_000;
+        let m = PredictionMatrix::from_fn(n, |j, k| {
+            if j % 5 == 0 {
+                0.0
+            } else {
+                ((j * 31 + k * 7) % 1013) as f64 * 0.37 - 50.0
+            }
+        });
+        let active: Vec<(usize, f64)> =
+            vec![(0, -0.8), (3, 0.5), (5, -0.3), (10, 0.9)];
+        let mut serial = vec![f64::NAN; n];
+        m.score_all(n / 2, &active, &mut serial);
+        for jobs in [1, 2, 3, 8] {
+            let mut batched = vec![f64::NAN; n];
+            m.score_all_batched(n / 2, &active, &mut batched, jobs);
+            for k in 0..n {
+                assert_eq!(
+                    serial[k].to_bits(),
+                    batched[k].to_bits(),
+                    "jobs {jobs}, config {k}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -31,6 +31,10 @@ impl Searcher for SimulatedAnnealing {
 
     fn run(&mut self, env: &mut dyn EvalEnv, budget: &Budget) -> SearchTrace {
         let size = env.space().len();
+        // degenerate space: nothing to draw — empty trace, not a panic
+        if size == 0 {
+            return SearchTrace::default();
+        }
         let mut trace = SearchTrace::default();
         let mut explored: Vec<Option<f64>> = vec![None; size];
 
@@ -48,7 +52,7 @@ impl Searcher for SimulatedAnnealing {
         let mut temp = self.t0 * t_cur;
 
         while !budget_done(&trace, budget, env) {
-            let from = env.space().configs[current].clone();
+            let from = env.space().config_at(current);
             let nbs: Vec<usize> = env
                 .space()
                 .neighbours(&from, 1)

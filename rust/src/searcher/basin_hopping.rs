@@ -57,6 +57,10 @@ impl Searcher for BasinHopping {
 
     fn run(&mut self, env: &mut dyn EvalEnv, budget: &Budget) -> SearchTrace {
         let size = env.space().len();
+        // degenerate space: nothing to draw — empty trace, not a panic
+        if size == 0 {
+            return SearchTrace::default();
+        }
         let mut trace = SearchTrace::default();
         let mut explored: Vec<Option<f64>> = vec![None; size];
 
@@ -75,7 +79,7 @@ impl Searcher for BasinHopping {
             while improved && !budget_done(&trace, budget, env) {
                 improved = false;
                 if neighbours[current].is_none() {
-                    let from = env.space().configs[current].clone();
+                    let from = env.space().config_at(current);
                     neighbours[current] =
                         Some(env.space().neighbours(&from, 1));
                 }
@@ -104,7 +108,7 @@ impl Searcher for BasinHopping {
             }
 
             // --- hop -----------------------------------------------------
-            let from = env.space().configs[current].clone();
+            let from = env.space().config_at(current);
             let candidates = env
                 .space()
                 .neighbours(&from, self.hop_strength)

@@ -8,6 +8,7 @@
 
 use std::sync::Arc;
 
+use crate::benchmarks::OnDemandRecorder;
 use crate::counters::{Counter, CounterVec};
 use crate::gpusim::GpuSpec;
 use crate::tuning::{RecordedSpace, Space};
@@ -234,6 +235,68 @@ impl EvalEnv for ReplayEnv {
 
     fn known_best_ms(&self) -> Option<f64> {
         Some(self.rec.best_time())
+    }
+}
+
+/// Lazy counterpart of [`ReplayEnv`]: empirical tests are served by an
+/// [`OnDemandRecorder`], which simulates a configuration the first time
+/// any search visits it and memoizes the record. Nothing space-sized is
+/// ever materialized, so million-configuration spaces tune in bounded
+/// memory; cost accounting is identical to [`ReplayEnv`].
+///
+/// Unlike a replay over an exhaustive recording, the true best runtime
+/// is unknown (`known_best_ms` stays `None`): budgets must be test- or
+/// cost-bounded, and convergence metrics are computed post-hoc from the
+/// trace.
+pub struct OnDemandEnv {
+    recorder: Arc<OnDemandRecorder>,
+    gpu: GpuSpec,
+    cost: CostModel,
+    spent_s: f64,
+    /// Total measurements served (for tests/metrics).
+    pub measurements: usize,
+}
+
+impl OnDemandEnv {
+    pub fn new(recorder: Arc<OnDemandRecorder>, cost: CostModel) -> Self {
+        let gpu = recorder.gpu().clone();
+        OnDemandEnv {
+            recorder,
+            gpu,
+            cost,
+            spent_s: 0.0,
+            measurements: 0,
+        }
+    }
+
+    pub fn recorder(&self) -> &Arc<OnDemandRecorder> {
+        &self.recorder
+    }
+
+    pub fn reset_cost(&mut self) {
+        self.spent_s = 0.0;
+        self.measurements = 0;
+    }
+}
+
+impl EvalEnv for OnDemandEnv {
+    fn space(&self) -> &Space {
+        self.recorder.space()
+    }
+
+    fn measure(&mut self, idx: usize, profile: bool) -> Measurement {
+        let r = self.recorder.record(idx);
+        self.spent_s += self.cost.cost_of(r.runtime_ms, profile);
+        self.measurements += 1;
+        Measurement::ok(r.runtime_ms, profile.then(|| r.counters.clone()))
+    }
+
+    fn cost_so_far(&self) -> f64 {
+        self.spent_s
+    }
+
+    fn gpu(&self) -> &GpuSpec {
+        &self.gpu
     }
 }
 

@@ -2,6 +2,9 @@
 //!
 //! * [`ProfileSearcher`] — the paper's contribution (Algorithm 1):
 //!   profile → bottlenecks → ΔPC → model-scored weighted-random steps.
+//! * [`LazyProfileSearcher`] — Algorithm 1 over spaces too large to
+//!   densify: neighbourhood-only scoring off an on-demand recorder
+//!   (driven through [`OnDemandEnv`]), O(ball) per round.
 //! * [`RandomSearcher`] — the primary baseline (§4.3–4.6).
 //! * [`BasinHopping`] — the Kernel Tuner baseline (§4.7).
 //! * [`Starchart`] — the regression-tree baseline (§4.8).
@@ -24,10 +27,11 @@ mod starchart;
 pub use annealing::SimulatedAnnealing;
 pub use basin_hopping::BasinHopping;
 pub use env::{
-    CostModel, EvalEnv, FailReason, MeasureOutcome, Measurement, ReplayEnv,
+    CostModel, EvalEnv, FailReason, MeasureOutcome, Measurement, OnDemandEnv,
+    ReplayEnv,
 };
 pub use faults::{FaultModel, FaultProfile, FaultStats, FaultyEnv, RetryPolicy};
-pub use profile::ProfileSearcher;
+pub use profile::{LazyProfileSearcher, ProfileSearcher};
 pub use random::RandomSearcher;
 pub use starchart::Starchart;
 

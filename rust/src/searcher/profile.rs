@@ -24,7 +24,10 @@
 
 use std::sync::Arc;
 
-use crate::expert::{analyze, normalize_scores_in_place, react};
+use crate::benchmarks::OnDemandRecorder;
+use crate::expert::{
+    active_deltas, analyze, normalize_scores_in_place, react, score_active,
+};
 use crate::model::{PredictionMatrix, TpPcModel};
 use crate::util::fenwick::WeightedIndex;
 use crate::util::rng::Rng;
@@ -53,6 +56,13 @@ pub struct ProfileSearcher<'m> {
     /// and footnote-5 huge-space device). `None` = global (paper
     /// default).
     pub neighbourhood: Option<usize>,
+    /// Worker threads for the global scoring round
+    /// ([`PredictionMatrix::score_all_batched`] — bit-identical to the
+    /// serial loop at any width). Defaults to 1: the harness already
+    /// fans seed-repetitions across the pool, so per-search parallelism
+    /// would oversubscribe it; single-search callers (serve cache
+    /// misses, the benches) raise it.
+    pub scoring_jobs: usize,
     rng: Rng,
 }
 
@@ -63,6 +73,7 @@ impl<'m> ProfileSearcher<'m> {
             n_unprofiled: 5,
             inst_reaction,
             neighbourhood: None,
+            scoring_jobs: 1,
             rng: Rng::new(seed),
         }
     }
@@ -90,6 +101,7 @@ impl<'m> ProfileSearcher<'m> {
             n_unprofiled: 5,
             inst_reaction,
             neighbourhood: None,
+            scoring_jobs: 1,
             rng: Rng::new(seed),
         }
     }
@@ -102,6 +114,14 @@ impl<'m> ProfileSearcher<'m> {
         self.neighbourhood = Some(radius);
         self
     }
+
+    /// Fan the global scoring round across `jobs` pool workers. The
+    /// batched kernel preserves the serial loop's per-element
+    /// arithmetic exactly, so traces are byte-identical at any width.
+    pub fn with_scoring_jobs(mut self, jobs: usize) -> Self {
+        self.scoring_jobs = jobs.max(1);
+        self
+    }
 }
 
 impl Searcher for ProfileSearcher<'_> {
@@ -111,6 +131,13 @@ impl Searcher for ProfileSearcher<'_> {
 
     fn run(&mut self, env: &mut dyn EvalEnv, budget: &Budget) -> SearchTrace {
         let size = env.space().len();
+        // Degenerate space (e.g. a parameter whose value list is empty
+        // enumerates to nothing): there is no configuration to draw, so
+        // the search is trivially over — an empty trace, not a panic in
+        // `rng.below(0)`.
+        if size == 0 {
+            return SearchTrace::default();
+        }
         let matrix: Arc<PredictionMatrix> = match &self.predictions {
             Predictions::Model(m) => {
                 Arc::new(PredictionMatrix::build(env.space(), *m))
@@ -196,9 +223,9 @@ impl Searcher for ProfileSearcher<'_> {
             let candidates: Option<Vec<usize>> =
                 self.neighbourhood.and_then(|radius| {
                     let space = local_space.as_ref().unwrap();
-                    let from = &space.configs[c_profile];
+                    let from = space.config_at(c_profile);
                     let nb: Vec<usize> = space
-                        .neighbours(from, radius)
+                        .neighbours(&from, radius)
                         .into_iter()
                         .filter(|&i| !explored[i])
                         .collect();
@@ -209,9 +236,17 @@ impl Searcher for ProfileSearcher<'_> {
             let active = matrix.active_columns(&delta);
             match &candidates {
                 None => {
-                    // column-wise Eq. 16 over the whole space, then
-                    // exclude what's already explored
-                    matrix.score_all(c_profile, &active, &mut scores);
+                    // column-wise Eq. 16 over the whole space (fanned
+                    // across the pool when `scoring_jobs` > 1; the
+                    // batches preserve per-element arithmetic order, so
+                    // the result is byte-identical to the serial loop),
+                    // then exclude what's already explored
+                    matrix.score_all_batched(
+                        c_profile,
+                        &active,
+                        &mut scores,
+                        self.scoring_jobs,
+                    );
                     for (k, &done) in explored.iter().enumerate() {
                         if done {
                             scores[k] = f64::NEG_INFINITY;
@@ -278,17 +313,206 @@ impl Searcher for ProfileSearcher<'_> {
 
 /// Uniform draw over the unexplored configurations (profile-fallback
 /// path when a profiling round yields nothing to react on).
+///
+/// Zero-allocation: count the unexplored entries, draw a rank, scan to
+/// the rank-th one. The retired implementation collected the unexplored
+/// indices into a pool `Vec` (O(N) allocation *per fallback* — every
+/// failed profiling round under a hostile fault profile) and indexed it
+/// with `rng.below(pool.len())`; the pool listed indices ascending, so
+/// rank `r` maps to the same configuration here off the same single
+/// draw — traces are unchanged.
 fn next_unexplored(explored: &[bool], rng: &mut Rng) -> Option<usize> {
-    let pool: Vec<usize> = explored
-        .iter()
-        .enumerate()
-        .filter(|(_, &done)| !done)
-        .map(|(i, _)| i)
-        .collect();
-    if pool.is_empty() {
-        None
-    } else {
-        Some(pool[rng.below(pool.len())])
+    let count = explored.iter().filter(|&&done| !done).count();
+    if count == 0 {
+        return None;
+    }
+    let mut rank = rng.below(count);
+    for (i, &done) in explored.iter().enumerate() {
+        if !done {
+            if rank == 0 {
+                return Some(i);
+            }
+            rank -= 1;
+        }
+    }
+    unreachable!("rank drawn below the counted unexplored entries")
+}
+
+/// Algorithm 1 over a space too large to densify — the lazy arm of the
+/// scoring engine.
+///
+/// The eager [`ProfileSearcher`] needs a [`PredictionMatrix`] covering
+/// the whole space (18 × N doubles) and O(N) buffers per round; at the
+/// million-configuration scale that is hundreds of megabytes and a full
+/// sweep of them every round. This variant keeps Algorithm 1's shape but
+/// scores **only the Hamming-ball around the profiled configuration**
+/// (the paper's footnote-5 huge-space device, hard-wired rather than
+/// optional), with predictions served by an [`OnDemandRecorder`]: the
+/// oracle model evaluated lazily and memoized, so a configuration is
+/// simulated at most once per process no matter how many rounds or
+/// concurrent searches touch it. Per-round state is O(|ball|); the only
+/// space-sized allocation is the one-bit-per-config explored mask.
+///
+/// Scoring stays model-vs-model (§3.6): Eq. 16 compares the recorder's
+/// predicted counters for the profiled and candidate configurations,
+/// never predictions against the live measurement.
+pub struct LazyProfileSearcher {
+    recorder: Arc<OnDemandRecorder>,
+    /// Steps without profiling per round (the paper's `n`, default 5).
+    pub n_unprofiled: usize,
+    /// The Eq. 15 threshold (0.7 default, 0.5 for instruction-bound).
+    pub inst_reaction: f64,
+    /// Hamming-ball radius scored each round (default 2: for the
+    /// synthetic 10-parameter grid that is a few hundred candidates —
+    /// enough signal for the weighted draw, negligible memory).
+    pub radius: usize,
+    rng: Rng,
+}
+
+impl LazyProfileSearcher {
+    pub fn new(
+        recorder: Arc<OnDemandRecorder>,
+        inst_reaction: f64,
+        seed: u64,
+    ) -> Self {
+        LazyProfileSearcher {
+            recorder,
+            n_unprofiled: 5,
+            inst_reaction,
+            radius: 2,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn with_radius(mut self, radius: usize) -> Self {
+        self.radius = radius.max(1);
+        self
+    }
+}
+
+impl Searcher for LazyProfileSearcher {
+    fn name(&self) -> &'static str {
+        "profile-lazy"
+    }
+
+    fn run(&mut self, env: &mut dyn EvalEnv, budget: &Budget) -> SearchTrace {
+        let size = env.space().len();
+        if size == 0 {
+            return SearchTrace::default();
+        }
+        assert_eq!(
+            self.recorder.space().len(),
+            size,
+            "on-demand recorder covers a different space than the \
+             environment evaluates"
+        );
+        // Shares the recorder's space (and its lazily built neighbour
+        // index) across rounds and across concurrent searches.
+        let space = self.recorder.space_arc();
+        space.neighbour_index();
+
+        let mut explored = vec![false; size];
+        let mut trace = SearchTrace::default();
+        // O(|ball|) per-round working set — never space-sized
+        let mut ball: Vec<usize> = Vec::new();
+        let mut ball_scores: Vec<f64> = Vec::new();
+        let mut eligible: Vec<bool> = Vec::new();
+        let mut sampler = WeightedIndex::new();
+
+        let mut c_profile = self.rng.below(size);
+
+        'outer: loop {
+            if budget_done(&trace, budget, env) {
+                break;
+            }
+            // --- profile the current configuration -----------------------
+            let m = env.measure(c_profile, true);
+            explored[c_profile] = true;
+            trace.push(Step {
+                idx: c_profile,
+                runtime_ms: m.runtime_ms,
+                profiled: true,
+                cost_after_s: env.cost_so_far(),
+                build: false,
+            });
+            if !m.is_ok() || m.counters.is_none() {
+                match next_unexplored(&explored, &mut self.rng) {
+                    Some(next) => {
+                        c_profile = next;
+                        continue 'outer;
+                    }
+                    None => break 'outer,
+                }
+            }
+            let mut t_best_round = m.runtime_ms;
+
+            // --- expert system -------------------------------------------
+            let counters = m.counters.expect("checked above");
+            let bottlenecks = analyze(&counters, env.gpu());
+            let mut delta = react(&bottlenecks, self.inst_reaction);
+            for &c in &m.dropped {
+                delta.0.set(c, 0.0);
+            }
+            let active = active_deltas(&delta);
+
+            // --- score the unexplored ball (Eqs. 16–17) ------------------
+            let from = space.config_at(c_profile);
+            ball.clear();
+            ball.extend(
+                space
+                    .neighbours(&from, self.radius)
+                    .into_iter()
+                    .filter(|&i| !explored[i]),
+            );
+            let pred_profile = self.recorder.record(c_profile).counters;
+            ball_scores.clear();
+            for &k in &ball {
+                let pred_k = self.recorder.record(k).counters;
+                ball_scores.push(score_active(&active, &pred_profile, &pred_k));
+            }
+            normalize_scores_in_place(&mut ball_scores);
+            sampler.rebuild(&ball_scores);
+            eligible.clear();
+            eligible.resize(ball.len(), true);
+
+            // --- n weighted-random plain steps ---------------------------
+            for _ in 0..self.n_unprofiled {
+                if budget_done(&trace, budget, env) {
+                    break 'outer;
+                }
+                let l = match sampler.sample_or_uniform(&mut self.rng, &eligible)
+                {
+                    Some(pos) => {
+                        eligible[pos] = false;
+                        sampler.set(pos, 0.0);
+                        ball[pos]
+                    }
+                    // ball exhausted (fully explored, or empty around a
+                    // corner configuration): degrade to a uniform global
+                    // draw instead of ending the search
+                    None => match next_unexplored(&explored, &mut self.rng) {
+                        Some(l) => l,
+                        None => break 'outer,
+                    },
+                };
+                let m = env.measure(l, false);
+                explored[l] = true;
+                trace.push(Step {
+                    idx: l,
+                    runtime_ms: m.runtime_ms,
+                    profiled: false,
+                    cost_after_s: env.cost_so_far(),
+                    build: false,
+                });
+                // failed runs report infinite runtime, which the
+                // best-of-round fold ignores naturally
+                if m.is_ok() && m.runtime_ms <= t_best_round {
+                    t_best_round = m.runtime_ms;
+                    c_profile = l;
+                }
+            }
+        }
+        trace
     }
 }
 
@@ -552,5 +776,182 @@ mod tests {
         assert_eq!(trace.len(), 30);
         assert!(trace.steps.iter().all(|s| s.runtime_ms.is_finite()));
         assert!(trace.steps.iter().all(|s| s.profiled));
+    }
+
+    /// Test stand-in for an environment over a degenerate space: any
+    /// measurement would be a bug, so it panics.
+    struct EmptyEnv {
+        space: crate::tuning::Space,
+        gpu: GpuSpec,
+    }
+
+    impl EvalEnv for EmptyEnv {
+        fn space(&self) -> &crate::tuning::Space {
+            &self.space
+        }
+        fn measure(
+            &mut self,
+            _idx: usize,
+            _profile: bool,
+        ) -> crate::searcher::Measurement {
+            unreachable!("an empty space has nothing to measure")
+        }
+        fn cost_so_far(&self) -> f64 {
+            0.0
+        }
+        fn gpu(&self) -> &GpuSpec {
+            &self.gpu
+        }
+    }
+
+    #[test]
+    fn empty_space_returns_empty_trace_not_panic() {
+        use crate::tuning::{ParamDef, Space};
+        // a parameter whose value list became empty enumerates to a
+        // zero-configuration space — `rng.below(0)` used to panic here
+        let mut p = ParamDef::new("X", &[1]);
+        p.values.clear();
+        let space = Space::enumerate("empty", vec![p], |_| true);
+        assert_eq!(space.len(), 0);
+
+        let matrix = Arc::new(PredictionMatrix::from_fn(0, |_, _| 0.0));
+        let mut env = EmptyEnv {
+            space,
+            gpu: GpuSpec::gtx750(),
+        };
+        let trace = ProfileSearcher::shared(matrix, 0.5, 1)
+            .run(&mut env, &Budget::tests(10));
+        assert!(trace.is_empty());
+    }
+
+    #[test]
+    fn next_unexplored_matches_the_pool_reference_draw_for_draw() {
+        // the zero-allocation rank-scan must select exactly what the
+        // retired pool-collecting code selected off the same rng draw
+        let patterns: [&[bool]; 4] = [
+            &[false, true, false, true, true, false, false],
+            &[true, true, true],
+            &[false; 5],
+            &[true, false],
+        ];
+        for (pi, explored) in patterns.iter().enumerate() {
+            for seed in 0..20u64 {
+                let got = next_unexplored(explored, &mut Rng::new(seed));
+                let pool: Vec<usize> = explored
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &done)| !done)
+                    .map(|(i, _)| i)
+                    .collect();
+                let want = if pool.is_empty() {
+                    None
+                } else {
+                    Some(pool[Rng::new(seed).below(pool.len())])
+                };
+                assert_eq!(got, want, "pattern {pi} seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn scoring_jobs_do_not_change_the_trace() {
+        // the batched global scoring round is byte-identical to the
+        // serial one, so the whole search is too — at any worker count
+        let gpu = GpuSpec::gtx1070();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        let matrix = Arc::new(PredictionMatrix::from_recorded(&rec));
+        for seed in [0u64, 7] {
+            let steps = |jobs: usize| {
+                let mut env = ReplayEnv::new(
+                    rec.clone(),
+                    gpu.clone(),
+                    CostModel::default(),
+                );
+                ProfileSearcher::shared(Arc::clone(&matrix), 0.5, seed)
+                    .with_scoring_jobs(jobs)
+                    .run(&mut env, &Budget::tests(30))
+                    .steps
+                    .iter()
+                    .map(|s| (s.idx, s.profiled, s.runtime_ms.to_bits()))
+                    .collect::<Vec<_>>()
+            };
+            assert_eq!(steps(1), steps(4), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn lazy_profile_tunes_a_million_config_space_in_bounded_memory() {
+        use crate::benchmarks::{by_name, OnDemandRecorder};
+        use crate::searcher::OnDemandEnv;
+
+        let bench = by_name("synth-grid").unwrap();
+        let gpu = GpuSpec::gtx1070();
+        let input = bench.default_input();
+        let recorder =
+            Arc::new(OnDemandRecorder::new(bench, gpu, input));
+        assert!(recorder.space().len() >= 1 << 20);
+
+        let mut env =
+            OnDemandEnv::new(Arc::clone(&recorder), CostModel::default());
+        let trace = LazyProfileSearcher::new(Arc::clone(&recorder), 0.5, 7)
+            .run(&mut env, &Budget::tests(24));
+        assert_eq!(trace.len(), 24);
+        // same 1 profiled + n plain schedule as the eager searcher
+        assert!(trace.steps[0].profiled);
+        assert!(!trace.steps[1].profiled);
+        assert!(trace.steps.iter().all(|s| s.runtime_ms.is_finite()));
+        // plain steps never repeat a configuration
+        let mut plain: Vec<usize> = trace
+            .steps
+            .iter()
+            .filter(|s| !s.profiled)
+            .map(|s| s.idx)
+            .collect();
+        let n_plain = plain.len();
+        plain.sort_unstable();
+        plain.dedup();
+        assert_eq!(plain.len(), n_plain);
+        // the memo holds only the scored balls + visited configs — the
+        // bounded-memory contract (vs 2^20 eager simulations)
+        assert!(
+            recorder.visited() < 10_000,
+            "visited {} of {} configs",
+            recorder.visited(),
+            recorder.space().len()
+        );
+        // runtimes genuinely vary across the visited sample
+        let lo = trace
+            .steps
+            .iter()
+            .map(|s| s.runtime_ms)
+            .fold(f64::MAX, f64::min);
+        let hi = trace
+            .steps
+            .iter()
+            .map(|s| s.runtime_ms)
+            .fold(0.0f64, f64::max);
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn lazy_profile_works_on_small_eager_spaces_too() {
+        use crate::benchmarks::OnDemandRecorder;
+        use crate::searcher::OnDemandEnv;
+
+        // the lazy arm is not restricted to huge spaces: over a small
+        // dense space it must terminate and keep the plain-step
+        // uniqueness invariant even once the space is nearly exhausted
+        let bench = crate::benchmarks::by_name("coulomb").unwrap();
+        let gpu = GpuSpec::gtx750();
+        let input = bench.default_input();
+        let n = bench.space().len();
+        let recorder = Arc::new(OnDemandRecorder::new(bench, gpu, input));
+        let mut env =
+            OnDemandEnv::new(Arc::clone(&recorder), CostModel::default());
+        let trace = LazyProfileSearcher::new(recorder, 0.5, 3)
+            .with_radius(1)
+            .run(&mut env, &Budget::tests(n * 3));
+        assert!(trace.len() <= n * 3);
+        assert!(!trace.is_empty());
     }
 }

@@ -58,7 +58,8 @@ impl Starchart {
 }
 
 fn features(env: &dyn EvalEnv, idx: usize) -> Vec<f64> {
-    env.space().configs[idx]
+    env.space()
+        .config_at(idx)
         .0
         .iter()
         .map(|&v| v as f64)
@@ -72,6 +73,11 @@ impl Searcher for Starchart {
 
     fn run(&mut self, env: &mut dyn EvalEnv, budget: &Budget) -> SearchTrace {
         let size = env.space().len();
+        // degenerate space: nothing to sample or rank — empty trace,
+        // not a panic in the validation-set draw
+        if size == 0 {
+            return SearchTrace::default();
+        }
         let mut trace = SearchTrace::default();
         let mut measured: Vec<Option<f64>> = vec![None; size];
 

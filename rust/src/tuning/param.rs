@@ -36,14 +36,24 @@ impl ParamDef {
     }
 
     pub fn from_json(v: &Value) -> anyhow::Result<Self> {
-        let name = v.get("name")?.as_str().unwrap_or_default().to_string();
+        let name = v
+            .get("name")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("param name must be a string"))?
+            .to_string();
         let values = v
             .get("values")?
             .as_arr()
-            .unwrap_or_default()
+            .ok_or_else(|| {
+                anyhow::anyhow!("param {name:?} values must be an array")
+            })?
             .iter()
-            .filter_map(|x| x.as_i64())
-            .collect();
+            .map(|x| {
+                x.as_i64().ok_or_else(|| {
+                    anyhow::anyhow!("param {name:?} has a non-integer value")
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
         Ok(ParamDef { name, values })
     }
 }
@@ -96,8 +106,12 @@ impl Config {
             v.as_arr()
                 .ok_or_else(|| anyhow::anyhow!("config must be an array"))?
                 .iter()
-                .filter_map(|x| x.as_i64())
-                .collect(),
+                .map(|x| {
+                    x.as_i64().ok_or_else(|| {
+                        anyhow::anyhow!("config has a non-integer value")
+                    })
+                })
+                .collect::<anyhow::Result<_>>()?,
         ))
     }
 }
@@ -133,5 +147,26 @@ mod tests {
     #[should_panic]
     fn empty_values_panic() {
         ParamDef::new("bad", &[]);
+    }
+
+    #[test]
+    fn from_json_rejects_mistyped_values() {
+        use crate::util::json::{obj, Value};
+        // regression: non-integer values used to be silently dropped
+        let bad = obj(vec![
+            ("name", Value::from("x")),
+            (
+                "values",
+                Value::Arr(vec![Value::from(1i64), Value::from("two")]),
+            ),
+        ]);
+        assert!(ParamDef::from_json(&bad).is_err());
+        let bad_name = obj(vec![
+            ("name", Value::from(1i64)),
+            ("values", Value::Arr(vec![Value::from(1i64)])),
+        ]);
+        assert!(ParamDef::from_json(&bad_name).is_err());
+        let bad_cfg = Value::Arr(vec![Value::from(1i64), Value::from("x")]);
+        assert!(Config::from_json(&bad_cfg).is_err());
     }
 }

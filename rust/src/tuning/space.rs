@@ -1,6 +1,23 @@
 //! Tuning-space enumeration: cross product of parameter values pruned by
 //! constraints, with index↔configuration mapping and an indexed
 //! Hamming-ball neighbourhood generator.
+//!
+//! Two storage modes back a [`Space`]:
+//!
+//! - **Dense** — every configuration is materialized in `configs`
+//!   (enumeration order). This is the historical mode; all recorded /
+//!   serialized spaces are dense, and `configs` stays a public field so
+//!   existing callers are untouched.
+//! - **Implicit** — the space is a *full* cross product in odometer
+//!   order and holds no per-configuration storage at all: `config_at`
+//!   decodes any index with stride arithmetic in O(dims). This is the
+//!   ≥1M-config mode — a million-configuration space costs a handful of
+//!   `ParamDef`s, not hundreds of MB.
+//!
+//! Enumeration itself is exposed as [`ConfigStream`], a lazy iterator
+//! over the constraint-pruned cross product; `Space::enumerate` is now a
+//! thin `collect()` over it, so the eager and streaming paths are
+//! byte-identical by construction.
 
 use std::collections::HashMap;
 use std::sync::{Arc, OnceLock};
@@ -8,12 +25,136 @@ use std::sync::{Arc, OnceLock};
 use super::{Config, ParamDef};
 use crate::util::json::Value;
 
+/// Lazy odometer enumeration of a constraint-pruned cross product.
+///
+/// Yields exactly the configurations `Space::enumerate` materializes, in
+/// exactly the same (row-major, last-parameter-fastest) order — the
+/// eager path is implemented on top of this iterator, and a property
+/// test pins the equivalence. A parameter with an *empty* value list
+/// makes the cross product empty: the stream yields nothing instead of
+/// panicking (historically `enumerate` indexed `values[0]` and died).
+pub struct ConfigStream<'p, F>
+where
+    F: Fn(&[i64]) -> bool,
+{
+    params: &'p [ParamDef],
+    constraint: F,
+    idx: Vec<usize>,
+    cur: Vec<i64>,
+    /// Current tuple exists but has not been constraint-tested yet.
+    pending: bool,
+    done: bool,
+}
+
+impl<'p, F> ConfigStream<'p, F>
+where
+    F: Fn(&[i64]) -> bool,
+{
+    pub fn new(params: &'p [ParamDef], constraint: F) -> Self {
+        let empty_axis = params.iter().any(|p| p.values.is_empty());
+        ConfigStream {
+            idx: vec![0; params.len()],
+            cur: params
+                .iter()
+                .map(|p| p.values.first().copied().unwrap_or(0))
+                .collect(),
+            params,
+            constraint,
+            pending: !empty_axis,
+            done: empty_axis,
+        }
+    }
+
+    /// Odometer increment; `false` once every tuple has been visited.
+    fn advance(&mut self) -> bool {
+        for d in (0..self.params.len()).rev() {
+            self.idx[d] += 1;
+            if self.idx[d] < self.params[d].values.len() {
+                self.cur[d] = self.params[d].values[self.idx[d]];
+                return true;
+            }
+            self.idx[d] = 0;
+            self.cur[d] = self.params[d].values[0];
+        }
+        false
+    }
+
+    /// Append up to `max` configurations to `out`, returning how many
+    /// were produced (0 ⇔ exhausted). The chunked form of the stream:
+    /// callers that want cache-friendly batches without a full
+    /// materialization drain the space `max` configs at a time through
+    /// one reused buffer.
+    pub fn next_chunk(&mut self, max: usize, out: &mut Vec<Config>) -> usize {
+        let before = out.len();
+        for cfg in self.by_ref().take(max) {
+            out.push(cfg);
+        }
+        out.len() - before
+    }
+}
+
+impl<'p, F> Iterator for ConfigStream<'p, F>
+where
+    F: Fn(&[i64]) -> bool,
+{
+    type Item = Config;
+
+    fn next(&mut self) -> Option<Config> {
+        while !self.done {
+            if self.pending {
+                self.pending = false;
+            } else if !self.advance() {
+                self.done = true;
+                break;
+            }
+            if (self.constraint)(&self.cur) {
+                return Some(Config(self.cur.clone()));
+            }
+        }
+        None
+    }
+}
+
+/// Implicit full-cross-product geometry: total length plus odometer
+/// strides, enough to decode any index in O(dims) without storing a
+/// single configuration.
+#[derive(Debug, Clone)]
+struct ImplicitGrid {
+    len: usize,
+    strides: Vec<usize>,
+}
+
+impl ImplicitGrid {
+    fn of(params: &[ParamDef]) -> Option<ImplicitGrid> {
+        let mut strides = vec![0usize; params.len()];
+        let mut len = 1usize;
+        for d in (0..params.len()).rev() {
+            strides[d] = len;
+            len = len.checked_mul(params[d].values.len())?;
+        }
+        Some(ImplicitGrid { len, strides })
+    }
+
+    fn decode_into(&self, params: &[ParamDef], i: usize, out: &mut Vec<i64>) {
+        out.clear();
+        for d in 0..params.len() {
+            let card = params[d].values.len();
+            out.push(params[d].values[i / self.strides[d] % card]);
+        }
+    }
+}
+
 /// An enumerated (constraint-pruned) tuning space.
 #[derive(Debug, Clone)]
 pub struct Space {
     pub name: String,
     pub params: Vec<ParamDef>,
+    /// Dense storage: every configuration in enumeration order. Empty
+    /// for implicit spaces — use [`Space::config_at`] / [`Space::len`]
+    /// instead of touching this field when the space may be implicit.
     pub configs: Vec<Config>,
+    /// `Some` ⇔ the space is an implicit full cross product.
+    implicit: Option<ImplicitGrid>,
     by_name: HashMap<String, usize>,
     /// Lazily built neighbourhood index, shared across clones (the
     /// profile searcher clones the space per run for its local variant).
@@ -24,31 +165,53 @@ impl Space {
     /// Enumerate the cross product of `params`, keeping configurations
     /// accepted by `constraint`. Enumeration order is row-major with the
     /// *last* parameter fastest (odometer order), which makes the index
-    /// of a configuration deterministic.
+    /// of a configuration deterministic. A parameter with no values
+    /// yields an empty space (the cross product with an empty axis is
+    /// empty) rather than panicking.
     pub fn enumerate<F>(name: &str, params: Vec<ParamDef>, constraint: F) -> Space
     where
         F: Fn(&[i64]) -> bool,
     {
-        let mut configs = Vec::new();
-        let mut idx = vec![0usize; params.len()];
-        let mut cur: Vec<i64> = params.iter().map(|p| p.values[0]).collect();
-        'outer: loop {
-            if constraint(&cur) {
-                configs.push(Config(cur.clone()));
-            }
-            // odometer increment
-            for d in (0..params.len()).rev() {
-                idx[d] += 1;
-                if idx[d] < params[d].values.len() {
-                    cur[d] = params[d].values[idx[d]];
-                    continue 'outer;
-                }
-                idx[d] = 0;
-                cur[d] = params[d].values[0];
-            }
-            break;
-        }
+        let configs = ConfigStream::new(&params, constraint).collect();
         Space::from_configs(name, params, configs)
+    }
+
+    /// The lazy counterpart of [`enumerate`](Space::enumerate) for
+    /// callers that stream instead of materializing.
+    pub fn stream<F>(params: &[ParamDef], constraint: F) -> ConfigStream<'_, F>
+    where
+        F: Fn(&[i64]) -> bool,
+    {
+        ConfigStream::new(params, constraint)
+    }
+
+    /// An implicit full-cross-product space: no constraint, no stored
+    /// configurations — `config_at` decodes indices on demand. This is
+    /// how ≥1M-config spaces stay a few hundred bytes. Falls back to
+    /// (dense) `enumerate` if the product overflows `usize` (can't
+    /// happen for realistic spaces) so `len()` is always exact.
+    pub fn enumerate_implicit(name: &str, params: Vec<ParamDef>) -> Space {
+        if params.iter().any(|p| p.values.is_empty()) {
+            return Space::from_configs(name, params, Vec::new());
+        }
+        match ImplicitGrid::of(&params) {
+            Some(grid) => {
+                let by_name = params
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| (p.name.clone(), i))
+                    .collect();
+                Space {
+                    name: name.to_string(),
+                    params,
+                    configs: Vec::new(),
+                    implicit: Some(grid),
+                    by_name,
+                    nb_index: OnceLock::new(),
+                }
+            }
+            None => Space::enumerate(name, params, |_| true),
+        }
     }
 
     pub fn from_configs(
@@ -65,17 +228,43 @@ impl Space {
             name: name.to_string(),
             params,
             configs,
+            implicit: None,
             by_name,
             nb_index: OnceLock::new(),
         }
     }
 
     pub fn len(&self) -> usize {
-        self.configs.len()
+        match &self.implicit {
+            Some(grid) => grid.len,
+            None => self.configs.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.configs.is_empty()
+        self.len() == 0
+    }
+
+    /// Whether the space stores configurations implicitly (odometer
+    /// decode) rather than densely.
+    pub fn is_implicit(&self) -> bool {
+        self.implicit.is_some()
+    }
+
+    /// The configuration at enumeration index `i`, regardless of storage
+    /// mode. Dense spaces clone the stored configuration; implicit
+    /// spaces decode it with stride arithmetic. Storage-agnostic callers
+    /// (searchers, the coordinator, on-demand recording) go through
+    /// this; eager-only code may keep indexing `configs` directly.
+    pub fn config_at(&self, i: usize) -> Config {
+        match &self.implicit {
+            Some(grid) => {
+                let mut v = Vec::with_capacity(self.params.len());
+                grid.decode_into(&self.params, i, &mut v);
+                Config(v)
+            }
+            None => self.configs[i].clone(),
+        }
     }
 
     /// Number of tuning parameters ("dimensions" in the paper's Table 2).
@@ -114,15 +303,34 @@ impl Space {
     /// Kept as the fallback for degenerate spaces and as the ground
     /// truth the property tests compare the index against.
     pub fn neighbours_scan(&self, from: &Config, radius: usize) -> Vec<usize> {
-        self.configs
-            .iter()
-            .enumerate()
-            .filter(|(_, c)| {
-                let d = c.hamming(from);
-                d > 0 && d <= radius
-            })
-            .map(|(i, _)| i)
-            .collect()
+        match &self.implicit {
+            None => self
+                .configs
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| {
+                    let d = c.hamming(from);
+                    d > 0 && d <= radius
+                })
+                .map(|(i, _)| i)
+                .collect(),
+            Some(grid) => {
+                let mut out = Vec::new();
+                let mut scratch = Vec::with_capacity(self.params.len());
+                for i in 0..grid.len {
+                    grid.decode_into(&self.params, i, &mut scratch);
+                    let d = scratch
+                        .iter()
+                        .zip(&from.0)
+                        .filter(|(a, b)| a != b)
+                        .count();
+                    if d > 0 && d <= radius {
+                        out.push(i);
+                    }
+                }
+                out
+            }
+        }
     }
 
     /// The space's neighbourhood index, built on first use and shared
@@ -142,26 +350,40 @@ impl Space {
             ),
             (
                 "configs",
-                Value::Arr(self.configs.iter().map(|c| c.to_json()).collect()),
+                Value::Arr(
+                    (0..self.len()).map(|i| self.config_at(i).to_json()).collect(),
+                ),
             ),
         ])
     }
 
     pub fn from_json(v: &Value) -> anyhow::Result<Space> {
-        let name = v.get("name")?.as_str().unwrap_or_default().to_string();
+        use anyhow::Context;
+        let name = v
+            .get("name")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("space name must be a string"))?
+            .to_string();
         let params: Vec<ParamDef> = v
             .get("params")?
             .as_arr()
-            .unwrap_or_default()
+            .ok_or_else(|| anyhow::anyhow!("space params must be an array"))?
             .iter()
-            .map(ParamDef::from_json)
+            .enumerate()
+            .map(|(i, p)| {
+                ParamDef::from_json(p)
+                    .with_context(|| format!("space param {i}"))
+            })
             .collect::<anyhow::Result<_>>()?;
         let configs: Vec<Config> = v
             .get("configs")?
             .as_arr()
-            .unwrap_or_default()
+            .ok_or_else(|| anyhow::anyhow!("space configs must be an array"))?
             .iter()
-            .map(Config::from_json)
+            .enumerate()
+            .map(|(i, c)| {
+                Config::from_json(c).with_context(|| format!("space config {i}"))
+            })
             .collect::<anyhow::Result<_>>()?;
         Ok(Space::from_configs(&name, params, configs))
     }
@@ -225,6 +447,17 @@ impl NeighbourIndex {
             return NeighbourIndex {
                 value_pos,
                 lookup: Lookup::Scan,
+            };
+        }
+
+        // Implicit spaces are odometer-ordered full cross products by
+        // construction — no materialized configurations to verify.
+        if let Some(grid) = &space.implicit {
+            return NeighbourIndex {
+                value_pos,
+                lookup: Lookup::Odometer {
+                    strides: grid.strides.clone(),
+                },
             };
         }
 
@@ -431,6 +664,102 @@ mod tests {
     }
 
     #[test]
+    fn streaming_enumeration_matches_eager_byte_for_byte() {
+        let params = vec![
+            ParamDef::new("a", &[1, 2, 3, 4]),
+            ParamDef::new("b", &[1, 2, 3, 4]),
+            ParamDef::new("c", &[0, 1]),
+        ];
+        let constraint = |v: &[i64]| v[0] * v[1] <= 6;
+        let eager =
+            Space::enumerate("s", params.clone(), constraint);
+        let streamed: Vec<Config> =
+            Space::stream(&params, constraint).collect();
+        assert_eq!(eager.configs, streamed);
+    }
+
+    #[test]
+    fn chunked_streaming_matches_eager() {
+        let params = vec![
+            ParamDef::new("a", &[1, 2, 3, 4, 5]),
+            ParamDef::new("b", &[1, 2, 3]),
+        ];
+        let constraint = |v: &[i64]| (v[0] + v[1]) % 2 == 0;
+        let eager = Space::enumerate("s", params.clone(), constraint);
+        let mut stream = Space::stream(&params, constraint);
+        let mut chunked: Vec<Config> = Vec::new();
+        while stream.next_chunk(3, &mut chunked) > 0 {}
+        assert_eq!(eager.configs, chunked);
+    }
+
+    #[test]
+    fn empty_value_list_yields_empty_space_not_panic() {
+        // regression: `enumerate` used to index `values[0]` and die
+        let params = vec![
+            ParamDef::new("a", &[1, 2]),
+            ParamDef {
+                name: "empty".to_string(),
+                values: Vec::new(),
+            },
+        ];
+        let s = Space::enumerate("degenerate", params.clone(), |_| true);
+        assert!(s.is_empty());
+        assert_eq!(Space::stream(&params, |_| true).count(), 0);
+        let implicit = Space::enumerate_implicit("degenerate-imp", params);
+        assert!(implicit.is_empty());
+    }
+
+    #[test]
+    fn zero_dim_space_has_one_empty_config() {
+        let s = Space::enumerate("nil", Vec::new(), |_| true);
+        assert_eq!(s.len(), 1);
+        assert!(s.configs[0].is_empty());
+    }
+
+    #[test]
+    fn implicit_space_matches_dense_enumeration() {
+        let params = vec![
+            ParamDef::new("a", &[1, 2, 3]),
+            ParamDef::new("b", &[0, 1]),
+            ParamDef::new("c", &[7, 8, 9, 10]),
+        ];
+        let dense = Space::enumerate("d", params.clone(), |_| true);
+        let lazy = Space::enumerate_implicit("d", params);
+        assert!(lazy.is_implicit());
+        assert!(lazy.configs.is_empty(), "implicit spaces store nothing");
+        assert_eq!(lazy.len(), dense.len());
+        for i in 0..dense.len() {
+            assert_eq!(lazy.config_at(i), dense.configs[i], "index {i}");
+            assert_eq!(dense.config_at(i), dense.configs[i]);
+        }
+    }
+
+    #[test]
+    fn implicit_neighbours_match_dense() {
+        let params = vec![
+            ParamDef::new("a", &[1, 2, 3]),
+            ParamDef::new("b", &[0, 1]),
+            ParamDef::new("c", &[7, 8, 9]),
+        ];
+        let dense = Space::enumerate("d", params.clone(), |_| true);
+        let lazy = Space::enumerate_implicit("d", params);
+        for radius in 1..=2 {
+            for i in (0..dense.len()).step_by(5) {
+                let from = dense.configs[i].clone();
+                assert_eq!(
+                    lazy.neighbours(&from, radius),
+                    dense.neighbours(&from, radius),
+                    "radius {radius}, index {i}"
+                );
+                assert_eq!(
+                    lazy.neighbours_scan(&from, radius),
+                    dense.neighbours_scan(&from, radius),
+                );
+            }
+        }
+    }
+
+    #[test]
     fn value_by_name() {
         let s = toy();
         assert_eq!(s.value(&s.configs[4], "a"), 3);
@@ -519,5 +848,30 @@ mod tests {
         assert_eq!(back.len(), s.len());
         assert_eq!(back.params, s.params);
         assert_eq!(back.configs, s.configs);
+    }
+
+    #[test]
+    fn from_json_rejects_mistyped_fields() {
+        use crate::util::json::{obj, Value};
+        // regression: mistyped name/params/configs used to
+        // `unwrap_or_default()` into an empty space (silent data loss)
+        let bad_name = obj(vec![
+            ("name", Value::from(3.0)),
+            ("params", Value::Arr(Vec::new())),
+            ("configs", Value::Arr(Vec::new())),
+        ]);
+        assert!(Space::from_json(&bad_name).is_err());
+        let bad_params = obj(vec![
+            ("name", Value::from("s".to_string())),
+            ("params", Value::from("not-an-array".to_string())),
+            ("configs", Value::Arr(Vec::new())),
+        ]);
+        assert!(Space::from_json(&bad_params).is_err());
+        let bad_configs = obj(vec![
+            ("name", Value::from("s".to_string())),
+            ("params", Value::Arr(Vec::new())),
+            ("configs", Value::from(1.0)),
+        ]);
+        assert!(Space::from_json(&bad_configs).is_err());
     }
 }

@@ -209,12 +209,26 @@ impl WeightedIndex {
                 return Some(i);
             }
         }
-        let pool: Vec<usize> =
-            (0..self.n).filter(|&i| eligible[i]).collect();
-        if pool.is_empty() {
+        // Uniform fallback without materializing an index pool: count
+        // the eligible indices, draw a rank, scan to it. Same single
+        // rng draw and same (index-ascending) rank → index mapping as
+        // the old `Vec`-building code — traces are unchanged — but no
+        // O(N) allocation per fallback, which under hostile fault
+        // profiles used to happen every failed round.
+        let count = eligible.iter().filter(|&&e| e).count();
+        if count == 0 {
             return None;
         }
-        Some(pool[rng.below(pool.len())])
+        let mut rank = rng.below(count);
+        for (i, &e) in eligible.iter().enumerate() {
+            if e {
+                if rank == 0 {
+                    return Some(i);
+                }
+                rank -= 1;
+            }
+        }
+        unreachable!("rank within eligible count")
     }
 }
 

@@ -81,6 +81,47 @@ where
         .collect()
 }
 
+/// Apply `f` to contiguous `chunk_len`-sized pieces of `data` with up
+/// to `jobs` worker threads. `f` receives `(offset, chunk)` where
+/// `offset` is the chunk's start index in `data`.
+///
+/// Chunks are assigned to workers statically (round-robin), which is
+/// both deterministic and sufficient for uniform-cost work like the
+/// batched scoring round. The result is trivially independent of
+/// `jobs`: chunks are disjoint and `f` writes only its own chunk, so
+/// any schedule produces the same bytes. `jobs <= 1` (or a single
+/// chunk) degenerates to a serial loop with no spawn overhead.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, jobs: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let n_chunks = (data.len() + chunk_len - 1) / chunk_len;
+    let jobs = jobs.clamp(1, n_chunks.max(1));
+    if jobs == 1 {
+        for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+            f(i * chunk_len, c);
+        }
+        return;
+    }
+    let mut buckets: Vec<Vec<(usize, &mut [T])>> =
+        (0..jobs).map(|_| Vec::new()).collect();
+    for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+        buckets[i % jobs].push((i * chunk_len, c));
+    }
+    let fref = &f;
+    std::thread::scope(|scope| {
+        for bucket in buckets {
+            scope.spawn(move || {
+                for (off, c) in bucket {
+                    fref(off, c);
+                }
+            });
+        }
+    });
+}
+
 /// [`par_map_jobs`] with the process-wide default worker count.
 pub fn par_map<T, F>(n: usize, f: &F) -> Vec<T>
 where
@@ -116,6 +157,25 @@ mod tests {
         let serial = par_map_jobs(257, 1, &|i| i * i % 1013);
         let wide = par_map_jobs(257, 16, &|i| i * i % 1013);
         assert_eq!(serial, wide);
+    }
+
+    #[test]
+    fn chunked_mutation_is_schedule_independent() {
+        let want: Vec<usize> = (0..1000).map(|i| i * 7 + 1).collect();
+        for jobs in [1, 2, 5, 16] {
+            for chunk in [1, 3, 64, 1000, 4096] {
+                let mut data = vec![0usize; 1000];
+                par_chunks_mut(&mut data, chunk, jobs, |off, c| {
+                    for (k, v) in c.iter_mut().enumerate() {
+                        *v = (off + k) * 7 + 1;
+                    }
+                });
+                assert_eq!(data, want, "jobs={jobs} chunk={chunk}");
+            }
+        }
+        // empty input is a no-op, not a panic
+        let mut empty: Vec<usize> = Vec::new();
+        par_chunks_mut(&mut empty, 8, 4, |_, _| unreachable!());
     }
 
     #[test]

@@ -7,7 +7,11 @@
 # The report captures the columnar-scoring-engine before/after numbers
 # (AoS + linear-scan baseline vs matrix + Fenwick engine — see the
 # README "Performance" section) so successive PRs can compare against a
-# recorded baseline instead of folklore.
+# recorded baseline instead of folklore. It also carries the
+# large-space lane: streaming enumeration of the >1M-config synthetic
+# grid, serial-vs-batched score_all (asserted bit-identical), and a
+# lazy on-demand tune whose visited-config count is the bounded-memory
+# acceptance number (`lazy_visited_fraction` in the derived block).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

@@ -15,6 +15,13 @@
 #                                  # transfer oracle + transfer tree + sweep
 #                                  # + hostile fault profile + serve load
 #                                  # generator) + golden diffs
+#   scripts/ci-local.sh largespace # fast large-space smoke: tune the
+#                                  # synthetic 4^10 (>1M config) benchmark
+#                                  # end-to-end through the on-demand
+#                                  # recorder; gated on --jobs 1 vs
+#                                  # --jobs 8 byte-identity only (no
+#                                  # golden — the six goldens above stay
+#                                  # untouched by this lane)
 #   scripts/ci-local.sh registry   # experiment-registry trend gate: append
 #                                  # the six smoke reports to a scratch
 #                                  # registry, check the append→query
@@ -136,6 +143,25 @@ run_smoke() {
     smoke_gate serve "$SERVE_GOLDEN"
 }
 
+# Large-space smoke: a >1M-config matrix cell runs end to end through
+# the on-demand recorder (nothing space-sized is ever materialized) and
+# stays byte-identical across worker counts. Deliberately golden-less:
+# the lane proves determinism and bounded memory, while the six blessed
+# goldens above keep gating the eager paths byte-for-byte.
+run_largespace() {
+    run_build
+    mkdir -p "$SMOKE_OUT"
+    local flags=(--seed 0 --seeds 2 --budget 18
+                 --benchmarks synth-grid --gpus gtx1070
+                 --searchers profile,random)
+    rust/target/release/pcat matrix "${flags[@]}" \
+        --jobs 1 --out "$SMOKE_OUT/largespace.jobs1.json"
+    rust/target/release/pcat matrix "${flags[@]}" \
+        --jobs 8 --out "$SMOKE_OUT/largespace.jobs8.json"
+    cmp "$SMOKE_OUT/largespace.jobs1.json" "$SMOKE_OUT/largespace.jobs8.json"
+    echo "largespace: >1M-config tune is byte-identical at --jobs 1 and 8"
+}
+
 # Append the six smoke reports (jobs 8) to a fresh scratch registry.
 # The faults lane lands under its own plan name (matrix-hostile), so
 # its failure/retry KPIs get a trend series without shadowing the
@@ -211,7 +237,7 @@ run_bless() {
 # failed. This is what lets one CI round report *all* broken gates
 # instead of only the first.
 run_all() {
-    local gates=(fmt clippy build test bench smoke registry)
+    local gates=(fmt clippy build test bench smoke largespace registry)
     local names=() statuses=() failed=0
     for gate in "${gates[@]}"; do
         echo
@@ -244,11 +270,12 @@ case "${1:-all}" in
     test) run_test ;;
     bench) run_bench ;;
     smoke) run_smoke ;;
+    largespace) run_largespace ;;
     registry) run_registry ;;
     bless) run_bless ;;
     all) run_all ;;
     *)
-        echo "usage: $0 [all|fmt|clippy|build|test|bench|smoke|registry|bless]" >&2
+        echo "usage: $0 [all|fmt|clippy|build|test|bench|smoke|largespace|registry|bless]" >&2
         exit 2
         ;;
 esac
