@@ -6,61 +6,23 @@
 //! configuration and the full trace. This is the entry point a
 //! downstream user of the library touches; the experiment harness and
 //! the CLI are built on it.
+//!
+//! Strategies are selected by [`SearcherSpec`] — lifetime-free, parsed
+//! from the CLI axis syntax (`"ga:pop=20"`, `"profile+de"`), and built
+//! against a [`CellCtx`] carrying the model state (a prediction matrix
+//! or an on-demand recorder) that model-reading searchers score with.
+//! The pre-spec `SearcherChoice` enum is gone: every construction path
+//! now goes through [`SearcherSpec::build`].
 
 use std::sync::Arc;
 
 use crate::benchmarks::{cached_space, Benchmark, Input, OnDemandRecorder};
 use crate::gpusim::GpuSpec;
-use crate::model::{PredictionMatrix, TpPcModel};
 use crate::searcher::{
-    BasinHopping, Budget, CostModel, EvalEnv, LazyProfileSearcher,
-    OnDemandEnv, ProfileSearcher, RandomSearcher, ReplayEnv, Searcher,
-    SearchTrace, SimulatedAnnealing, Starchart,
+    Budget, CellCtx, CostModel, EvalEnv, OnDemandEnv, ReplayEnv,
+    SearcherSpec, SearchTrace,
 };
 use crate::tuning::{Config, RecordedSpace};
-
-/// Which search strategy to use.
-pub enum SearcherChoice<'m> {
-    Random,
-    /// Profile-based with a TP→PC model and an `inst_reaction` threshold
-    /// (the model is densified into a [`PredictionMatrix`] at the start
-    /// of the run).
-    Profile {
-        model: &'m dyn TpPcModel,
-        inst_reaction: f64,
-    },
-    /// Profile-based over a prebuilt prediction matrix shared across
-    /// runs — the harness builds one matrix per (benchmark, GPU) cell
-    /// and every seed-repetition scores against the same `Arc` (§Perf).
-    ProfileShared {
-        matrix: Arc<PredictionMatrix>,
-        inst_reaction: f64,
-    },
-    /// Profile-based over an on-demand recorder — the large-space arm:
-    /// neighbourhood-only scoring with lazily simulated predictions,
-    /// for spaces too big to densify into a matrix.
-    ProfileLazy {
-        recorder: Arc<OnDemandRecorder>,
-        inst_reaction: f64,
-    },
-    BasinHopping,
-    Starchart,
-    Annealing,
-}
-
-impl SearcherChoice<'_> {
-    pub fn name(&self) -> &'static str {
-        match self {
-            SearcherChoice::Random => "random",
-            SearcherChoice::Profile { .. }
-            | SearcherChoice::ProfileShared { .. }
-            | SearcherChoice::ProfileLazy { .. } => "profile",
-            SearcherChoice::BasinHopping => "basin_hopping",
-            SearcherChoice::Starchart => "starchart",
-            SearcherChoice::Annealing => "annealing",
-        }
-    }
-}
 
 /// Outcome of one tuning session.
 #[derive(Debug, Clone)]
@@ -144,37 +106,13 @@ impl Tuner {
         self.env.space().len()
     }
 
-    /// Run a search strategy to completion.
-    pub fn run(&mut self, choice: SearcherChoice<'_>) -> TuningResult {
-        let name = choice.name();
-        let trace = match choice {
-            SearcherChoice::Random => {
-                RandomSearcher::new(self.seed).run(&mut *self.env, &self.budget)
-            }
-            SearcherChoice::Profile {
-                model,
-                inst_reaction,
-            } => ProfileSearcher::new(model, inst_reaction, self.seed)
-                .run(&mut *self.env, &self.budget),
-            SearcherChoice::ProfileShared {
-                matrix,
-                inst_reaction,
-            } => ProfileSearcher::shared(matrix, inst_reaction, self.seed)
-                .run(&mut *self.env, &self.budget),
-            SearcherChoice::ProfileLazy {
-                recorder,
-                inst_reaction,
-            } => LazyProfileSearcher::new(recorder, inst_reaction, self.seed)
-                .run(&mut *self.env, &self.budget),
-            SearcherChoice::BasinHopping => {
-                BasinHopping::new(self.seed).run(&mut *self.env, &self.budget)
-            }
-            SearcherChoice::Starchart => {
-                Starchart::new(self.seed).run(&mut *self.env, &self.budget)
-            }
-            SearcherChoice::Annealing => SimulatedAnnealing::new(self.seed)
-                .run(&mut *self.env, &self.budget),
-        };
+    /// Run a search strategy to completion. The tuner's own seed
+    /// overrides the context's, so `with_seed` keeps meaning what it
+    /// always meant regardless of how the context was assembled.
+    pub fn run(&mut self, spec: &SearcherSpec, ctx: &CellCtx) -> TuningResult {
+        let mut searcher = spec.build(&ctx.clone().with_seed(self.seed));
+        let name = searcher.name();
+        let trace = searcher.run(&mut *self.env, &self.budget);
 
         let (best_idx, best_ms) = trace
             .steps
@@ -204,7 +142,12 @@ impl Tuner {
 mod tests {
     use super::*;
     use crate::benchmarks::Coulomb;
-    use crate::model::OracleModel;
+    use crate::model::{OracleModel, PredictionMatrix};
+    use crate::searcher::ModelCtx;
+
+    fn spec(s: &str) -> SearcherSpec {
+        SearcherSpec::parse(s).unwrap()
+    }
 
     #[test]
     fn tuner_runs_random_end_to_end() {
@@ -216,7 +159,7 @@ mod tests {
         )
         .with_budget(Budget::tests(50))
         .with_seed(1);
-        let r = t.run(SearcherChoice::Random);
+        let r = t.run(&spec("random"), &CellCtx::modelless(0));
         assert_eq!(r.tests, 50);
         assert_eq!(r.searcher, "random");
         assert!(r.best_ms.is_finite());
@@ -229,38 +172,49 @@ mod tests {
         let gpu = GpuSpec::gtx1070();
         let rec = cached_space(&Coulomb, &gpu, &Coulomb.default_input());
         let oracle = OracleModel::new(&rec);
+        // a borrowed model densifies into a matrix up front — the spec
+        // layer is lifetime-free by design
+        let ctx = CellCtx::new(
+            ModelCtx::Eager {
+                matrix: Arc::new(PredictionMatrix::build(&rec.space, &oracle)),
+            },
+            0.5,
+            0,
+        );
         let mut t = Tuner::replay(rec, gpu, CostModel::default())
             .with_budget(Budget::tests(30))
             .with_seed(2);
-        let r = t.run(SearcherChoice::Profile {
-            model: &oracle,
-            inst_reaction: 0.5,
-        });
+        let r = t.run(&spec("profile"), &ctx);
         assert_eq!(r.tests, 30);
         assert!(r.profiled_tests >= 4);
         assert_eq!(r.best_config.len(), 7);
     }
 
     #[test]
-    fn shared_matrix_choice_matches_model_choice() {
+    fn densified_model_matches_recorded_matrix() {
         let gpu = GpuSpec::gtx1070();
         let rec = cached_space(&Coulomb, &gpu, &Coulomb.default_input());
         let oracle = OracleModel::new(&rec);
-        let matrix = Arc::new(PredictionMatrix::from_recorded(&rec));
-        let run = |choice: SearcherChoice<'_>| {
+        let run = |ctx: CellCtx| {
             Tuner::replay(Arc::clone(&rec), gpu.clone(), CostModel::default())
                 .with_budget(Budget::tests(30))
                 .with_seed(5)
-                .run(choice)
+                .run(&spec("profile"), &ctx)
         };
-        let a = run(SearcherChoice::Profile {
-            model: &oracle,
-            inst_reaction: 0.5,
-        });
-        let b = run(SearcherChoice::ProfileShared {
-            matrix,
-            inst_reaction: 0.5,
-        });
+        let a = run(CellCtx::new(
+            ModelCtx::Eager {
+                matrix: Arc::new(PredictionMatrix::build(&rec.space, &oracle)),
+            },
+            0.5,
+            0,
+        ));
+        let b = run(CellCtx::new(
+            ModelCtx::Eager {
+                matrix: Arc::new(PredictionMatrix::from_recorded(&rec)),
+            },
+            0.5,
+            0,
+        ));
         assert_eq!(a.searcher, "profile");
         assert_eq!(b.searcher, "profile");
         assert_eq!(a.best_ms, b.best_ms);
@@ -278,15 +232,19 @@ mod tests {
             &GpuSpec::gtx1070(),
             &bench.default_input(),
         );
+        let ctx = CellCtx::new(
+            ModelCtx::Lazy {
+                recorder: Arc::clone(&recorder),
+            },
+            0.5,
+            0,
+        );
         let mut t =
             Tuner::on_demand(Arc::clone(&recorder), CostModel::default())
                 .with_budget(Budget::tests(20))
                 .with_seed(11);
         assert!(t.space_len() > 1_000_000);
-        let r = t.run(SearcherChoice::ProfileLazy {
-            recorder: Arc::clone(&recorder),
-            inst_reaction: 0.5,
-        });
+        let r = t.run(&spec("profile"), &ctx);
         assert_eq!(r.tests, 20);
         assert_eq!(r.searcher, "profile");
         assert_eq!(r.best_config.len(), 10);
@@ -306,7 +264,7 @@ mod tests {
         )
         .with_budget(Budget::tests(40))
         .with_seed(3);
-        let r = t.run(SearcherChoice::BasinHopping);
+        let r = t.run(&spec("basin_hopping"), &CellCtx::modelless(0));
         let best_step = r
             .trace
             .steps
@@ -314,5 +272,22 @@ mod tests {
             .min_by(|a, b| a.runtime_ms.partial_cmp(&b.runtime_ms).unwrap())
             .unwrap();
         assert_eq!(r.best_ms, best_step.runtime_ms);
+    }
+
+    #[test]
+    fn zoo_specs_run_through_the_tuner() {
+        for name in ["ga", "de", "dual_annealing", "annealing", "starchart"] {
+            let mut t = Tuner::simulated(
+                &Coulomb,
+                GpuSpec::gtx1070(),
+                &Coulomb.default_input(),
+                CostModel::default(),
+            )
+            .with_budget(Budget::tests(25))
+            .with_seed(7);
+            let r = t.run(&spec(name), &CellCtx::modelless(0));
+            assert_eq!(r.tests, 25, "{name}");
+            assert!(r.best_ms.is_finite(), "{name}");
+        }
     }
 }

@@ -85,7 +85,8 @@ pub use steps::{avg_steps_to_well_performing, par_map_seeds};
 pub use sweep::{run_sweep_plan, SweepCell, SweepPlan, SweepReport};
 pub use tables::{
     model_quality_matrix, registry_compare_table, registry_query_table,
-    robustness_table, sweep_matrix, transfer_input_matrix, transfer_matrix,
+    robustness_table, searcher_ranking, sweep_matrix, transfer_input_matrix,
+    transfer_matrix,
 };
 pub use transfer::{
     run_transfer_plan, CellId, CounterQuality, EndpointQuality, ModelSource,

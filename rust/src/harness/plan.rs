@@ -28,13 +28,13 @@ use anyhow::{Context, Result};
 use crate::benchmarks::{
     self, cached_recorder, cached_space, OnDemandRecorder, RecordingMode,
 };
-use crate::coordinator::{SearcherChoice, Tuner};
+use crate::coordinator::Tuner;
 use crate::harness::registry;
 use crate::gpusim::GpuSpec;
 use crate::model::PredictionMatrix;
 use crate::searcher::{
-    Budget, CostModel, FaultModel, FaultProfile, FaultStats, FaultyEnv,
-    OnDemandEnv, ReplayEnv,
+    Budget, CellCtx, CostModel, FaultModel, FaultProfile, FaultStats,
+    FaultyEnv, ModelCtx, OnDemandEnv, ReplayEnv, SearcherSpec, SpecError,
 };
 use crate::tuning::RecordedSpace;
 use crate::util::json::{obj, Value};
@@ -42,9 +42,20 @@ use crate::util::pool;
 use crate::util::rng::stream_seed;
 use crate::util::stats::mean;
 
-/// Searcher names the plan runner accepts.
-pub const PLAN_SEARCHERS: [&str; 5] =
-    ["random", "profile", "basin_hopping", "annealing", "starchart"];
+/// Canonical searcher names every plan runner accepts — the historical
+/// five plus the zoo (arxiv 2210.01465). Any [`SearcherSpec`] string
+/// (`"ga:pop=20"`, `"profile+de"`) is also a valid axis entry; this
+/// list is what `full()` fans out over and what error messages cite.
+pub const PLAN_SEARCHERS: [&str; 8] = [
+    "random",
+    "profile",
+    "basin_hopping",
+    "annealing",
+    "starchart",
+    "ga",
+    "de",
+    "dual_annealing",
+];
 
 /// Typed validation error shared by every plan flavour
 /// ([`ExperimentPlan`], [`crate::harness::TransferPlan`]): callers can
@@ -86,6 +97,11 @@ pub enum PlanError {
     /// load generator's Zipf exponent, where `0` (uniform popularity)
     /// is meaningful but there is no upper bound to enforce.
     InvalidKnob { axis: &'static str, value: f64 },
+    /// A searcher axis entry that names a known strategy but fails spec
+    /// validation (unknown parameter, out-of-domain value, malformed
+    /// syntax, bad composition) — `error` carries the typed
+    /// [`SpecError`]'s rendering.
+    InvalidSearcher { spec: String, error: String },
 }
 
 impl std::fmt::Display for PlanError {
@@ -132,6 +148,9 @@ impl std::fmt::Display for PlanError {
                 "invalid value {value} for plan knob {axis:?}: must be \
                  finite and non-negative"
             ),
+            PlanError::InvalidSearcher { spec, error } => {
+                write!(f, "invalid searcher spec {spec:?} in plan: {error}")
+            }
         }
     }
 }
@@ -305,7 +324,11 @@ pub(crate) fn resolve_input_axis(
     axis
 }
 
-/// Shared axis validation: searchers must be in [`PLAN_SEARCHERS`].
+/// Shared axis validation: every searcher entry must parse as a
+/// [`SearcherSpec`] — the same parser that later builds the searcher,
+/// so validation and dispatch cannot drift. Unknown strategy names keep
+/// their historical typed error; known names with bad parameters get
+/// the spec layer's diagnosis verbatim.
 pub(crate) fn validate_searchers(
     axis: &'static str,
     names: &[String],
@@ -314,8 +337,17 @@ pub(crate) fn validate_searchers(
         return Err(PlanError::EmptyAxis(axis));
     }
     for s in names {
-        if !PLAN_SEARCHERS.contains(&s.as_str()) {
-            return Err(PlanError::UnknownSearcher(s.clone()));
+        match SearcherSpec::parse(s) {
+            Ok(_) => {}
+            Err(SpecError::Unknown(name)) => {
+                return Err(PlanError::UnknownSearcher(name));
+            }
+            Err(e) => {
+                return Err(PlanError::InvalidSearcher {
+                    spec: s.clone(),
+                    error: e.to_string(),
+                });
+            }
         }
     }
     Ok(())
@@ -352,12 +384,26 @@ pub struct ExperimentPlan {
     /// only when a profile is active, mirroring the input-axis
     /// convention.
     pub fault_profile: FaultProfile,
+    /// Principled stopping (arxiv 2203.13577): end a job after this
+    /// many consecutive tests without improvement. `None` (the
+    /// default) keeps the historical budgets — and, like the fault and
+    /// input conventions, keeps stopping fields out of the report
+    /// bytes entirely.
+    pub patience: Option<usize>,
+    /// Relative-improvement epsilon sharpening the patience rule: a
+    /// test only resets the counter when it beats the incumbent best
+    /// by more than this fraction. Inert unless `patience` is set.
+    pub epsilon: f64,
 }
 
 impl ExperimentPlan {
-    /// The paper's evaluation matrix (§4): 5 benchmarks × 4 GPUs ×
-    /// 5 searchers × `seeds` repetitions.
+    /// The paper's evaluation matrix (§4), extended with the zoo: 5
+    /// benchmarks × 4 GPUs × (8 base searchers + 1 augmented lane) ×
+    /// `seeds` repetitions — the nightly full matrix ranks every
+    /// strategy the registry knows.
     pub fn full(seeds: usize, base_seed: u64) -> Self {
+        let mut searchers = PLAN_SEARCHERS.map(String::from).to_vec();
+        searchers.push("profile+ga".into());
         ExperimentPlan {
             benchmarks: ["coulomb", "transpose", "gemm", "nbody", "convolution"]
                 .map(String::from)
@@ -366,29 +412,47 @@ impl ExperimentPlan {
                 .map(String::from)
                 .to_vec(),
             inputs: vec!["default".into()],
-            searchers: PLAN_SEARCHERS.map(String::from).to_vec(),
+            searchers,
             seeds,
             base_seed,
             max_tests: 1000,
             include_traces: false,
             fault_profile: FaultProfile::None,
+            patience: None,
+            epsilon: 0.0,
         }
     }
 
-    /// The CI smoke matrix: 2 benchmarks × 1 GPU × 2 searchers ×
-    /// 3 seeds — small enough to gate a PR, rich enough to exercise the
-    /// cache, both searcher families and the aggregation path.
+    /// The CI smoke matrix: 2 benchmarks × 1 GPU × the 9-strategy zoo
+    /// (8 base searchers + one `profile+` composition) × 3 seeds —
+    /// small enough to gate a PR, rich enough to exercise the cache,
+    /// every searcher family and the aggregation path. `random` and
+    /// `profile` stay first so the historical lanes keep their
+    /// positions (and their RNG streams — searcher strings are the
+    /// stream tags, independent of axis order).
     pub fn smoke(base_seed: u64) -> Self {
         ExperimentPlan {
             benchmarks: vec!["coulomb".into(), "transpose".into()],
             gpus: vec!["gtx1070".into()],
             inputs: vec!["default".into()],
-            searchers: vec!["random".into(), "profile".into()],
+            searchers: vec![
+                "random".into(),
+                "profile".into(),
+                "basin_hopping".into(),
+                "starchart".into(),
+                "annealing".into(),
+                "ga".into(),
+                "de".into(),
+                "dual_annealing".into(),
+                "profile+ga".into(),
+            ],
             seeds: 3,
             base_seed,
             max_tests: 80,
             include_traces: true,
             fault_profile: FaultProfile::None,
+            patience: None,
+            epsilon: 0.0,
         }
     }
 
@@ -406,6 +470,14 @@ impl ExperimentPlan {
     /// report bytes and plan hashes.
     pub fn has_faults(&self) -> bool {
         self.fault_profile.is_active()
+    }
+
+    /// Does this plan arm the principled stopping criteria? Stopping
+    /// fields (plan echo, per-job stop reasons, per-cell stop counts)
+    /// serialize only when it does — same bit-for-bit convention as
+    /// the input axis and the fault layer.
+    pub fn has_stopping(&self) -> bool {
+        self.patience.is_some()
     }
 
     /// Expand into jobs, in deterministic plan order. Input selectors
@@ -475,6 +547,13 @@ impl ExperimentPlan {
                 "fault_profile",
                 Value::from(self.fault_profile.name()),
             ));
+        }
+        if self.has_stopping() {
+            fields.push((
+                "patience",
+                Value::from(self.patience.expect("has_stopping")),
+            ));
+            fields.push(("epsilon", Value::from(self.epsilon)));
         }
         obj(fields)
     }
@@ -587,10 +666,14 @@ pub struct JobResult {
     pub trace: Vec<(usize, f64, bool)>,
     /// Fault accounting for this job; `None` on fault-free plans.
     pub faults: Option<FaultStats>,
+    /// Which budget criterion ended the search
+    /// ([`crate::searcher::StopReason::name`]); `None` unless the plan
+    /// arms the stopping criteria.
+    pub stop: Option<&'static str>,
 }
 
 /// Shared per-(benchmark, gpu) context, built once before the fan-out.
-struct CellCtx {
+struct PlanCell {
     data: CellData,
     gpu: GpuSpec,
     inst_reaction: f64,
@@ -616,9 +699,9 @@ enum CellData {
 }
 
 /// The expert reaction strength for a benchmark's boundedness class —
-/// the one knob [`searcher_choice`]'s profile arm needs besides the
-/// matrix. Shared by the plan pre-pass and the serve engine's
-/// cache-miss search so the two cannot drift.
+/// the one knob the profile arm needs besides the matrix. Shared by
+/// the plan pre-pass and the serve engine's cache-miss search so the
+/// two cannot drift.
 pub(crate) fn inst_reaction_for(bench: &dyn benchmarks::Benchmark) -> f64 {
     if bench.instruction_bound() {
         crate::expert::INST_BOUND_REACTION
@@ -627,80 +710,57 @@ pub(crate) fn inst_reaction_for(bench: &dyn benchmarks::Benchmark) -> f64 {
     }
 }
 
-/// Does this searcher consume the cell's model matrix — i.e. can its
-/// results differ across the *source* axis of a transfer plan? Kept
-/// next to [`searcher_choice`] so the transfer fan-out's source-axis
-/// deduplication is mechanically tied to the dispatch: when a new arm
-/// below starts reading the matrix (or `inst_reaction`), this
-/// predicate is the one other place that must change.
+/// Does this searcher spec consume the cell's model — i.e. can its
+/// results differ across the *source* axis of a transfer plan? Asked
+/// of the spec layer, so the transfer fan-out's source-axis
+/// deduplication is mechanically tied to how searchers are actually
+/// built: any spec the parser marks model-reading (`profile`, every
+/// `profile+<base>` composition) fans out per source; everything else
+/// dedups. Unparseable names land on the model-free side — validation
+/// rejects them before any fan-out cares.
 pub(crate) fn reads_model(name: &str) -> bool {
-    name == "profile"
+    SearcherSpec::parse(name)
+        .map(|s| s.reads_model())
+        .unwrap_or(false)
 }
 
-/// The one name → [`SearcherChoice`] dispatch shared by every plan
-/// runner (same-cell and transfer), kept next to [`PLAN_SEARCHERS`] so
-/// the two cannot drift: a name that passes validation always has an
-/// arm here. Profile runs over the cell's shared prediction matrix.
-pub(crate) fn searcher_choice(
-    name: &str,
-    matrix: &Arc<PredictionMatrix>,
-    inst_reaction: f64,
-) -> SearcherChoice<'static> {
-    match name {
-        "random" => SearcherChoice::Random,
-        "profile" => SearcherChoice::ProfileShared {
+/// The cell's searcher-construction context: its model state (dense
+/// matrix on eager cells, shared recorder on lazy ones) plus the
+/// benchmark's reaction strength. The seed is a placeholder — the
+/// [`Tuner`] overrides it with the job's stream seed.
+fn cell_searcher_ctx(data: &CellData, inst_reaction: f64) -> CellCtx {
+    let model = match data {
+        CellData::Eager { matrix, .. } => ModelCtx::Eager {
             matrix: Arc::clone(matrix),
-            inst_reaction,
         },
-        "basin_hopping" => SearcherChoice::BasinHopping,
-        "annealing" => SearcherChoice::Annealing,
-        "starchart" => SearcherChoice::Starchart,
-        other => unreachable!("plan validated, got searcher {other:?}"),
-    }
-}
-
-/// [`searcher_choice`] for on-demand cells: the profile arm scores
-/// lazily through the shared recorder instead of a dense matrix; the
-/// model-free searchers are unchanged (they only ever see the
-/// environment).
-pub(crate) fn searcher_choice_lazy(
-    name: &str,
-    recorder: &Arc<OnDemandRecorder>,
-    inst_reaction: f64,
-) -> SearcherChoice<'static> {
-    match name {
-        "profile" => SearcherChoice::ProfileLazy {
+        CellData::Lazy { recorder } => ModelCtx::Lazy {
             recorder: Arc::clone(recorder),
-            inst_reaction,
         },
-        "random" => SearcherChoice::Random,
-        "basin_hopping" => SearcherChoice::BasinHopping,
-        "annealing" => SearcherChoice::Annealing,
-        "starchart" => SearcherChoice::Starchart,
-        other => unreachable!("plan validated, got searcher {other:?}"),
-    }
+    };
+    CellCtx::new(model, inst_reaction, 0)
 }
 
-/// Run one job through the [`Tuner`] facade (one shared searcher
-/// dispatch for coordinator, CLI and harness).
-fn run_job(spec: &JobSpec, plan: &ExperimentPlan, ctx: &CellCtx) -> JobResult {
+/// Run one job through the [`Tuner`] facade. The searcher is built by
+/// [`SearcherSpec::build`] — the same dispatch point the transfer
+/// runner, the serve engine and the CLI use, so a spec that validates
+/// always constructs.
+fn run_job(spec: &JobSpec, plan: &ExperimentPlan, ctx: &PlanCell) -> JobResult {
+    let sspec = SearcherSpec::parse(&spec.searcher).expect("plan validated");
+    let sctx = cell_searcher_ctx(&ctx.data, ctx.inst_reaction);
     // Eager cells stop early at 1.1× the known best (the paper's
     // well-performing threshold); lazy cells have no known best, so
     // they run to the test budget and convergence is judged post-hoc.
-    let (choice, thr) = match &ctx.data {
-        CellData::Eager { rec, matrix } => (
-            searcher_choice(&spec.searcher, matrix, ctx.inst_reaction),
-            Some(rec.best_time() * 1.1),
-        ),
-        CellData::Lazy { recorder } => (
-            searcher_choice_lazy(&spec.searcher, recorder, ctx.inst_reaction),
-            None,
-        ),
+    let thr = match &ctx.data {
+        CellData::Eager { rec, .. } => Some(rec.best_time() * 1.1),
+        CellData::Lazy { .. } => None,
     };
-    let budget = match thr {
+    let mut budget = match thr {
         Some(thr) => Budget::until(thr, plan.max_tests),
         None => Budget::tests(plan.max_tests),
     };
+    if let Some(k) = plan.patience {
+        budget = budget.with_patience(k).with_epsilon(plan.epsilon);
+    }
     let seed = spec.rng_seed(plan.base_seed);
 
     // fault-free plans take the exact historical path (no wrapper, no
@@ -732,9 +792,9 @@ fn run_job(spec: &JobSpec, plan: &ExperimentPlan, ctx: &CellCtx) -> JobResult {
             )),
         };
         let result = Tuner::over(env)
-            .with_budget(budget)
+            .with_budget(budget.clone())
             .with_seed(seed)
-            .run(choice);
+            .run(&sspec, &sctx);
         let faults = crate::util::sync::lock_unpoisoned(&stats).clone();
         (result, Some(faults))
     } else {
@@ -748,7 +808,10 @@ fn run_job(spec: &JobSpec, plan: &ExperimentPlan, ctx: &CellCtx) -> JobResult {
                 OnDemandEnv::new(Arc::clone(recorder), CostModel::default()),
             )),
         };
-        let result = tuner.with_budget(budget).with_seed(seed).run(choice);
+        let result = tuner
+            .with_budget(budget.clone())
+            .with_seed(seed)
+            .run(&sspec, &sctx);
         (result, None)
     };
 
@@ -759,6 +822,13 @@ fn run_job(spec: &JobSpec, plan: &ExperimentPlan, ctx: &CellCtx) -> JobResult {
         profiled_tests: result.profiled_tests,
         tests_to_wp: thr.and_then(|t| result.trace.tests_to_threshold(t)),
         cost_s: result.cost_s,
+        // stop accounting only when the plan arms the criteria — the
+        // reason is recomputed post-hoc from the budget and the trace
+        stop: if plan.has_stopping() {
+            Some(budget.stop_reason(&result.trace, result.cost_s).name())
+        } else {
+            None
+        },
         trace: if plan.include_traces {
             result
                 .trace
@@ -800,6 +870,11 @@ pub struct AggregateRow {
     pub mean_retries: f64,
     /// Mean tuning cost wasted on failed attempts per job, seconds.
     pub mean_wasted_cost_s: f64,
+    /// How many of the cell's runs ended under each stopping criterion
+    /// ([`crate::searcher::StopReason::name`] → count, sorted by
+    /// reason). Empty (and unserialized) unless the plan arms the
+    /// stopping criteria.
+    pub stop_counts: BTreeMap<&'static str, usize>,
 }
 
 impl PlanReport {
@@ -835,6 +910,9 @@ impl PlanReport {
                         ("retries", Value::from(f.retries)),
                         ("wasted_cost_s", Value::from(f.wasted_cost_s)),
                     ]);
+                }
+                if let Some(stop) = r.stop {
+                    fields.push(("stop", Value::from(stop)));
                 }
                 if self.plan.include_traces {
                     fields.push((
@@ -883,6 +961,16 @@ impl PlanReport {
                             Value::from(a.mean_wasted_cost_s),
                         ),
                     ]);
+                }
+                if self.plan.has_stopping() {
+                    fields.push((
+                        "stops",
+                        obj(a
+                            .stop_counts
+                            .iter()
+                            .map(|(&k, &v)| (k, Value::from(v)))
+                            .collect()),
+                    ));
                 }
                 obj(fields)
             })
@@ -959,6 +1047,11 @@ impl PlanReport {
                             .unwrap_or(0.0)
                     })
                     .collect();
+                let mut stop_counts: BTreeMap<&'static str, usize> =
+                    BTreeMap::new();
+                for r in rs.iter().filter_map(|r| r.stop) {
+                    *stop_counts.entry(r).or_default() += 1;
+                }
                 AggregateRow {
                     benchmark,
                     gpu,
@@ -979,6 +1072,7 @@ impl PlanReport {
                     },
                     mean_retries: mean(&retries),
                     mean_wasted_cost_s: mean(&wasted),
+                    stop_counts,
                 }
             })
             .collect()
@@ -1072,13 +1166,13 @@ pub fn run_plan(plan: &ExperimentPlan, jobs: usize) -> Result<PlanReport> {
                 recorder: cached_recorder(bench.as_ref(), &gpu, input),
             },
         };
-        CellCtx {
+        PlanCell {
             data,
             gpu,
             inst_reaction,
         }
     });
-    let cells: BTreeMap<(String, String, String), CellCtx> = keys
+    let cells: BTreeMap<(String, String, String), PlanCell> = keys
         .into_iter()
         .map(|(b, g, input)| (b, g, input.name))
         .zip(ctxs)
@@ -1116,6 +1210,8 @@ mod tests {
             max_tests: 40,
             include_traces: true,
             fault_profile: FaultProfile::None,
+            patience: None,
+            epsilon: 0.0,
         }
     }
 
@@ -1123,12 +1219,43 @@ mod tests {
     fn plan_expansion_order_and_count() {
         let plan = ExperimentPlan::smoke(0);
         let jobs = plan.jobs();
-        assert_eq!(jobs.len(), 2 * 2 * 3);
+        // 2 benchmarks × 1 gpu × 9-strategy zoo × 3 seeds
+        assert_eq!(jobs.len(), 2 * 9 * 3);
         assert_eq!(jobs[0].benchmark, "coulomb");
         assert_eq!(jobs[0].searcher, "random");
         assert_eq!(jobs[0].lane, 0);
         assert_eq!(jobs[1].lane, 1);
         assert_eq!(jobs[3].searcher, "profile");
+        // the zoo rides behind the historical lanes, augmented last
+        assert_eq!(jobs[15].searcher, "ga");
+        assert_eq!(jobs[24].searcher, "profile+ga");
+        assert!(plan.validate().is_ok());
+    }
+
+    #[test]
+    fn searcher_axis_accepts_specs_and_rejects_bad_ones() {
+        // parameterized and composed specs validate like plain names
+        let mut plan = tiny();
+        plan.searchers = vec![
+            "ga:pop=8,mutation=0.2".into(),
+            "profile+de:radius=1".into(),
+        ];
+        assert!(plan.validate().is_ok());
+        // a known searcher with a bad parameter is typed InvalidSearcher
+        plan.searchers = vec!["ga:population=8".into()];
+        match plan.validate() {
+            Err(PlanError::InvalidSearcher { spec, error }) => {
+                assert_eq!(spec, "ga:population=8");
+                assert!(error.contains("population"));
+            }
+            other => panic!("expected InvalidSearcher, got {other:?}"),
+        }
+        // reads_model follows the spec layer
+        assert!(reads_model("profile"));
+        assert!(reads_model("profile+ga"));
+        assert!(reads_model("profile:inst_reaction=0.6"));
+        assert!(!reads_model("ga"));
+        assert!(!reads_model("nonsense"));
     }
 
     #[test]
@@ -1329,7 +1456,74 @@ mod tests {
     }
 
     #[test]
+    fn unarmed_stopping_serializes_no_new_fields() {
+        // the bit-for-bit contract, third verse: patience None leaks
+        // no stopping keys into plan echo, jobs or aggregates
+        let plan = tiny();
+        assert!(!plan.has_stopping());
+        let text = run_plan(&plan, 2).unwrap().to_pretty_string();
+        for key in ["\"patience\"", "\"epsilon\"", "\"stop\"", "\"stops\""] {
+            assert!(!text.contains(key), "leaked {key}");
+        }
+    }
+
+    #[test]
+    fn armed_stopping_reports_per_job_reasons_and_cell_counts() {
+        let plan = ExperimentPlan {
+            patience: Some(5),
+            epsilon: 0.01,
+            max_tests: 60,
+            ..tiny()
+        };
+        assert!(plan.has_stopping());
+        let report = run_plan(&plan, 2).unwrap();
+        for r in &report.results {
+            let stop = r.stop.expect("armed plans account every job");
+            assert!(
+                ["threshold", "patience", "tests", "cost", "exhausted"]
+                    .contains(&stop)
+            );
+            // a patience stop can never exceed the hard test cap
+            assert!(r.tests <= plan.max_tests);
+        }
+        for a in report.aggregate_rows() {
+            let total: usize = a.stop_counts.values().sum();
+            assert_eq!(total, a.runs, "every run has exactly one reason");
+        }
+        let text = report.to_pretty_string();
+        assert!(text.contains("\"patience\": 5"));
+        assert!(text.contains("\"epsilon\": 0.01"));
+        assert!(text.contains("\"stop\""));
+        assert!(text.contains("\"stops\""));
+        // stopping changes budgets, not streams: serial == parallel
+        assert_eq!(
+            run_plan(&plan, 1).unwrap().to_pretty_string(),
+            run_plan(&plan, 8).unwrap().to_pretty_string()
+        );
+    }
+
+    #[test]
+    fn zoo_smoke_plan_is_jobs_independent() {
+        // the full 9-strategy smoke zoo, shrunk to one seed for test
+        // wall-clock: serial and parallel runs stay byte-identical
+        let plan = ExperimentPlan {
+            seeds: 1,
+            max_tests: 30,
+            ..ExperimentPlan::smoke(3)
+        };
+        let a = run_plan(&plan, 1).unwrap().to_pretty_string();
+        let b = run_plan(&plan, 8).unwrap().to_pretty_string();
+        assert_eq!(a, b);
+        for s in &plan.searchers {
+            assert!(a.contains(&format!("\"searcher\": \"{s}\"")), "{s}");
+        }
+    }
+
+    #[test]
     fn hostile_runs_complete_and_account_for_faults() {
+        // the whole zoo — population, annealing and augmented lanes
+        // included — must survive a hostile fault profile with sane
+        // accounting, not just the historical five
         let plan = ExperimentPlan {
             fault_profile: FaultProfile::Hostile,
             searchers: vec![
@@ -1338,13 +1532,17 @@ mod tests {
                 "basin_hopping".into(),
                 "annealing".into(),
                 "starchart".into(),
+                "ga".into(),
+                "de".into(),
+                "dual_annealing".into(),
+                "profile+ga".into(),
             ],
             max_tests: 60,
             ..tiny()
         };
         let report = run_plan(&plan, 2).unwrap();
         // every searcher completed and the accounting is present
-        assert_eq!(report.results.len(), 5 * plan.seeds);
+        assert_eq!(report.results.len(), 9 * plan.seeds);
         assert!(report.results.iter().all(|r| r.faults.is_some()));
         let total_failed: usize = report
             .results

@@ -449,7 +449,9 @@ fn get_arr<'a>(v: &'a Value, key: &str) -> Result<&'a [Value], RegistryError> {
 ///   `mean_best_ms`, `mean_cost_s`, `wp_rate`; under an active fault
 ///   profile additionally `failure_rate`, `mean_retries`,
 ///   `mean_wasted_cost_s` (and the plan name gains a `-<profile>`
-///   suffix, so hostile lanes keep their own trend series).
+///   suffix, so hostile lanes keep their own trend series); when the
+///   plan arms the stopping criteria additionally one `stop_<reason>`
+///   count KPI per observed stop reason.
 /// * **transfer** — per aggregate cell: `median_tests_to_wp`,
 ///   `median_best_over_oracle`, `mean_cost_s`, `wp_rate` (plus the
 ///   same fault KPIs and plan-name suffix under faults); per source
@@ -551,6 +553,7 @@ pub fn extract_rows(
                     get_f64(a, "mean_cost_s")?,
                 ));
                 push_fault_kpis(&mut rows, &row, &scope, a)?;
+                push_stop_kpis(&mut rows, &row, &scope, a);
                 rows.push(row(scope, "wp_rate", wp_rate(a)?));
             }
         }
@@ -713,6 +716,34 @@ fn push_fault_kpis(
         rows.push(row(scope.to_string(), kpi, get_f64(cell, kpi)?));
     }
     Ok(())
+}
+
+/// Stop-reason counts of one aggregate cell, if present. The `stops`
+/// object exists only when the plan arms the stopping criteria (the
+/// same conditional-serialization contract as the fault keys); each
+/// reason becomes a `stop_<reason>` KPI so armed plans can trend *why*
+/// their searchers terminate, not just how fast they converge.
+fn push_stop_kpis(
+    rows: &mut Vec<RegistryRow>,
+    row: &impl Fn(String, &str, f64) -> RegistryRow,
+    scope: &str,
+    cell: &Value,
+) {
+    let stops = match cell.as_obj().and_then(|o| o.get("stops")) {
+        Some(v) => v,
+        None => return,
+    };
+    if let Some(o) = stops.as_obj() {
+        for (reason, count) in o {
+            if let Some(n) = count.as_f64() {
+                rows.push(row(
+                    scope.to_string(),
+                    &format!("stop_{reason}"),
+                    n,
+                ));
+            }
+        }
+    }
 }
 
 /// `wp_hits / runs` of one aggregate/cell object (0 when `runs` is 0).

@@ -38,14 +38,16 @@ use std::sync::{Arc, Mutex};
 use crate::benchmarks::{self, RecordingMode};
 use crate::coordinator::Tuner;
 use crate::gpusim::GpuSpec;
-use crate::searcher::{Budget, CostModel, OnDemandEnv};
+use crate::searcher::{
+    Budget, CellCtx, CostModel, ModelCtx, OnDemandEnv, SearcherSpec,
+};
 use crate::util::json::{obj, Value};
 use crate::util::rng::stream_seed;
 use crate::util::sync::{lock_unpoisoned, OnceMap};
 
 use super::plan::{
-    inst_reaction_for, searcher_choice, searcher_choice_lazy,
-    validate_benchmarks, validate_gpus, validate_inputs, PlanError,
+    inst_reaction_for, validate_benchmarks, validate_gpus, validate_inputs,
+    PlanError,
 };
 use super::registry::{plan_hash, Provenance};
 
@@ -570,6 +572,7 @@ impl ServeEngine {
             0,
         );
         let inst_reaction = inst_reaction_for(bench.as_ref());
+        let profile = SearcherSpec::parse("profile").expect("registry name");
         let result = match bench.recording_mode() {
             RecordingMode::Eager => {
                 let rec =
@@ -577,17 +580,26 @@ impl ServeEngine {
                 let matrix =
                     benchmarks::cached_matrix(bench.as_ref(), &gpu, &input);
                 let thr = rec.best_time() * 1.1;
-                let choice = searcher_choice("profile", &matrix, inst_reaction);
+                let ctx = CellCtx::new(
+                    ModelCtx::Eager { matrix },
+                    inst_reaction,
+                    0,
+                );
                 Tuner::replay(rec, gpu, CostModel::default())
                     .with_budget(Budget::until(thr, self.cfg.max_tests))
                     .with_seed(seed)
-                    .run(choice)
+                    .run(&profile, &ctx)
             }
             RecordingMode::OnDemand => {
                 let recorder =
                     benchmarks::cached_recorder(bench.as_ref(), &gpu, &input);
-                let choice =
-                    searcher_choice_lazy("profile", &recorder, inst_reaction);
+                let ctx = CellCtx::new(
+                    ModelCtx::Lazy {
+                        recorder: Arc::clone(&recorder),
+                    },
+                    inst_reaction,
+                    0,
+                );
                 // no known best to stop at — run to the test budget
                 Tuner::over(Box::new(OnDemandEnv::new(
                     recorder,
@@ -595,7 +607,7 @@ impl ServeEngine {
                 )))
                 .with_budget(Budget::tests(self.cfg.max_tests))
                 .with_seed(seed)
-                .run(choice)
+                .run(&profile, &ctx)
             }
         };
         TuningEntry {

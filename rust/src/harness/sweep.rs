@@ -428,6 +428,9 @@ fn extract_cells(
 pub fn run_sweep_plan(plan: &SweepPlan, jobs: usize) -> Result<SweepReport> {
     plan.validate()?;
 
+    // reads_model is spec-backed: any registry spec string partitions
+    // correctly, including parameterized ("ga:pop=20") and augmented
+    // ("profile+de") forms
     let (dependent, independent): (Vec<String>, Vec<String>) = plan
         .searchers
         .iter()

@@ -1011,6 +1011,97 @@ pub fn robustness_table(report: &PlanReport) -> String {
     )
 }
 
+/// Rank a [`PlanReport`]'s searcher zoo: one row per searcher string,
+/// pooled across every (benchmark, GPU, input) cell, ordered by mean
+/// tests-to-well-performing (the paper's convergence KPI) ascending.
+/// When the plan arms the stopping criteria, a final column summarizes
+/// why the searcher's jobs stopped. Empty on single-strategy plans, so
+/// callers can print it unconditionally next to the matrix summary.
+pub fn searcher_ranking(report: &PlanReport) -> String {
+    if report.plan.searchers.len() < 2 {
+        return String::new();
+    }
+    struct Pool {
+        runs: usize,
+        wp_hits: usize,
+        tests_to_wp: f64,
+        best_ms: f64,
+        cost_s: f64,
+        stops: std::collections::BTreeMap<&'static str, usize>,
+    }
+    let mut pools: Vec<(String, Pool)> = Vec::new();
+    for a in report.aggregate_rows() {
+        let idx = match pools.iter().position(|(s, _)| *s == a.searcher) {
+            Some(i) => i,
+            None => {
+                pools.push((
+                    a.searcher.clone(),
+                    Pool {
+                        runs: 0,
+                        wp_hits: 0,
+                        tests_to_wp: 0.0,
+                        best_ms: 0.0,
+                        cost_s: 0.0,
+                        stops: Default::default(),
+                    },
+                ));
+                pools.len() - 1
+            }
+        };
+        let pool = &mut pools[idx].1;
+        pool.tests_to_wp += a.mean_tests_to_wp * a.runs as f64;
+        pool.best_ms += a.mean_best_ms * a.runs as f64;
+        pool.cost_s += a.mean_cost_s * a.runs as f64;
+        pool.runs += a.runs;
+        pool.wp_hits += a.wp_hits;
+        for (reason, n) in &a.stop_counts {
+            *pool.stops.entry(reason).or_insert(0) += *n;
+        }
+    }
+    pools.sort_by(|a, b| {
+        (a.1.tests_to_wp / a.1.runs.max(1) as f64)
+            .total_cmp(&(b.1.tests_to_wp / b.1.runs.max(1) as f64))
+    });
+    let with_stops = report.plan.has_stopping();
+    let rows: Vec<Vec<String>> = pools
+        .iter()
+        .enumerate()
+        .map(|(rank, (name, p))| {
+            let n = p.runs.max(1) as f64;
+            let mut row = vec![
+                format!("{}", rank + 1),
+                name.clone(),
+                format!("{:.1}", p.tests_to_wp / n),
+                format!("{:.0}%", p.wp_hits as f64 / n * 100.0),
+                format!("{:.4}", p.best_ms / n),
+                format!("{:.1}", p.cost_s / n),
+            ];
+            if with_stops {
+                row.push(
+                    p.stops
+                        .iter()
+                        .map(|(r, c)| format!("{r}:{c}"))
+                        .collect::<Vec<_>>()
+                        .join(" "),
+                );
+            }
+            row
+        })
+        .collect();
+    let mut header = vec![
+        "rank",
+        "searcher",
+        "mean tests→wp",
+        "wp rate",
+        "mean best (ms)",
+        "mean cost (s)",
+    ];
+    if with_stops {
+        header.push("stop reasons");
+    }
+    format!("\n## Searcher zoo ranking\n\n{}", markdown(&header, &rows))
+}
+
 /// Registry rows as a markdown table (`pcat registry query`): one row
 /// per registry entry, in store (append) order.
 pub fn registry_query_table(rows: &[RegistryRow]) -> String {

@@ -80,8 +80,8 @@ use crate::model::{
     DecisionTreeModel, PredictionMatrix, MODELED_COUNTERS,
 };
 use crate::searcher::{
-    Budget, CostModel, FaultModel, FaultProfile, FaultStats, FaultyEnv,
-    ReplayEnv,
+    Budget, CellCtx, CostModel, FaultModel, FaultProfile, FaultStats,
+    FaultyEnv, ModelCtx, ReplayEnv, SearcherSpec,
 };
 use crate::tuning::RecordedSpace;
 use crate::util::json::{obj, Value};
@@ -94,9 +94,9 @@ use super::convergence::{
     ConvergencePoint, StepCurvePoint,
 };
 use super::plan::{
-    reads_model, resolve_input_axis, searcher_choice, validate_fraction,
-    validate_gpus, validate_inputs, validate_searchers,
-    validate_trainable_benchmarks, PlanError,
+    reads_model, resolve_input_axis, validate_fraction, validate_gpus,
+    validate_inputs, validate_searchers, validate_trainable_benchmarks,
+    PlanError,
 };
 use super::registry;
 
@@ -540,8 +540,17 @@ fn run_transfer_job(
     plan: &TransferPlan,
     cell: &TransferCell,
 ) -> TransferJobResult {
-    let choice =
-        searcher_choice(&spec.searcher, &cell.matrix, cell.inst_reaction);
+    let sspec =
+        SearcherSpec::parse(&spec.searcher).expect("plan validated");
+    // model-reading lanes score the *source* endpoint's matrix against
+    // the target replay — the transfer setting's whole point
+    let sctx = CellCtx::new(
+        ModelCtx::Eager {
+            matrix: Arc::clone(&cell.matrix),
+        },
+        cell.inst_reaction,
+        0,
+    );
     // Early-stop at the *stricter* of the 1.1× well-performing
     // contract and the plan's within_frac, so a sub-10% slack stays
     // measurable instead of being censored by the 1.1× stop. For
@@ -574,7 +583,7 @@ fn run_transfer_job(
         let result = Tuner::over(Box::new(env))
             .with_budget(budget)
             .with_seed(seed)
-            .run(choice);
+            .run(&sspec, &sctx);
         let stats = crate::util::sync::lock_unpoisoned(&stats).clone();
         (result, Some(stats))
     } else {
@@ -585,7 +594,7 @@ fn run_transfer_job(
         )
         .with_budget(budget)
         .with_seed(seed)
-        .run(choice);
+        .run(&sspec, &sctx);
         (result, None)
     };
 

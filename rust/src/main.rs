@@ -12,6 +12,7 @@
 //! pcat matrix  [--smoke] [--jobs N] [--seed S] [--seeds K] [--budget B] \
 //!              [--benchmarks a,b] [--gpus x,y] [--inputs i,j] \
 //!              [--searchers p,q] [--traces] \
+//!              [--patience K] [--epsilon E] \
 //!              [--fault-profile none|flaky|noisy|hostile] \
 //!              [--out report.json]
 //! pcat transfer [--smoke] [--jobs N] [--seed S] [--seeds K] [--budget B] \
@@ -45,7 +46,12 @@
 //! searcher × seed; `--inputs` takes the same selectors as `transfer`
 //! and a default-input plan reproduces pre-input-axis reports
 //! bit-for-bit) across the worker pool and writes a deterministic
-//! JSON report;
+//! JSON report. The searcher axis takes full [`SearcherSpec`] strings
+//! (`ga:pop=20,mutation=0.1`, `profile+de`, …) — see `pcat list` for
+//! the registry. `--patience K` (with `--epsilon E`) arms the
+//! stopping criteria from arxiv 2203.13577: each job then reports the
+//! reason it stopped (threshold/patience/tests/cost/exhausted) and the
+//! aggregates count stop reasons per cell;
 //! `--smoke` selects the tiny CI matrix whose report is byte-compared
 //! against `rust/testdata/smoke_golden.json`. `--jobs N` bounds worker
 //! threads everywhere (serial and parallel runs produce identical
@@ -112,21 +118,25 @@ use anyhow::{anyhow, bail, Result};
 use pcat::benchmarks::{
     self, cached_recorder, cached_space, Benchmark, RecordingMode,
 };
-use pcat::coordinator::{SearcherChoice, Tuner};
+use pcat::coordinator::Tuner;
 use pcat::gpusim::GpuSpec;
 use pcat::harness::{
     export_store, import_store, model_quality_matrix, render_store,
     robustness_table, run_experiment, run_load_plan, run_plan, run_sweep_plan,
-    run_transfer_plan, sweep_matrix, transfer_input_matrix, transfer_matrix,
+    run_transfer_plan, searcher_ranking, sweep_matrix, transfer_input_matrix,
+    transfer_matrix,
     ExperimentOpts, ExperimentPlan, JsonFileStore, LoadPlan, MemTuningStore,
     ModelSource, ServeConfig, ServeEngine, ServeKey, SweepPlan, TransferPlan,
     TuningStore, ALL_EXPERIMENTS,
 };
 use pcat::model::{
     dataset_from_recorded, DecisionTreeModel, OracleModel, PrecomputedModel,
-    TpPcModel,
+    PredictionMatrix, TpPcModel,
 };
-use pcat::searcher::{Budget, CostModel, FaultProfile};
+use pcat::searcher::{
+    augment_params, registry, Budget, CellCtx, CostModel, FaultProfile,
+    ModelCtx, SearcherSpec,
+};
 use pcat::tuning::RecordedSpace;
 use pcat::util::pool;
 use pcat::util::rng::Rng;
@@ -299,13 +309,18 @@ fn run() -> Result<()> {
 }
 
 const HELP: &str = "pcat — performance-counter-aided autotuning (paper \
-reproduction)\n\ncommands:\n  list        benchmarks, GPUs, experiments\n  \
+reproduction)\n\ncommands:\n  list        benchmarks, GPUs, searchers, \
+experiments\n  \
 record      exhaustively record a tuning space on a simulated GPU\n  train       \
 train a TP→PC decision-tree model from a recording\n  tune        search a \
-tuning space (replayed/simulated)\n  tune-real   search over really-executing \
+tuning space (replayed/simulated; --searcher takes any\n              \
+registry spec: ga:pop=20, profile+de, … — see `pcat list`)\n  tune-real   \
+search over really-executing \
 PJRT artifacts\n  experiment  regenerate a paper table/figure (or `all`)\n  \
 matrix      run a benchmark × GPU × input × searcher × seed job matrix in \
 parallel\n              (--smoke = the tiny deterministic CI matrix;\n              \
+--patience K [--epsilon E] arms early stopping and per-job\n              \
+stop-reason accounting;\n              \
 --fault-profile none|flaky|noisy|hostile injects deterministic\n              \
 measurement faults and reports failure/retry accounting)\n  \
 transfer    train-on-(GPU,input)-A / tune-on-B portability matrix; writes\n              \
@@ -351,6 +366,29 @@ fn cmd_list() -> Result<()> {
         println!(
             "  {:<8} {:?}, {} SMs × {} cores, {} GB/s",
             g.name, g.arch, g.sm_count, g.cores_per_sm, g.dram_bw
+        );
+    }
+    // rendered straight off the spec registry, so this listing can
+    // never drift from what `--searcher` actually parses
+    println!("\nsearchers (--searcher NAME[:param=value,...]):");
+    for e in registry() {
+        let aug = if e.augmentable { "  [profile+]" } else { "" };
+        println!("  {:<14} {}{}", e.name, e.doc, aug);
+        for p in e.params {
+            println!(
+                "      {:<14} default {:<6} {}",
+                p.name, p.default, p.doc
+            );
+        }
+    }
+    println!(
+        "  profile+BASE   wrap any [profile+] base searcher with \
+         PC-model guidance (Eq. 16)"
+    );
+    for p in augment_params() {
+        println!(
+            "      {:<14} default {:<6} {}",
+            p.name, p.default, p.doc
         );
     }
     println!("\nexperiments: {}", ALL_EXPERIMENTS.join(" "));
@@ -400,30 +438,30 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let budget = Budget::tests(args.num("budget", 200usize)?);
     let seed = args.num("seed", 0u64)?;
     let searcher = args.get("searcher").unwrap_or("profile");
+    // any registry spec works here: "ga:pop=20", "profile+de", …
+    let spec = SearcherSpec::parse(searcher)
+        .map_err(|e| anyhow!("--searcher: {e}"))?;
 
     // On-demand benchmarks (§4.6 large spaces) are never exhaustively
     // recorded: tune through the lazy recorder, which simulates only
-    // the configurations the search actually visits.
+    // the configurations the search actually visits. Model-reading
+    // specs profile through the same recorder instead of a densified
+    // matrix.
     if bench.recording_mode() == RecordingMode::OnDemand {
         let recorder = cached_recorder(bench.as_ref(), &gpu, &input);
         let ir = if bench.instruction_bound() { 0.5 } else { 0.7 };
+        let ctx = CellCtx::new(
+            ModelCtx::Lazy {
+                recorder: Arc::clone(&recorder),
+            },
+            ir,
+            0,
+        );
         let mut tuner =
             Tuner::on_demand(Arc::clone(&recorder), CostModel::default())
                 .with_budget(budget)
                 .with_seed(seed);
-        let choice = match searcher {
-            "random" => SearcherChoice::Random,
-            "profile" => SearcherChoice::ProfileLazy {
-                recorder: Arc::clone(&recorder),
-                inst_reaction: ir,
-            },
-            other => bail!(
-                "on-demand benchmark {:?} supports random|profile, got \
-                 {other:?}",
-                bench.name()
-            ),
-        };
-        let result = tuner.run(choice);
+        let result = tuner.run(&spec, &ctx);
         println!(
             "tuned {} on {} ({}) with {} [on-demand: {} of {} configs \
              simulated]",
@@ -475,21 +513,21 @@ fn cmd_tune(args: &Args) -> Result<()> {
         }
     };
 
+    // model-reading specs densify the TP→PC model into a prediction
+    // matrix once; model-free zoo members skip the build entirely
+    let model_ctx = if spec.reads_model() {
+        ModelCtx::Eager {
+            matrix: Arc::new(PredictionMatrix::build(&rec.space, model_ref)),
+        }
+    } else {
+        ModelCtx::None
+    };
+    let ctx = CellCtx::new(model_ctx, ir, 0);
+
     let mut tuner = Tuner::replay(rec, gpu.clone(), CostModel::default())
         .with_budget(budget)
         .with_seed(seed);
-    let choice = match searcher {
-        "random" => SearcherChoice::Random,
-        "profile" => SearcherChoice::Profile {
-            model: model_ref,
-            inst_reaction: ir,
-        },
-        "basin-hopping" | "basin_hopping" => SearcherChoice::BasinHopping,
-        "starchart" => SearcherChoice::Starchart,
-        "annealing" => SearcherChoice::Annealing,
-        other => bail!("unknown searcher {other:?}"),
-    };
-    let result = tuner.run(choice);
+    let result = tuner.run(&spec, &ctx);
 
     println!(
         "tuned {} on {} ({}) with {}",
@@ -546,21 +584,26 @@ fn cmd_tune_real(args: &Args) -> Result<()> {
         "manifest-ops",
     );
     let searcher = args.get("searcher").unwrap_or("profile");
+    let spec = SearcherSpec::parse(searcher)
+        .map_err(|e| anyhow!("--searcher: {e}"))?;
     let budget = Budget::tests(
         args.num("budget", space.len().min(space.len()))?,
     );
     let mut tuner = Tuner::over(Box::new(env))
         .with_budget(budget)
         .with_seed(args.num("seed", 0u64)?);
-    let choice = match searcher {
-        "random" => SearcherChoice::Random,
-        "profile" => SearcherChoice::Profile {
-            model: &model,
-            inst_reaction: 0.5,
-        },
-        other => bail!("tune-real supports random|profile, got {other:?}"),
+    let ctx = if spec.reads_model() {
+        CellCtx::new(
+            ModelCtx::Eager {
+                matrix: Arc::new(PredictionMatrix::build(&space, &model)),
+            },
+            0.5,
+            0,
+        )
+    } else {
+        CellCtx::modelless(0)
     };
-    let result = tuner.run(choice);
+    let result = tuner.run(&spec, &ctx);
     println!(
         "real-execution tuning of {bench_name}: {} tests, best {:.3} ms",
         result.tests, result.best_ms
@@ -590,9 +633,24 @@ fn cmd_matrix(args: &Args) -> Result<()> {
     // stays pinned otherwise, so CI gates `--smoke` and `--smoke
     // --fault-profile hostile` as separate golden lanes
     let fault_profile = fault_profile_arg(args)?;
+    // stopping criteria (arxiv 2203.13577): --patience K arms
+    // patience-based early stopping; --epsilon E sets the relative
+    // improvement a test must make to reset the patience counter.
+    // Unset = pre-stopping report bytes, including the smoke goldens.
+    let patience = args
+        .get("patience")
+        .map(|v| {
+            v.parse::<usize>().map_err(|_| {
+                anyhow!("--patience expects a number, got {v:?}")
+            })
+        })
+        .transpose()?;
+    let epsilon = args.num("epsilon", 0.0f64)?;
     let plan = if args.get("smoke").is_some() {
         ExperimentPlan {
             fault_profile,
+            patience,
+            epsilon,
             ..ExperimentPlan::smoke(seed)
         }
     } else {
@@ -613,6 +671,8 @@ fn cmd_matrix(args: &Args) -> Result<()> {
             max_tests: args.num("budget", base.max_tests)?,
             include_traces: args.get("traces").is_some(),
             fault_profile,
+            patience,
+            epsilon,
             ..base
         }
     };
@@ -631,6 +691,10 @@ fn cmd_matrix(args: &Args) -> Result<()> {
     );
     for line in report.summary_lines() {
         println!("  {line}");
+    }
+    let ranking = searcher_ranking(&report);
+    if !ranking.is_empty() {
+        println!("{ranking}");
     }
     let robustness = robustness_table(&report);
     if !robustness.is_empty() {

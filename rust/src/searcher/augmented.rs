@@ -1,0 +1,454 @@
+//! [`ProfileAugmented`] — the paper's Eq. 16 PC-model scoring grafted
+//! onto *any* base searcher, so the profile method composes with (not
+//! just competes against) the stronger baselines of the zoo.
+//!
+//! The combinator interposes a guided environment between the base
+//! searcher and the real [`EvalEnv`]:
+//!
+//! * every `n+1`-th measurement is promoted to a *profiled* run (the
+//!   paper's 1-profiled + `n`-plain cadence), and its counters feed the
+//!   expert system: bottlenecks (Eqs. 6–14) → ΔPC (Eq. 15), with
+//!   dropped counters masked exactly like Algorithm 1;
+//! * every *plain* proposal the base makes is re-ranked against the
+//!   model: the proposal and its unexplored Hamming ball (radius
+//!   [`radius`](ProfileAugmented::radius)) are scored with Eq. 16
+//!   relative to the last profiled configuration, and the measurement
+//!   is redirected to the arg-max candidate. Eq. 17's normalization is
+//!   monotone, so ranking raw scores picks the same winner without the
+//!   weighted draw — the base searcher supplies the stochasticity here.
+//!
+//! The redirection is invisible to the base searcher (it receives the
+//! real measurement of the substituted configuration), which keeps any
+//! base strategy compatible; the authoritative trace — actual indices,
+//! profiled flags, costs — is kept by the wrapper and returned from
+//! [`Searcher::run`]. Scoring stays model-vs-model (§3.6): predictions
+//! against predictions, never against live measurements. Works against
+//! both model contexts: a densified [`PredictionMatrix`] (eager cells)
+//! or an [`OnDemandRecorder`] (large-space cells — the ball-local
+//! candidate set means nothing space-sized is ever touched).
+//!
+//! Determinism: the wrapper itself draws no randomness — redirection is
+//! an arg-max with ascending-index tie-breaks — so a run is exactly as
+//! deterministic as its base searcher.
+//!
+//! [`PredictionMatrix`]: crate::model::PredictionMatrix
+//! [`OnDemandRecorder`]: crate::benchmarks::OnDemandRecorder
+
+use std::sync::Arc;
+
+use crate::benchmarks::OnDemandRecorder;
+use crate::expert::{active_deltas, analyze, react};
+use crate::gpusim::GpuSpec;
+use crate::model::PredictionMatrix;
+use crate::counters::CounterVec;
+use crate::tuning::Space;
+
+use super::{
+    Budget, EvalEnv, Measurement, ModelCtx, Searcher, SearchTrace, Step,
+};
+
+/// Any base searcher, with its candidate proposals re-ranked by the
+/// paper's PC-model scoring. Construct directly or via the
+/// `"profile+<base>"` spec syntax.
+pub struct ProfileAugmented<S: Searcher> {
+    base: S,
+    model: ModelCtx,
+    /// The Eq. 15 threshold (0.7 default, 0.5 for instruction-bound).
+    pub inst_reaction: f64,
+    /// Hamming-ball radius scored around each base proposal.
+    pub radius: usize,
+    /// Plain steps between profiled runs (the paper's `n`, default 5).
+    pub n_unprofiled: usize,
+    name: &'static str,
+}
+
+/// `"profile+<base>"` — [`Searcher::name`] needs a `'static` str, so
+/// the composed names are a closed table over the registry's
+/// augmentable bases.
+fn augmented_name(base: &str) -> &'static str {
+    match base {
+        "random" => "profile+random",
+        "basin_hopping" => "profile+basin_hopping",
+        "starchart" => "profile+starchart",
+        "annealing" => "profile+annealing",
+        "ga" => "profile+ga",
+        "de" => "profile+de",
+        "dual_annealing" => "profile+dual_annealing",
+        _ => "profile+base",
+    }
+}
+
+impl<S: Searcher> ProfileAugmented<S> {
+    /// # Panics
+    ///
+    /// On [`ModelCtx::None`]: Eq. 16 scoring needs predicted counters.
+    pub fn new(base: S, model: ModelCtx, inst_reaction: f64) -> Self {
+        assert!(
+            !matches!(model, ModelCtx::None),
+            "profile augmentation needs a model context (prediction \
+             matrix or on-demand recorder)"
+        );
+        let name = augmented_name(base.name());
+        ProfileAugmented {
+            base,
+            model,
+            inst_reaction,
+            radius: 2,
+            n_unprofiled: 5,
+            name,
+        }
+    }
+}
+
+impl<S: Searcher> Searcher for ProfileAugmented<S> {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn run(&mut self, env: &mut dyn EvalEnv, budget: &Budget) -> SearchTrace {
+        let size = env.space().len();
+        if size == 0 {
+            return SearchTrace::default();
+        }
+        let (matrix, recorder) = match &self.model {
+            ModelCtx::Eager { matrix } => {
+                assert_eq!(
+                    matrix.n_configs(),
+                    size,
+                    "prediction matrix covers a different space than the \
+                     environment replays"
+                );
+                (Some(Arc::clone(matrix)), None)
+            }
+            ModelCtx::Lazy { recorder } => {
+                assert_eq!(
+                    recorder.space().len(),
+                    size,
+                    "on-demand recorder covers a different space than the \
+                     environment evaluates"
+                );
+                (None, Some(Arc::clone(recorder)))
+            }
+            ModelCtx::None => unreachable!("rejected at construction"),
+        };
+        // Build the neighbour index before cloning so all runs share it.
+        env.space().neighbour_index();
+        let space = env.space().clone();
+        let mut guided = GuidedEnv {
+            inner: env,
+            space,
+            matrix,
+            recorder,
+            inst_reaction: self.inst_reaction,
+            radius: self.radius,
+            cadence: self.n_unprofiled + 1,
+            explored: vec![false; size],
+            log: SearchTrace::default(),
+            measures: 0,
+            c_profile: 0,
+            active: Vec::new(),
+            pred_profile: None,
+            armed: false,
+        };
+        // The base's own trace records the indices it *proposed*; the
+        // wrapper's log records what was actually measured — that log
+        // is the authoritative trace.
+        let _ = self.base.run(&mut guided, budget);
+        guided.log
+    }
+}
+
+/// The guided environment: measurements pass through to `inner`, plain
+/// proposals are redirected to the best-scoring unexplored candidate in
+/// their Hamming ball.
+struct GuidedEnv<'a> {
+    inner: &'a mut dyn EvalEnv,
+    space: Space,
+    matrix: Option<Arc<PredictionMatrix>>,
+    recorder: Option<Arc<OnDemandRecorder>>,
+    inst_reaction: f64,
+    radius: usize,
+    /// Every `cadence`-th measurement is profiled.
+    cadence: usize,
+    explored: Vec<bool>,
+    log: SearchTrace,
+    measures: usize,
+    /// Reaction state, armed after the first successful profiled run.
+    c_profile: usize,
+    /// Eager: matrix (column, ΔPC) pairs; lazy: counter-slot deltas.
+    active: Vec<(usize, f64)>,
+    /// Lazy only: predicted counters of `c_profile`.
+    pred_profile: Option<CounterVec>,
+    armed: bool,
+}
+
+impl GuidedEnv<'_> {
+    /// Eq. 16 for one candidate, relative to the last profiled config.
+    fn score(&self, k: usize) -> f64 {
+        match (&self.matrix, &self.recorder) {
+            (Some(m), _) => m.score_one(self.c_profile, &self.active, k),
+            (None, Some(r)) => crate::expert::score_active(
+                &self.active,
+                self.pred_profile.as_ref().expect("armed lazy reaction"),
+                &r.record(k).counters,
+            ),
+            (None, None) => unreachable!("one scoring backend always set"),
+        }
+    }
+
+    /// The best-scoring unexplored candidate among `idx` and its
+    /// Hamming ball; ties keep the first seen (the proposal itself,
+    /// then ascending neighbour order) — fully deterministic.
+    fn redirect(&self, idx: usize) -> usize {
+        let mut best_k: Option<usize> = None;
+        let mut best_s = f64::NEG_INFINITY;
+        let from = self.space.config_at(idx);
+        let ball = self.space.neighbours(&from, self.radius);
+        for k in std::iter::once(idx).chain(ball) {
+            if self.explored[k] {
+                continue;
+            }
+            // non-finite scores (reaction on a zero-prediction column)
+            // never outrank a finite candidate; the first candidate —
+            // the proposal itself, then ascending neighbour order —
+            // wins ties, so redirection is fully deterministic
+            let s = self.score(k);
+            let s = if s.is_finite() { s } else { f64::NEG_INFINITY };
+            if best_k.is_none() || s > best_s {
+                best_k = Some(k);
+                best_s = s;
+            }
+        }
+        best_k.unwrap_or(idx)
+    }
+
+    /// Feed a profiled measurement's counters through the expert
+    /// system and re-arm the scorer.
+    fn arm(&mut self, target: usize, m: &Measurement) {
+        let Some(counters) = &m.counters else {
+            return;
+        };
+        if !m.is_ok() {
+            return;
+        }
+        let bottlenecks = analyze(counters, self.inner.gpu());
+        let mut delta = react(&bottlenecks, self.inst_reaction);
+        // never react on counters the profiler failed to collect
+        for &c in &m.dropped {
+            delta.0.set(c, 0.0);
+        }
+        match (&self.matrix, &self.recorder) {
+            (Some(matrix), _) => {
+                self.active = matrix.active_columns(&delta);
+            }
+            (None, Some(recorder)) => {
+                self.active = active_deltas(&delta);
+                self.pred_profile = Some(recorder.record(target).counters);
+            }
+            (None, None) => unreachable!("one scoring backend always set"),
+        }
+        self.c_profile = target;
+        self.armed = true;
+    }
+}
+
+impl EvalEnv for GuidedEnv<'_> {
+    fn space(&self) -> &Space {
+        self.inner.space()
+    }
+
+    fn measure(&mut self, idx: usize, profile: bool) -> Measurement {
+        let slot = self.measures;
+        self.measures += 1;
+        let profiled = profile || slot % self.cadence == 0;
+        // profiled runs measure the base's own proposal (anchoring the
+        // reaction to the base's trajectory); plain runs are redirected
+        let target = if !profiled && self.armed {
+            self.redirect(idx)
+        } else {
+            idx
+        };
+        let m = self.inner.measure(target, profiled);
+        self.explored[target] = true;
+        self.log.push(Step {
+            idx: target,
+            runtime_ms: m.runtime_ms,
+            profiled,
+            cost_after_s: self.inner.cost_so_far(),
+            build: false,
+        });
+        if profiled {
+            self.arm(target, &m);
+        }
+        m
+    }
+
+    fn cost_so_far(&self) -> f64 {
+        self.inner.cost_so_far()
+    }
+
+    fn gpu(&self) -> &GpuSpec {
+        self.inner.gpu()
+    }
+
+    fn known_best_ms(&self) -> Option<f64> {
+        self.inner.known_best_ms()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{record_space, Benchmark, Coulomb};
+    use crate::gpusim::GpuSpec;
+    use crate::searcher::{
+        Budget, CostModel, RandomSearcher, ReplayEnv, SearcherSpec,
+    };
+    use crate::tuning::ParamDef;
+
+    fn env() -> ReplayEnv {
+        let gpu = GpuSpec::gtx1070();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        ReplayEnv::new(rec, gpu, CostModel::default())
+    }
+
+    fn eager_model(e: &ReplayEnv) -> ModelCtx {
+        ModelCtx::Eager {
+            matrix: Arc::new(PredictionMatrix::from_recorded(e.recorded())),
+        }
+    }
+
+    #[test]
+    fn runs_to_budget_with_profiled_cadence() {
+        let mut e = env();
+        let model = eager_model(&e);
+        let mut s =
+            ProfileAugmented::new(RandomSearcher::new(7), model, 0.5);
+        let trace = s.run(&mut e, &Budget::tests(24));
+        assert_eq!(trace.len(), 24);
+        assert_eq!(s.name(), "profile+random");
+        // 1 profiled + 5 plain cadence, like Algorithm 1
+        assert!(trace.steps[0].profiled);
+        assert!(!trace.steps[1].profiled);
+        assert!(trace.steps[6].profiled);
+        assert_eq!(trace.steps.iter().filter(|s| s.profiled).count(), 4);
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_unique_plain_steps() {
+        let run = |seed| {
+            let mut e = env();
+            let model = eager_model(&e);
+            ProfileAugmented::new(RandomSearcher::new(seed), model, 0.5)
+                .run(&mut e, &Budget::tests(40))
+                .steps
+                .iter()
+                .map(|s| (s.idx, s.profiled))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4));
+    }
+
+    #[test]
+    fn empty_space_yields_empty_trace() {
+        let mut p = ParamDef::new("X", &[1]);
+        p.values.clear();
+        let space = crate::tuning::Space::enumerate(
+            "empty",
+            vec![p],
+            |_| true,
+        );
+        let model = ModelCtx::Eager {
+            matrix: Arc::new(PredictionMatrix::from_fn(0, |_, _| 0.0)),
+        };
+        struct EmptyEnv {
+            space: crate::tuning::Space,
+            gpu: GpuSpec,
+        }
+        impl EvalEnv for EmptyEnv {
+            fn space(&self) -> &crate::tuning::Space {
+                &self.space
+            }
+            fn measure(&mut self, _: usize, _: bool) -> Measurement {
+                unreachable!("no configuration to measure")
+            }
+            fn cost_so_far(&self) -> f64 {
+                0.0
+            }
+            fn gpu(&self) -> &GpuSpec {
+                &self.gpu
+            }
+        }
+        let mut e = EmptyEnv {
+            space,
+            gpu: GpuSpec::gtx1070(),
+        };
+        let trace =
+            ProfileAugmented::new(RandomSearcher::new(0), model, 0.5)
+                .run(&mut e, &Budget::tests(10));
+        assert!(trace.is_empty());
+    }
+
+    /// The satellite regression gate: Eq. 16 guidance must make random
+    /// search strictly better (median steps to 1.1× best) on the smoke
+    /// grid — the composition claim, tested like the PR-4 tree gate.
+    #[test]
+    fn augmented_random_beats_plain_random_median_steps() {
+        let reps = 40u64;
+        let median_steps = |augment: bool| {
+            let mut steps: Vec<f64> = Vec::new();
+            for seed in 0..reps {
+                let mut e = env();
+                let thr = e.recorded().best_time() * 1.1;
+                let budget = Budget::until(thr, 10_000);
+                let trace = if augment {
+                    let model = eager_model(&e);
+                    ProfileAugmented::new(
+                        RandomSearcher::new(seed),
+                        model,
+                        0.5,
+                    )
+                    .run(&mut e, &budget)
+                } else {
+                    RandomSearcher::new(seed).run(&mut e, &budget)
+                };
+                steps.push(
+                    trace.tests_to_threshold(thr).unwrap_or(trace.len())
+                        as f64,
+                );
+            }
+            steps.sort_by(f64::total_cmp);
+            steps[steps.len() / 2]
+        };
+        let plain = median_steps(false);
+        let augmented = median_steps(true);
+        assert!(
+            augmented < plain,
+            "profile+random {augmented} vs random {plain} median steps"
+        );
+    }
+
+    #[test]
+    fn builds_through_the_spec_for_every_augmentable_base() {
+        let e = env();
+        for name in [
+            "profile+random",
+            "profile+ga",
+            "profile+de",
+            "profile+dual_annealing",
+            "profile+annealing",
+            "profile+basin_hopping",
+            "profile+starchart",
+        ] {
+            let spec = SearcherSpec::parse(name).unwrap();
+            assert!(spec.reads_model());
+            let ctx = crate::searcher::CellCtx::new(eager_model(&e), 0.5, 1);
+            let mut s = spec.build(&ctx);
+            assert_eq!(s.name(), name);
+            let mut fresh = env();
+            let trace = s.run(&mut fresh, &Budget::tests(12));
+            assert_eq!(trace.len(), 12);
+        }
+    }
+}

@@ -1,0 +1,283 @@
+//! Differential evolution (DE/rand/1/bin) — a strong baseline from
+//! "Benchmarking optimization algorithms for auto-tuning GPU kernels"
+//! (arxiv 2210.01465).
+//!
+//! Discrete adaptation: genomes are per-parameter *value positions*
+//! (indices into each [`ParamDef::values`] list), so the classic mutant
+//! arithmetic `a + F·(b − c)` runs on ordinals, is rounded, and is
+//! clamped to each parameter's domain. Trial vectors are produced by
+//! binomial crossover (rate `cr`, one forced dimension), mapped back
+//! onto space indices via [`Space::index_of`], and accepted greedily
+//! against their target member. Trials the constraint pruned away (or
+//! that were already measured) leave the target in place; a generation
+//! that measures nothing injects a fresh random member instead, so the
+//! search cannot spin without spending budget.
+//!
+//! Spaces too small for rand/1 donor selection (fewer than 4 members)
+//! degrade to random sampling — correct, if uninteresting, at toy
+//! sizes.
+
+use crate::tuning::Config;
+use crate::util::rng::Rng;
+
+use super::{
+    budget_done, draw_unmeasured, Budget, EvalEnv, Searcher, SearchTrace, Step,
+};
+
+struct Member {
+    /// Per-dimension positions into `ParamDef::values`.
+    pos: Vec<usize>,
+    idx: usize,
+    fit: f64,
+}
+
+pub struct DifferentialEvolution {
+    rng: Rng,
+    /// Population size (capped at the space size).
+    pub pop_size: usize,
+    /// Differential weight `F` applied to position deltas.
+    pub weight: f64,
+    /// Binomial crossover rate.
+    pub cr: f64,
+}
+
+impl DifferentialEvolution {
+    pub fn new(seed: u64) -> Self {
+        DifferentialEvolution {
+            rng: Rng::new(seed),
+            pop_size: 16,
+            weight: 0.5,
+            cr: 0.9,
+        }
+    }
+
+    fn eval(
+        &mut self,
+        env: &mut dyn EvalEnv,
+        trace: &mut SearchTrace,
+        measured: &mut [Option<f64>],
+        idx: usize,
+    ) -> f64 {
+        if let Some(t) = measured[idx] {
+            return t;
+        }
+        let m = env.measure(idx, false);
+        measured[idx] = Some(m.runtime_ms);
+        trace.push(Step {
+            idx,
+            runtime_ms: m.runtime_ms,
+            profiled: false,
+            cost_after_s: env.cost_so_far(),
+            build: false,
+        });
+        m.runtime_ms
+    }
+
+    /// Three donor indices, distinct from each other and from `i`.
+    /// Requires a population of at least 4.
+    fn donors(&mut self, len: usize, i: usize) -> (usize, usize, usize) {
+        let mut draw = |taken: &[usize]| loop {
+            let k = self.rng.below(len);
+            if !taken.contains(&k) {
+                return k;
+            }
+        };
+        let a = draw(&[i]);
+        let b = draw(&[i, a]);
+        let c = draw(&[i, a, b]);
+        (a, b, c)
+    }
+}
+
+/// Per-dimension positions of a configuration's values (first match —
+/// deterministic even on degenerate duplicate-value spaces).
+fn positions_of(space: &crate::tuning::Space, cfg: &Config) -> Vec<usize> {
+    cfg.0
+        .iter()
+        .enumerate()
+        .map(|(d, v)| {
+            space.params[d]
+                .values
+                .iter()
+                .position(|w| w == v)
+                .expect("configuration value outside its parameter domain")
+        })
+        .collect()
+}
+
+impl Searcher for DifferentialEvolution {
+    fn name(&self) -> &'static str {
+        "de"
+    }
+
+    fn run(&mut self, env: &mut dyn EvalEnv, budget: &Budget) -> SearchTrace {
+        let size = env.space().len();
+        // degenerate space: nothing to draw — empty trace, not a panic
+        if size == 0 {
+            return SearchTrace::default();
+        }
+        env.space().neighbour_index();
+        let space = env.space().clone();
+        let dims = space.dims();
+
+        let mut trace = SearchTrace::default();
+        let mut measured: Vec<Option<f64>> = vec![None; size];
+
+        // --- initial population --------------------------------------
+        let target_pop = self.pop_size.min(size);
+        let mut pop: Vec<Member> = Vec::with_capacity(target_pop);
+        while pop.len() < target_pop && !budget_done(&trace, budget, env) {
+            let Some(idx) = draw_unmeasured(&measured, &mut self.rng) else {
+                break;
+            };
+            let fit = self.eval(env, &mut trace, &mut measured, idx);
+            let pos = positions_of(&space, &space.config_at(idx));
+            pop.push(Member { pos, idx, fit });
+        }
+
+        // rand/1 donor selection needs 4 distinct members; tiny spaces
+        // (or tiny budgets) degrade to plain random sampling
+        if pop.len() < 4 || dims == 0 {
+            while !budget_done(&trace, budget, env) {
+                match draw_unmeasured(&measured, &mut self.rng) {
+                    Some(idx) => {
+                        self.eval(env, &mut trace, &mut measured, idx);
+                    }
+                    None => break,
+                }
+            }
+            return trace;
+        }
+
+        // --- generations ---------------------------------------------
+        'outer: loop {
+            let mut measured_this_gen = false;
+            for i in 0..pop.len() {
+                if budget_done(&trace, budget, env) {
+                    break 'outer;
+                }
+                let (a, b, c) = self.donors(pop.len(), i);
+                let jrand = self.rng.below(dims);
+                let mut trial: Vec<usize> = Vec::with_capacity(dims);
+                for d in 0..dims {
+                    let take_mutant =
+                        d == jrand || self.rng.f64() < self.cr;
+                    if take_mutant {
+                        let card = space.params[d].values.len();
+                        let delta = pop[b].pos[d] as f64 - pop[c].pos[d] as f64;
+                        let v = pop[a].pos[d] as f64 + self.weight * delta;
+                        let v = v.round().clamp(0.0, (card - 1) as f64);
+                        trial.push(v as usize);
+                    } else {
+                        trial.push(pop[i].pos[d]);
+                    }
+                }
+                let cfg = Config(
+                    trial
+                        .iter()
+                        .enumerate()
+                        .map(|(d, &p)| space.params[d].values[p])
+                        .collect(),
+                );
+                // pruned or already-measured trials leave the target in
+                // place — the stagnation fallback below keeps progress
+                let Some(idx) = space
+                    .index_of(&cfg)
+                    .filter(|&k| measured[k].is_none())
+                else {
+                    continue;
+                };
+                let fit = self.eval(env, &mut trace, &mut measured, idx);
+                measured_this_gen = true;
+                // greedy selection (failed runs — infinite fitness —
+                // never replace a finite target)
+                if fit < pop[i].fit {
+                    pop[i] = Member {
+                        pos: trial,
+                        idx,
+                        fit,
+                    };
+                }
+            }
+            if budget_done(&trace, budget, env) {
+                break;
+            }
+            if !measured_this_gen {
+                // the whole generation collapsed onto known ground:
+                // inject a fresh random member over the worst slot
+                let Some(idx) = draw_unmeasured(&measured, &mut self.rng)
+                else {
+                    break; // space exhausted
+                };
+                let fit = self.eval(env, &mut trace, &mut measured, idx);
+                let pos = positions_of(&space, &space.config_at(idx));
+                let worst = pop
+                    .iter()
+                    .enumerate()
+                    .max_by(|(_, x), (_, y)| x.fit.total_cmp(&y.fit))
+                    .map(|(k, _)| k)
+                    .expect("population is non-empty");
+                pop[worst] = Member { pos, idx, fit };
+            }
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{record_space, Benchmark, Coulomb};
+    use crate::gpusim::GpuSpec;
+    use crate::searcher::{CostModel, ReplayEnv};
+
+    fn env() -> ReplayEnv {
+        let gpu = GpuSpec::gtx1070();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        ReplayEnv::new(rec, gpu, CostModel::default())
+    }
+
+    #[test]
+    fn no_repeated_tests_and_budget_respected() {
+        let mut e = env();
+        let trace =
+            DifferentialEvolution::new(1).run(&mut e, &Budget::tests(60));
+        assert_eq!(trace.len(), 60);
+        let mut idx: Vec<usize> = trace.steps.iter().map(|s| s.idx).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), 60, "each empirical test must be unique");
+    }
+
+    #[test]
+    fn converges_on_small_space() {
+        let mut e = env();
+        let thr = e.recorded().best_time() * 1.15;
+        let trace = DifferentialEvolution::new(5)
+            .run(&mut e, &Budget::until(thr, 100_000));
+        assert!(trace.steps.last().unwrap().runtime_ms <= thr);
+    }
+
+    #[test]
+    fn exhausts_space_and_stops() {
+        let mut e = env();
+        let n = e.space().len();
+        let trace =
+            DifferentialEvolution::new(2).run(&mut e, &Budget::tests(n * 2));
+        assert_eq!(trace.len(), n, "must stop after exhausting the space");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let run = |seed| {
+            DifferentialEvolution::new(seed)
+                .run(&mut env(), &Budget::tests(40))
+                .steps
+                .iter()
+                .map(|s| s.idx)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4));
+    }
+}

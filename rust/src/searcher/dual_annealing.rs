@@ -1,0 +1,232 @@
+//! Dual annealing — the scipy-style generalized annealing baseline of
+//! "Benchmarking optimization algorithms for auto-tuning GPU kernels"
+//! (arxiv 2210.01465), reduced to the discrete replay setting.
+//!
+//! Three ingredients distinguish it from plain [`SimulatedAnnealing`]:
+//!
+//! 1. a temperature-scaled *visiting distribution* — while hot, the
+//!    walk jumps anywhere in the space (heavy tails); as it cools the
+//!    proposals shrink to the Hamming-1 neighbourhood;
+//! 2. a greedy *local search* fired whenever a new incumbent best is
+//!    found (the "dual" refinement phase);
+//! 3. *re-annealing* — when the temperature bottoms out the schedule
+//!    resets, so a long budget buys repeated global restarts instead
+//!    of a frozen walk.
+//!
+//! Failed runs (infinite runtime) are never accepted as the incumbent,
+//! mirroring the other walk-based searchers.
+//!
+//! [`SimulatedAnnealing`]: super::SimulatedAnnealing
+
+use crate::util::rng::Rng;
+
+use super::{
+    budget_done, draw_unmeasured, Budget, EvalEnv, Searcher, SearchTrace, Step,
+};
+
+pub struct DualAnnealing {
+    rng: Rng,
+    /// Initial temperature, relative to the incumbent runtime.
+    pub t0: f64,
+    /// Multiplicative cooling per step.
+    pub cooling: f64,
+}
+
+/// Temperature floor, as a fraction of `t0`, below which the schedule
+/// re-anneals.
+const RESTART_RATIO: f64 = 1e-3;
+
+impl DualAnnealing {
+    pub fn new(seed: u64) -> Self {
+        DualAnnealing {
+            rng: Rng::new(seed),
+            t0: 1.0,
+            cooling: 0.95,
+        }
+    }
+
+    fn eval(
+        &mut self,
+        env: &mut dyn EvalEnv,
+        trace: &mut SearchTrace,
+        measured: &mut [Option<f64>],
+        idx: usize,
+    ) -> f64 {
+        if let Some(t) = measured[idx] {
+            return t;
+        }
+        let m = env.measure(idx, false);
+        measured[idx] = Some(m.runtime_ms);
+        trace.push(Step {
+            idx,
+            runtime_ms: m.runtime_ms,
+            profiled: false,
+            cost_after_s: env.cost_so_far(),
+            build: false,
+        });
+        m.runtime_ms
+    }
+}
+
+impl Searcher for DualAnnealing {
+    fn name(&self) -> &'static str {
+        "dual_annealing"
+    }
+
+    fn run(&mut self, env: &mut dyn EvalEnv, budget: &Budget) -> SearchTrace {
+        let size = env.space().len();
+        // degenerate space: nothing to draw — empty trace, not a panic
+        if size == 0 {
+            return SearchTrace::default();
+        }
+        env.space().neighbour_index();
+        let space = env.space().clone();
+
+        let mut trace = SearchTrace::default();
+        let mut measured: Vec<Option<f64>> = vec![None; size];
+
+        let mut current = self.rng.below(size);
+        let mut t_cur = self.eval(env, &mut trace, &mut measured, current);
+        let mut best = current;
+        let mut t_best = t_cur;
+        let mut temp = self.t0;
+
+        while !budget_done(&trace, budget, env) {
+            // --- visiting distribution -------------------------------
+            // hot ⇒ global jump, cold ⇒ Hamming-1 step
+            let p_jump = (temp / self.t0).min(1.0);
+            let next = if self.rng.f64() < p_jump {
+                match draw_unmeasured(&measured, &mut self.rng) {
+                    Some(i) => i,
+                    None => break, // space exhausted
+                }
+            } else {
+                let from = space.config_at(current);
+                let nbs: Vec<usize> = space
+                    .neighbours(&from, 1)
+                    .into_iter()
+                    .filter(|&i| measured[i].is_none())
+                    .collect();
+                if nbs.is_empty() {
+                    match draw_unmeasured(&measured, &mut self.rng) {
+                        Some(i) => i,
+                        None => break,
+                    }
+                } else {
+                    *self.rng.choose(&nbs)
+                }
+            };
+            let t_next = self.eval(env, &mut trace, &mut measured, next);
+
+            // --- Metropolis acceptance on the relative delta ---------
+            // failed runs (infinite runtime) are never accepted; a walk
+            // that *started* on a failure re-anchors on the first
+            // finite runtime
+            let accept = t_next.is_finite()
+                && (!t_cur.is_finite() || t_next < t_cur || {
+                    let d = (t_next - t_cur) / t_cur.max(1e-12);
+                    self.rng.f64() < (-d / temp.max(1e-12)).exp()
+                });
+            if accept {
+                current = next;
+                t_cur = t_next;
+            }
+
+            // --- local search on a new incumbent best ----------------
+            if t_next < t_best {
+                best = next;
+                t_best = t_next;
+                let mut improved = true;
+                while improved && !budget_done(&trace, budget, env) {
+                    improved = false;
+                    let from = space.config_at(best);
+                    let mut order: Vec<usize> = space
+                        .neighbours(&from, 1)
+                        .into_iter()
+                        .filter(|&i| measured[i].is_none())
+                        .collect();
+                    self.rng.shuffle(&mut order);
+                    for nb in order {
+                        if budget_done(&trace, budget, env) {
+                            break;
+                        }
+                        let t =
+                            self.eval(env, &mut trace, &mut measured, nb);
+                        if t < t_best {
+                            best = nb;
+                            t_best = t;
+                            improved = true;
+                            break; // first improvement
+                        }
+                    }
+                }
+                // resume the walk from the refined basin
+                current = best;
+                t_cur = t_best;
+            }
+
+            // --- cooling + re-annealing ------------------------------
+            temp *= self.cooling;
+            if temp < self.t0 * RESTART_RATIO {
+                temp = self.t0; // re-anneal: the next proposal is global
+            }
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{record_space, Benchmark, Coulomb};
+    use crate::gpusim::GpuSpec;
+    use crate::searcher::{CostModel, ReplayEnv};
+
+    fn env() -> ReplayEnv {
+        let gpu = GpuSpec::gtx1070();
+        let rec = record_space(&Coulomb, &gpu, &Coulomb.default_input());
+        ReplayEnv::new(rec, gpu, CostModel::default())
+    }
+
+    #[test]
+    fn no_repeated_tests_and_budget_respected() {
+        let mut e = env();
+        let trace = DualAnnealing::new(1).run(&mut e, &Budget::tests(60));
+        assert_eq!(trace.len(), 60);
+        let mut idx: Vec<usize> = trace.steps.iter().map(|s| s.idx).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), 60, "each empirical test must be unique");
+    }
+
+    #[test]
+    fn converges_on_small_space() {
+        let mut e = env();
+        let thr = e.recorded().best_time() * 1.15;
+        let trace =
+            DualAnnealing::new(5).run(&mut e, &Budget::until(thr, 100_000));
+        assert!(trace.steps.last().unwrap().runtime_ms <= thr);
+    }
+
+    #[test]
+    fn exhausts_space_and_stops() {
+        let mut e = env();
+        let n = e.space().len();
+        let trace = DualAnnealing::new(2).run(&mut e, &Budget::tests(n * 2));
+        assert_eq!(trace.len(), n, "must stop after exhausting the space");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let run = |seed| {
+            DualAnnealing::new(seed)
+                .run(&mut env(), &Budget::tests(40))
+                .steps
+                .iter()
+                .map(|s| s.idx)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4));
+    }
+}

@@ -1,0 +1,911 @@
+//! The searcher registry: typed, parseable strategy specifications.
+//!
+//! [`SearcherSpec`] is the single construction point for every search
+//! strategy the harness, the serve engine, and the CLI can run. A spec
+//! is lifetime-free (model state rides in a [`CellCtx`], not in the
+//! spec), parses from the CLI axis syntax
+//!
+//! ```text
+//! random
+//! profile:inst_reaction=0.6
+//! ga:pop=20,mutation=0.1
+//! profile+de              (Eq. 16 augmentation around a base searcher)
+//! ```
+//!
+//! and builds a boxed [`Searcher`] via [`SearcherSpec::build`]. Unknown
+//! names, unknown parameters, and out-of-domain values are typed
+//! [`SpecError`]s, not panics. The per-strategy parameter tables that
+//! drive validation are public (see [`registry`]) so `pcat list` prints
+//! the registry without a second hand-maintained table.
+//!
+//! Canonical names are exactly the historical axis strings ("random",
+//! "profile", "basin_hopping", "annealing", "starchart") plus the zoo
+//! ("ga", "de", "dual_annealing", "profile+<base>"), so RNG stream
+//! tags, plan hashes, and fault-free report bytes for pre-existing
+//! plans are unchanged.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::benchmarks::OnDemandRecorder;
+use crate::expert::DEFAULT_INST_REACTION;
+use crate::model::PredictionMatrix;
+
+use super::{
+    BasinHopping, DifferentialEvolution, DualAnnealing, GeneticSearcher,
+    LazyProfileSearcher, ProfileAugmented, ProfileSearcher, RandomSearcher,
+    Searcher, SimulatedAnnealing, Starchart,
+};
+
+/// Where a model-reading searcher gets its predicted counters.
+#[derive(Clone)]
+pub enum ModelCtx {
+    /// A densified prediction matrix covering the whole space — the
+    /// eager (replay) cells of the harness.
+    Eager { matrix: Arc<PredictionMatrix> },
+    /// An on-demand recorder serving predictions lazily — the
+    /// large-space cells, where densifying is off the table.
+    Lazy { recorder: Arc<OnDemandRecorder> },
+    /// No model available: only model-free searchers can build.
+    None,
+}
+
+/// Everything a [`SearcherSpec`] needs to construct a searcher for one
+/// harness cell: the cell's model context, its benchmark-derived
+/// `inst_reaction` default (Eq. 15 — overridable per spec), and the
+/// job's RNG stream seed.
+#[derive(Clone)]
+pub struct CellCtx {
+    pub model: ModelCtx,
+    pub inst_reaction: f64,
+    pub seed: u64,
+}
+
+impl CellCtx {
+    pub fn new(model: ModelCtx, inst_reaction: f64, seed: u64) -> CellCtx {
+        CellCtx {
+            model,
+            inst_reaction,
+            seed,
+        }
+    }
+
+    /// A context with no model — enough for the model-free zoo.
+    pub fn modelless(seed: u64) -> CellCtx {
+        CellCtx {
+            model: ModelCtx::None,
+            inst_reaction: DEFAULT_INST_REACTION,
+            seed,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> CellCtx {
+        self.seed = seed;
+        self
+    }
+}
+
+/// What went wrong parsing a searcher spec.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpecError {
+    /// The strategy name matches nothing in the registry.
+    Unknown(String),
+    /// The strategy exists but has no such tunable parameter.
+    UnknownParam { searcher: String, param: String },
+    /// The parameter exists but the value is unparseable or out of
+    /// domain (counts must be integers ≥ 1, ratios in [0, 1], …).
+    InvalidValue {
+        searcher: String,
+        param: String,
+        value: String,
+    },
+    /// Malformed spec syntax (missing `=`, empty parameter list, a
+    /// duplicated key, …).
+    BadSyntax { spec: String, what: &'static str },
+    /// `X+Y` composition where `X` is not `profile`, or `profile` is
+    /// asked to augment itself.
+    NotAugmentable { base: String },
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::Unknown(name) => write!(
+                f,
+                "unknown searcher {name:?} (known: {})",
+                SearcherKind::all()
+                    .iter()
+                    .map(|k| k.canonical_name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+            SpecError::UnknownParam { searcher, param } => write!(
+                f,
+                "searcher {searcher:?} has no parameter {param:?} \
+                 (see `pcat list` for the registry)"
+            ),
+            SpecError::InvalidValue {
+                searcher,
+                param,
+                value,
+            } => write!(
+                f,
+                "invalid value {value:?} for parameter {param:?} of \
+                 searcher {searcher:?}"
+            ),
+            SpecError::BadSyntax { spec, what } => {
+                write!(f, "malformed searcher spec {spec:?}: {what}")
+            }
+            SpecError::NotAugmentable { base } => write!(
+                f,
+                "only `profile+<base>` composition is supported; \
+                 {base:?} cannot augment (and `profile+profile` is \
+                 redundant)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// Domain a tunable parameter's value must lie in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    /// Integer ≥ 1 (population sizes, radii, step counts).
+    Count,
+    /// Real in [0, 1] (probabilities, cooling factors, thresholds).
+    Ratio,
+    /// Finite real > 0 (temperatures, differential weights).
+    Positive,
+}
+
+impl ParamKind {
+    fn admits(self, v: f64) -> bool {
+        match self {
+            ParamKind::Count => v.is_finite() && v >= 1.0 && v.fract() == 0.0,
+            ParamKind::Ratio => v.is_finite() && (0.0..=1.0).contains(&v),
+            ParamKind::Positive => v.is_finite() && v > 0.0,
+        }
+    }
+}
+
+/// One tunable parameter of a strategy: its name, domain, default (as
+/// rendered by `pcat list`), and a one-line description.
+#[derive(Debug, Clone, Copy)]
+pub struct ParamInfo {
+    pub name: &'static str,
+    pub kind: ParamKind,
+    pub default: &'static str,
+    pub doc: &'static str,
+}
+
+const fn p(
+    name: &'static str,
+    kind: ParamKind,
+    default: &'static str,
+    doc: &'static str,
+) -> ParamInfo {
+    ParamInfo {
+        name,
+        kind,
+        default,
+        doc,
+    }
+}
+
+const PROFILE_PARAMS: &[ParamInfo] = &[
+    p(
+        "inst_reaction",
+        ParamKind::Ratio,
+        "0.7 (0.5 on instruction-bound benchmarks)",
+        "Eq. 15 bottleneck-reaction threshold",
+    ),
+    p(
+        "n_unprofiled",
+        ParamKind::Count,
+        "5",
+        "plain (unprofiled) steps per profiling round",
+    ),
+];
+
+const BASIN_PARAMS: &[ParamInfo] = &[
+    p(
+        "temperature",
+        ParamKind::Positive,
+        "1.0",
+        "Metropolis hop temperature, relative to the incumbent runtime",
+    ),
+    p(
+        "hop_strength",
+        ParamKind::Count,
+        "2",
+        "parameters flipped per hop",
+    ),
+];
+
+const ANNEAL_PARAMS: &[ParamInfo] = &[
+    p(
+        "t0",
+        ParamKind::Positive,
+        "0.5",
+        "initial temperature, as a fraction of the first runtime",
+    ),
+    p(
+        "cooling",
+        ParamKind::Ratio,
+        "0.95",
+        "multiplicative cooling per accepted move",
+    ),
+];
+
+const GA_PARAMS: &[ParamInfo] = &[
+    p("pop", ParamKind::Count, "16", "population size"),
+    p(
+        "mutation",
+        ParamKind::Ratio,
+        "0.1",
+        "per-parameter mutation probability",
+    ),
+    p(
+        "crossover",
+        ParamKind::Ratio,
+        "0.7",
+        "probability of uniform crossover (vs. cloning the fitter parent)",
+    ),
+];
+
+const DE_PARAMS: &[ParamInfo] = &[
+    p("pop", ParamKind::Count, "16", "population size"),
+    p(
+        "f",
+        ParamKind::Positive,
+        "0.5",
+        "differential weight applied to parameter-value positions",
+    ),
+    p("cr", ParamKind::Ratio, "0.9", "binomial crossover rate"),
+];
+
+const DUAL_PARAMS: &[ParamInfo] = &[
+    p(
+        "t0",
+        ParamKind::Positive,
+        "1.0",
+        "initial temperature, relative to the incumbent runtime",
+    ),
+    p(
+        "cooling",
+        ParamKind::Ratio,
+        "0.95",
+        "multiplicative cooling per step (re-anneals when cold)",
+    ),
+];
+
+/// Extra parameters every `profile+<base>` composition accepts on top
+/// of the base's own.
+const AUGMENT_PARAMS: &[ParamInfo] = &[
+    p(
+        "inst_reaction",
+        ParamKind::Ratio,
+        "0.7 (0.5 on instruction-bound benchmarks)",
+        "Eq. 15 bottleneck-reaction threshold",
+    ),
+    p(
+        "radius",
+        ParamKind::Count,
+        "2",
+        "Hamming-ball radius scored around each base proposal",
+    ),
+];
+
+/// The base strategies the registry knows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearcherKind {
+    Random,
+    Profile,
+    BasinHopping,
+    Starchart,
+    Annealing,
+    Genetic,
+    DifferentialEvolution,
+    DualAnnealing,
+}
+
+impl SearcherKind {
+    pub fn all() -> [SearcherKind; 8] {
+        [
+            SearcherKind::Random,
+            SearcherKind::Profile,
+            SearcherKind::BasinHopping,
+            SearcherKind::Starchart,
+            SearcherKind::Annealing,
+            SearcherKind::Genetic,
+            SearcherKind::DifferentialEvolution,
+            SearcherKind::DualAnnealing,
+        ]
+    }
+
+    /// The canonical axis string — also the RNG stream tag, so these
+    /// must never change for existing strategies.
+    pub fn canonical_name(self) -> &'static str {
+        match self {
+            SearcherKind::Random => "random",
+            SearcherKind::Profile => "profile",
+            SearcherKind::BasinHopping => "basin_hopping",
+            SearcherKind::Starchart => "starchart",
+            SearcherKind::Annealing => "annealing",
+            SearcherKind::Genetic => "ga",
+            SearcherKind::DifferentialEvolution => "de",
+            SearcherKind::DualAnnealing => "dual_annealing",
+        }
+    }
+
+    fn from_name(name: &str) -> Option<SearcherKind> {
+        match name {
+            "random" => Some(SearcherKind::Random),
+            "profile" => Some(SearcherKind::Profile),
+            "basin_hopping" | "basin-hopping" => {
+                Some(SearcherKind::BasinHopping)
+            }
+            "starchart" => Some(SearcherKind::Starchart),
+            "annealing" => Some(SearcherKind::Annealing),
+            "ga" | "genetic" => Some(SearcherKind::Genetic),
+            "de" | "differential_evolution" => {
+                Some(SearcherKind::DifferentialEvolution)
+            }
+            "dual_annealing" | "dual-annealing" => {
+                Some(SearcherKind::DualAnnealing)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn params(self) -> &'static [ParamInfo] {
+        match self {
+            SearcherKind::Random | SearcherKind::Starchart => &[],
+            SearcherKind::Profile => PROFILE_PARAMS,
+            SearcherKind::BasinHopping => BASIN_PARAMS,
+            SearcherKind::Annealing => ANNEAL_PARAMS,
+            SearcherKind::Genetic => GA_PARAMS,
+            SearcherKind::DifferentialEvolution => DE_PARAMS,
+            SearcherKind::DualAnnealing => DUAL_PARAMS,
+        }
+    }
+
+    pub fn doc(self) -> &'static str {
+        match self {
+            SearcherKind::Random => {
+                "uniform random search without replacement (§4.3)"
+            }
+            SearcherKind::Profile => {
+                "the paper's Algorithm 1: profile → bottlenecks → ΔPC → \
+                 model-scored weighted steps"
+            }
+            SearcherKind::BasinHopping => {
+                "greedy local descent + Metropolis hops (Kernel Tuner, §4.7)"
+            }
+            SearcherKind::Starchart => {
+                "regression-tree surrogate: random build phase, then \
+                 tree-guided exploitation (§4.8)"
+            }
+            SearcherKind::Annealing => {
+                "simulated annealing over the Hamming-1 neighbourhood"
+            }
+            SearcherKind::Genetic => {
+                "steady-state genetic algorithm: tournament selection, \
+                 uniform crossover, per-parameter mutation (arxiv 2210.01465)"
+            }
+            SearcherKind::DifferentialEvolution => {
+                "differential evolution (rand/1/bin) on parameter-value \
+                 positions (arxiv 2210.01465)"
+            }
+            SearcherKind::DualAnnealing => {
+                "generalized annealing: temperature-scaled global jumps, \
+                 local descent on new incumbents, re-annealing restarts \
+                 (arxiv 2210.01465)"
+            }
+        }
+    }
+
+    /// Can this strategy serve as the base of `profile+<base>`? The
+    /// profile searcher itself cannot (it already scores with the
+    /// model).
+    pub fn augmentable(self) -> bool {
+        self != SearcherKind::Profile
+    }
+}
+
+/// One row of the searcher registry, for `pcat list`.
+pub struct RegistryEntry {
+    pub name: &'static str,
+    pub doc: &'static str,
+    pub params: &'static [ParamInfo],
+    pub augmentable: bool,
+}
+
+/// The full registry, in canonical order — the same tables
+/// [`SearcherSpec::parse`] validates against, so the listing can never
+/// drift from what actually parses.
+pub fn registry() -> Vec<RegistryEntry> {
+    SearcherKind::all()
+        .iter()
+        .map(|&k| RegistryEntry {
+            name: k.canonical_name(),
+            doc: k.doc(),
+            params: k.params(),
+            augmentable: k.augmentable(),
+        })
+        .collect()
+}
+
+/// Extra parameters the `profile+` wrapper layer accepts (exported for
+/// `pcat list`).
+pub fn augment_params() -> &'static [ParamInfo] {
+    AUGMENT_PARAMS
+}
+
+/// A parsed, validated search-strategy specification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearcherSpec {
+    kind: SearcherKind,
+    /// Eq. 16 PC-model augmentation wrapped around the base
+    /// (`profile+<base>` syntax).
+    augmented: bool,
+    /// Validated parameter overrides; keys are the `'static` names out
+    /// of the registry tables.
+    overrides: Vec<(&'static str, f64)>,
+}
+
+impl SearcherSpec {
+    /// A bare spec for a base strategy, no overrides.
+    pub fn base(kind: SearcherKind) -> SearcherSpec {
+        SearcherSpec {
+            kind,
+            augmented: false,
+            overrides: Vec::new(),
+        }
+    }
+
+    /// Parse the CLI / plan-axis syntax:
+    /// `name[+base][:key=value[,key=value…]]`.
+    pub fn parse(spec: &str) -> Result<SearcherSpec, SpecError> {
+        let trimmed = spec.trim();
+        if trimmed.is_empty() {
+            return Err(SpecError::BadSyntax {
+                spec: spec.to_string(),
+                what: "empty spec",
+            });
+        }
+        let (names, params_str) = match trimmed.split_once(':') {
+            Some((n, p)) => (n.trim(), Some(p)),
+            None => (trimmed, None),
+        };
+        let (augmented, base_name) = match names.split_once('+') {
+            Some((outer, base)) => {
+                if SearcherKind::from_name(outer.trim())
+                    != Some(SearcherKind::Profile)
+                {
+                    return Err(SpecError::NotAugmentable {
+                        base: outer.trim().to_string(),
+                    });
+                }
+                (true, base.trim())
+            }
+            None => (false, names),
+        };
+        let kind = SearcherKind::from_name(base_name)
+            .ok_or_else(|| SpecError::Unknown(base_name.to_string()))?;
+        if augmented && !kind.augmentable() {
+            return Err(SpecError::NotAugmentable {
+                base: base_name.to_string(),
+            });
+        }
+        let mut out = SearcherSpec {
+            kind,
+            augmented,
+            overrides: Vec::new(),
+        };
+        let Some(params_str) = params_str else {
+            return Ok(out);
+        };
+        if params_str.trim().is_empty() {
+            return Err(SpecError::BadSyntax {
+                spec: spec.to_string(),
+                what: "empty parameter list after ':'",
+            });
+        }
+        for kv in params_str.split(',') {
+            let Some((key, value)) = kv.split_once('=') else {
+                return Err(SpecError::BadSyntax {
+                    spec: spec.to_string(),
+                    what: "expected key=value",
+                });
+            };
+            let (key, value) = (key.trim(), value.trim());
+            let info = out
+                .allowed_params()
+                .find(|i| i.name == key)
+                .ok_or_else(|| SpecError::UnknownParam {
+                    searcher: out.name(),
+                    param: key.to_string(),
+                })?;
+            let parsed: f64 = value.parse().map_err(|_| {
+                SpecError::InvalidValue {
+                    searcher: out.name(),
+                    param: key.to_string(),
+                    value: value.to_string(),
+                }
+            })?;
+            if !info.kind.admits(parsed) {
+                return Err(SpecError::InvalidValue {
+                    searcher: out.name(),
+                    param: key.to_string(),
+                    value: value.to_string(),
+                });
+            }
+            if out.overrides.iter().any(|(k, _)| *k == info.name) {
+                return Err(SpecError::BadSyntax {
+                    spec: spec.to_string(),
+                    what: "duplicate parameter",
+                });
+            }
+            out.overrides.push((info.name, parsed));
+        }
+        Ok(out)
+    }
+
+    /// Every parameter this spec accepts: the base strategy's table,
+    /// plus the wrapper layer's when augmented.
+    fn allowed_params(&self) -> impl Iterator<Item = &'static ParamInfo> {
+        let extra: &'static [ParamInfo] = if self.augmented {
+            AUGMENT_PARAMS
+        } else {
+            &[]
+        };
+        self.kind.params().iter().chain(extra.iter())
+    }
+
+    pub fn kind(&self) -> SearcherKind {
+        self.kind
+    }
+
+    pub fn is_augmented(&self) -> bool {
+        self.augmented
+    }
+
+    /// Does running this spec require a model context (a trained TP→PC
+    /// model or an on-demand recorder)? Drives the transfer harness's
+    /// source-axis dedup and the sweep's baseline-lane partitioning.
+    pub fn reads_model(&self) -> bool {
+        self.augmented || self.kind == SearcherKind::Profile
+    }
+
+    /// The canonical rendering: `profile+ga:pop=20`. Round-trips
+    /// through [`parse`](SearcherSpec::parse).
+    pub fn name(&self) -> String {
+        let base = self.kind.canonical_name();
+        let mut out = if self.augmented {
+            format!("profile+{base}")
+        } else {
+            base.to_string()
+        };
+        if !self.overrides.is_empty() {
+            out.push(':');
+            let kvs: Vec<String> = self
+                .overrides
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect();
+            out.push_str(&kvs.join(","));
+        }
+        out
+    }
+
+    /// A parameter override, if one was given.
+    pub fn param(&self, name: &str) -> Option<f64> {
+        self.overrides
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| *v)
+    }
+
+    /// Construct the searcher for one cell — the single dispatch point
+    /// behind matrix, transfer, sweep, serve, and tune.
+    ///
+    /// # Panics
+    ///
+    /// When a model-reading spec is built against
+    /// [`ModelCtx::None`] — plan validation guarantees model-reading
+    /// lanes get a model, so hitting this is a harness bug, not a user
+    /// error.
+    pub fn build(&self, ctx: &CellCtx) -> Box<dyn Searcher> {
+        let seed = ctx.seed;
+        if self.kind == SearcherKind::Profile {
+            let ir = self.param("inst_reaction").unwrap_or(ctx.inst_reaction);
+            return match &ctx.model {
+                ModelCtx::Eager { matrix } => {
+                    let mut s =
+                        ProfileSearcher::shared(Arc::clone(matrix), ir, seed);
+                    if let Some(n) = self.param("n_unprofiled") {
+                        s.n_unprofiled = n as usize;
+                    }
+                    Box::new(s)
+                }
+                ModelCtx::Lazy { recorder } => {
+                    let mut s =
+                        LazyProfileSearcher::new(Arc::clone(recorder), ir, seed);
+                    if let Some(n) = self.param("n_unprofiled") {
+                        s.n_unprofiled = n as usize;
+                    }
+                    Box::new(s)
+                }
+                ModelCtx::None => panic!(
+                    "the profile searcher needs a model context (prediction \
+                     matrix or on-demand recorder); this cell provides none"
+                ),
+            };
+        }
+        let base: Box<dyn Searcher> = match self.kind {
+            SearcherKind::Random => Box::new(RandomSearcher::new(seed)),
+            SearcherKind::BasinHopping => {
+                let mut s = BasinHopping::new(seed);
+                if let Some(t) = self.param("temperature") {
+                    s.temperature = t;
+                }
+                if let Some(h) = self.param("hop_strength") {
+                    s.hop_strength = h as usize;
+                }
+                Box::new(s)
+            }
+            SearcherKind::Starchart => Box::new(Starchart::new(seed)),
+            SearcherKind::Annealing => {
+                let mut s = SimulatedAnnealing::new(seed);
+                if let Some(t) = self.param("t0") {
+                    s.t0 = t;
+                }
+                if let Some(c) = self.param("cooling") {
+                    s.cooling = c;
+                }
+                Box::new(s)
+            }
+            SearcherKind::Genetic => {
+                let mut s = GeneticSearcher::new(seed);
+                if let Some(n) = self.param("pop") {
+                    s.pop_size = n as usize;
+                }
+                if let Some(m) = self.param("mutation") {
+                    s.mutation = m;
+                }
+                if let Some(c) = self.param("crossover") {
+                    s.crossover = c;
+                }
+                Box::new(s)
+            }
+            SearcherKind::DifferentialEvolution => {
+                let mut s = DifferentialEvolution::new(seed);
+                if let Some(n) = self.param("pop") {
+                    s.pop_size = n as usize;
+                }
+                if let Some(f) = self.param("f") {
+                    s.weight = f;
+                }
+                if let Some(c) = self.param("cr") {
+                    s.cr = c;
+                }
+                Box::new(s)
+            }
+            SearcherKind::DualAnnealing => {
+                let mut s = DualAnnealing::new(seed);
+                if let Some(t) = self.param("t0") {
+                    s.t0 = t;
+                }
+                if let Some(c) = self.param("cooling") {
+                    s.cooling = c;
+                }
+                Box::new(s)
+            }
+            SearcherKind::Profile => unreachable!("handled above"),
+        };
+        if !self.augmented {
+            return base;
+        }
+        let ir = self.param("inst_reaction").unwrap_or(ctx.inst_reaction);
+        let mut aug = ProfileAugmented::new(base, ctx.model.clone(), ir);
+        if let Some(r) = self.param("radius") {
+            aug.radius = r as usize;
+        }
+        Box::new(aug)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_names_parse_to_themselves() {
+        for kind in SearcherKind::all() {
+            let name = kind.canonical_name();
+            let spec = SearcherSpec::parse(name).unwrap();
+            assert_eq!(spec.kind(), kind);
+            assert_eq!(spec.name(), name);
+            assert!(!spec.is_augmented());
+        }
+    }
+
+    #[test]
+    fn aliases_normalize() {
+        let spec = SearcherSpec::parse("basin-hopping").unwrap();
+        assert_eq!(spec.name(), "basin_hopping");
+        assert_eq!(SearcherSpec::parse("genetic").unwrap().name(), "ga");
+        assert_eq!(
+            SearcherSpec::parse("differential_evolution").unwrap().name(),
+            "de"
+        );
+    }
+
+    #[test]
+    fn params_parse_and_round_trip() {
+        let spec = SearcherSpec::parse("ga:pop=20,mutation=0.1").unwrap();
+        assert_eq!(spec.param("pop"), Some(20.0));
+        assert_eq!(spec.param("mutation"), Some(0.1));
+        assert_eq!(spec.param("crossover"), None);
+        assert_eq!(spec.name(), "ga:pop=20,mutation=0.1");
+        assert_eq!(SearcherSpec::parse(&spec.name()).unwrap(), spec);
+        let spec = SearcherSpec::parse("profile:inst_reaction=0.6").unwrap();
+        assert_eq!(spec.param("inst_reaction"), Some(0.6));
+        assert!(spec.reads_model());
+    }
+
+    #[test]
+    fn augmented_specs_parse() {
+        let spec = SearcherSpec::parse("profile+ga").unwrap();
+        assert!(spec.is_augmented());
+        assert!(spec.reads_model());
+        assert_eq!(spec.kind(), SearcherKind::Genetic);
+        assert_eq!(spec.name(), "profile+ga");
+        // wrapper-layer and base-layer params mix freely
+        let spec =
+            SearcherSpec::parse("profile+ga:pop=10,inst_reaction=0.6,radius=1")
+                .unwrap();
+        assert_eq!(spec.param("pop"), Some(10.0));
+        assert_eq!(spec.param("inst_reaction"), Some(0.6));
+        assert_eq!(spec.param("radius"), Some(1.0));
+    }
+
+    #[test]
+    fn errors_are_typed() {
+        assert_eq!(
+            SearcherSpec::parse("pso"),
+            Err(SpecError::Unknown("pso".to_string()))
+        );
+        assert_eq!(
+            SearcherSpec::parse("ga:population=5"),
+            Err(SpecError::UnknownParam {
+                searcher: "ga".to_string(),
+                param: "population".to_string(),
+            })
+        );
+        // base searchers don't take the wrapper layer's params
+        assert!(matches!(
+            SearcherSpec::parse("ga:radius=2"),
+            Err(SpecError::UnknownParam { .. })
+        ));
+        assert_eq!(
+            SearcherSpec::parse("ga:pop=abc"),
+            Err(SpecError::InvalidValue {
+                searcher: "ga".to_string(),
+                param: "pop".to_string(),
+                value: "abc".to_string(),
+            })
+        );
+        // out-of-domain: counts must be integral ≥ 1, ratios in [0,1]
+        assert!(matches!(
+            SearcherSpec::parse("ga:pop=0"),
+            Err(SpecError::InvalidValue { .. })
+        ));
+        assert!(matches!(
+            SearcherSpec::parse("ga:pop=2.5"),
+            Err(SpecError::InvalidValue { .. })
+        ));
+        assert!(matches!(
+            SearcherSpec::parse("ga:mutation=1.5"),
+            Err(SpecError::InvalidValue { .. })
+        ));
+        assert!(matches!(
+            SearcherSpec::parse("annealing:t0=-1"),
+            Err(SpecError::InvalidValue { .. })
+        ));
+        assert!(matches!(
+            SearcherSpec::parse("ga:pop"),
+            Err(SpecError::BadSyntax { .. })
+        ));
+        assert!(matches!(
+            SearcherSpec::parse("ga:"),
+            Err(SpecError::BadSyntax { .. })
+        ));
+        assert!(matches!(
+            SearcherSpec::parse(""),
+            Err(SpecError::BadSyntax { .. })
+        ));
+        assert!(matches!(
+            SearcherSpec::parse("ga:pop=5,pop=6"),
+            Err(SpecError::BadSyntax { .. })
+        ));
+        assert_eq!(
+            SearcherSpec::parse("ga+random"),
+            Err(SpecError::NotAugmentable {
+                base: "ga".to_string()
+            })
+        );
+        assert_eq!(
+            SearcherSpec::parse("profile+profile"),
+            Err(SpecError::NotAugmentable {
+                base: "profile".to_string()
+            })
+        );
+        // errors render without panicking
+        for e in [
+            SearcherSpec::parse("pso").unwrap_err(),
+            SearcherSpec::parse("ga:radius=2").unwrap_err(),
+            SearcherSpec::parse("ga+random").unwrap_err(),
+        ] {
+            assert!(!e.to_string().is_empty());
+        }
+    }
+
+    #[test]
+    fn registry_covers_every_kind_and_matches_parse() {
+        let reg = registry();
+        assert_eq!(reg.len(), SearcherKind::all().len());
+        for entry in &reg {
+            // every listed name parses
+            let spec = SearcherSpec::parse(entry.name).unwrap();
+            assert_eq!(spec.name(), entry.name);
+            // every listed param is accepted with an in-domain value
+            for info in entry.params {
+                let v = match info.kind {
+                    ParamKind::Count => "2",
+                    ParamKind::Ratio => "0.5",
+                    ParamKind::Positive => "0.5",
+                };
+                let s = format!("{}:{}={}", entry.name, info.name, v);
+                SearcherSpec::parse(&s).unwrap_or_else(|e| {
+                    panic!("registry param failed to parse: {s}: {e}")
+                });
+            }
+            // every augmentable entry composes
+            if entry.augmentable {
+                let s = format!("profile+{}", entry.name);
+                assert!(SearcherSpec::parse(&s).is_ok(), "{s}");
+            }
+        }
+        assert!(!augment_params().is_empty());
+    }
+
+    #[test]
+    fn model_free_specs_build_without_a_model() {
+        let ctx = CellCtx::modelless(7);
+        for name in [
+            "random",
+            "basin_hopping",
+            "starchart",
+            "annealing",
+            "ga",
+            "de",
+            "dual_annealing",
+            "ga:pop=4,mutation=0.5",
+        ] {
+            let spec = SearcherSpec::parse(name).unwrap();
+            assert!(!spec.reads_model(), "{name}");
+            let s = spec.build(&ctx);
+            assert!(!s.name().is_empty());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "needs a model context")]
+    fn profile_without_model_panics_loudly() {
+        let spec = SearcherSpec::parse("profile").unwrap();
+        spec.build(&CellCtx::modelless(0));
+    }
+}

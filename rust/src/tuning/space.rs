@@ -333,6 +333,21 @@ impl Space {
         }
     }
 
+    /// The index of a configuration, or `None` when the candidate is
+    /// not in the space (pruned by a constraint, wrong dimensionality,
+    /// or a value outside a parameter's domain).
+    ///
+    /// This is the inverse of [`config_at`](Space::config_at) — the
+    /// population searchers (GA/DE) synthesize candidate configurations
+    /// by recombining parents' parameter values and need them mapped
+    /// back onto space indices. Served by the same lazily built
+    /// [`NeighbourIndex`] as [`neighbours`](Space::neighbours):
+    /// odometer arithmetic on full cross products, hash lookups on
+    /// pruned spaces, a linear scan on degenerate ones.
+    pub fn index_of(&self, cfg: &Config) -> Option<usize> {
+        self.neighbour_index().index_of(self, cfg)
+    }
+
     /// The space's neighbourhood index, built on first use and shared
     /// across clones.
     pub fn neighbour_index(&self) -> &NeighbourIndex {
@@ -615,6 +630,32 @@ impl NeighbourIndex {
             Lookup::Scan => unreachable!("scan spaces never generate"),
         }
     }
+
+    /// Checked configuration → index lookup behind
+    /// [`Space::index_of`]. Unlike the ball generator's internal
+    /// `lookup_index` (whose candidates are in-domain by construction),
+    /// arbitrary synthesized configurations may use values no parameter
+    /// defines, so every coordinate is validated before the odometer
+    /// arithmetic runs.
+    pub fn index_of(&self, space: &Space, cfg: &Config) -> Option<usize> {
+        if cfg.0.len() != space.dims() {
+            return None;
+        }
+        match &self.lookup {
+            Lookup::Scan => {
+                // ambiguous spaces: first match, same answer every call
+                (0..space.len()).find(|&i| space.config_at(i).0 == cfg.0)
+            }
+            _ => {
+                for d in 0..space.dims() {
+                    if !self.value_pos[d].contains_key(&cfg.0[d]) {
+                        return None;
+                    }
+                }
+                self.lookup_index(&cfg.0)
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -661,6 +702,40 @@ mod tests {
         for c in &s.configs {
             assert!(c.get(0) * c.get(1) <= 4);
         }
+    }
+
+    #[test]
+    fn index_of_inverts_config_at() {
+        // full cross product (odometer), pruned (hash), implicit grid
+        let pruned = Space::enumerate(
+            "p",
+            vec![
+                ParamDef::new("a", &[1, 2, 3, 4]),
+                ParamDef::new("b", &[1, 2, 3, 4]),
+            ],
+            |v| v[0] * v[1] <= 4,
+        );
+        let implicit = Space::enumerate_implicit(
+            "i",
+            vec![ParamDef::new("a", &[1, 2, 3]), ParamDef::new("b", &[0, 1])],
+        );
+        for s in [&toy(), &pruned, &implicit] {
+            for i in 0..s.len() {
+                assert_eq!(s.index_of(&s.config_at(i)), Some(i));
+            }
+        }
+        // pruned-out, out-of-domain, and wrong-arity candidates
+        assert_eq!(pruned.index_of(&Config(vec![4, 4])), None);
+        assert_eq!(pruned.index_of(&Config(vec![1, 99])), None);
+        assert_eq!(pruned.index_of(&Config(vec![1])), None);
+        // degenerate (duplicate values → scan lookup): first match wins
+        let dup = Space::enumerate(
+            "dup",
+            vec![ParamDef::new("a", &[1, 1, 2])],
+            |_| true,
+        );
+        assert_eq!(dup.index_of(&Config(vec![1])), Some(0));
+        assert_eq!(dup.index_of(&Config(vec![2])), Some(2));
     }
 
     #[test]

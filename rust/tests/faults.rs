@@ -45,6 +45,10 @@ fn every_searcher_survives_the_hostile_profile() {
         "basin_hopping".into(),
         "starchart".into(),
         "annealing".into(),
+        "ga".into(),
+        "de".into(),
+        "dual_annealing".into(),
+        "profile+ga".into(),
     ];
     plan.max_tests = 60;
     let report = run_plan(&plan, 4).unwrap();

@@ -1,18 +1,24 @@
 //! Cross-module integration tests: record → train → search → report,
 //! over simulated devices; plus CLI-level flows through the library API.
 
+use std::sync::Arc;
+
 use pcat::benchmarks::{self, record_space, Benchmark, Coulomb, Gemm};
-use pcat::coordinator::{SearcherChoice, Tuner};
+use pcat::coordinator::Tuner;
 use pcat::counters::Counter;
 use pcat::gpusim::GpuSpec;
 use pcat::harness::{run_experiment, ExperimentOpts};
 use pcat::model::{
-    dataset_from_recorded, DecisionTreeModel, OracleModel, PrecomputedModel,
-    TpPcModel,
+    dataset_from_recorded, DecisionTreeModel, PrecomputedModel,
+    PredictionMatrix, TpPcModel,
 };
-use pcat::searcher::{Budget, CostModel};
+use pcat::searcher::{Budget, CellCtx, CostModel, ModelCtx, SearcherSpec};
 use pcat::tuning::RecordedSpace;
 use pcat::util::rng::Rng;
+
+fn spec(s: &str) -> SearcherSpec {
+    SearcherSpec::parse(s).unwrap()
+}
 
 fn opts(reps: usize) -> ExperimentOpts {
     ExperimentOpts {
@@ -49,37 +55,51 @@ fn record_train_save_load_tune_roundtrip() {
     let gpu2 = GpuSpec::rtx2080();
     let rec_t = record_space(&bench, &gpu2, &bench.default_input());
     let pre = PrecomputedModel::over(&rec_t.space, &model2);
+    let ctx = CellCtx::new(
+        ModelCtx::Eager {
+            matrix: Arc::new(PredictionMatrix::build(&rec_t.space, &pre)),
+        },
+        0.5,
+        0,
+    );
     let mut tuner = Tuner::replay(rec_t.clone(), gpu2, CostModel::default())
         .with_budget(Budget::tests(60))
         .with_seed(5);
-    let result = tuner.run(SearcherChoice::Profile {
-        model: &pre,
-        inst_reaction: 0.5,
-    });
+    let result = tuner.run(&spec("profile"), &ctx);
     assert!(result.best_ms <= rec_t.best_time() * 2.0);
     std::fs::remove_dir_all(dir).ok();
 }
 
 #[test]
 fn all_searchers_finish_on_all_benchmarks() {
+    // the whole zoo, including a profile-augmented member, through the
+    // same spec strings the CLI axis accepts
     let gpu = GpuSpec::gtx1070();
     for bench in benchmarks::evaluation_set() {
         let rec = record_space(bench.as_ref(), &gpu, &bench.default_input());
-        let oracle = OracleModel::new(&rec);
-        for choice in [
-            SearcherChoice::Random,
-            SearcherChoice::Profile {
-                model: &oracle,
-                inst_reaction: 0.7,
+        let ctx = CellCtx::new(
+            ModelCtx::Eager {
+                matrix: Arc::new(PredictionMatrix::from_recorded(&rec)),
             },
-            SearcherChoice::BasinHopping,
-            SearcherChoice::Annealing,
+            0.7,
+            0,
+        );
+        for name in [
+            "random",
+            "profile",
+            "basin_hopping",
+            "annealing",
+            "starchart",
+            "ga",
+            "de",
+            "dual_annealing",
+            "profile+ga",
         ] {
             let mut tuner =
                 Tuner::replay(rec.clone(), gpu.clone(), CostModel::default())
                     .with_budget(Budget::tests(30))
                     .with_seed(9);
-            let r = tuner.run(choice);
+            let r = tuner.run(&spec(name), &ctx);
             assert_eq!(r.tests, 30, "{} on {}", r.searcher, bench.name());
             assert!(r.best_ms.is_finite());
         }

@@ -70,8 +70,14 @@ fn smoke_plan_reports_identical_for_jobs_1_and_jobs_8() {
 fn smoke_plan_covers_the_advertised_matrix() {
     let plan = ExperimentPlan::smoke(0);
     let report = run_plan(&plan, 4).unwrap();
-    // 2 benchmarks × 1 GPU × 2 searchers × 3 seeds
-    assert_eq!(report.results.len(), 12);
+    // 2 benchmarks × 1 GPU × 9 zoo searchers × 3 seeds
+    assert_eq!(report.results.len(), 54);
+    for name in ["ga", "de", "dual_annealing", "profile+ga"] {
+        assert!(
+            report.results.iter().any(|r| r.spec.searcher == name),
+            "smoke matrix must exercise the {name} lane"
+        );
+    }
     for r in &report.results {
         assert!(r.best_ms.is_finite(), "job must measure something");
         assert!(r.tests >= 1 && r.tests <= plan.max_tests);

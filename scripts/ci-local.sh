@@ -14,7 +14,12 @@
 #   scripts/ci-local.sh smoke      # deterministic smoke matrices (plain +
 #                                  # transfer oracle + transfer tree + sweep
 #                                  # + hostile fault profile + serve load
-#                                  # generator) + golden diffs
+#                                  # generator) + golden diffs. The matrix
+#                                  # lanes run the full 9-searcher zoo
+#                                  # (incl. ga/de/dual_annealing and the
+#                                  # profile+ga combinator) — widening the
+#                                  # zoo regenerates the matrix goldens via
+#                                  # `bless`
 #   scripts/ci-local.sh largespace # fast large-space smoke: tune the
 #                                  # synthetic 4^10 (>1M config) benchmark
 #                                  # end-to-end through the on-demand
